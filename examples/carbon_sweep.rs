@@ -1,0 +1,54 @@
+//! Carbon sweep: the paper's headline tradeoff in one run.
+//!
+//! Simulates a serving day under every grid with No Cache / Full Cache /
+//! GreenCache and prints the carbon-per-request comparison — a compact
+//! Fig. 12 + Fig. 8a reproduction for exploration (use the `figures`
+//! binary for the full evaluation set).
+//!
+//! Run: `cargo run --release --example carbon_sweep [--quick]`
+
+use greencache::ci::ALL_GRIDS;
+use greencache::experiments::{
+    run_day, saving_pct, Baseline, DayScenario, Model, ProfileStore, Task,
+};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut profiles = ProfileStore::new(quick);
+    println!(
+        "{:<6} {:>10} {:>10} {:>10} {:>12} {:>10}",
+        "grid", "none g/req", "full g/req", "green g/req", "vs full %", "cache TB"
+    );
+    for grid in ALL_GRIDS {
+        let mut g = [0.0f64; 3];
+        let mut cache_tb = 0.0;
+        for (i, baseline) in [Baseline::NoCache, Baseline::FullCache, Baseline::GreenCache]
+            .into_iter()
+            .enumerate()
+        {
+            let mut sc =
+                DayScenario::new(Model::Llama70B, Task::Conversation, grid, baseline);
+            if quick {
+                sc = sc.quick();
+            } else {
+                sc.hours = 12;
+            }
+            let r = run_day(&sc, &mut profiles);
+            g[i] = r.carbon_per_request_g;
+            if baseline == Baseline::GreenCache {
+                cache_tb = r.mean_cache_tb;
+            }
+        }
+        println!(
+            "{:<6} {:>10.3} {:>10.3} {:>10.3} {:>11.1}% {:>10.1}",
+            grid.name(),
+            g[0],
+            g[1],
+            g[2],
+            saving_pct(g[1], g[2]),
+            cache_tb
+        );
+    }
+    println!("\n(low-CI grids: embodied carbon dominates -> GreenCache shrinks the cache;");
+    println!(" high-CI grids: caching pays for itself -> sizes stay large. Paper Fig. 8a/12.)");
+}

@@ -1,0 +1,105 @@
+//! Multi-turn conversation serving on the real (tiny-Llama) runtime —
+//! the paper's Task 1 on the actual three-layer stack.
+//!
+//! Generates a ShareGPT-shaped conversation workload scaled into the
+//! 512-token window, serves it through the router + context cache +
+//! PJRT engine, and reports the latency/hit-rate/carbon effect of the
+//! cache (LCS policy) vs serving cold. This is the end-to-end driver
+//! recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example multi_turn_chat`
+
+use greencache::cache::PolicyKind;
+use greencache::coordinator::server::{Server, ServerConfig};
+use greencache::rng::Rng;
+use greencache::runtime::{default_artifact_dir, Engine};
+use greencache::workload::{ConversationGen, ConversationParams, Request, Workload};
+
+fn token_for(ctx_id: u64, pos: u32, vocab: usize) -> i32 {
+    let mut h = ctx_id.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(pos as u64);
+    h ^= h >> 29;
+    ((h % (vocab as u64 - 1)) + 1) as i32
+}
+
+fn build_requests(n: usize, max_prompt: u32, vocab: usize) -> Vec<(Request, Vec<i32>)> {
+    // Small pool so conversations revisit within a short demo run (the
+    // simulator uses the full-size pools).
+    let params = ConversationParams {
+        pool: 8,
+        ..ConversationParams::tiny_model()
+    };
+    let mut wl = ConversationGen::new(params, 11);
+    let mut rng = Rng::new(11);
+    let mut reqs = Vec::new();
+    while reqs.len() < n {
+        let mut r = wl.next_request(&mut rng);
+        let total = (r.context_tokens + r.new_tokens).min(max_prompt);
+        r.context_tokens = total.saturating_sub(r.new_tokens.min(total));
+        r.new_tokens = total - r.context_tokens;
+        if r.new_tokens == 0 {
+            continue;
+        }
+        let prompt: Vec<i32> = (0..total).map(|p| token_for(r.context_id, p, vocab)).collect();
+        reqs.push((r, prompt));
+    }
+    reqs
+}
+
+fn run(policy: PolicyKind, cache_mb: u64, reqs: &[(Request, Vec<i32>)]) -> greencache::Result<()> {
+    let engine = Engine::load(&default_artifact_dir())?;
+    let cfg = ServerConfig {
+        cache_bytes: cache_mb * 1024 * 1024,
+        policy,
+        n_new: 8,
+        ..Default::default()
+    };
+    let mut server = Server::new(engine, cfg);
+    let report = server.serve(reqs)?;
+    let mut ttft = report.ttft.clone();
+    println!(
+        "  cache {:>4} MB ({:?}): {:>6.2} req/s | TTFT p50 {:>6.3}s p90 {:>6.3}s | token hit {:>5.2} | prefill chunks {:>5} | carbon {:>7.3} g",
+        cache_mb,
+        policy,
+        report.throughput_rps,
+        ttft.p50(),
+        ttft.p90(),
+        report.token_hit_rate,
+        report
+            .served
+            .iter()
+            .map(|s| s.chunks_executed)
+            .sum::<usize>(),
+        report.carbon.breakdown().total_g(),
+    );
+    Ok(())
+}
+
+fn main() -> greencache::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(80);
+    let engine = Engine::load(&default_artifact_dir())?;
+    let max_prompt = (engine.config().max_seq - 8) as u32;
+    let vocab = engine.config().vocab;
+    drop(engine);
+
+    let reqs = build_requests(n, max_prompt, vocab);
+    let total_ctx: u64 = reqs.iter().map(|(r, _)| r.context_tokens as u64).sum();
+    println!(
+        "multi-turn conversation: {} requests, {} total context tokens (mean {:.0}/req)",
+        reqs.len(),
+        total_ctx,
+        total_ctx as f64 / reqs.len() as f64
+    );
+
+    println!("no cache:");
+    run(PolicyKind::Lcs, 0, &reqs)?;
+    println!("with context cache:");
+    run(PolicyKind::Lcs, 64, &reqs)?;
+    println!("small cache, policy comparison (the Table-3 effect):");
+    for policy in [PolicyKind::Fifo, PolicyKind::Lru, PolicyKind::Lcs] {
+        run(policy, 3, &reqs)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,142 @@
+"""AOT pipeline: lower the L2 programs to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+text with ``HloModuleProto::from_text_file``. HLO text — NOT
+``lowered.compile()`` / ``.serialize()`` — is the interchange format: the
+image's xla_extension 0.5.1 rejects jax≥0.5 protos with 64-bit instruction
+ids, while the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Emits into ``artifacts/``:
+  prefill_chunk.hlo.txt   (tokens[C] i32, kv f32, start i32, valid i32)
+                          -> tuple(kv' f32, logits[V] f32)
+  decode_step.hlo.txt     (token[1] i32, kv f32, pos i32)
+                          -> tuple(logits[V] f32, kv' f32)
+  model_config.json       dimensions + artifact manifest
+  golden.json             greedy-decode vectors for the rust integration
+                          tests (computed with the pure-jnp reference path)
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    CONFIG,
+    ModelConfig,
+    empty_kv,
+    greedy_generate,
+    make_decode_step,
+    make_prefill_chunk,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True; the rust
+    side unwraps with to_tupleN)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the baked weights must survive the text
+    # round-trip (the default elides them as "{...}", which the rust-side
+    # text parser would reject / zero-fill).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_programs(cfg: ModelConfig, *, use_kernel: bool = True):
+    """Lower both programs; returns {name: hlo_text}."""
+    tok_chunk = jax.ShapeDtypeStruct((cfg.chunk,), jnp.int32)
+    tok_one = jax.ShapeDtypeStruct((1,), jnp.int32)
+    kv = jax.ShapeDtypeStruct(cfg.kv_shape, jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+
+    prefill = make_prefill_chunk(cfg, use_kernel=use_kernel)
+    decode = make_decode_step(cfg, use_kernel=use_kernel)
+
+    return {
+        "prefill_chunk": to_hlo_text(
+            jax.jit(prefill).lower(tok_chunk, kv, scalar, scalar)
+        ),
+        "decode_step": to_hlo_text(jax.jit(decode).lower(tok_one, kv, scalar)),
+    }
+
+
+def golden_vectors(cfg: ModelConfig) -> dict:
+    """Deterministic end-to-end vectors the rust integration tests replay.
+
+    Uses the pure-jnp reference path (use_kernel=False): the pallas-vs-ref
+    equivalence is covered separately by python/tests, and the artifacts
+    themselves are lowered from the pallas path, so the rust comparison
+    closes the loop kernel -> HLO -> PJRT -> tokens.
+    """
+    rng = jax.random.PRNGKey(7)
+    prompt = [int(t) for t in jax.random.randint(rng, (100,), 1, cfg.vocab)]
+    n_new = 12
+    full = greedy_generate(prompt, n_new, cfg, use_kernel=False)
+
+    # Cache-hit variant: precompute KV for the first chunk of the prompt,
+    # resume prefill at chunk boundary. Must produce identical tokens.
+    prefill = jax.jit(make_prefill_chunk(cfg, use_kernel=False))
+    kv = empty_kv(cfg)
+    kv, _ = prefill(
+        jnp.asarray(prompt[: cfg.chunk], jnp.int32),
+        kv,
+        jnp.int32(0),
+        jnp.int32(cfg.chunk),
+    )
+    hit = greedy_generate(
+        prompt, n_new, cfg, use_kernel=False, prefix_kv=kv, prefix_len=cfg.chunk
+    )
+    assert hit == full, "cache-hit path must be output-identical"
+
+    return {
+        "prompt": prompt,
+        "n_new": n_new,
+        "tokens": full,
+        "prefix_len_for_hit": cfg.chunk,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--no-kernel",
+        action="store_true",
+        help="lower the pure-jnp path instead of the pallas kernel (debug)",
+    )
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    cfg = CONFIG
+    programs = lower_programs(cfg, use_kernel=not args.no_kernel)
+    manifest = {}
+    for name, text in programs.items():
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest[name] = path.name
+        print(f"wrote {path} ({len(text)} chars)")
+
+    config = cfg.to_dict()
+    config["artifacts"] = manifest
+    config["lowered_with_pallas_kernel"] = not args.no_kernel
+    (out / "model_config.json").write_text(json.dumps(config, indent=2))
+    print(f"wrote {out / 'model_config.json'}")
+
+    golden = golden_vectors(cfg)
+    (out / "golden.json").write_text(json.dumps(golden))
+    print(f"wrote {out / 'golden.json'} ({len(golden['tokens'])} tokens)")
+
+
+if __name__ == "__main__":
+    main()

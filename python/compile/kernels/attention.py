@@ -1,0 +1,188 @@
+"""L1: Pallas causal KV-cache attention kernel (flash-attention style).
+
+The paper's serving stack runs CUDA attention; per DESIGN.md
+§Hardware-Adaptation we re-express the kernel for TPU idioms:
+
+* The grid tiles (head, q-block); every grid step holds one
+  ``(block_q, d_head)`` query tile in VMEM (BlockSpec-scheduled HBM->VMEM
+  copy — the analogue of a CUDA threadblock staging into shared memory).
+* K/V are streamed tile-by-tile with ``pl.load`` dynamic slices inside an
+  online-softmax loop, so no ``(T, S)`` score matrix ever materializes
+  (the flash-attention insight, expressed as a KV-block loop instead of
+  warp tiling).
+* Accumulation is fp32 with an MXU-friendly ``q @ k.T`` /(``p @ v``)
+  contraction layout.
+
+``interpret=True`` is mandatory on this testbed: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. The kernel is still
+written as if for TPU (VMEM-sized tiles, fp32 accumulation) so the
+structure carries over; see DESIGN.md §Perf for the footprint estimates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Large-negative filler for masked logits. Not -inf: fully-masked rows
+# would produce inf - inf = NaN in the online-softmax rescale.
+_MASK_VALUE = -1e30
+
+
+def _attn_kernel(
+    qoff_ref,
+    klen_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    block_k: int,
+    scale: float,
+):
+    """One (head, q-block) grid step.
+
+    Refs (leading size-1 head axis comes from the BlockSpec):
+      qoff_ref: [1]      i32  global position of the first query row
+      klen_ref: [1]      i32  number of valid KV rows (attend to < klen)
+      q_ref:    [1, bq, d]    query tile
+      k_ref:    [1, S, d]     full per-head key cache (streamed in tiles)
+      v_ref:    [1, S, d]     full per-head value cache
+      o_ref:    [1, bq, d]    output tile
+    """
+    block_q = q_ref.shape[1]
+    d = q_ref.shape[2]
+    s_len = k_ref.shape[1]
+    n_kv_blocks = s_len // block_k
+
+    q_offset = qoff_ref[0]
+    kv_len = klen_ref[0]
+
+    q = q_ref[0, :, :].astype(jnp.float32) * scale
+    # Global position of this tile's rows: the q-block grid axis advances
+    # block_q rows per step.
+    q_block = pl.program_id(1)
+    q_pos = q_offset + q_block * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        k_start = j * block_k
+        k = k_ref[0, pl.dslice(k_start, block_k), :]
+        v = v_ref[0, pl.dslice(k_start, block_k), :]
+        s = jnp.dot(
+            q, k.astype(jnp.float32).T, preferred_element_type=jnp.float32
+        )  # [bq, bk]
+        k_pos = k_start + jax.lax.iota(jnp.int32, block_k)
+        mask = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] < kv_len)
+        s = jnp.where(mask, s, _MASK_VALUE)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        # Zero out fully-masked blocks: exp(_MASK_VALUE - m) can still be 1
+        # when the whole row is masked and m == _MASK_VALUE.
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v.astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), _MASK_VALUE, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kv_blocks, body, (acc0, m0, l0))
+
+    # Rows with no visible KV (padding rows past `valid`) keep l == 0;
+    # emit zeros instead of NaN so downstream stays finite.
+    safe_l = jnp.where(l > 0.0, l, 1.0)
+    out = jnp.where((l > 0.0)[:, None], acc / safe_l[:, None], 0.0)
+    o_ref[0, :, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_offset: jax.Array,
+    kv_len: jax.Array,
+    *,
+    block_q: int = 64,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Causal attention of `q` against a KV cache prefix.
+
+    Args:
+      q: [T, H, D] queries for T new tokens at global positions
+         ``q_offset .. q_offset + T - 1``.
+      k, v: [S, H, D] full cache buffers; only rows < ``kv_len`` are valid.
+      q_offset: scalar i32, global position of q row 0.
+      kv_len: scalar i32, number of valid cache rows (the new tokens must
+        already be written into k/v by the caller).
+      block_q/block_k: VMEM tile sizes; T % block_q == 0, S % block_k == 0.
+
+    Returns:
+      [T, H, D] attention outputs, zeros for rows with no visible KV.
+    """
+    t_len, n_heads, d_head = q.shape
+    s_len = k.shape[0]
+    if t_len % min(block_q, t_len) != 0:
+        raise ValueError(f"T={t_len} not divisible by block_q={block_q}")
+    block_q = min(block_q, t_len)
+    block_k = min(block_k, s_len)
+    if s_len % block_k != 0:
+        raise ValueError(f"S={s_len} not divisible by block_k={block_k}")
+
+    scale = 1.0 / (d_head**0.5)
+    # [H, T, D] so the head axis can be blocked with size 1.
+    q_h = q.transpose(1, 0, 2)
+    k_h = k.transpose(1, 0, 2)
+    v_h = v.transpose(1, 0, 2)
+    qoff = jnp.asarray(q_offset, jnp.int32).reshape((1,))
+    klen = jnp.asarray(kv_len, jnp.int32).reshape((1,))
+
+    grid = (n_heads, t_len // block_q)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, i: (0,)),
+            pl.BlockSpec((1,), lambda h, i: (0,)),
+            pl.BlockSpec((1, block_q, d_head), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, s_len, d_head), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((1, s_len, d_head), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d_head), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, t_len, d_head), q.dtype),
+        interpret=interpret,
+    )(qoff, klen, q_h, k_h, v_h)
+    return out.transpose(1, 0, 2)
+
+
+def vmem_footprint_bytes(
+    t_len: int,
+    s_len: int,
+    d_head: int,
+    *,
+    block_q: int = 64,
+    block_k: int = 128,
+    dtype_bytes: int = 4,
+) -> int:
+    """Estimate of resident VMEM per grid step (DESIGN.md §Perf).
+
+    q tile + one k tile + one v tile + output tile + fp32 accumulators.
+    Used by the perf report; interpret-mode wallclock is NOT a TPU proxy.
+    """
+    bq = min(block_q, t_len)
+    bk = min(block_k, s_len)
+    q_tile = bq * d_head * dtype_bytes
+    kv_tiles = 2 * bk * d_head * dtype_bytes
+    o_tile = bq * d_head * dtype_bytes
+    acc = bq * d_head * 4 + 2 * bq * 4
+    return q_tile + kv_tiles + o_tile + acc

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness only).
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between the two across shape/dtype sweeps (hypothesis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_offset: jax.Array,
+    kv_len: jax.Array,
+) -> jax.Array:
+    """Reference causal KV-cache attention; same contract as
+    ``attention.flash_attention``.
+
+    q: [T, H, D]; k, v: [S, H, D]; returns [T, H, D].
+    Rows with no visible KV return zeros (matches the kernel).
+    """
+    t_len, _, d_head = q.shape
+    s_len = k.shape[0]
+    scale = 1.0 / (d_head**0.5)
+    q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(t_len)
+    k_pos = jnp.arange(s_len)
+    mask = (k_pos[None, :] <= q_pos[:, None]) & (
+        k_pos[None, :] < jnp.asarray(kv_len, jnp.int32)
+    )  # [T, S]
+
+    # [T, H, S]
+    scores = jnp.einsum("thd,shd->ths", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    scores = jnp.where(mask[:, None, :], scores, -jnp.inf)
+    # Fully-masked rows: softmax would be NaN; zero them afterwards.
+    row_has_any = jnp.any(mask, axis=-1)  # [T]
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(row_has_any[:, None, None], p, 0.0)
+    out = jnp.einsum("ths,shd->thd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,300 @@
+"""L2: tiny Llama-style transformer in JAX — the build-time compute graph.
+
+Two fixed-shape programs are exported (see ``aot.py``):
+
+* ``prefill_chunk(tokens[C], kv, start, valid) -> (kv', logits)``
+  processes one C-token chunk at global positions ``start..start+valid-1``
+  given a KV cache valid for ``0..start``; returns the updated cache and
+  the logits at the last valid position.
+* ``decode_step(token, kv, pos) -> (logits, kv')``
+  one autoregressive step at position ``pos``.
+
+The rust runtime (L3) loops chunks / steps; a context-cache hit on a
+k-chunk prefix skips k ``prefill_chunk`` executions — that is the paper's
+context-caching mechanism made concrete on this testbed.
+
+Weights are deterministic (seeded PRNG) and baked into the lowered HLO as
+constants, so the rust binary needs no weight files. Python never runs on
+the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.ref import attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Dimensions of the served model (the "tiny Llama" analogue)."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_head: int = 32
+    d_ffn: int = 256
+    max_seq: int = 512
+    chunk: int = 64
+    rope_theta: float = 10000.0
+    seed: int = 42
+
+    @property
+    def kv_shape(self):
+        """KV cache: [n_layers, 2 (k|v), max_seq, n_heads, d_head]."""
+        return (self.n_layers, 2, self.max_seq, self.n_heads, self.d_head)
+
+    @property
+    def kv_bytes(self) -> int:
+        n = 1
+        for d in self.kv_shape:
+            n *= d
+        return n * 4  # f32
+
+    @property
+    def n_chunks(self) -> int:
+        return self.max_seq // self.chunk
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["kv_shape"] = list(self.kv_shape)
+        d["kv_bytes"] = self.kv_bytes
+        return d
+
+
+CONFIG = ModelConfig()
+
+
+def init_params(cfg: ModelConfig = CONFIG) -> Dict[str, Any]:
+    """Deterministic Llama-style parameters (no training; serving repro)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    keys = iter(jax.random.split(key, 3 + cfg.n_layers * 7))
+
+    def dense(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(
+            jnp.float32
+        )
+
+    params: Dict[str, Any] = {
+        "embed": dense(next(keys), (cfg.vocab, cfg.d_model), cfg.d_model),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense(next(keys), (cfg.d_model, cfg.vocab), cfg.d_model),
+        "layers": [],
+    }
+    hd = cfg.n_heads * cfg.d_head
+    for _ in range(cfg.n_layers):
+        layer = {
+            "attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "wq": dense(next(keys), (cfg.d_model, hd), cfg.d_model),
+            "wk": dense(next(keys), (cfg.d_model, hd), cfg.d_model),
+            "wv": dense(next(keys), (cfg.d_model, hd), cfg.d_model),
+            "wo": dense(next(keys), (hd, cfg.d_model), hd),
+            "mlp_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "w_gate": dense(next(keys), (cfg.d_model, cfg.d_ffn), cfg.d_model),
+            "w_up": dense(next(keys), (cfg.d_model, cfg.d_ffn), cfg.d_model),
+            "w_down": dense(next(keys), (cfg.d_ffn, cfg.d_model), cfg.d_ffn),
+        }
+        params["layers"].append(layer)
+    return params
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [T, H, D]; positions: [T] i32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(angles)[:, None, :]  # [T, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(q, k, v, q_offset, kv_len, *, use_kernel: bool):
+    if use_kernel:
+        return flash_attention(q, k, v, q_offset, kv_len)
+    return attention_ref(q, k, v, q_offset, kv_len)
+
+
+def _block(
+    cfg: ModelConfig,
+    layer: Dict[str, Any],
+    x: jax.Array,  # [T, d_model]
+    k_cache: jax.Array,  # [S, H, D]
+    v_cache: jax.Array,
+    start: jax.Array,  # i32 scalar: global position of x row 0
+    valid: jax.Array,  # i32 scalar: number of valid rows in x
+    *,
+    use_kernel: bool,
+):
+    """One transformer block over a chunk; returns (x', k_cache', v_cache')."""
+    t_len = x.shape[0]
+    h = rmsnorm(x, layer["attn_norm"])
+    positions = start + jnp.arange(t_len, dtype=jnp.int32)
+    q = (h @ layer["wq"]).reshape(t_len, cfg.n_heads, cfg.d_head)
+    k = (h @ layer["wk"]).reshape(t_len, cfg.n_heads, cfg.d_head)
+    v = (h @ layer["wv"]).reshape(t_len, cfg.n_heads, cfg.d_head)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    # Write the valid rows of k/v into the cache at start..start+valid-1.
+    row_ok = (jnp.arange(t_len) < valid)[:, None, None]
+    old_k = jax.lax.dynamic_slice(
+        k_cache, (start, 0, 0), (t_len, cfg.n_heads, cfg.d_head)
+    )
+    old_v = jax.lax.dynamic_slice(
+        v_cache, (start, 0, 0), (t_len, cfg.n_heads, cfg.d_head)
+    )
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, jnp.where(row_ok, k, old_k), (start, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, jnp.where(row_ok, v, old_v), (start, 0, 0)
+    )
+
+    kv_len = start + valid
+    attn = _attention(q, k_cache, v_cache, start, kv_len, use_kernel=use_kernel)
+    x = x + attn.reshape(t_len, cfg.n_heads * cfg.d_head) @ layer["wo"]
+
+    h = rmsnorm(x, layer["mlp_norm"])
+    x = x + (jax.nn.silu(h @ layer["w_gate"]) * (h @ layer["w_up"])) @ layer["w_down"]
+    return x, k_cache, v_cache
+
+
+def _forward_chunk(cfg, params, tokens, kv, start, valid, *, use_kernel):
+    """Shared body for prefill_chunk / decode_step.
+
+    tokens: [T] i32; kv: cfg.kv_shape f32; returns (kv', logits_at_valid-1).
+    """
+    x = params["embed"][tokens]  # [T, d_model]
+    new_layers = []
+    for li in range(cfg.n_layers):
+        x, k_c, v_c = _block(
+            cfg,
+            params["layers"][li],
+            x,
+            kv[li, 0],
+            kv[li, 1],
+            start,
+            valid,
+            use_kernel=use_kernel,
+        )
+        new_layers.append(jnp.stack([k_c, v_c]))
+    kv = jnp.stack(new_layers)
+    x = rmsnorm(x, params["final_norm"])
+    last = jax.lax.dynamic_index_in_dim(x, valid - 1, axis=0, keepdims=False)
+    logits = last @ params["lm_head"]  # [vocab]
+    return kv, logits
+
+
+def make_prefill_chunk(cfg: ModelConfig = CONFIG, *, use_kernel: bool = True):
+    """Returns prefill_chunk(tokens[C] i32, kv, start i32, valid i32)
+    -> (kv', logits[vocab])."""
+    params = init_params(cfg)
+
+    def prefill_chunk(tokens, kv, start, valid):
+        start = jnp.asarray(start, jnp.int32)
+        valid = jnp.asarray(valid, jnp.int32)
+        return _forward_chunk(
+            cfg, params, tokens, kv, start, valid, use_kernel=use_kernel
+        )
+
+    return prefill_chunk
+
+
+def make_decode_step(cfg: ModelConfig = CONFIG, *, use_kernel: bool = True):
+    """Returns decode_step(token[1] i32, kv, pos i32) -> (logits[vocab], kv')."""
+    params = init_params(cfg)
+
+    def decode_step(token, kv, pos):
+        pos = jnp.asarray(pos, jnp.int32)
+        kv, logits = _forward_chunk(
+            cfg, params, token, kv, pos, jnp.int32(1), use_kernel=use_kernel
+        )
+        return logits, kv
+
+    return decode_step
+
+
+def empty_kv(cfg: ModelConfig = CONFIG) -> jax.Array:
+    return jnp.zeros(cfg.kv_shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Reference driver (python-side oracle for the rust runtime integration test)
+# ---------------------------------------------------------------------------
+
+
+def greedy_generate(
+    prompt: list[int],
+    n_new: int,
+    cfg: ModelConfig = CONFIG,
+    *,
+    use_kernel: bool = False,
+    prefix_kv: jax.Array | None = None,
+    prefix_len: int = 0,
+) -> list[int]:
+    """Greedy decoding via the chunked programs — mirrors the rust loop.
+
+    ``prefix_kv``/``prefix_len`` emulate a context-cache hit: prefill
+    resumes at ``prefix_len`` (which must be a chunk multiple).
+    """
+    if prefix_len % cfg.chunk != 0:
+        raise ValueError("cache hits land on chunk boundaries")
+    prefill = jax.jit(make_prefill_chunk(cfg, use_kernel=use_kernel))
+    decode = jax.jit(make_decode_step(cfg, use_kernel=use_kernel))
+
+    kv = prefix_kv if prefix_kv is not None else empty_kv(cfg)
+    n_prompt = len(prompt)
+    assert prefix_len < n_prompt <= cfg.max_seq - n_new
+
+    logits = None
+    pos = prefix_len
+    while pos < n_prompt:
+        valid = min(cfg.chunk, n_prompt - pos)
+        chunk = prompt[pos : pos + valid] + [0] * (cfg.chunk - valid)
+        kv, logits = prefill(
+            jnp.asarray(chunk, jnp.int32), kv, jnp.int32(pos), jnp.int32(valid)
+        )
+        pos += valid
+
+    out = []
+    tok = int(jnp.argmax(logits))
+    out.append(tok)
+    for _ in range(n_new - 1):
+        logits, kv = decode(jnp.asarray([tok], jnp.int32), kv, jnp.int32(pos))
+        pos += 1
+        tok = int(jnp.argmax(logits))
+        out.append(tok)
+    return out
+
+
+def reference_logits(prompt: list[int], cfg: ModelConfig = CONFIG) -> jax.Array:
+    """One-shot (unchunked) forward over the whole prompt: oracle for the
+    chunked path. Returns logits at the last prompt position."""
+    params = init_params(cfg)
+    n = len(prompt)
+    pad = cfg.max_seq - n
+    toks = jnp.asarray(prompt + [0] * pad, jnp.int32)
+    kv, logits = _forward_chunk(
+        dataclasses.replace(cfg, chunk=cfg.max_seq),
+        params,
+        toks,
+        empty_kv(cfg),
+        jnp.int32(0),
+        jnp.int32(n),
+        use_kernel=False,
+    )
+    del kv
+    return logits

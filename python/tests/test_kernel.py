@@ -1,0 +1,187 @@
+"""L1 correctness: pallas flash_attention vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel that ends up inside the
+AOT artifacts — every other layer builds on it.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention, vmem_footprint_bytes
+from compile.kernels.ref import attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(
+        dtype
+    )
+
+
+def run_both(t, s, h, d, q_offset, kv_len, *, dtype=jnp.float32, bq=64, bk=128):
+    q = rand(0, (t, h, d), dtype)
+    k = rand(1, (s, h, d), dtype)
+    v = rand(2, (s, h, d), dtype)
+    got = flash_attention(
+        q, k, v, jnp.int32(q_offset), jnp.int32(kv_len), block_q=bq, block_k=bk
+    )
+    want = attention_ref(q, k, v, jnp.int32(q_offset), jnp.int32(kv_len))
+    return np.asarray(got), np.asarray(want)
+
+
+class TestBasicShapes:
+    def test_prefill_first_chunk(self):
+        got, want = run_both(64, 512, 4, 32, q_offset=0, kv_len=64)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_prefill_middle_chunk(self):
+        got, want = run_both(64, 512, 4, 32, q_offset=128, kv_len=192)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_decode_single_token(self):
+        got, want = run_both(1, 512, 4, 32, q_offset=100, kv_len=101)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_decode_at_end_of_window(self):
+        got, want = run_both(1, 512, 4, 32, q_offset=511, kv_len=512)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_single_head(self):
+        got, want = run_both(32, 128, 1, 16, q_offset=0, kv_len=32, bq=32, bk=32)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_many_heads(self):
+        got, want = run_both(16, 128, 8, 8, q_offset=16, kv_len=32, bq=16, bk=64)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+class TestMasking:
+    def test_fully_masked_rows_are_zero(self):
+        """Rows past `valid` see no KV and must be exactly zero, not NaN."""
+        q = rand(0, (64, 4, 32))
+        k = rand(1, (512, 4, 32))
+        v = rand(2, (512, 4, 32))
+        # q rows at positions 10..73 but only kv_len=10 valid: every row
+        # 10+i attends to <= min(10+i, 9)... rows with q_pos >= kv_len=10
+        # see k_pos <= q_pos AND k_pos < 10, so rows still see 10 keys.
+        # To get truly masked rows use kv_len=0.
+        got = flash_attention(q, k, v, jnp.int32(0), jnp.int32(0))
+        assert np.all(np.asarray(got) == 0.0)
+        assert not np.any(np.isnan(np.asarray(got)))
+
+    def test_causality(self):
+        """Changing future KV rows must not change current outputs."""
+        q = rand(0, (64, 2, 16))
+        k = rand(1, (256, 2, 16))
+        v = rand(2, (256, 2, 16))
+        base = flash_attention(q, k, v, jnp.int32(0), jnp.int32(64), block_k=64)
+        k2 = k.at[64:].set(99.0)
+        v2 = v.at[64:].set(-99.0)
+        pert = flash_attention(q, k2, v2, jnp.int32(0), jnp.int32(64), block_k=64)
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(pert))
+
+    def test_kv_len_boundary(self):
+        """Row i attends to exactly i+1 keys when offset=0."""
+        s, h, d = 128, 1, 8
+        q = jnp.ones((1, h, d))
+        k = jnp.ones((s, h, d))
+        # v rows encode their index; output = mean of visible v rows.
+        v = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.float32)[:, None, None], (s, h, d)
+        )
+        for kv_len in (1, 2, 64, 65, 127, 128):
+            out = flash_attention(
+                q, k, v, jnp.int32(kv_len - 1), jnp.int32(kv_len), block_k=64
+            )
+            want = np.mean(np.arange(kv_len))
+            np.testing.assert_allclose(
+                np.asarray(out)[0, 0, 0], want, rtol=1e-5, atol=1e-5
+            )
+
+
+class TestNumerics:
+    def test_large_logit_stability(self):
+        """Online softmax must survive large score magnitudes."""
+        q = 30.0 * rand(0, (16, 2, 32))
+        k = 30.0 * rand(1, (128, 2, 32))
+        v = rand(2, (128, 2, 32))
+        got = flash_attention(q, k, v, jnp.int32(0), jnp.int32(128), block_q=16, block_k=64)
+        want = attention_ref(q, k, v, jnp.int32(0), jnp.int32(128))
+        assert not np.any(np.isnan(np.asarray(got)))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_bfloat16_io(self):
+        got, want = run_both(
+            64, 256, 2, 32, q_offset=0, kv_len=64, dtype=jnp.bfloat16, bk=64
+        )
+        np.testing.assert_allclose(
+            got.astype(np.float32), want.astype(np.float32), rtol=2e-2, atol=2e-2
+        )
+
+    def test_block_size_invariance(self):
+        """Result must not depend on the tiling."""
+        outs = []
+        for bq, bk in [(16, 32), (32, 64), (64, 128), (64, 256)]:
+            got, _ = run_both(64, 256, 2, 16, q_offset=64, kv_len=128, bq=bq, bk=bk)
+            outs.append(got)
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    t_pow=st.integers(0, 3),  # T in {8,16,32,64} via 8<<p, plus T=1 case below
+    s_pow=st.integers(0, 2),  # S in {128,256,512}
+    h=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    data=st.data(),
+)
+def test_hypothesis_sweep(t_pow, s_pow, h, d, data):
+    """Property: kernel == oracle across shapes, offsets and valid lengths."""
+    t = 8 << t_pow
+    s = 128 << s_pow
+    q_offset = data.draw(st.integers(0, s - t), label="q_offset")
+    kv_len = data.draw(st.integers(0, q_offset + t), label="kv_len")
+    got, want = run_both(t, s, h, d, q_offset, kv_len, bq=min(64, t), bk=64)
+    assert not np.any(np.isnan(got))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s_pow=st.integers(0, 2),
+    h=st.sampled_from([1, 4]),
+    d=st.sampled_from([16, 32]),
+    data=st.data(),
+)
+def test_hypothesis_decode_rows(s_pow, h, d, data):
+    """Decode shape T=1 across arbitrary positions."""
+    s = 128 << s_pow
+    pos = data.draw(st.integers(0, s - 1), label="pos")
+    got, want = run_both(1, s, h, d, pos, pos + 1, bq=1, bk=64)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+class TestVmemEstimate:
+    def test_footprint_fits_vmem(self):
+        """DESIGN.md §Perf: default tiling stays well under 16 MB VMEM."""
+        b = vmem_footprint_bytes(64, 512, 32)
+        assert b < 2 * 1024 * 1024
+
+    def test_footprint_scales_with_blocks(self):
+        small = vmem_footprint_bytes(64, 512, 32, block_q=16, block_k=32)
+        large = vmem_footprint_bytes(64, 512, 32, block_q=64, block_k=128)
+        assert small < large
+
+
+class TestValidation:
+    def test_rejects_unaligned_kv(self):
+        q = jnp.zeros((16, 1, 8))
+        k = jnp.zeros((100, 1, 8))
+        v = jnp.zeros((100, 1, 8))
+        with pytest.raises(ValueError):
+            flash_attention(q, k, v, jnp.int32(0), jnp.int32(10), block_k=64)

@@ -1,0 +1,192 @@
+"""L2 correctness: chunked prefill/decode vs the one-shot oracle, and the
+cache-hit path (resume from stored KV) vs full recompute."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    CONFIG,
+    ModelConfig,
+    empty_kv,
+    greedy_generate,
+    init_params,
+    make_decode_step,
+    make_prefill_chunk,
+    reference_logits,
+    rmsnorm,
+    rope,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = ModelConfig(
+    vocab=64, d_model=32, n_layers=2, n_heads=2, d_head=16, d_ffn=64,
+    max_seq=128, chunk=32,
+)
+
+
+def prompt_of(n, seed=0, cfg=SMALL):
+    rng = jax.random.PRNGKey(seed)
+    return [int(t) for t in jax.random.randint(rng, (n,), 1, cfg.vocab)]
+
+
+def chunked_prefill(prompt, cfg, *, use_kernel=False, kv=None, start=0):
+    prefill = jax.jit(make_prefill_chunk(cfg, use_kernel=use_kernel))
+    kv = kv if kv is not None else empty_kv(cfg)
+    pos, logits = start, None
+    while pos < len(prompt):
+        valid = min(cfg.chunk, len(prompt) - pos)
+        chunk = prompt[pos : pos + valid] + [0] * (cfg.chunk - valid)
+        kv, logits = prefill(
+            jnp.asarray(chunk, jnp.int32), kv, jnp.int32(pos), jnp.int32(valid)
+        )
+        pos += valid
+    return kv, logits
+
+
+class TestChunkedVsOneShot:
+    @pytest.mark.parametrize("n", [1, 31, 32, 33, 64, 100, 127])
+    def test_prefill_logits_match_reference(self, n):
+        prompt = prompt_of(n)
+        _, logits = chunked_prefill(prompt, SMALL)
+        want = reference_logits(prompt, SMALL)
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(want), rtol=2e-4, atol=2e-4
+        )
+
+    def test_kernel_and_ref_paths_agree(self):
+        prompt = prompt_of(70)
+        _, l_ref = chunked_prefill(prompt, SMALL, use_kernel=False)
+        _, l_ker = chunked_prefill(prompt, SMALL, use_kernel=True)
+        np.testing.assert_allclose(
+            np.asarray(l_ker), np.asarray(l_ref), rtol=2e-4, atol=2e-4
+        )
+
+    def test_decode_equals_prefill_of_extended_prompt(self):
+        """decode_step(t) after prefill(P) == prefill(P + [t]) logits."""
+        cfg = SMALL
+        prompt = prompt_of(40)
+        nxt = 7
+        kv, _ = chunked_prefill(prompt, cfg)
+        decode = jax.jit(make_decode_step(cfg, use_kernel=False))
+        logits_dec, _ = decode(
+            jnp.asarray([nxt], jnp.int32), kv, jnp.int32(len(prompt))
+        )
+        want = reference_logits(prompt + [nxt], cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits_dec), np.asarray(want), rtol=2e-4, atol=2e-4
+        )
+
+
+class TestCacheHitPath:
+    def test_resume_from_cached_prefix_is_identical(self):
+        """The paper's mechanism: stored KV for a context prefix replaces
+        prefill compute with zero output change."""
+        cfg = SMALL
+        prompt = prompt_of(100, seed=3)
+        full = greedy_generate(prompt, 8, cfg)
+
+        kv, _ = chunked_prefill(prompt[: 2 * cfg.chunk], cfg)
+        hit = greedy_generate(
+            prompt, 8, cfg, prefix_kv=kv, prefix_len=2 * cfg.chunk
+        )
+        assert hit == full
+
+    def test_partial_prefix_lengths(self):
+        cfg = SMALL
+        prompt = prompt_of(97, seed=5)
+        full = greedy_generate(prompt, 4, cfg)
+        for n_chunks in (1, 2):
+            plen = n_chunks * cfg.chunk
+            kv, _ = chunked_prefill(prompt[:plen], cfg)
+            assert greedy_generate(
+                prompt, 4, cfg, prefix_kv=kv, prefix_len=plen
+            ) == full
+
+    def test_unaligned_prefix_rejected(self):
+        with pytest.raises(ValueError):
+            greedy_generate(prompt_of(50), 2, SMALL, prefix_len=7)
+
+
+class TestKvSemantics:
+    def test_prefill_writes_only_valid_rows(self):
+        cfg = SMALL
+        prefill = jax.jit(make_prefill_chunk(cfg, use_kernel=False))
+        kv0 = empty_kv(cfg) + 123.0  # sentinel everywhere
+        toks = jnp.asarray(prompt_of(cfg.chunk), jnp.int32)
+        kv1, _ = prefill(toks, kv0, jnp.int32(0), jnp.int32(10))
+        kv1 = np.asarray(kv1)
+        # rows >= 10 untouched
+        np.testing.assert_array_equal(kv1[:, :, 10:], 123.0)
+        # rows < 10 overwritten (not all equal to sentinel)
+        assert not np.all(kv1[:, :, :10] == 123.0)
+
+    def test_decode_writes_exactly_one_row(self):
+        cfg = SMALL
+        decode = jax.jit(make_decode_step(cfg, use_kernel=False))
+        kv0 = empty_kv(cfg) + 5.0
+        _, kv1 = decode(jnp.asarray([3], jnp.int32), kv0, jnp.int32(20))
+        kv1 = np.asarray(kv1)
+        mask = np.ones(cfg.max_seq, bool)
+        mask[20] = False
+        np.testing.assert_array_equal(kv1[:, :, mask], 5.0)
+        assert not np.all(kv1[:, :, 20] == 5.0)
+
+    def test_determinism(self):
+        cfg = SMALL
+        prompt = prompt_of(60, seed=9)
+        a = greedy_generate(prompt, 6, cfg)
+        b = greedy_generate(prompt, 6, cfg)
+        assert a == b
+
+    def test_outputs_finite(self):
+        prompt = prompt_of(90, seed=11)
+        kv, logits = chunked_prefill(prompt, SMALL)
+        assert np.all(np.isfinite(np.asarray(kv)))
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+
+class TestPrimitives:
+    def test_rmsnorm_unit_scale(self):
+        x = jnp.full((4, 8), 3.0)
+        out = rmsnorm(x, jnp.ones(8))
+        np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-4)
+
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 2, 16))
+        out = rope(x, jnp.arange(8, dtype=jnp.int32), 10000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(out), axis=-1),
+            np.linalg.norm(np.asarray(x), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_rope_position_zero_is_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 16))
+        out = rope(x, jnp.zeros(1, jnp.int32), 10000.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6)
+
+    def test_rope_relative_shift(self):
+        """RoPE dot products depend only on relative offset."""
+        q = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 16))
+        k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 16))
+        def dot_at(pq, pk):
+            qr = rope(q, jnp.asarray([pq], jnp.int32), 10000.0)
+            kr = rope(k, jnp.asarray([pk], jnp.int32), 10000.0)
+            return float(jnp.sum(qr * kr))
+        np.testing.assert_allclose(dot_at(5, 3), dot_at(12, 10), rtol=1e-4)
+
+    def test_params_deterministic(self):
+        p1 = init_params(SMALL)
+        p2 = init_params(SMALL)
+        np.testing.assert_array_equal(
+            np.asarray(p1["embed"]), np.asarray(p2["embed"])
+        )
+
+    def test_config_kv_bytes(self):
+        assert CONFIG.kv_bytes == int(np.prod(CONFIG.kv_shape)) * 4
+        assert CONFIG.max_seq % CONFIG.chunk == 0

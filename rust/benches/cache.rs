@@ -1,0 +1,66 @@
+//! Cache-manager bench: policy ops/s under realistic churn (the Table-3
+//! substrate must not bottleneck the day-scale simulations).
+
+use greencache::cache::{CacheManager, PolicyKind};
+use greencache::rng::Rng;
+use greencache::util::bench::{black_box, Bench};
+use greencache::workload::{Request, TaskKind};
+
+fn req(ctx: u64, version: u32, context: u32) -> Request {
+    Request {
+        id: 0,
+        task: TaskKind::Conversation,
+        context_id: ctx,
+        context_version: version,
+        context_tokens: context,
+        new_tokens: 50,
+        output_tokens: 100,
+        arrival_s: 0.0,
+    }
+}
+
+/// lookup+admit churn over `n_ops` operations on a cache holding ~8k
+/// entries at steady state.
+fn churn(policy: PolicyKind, n_ops: usize, seed: u64) -> u64 {
+    let mut m = CacheManager::new(8_000 * 1_000, 1_000, policy);
+    let mut rng = Rng::new(seed);
+    let mut now = 0.0;
+    let mut acc = 0u64;
+    for _ in 0..n_ops {
+        now += 0.01;
+        let ctx = rng.below(20_000);
+        let context = rng.range(100, 900) as u32;
+        let r = req(ctx, rng.below(8) as u32, context);
+        let h = m.lookup(&r, now);
+        acc += h.hit_tokens as u64;
+        m.admit(&r, context + 150, None, now);
+    }
+    acc + m.stats().evictions
+}
+
+fn main() {
+    let mut b = Bench::new("cache");
+    for policy in [PolicyKind::Fifo, PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::Lcs] {
+        let r = b.case(&format!("churn_20k_ops_{}", policy.name()), || {
+            black_box(churn(policy, 20_000, 42))
+        });
+        let ops_per_sec = 20_000.0 / r.mean.as_secs_f64();
+        println!("    -> {:.0} lookup+admit ops/s", ops_per_sec);
+    }
+    // Resize storms: shrink/grow cycles (the coordinator's hourly path).
+    b.case("resize_cycle_lcs", || {
+        let mut m = CacheManager::new(8_000 * 1_000, 1_000, PolicyKind::Lcs);
+        let mut rng = Rng::new(7);
+        let mut now = 0.0;
+        for _ in 0..5_000 {
+            now += 0.01;
+            let r = req(rng.below(10_000), 0, 500);
+            m.lookup(&r, now);
+            m.admit(&r, 600, None, now);
+        }
+        for cap in [2_000_000u64, 500_000, 4_000_000, 1_000_000] {
+            black_box(m.resize(cap, now));
+        }
+        black_box(m.len())
+    });
+}

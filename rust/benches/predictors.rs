@@ -1,0 +1,32 @@
+//! Predictor benches: SARIMA fit/forecast and the EnsembleCI-style
+//! ensemble. Both run hourly on the control path (§5.3) — they must be
+//! negligible next to the solver.
+
+use greencache::ci::{CiPredictor, Grid};
+use greencache::load::{LoadTrace, Sarima};
+use greencache::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("predictors");
+
+    let load = LoadTrace::azure_like(7, 1.0, 1);
+    b.case("sarima_fit_72h", || {
+        black_box(Sarima::fit(&load.hourly_rps[..72], 24, 2).unwrap())
+    });
+    let model = Sarima::fit(&load.hourly_rps[..72], 24, 2).unwrap();
+    b.case("sarima_forecast_24h", || black_box(model.forecast(24)));
+    b.case("sarima_online_update", || {
+        let mut m = model.clone();
+        m.update(&[1.23]).unwrap();
+        black_box(m)
+    });
+
+    let ci = Grid::Ciso.trace(21, 2);
+    b.case("ensembleci_fit_predict_24h", || {
+        let mut p = CiPredictor::new();
+        black_box(p.fit_predict(&ci.hourly, 24))
+    });
+    b.case("ci_trace_synthesis_30d", || {
+        black_box(Grid::Es.trace(30, 3).hourly.len())
+    });
+}

@@ -1,0 +1,66 @@
+//! Real-runtime bench: PJRT execution latency of the AOT programs —
+//! prefill chunk, decode step, and cached-vs-cold TTFT (the Fig. 3/6
+//! effect on the real path). Skips gracefully without artifacts.
+
+use greencache::runtime::{default_artifact_dir, Engine};
+use greencache::util::bench::{black_box, Bench};
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("model_config.json").exists() {
+        println!("SKIP runtime bench: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::load(&dir).expect("engine");
+    let cfg = engine.config().clone();
+    let mut b = Bench::new("runtime").slow();
+
+    let prompt: Vec<i32> = (0..256).map(|i| (i * 11) % 250 + 1).collect();
+
+    b.case("prefill_256_tokens_cold", || {
+        let mut kv = engine.empty_kv();
+        black_box(engine.prefill(&prompt, &mut kv).unwrap().chunks_executed)
+    });
+
+    // Cached prefix: snapshot at 192 tokens (3 chunks of 64).
+    let mut snapshot = engine.empty_kv();
+    engine.prefill(&prompt[..192], &mut snapshot).unwrap();
+    b.case("prefill_256_tokens_hit_192", || {
+        let mut kv = snapshot.clone();
+        black_box(engine.prefill(&prompt, &mut kv).unwrap().chunks_executed)
+    });
+
+    let mut kv_dec = engine.empty_kv();
+    engine.prefill(&prompt, &mut kv_dec).unwrap();
+    b.case("decode_step", || {
+        let mut kv = kv_dec.clone();
+        black_box(engine.decode_step(7, &mut kv).unwrap().len())
+    });
+
+    b.case("kv_snapshot_roundtrip", || {
+        let lit = snapshot.to_literal().unwrap();
+        black_box(
+            greencache::runtime::KvState::from_literal(&lit, snapshot.len, &cfg.kv_shape)
+                .unwrap()
+                .fingerprint(),
+        )
+    });
+
+    b.case("generate_8_tokens_cold", || {
+        let mut kv = engine.empty_kv();
+        black_box(engine.generate(&prompt, 8, &mut kv).unwrap().tokens.len())
+    });
+
+    let results = b.results();
+    let cold = results[0].mean.as_secs_f64();
+    let hit = results[1].mean.as_secs_f64();
+    println!(
+        "\ncache-hit prefill speedup on the real path: {:.2}x (4 chunks -> 1)",
+        cold / hit.max(1e-12)
+    );
+    println!(
+        "xla time fraction: {:.3}",
+        engine.xla_time.get().as_secs_f64()
+            / results.iter().map(|r| r.mean.as_secs_f64() * r.iters as f64).sum::<f64>()
+    );
+}

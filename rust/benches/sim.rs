@@ -1,0 +1,61 @@
+//! Simulator bench: simulated-day throughput. Figs. 12–14 run dozens of
+//! day-scale simulations; each must complete in seconds.
+
+use greencache::cache::{CacheManager, PolicyKind, KV_BYTES_PER_TOKEN_70B};
+use greencache::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
+use greencache::metrics::Slo;
+use greencache::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig};
+use greencache::util::bench::{black_box, Bench};
+use greencache::workload::{ConversationGen, ConversationParams};
+
+fn day(hours: usize, rps: f64, cache_tb: f64, warm: usize, seed: u64) -> (usize, u64) {
+    let cfg = SimConfig {
+        cost: CostModel::llama70b_4xl40(),
+        power: PowerModel::default(),
+        slo: Slo::conv_70b(),
+        interval_s: 3600.0,
+        hours,
+        seed,
+    };
+    let mut wl = ConversationGen::new(ConversationParams::default(), seed);
+    let mut cache = CacheManager::new(
+        (cache_tb * TB) as u64,
+        KV_BYTES_PER_TOKEN_70B,
+        PolicyKind::Lcs,
+    );
+    if warm > 0 {
+        warm_cache(&mut wl, &mut cache, warm, seed);
+    }
+    let r = simulate(
+        &cfg,
+        &mut wl,
+        &|_| rps,
+        &|_| 124.0,
+        &mut cache,
+        CarbonAccountant::new(EmbodiedModel::default()),
+        &mut FixedController,
+    );
+    (r.completed, r.iterations)
+}
+
+fn main() {
+    let mut b = Bench::new("sim").slow();
+    let r = b.case("six_hours_cached_0p5rps", || {
+        black_box(day(6, 0.5, 16.0, 10_000, 1))
+    });
+    let (_, iters) = day(6, 0.5, 16.0, 10_000, 1);
+    println!(
+        "    -> {:.0} engine iterations/s of simulation",
+        iters as f64 / r.mean.as_secs_f64()
+    );
+    b.case("one_hour_no_cache_0p5rps", || {
+        black_box(day(1, 0.5, 0.0, 0, 2))
+    });
+    b.case("warmup_30k_prompts", || {
+        let mut wl = ConversationGen::new(ConversationParams::default(), 3);
+        let mut cache =
+            CacheManager::new(16 * TB as u64, KV_BYTES_PER_TOKEN_70B, PolicyKind::Lcs);
+        warm_cache(&mut wl, &mut cache, 30_000, 3);
+        black_box(cache.len())
+    });
+}

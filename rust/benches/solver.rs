@@ -1,0 +1,59 @@
+//! Solver bench (paper §6.4 / Fig. 16): decision latency at the paper's
+//! scale (24 h horizon × 17 cache sizes) and beyond.
+//!
+//! Paper reference: 7.03 s per decision with PuLP + COIN-OR CBC.
+
+use greencache::rng::Rng;
+use greencache::solver::{IlpOption, IlpProblem};
+use greencache::util::bench::{black_box, Bench};
+
+fn problem(t_len: usize, k: usize, n: u64, seed: u64) -> IlpProblem {
+    let mut rng = Rng::new(seed);
+    let options = (0..t_len)
+        .map(|_| {
+            (0..k as u32)
+                .map(|size| {
+                    let base = 0.55 + 0.45 * (size as f64 / (k - 1).max(1) as f64);
+                    let ok = ((base * (0.9 + 0.2 * rng.f64())).min(1.0) * n as f64) as u64;
+                    let okp = ((base * (0.9 + 0.2 * rng.f64())).min(1.0) * n as f64) as u64;
+                    IlpOption {
+                        size,
+                        cost_g: 1.0 + size as f64 * (0.5 + rng.f64()),
+                        ttft_ok: ok.min(n),
+                        tpot_ok: okp.min(n),
+                        n_requests: n,
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    IlpProblem { options, rho: 0.9 }
+}
+
+fn main() {
+    let mut b = Bench::new("solver");
+    // The paper's decision problem.
+    let paper = problem(24, 17, 2000, 1);
+    b.case("paper_scale_24h_x_17sizes", || {
+        black_box(paper.solve().unwrap())
+    });
+    // Finer granularity / longer horizons.
+    let wide = problem(24, 33, 2000, 2);
+    b.case("fine_granularity_33_sizes", || {
+        black_box(wide.solve().unwrap())
+    });
+    let week = problem(168, 17, 2000, 3);
+    b.case("week_horizon_168h", || black_box(week.solve().unwrap()));
+    // Sub-hour decisions (Fig. 18's 0.5 h interval = 48 steps).
+    let half_hour = problem(48, 17, 1000, 4);
+    b.case("half_hour_interval_48steps", || {
+        black_box(half_hour.solve().unwrap())
+    });
+
+    let paper_mean = b.results()[0].mean.as_secs_f64();
+    println!(
+        "\npaper CBC baseline: 7.03 s/decision -> ours {:.4} s ({:.0}x faster)",
+        paper_mean,
+        7.03 / paper_mean.max(1e-9)
+    );
+}

@@ -1,0 +1,127 @@
+//! `figures` — regenerate every table and figure of the paper's
+//! evaluation (DESIGN.md §5 index; results recorded in EXPERIMENTS.md).
+//!
+//! ```text
+//! figures <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig8|fig11|fig12|fig13|
+//!          fig14|fig15|table3|fig16|fig17|fig18|fig19|fig20|all>
+//!         [--quick] [--out results] [--models 70b|8b|both]
+//! ```
+//!
+//! Each exhibit prints the paper-shaped rows and writes a CSV under the
+//! output directory. `--quick` shrinks horizons/warm-up for smoke runs.
+
+use greencache::experiments::{ablation, characterization, evaluation, Model};
+use greencache::util::csv::Csv;
+use std::path::PathBuf;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let which = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let quick = argv.iter().any(|a| a == "--quick");
+    let out: PathBuf = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .map(|s| s.into())
+        .unwrap_or_else(|| "results".into());
+    let models: Vec<Model> = match argv
+        .iter()
+        .position(|a| a == "--models")
+        .and_then(|i| argv.get(i + 1))
+        .map(|s| s.as_str())
+    {
+        Some("8b") => vec![Model::Llama8B],
+        Some("both") => vec![Model::Llama70B, Model::Llama8B],
+        _ => vec![Model::Llama70B],
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut outputs: Vec<(&str, Csv)> = Vec::new();
+    let run = |name: &'static str,
+               f: &dyn Fn() -> Csv,
+               outputs: &mut Vec<(&'static str, Csv)>| {
+        let t = std::time::Instant::now();
+        println!("==== {name} ====");
+        let csv = f();
+        println!("     ({name} took {:.1?})\n", t.elapsed());
+        outputs.push((name, csv));
+    };
+
+    let all = which == "all";
+    let want = |n: &str| all || which == n;
+
+    if want("fig2a") {
+        run("fig2a", &characterization::fig2a, &mut outputs);
+    }
+    if want("fig2b") {
+        run("fig2b", &characterization::fig2b, &mut outputs);
+    }
+    if want("fig3") {
+        run("fig3", &characterization::fig3, &mut outputs);
+    }
+    if want("fig4") {
+        run("fig4", &characterization::fig4, &mut outputs);
+    }
+    if want("fig5") {
+        run("fig5", &|| characterization::fig5(quick), &mut outputs);
+    }
+    if want("fig6") {
+        run("fig6", &|| characterization::fig6(quick), &mut outputs);
+    }
+    if want("fig7") {
+        run("fig7", &|| characterization::fig7(quick), &mut outputs);
+    }
+    if want("fig8") {
+        run("fig8", &|| characterization::fig8(quick), &mut outputs);
+    }
+    if want("fig11") {
+        run("fig11", &|| evaluation::fig11(quick), &mut outputs);
+    }
+    if want("fig12") {
+        run("fig12", &|| evaluation::fig12(quick, &models), &mut outputs);
+    }
+    if want("fig13") {
+        run("fig13", &|| evaluation::fig13(quick), &mut outputs);
+    }
+    if want("fig14") {
+        run("fig14", &|| evaluation::fig14(quick), &mut outputs);
+    }
+    if want("fig15") {
+        run("fig15", &|| ablation::fig15(quick), &mut outputs);
+    }
+    if want("table3") {
+        run("table3", &|| ablation::table3(quick), &mut outputs);
+    }
+    if want("fig16") {
+        run("fig16", &|| ablation::fig16(quick), &mut outputs);
+    }
+    if want("fig17") {
+        run("fig17", &|| ablation::fig17(quick), &mut outputs);
+    }
+    if want("fig18") {
+        run("fig18", &|| ablation::fig18(quick), &mut outputs);
+    }
+    if want("fig19") {
+        run("fig19", &|| ablation::fig19(quick), &mut outputs);
+    }
+    if want("fig20") {
+        run("fig20", &|| ablation::fig20(quick), &mut outputs);
+    }
+
+    if outputs.is_empty() {
+        println!(
+            "usage: figures <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig8|fig11|fig12|fig13|fig14|fig15|table3|fig16|fig17|fig18|fig19|fig20|all> [--quick] [--out DIR] [--models 70b|8b|both]"
+        );
+        return;
+    }
+
+    for (name, csv) in &outputs {
+        let path = out.join(format!("{name}.csv"));
+        if let Err(e) = csv.write(&path) {
+            eprintln!("failed to write {path:?}: {e}");
+        } else {
+            println!("wrote {path:?} ({} rows)", csv.n_rows());
+        }
+    }
+    println!("total: {:.1?}", t0.elapsed());
+}

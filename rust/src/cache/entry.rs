@@ -1,0 +1,132 @@
+//! Cache entries: one per reusable context (conversation / document).
+
+use crate::workload::TaskKind;
+
+/// Per-entry bookkeeping — exactly the quantities the LCS score (Eq. 7–9)
+/// needs, plus the payload for the real-model path.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// Cache key: the workload's `context_id`.
+    pub key: u64,
+    pub task: TaskKind,
+    /// Number of context tokens whose KV is stored.
+    pub tokens: u32,
+    /// Bytes of storage held (tokens × kv_bytes_per_token).
+    pub size_bytes: u64,
+    /// Insertion time, seconds (Eq. 7's Age = now − created).
+    pub created_s: f64,
+    /// Last hit/update time, seconds.
+    pub last_access_s: f64,
+    /// Number of cache hits (#Hit in Eq. 7/9).
+    pub hits: u32,
+    /// Cumulative tokens served from this entry (#Token / #AccuToken /
+    /// AccuDocLen·#Hit numerators of Eq. 7/8/9).
+    pub accu_hit_tokens: u64,
+    /// Conversation turn depth (CurTurn in Eq. 8); 0 for documents.
+    pub turn: u32,
+    /// KV blob for the real-model runtime (None in the simulator, where
+    /// only sizes matter).
+    pub payload: Option<Vec<u8>>,
+    /// Monotone counter stamped at every mutation — lets lazy eviction
+    /// indexes detect stale snapshots.
+    pub touch_seq: u64,
+}
+
+impl Entry {
+    /// Eq. 7 generic LCS score; higher = more worth keeping.
+    pub fn lcs_score_generic(&self, now_s: f64) -> f64 {
+        let age = (now_s - self.created_s).max(1.0);
+        let size = self.size_bytes.max(1) as f64;
+        (self.accu_hit_tokens.max(1) as f64 * self.hits.max(1) as f64) / (size * age)
+    }
+
+    /// Eq. 8 (conversation): CurTurn × #AccuToken / (Size × Age).
+    pub fn lcs_score_conversation(&self, now_s: f64) -> f64 {
+        let age = (now_s - self.created_s).max(1.0);
+        let size = self.size_bytes.max(1) as f64;
+        ((self.turn.max(1)) as f64 * self.accu_hit_tokens.max(1) as f64) / (size * age)
+    }
+
+    /// Eq. 9 (document): #Hit × AccuDocLen / (Size × Age).
+    pub fn lcs_score_document(&self, now_s: f64) -> f64 {
+        let age = (now_s - self.created_s).max(1.0);
+        let size = self.size_bytes.max(1) as f64;
+        (self.hits.max(1) as f64 * self.accu_hit_tokens.max(1) as f64) / (size * age)
+    }
+
+    /// Task-dispatched LCS score (§5.5 adapts the numerators per task).
+    pub fn lcs_score(&self, now_s: f64) -> f64 {
+        match self.task {
+            TaskKind::Conversation => self.lcs_score_conversation(now_s),
+            TaskKind::DocQa => self.lcs_score_document(now_s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry() -> Entry {
+        Entry {
+            key: 1,
+            task: TaskKind::Conversation,
+            tokens: 1000,
+            size_bytes: 1000 * 327_680,
+            created_s: 0.0,
+            last_access_s: 0.0,
+            hits: 2,
+            accu_hit_tokens: 1500,
+            turn: 3,
+            payload: None,
+            touch_seq: 0,
+        }
+    }
+
+    #[test]
+    fn lcs_insights_monotonicity() {
+        // §5.5 insights: score rises with hit tokens (i) and hits (ii),
+        // falls with size (iii) and age (iv).
+        let now = 100.0;
+        let base = entry().lcs_score_generic(now);
+        let mut more_tokens = entry();
+        more_tokens.accu_hit_tokens *= 2;
+        assert!(more_tokens.lcs_score_generic(now) > base);
+        let mut more_hits = entry();
+        more_hits.hits += 1;
+        assert!(more_hits.lcs_score_generic(now) > base);
+        let mut bigger = entry();
+        bigger.size_bytes *= 2;
+        assert!(bigger.lcs_score_generic(now) < base);
+        assert!(entry().lcs_score_generic(now * 2.0) < base);
+    }
+
+    #[test]
+    fn conversation_score_rewards_depth() {
+        let now = 50.0;
+        let shallow = entry();
+        let mut deep = entry();
+        deep.turn = 10;
+        assert!(deep.lcs_score(now) > shallow.lcs_score(now));
+    }
+
+    #[test]
+    fn document_score_rewards_popularity() {
+        let now = 50.0;
+        let mut doc = entry();
+        doc.task = TaskKind::DocQa;
+        let mut popular = doc.clone();
+        popular.hits = 20;
+        assert!(popular.lcs_score(now) > doc.lcs_score(now));
+    }
+
+    #[test]
+    fn scores_are_finite_for_fresh_entries() {
+        let mut e = entry();
+        e.hits = 0;
+        e.accu_hit_tokens = 0;
+        e.size_bytes = 0;
+        assert!(e.lcs_score_generic(0.0).is_finite());
+        assert!(e.lcs_score(0.0).is_finite());
+    }
+}

@@ -1,0 +1,614 @@
+//! KV context-cache manager (the LMCache analogue, §5.5).
+//!
+//! Tracks one [`Entry`] per reusable context (conversation / document),
+//! accounts provisioned bytes against a resizable capacity (1 TB
+//! granularity in the coordinator), and evicts by a pluggable
+//! [`PolicyKind`] — FIFO / LRU / LFU / the paper's LCS. Hit accounting
+//! uses the paper's token-level definition (§6.3.2): *hit rate = tokens
+//! reused from cache ÷ total input tokens*.
+
+mod entry;
+mod policy;
+
+pub use entry::Entry;
+pub use policy::{EvictionIndex, PolicyKind};
+
+use crate::workload::Request;
+use std::collections::HashMap;
+
+/// KV bytes per token for the Llama-3 70B analogue (80 layers × 8 KV
+/// heads × 128 head-dim × 2 (K,V) × 2 B fp16 ≈ 320 KiB/token; the paper's
+/// "1000-token context for 1M prompts > 300 TB" [44] implies the same).
+pub const KV_BYTES_PER_TOKEN_70B: u64 = 327_680;
+
+/// Llama-3 8B analogue: 32 layers × 8 KV heads × 128 × 2 × 2 B.
+pub const KV_BYTES_PER_TOKEN_8B: u64 = 131_072;
+
+/// Result of a cache lookup.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HitInfo {
+    /// Context tokens served from cache (prefix of the request's context).
+    pub hit_tokens: u32,
+    /// Whether any prefix was found.
+    pub hit: bool,
+}
+
+/// Aggregate statistics (Table 3 + Fig. 6b feed off these).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub hit_tokens: u64,
+    pub input_tokens: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub rejected_too_large: u64,
+}
+
+impl CacheStats {
+    /// §6.3.2: tokens reused from cache over total input tokens.
+    pub fn token_hit_rate(&self) -> f64 {
+        if self.input_tokens == 0 {
+            0.0
+        } else {
+            self.hit_tokens as f64 / self.input_tokens as f64
+        }
+    }
+
+    /// Request-level hit fraction.
+    pub fn request_hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+}
+
+/// An evicted entry (returned so the coordinator can release payloads).
+#[derive(Debug)]
+pub struct Evicted {
+    pub key: u64,
+    pub bytes: u64,
+}
+
+/// The cache manager.
+#[derive(Debug)]
+pub struct CacheManager {
+    capacity_bytes: u64,
+    used_bytes: u64,
+    kv_bytes_per_token: u64,
+    entries: HashMap<u64, Entry>,
+    index: EvictionIndex,
+    stats: CacheStats,
+    touch_counter: u64,
+}
+
+impl CacheManager {
+    pub fn new(capacity_bytes: u64, kv_bytes_per_token: u64, policy: PolicyKind) -> Self {
+        assert!(kv_bytes_per_token > 0);
+        CacheManager {
+            capacity_bytes,
+            used_bytes: 0,
+            kv_bytes_per_token,
+            entries: HashMap::new(),
+            index: EvictionIndex::new(policy),
+            stats: CacheStats::default(),
+            touch_counter: 0,
+        }
+    }
+
+    pub fn policy(&self) -> PolicyKind {
+        self.index.kind
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn entry(&self, key: u64) -> Option<&Entry> {
+        self.entries.get(&key)
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.touch_counter += 1;
+        self.touch_counter
+    }
+
+    /// Look up the reusable prefix for a request and account the hit.
+    /// Call exactly once per request, *before* [`Self::admit`].
+    pub fn lookup(&mut self, req: &Request, now_s: f64) -> HitInfo {
+        self.stats.lookups += 1;
+        self.stats.input_tokens += req.prompt_tokens() as u64;
+        let seq = self.next_seq();
+        let info = match self.entries.get_mut(&req.context_id) {
+            Some(e) => {
+                // The stored KV covers min(entry.tokens, request context):
+                // conversations extend their context monotonically, so the
+                // cached tokens are a prefix of the new context; documents
+                // are immutable.
+                let hit_tokens = e.tokens.min(req.context_tokens);
+                if hit_tokens > 0 {
+                    e.hits += 1;
+                    e.accu_hit_tokens += hit_tokens as u64;
+                    e.last_access_s = now_s;
+                    e.turn = e.turn.max(req.context_version);
+                    e.touch_seq = seq;
+                    self.stats.hits += 1;
+                    self.stats.hit_tokens += hit_tokens as u64;
+                    HitInfo { hit_tokens, hit: true }
+                } else {
+                    HitInfo { hit_tokens: 0, hit: false }
+                }
+            }
+            None => HitInfo { hit_tokens: 0, hit: false },
+        };
+        if info.hit {
+            self.index.on_access(req.context_id);
+        }
+        info
+    }
+
+    /// Admit/extend the entry for a processed request: after serving, the
+    /// full context (old prefix + new tokens) is cached (CachedAttention-
+    /// style write-through). Evicts under the policy if needed. Returns
+    /// the evicted entries.
+    pub fn admit(
+        &mut self,
+        req: &Request,
+        cached_tokens: u32,
+        payload: Option<Vec<u8>>,
+        now_s: f64,
+    ) -> Vec<Evicted> {
+        let new_size = cached_tokens as u64 * self.kv_bytes_per_token;
+        if new_size > self.capacity_bytes {
+            self.stats.rejected_too_large += 1;
+            return Vec::new();
+        }
+        let seq = self.next_seq();
+        let mut evicted = Vec::new();
+
+        let delta = match self.entries.get(&req.context_id) {
+            Some(e) if e.tokens >= cached_tokens => {
+                // Already covers this context — refresh only.
+                0i64
+            }
+            Some(e) => new_size as i64 - e.size_bytes as i64,
+            None => new_size as i64,
+        };
+
+        // Free space first. The entry being extended is never the victim
+        // unless nothing else remains.
+        while self.used_bytes as i64 + delta > self.capacity_bytes as i64 {
+            match self.index.victim(&self.entries, now_s) {
+                Some(victim) if victim != req.context_id => {
+                    evicted.push(self.remove(victim));
+                }
+                _ => {
+                    if self.entries.contains_key(&req.context_id) {
+                        evicted.push(self.remove(req.context_id));
+                    }
+                    break;
+                }
+            }
+        }
+
+        match self.entries.get_mut(&req.context_id) {
+            Some(e) => {
+                if cached_tokens > e.tokens {
+                    self.used_bytes -= e.size_bytes;
+                    e.tokens = cached_tokens;
+                    e.size_bytes = new_size;
+                    self.used_bytes += new_size;
+                }
+                e.turn = e.turn.max(req.context_version + 1);
+                e.last_access_s = now_s;
+                e.touch_seq = seq;
+                if payload.is_some() {
+                    e.payload = payload;
+                }
+                self.index.on_access(req.context_id);
+            }
+            None => {
+                if self.used_bytes + new_size <= self.capacity_bytes {
+                    self.entries.insert(
+                        req.context_id,
+                        Entry {
+                            key: req.context_id,
+                            task: req.task,
+                            tokens: cached_tokens,
+                            size_bytes: new_size,
+                            created_s: now_s,
+                            last_access_s: now_s,
+                            hits: 0,
+                            accu_hit_tokens: 0,
+                            turn: req.context_version + 1,
+                            payload,
+                            touch_seq: seq,
+                        },
+                    );
+                    self.used_bytes += new_size;
+                    self.index.on_insert(req.context_id);
+                    self.stats.insertions += 1;
+                }
+            }
+        }
+        self.stats.evictions += evicted.len() as u64;
+        evicted
+    }
+
+    fn remove(&mut self, key: u64) -> Evicted {
+        let e = self.entries.remove(&key).expect("victim must exist");
+        self.used_bytes -= e.size_bytes;
+        self.index.on_remove(key);
+        Evicted { key, bytes: e.size_bytes }
+    }
+
+    /// Resize the provisioned capacity (§5.5's cache controller): when
+    /// shrinking, evicts lowest-score entries until the contents fit,
+    /// then the spare space "is released" (we just drop the bound).
+    pub fn resize(&mut self, new_capacity_bytes: u64, now_s: f64) -> Vec<Evicted> {
+        self.capacity_bytes = new_capacity_bytes;
+        let mut evicted = Vec::new();
+        while self.used_bytes > self.capacity_bytes {
+            match self.index.victim(&self.entries, now_s) {
+                Some(v) => evicted.push(self.remove(v)),
+                None => break,
+            }
+        }
+        self.stats.evictions += evicted.len() as u64;
+        evicted
+    }
+
+    /// Drop everything (used between benchmark phases).
+    pub fn clear(&mut self) {
+        let keys: Vec<u64> = self.entries.keys().copied().collect();
+        for k in keys {
+            self.remove(k);
+        }
+    }
+
+    /// Verify internal accounting invariants (used by property tests).
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.used_bytes <= self.capacity_bytes,
+            "used {} > capacity {}",
+            self.used_bytes,
+            self.capacity_bytes
+        );
+        let sum: u64 = self.entries.values().map(|e| e.size_bytes).sum();
+        anyhow::ensure!(
+            sum == self.used_bytes,
+            "sum of entries {} != used {}",
+            sum,
+            self.used_bytes
+        );
+        for e in self.entries.values() {
+            anyhow::ensure!(
+                e.size_bytes == e.tokens as u64 * self.kv_bytes_per_token,
+                "entry {} size/token mismatch",
+                e.key
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::proptest::check;
+    use crate::workload::TaskKind;
+
+    fn req(ctx_id: u64, version: u32, context: u32, new: u32) -> Request {
+        Request {
+            id: 0,
+            task: TaskKind::Conversation,
+            context_id: ctx_id,
+            context_version: version,
+            context_tokens: context,
+            new_tokens: new,
+            output_tokens: 10,
+            arrival_s: 0.0,
+        }
+    }
+
+    /// Manager with capacity for `n` tokens at 1 byte/token.
+    fn mgr(n_tokens: u64, policy: PolicyKind) -> CacheManager {
+        CacheManager::new(n_tokens, 1, policy)
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let mut m = mgr(1000, PolicyKind::Lru);
+        let r = req(1, 0, 100, 10);
+        assert!(!m.lookup(&r, 0.0).hit);
+        m.admit(&r, 110, None, 0.0);
+        let r2 = req(1, 1, 110, 10);
+        let h = m.lookup(&r2, 1.0);
+        assert!(h.hit);
+        assert_eq!(h.hit_tokens, 110);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn partial_prefix_hit() {
+        let mut m = mgr(1000, PolicyKind::Lru);
+        let r = req(1, 0, 100, 20);
+        m.lookup(&r, 0.0);
+        m.admit(&r, 120, None, 0.0);
+        // Next turn has 300 context tokens; only 120 cached.
+        let r2 = req(1, 1, 300, 10);
+        let h = m.lookup(&r2, 1.0);
+        assert_eq!(h.hit_tokens, 120);
+    }
+
+    #[test]
+    fn token_hit_rate_definition() {
+        let mut m = mgr(10_000, PolicyKind::Lru);
+        let r = req(1, 0, 0, 100); // first turn: no context
+        m.lookup(&r, 0.0);
+        m.admit(&r, 100, None, 0.0);
+        let r2 = req(1, 1, 100, 100); // second turn: 100 ctx + 100 new
+        m.lookup(&r2, 1.0);
+        // input tokens = 100 + 200 = 300; hit tokens = 100.
+        let s = m.stats();
+        assert_eq!(s.input_tokens, 300);
+        assert_eq!(s.hit_tokens, 100);
+        assert!((s.token_hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_is_enforced_via_eviction() {
+        let mut m = mgr(250, PolicyKind::Lru);
+        for id in 0..5 {
+            let r = req(id, 0, 0, 100);
+            m.lookup(&r, id as f64);
+            let ev = m.admit(&r, 100, None, id as f64);
+            m.check_invariants().unwrap();
+            if id < 2 {
+                assert!(ev.is_empty());
+            }
+        }
+        assert_eq!(m.len(), 2);
+        assert!(m.used_bytes() <= 250);
+        // LRU: the survivors are the two most recent.
+        assert!(m.entry(4).is_some());
+        assert!(m.entry(3).is_some());
+        assert!(m.entry(0).is_none());
+    }
+
+    #[test]
+    fn oversized_entry_rejected() {
+        let mut m = mgr(100, PolicyKind::Lru);
+        let r = req(1, 0, 0, 500);
+        m.lookup(&r, 0.0);
+        let ev = m.admit(&r, 500, None, 0.0);
+        assert!(ev.is_empty());
+        assert_eq!(m.len(), 0);
+        assert_eq!(m.stats().rejected_too_large, 1);
+    }
+
+    #[test]
+    fn extension_updates_size() {
+        let mut m = mgr(1000, PolicyKind::Lcs);
+        let r = req(1, 0, 0, 100);
+        m.lookup(&r, 0.0);
+        m.admit(&r, 100, None, 0.0);
+        assert_eq!(m.used_bytes(), 100);
+        let r2 = req(1, 1, 100, 150);
+        m.lookup(&r2, 1.0);
+        m.admit(&r2, 250, None, 1.0);
+        assert_eq!(m.used_bytes(), 250);
+        assert_eq!(m.entry(1).unwrap().tokens, 250);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admit_same_context_never_duplicates() {
+        let mut m = mgr(1000, PolicyKind::Fifo);
+        for v in 0..5 {
+            let r = req(7, v, v * 10, 10);
+            m.lookup(&r, v as f64);
+            m.admit(&r, (v + 1) * 10, None, v as f64);
+        }
+        assert_eq!(m.len(), 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn resize_shrink_evicts_until_fit() {
+        let mut m = mgr(1000, PolicyKind::Lru);
+        for id in 0..10 {
+            let r = req(id, 0, 0, 100);
+            m.lookup(&r, id as f64);
+            m.admit(&r, 100, None, id as f64);
+        }
+        assert_eq!(m.len(), 10);
+        let ev = m.resize(350, 100.0);
+        assert_eq!(ev.len(), 7);
+        assert_eq!(m.len(), 3);
+        assert!(m.used_bytes() <= 350);
+        // LRU keeps the most recently inserted/accessed: 7, 8, 9.
+        for id in 7..10 {
+            assert!(m.entry(id).is_some());
+        }
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn resize_grow_keeps_contents() {
+        let mut m = mgr(200, PolicyKind::Lru);
+        let r = req(1, 0, 0, 100);
+        m.lookup(&r, 0.0);
+        m.admit(&r, 100, None, 0.0);
+        let ev = m.resize(10_000, 1.0);
+        assert!(ev.is_empty());
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn lcs_keeps_high_value_entries_under_pressure() {
+        // One hot deep conversation vs cold shallow ones: LCS must keep
+        // the hot one when shrinking; LRU (with the cold ones accessed
+        // last) would not.
+        let build = |policy| {
+            let mut m = mgr(300, policy);
+            // Hot entry: deep turns, many hits.
+            for v in 0..5 {
+                let r = req(1, v, v * 20, 20);
+                m.lookup(&r, v as f64);
+                m.admit(&r, (v + 1) * 20, None, v as f64);
+            }
+            // Cold entries, accessed more recently.
+            for id in 2..4 {
+                let r = req(id, 0, 0, 100);
+                m.lookup(&r, 10.0 + id as f64);
+                m.admit(&r, 100, None, 10.0 + id as f64);
+            }
+            m
+        };
+        let mut lcs = build(PolicyKind::Lcs);
+        lcs.resize(120, 20.0);
+        assert!(lcs.entry(1).is_some(), "LCS should keep the hot deep conversation");
+
+        let mut lru = build(PolicyKind::Lru);
+        lru.resize(120, 20.0);
+        assert!(lru.entry(1).is_none(), "LRU evicts the old hot entry");
+    }
+
+    #[test]
+    fn payload_round_trip() {
+        let mut m = mgr(1000, PolicyKind::Lcs);
+        let r = req(1, 0, 0, 100);
+        m.lookup(&r, 0.0);
+        m.admit(&r, 100, Some(vec![1, 2, 3]), 0.0);
+        assert_eq!(m.entry(1).unwrap().payload.as_deref(), Some(&[1u8, 2, 3][..]));
+    }
+
+    #[test]
+    fn clear_resets_usage() {
+        let mut m = mgr(1000, PolicyKind::Fifo);
+        for id in 0..5 {
+            let r = req(id, 0, 0, 50);
+            m.lookup(&r, 0.0);
+            m.admit(&r, 50, None, 0.0);
+        }
+        m.clear();
+        assert_eq!(m.len(), 0);
+        assert_eq!(m.used_bytes(), 0);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn kv_constants_match_model_math() {
+        // 70B: 80 layers × 8 KV heads × 128 dim × 2 (K,V) × 2 B fp16.
+        assert_eq!(KV_BYTES_PER_TOKEN_70B, 80 * 8 * 128 * 2 * 2);
+        assert_eq!(KV_BYTES_PER_TOKEN_8B, 32 * 8 * 128 * 2 * 2);
+    }
+
+    // ---- property tests ----------------------------------------------------
+
+    #[test]
+    fn prop_invariants_hold_under_random_workload() {
+        check("cache-invariants", |rng: &mut Rng| {
+            let policy = match rng.below(4) {
+                0 => PolicyKind::Fifo,
+                1 => PolicyKind::Lru,
+                2 => PolicyKind::Lfu,
+                _ => PolicyKind::Lcs,
+            };
+            let cap = rng.range(100, 2000) as u64;
+            let mut m = mgr(cap, policy);
+            let mut now = 0.0;
+            for step in 0..300 {
+                now += rng.f64();
+                let ctx = rng.below(20);
+                let version = rng.below(5) as u32;
+                let context = rng.range(0, 300) as u32;
+                let new = rng.range(1, 100) as u32;
+                let r = req(ctx, version, context, new);
+                let h = m.lookup(&r, now);
+                crate::prop_assert!(
+                    h.hit_tokens <= r.context_tokens,
+                    "hit beyond request context at step {step}"
+                );
+                if rng.f64() < 0.7 {
+                    m.admit(&r, context + new, None, now);
+                }
+                if rng.f64() < 0.05 {
+                    let newcap = rng.range(50, 2500) as u64;
+                    m.resize(newcap, now);
+                }
+                if let Err(e) = m.check_invariants() {
+                    return Err(format!("step {step}: {e}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_hit_tokens_never_exceed_input_tokens() {
+        check("hit-le-input", |rng: &mut Rng| {
+            let mut m = mgr(rng.range(500, 5000) as u64, PolicyKind::Lcs);
+            let mut now = 0.0;
+            for _ in 0..200 {
+                now += 0.5;
+                let ctx = rng.below(10);
+                let context = rng.range(0, 200) as u32;
+                let r = req(ctx, 0, context, 10);
+                m.lookup(&r, now);
+                m.admit(&r, context + 10, None, now);
+            }
+            let s = m.stats();
+            crate::prop_assert!(s.hit_tokens <= s.input_tokens);
+            crate::prop_assert!(s.token_hit_rate() <= 1.0);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_policies_differ_only_in_victims_not_accounting() {
+        check("policy-accounting-agnostic", |rng: &mut Rng| {
+            // With capacity for everything, all policies behave identically.
+            let seq: Vec<(u64, u32)> = (0..100)
+                .map(|_| (rng.below(10), rng.range(0, 200) as u32))
+                .collect();
+            let mut rates = Vec::new();
+            for p in [PolicyKind::Fifo, PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::Lcs] {
+                let mut m = mgr(u64::MAX / 2, p);
+                let mut now = 0.0;
+                for &(ctx, context) in &seq {
+                    now += 1.0;
+                    let r = req(ctx, 0, context, 10);
+                    m.lookup(&r, now);
+                    m.admit(&r, context + 10, None, now);
+                }
+                rates.push(m.stats().token_hit_rate());
+            }
+            crate::prop_assert!(
+                rates.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-12),
+                "uncapped hit rates diverged: {rates:?}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,300 @@
+//! Replacement policies: FIFO, LRU, LFU and the paper's LCS (§5.5, §6.3.2).
+//!
+//! All policies expose the same interface: a *keep-score* where the entry
+//! with the **lowest** score is the eviction victim.
+//!
+//! Victim selection is exact: FIFO and LRU use ordered indexes (O(log n));
+//! LFU and LCS use a lazily rebuilt candidate list — an O(n) score scan
+//! whose sorted result is reused until entries are touched, which
+//! amortizes to O(n log n) per full cache turnover (measured in
+//! `benches/cache.rs`).
+
+use super::entry::Entry;
+use std::collections::{BTreeSet, HashMap};
+
+/// Which replacement policy the cache manager runs (§6.3.2's comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    Fifo,
+    Lru,
+    Lfu,
+    /// Least Carbon Savings — the paper's policy (Eq. 7/8/9).
+    Lcs,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "FIFO",
+            PolicyKind::Lru => "LRU",
+            PolicyKind::Lfu => "LFU",
+            PolicyKind::Lcs => "LCS",
+        }
+    }
+
+    /// Keep-score under this policy (lowest = victim).
+    pub fn score(&self, e: &Entry, now_s: f64) -> f64 {
+        match self {
+            PolicyKind::Fifo => e.created_s,
+            PolicyKind::Lru => e.last_access_s,
+            // LFU ties broken by recency (standard LFU-DA flavour keeps
+            // the comparison deterministic).
+            PolicyKind::Lfu => e.hits as f64 * 1e9 + e.last_access_s,
+            PolicyKind::Lcs => e.lcs_score(now_s),
+        }
+    }
+}
+
+/// Exact victim index for the ordered policies (FIFO/LRU): entries keyed
+/// by a monotone stamp.
+#[derive(Debug, Default)]
+struct OrderedIndex {
+    /// (stamp, key) — first element is the victim.
+    set: BTreeSet<(u64, u64)>,
+    /// key -> current stamp.
+    stamp: HashMap<u64, u64>,
+}
+
+impl OrderedIndex {
+    fn upsert(&mut self, key: u64, stamp: u64) {
+        if let Some(old) = self.stamp.insert(key, stamp) {
+            self.set.remove(&(old, key));
+        }
+        self.set.insert((stamp, key));
+    }
+
+    fn remove(&mut self, key: u64) {
+        if let Some(old) = self.stamp.remove(&key) {
+            self.set.remove(&(old, key));
+        }
+    }
+
+    fn victim(&self) -> Option<u64> {
+        self.set.iter().next().map(|&(_, k)| k)
+    }
+
+    fn len(&self) -> usize {
+        self.set.len()
+    }
+}
+
+/// Lazy candidate list for the score-scan policies (LFU/LCS).
+#[derive(Debug, Default)]
+struct ScanIndex {
+    /// Keys sorted by score DESC at scan time; victims pop from the back.
+    candidates: Vec<(f64, u64, u64)>, // (score, key, touch_seq at scan)
+}
+
+/// Policy-driven victim selection over the entry table.
+#[derive(Debug)]
+pub struct EvictionIndex {
+    pub kind: PolicyKind,
+    ordered: OrderedIndex,
+    scan: ScanIndex,
+    /// Monotone stamp source for FIFO/LRU ordering.
+    next_stamp: u64,
+}
+
+impl EvictionIndex {
+    pub fn new(kind: PolicyKind) -> Self {
+        EvictionIndex {
+            kind,
+            ordered: OrderedIndex::default(),
+            scan: ScanIndex::default(),
+            next_stamp: 0,
+        }
+    }
+
+    fn is_ordered(&self) -> bool {
+        matches!(self.kind, PolicyKind::Fifo | PolicyKind::Lru)
+    }
+
+    /// Notify insertion of a fresh entry.
+    pub fn on_insert(&mut self, key: u64) {
+        if self.is_ordered() {
+            let s = self.next_stamp;
+            self.next_stamp += 1;
+            self.ordered.upsert(key, s);
+        }
+        // Scan policies: fresh entries aren't in the candidate snapshot;
+        // they'll be seen at the next rebuild, which is correct because a
+        // snapshot only ever *underestimates* the cache population and
+        // victims are validated against the live table.
+    }
+
+    /// Notify an access/update of an existing entry.
+    pub fn on_access(&mut self, key: u64) {
+        if self.kind == PolicyKind::Lru {
+            let s = self.next_stamp;
+            self.next_stamp += 1;
+            self.ordered.upsert(key, s);
+        }
+        // FIFO ignores accesses; scan policies detect staleness via
+        // touch_seq at victim time.
+    }
+
+    /// Notify removal.
+    pub fn on_remove(&mut self, key: u64) {
+        if self.is_ordered() {
+            self.ordered.remove(key);
+        }
+    }
+
+    /// Pick the eviction victim. `entries` is the live table.
+    pub fn victim(
+        &mut self,
+        entries: &HashMap<u64, Entry>,
+        now_s: f64,
+    ) -> Option<u64> {
+        if entries.is_empty() {
+            return None;
+        }
+        if self.is_ordered() {
+            debug_assert_eq!(self.ordered.len(), entries.len());
+            return self.ordered.victim();
+        }
+        // Scan policies: pop candidates, validating against live state.
+        loop {
+            match self.scan.candidates.pop() {
+                Some((_, key, seq)) => {
+                    if let Some(e) = entries.get(&key) {
+                        if e.touch_seq == seq {
+                            return Some(key);
+                        }
+                        // Touched since the scan: its score changed
+                        // (only upward for LFU/LCS numerators), so it is
+                        // no longer a safe victim — skip.
+                    }
+                }
+                None => {
+                    // Rebuild the snapshot.
+                    let mut cands: Vec<(f64, u64, u64)> = entries
+                        .values()
+                        .map(|e| (self.kind.score(e, now_s), e.key, e.touch_seq))
+                        .collect();
+                    cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                    self.scan.candidates = cands;
+                    // entries is non-empty, so the next pop yields a live
+                    // candidate (fresh snapshot can't be stale).
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TaskKind;
+
+    fn entry(key: u64, created: f64, accessed: f64, hits: u32) -> Entry {
+        Entry {
+            key,
+            task: TaskKind::Conversation,
+            tokens: 100,
+            size_bytes: 100,
+            created_s: created,
+            last_access_s: accessed,
+            hits,
+            accu_hit_tokens: hits as u64 * 100,
+            turn: 1,
+            payload: None,
+            touch_seq: 0,
+        }
+    }
+
+    fn table(entries: Vec<Entry>) -> HashMap<u64, Entry> {
+        entries.into_iter().map(|e| (e.key, e)).collect()
+    }
+
+    #[test]
+    fn fifo_evicts_oldest_insert() {
+        let mut idx = EvictionIndex::new(PolicyKind::Fifo);
+        idx.on_insert(1);
+        idx.on_insert(2);
+        idx.on_insert(3);
+        idx.on_access(1); // FIFO ignores access
+        let t = table(vec![
+            entry(1, 0.0, 9.0, 5),
+            entry(2, 1.0, 1.0, 0),
+            entry(3, 2.0, 2.0, 0),
+        ]);
+        assert_eq!(idx.victim(&t, 10.0), Some(1));
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut idx = EvictionIndex::new(PolicyKind::Lru);
+        idx.on_insert(1);
+        idx.on_insert(2);
+        idx.on_insert(3);
+        idx.on_access(1); // 1 becomes most recent → victim is 2
+        let t = table(vec![
+            entry(1, 0.0, 3.0, 1),
+            entry(2, 1.0, 1.0, 0),
+            entry(3, 2.0, 2.0, 0),
+        ]);
+        assert_eq!(idx.victim(&t, 10.0), Some(2));
+    }
+
+    #[test]
+    fn lfu_evicts_least_hit() {
+        let mut idx = EvictionIndex::new(PolicyKind::Lfu);
+        for k in 1..=3 {
+            idx.on_insert(k);
+        }
+        let t = table(vec![
+            entry(1, 0.0, 0.0, 5),
+            entry(2, 1.0, 1.0, 1),
+            entry(3, 2.0, 2.0, 3),
+        ]);
+        assert_eq!(idx.victim(&t, 10.0), Some(2));
+    }
+
+    #[test]
+    fn lcs_evicts_least_carbon_savings() {
+        let mut idx = EvictionIndex::new(PolicyKind::Lcs);
+        for k in 1..=2 {
+            idx.on_insert(k);
+        }
+        // Entry 2: same stats but double size → lower score → victim.
+        let mut e2 = entry(2, 0.0, 0.0, 2);
+        e2.size_bytes = 200;
+        let t = table(vec![entry(1, 0.0, 0.0, 2), e2]);
+        assert_eq!(idx.victim(&t, 10.0), Some(2));
+    }
+
+    #[test]
+    fn scan_policy_skips_touched_candidates() {
+        let mut idx = EvictionIndex::new(PolicyKind::Lfu);
+        idx.on_insert(1);
+        idx.on_insert(2);
+        let mut t = table(vec![entry(1, 0.0, 0.0, 1), entry(2, 1.0, 1.0, 2)]);
+        // Build the snapshot: victim would be 1.
+        assert_eq!(idx.victim(&t, 5.0), Some(1));
+        // Entry 1 gets hot before the eviction is retried.
+        if let Some(e) = t.get_mut(&1) {
+            e.hits = 10;
+            e.touch_seq += 1;
+        }
+        // Next victim call must NOT return the stale snapshot's 1-first
+        // ordering blindly; after skipping, the rebuilt scan picks 2.
+        assert_eq!(idx.victim(&t, 5.0), Some(2));
+    }
+
+    #[test]
+    fn removed_entries_are_never_victims() {
+        let mut idx = EvictionIndex::new(PolicyKind::Lru);
+        idx.on_insert(1);
+        idx.on_insert(2);
+        idx.on_remove(1);
+        let t = table(vec![entry(2, 1.0, 1.0, 0)]);
+        assert_eq!(idx.victim(&t, 10.0), Some(2));
+    }
+
+    #[test]
+    fn empty_table_has_no_victim() {
+        let mut idx = EvictionIndex::new(PolicyKind::Lcs);
+        assert_eq!(idx.victim(&HashMap::new(), 0.0), None);
+    }
+}

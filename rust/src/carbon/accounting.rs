@@ -1,0 +1,194 @@
+//! Streaming carbon accountant: integrates Eq. 5 over a run.
+//!
+//! `C = E×CI + C_e,cache + (T/LT)·C_e,others` — the simulator and the
+//! real-model coordinator both feed periods (duration, energy, CI, cache
+//! allocation) into one of these and read the breakdown at the end.
+
+use super::{Ci, EmbodiedModel};
+
+/// Cumulative emissions split by source, grams CO₂e.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CarbonBreakdown {
+    /// E × CI over all periods.
+    pub operational_g: f64,
+    /// Eq. 4 cache (SSD) embodied.
+    pub cache_embodied_g: f64,
+    /// Amortized GPU/CPU/Mem embodied.
+    pub other_embodied_g: f64,
+}
+
+impl CarbonBreakdown {
+    pub fn total_g(&self) -> f64 {
+        self.operational_g + self.cache_embodied_g + self.other_embodied_g
+    }
+
+    /// Embodied share of the total (the paper's low-CI regime indicator).
+    pub fn embodied_fraction(&self) -> f64 {
+        let t = self.total_g();
+        if t == 0.0 {
+            0.0
+        } else {
+            (self.cache_embodied_g + self.other_embodied_g) / t
+        }
+    }
+}
+
+impl std::ops::Add for CarbonBreakdown {
+    type Output = CarbonBreakdown;
+    fn add(self, o: CarbonBreakdown) -> CarbonBreakdown {
+        CarbonBreakdown {
+            operational_g: self.operational_g + o.operational_g,
+            cache_embodied_g: self.cache_embodied_g + o.cache_embodied_g,
+            other_embodied_g: self.other_embodied_g + o.other_embodied_g,
+        }
+    }
+}
+
+/// Integrates emissions over consecutive accounting periods.
+#[derive(Debug, Clone)]
+pub struct CarbonAccountant {
+    embodied: EmbodiedModel,
+    acc: CarbonBreakdown,
+    elapsed_s: f64,
+    energy_j: f64,
+}
+
+impl CarbonAccountant {
+    pub fn new(embodied: EmbodiedModel) -> Self {
+        CarbonAccountant {
+            embodied,
+            acc: CarbonBreakdown::default(),
+            elapsed_s: 0.0,
+            energy_j: 0.0,
+        }
+    }
+
+    pub fn embodied_model(&self) -> &EmbodiedModel {
+        &self.embodied
+    }
+
+    /// Account one period of `duration_s` with `energy_j` consumed at
+    /// carbon intensity `ci`, while `cache_alloc_bytes` of SSD were
+    /// provisioned. (Eq. 5 with piecewise-constant CI — assumption 2 of
+    /// §5.4.2.)
+    pub fn record_period(
+        &mut self,
+        duration_s: f64,
+        energy_j: f64,
+        ci: Ci,
+        cache_alloc_bytes: f64,
+    ) {
+        debug_assert!(duration_s >= 0.0 && energy_j >= 0.0);
+        self.acc.operational_g += ci.operational_g(energy_j);
+        self.acc.cache_embodied_g += self
+            .embodied
+            .cache_amortized_g(cache_alloc_bytes, duration_s);
+        self.acc.other_embodied_g += self.embodied.non_storage_amortized_g(duration_s);
+        self.elapsed_s += duration_s;
+        self.energy_j += energy_j;
+    }
+
+    pub fn breakdown(&self) -> CarbonBreakdown {
+        self.acc
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed_s
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    /// Grams per request, given a completed-request count.
+    pub fn per_request_g(&self, n_requests: usize) -> f64 {
+        if n_requests == 0 {
+            0.0
+        } else {
+            self.acc.total_g() / n_requests as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::carbon::{kwh_to_joules, TB};
+
+    #[test]
+    fn integrates_eq5() {
+        let mut a = CarbonAccountant::new(EmbodiedModel::default());
+        // 1 hour, 1 kWh, CI 100, 16 TB cache.
+        a.record_period(3600.0, kwh_to_joules(1.0), Ci(100.0), 16.0 * TB);
+        let b = a.breakdown();
+        assert!((b.operational_g - 100.0).abs() < 1e-9);
+        let want_cache = 480e3 * 3600.0 / (5.0 * 365.0 * 24.0 * 3600.0);
+        assert!((b.cache_embodied_g - want_cache).abs() < 1e-6);
+        let want_other = 146.5e3 * 3600.0 / (5.0 * 365.0 * 24.0 * 3600.0);
+        assert!((b.other_embodied_g - want_other).abs() < 1e-6);
+        assert!((b.total_g() - (100.0 + want_cache + want_other)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_cache_has_zero_cache_embodied() {
+        let mut a = CarbonAccountant::new(EmbodiedModel::default());
+        a.record_period(3600.0, 1000.0, Ci(50.0), 0.0);
+        assert_eq!(a.breakdown().cache_embodied_g, 0.0);
+        assert!(a.breakdown().other_embodied_g > 0.0);
+    }
+
+    #[test]
+    fn periods_accumulate() {
+        let mut a = CarbonAccountant::new(EmbodiedModel::default());
+        a.record_period(10.0, 100.0, Ci(50.0), TB);
+        a.record_period(10.0, 100.0, Ci(50.0), TB);
+        let mut b = CarbonAccountant::new(EmbodiedModel::default());
+        b.record_period(20.0, 200.0, Ci(50.0), TB);
+        let (ba, bb) = (a.breakdown(), b.breakdown());
+        assert!((ba.total_g() - bb.total_g()).abs() < 1e-12);
+        assert_eq!(a.elapsed_s(), 20.0);
+        assert_eq!(a.energy_j(), 200.0);
+    }
+
+    #[test]
+    fn per_request_division() {
+        let mut a = CarbonAccountant::new(EmbodiedModel::default());
+        a.record_period(3600.0, kwh_to_joules(2.0), Ci(100.0), 0.0);
+        assert!(a.per_request_g(100) > 0.0);
+        assert_eq!(a.per_request_g(0), 0.0);
+        assert!((a.per_request_g(100) * 100.0 - a.breakdown().total_g()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn embodied_fraction_regimes() {
+        // The paper's Takeaway 5 mechanism: at low CI the *cache embodied*
+        // carbon outweighs what caching can save operationally; the
+        // embodied share of total emissions falls monotonically with CI.
+        let run = |ci: f64| {
+            let mut a = CarbonAccountant::new(EmbodiedModel::default());
+            a.record_period(3600.0, kwh_to_joules(1.5), Ci(ci), 16.0 * TB);
+            a.breakdown()
+        };
+        let (fr, es, miso) = (run(33.0), run(124.0), run(485.0));
+        assert!(fr.embodied_fraction() > es.embodied_fraction());
+        assert!(es.embodied_fraction() > miso.embodied_fraction());
+        // At FR the hourly cache embodied carbon (~11 g) is a significant
+        // fraction of hourly operational (~50 g) — enough that the ~20 %
+        // operational saving caching buys cannot pay for it (Fig. 8a shows
+        // caching *increasing* FR emissions by 16.5 %).
+        assert!(fr.cache_embodied_g > 0.15 * fr.operational_g);
+        // At MISO it is negligible.
+        assert!(miso.cache_embodied_g < 0.02 * miso.operational_g);
+    }
+
+    #[test]
+    fn breakdown_add() {
+        let a = CarbonBreakdown {
+            operational_g: 1.0,
+            cache_embodied_g: 2.0,
+            other_embodied_g: 3.0,
+        };
+        let s = a + a;
+        assert_eq!(s.total_g(), 12.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Embodied carbon model (paper Table 1, Eq. 3–4; ACT-style accounting).
+
+/// Seconds in the amortization year (365 d).
+pub const SECONDS_PER_YEAR: f64 = 365.0 * 24.0 * 3600.0;
+
+/// One terabyte in bytes (decimal TB, matching SSD marketing/provisioning).
+pub const TB: f64 = 1e12;
+
+/// Embodied carbon inventory of the serving platform.
+///
+/// Defaults reproduce Table 1: AMD 7453 CPU 9.3 kg, 4× NVIDIA L40
+/// 106.4 kg, 512 GB DDR4 30.8 kg, SSD 30 kg/TB (ACT [26]; §6.6.3 sweeps
+/// 30–90), all amortized over a 5-year lifetime (§2.3; §6.6.2 sweeps SSD
+/// 3–7 years).
+#[derive(Debug, Clone)]
+pub struct EmbodiedModel {
+    /// GPU embodied carbon, grams (whole GPU complement).
+    pub gpu_g: f64,
+    /// CPU embodied carbon, grams.
+    pub cpu_g: f64,
+    /// DRAM embodied carbon, grams.
+    pub mem_g: f64,
+    /// SSD embodied carbon per byte, grams (Eq. 4's `C_e,SSD^Unit`).
+    pub ssd_g_per_byte: f64,
+    /// Lifetime of compute components (GPU/CPU/Mem), seconds.
+    pub lt_compute_s: f64,
+    /// Lifetime of the SSD tier, seconds.
+    pub lt_ssd_s: f64,
+}
+
+impl Default for EmbodiedModel {
+    fn default() -> Self {
+        EmbodiedModel {
+            gpu_g: 106.4e3,
+            cpu_g: 9.3e3,
+            mem_g: 30.8e3,
+            ssd_g_per_byte: 30.0e3 / TB, // 30 kgCO2e/TB
+            lt_compute_s: 5.0 * SECONDS_PER_YEAR,
+            lt_ssd_s: 5.0 * SECONDS_PER_YEAR,
+        }
+    }
+}
+
+impl EmbodiedModel {
+    /// Table-1 platform for the 8B-analogue model: 2× L40 (§6.1).
+    pub fn small_platform() -> Self {
+        EmbodiedModel {
+            gpu_g: 106.4e3 / 2.0,
+            ..Default::default()
+        }
+    }
+
+    /// Override the SSD unit carbon (kg per TB) — §6.6.3 sensitivity.
+    pub fn with_ssd_kg_per_tb(mut self, kg_per_tb: f64) -> Self {
+        self.ssd_g_per_byte = kg_per_tb * 1e3 / TB;
+        self
+    }
+
+    /// Override the SSD lifetime in years — §6.6.2 sensitivity.
+    pub fn with_ssd_lifetime_years(mut self, years: f64) -> Self {
+        self.lt_ssd_s = years * SECONDS_PER_YEAR;
+        self
+    }
+
+    /// Total non-storage embodied carbon, grams (Eq. 3 minus SSD).
+    pub fn non_storage_g(&self) -> f64 {
+        self.gpu_g + self.cpu_g + self.mem_g
+    }
+
+    /// Amortized non-storage embodied carbon over `duration_s` (Eq. 1's
+    /// `(T/LT)·C_e` for GPU+CPU+Mem).
+    pub fn non_storage_amortized_g(&self, duration_s: f64) -> f64 {
+        self.non_storage_g() * duration_s / self.lt_compute_s
+    }
+
+    /// Cache embodied carbon (Eq. 4): `S_alloc × (T/LT) × C_unit`, where
+    /// `alloc_bytes` is the *provisioned* SSD capacity.
+    pub fn cache_amortized_g(&self, alloc_bytes: f64, duration_s: f64) -> f64 {
+        alloc_bytes * self.ssd_g_per_byte * duration_s / self.lt_ssd_s
+    }
+
+    /// Full-platform embodied total (Eq. 3) at a given SSD allocation,
+    /// un-amortized. Used for the Table-1 style inventory report.
+    pub fn platform_total_g(&self, ssd_alloc_bytes: f64) -> f64 {
+        self.non_storage_g() + ssd_alloc_bytes * self.ssd_g_per_byte
+    }
+
+    /// Fraction of platform embodied carbon held by the SSD tier — the
+    /// paper reports 76.6 % at 16 TB (§2.3).
+    pub fn ssd_fraction(&self, ssd_alloc_bytes: f64) -> f64 {
+        let ssd = ssd_alloc_bytes * self.ssd_g_per_byte;
+        ssd / (ssd + self.non_storage_g())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_constants() {
+        let m = EmbodiedModel::default();
+        assert_eq!(m.gpu_g, 106_400.0);
+        assert_eq!(m.cpu_g, 9_300.0);
+        assert_eq!(m.mem_g, 30_800.0);
+        // 16 TB at 30 kg/TB = 480 kg (Table 1's "up to 480 kgCO2e").
+        assert!((m.platform_total_g(16.0 * TB) - m.non_storage_g() - 480e3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ssd_fraction_matches_paper() {
+        // §2.3: SSD = 76.6 % of server embodied carbon at 16 TB.
+        let m = EmbodiedModel::default();
+        let frac = m.ssd_fraction(16.0 * TB);
+        assert!((frac - 0.766).abs() < 0.01, "ssd fraction {frac}");
+    }
+
+    #[test]
+    fn eq4_cache_amortization() {
+        let m = EmbodiedModel::default();
+        // 1 TB held for a full lifetime = its whole 30 kg.
+        let g = m.cache_amortized_g(TB, m.lt_ssd_s);
+        assert!((g - 30e3).abs() < 1e-6);
+        // Held for 1 hour: 30 kg × 3600 / (5 y).
+        let g_h = m.cache_amortized_g(TB, 3600.0);
+        assert!((g_h - 30e3 * 3600.0 / (5.0 * SECONDS_PER_YEAR)).abs() < 1e-9);
+        // Linear in allocation.
+        assert!((m.cache_amortized_g(2.0 * TB, 3600.0) - 2.0 * g_h).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sensitivity_knobs() {
+        let m = EmbodiedModel::default().with_ssd_kg_per_tb(90.0);
+        assert!((m.cache_amortized_g(TB, m.lt_ssd_s) - 90e3).abs() < 1e-6);
+        let m3 = EmbodiedModel::default().with_ssd_lifetime_years(3.0);
+        let m7 = EmbodiedModel::default().with_ssd_lifetime_years(7.0);
+        // Shorter lifetime → more amortized carbon per hour (§6.6.2).
+        assert!(
+            m3.cache_amortized_g(TB, 3600.0) > m7.cache_amortized_g(TB, 3600.0)
+        );
+    }
+
+    #[test]
+    fn small_platform_halves_gpu() {
+        let m = EmbodiedModel::small_platform();
+        assert_eq!(m.gpu_g, 53_200.0);
+        assert_eq!(m.cpu_g, 9_300.0);
+    }
+
+    #[test]
+    fn amortization_is_linear_in_time() {
+        let m = EmbodiedModel::default();
+        let one = m.non_storage_amortized_g(100.0);
+        let two = m.non_storage_amortized_g(200.0);
+        assert!((two - 2.0 * one).abs() < 1e-9);
+    }
+}

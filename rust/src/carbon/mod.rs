@@ -1,0 +1,68 @@
+//! Carbon accounting: operational + embodied emissions (paper §2.3, §3.2.1).
+//!
+//! * Operational: `C_o = E × CI` (Eq. 2) — energy in kWh times grid carbon
+//!   intensity in gCO₂e/kWh.
+//! * Embodied: amortized over hardware lifetime, `C = C_o + (T/LT)·C_e`
+//!   (Eq. 1), with the SSD tier scaled by *allocated* capacity
+//!   (Eq. 4): `C_e,cache = S_alloc × (T/LT) × C_e,SSD_unit` — the cloud
+//!   model where only reserved storage carries embodied carbon.
+//!
+//! All public quantities are in **grams** CO₂e, **Joules**, **seconds**
+//! and **bytes**; constructors take the paper's units (kg, kWh, years,
+//! TB) and convert.
+
+mod accounting;
+mod embodied;
+mod power;
+
+pub use accounting::{CarbonAccountant, CarbonBreakdown};
+pub use embodied::{EmbodiedModel, SECONDS_PER_YEAR, TB};
+pub use power::{PowerModel, PowerSample};
+
+/// Carbon intensity in gCO₂e/kWh.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Ci(pub f64);
+
+impl Ci {
+    /// Operational carbon (grams) for `joules` of energy at this CI (Eq. 2).
+    pub fn operational_g(&self, joules: f64) -> f64 {
+        self.0 * joules / 3_600_000.0 // J -> kWh
+    }
+}
+
+/// Convert kWh to Joules.
+pub fn kwh_to_joules(kwh: f64) -> f64 {
+    kwh * 3_600_000.0
+}
+
+/// Convert Joules to kWh.
+pub fn joules_to_kwh(j: f64) -> f64 {
+    j / 3_600_000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operational_carbon_eq2() {
+        // 1 kWh at 100 g/kWh = 100 g.
+        let ci = Ci(100.0);
+        assert!((ci.operational_g(kwh_to_joules(1.0)) - 100.0).abs() < 1e-9);
+        // 0 energy = 0 g.
+        assert_eq!(ci.operational_g(0.0), 0.0);
+    }
+
+    #[test]
+    fn unit_round_trip() {
+        assert!((joules_to_kwh(kwh_to_joules(3.7)) - 3.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_example_scale() {
+        // Sanity: a 1 kW platform running 1 hour in FR (33 g/kWh) ≈ 33 g.
+        let ci = Ci(33.0);
+        let joules = 1000.0 * 3600.0;
+        assert!((ci.operational_g(joules) - 33.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,157 @@
+//! Component power model (paper §5.2's monitoring tool, made analytic).
+//!
+//! The paper measures CPU power with RAPL and GPU power with pyNVML every
+//! 1 ms and takes datasheet values for DRAM/SSD. Our testbed has no L40s,
+//! so the profiler consumes this model instead: idle + utilization-scaled
+//! draw per component, with constants matching the cited parts
+//! (L40 300 W TGP, EPYC 7453 225 W TDP, DDR4 ~0.4 W/GB active,
+//! NVMe ~8 W/device active / ~1.5 W idle — Samsung 990 PRO class [64]).
+
+/// Instantaneous platform power split, watts.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PowerSample {
+    pub gpu_w: f64,
+    pub cpu_w: f64,
+    pub mem_w: f64,
+    pub ssd_w: f64,
+}
+
+impl PowerSample {
+    pub fn total_w(&self) -> f64 {
+        self.gpu_w + self.cpu_w + self.mem_w + self.ssd_w
+    }
+}
+
+/// Utilization-dependent power model for the serving platform.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    /// Number of GPUs (4 for the 70B platform, 2 for 8B — §6.1).
+    pub n_gpus: usize,
+    /// Per-GPU idle / peak watts.
+    pub gpu_idle_w: f64,
+    pub gpu_peak_w: f64,
+    /// CPU idle / peak watts.
+    pub cpu_idle_w: f64,
+    pub cpu_peak_w: f64,
+    /// DRAM watts (capacity-proportional, roughly constant under load).
+    pub mem_w: f64,
+    /// SSD idle / active watts per provisioned TB.
+    pub ssd_idle_w_per_tb: f64,
+    pub ssd_active_w_per_tb: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel {
+            n_gpus: 4,
+            gpu_idle_w: 30.0,
+            gpu_peak_w: 300.0, // L40 TGP
+            cpu_idle_w: 60.0,
+            cpu_peak_w: 225.0, // EPYC 7453 TDP
+            mem_w: 0.4 * 512.0, // 512 GB DDR4
+            // One 4 TB-class NVMe device ≈ 8 W active / 1.5 W idle → per-TB.
+            ssd_idle_w_per_tb: 0.4,
+            ssd_active_w_per_tb: 2.0,
+        }
+    }
+}
+
+impl PowerModel {
+    /// 2-GPU platform for the 8B-analogue (§6.1).
+    pub fn small_platform() -> Self {
+        PowerModel {
+            n_gpus: 2,
+            ..Default::default()
+        }
+    }
+
+    /// Power draw at a given state.
+    ///
+    /// * `gpu_util` / `cpu_util` in [0,1] — fraction of peak compute.
+    /// * `ssd_alloc_tb` — provisioned cache size.
+    /// * `ssd_active` — fraction of time the SSD is streaming KV blobs.
+    pub fn sample(
+        &self,
+        gpu_util: f64,
+        cpu_util: f64,
+        ssd_alloc_tb: f64,
+        ssd_active: f64,
+    ) -> PowerSample {
+        let gu = gpu_util.clamp(0.0, 1.0);
+        let cu = cpu_util.clamp(0.0, 1.0);
+        let sa = ssd_active.clamp(0.0, 1.0);
+        PowerSample {
+            gpu_w: self.n_gpus as f64
+                * (self.gpu_idle_w + (self.gpu_peak_w - self.gpu_idle_w) * gu),
+            cpu_w: self.cpu_idle_w + (self.cpu_peak_w - self.cpu_idle_w) * cu,
+            mem_w: self.mem_w,
+            ssd_w: ssd_alloc_tb
+                * (self.ssd_idle_w_per_tb
+                    + (self.ssd_active_w_per_tb - self.ssd_idle_w_per_tb) * sa),
+        }
+    }
+
+    /// Energy (J) for a period of `duration_s` at constant utilization.
+    pub fn energy_j(
+        &self,
+        gpu_util: f64,
+        cpu_util: f64,
+        ssd_alloc_tb: f64,
+        ssd_active: f64,
+        duration_s: f64,
+    ) -> f64 {
+        self.sample(gpu_util, cpu_util, ssd_alloc_tb, ssd_active).total_w() * duration_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_vs_peak() {
+        let m = PowerModel::default();
+        let idle = m.sample(0.0, 0.0, 0.0, 0.0);
+        let peak = m.sample(1.0, 1.0, 16.0, 1.0);
+        assert!((idle.gpu_w - 120.0).abs() < 1e-9); // 4 × 30 W
+        assert!((peak.gpu_w - 1200.0).abs() < 1e-9); // 4 × 300 W
+        assert!((peak.cpu_w - 225.0).abs() < 1e-9);
+        assert!(peak.total_w() > idle.total_w());
+    }
+
+    #[test]
+    fn utilization_clamps() {
+        let m = PowerModel::default();
+        assert_eq!(m.sample(2.0, 0.0, 0.0, 0.0), m.sample(1.0, 0.0, 0.0, 0.0));
+        assert_eq!(m.sample(-1.0, 0.0, 0.0, 0.0), m.sample(0.0, 0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn ssd_power_scales_with_allocation() {
+        let m = PowerModel::default();
+        let one = m.sample(0.0, 0.0, 1.0, 0.5).ssd_w;
+        let four = m.sample(0.0, 0.0, 4.0, 0.5).ssd_w;
+        assert!((four - 4.0 * one).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let m = PowerModel::default();
+        let p = m.sample(0.5, 0.5, 8.0, 0.2).total_w();
+        assert!((m.energy_j(0.5, 0.5, 8.0, 0.2, 10.0) - 10.0 * p).abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_platform_has_half_the_gpus() {
+        let m = PowerModel::small_platform();
+        assert!((m.sample(1.0, 0.0, 0.0, 0.0).gpu_w - 600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn platform_scale_sanity() {
+        // 4×L40 server under load: ~1.2-1.6 kW — the paper's platform class.
+        let m = PowerModel::default();
+        let w = m.sample(0.9, 0.5, 16.0, 0.3).total_w();
+        assert!(w > 1000.0 && w < 2000.0, "{w} W");
+    }
+}

@@ -1,0 +1,231 @@
+//! The 12 grids of Fig. 8 with synthetic-but-calibrated hourly traces.
+//!
+//! Per-grid parameters (mean CI, diurnal amplitude, solar share, noise)
+//! are set from the paper's reported numbers and Electricity Maps 2024
+//! averages cited in Fig. 2a: FR 33 g/kWh (nuclear), MISO 485 (coal/gas),
+//! CISO swinging 37→232 across a day (Fig. 2b / §3.2.2). Solar-heavy
+//! grids dip midday; thermal grids peak with the evening ramp.
+
+use super::CiSeries;
+use crate::rng::Rng;
+
+/// Electric grids evaluated in the paper (Fig. 2a main four + Fig. 8's
+/// twelve).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Grid {
+    Fr,
+    No,
+    Se,
+    Ch,
+    Fi,
+    Es,
+    Gb,
+    Ciso,
+    Nl,
+    De,
+    Pjm,
+    Miso,
+}
+
+/// All 12 grids, ordered by average CI (Fig. 8a's x-axis ordering).
+pub const ALL_GRIDS: [Grid; 12] = [
+    Grid::No,
+    Grid::Fr,
+    Grid::Se,
+    Grid::Ch,
+    Grid::Fi,
+    Grid::Es,
+    Grid::Ciso,
+    Grid::Gb,
+    Grid::Nl,
+    Grid::De,
+    Grid::Pjm,
+    Grid::Miso,
+];
+
+/// The four headline grids of Fig. 2a / §6.
+pub const FIG2A_GRIDS: [Grid; 4] = [Grid::Fr, Grid::Fi, Grid::Es, Grid::Ciso];
+
+/// Trace-generation parameters for one grid.
+#[derive(Debug, Clone, Copy)]
+pub struct GridTrace {
+    pub grid: Grid,
+    /// Average CI, gCO₂e/kWh.
+    pub mean: f64,
+    /// Peak-to-mean diurnal amplitude (fraction of mean).
+    pub diurnal_amp: f64,
+    /// Hour of the daily *minimum* (solar grids: early-to-mid morning;
+    /// CISO's min is 7 AM per §3.2.2).
+    pub min_hour: f64,
+    /// Relative noise (std as fraction of mean).
+    pub noise: f64,
+    /// Renewable share (Fig. 2a energy-mix bar; used in the fig2a report).
+    pub renewable_share: f64,
+}
+
+impl Grid {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Grid::Fr => "FR",
+            Grid::No => "NO",
+            Grid::Se => "SE",
+            Grid::Ch => "CH",
+            Grid::Fi => "FI",
+            Grid::Es => "ES",
+            Grid::Gb => "GB",
+            Grid::Ciso => "CISO",
+            Grid::Nl => "NL",
+            Grid::De => "DE",
+            Grid::Pjm => "PJM",
+            Grid::Miso => "MISO",
+        }
+    }
+
+    pub fn params(&self) -> GridTrace {
+        // mean / amp / min_hour / noise / renewable share.
+        let (mean, diurnal_amp, min_hour, noise, renew) = match self {
+            // §3.2.2: FR average 33 g/kWh; caching *increases* carbon 16.5%.
+            Grid::Fr => (33.0, 0.25, 4.0, 0.06, 0.92),
+            Grid::No => (29.0, 0.15, 3.0, 0.05, 0.98),
+            Grid::Se => (45.0, 0.20, 3.0, 0.06, 0.95),
+            Grid::Ch => (48.0, 0.25, 12.0, 0.07, 0.90),
+            Grid::Fi => (79.0, 0.30, 2.0, 0.08, 0.80),
+            // §6.3.1: ES average 124 g/kWh.
+            Grid::Es => (124.0, 0.45, 13.0, 0.08, 0.60),
+            Grid::Gb => (180.0, 0.35, 13.0, 0.09, 0.45),
+            // Fig. 2b / §3.2.2: CISO min 37 @ 7 AM → deep solar dip,
+            // evening peak 232 @ 8 PM. mean ≈ 135 with amp tuned to hit
+            // the reported extremes.
+            Grid::Ciso => (135.0, 0.72, 10.0, 0.07, 0.55),
+            Grid::Nl => (268.0, 0.30, 13.0, 0.08, 0.35),
+            Grid::De => (344.0, 0.35, 13.0, 0.09, 0.50),
+            Grid::Pjm => (420.0, 0.15, 4.0, 0.05, 0.10),
+            // §3.2.2: MISO 485 g/kWh, coal-heavy, flat profile.
+            Grid::Miso => (485.0, 0.10, 4.0, 0.05, 0.12),
+        };
+        GridTrace {
+            grid: *self,
+            mean,
+            diurnal_amp,
+            min_hour,
+            noise,
+            renewable_share: renew,
+        }
+    }
+
+    /// Synthesize `days` of hourly CI, seeded for reproducibility.
+    ///
+    /// Shape: mean × (1 + amp·cos-ramp centred on `min_hour`) + AR(1)
+    /// noise. The cosine is warped so the evening peak is sharper than
+    /// the morning valley (matching the CISO duck curve of Fig. 2b).
+    pub fn trace(&self, days: usize, seed: u64) -> CiSeries {
+        let p = self.params();
+        let mut rng = Rng::new(seed ^ (p.mean.to_bits()));
+        let mut hourly = Vec::with_capacity(days * 24);
+        let mut ar = 0.0f64; // AR(1) noise state
+        for h in 0..days * 24 {
+            let hour = (h % 24) as f64;
+            // Distance from the daily minimum, wrapped to [-12, 12).
+            let mut d = hour - p.min_hour;
+            while d < -12.0 {
+                d += 24.0;
+            }
+            while d >= 12.0 {
+                d -= 24.0;
+            }
+            // Duck-curve warp: rise to peak ~9 h after the min. The warp
+            // `shape·(1+0.3·shape)` has mean 0.3·E[shape²] = 0.15 over a
+            // day; subtract it so the trace mean stays calibrated.
+            let phase = d / 12.0 * std::f64::consts::PI;
+            let shape = -phase.cos(); // -1 at min hour, +1 twelve hours later
+            let warped = shape * (1.0 + 0.3 * shape) - 0.15;
+            ar = 0.7 * ar + 0.3 * rng.normal();
+            let v = p.mean * (1.0 + p.diurnal_amp * warped) + p.mean * p.noise * ar;
+            hourly.push(v.max(1.0));
+        }
+        CiSeries { grid: *self, hourly }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ci::CiSeries;
+
+    fn day(grid: Grid) -> CiSeries {
+        grid.trace(30, 42)
+    }
+
+    #[test]
+    fn means_match_calibration() {
+        for g in ALL_GRIDS {
+            let t = day(g);
+            let want = g.params().mean;
+            let got = t.mean();
+            assert!(
+                (got / want - 1.0).abs() < 0.10,
+                "{}: mean {got} vs calibrated {want}",
+                g.name()
+            );
+        }
+    }
+
+    #[test]
+    fn ordering_matches_fig8() {
+        // ALL_GRIDS is ordered by average CI.
+        let means: Vec<f64> = ALL_GRIDS.iter().map(|g| g.params().mean).collect();
+        for w in means.windows(2) {
+            assert!(w[0] <= w[1], "grids out of CI order: {means:?}");
+        }
+    }
+
+    #[test]
+    fn fr_and_miso_extremes() {
+        assert!((Grid::Fr.params().mean - 33.0).abs() < 1e-9);
+        assert!((Grid::Miso.params().mean - 485.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ciso_daily_swing_matches_fig2b() {
+        // Paper: min 37 @ 7 AM, peak 232 @ 8 PM. Accept the synthetic
+        // trace hitting a wide-but-similar swing.
+        let t = Grid::Ciso.trace(10, 7);
+        let min = t.min();
+        let max = t.max();
+        assert!(min < 60.0, "CISO daily min {min} should dip below 60");
+        assert!(max > 200.0, "CISO daily max {max} should exceed 200");
+        // Min lands in the solar window (centred near 10 AM ±3 h).
+        let day0 = &t.hourly[..24];
+        let argmin = day0
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!((6..=14).contains(&argmin), "CISO min at hour {argmin}");
+    }
+
+    #[test]
+    fn traces_are_reproducible() {
+        let a = Grid::Es.trace(2, 9);
+        let b = Grid::Es.trace(2, 9);
+        assert_eq!(a.hourly, b.hourly);
+        let c = Grid::Es.trace(2, 10);
+        assert_ne!(a.hourly, c.hourly);
+    }
+
+    #[test]
+    fn traces_are_positive() {
+        for g in ALL_GRIDS {
+            assert!(day(g).hourly.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn renewable_share_anticorrelates_with_ci() {
+        // Fig. 2a: greener mix → lower CI.
+        let lo = Grid::Fr.params();
+        let hi = Grid::Miso.params();
+        assert!(lo.renewable_share > hi.renewable_share);
+    }
+}

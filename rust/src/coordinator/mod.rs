@@ -1,0 +1,31 @@
+//! The GreenCache coordinator (paper §5): the control loop that ties the
+//! predictors, profiler and constraint solver to the cache manager, plus
+//! the request-path server for the real (tiny-model) runtime.
+//!
+//! * [`GreenCacheController`] — the paper's contribution: every decision
+//!   interval it forecasts CI (EnsembleCI-style) and load (SARIMA),
+//!   assembles the Eq. 6 problem from the profile, solves it, and resizes
+//!   the cache (§5.1's green components).
+//! * [`baselines`] — No Cache / Full Cache / LRU+Optimal comparison
+//!   points (§6.1, §6.3.1).
+//! * [`server`] — the real-model request path: router + context cache +
+//!   PJRT engine, Python-free.
+
+mod greencache;
+pub mod server;
+
+pub use greencache::{
+    CiSource, Decision, GreenCacheConfig, GreenCacheController, LoadSource,
+};
+
+/// Baseline controllers (§6.1's comparison points).
+pub mod baselines {
+    use crate::cache::CacheManager;
+    use crate::sim::{Controller, IntervalObservation};
+
+    /// `No Cache` and `Full Cache`: a fixed capacity, never resized.
+    pub struct Fixed;
+    impl Controller for Fixed {
+        fn on_interval(&mut self, _: usize, _: &IntervalObservation, _: &mut CacheManager) {}
+    }
+}

@@ -1,0 +1,228 @@
+//! Real-model request path: router + context cache + PJRT engine.
+//!
+//! This is the end-to-end serving stack on the tiny-Llama artifacts: a
+//! request arrives with token ids and a context id; the router looks the
+//! context up in the [`CacheManager`] (payload = serialized KV bytes at a
+//! chunk boundary), the [`Engine`] resumes prefill after the cached
+//! prefix, decodes greedily, and the extended KV snapshot is written back
+//! to the cache. No Python anywhere; the engine thread owns the PJRT
+//! client (the handles are not `Sync`).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::cache::{CacheManager, PolicyKind};
+use crate::carbon::{CarbonAccountant, Ci, EmbodiedModel};
+use crate::metrics::{LatencyStats, Slo, SloTracker};
+use crate::runtime::{Engine, KvState};
+use crate::workload::Request;
+
+/// A served request's outcome.
+#[derive(Debug, Clone)]
+pub struct Served {
+    pub request_id: u64,
+    pub tokens: Vec<i32>,
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+    pub hit_tokens: u32,
+    pub chunks_executed: usize,
+    pub chunks_skipped: usize,
+}
+
+/// Aggregate serving report (printed by the examples / EXPERIMENTS.md).
+#[derive(Debug)]
+pub struct ServeReport {
+    pub served: Vec<Served>,
+    pub slo: SloTracker,
+    pub ttft: LatencyStats,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub token_hit_rate: f64,
+    pub request_hit_rate: f64,
+    pub carbon: CarbonAccountant,
+    /// Fraction of wall time inside XLA executions (perf accounting).
+    pub xla_fraction: f64,
+}
+
+/// Server configuration for the tiny-model path.
+pub struct ServerConfig {
+    /// Cache capacity, bytes (the tiny model's "SSD tier").
+    pub cache_bytes: u64,
+    pub policy: PolicyKind,
+    /// Decode length per request.
+    pub n_new: usize,
+    pub slo: Slo,
+    /// Carbon intensity to account the run under.
+    pub ci: Ci,
+    /// Testbed power draw, watts (CPU-class testbed; the paper-scale
+    /// numbers come from the simulator — this demonstrates the pipeline).
+    pub testbed_power_w: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            cache_bytes: 64 * 1024 * 1024,
+            policy: PolicyKind::Lcs,
+            n_new: 8,
+            // SLOs scaled to the tiny testbed (interpret-mode CPU).
+            slo: Slo { ttft_s: 60.0, tpot_s: 30.0, rho: 0.9 },
+            ci: Ci(124.0),
+            testbed_power_w: 150.0,
+        }
+    }
+}
+
+/// Single-threaded server: owns the engine and cache, processes requests
+/// in arrival order. (PJRT CPU already parallelizes inside an execution;
+/// request-level parallelism on one client adds nothing on this testbed.)
+pub struct Server {
+    engine: Engine,
+    cache: CacheManager,
+    cfg: ServerConfig,
+}
+
+impl Server {
+    pub fn new(engine: Engine, cfg: ServerConfig) -> Self {
+        let kv_per_token = engine.config().kv_bytes_per_token() as u64;
+        let cache = CacheManager::new(cfg.cache_bytes, kv_per_token, cfg.policy);
+        Server { engine, cache, cfg }
+    }
+
+    pub fn cache(&self) -> &CacheManager {
+        &self.cache
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Serve one request: `prompt[..ctx_len]` is the reusable context,
+    /// the rest the fresh suffix. Returns the generation and cache facts.
+    pub fn serve_one(
+        &mut self,
+        req: &Request,
+        prompt: &[i32],
+        now_s: f64,
+    ) -> crate::Result<Served> {
+        let chunk = self.engine.config().chunk;
+        anyhow::ensure!(
+            req.prompt_tokens() as usize == prompt.len(),
+            "request token counts must match the prompt"
+        );
+
+        let hit = self.cache.lookup(req, now_s);
+        // Cached KV snapshots live at chunk boundaries; a hit restores
+        // the snapshot and resumes prefill from there.
+        let mut kv: KvState = match self
+            .cache
+            .entry(req.context_id)
+            .and_then(|e| e.payload.as_ref())
+        {
+            Some(blob) if hit.hit => {
+                let usable = (hit.hit_tokens as usize / chunk) * chunk;
+                if usable > 0 {
+                    KvState {
+                        bytes: blob.clone(),
+                        len: usable,
+                        shape: self.engine.config().kv_shape.clone(),
+                    }
+                } else {
+                    self.engine.empty_kv()
+                }
+            }
+            _ => self.engine.empty_kv(),
+        };
+        // The snapshot must not overrun this prompt (defensive: entries
+        // only ever extend, but the request may carry a truncated view).
+        if kv.len >= prompt.len() {
+            kv = self.engine.empty_kv();
+        }
+
+        let out = self.engine.generate(prompt, self.cfg.n_new, &mut kv)?;
+
+        // Write back the extended snapshot at the largest chunk boundary
+        // covering the prompt (decoded tokens are conversation-reply KV —
+        // cached too, matching CachedAttention's write-through).
+        let snap_len = (kv.len / chunk) * chunk;
+        if snap_len > 0 {
+            let payload = kv.bytes.clone();
+            self.cache
+                .admit(req, snap_len as u32, Some(payload), now_s);
+        }
+
+        Ok(Served {
+            request_id: req.id,
+            tokens: out.tokens,
+            ttft_s: out.ttft.as_secs_f64(),
+            tpot_s: out.tpot.as_secs_f64(),
+            hit_tokens: hit.hit_tokens,
+            chunks_executed: out.chunks_executed,
+            chunks_skipped: out.chunks_skipped,
+        })
+    }
+
+    /// Serve a batch of requests (arrival order), producing the report.
+    pub fn serve(
+        &mut self,
+        requests: &[(Request, Vec<i32>)],
+    ) -> crate::Result<ServeReport> {
+        let t0 = Instant::now();
+        let mut served = Vec::with_capacity(requests.len());
+        let mut slo = SloTracker::new(self.cfg.slo);
+        let mut ttft = LatencyStats::new();
+        for (req, prompt) in requests {
+            let now = t0.elapsed().as_secs_f64();
+            let s = self.serve_one(req, prompt, now)?;
+            slo.record(s.ttft_s, s.tpot_s);
+            ttft.record(s.ttft_s);
+            served.push(s);
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut carbon = CarbonAccountant::new(EmbodiedModel::default());
+        carbon.record_period(
+            wall_s,
+            self.cfg.testbed_power_w * wall_s,
+            self.cfg.ci,
+            self.cache.capacity_bytes() as f64,
+        );
+        let stats = self.cache.stats();
+        let xla = self.engine.xla_time.get().as_secs_f64();
+        Ok(ServeReport {
+            throughput_rps: served.len() as f64 / wall_s.max(1e-9),
+            served,
+            slo,
+            ttft,
+            wall_s,
+            token_hit_rate: stats.token_hit_rate(),
+            request_hit_rate: stats.request_hit_rate(),
+            carbon,
+            xla_fraction: (xla / wall_s).min(1.0),
+        })
+    }
+}
+
+/// Run a server on its own thread, feeding requests through a channel —
+/// the deployment shape for a non-`Sync` PJRT client under a tokio-style
+/// app (the offline build has no tokio; std threads + mpsc carry the same
+/// structure).
+pub fn serve_on_thread(
+    artifact_dir: std::path::PathBuf,
+    cfg: ServerConfig,
+    requests: Vec<(Request, Vec<i32>)>,
+) -> crate::Result<ServeReport> {
+    let (tx, rx) = mpsc::channel::<crate::Result<ServeReport>>();
+    let handle = std::thread::spawn(move || {
+        let result = (|| {
+            let engine = Engine::load(&artifact_dir)?;
+            let mut server = Server::new(engine, cfg);
+            server.serve(&requests)
+        })();
+        let _ = tx.send(result);
+    });
+    let report = rx
+        .recv()
+        .map_err(|e| anyhow::anyhow!("engine thread died: {e}"))??;
+    handle.join().map_err(|_| anyhow::anyhow!("join failed"))?;
+    Ok(report)
+}

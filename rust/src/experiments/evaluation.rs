@@ -1,0 +1,296 @@
+//! §6.2 headline evaluation: Figs. 11–14.
+
+use super::*;
+use crate::util::csv::Csv;
+
+/// Fig. 11: profiling heatmaps (TTFT, TPOT, carbon savings) over
+/// rate × size, for the conversation and doc(α=0.4) tasks.
+pub fn fig11(quick: bool) -> Csv {
+    let mut csv = Csv::new(&[
+        "task",
+        "rate_rps",
+        "cache_tb",
+        "ttft_s",
+        "tpot_s",
+        "carbon_savings_ratio",
+        "ttft_attain",
+        "tpot_attain",
+    ]);
+    let mut profiles = ProfileStore::new(quick);
+    println!("Fig 11 — profiler heatmaps (ES-grid carbon savings; ratio >1 = saving)");
+    for task in [Task::Conversation, Task::Doc04] {
+        let model = Model::Llama70B;
+        let table = profiles.get(model, task, PolicyKind::Lcs).clone();
+        let es_ci = crate::carbon::Ci(Grid::Es.params().mean);
+        let embodied = model.embodied();
+        println!("  task {}", task.name());
+        for (ri, &rate) in table.rates.iter().enumerate() {
+            for (si, &size) in table.sizes_tb.iter().enumerate() {
+                let c = table.cell(ri, si);
+                let c0 = table.cell(ri, 0);
+                // Hourly carbon under this cell vs the no-cache cell.
+                let hour_g = |cell: &crate::profiler::ProfileCell, tb: u32| {
+                    es_ci.operational_g(cell.mean_power_w * 3600.0)
+                        + embodied.cache_amortized_g(tb as f64 * TB, 3600.0)
+                        + embodied.non_storage_amortized_g(3600.0)
+                };
+                let savings = hour_g(c0, 0) / hour_g(c, size).max(1e-12);
+                csv.row_f64(&[
+                    if task == Task::Conversation { 0.0 } else { 1.0 },
+                    rate,
+                    size as f64,
+                    c.mean_ttft_s,
+                    c.mean_tpot_s,
+                    savings,
+                    c.ttft_attain,
+                    c.tpot_attain,
+                ]);
+            }
+        }
+        // Print the corners as the paper-shaped summary.
+        let (r_lo, r_hi) = (0, table.rates.len() - 1);
+        let (s_lo, s_hi) = (0, table.sizes_tb.len() - 1);
+        for (ri, si, tag) in [
+            (r_lo, s_lo, "low rate / no cache"),
+            (r_lo, s_hi, "low rate / max cache"),
+            (r_hi, s_lo, "high rate / no cache"),
+            (r_hi, s_hi, "high rate / max cache"),
+        ] {
+            let c = table.cell(ri, si);
+            println!(
+                "    {tag:<22}: TTFT {:>6.2}s TPOT {:>6.3}s attain {:.2}/{:.2}",
+                c.mean_ttft_s, c.mean_tpot_s, c.ttft_attain, c.tpot_attain
+            );
+        }
+    }
+    csv
+}
+
+/// Fig. 12: average per-request carbon of No Cache / Full Cache /
+/// GreenCache across 4 grids × 3 tasks × 2 models, with mean cache sizes.
+pub fn fig12(quick: bool, models: &[Model]) -> Csv {
+    let mut csv = Csv::new(&[
+        "model",
+        "task",
+        "grid",
+        "baseline",
+        "carbon_per_request_g",
+        "mean_cache_tb",
+        "slo_attainment",
+        "saving_vs_full_pct",
+    ]);
+    let mut profiles = ProfileStore::new(quick);
+    println!("Fig 12 — average carbon per request (24h co-simulation)");
+    for &model in models {
+        for task in Task::all() {
+            for grid in crate::ci::FIG2A_GRIDS {
+                let mut full_g = 0.0;
+                for baseline in [Baseline::NoCache, Baseline::FullCache, Baseline::GreenCache] {
+                    let mut sc = DayScenario::new(model, task, grid, baseline);
+                    if quick {
+                        sc = sc.quick();
+                    }
+                    let r = run_day(&sc, &mut profiles);
+                    if baseline == Baseline::FullCache {
+                        full_g = r.carbon_per_request_g;
+                    }
+                    let saving = if baseline == Baseline::GreenCache {
+                        saving_pct(full_g, r.carbon_per_request_g)
+                    } else {
+                        0.0
+                    };
+                    println!(
+                        "  {:<11} {:<26} {:<5} {:<11}: {:>8.3} g/req  cache {:>5.1} TB  SLO {:>5.1}%{}",
+                        model.name(),
+                        task.name(),
+                        grid.name(),
+                        baseline.name(),
+                        r.carbon_per_request_g,
+                        r.mean_cache_tb,
+                        r.sim.slo.attainment() * 100.0,
+                        if baseline == Baseline::GreenCache {
+                            format!("  saves {saving:.1}% vs Full")
+                        } else {
+                            String::new()
+                        }
+                    );
+                    csv.row(&[
+                        model.name().into(),
+                        task.name().into(),
+                        grid.name().into(),
+                        baseline.name().into(),
+                        format!("{:.4}", r.carbon_per_request_g),
+                        format!("{:.2}", r.mean_cache_tb),
+                        format!("{:.4}", r.sim.slo.attainment()),
+                        format!("{saving:.2}"),
+                    ]);
+                }
+            }
+        }
+    }
+    csv
+}
+
+/// Fig. 13: P90 TTFT/TPOT per hour against the SLO thresholds.
+pub fn fig13(quick: bool) -> Csv {
+    let mut csv = Csv::new(&[
+        "grid",
+        "baseline",
+        "hour",
+        "p90_ttft_s",
+        "p90_tpot_s",
+        "ttft_slo_s",
+        "tpot_slo_s",
+    ]);
+    let mut profiles = ProfileStore::new(quick);
+    let model = Model::Llama70B;
+    let slo = model.slo(TaskKind::Conversation);
+    println!("Fig 13 — P90 latency timelines vs SLO (conversation, 70B)");
+    for grid in [Grid::Fr, Grid::Ciso] {
+        for baseline in [Baseline::NoCache, Baseline::FullCache, Baseline::GreenCache] {
+            let mut sc = DayScenario::new(model, Task::Conversation, grid, baseline);
+            if quick {
+                sc = sc.quick();
+            }
+            let r = run_day(&sc, &mut profiles);
+            let violations = r
+                .sim
+                .hours
+                .iter()
+                .filter(|h| h.p90_ttft_s > slo.ttft_s || h.p90_tpot_s > slo.tpot_s)
+                .count();
+            println!(
+                "  {:<5} {:<11}: SLO attainment {:>5.1}%, {}/{} hours with P90 over threshold",
+                grid.name(),
+                baseline.name(),
+                r.sim.slo.attainment() * 100.0,
+                violations,
+                r.sim.hours.len()
+            );
+            for h in &r.sim.hours {
+                csv.row(&[
+                    grid.name().into(),
+                    baseline.name().into(),
+                    h.hour.to_string(),
+                    format!("{:.3}", h.p90_ttft_s),
+                    format!("{:.4}", h.p90_tpot_s),
+                    format!("{}", slo.ttft_s),
+                    format!("{}", slo.tpot_s),
+                ]);
+            }
+        }
+    }
+    csv
+}
+
+/// Fig. 14: timelines of CI, rate, chosen cache size and per-prompt
+/// carbon for Full Cache vs GreenCache.
+pub fn fig14(quick: bool) -> Csv {
+    let mut csv = Csv::new(&[
+        "task",
+        "grid",
+        "baseline",
+        "hour",
+        "ci",
+        "rps",
+        "cache_tb",
+        "carbon_per_prompt_g",
+    ]);
+    let mut profiles = ProfileStore::new(quick);
+    let model = Model::Llama70B;
+    println!("Fig 14 — daily timelines (cache size adapts to CI and load)");
+    for task in [Task::Conversation, Task::Doc04] {
+        for grid in crate::ci::FIG2A_GRIDS {
+            let mut day_saving = Vec::new();
+            let mut rows: Vec<Vec<String>> = Vec::new();
+            let mut full_hours = Vec::new();
+            for baseline in [Baseline::FullCache, Baseline::GreenCache] {
+                let mut sc = DayScenario::new(model, task, grid, baseline);
+                if quick {
+                    sc = sc.quick();
+                }
+                let r = run_day(&sc, &mut profiles);
+                for h in &r.sim.hours {
+                    let per_prompt = if h.completed > 0 {
+                        h.carbon_g / h.completed as f64
+                    } else {
+                        0.0
+                    };
+                    rows.push(vec![
+                        task.name().into(),
+                        grid.name().into(),
+                        baseline.name().into(),
+                        h.hour.to_string(),
+                        format!("{:.1}", h.ci),
+                        format!("{:.3}", h.rps),
+                        format!("{:.1}", h.cache_bytes as f64 / TB),
+                        format!("{per_prompt:.4}"),
+                    ]);
+                }
+                if baseline == Baseline::FullCache {
+                    full_hours = r
+                        .sim
+                        .hours
+                        .iter()
+                        .map(|h| {
+                            if h.completed > 0 {
+                                h.carbon_g / h.completed as f64
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect();
+                } else {
+                    for (i, h) in r.sim.hours.iter().enumerate() {
+                        if i < full_hours.len() && h.completed > 0 && full_hours[i] > 0.0 {
+                            let g = h.carbon_g / h.completed as f64;
+                            day_saving.push(saving_pct(full_hours[i], g));
+                        }
+                    }
+                }
+            }
+            for row in rows {
+                csv.row(&row);
+            }
+            if !day_saving.is_empty() {
+                let avg = day_saving.iter().sum::<f64>() / day_saving.len() as f64;
+                let max = day_saving.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                println!(
+                    "  {:<26} {:<5}: hourly saving avg {avg:>5.1}%  max {max:>5.1}%",
+                    task.name(),
+                    grid.name()
+                );
+            }
+        }
+    }
+    println!("  (paper: FR avg 15.1%, max 25.3% on conversation)");
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_quick_single_cell_shape() {
+        // One grid/task/model cell of Fig 12 in quick mode: GreenCache
+        // must not exceed Full Cache carbon in the FR (greenest) grid.
+        let mut profiles = ProfileStore::new(true);
+        let full = run_day(
+            &DayScenario::new(Model::Llama70B, Task::Conversation, Grid::Fr, Baseline::FullCache)
+                .quick(),
+            &mut profiles,
+        );
+        let green = run_day(
+            &DayScenario::new(Model::Llama70B, Task::Conversation, Grid::Fr, Baseline::GreenCache)
+                .quick(),
+            &mut profiles,
+        );
+        assert!(
+            green.carbon_per_request_g <= full.carbon_per_request_g * 1.05,
+            "GreenCache {:.3} g/req should not exceed Full {:.3} in FR",
+            green.carbon_per_request_g,
+            full.carbon_per_request_g
+        );
+    }
+}

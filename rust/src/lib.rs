@@ -1,0 +1,40 @@
+//! GreenCache: carbon-aware KV-cache management for LLM serving.
+//!
+//! Reproduction of *"Cache Your Prompt When It's Green: Carbon-Aware
+//! Caching for Large Language Model Serving"* (CS.DC 2025). See DESIGN.md
+//! for the system inventory and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! The crate is the L3 coordinator of a three-layer stack:
+//!
+//! * **L1** — a Pallas causal-attention kernel (`python/compile/kernels/`),
+//!   compiled at build time.
+//! * **L2** — a tiny Llama-style JAX model (`python/compile/model.py`)
+//!   exported as fixed-shape HLO-text programs (`artifacts/`).
+//! * **L3** — this crate: loads the artifacts through PJRT ([`runtime`]),
+//!   routes/batches requests ([`coordinator`]), manages the context cache
+//!   ([`cache`]), accounts carbon ([`carbon`]), predicts carbon intensity
+//!   ([`ci`]) and load ([`load`]), sizes the cache with an ILP
+//!   ([`solver`]), and reproduces the paper's evaluation through a
+//!   calibrated cluster simulator ([`sim`] + [`profiler`]).
+//!
+//! Python never runs on the request path: after `make artifacts`, the rust
+//! binary is self-contained.
+
+pub mod cache;
+pub mod carbon;
+pub mod ci;
+pub mod coordinator;
+pub mod experiments;
+pub mod load;
+pub mod metrics;
+pub mod profiler;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,151 @@
+//! Azure-style diurnal request-rate trace (substitute for [3], see
+//! DESIGN.md §3).
+
+use crate::rng::Rng;
+
+/// Hourly request rates (requests/second) over a horizon.
+#[derive(Debug, Clone)]
+pub struct LoadTrace {
+    /// requests/second at each hour.
+    pub hourly_rps: Vec<f64>,
+}
+
+impl LoadTrace {
+    /// Synthesize `days` of hourly rates peaking at `peak_rps`.
+    ///
+    /// The shape follows the Azure/DynamoLLM characterization: low night
+    /// trough (~20 % of peak), a steep morning ramp from 7 AM, a working-
+    /// hours plateau, an evening peak around 8 PM, plus AR(1) noise and a
+    /// mild weekday/weekend modulation.
+    pub fn azure_like(days: usize, peak_rps: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed.wrapping_mul(0xA076_1D64_78BD_642F));
+        let mut hourly = Vec::with_capacity(days * 24);
+        let mut ar = 0.0f64;
+        for d in 0..days {
+            // Weekends run ~70 % of weekday volume.
+            let day_scale = if d % 7 >= 5 { 0.7 } else { 1.0 };
+            for h in 0..24 {
+                let base = Self::diurnal_shape(h as f64);
+                ar = 0.6 * ar + 0.4 * rng.normal();
+                let noisy = base * (1.0 + 0.06 * ar);
+                hourly.push((peak_rps * day_scale * noisy).max(0.01));
+            }
+        }
+        LoadTrace { hourly_rps: hourly }
+    }
+
+    /// Normalized diurnal profile in (0, 1]; peak = 1 at 20:00.
+    fn diurnal_shape(hour: f64) -> f64 {
+        // Sum of two bumps: working-hours plateau + evening peak.
+        let bump = |centre: f64, width: f64, height: f64| {
+            let mut d = hour - centre;
+            if d > 12.0 {
+                d -= 24.0;
+            }
+            if d < -12.0 {
+                d += 24.0;
+            }
+            height * (-0.5 * (d / width).powi(2)).exp()
+        };
+        let trough = 0.20;
+        let work = bump(13.0, 3.5, 0.55);
+        let evening = bump(20.0, 2.0, 0.45);
+        (trough + work + evening).min(1.0)
+    }
+
+    /// Constant-rate trace (for the fixed-rate sensitivity studies).
+    pub fn constant(hours: usize, rps: f64) -> Self {
+        LoadTrace {
+            hourly_rps: vec![rps; hours],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.hourly_rps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hourly_rps.is_empty()
+    }
+
+    pub fn at_hour(&self, h: usize) -> f64 {
+        self.hourly_rps[h % self.hourly_rps.len()]
+    }
+
+    pub fn peak(&self) -> f64 {
+        self.hourly_rps.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.hourly_rps.iter().sum::<f64>() / self.hourly_rps.len().max(1) as f64
+    }
+
+    /// Downscale so the peak equals `max_rps` (§6.1: "we downscale the
+    /// request rate of the Azure trace to match our platform's capacity").
+    pub fn downscale_to(&self, max_rps: f64) -> LoadTrace {
+        let peak = self.peak();
+        let k = if peak > 0.0 { max_rps / peak } else { 1.0 };
+        LoadTrace {
+            hourly_rps: self.hourly_rps.iter().map(|r| r * k).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_has_diurnal_structure() {
+        let t = LoadTrace::azure_like(7, 2.0, 1);
+        // Peak hour should carry ≥ 3× the trough volume.
+        let day = &t.hourly_rps[..24];
+        let max = day.iter().cloned().fold(0.0, f64::max);
+        let min = day.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min > 3.0, "diurnal ratio {}", max / min);
+        // Night hours (2-4 AM) below noon hours.
+        assert!(day[3] < day[13]);
+    }
+
+    #[test]
+    fn peak_respects_target() {
+        let t = LoadTrace::azure_like(7, 2.0, 2);
+        assert!(t.peak() <= 2.0 * 1.3, "peak {}", t.peak());
+        assert!(t.peak() >= 2.0 * 0.7, "peak {}", t.peak());
+    }
+
+    #[test]
+    fn weekend_dip() {
+        let t = LoadTrace::azure_like(14, 2.0, 3);
+        let weekday: f64 = (0..5).map(|d| t.hourly_rps[d * 24 + 13]).sum::<f64>() / 5.0;
+        let weekend: f64 = (5..7).map(|d| t.hourly_rps[d * 24 + 13]).sum::<f64>() / 2.0;
+        assert!(weekend < weekday, "weekend {weekend} weekday {weekday}");
+    }
+
+    #[test]
+    fn downscale_sets_peak() {
+        let t = LoadTrace::azure_like(3, 5.0, 4).downscale_to(1.5);
+        assert!((t.peak() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_trace() {
+        let t = LoadTrace::constant(48, 1.5);
+        assert_eq!(t.len(), 48);
+        assert!(t.hourly_rps.iter().all(|&r| r == 1.5));
+        assert_eq!(t.at_hour(100), 1.5);
+    }
+
+    #[test]
+    fn reproducible() {
+        let a = LoadTrace::azure_like(2, 1.0, 7);
+        let b = LoadTrace::azure_like(2, 1.0, 7);
+        assert_eq!(a.hourly_rps, b.hourly_rps);
+    }
+
+    #[test]
+    fn rates_positive() {
+        let t = LoadTrace::azure_like(30, 2.0, 8);
+        assert!(t.hourly_rps.iter().all(|&r| r > 0.0));
+    }
+}

@@ -1,0 +1,314 @@
+//! `greencache` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; the offline build has no clap):
+//!
+//! ```text
+//! greencache serve    [--requests N] [--cache-mb M] [--policy lcs|lru|fifo|lfu]
+//! greencache simulate [--task conv|doc04|doc07] [--grid FR|FI|ES|CISO|...]
+//!                     [--baseline none|full|green|lru-optimal] [--hours H] [--quick]
+//! greencache profile  [--task conv|doc04|doc07] [--quick]
+//! greencache decide   [--grid ES] [--hour H]
+//! greencache info
+//! ```
+
+use greencache::cache::PolicyKind;
+use greencache::ci::Grid;
+use greencache::coordinator::server::{Server, ServerConfig};
+use greencache::experiments::{run_day, Baseline, DayScenario, Model, ProfileStore, Task};
+use greencache::rng::Rng;
+use greencache::runtime::{default_artifact_dir, Engine};
+use greencache::workload::{ConversationGen, ConversationParams, Request, Workload};
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn bool(&self, key: &str) -> bool {
+        self.get(key) == Some("true")
+    }
+}
+
+fn parse_grid(s: &str) -> Grid {
+    match s.to_ascii_uppercase().as_str() {
+        "FR" => Grid::Fr,
+        "NO" => Grid::No,
+        "SE" => Grid::Se,
+        "CH" => Grid::Ch,
+        "FI" => Grid::Fi,
+        "ES" => Grid::Es,
+        "GB" => Grid::Gb,
+        "CISO" => Grid::Ciso,
+        "NL" => Grid::Nl,
+        "DE" => Grid::De,
+        "PJM" => Grid::Pjm,
+        "MISO" => Grid::Miso,
+        other => {
+            eprintln!("unknown grid {other}, using ES");
+            Grid::Es
+        }
+    }
+}
+
+fn parse_task(s: &str) -> Task {
+    match s {
+        "conv" => Task::Conversation,
+        "doc04" => Task::Doc04,
+        "doc07" => Task::Doc07,
+        other => {
+            eprintln!("unknown task {other}, using conv");
+            Task::Conversation
+        }
+    }
+}
+
+fn parse_policy(s: &str) -> PolicyKind {
+    match s {
+        "lcs" => PolicyKind::Lcs,
+        "lru" => PolicyKind::Lru,
+        "fifo" => PolicyKind::Fifo,
+        "lfu" => PolicyKind::Lfu,
+        other => {
+            eprintln!("unknown policy {other}, using lcs");
+            PolicyKind::Lcs
+        }
+    }
+}
+
+fn parse_baseline(s: &str) -> Baseline {
+    match s {
+        "none" => Baseline::NoCache,
+        "full" => Baseline::FullCache,
+        "green" => Baseline::GreenCache,
+        "lru-optimal" => Baseline::LruOptimal,
+        other => {
+            eprintln!("unknown baseline {other}, using green");
+            Baseline::GreenCache
+        }
+    }
+}
+
+fn cmd_info() -> greencache::Result<()> {
+    let dir = default_artifact_dir();
+    println!("artifact dir: {dir:?}");
+    let cfg = greencache::runtime::ModelConfig::load(&dir)?;
+    println!(
+        "model: vocab={} d_model={} layers={} heads={} window={} chunk={} (pallas kernel: {})",
+        cfg.vocab,
+        cfg.d_model,
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.max_seq,
+        cfg.chunk,
+        cfg.lowered_with_pallas_kernel
+    );
+    println!("kv bytes/token: {}", cfg.kv_bytes_per_token());
+    Ok(())
+}
+
+/// Real-model serving demo over the tiny-Llama artifacts.
+fn cmd_serve(args: &Args) -> greencache::Result<()> {
+    let n = args.usize("requests", 40);
+    let cache_mb = args.usize("cache-mb", 64);
+    let policy = parse_policy(args.get("policy").unwrap_or("lcs"));
+
+    let engine = Engine::load(&default_artifact_dir())?;
+    let model_cfg = engine.config().clone();
+    let cfg = ServerConfig {
+        cache_bytes: cache_mb as u64 * 1024 * 1024,
+        policy,
+        ..Default::default()
+    };
+    let n_new = cfg.n_new;
+    let mut server = Server::new(engine, cfg);
+
+    // Tiny-model conversation workload; prompt token ids are synthesized
+    // deterministically per (context_id, position).
+    let mut wl = ConversationGen::new(ConversationParams::tiny_model(), 5);
+    let mut rng = Rng::new(5);
+    let mut reqs: Vec<(Request, Vec<i32>)> = Vec::new();
+    while reqs.len() < n {
+        let mut r = wl.next_request(&mut rng);
+        let max_prompt = (model_cfg.max_seq - n_new) as u32;
+        let total = (r.context_tokens + r.new_tokens).min(max_prompt);
+        r.context_tokens = total.saturating_sub(r.new_tokens.min(total));
+        r.new_tokens = total - r.context_tokens;
+        if r.new_tokens == 0 {
+            continue;
+        }
+        let prompt: Vec<i32> = (0..total)
+            .map(|p| token_for(r.context_id, p, model_cfg.vocab))
+            .collect();
+        reqs.push((r, prompt));
+    }
+
+    println!(
+        "serving {} requests (cache {} MB, policy {:?})...",
+        reqs.len(),
+        cache_mb,
+        policy
+    );
+    let report = server.serve(&reqs)?;
+    println!(
+        "done in {:.2}s: {:.2} req/s, token hit rate {:.2}, request hit rate {:.2}",
+        report.wall_s, report.throughput_rps, report.token_hit_rate, report.request_hit_rate
+    );
+    let mut ttft = report.ttft.clone();
+    println!(
+        "TTFT p50 {:.3}s p90 {:.3}s; xla fraction {:.2}; carbon {:.3} g",
+        ttft.p50(),
+        ttft.p90(),
+        report.xla_fraction,
+        report.carbon.breakdown().total_g()
+    );
+    Ok(())
+}
+
+/// Deterministic synthetic token id for (conversation, position).
+fn token_for(ctx_id: u64, pos: u32, vocab: usize) -> i32 {
+    let mut h = ctx_id
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(pos as u64);
+    h ^= h >> 29;
+    ((h % (vocab as u64 - 1)) + 1) as i32
+}
+
+fn cmd_simulate(args: &Args) -> greencache::Result<()> {
+    let task = parse_task(args.get("task").unwrap_or("conv"));
+    let grid = parse_grid(args.get("grid").unwrap_or("ES"));
+    let baseline = parse_baseline(args.get("baseline").unwrap_or("green"));
+    let hours = args.usize("hours", 24);
+    let quick = args.bool("quick");
+
+    let mut sc = DayScenario::new(Model::Llama70B, task, grid, baseline);
+    sc.hours = hours;
+    if quick {
+        sc = sc.quick();
+    }
+    let mut profiles = ProfileStore::new(quick);
+    println!(
+        "simulating {} on {} grid with {} ({}h)...",
+        task.name(),
+        grid.name(),
+        baseline.name(),
+        sc.hours
+    );
+    let r = run_day(&sc, &mut profiles);
+    println!(
+        "completed {} requests; carbon {:.3} g/request; mean cache {:.1} TB; SLO attainment {:.1}%",
+        r.sim.completed,
+        r.carbon_per_request_g,
+        r.mean_cache_tb,
+        r.sim.slo.attainment() * 100.0
+    );
+    println!(
+        "mean TTFT {:.2}s, mean TPOT {:.3}s, token hit rate {:.2}",
+        r.sim.mean_ttft_s, r.sim.mean_tpot_s, r.sim.token_hit_rate
+    );
+    if !r.decisions.is_empty() {
+        let avg: f64 = r.decisions.iter().map(|d| d.solve_time_s).sum::<f64>()
+            / r.decisions.len() as f64;
+        println!("{} resize decisions, avg solve {:.4}s", r.decisions.len(), avg);
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> greencache::Result<()> {
+    let task = parse_task(args.get("task").unwrap_or("conv"));
+    let quick = args.bool("quick");
+    let mut profiles = ProfileStore::new(quick);
+    let table = profiles.get(Model::Llama70B, task, PolicyKind::Lcs).clone();
+    println!("profile for {} (rates x sizes):", task.name());
+    print!("{:>8}", "rps\\TB");
+    for &s in &table.sizes_tb {
+        print!("{s:>9}");
+    }
+    println!();
+    for (ri, &rate) in table.rates.iter().enumerate() {
+        print!("{rate:>8.2}");
+        for si in 0..table.sizes_tb.len() {
+            let c = table.cell(ri, si);
+            print!("{:>9.2}", c.mean_ttft_s);
+        }
+        println!("  (TTFT s)");
+    }
+    Ok(())
+}
+
+fn cmd_decide(args: &Args) -> greencache::Result<()> {
+    use greencache::coordinator::{GreenCacheConfig, GreenCacheController};
+    let grid = parse_grid(args.get("grid").unwrap_or("ES"));
+    let mut profiles = ProfileStore::new(true);
+    let profile = profiles
+        .get(Model::Llama70B, Task::Conversation, PolicyKind::Lcs)
+        .clone();
+    let ci_hist = grid.trace(4, 1).hourly;
+    let load_hist = greencache::load::LoadTrace::azure_like(4, 0.9, 1).hourly_rps;
+    let mut ctl = GreenCacheController::new(
+        GreenCacheConfig::default_70b(),
+        profile,
+        ci_hist,
+        load_hist,
+        96,
+    );
+    let d = ctl.decide(args.usize("hour", 96));
+    println!(
+        "grid {}: choose {} TB (solve {:.4}s, {} DP transitions{})",
+        grid.name(),
+        d.chosen_tb,
+        d.solve_time_s,
+        d.nodes_explored,
+        if d.fallback { ", FALLBACK" } else { "" }
+    );
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    let result = match cmd {
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "profile" => cmd_profile(&args),
+        "decide" => cmd_decide(&args),
+        "info" => cmd_info(),
+        _ => {
+            println!("usage: greencache <serve|simulate|profile|decide|info> [--flags]");
+            println!("see rust/src/main.rs docs for flags");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

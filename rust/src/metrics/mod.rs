@@ -1,0 +1,229 @@
+//! Latency/attainment metrics: percentile reservoirs and SLO counters.
+//!
+//! The paper reports P90 TTFT / TPOT against SLO thresholds with a ρ=0.9
+//! attainment target (§4.2, Fig. 13). [`LatencyStats`] stores exact
+//! samples (our runs are ≤ a few hundred thousand requests, so exact
+//! percentiles are affordable) and [`SloTracker`] counts threshold hits.
+
+/// Service-level objectives for one task/model pairing (§6.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slo {
+    /// TTFT threshold, seconds.
+    pub ttft_s: f64,
+    /// TPOT threshold, seconds.
+    pub tpot_s: f64,
+    /// Required attainment fraction ρ (0.9 in the paper).
+    pub rho: f64,
+}
+
+impl Slo {
+    /// §6.1: conversation task on the 70B-analogue platform.
+    pub fn conv_70b() -> Self {
+        Slo { ttft_s: 2.5, tpot_s: 0.2, rho: 0.9 }
+    }
+    /// §6.1: conversation task on the 8B-analogue platform.
+    pub fn conv_8b() -> Self {
+        Slo { ttft_s: 0.5, tpot_s: 0.15, rho: 0.9 }
+    }
+    /// §6.1: document comprehension, 70B (relaxed TTFT 15 s).
+    pub fn doc_70b() -> Self {
+        Slo { ttft_s: 15.0, tpot_s: 0.2, rho: 0.9 }
+    }
+    /// §6.1: document comprehension, 8B.
+    pub fn doc_8b() -> Self {
+        Slo { ttft_s: 2.5, tpot_s: 0.15, rho: 0.9 }
+    }
+}
+
+/// Exact-sample latency statistics.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in [0, 100]; nearest-rank definition.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "no samples");
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+        self.samples[rank.min(n) - 1]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p90(&mut self) -> f64 {
+        self.percentile(90.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Fraction of samples ≤ `threshold`.
+    pub fn attainment(&self, threshold: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 1.0;
+        }
+        self.samples.iter().filter(|&&x| x <= threshold).count() as f64
+            / self.samples.len() as f64
+    }
+}
+
+/// Joint TTFT+TPOT SLO attainment over a run (Eq. 6's z variables).
+#[derive(Debug, Clone)]
+pub struct SloTracker {
+    pub slo: Slo,
+    pub ttft: LatencyStats,
+    pub tpot: LatencyStats,
+    /// Requests meeting BOTH thresholds (z_TTFT ∧ z_TPOT).
+    both_ok: usize,
+    total: usize,
+}
+
+impl SloTracker {
+    pub fn new(slo: Slo) -> Self {
+        SloTracker {
+            slo,
+            ttft: LatencyStats::new(),
+            tpot: LatencyStats::new(),
+            both_ok: 0,
+            total: 0,
+        }
+    }
+
+    pub fn record(&mut self, ttft_s: f64, tpot_s: f64) {
+        self.ttft.record(ttft_s);
+        self.tpot.record(tpot_s);
+        self.total += 1;
+        if ttft_s <= self.slo.ttft_s && tpot_s <= self.slo.tpot_s {
+            self.both_ok += 1;
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Joint attainment fraction.
+    pub fn attainment(&self) -> f64 {
+        if self.total == 0 {
+            1.0
+        } else {
+            self.both_ok as f64 / self.total as f64
+        }
+    }
+
+    /// Does this run satisfy the ρ target?
+    pub fn meets_slo(&self) -> bool {
+        self.attainment() >= self.slo.rho
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut s = LatencyStats::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0] {
+            s.record(v);
+        }
+        assert_eq!(s.p50(), 5.0);
+        assert_eq!(s.p90(), 9.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+        assert_eq!(s.percentile(1.0), 1.0);
+        assert_eq!(s.mean(), 5.5);
+        assert_eq!(s.max(), 10.0);
+    }
+
+    #[test]
+    fn percentile_interleaved_with_records() {
+        let mut s = LatencyStats::new();
+        s.record(5.0);
+        assert_eq!(s.p50(), 5.0);
+        s.record(1.0);
+        s.record(9.0);
+        assert_eq!(s.p50(), 5.0);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn attainment_fraction() {
+        let mut s = LatencyStats::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.record(v);
+        }
+        assert_eq!(s.attainment(2.5), 0.5);
+        assert_eq!(s.attainment(0.5), 0.0);
+        assert_eq!(s.attainment(10.0), 1.0);
+    }
+
+    #[test]
+    fn slo_joint_attainment() {
+        let mut t = SloTracker::new(Slo { ttft_s: 2.0, tpot_s: 0.2, rho: 0.9 });
+        t.record(1.0, 0.1); // ok
+        t.record(1.0, 0.3); // tpot violation
+        t.record(3.0, 0.1); // ttft violation
+        t.record(1.5, 0.2); // ok (boundary inclusive)
+        assert_eq!(t.attainment(), 0.5);
+        assert!(!t.meets_slo());
+        assert_eq!(t.total(), 4);
+    }
+
+    #[test]
+    fn slo_empty_run_meets() {
+        let t = SloTracker::new(Slo::conv_70b());
+        assert!(t.meets_slo());
+    }
+
+    #[test]
+    fn paper_slo_values() {
+        assert_eq!(Slo::conv_70b(), Slo { ttft_s: 2.5, tpot_s: 0.2, rho: 0.9 });
+        assert_eq!(Slo::doc_70b().ttft_s, 15.0);
+        assert_eq!(Slo::conv_8b().ttft_s, 0.5);
+        assert_eq!(Slo::doc_8b().ttft_s, 2.5);
+    }
+}

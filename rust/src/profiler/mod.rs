@@ -1,0 +1,303 @@
+//! Cache performance profiler (§5.2): sweep (request rate × cache size),
+//! record TTFT/TPOT/power/attainment per combination.
+//!
+//! The paper's profiler samples prompts on the real cluster after cache
+//! warm-up under the LCS policy; ours runs the calibrated simulator for a
+//! short window per combination. The resulting [`ProfileTable`] is what
+//! the constraint solver (§5.4) consumes: for a predicted (rate, CI) it
+//! yields each candidate cache size's expected energy, latency and SLO
+//! attainment — the Eq. 6 coefficients.
+
+use crate::cache::{CacheManager, PolicyKind};
+use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
+use crate::metrics::Slo;
+use crate::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig};
+use crate::workload::TaskKind;
+
+/// One profiled (rate, size) cell.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProfileCell {
+    pub rate_rps: f64,
+    pub cache_tb: u32,
+    pub mean_ttft_s: f64,
+    pub mean_tpot_s: f64,
+    pub p90_ttft_s: f64,
+    pub p90_tpot_s: f64,
+    /// Fraction of requests meeting the TTFT / TPOT thresholds.
+    pub ttft_attain: f64,
+    pub tpot_attain: f64,
+    /// Mean platform power, watts.
+    pub mean_power_w: f64,
+    pub token_hit_rate: f64,
+}
+
+/// The (rate × size) profile grid for one task/model pairing.
+#[derive(Debug, Clone)]
+pub struct ProfileTable {
+    pub task: TaskKind,
+    pub rates: Vec<f64>,
+    pub sizes_tb: Vec<u32>,
+    /// Row-major `cells[rate_idx][size_idx]`.
+    pub cells: Vec<Vec<ProfileCell>>,
+}
+
+impl ProfileTable {
+    pub fn cell(&self, rate_idx: usize, size_idx: usize) -> &ProfileCell {
+        &self.cells[rate_idx][size_idx]
+    }
+
+    /// Nearest-rate row for a predicted rate (the solver's lookup; the
+    /// grid is dense enough that interpolation noise is below profiling
+    /// noise, cf. §6.5's profiler-error analysis).
+    pub fn row_for_rate(&self, rate_rps: f64) -> &[ProfileCell] {
+        let mut best = 0;
+        let mut bd = f64::INFINITY;
+        for (i, &r) in self.rates.iter().enumerate() {
+            let d = (r - rate_rps).abs();
+            if d < bd {
+                bd = d;
+                best = i;
+            }
+        }
+        &self.cells[best]
+    }
+
+    /// Index of the profiled size nearest to `tb` (the solver's
+    /// candidate grid need not exactly match the profiled grid).
+    pub fn nearest_size_idx(&self, tb: u32) -> usize {
+        let mut best = 0;
+        let mut bd = u32::MAX;
+        for (i, &s) in self.sizes_tb.iter().enumerate() {
+            let d = s.abs_diff(tb);
+            if d < bd {
+                bd = d;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Linear interpolation between the two bracketing rate rows for a
+    /// given size index.
+    pub fn interpolate(&self, rate_rps: f64, size_idx: usize) -> ProfileCell {
+        let n = self.rates.len();
+        if rate_rps <= self.rates[0] {
+            return self.cells[0][size_idx];
+        }
+        if rate_rps >= self.rates[n - 1] {
+            return self.cells[n - 1][size_idx];
+        }
+        let hi = self.rates.partition_point(|&r| r < rate_rps).max(1);
+        let lo = hi - 1;
+        let w = (rate_rps - self.rates[lo]) / (self.rates[hi] - self.rates[lo]);
+        let (a, b) = (self.cells[lo][size_idx], self.cells[hi][size_idx]);
+        let mix = |x: f64, y: f64| x + (y - x) * w;
+        ProfileCell {
+            rate_rps,
+            cache_tb: a.cache_tb,
+            mean_ttft_s: mix(a.mean_ttft_s, b.mean_ttft_s),
+            mean_tpot_s: mix(a.mean_tpot_s, b.mean_tpot_s),
+            p90_ttft_s: mix(a.p90_ttft_s, b.p90_ttft_s),
+            p90_tpot_s: mix(a.p90_tpot_s, b.p90_tpot_s),
+            ttft_attain: mix(a.ttft_attain, b.ttft_attain),
+            tpot_attain: mix(a.tpot_attain, b.tpot_attain),
+            mean_power_w: mix(a.mean_power_w, b.mean_power_w),
+            token_hit_rate: mix(a.token_hit_rate, b.token_hit_rate),
+        }
+    }
+}
+
+/// Profiler configuration.
+pub struct ProfilerConfig {
+    pub cost: CostModel,
+    pub power: PowerModel,
+    pub slo: Slo,
+    pub kv_bytes_per_token: u64,
+    pub policy: PolicyKind,
+    /// Cache sizes to sweep, TB.
+    pub sizes_tb: Vec<u32>,
+    /// Request rates to sweep, rps.
+    pub rates: Vec<f64>,
+    /// Warm-up prompts before measuring (paper: 200 k conv / 50 k doc).
+    pub warm_prompts: usize,
+    /// Measurement window per cell, simulated hours (≥ 1).
+    pub window_hours: usize,
+    pub seed: u64,
+}
+
+impl ProfilerConfig {
+    /// §6.1 defaults for the 70B conversation task.
+    pub fn conv_70b() -> Self {
+        ProfilerConfig {
+            cost: CostModel::llama70b_4xl40(),
+            power: PowerModel::default(),
+            slo: Slo::conv_70b(),
+            kv_bytes_per_token: crate::cache::KV_BYTES_PER_TOKEN_70B,
+            policy: PolicyKind::Lcs,
+            sizes_tb: (0..=16).collect(),
+            rates: vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.8],
+            warm_prompts: 30_000,
+            window_hours: 1,
+            seed: 7,
+        }
+    }
+}
+
+/// Run the sweep. `make_workload` builds a fresh workload per cell so
+/// cells are independent (the paper uses distinct profiling prompt sets).
+pub fn profile(
+    cfg: &ProfilerConfig,
+    task: TaskKind,
+    make_workload: &dyn Fn(u64) -> Box<dyn crate::workload::Workload>,
+) -> ProfileTable {
+    let mut cells = Vec::with_capacity(cfg.rates.len());
+    for (ri, &rate) in cfg.rates.iter().enumerate() {
+        let mut row = Vec::with_capacity(cfg.sizes_tb.len());
+        for (si, &size) in cfg.sizes_tb.iter().enumerate() {
+            let seed = cfg.seed ^ ((ri as u64) << 32) ^ (si as u64);
+            let mut wl = make_workload(seed);
+            let mut cache = CacheManager::new(
+                size as u64 * TB as u64,
+                cfg.kv_bytes_per_token,
+                cfg.policy,
+            );
+            if size > 0 {
+                warm_cache(wl.as_mut(), &mut cache, cfg.warm_prompts, seed);
+            }
+            let sim_cfg = SimConfig {
+                cost: cfg.cost.clone(),
+                power: cfg.power.clone(),
+                slo: cfg.slo,
+                interval_s: 3600.0,
+                hours: cfg.window_hours.max(1),
+                seed,
+            };
+            // CI is irrelevant for the performance/power profile; carbon
+            // coefficients are assembled later from (power, CI).
+            let acc = CarbonAccountant::new(EmbodiedModel::default());
+            let r = simulate(
+                &sim_cfg,
+                wl.as_mut(),
+                &|_| rate,
+                &|_| 100.0,
+                &mut cache,
+                acc,
+                &mut FixedController,
+            );
+            let mut ttft = r.slo.ttft.clone();
+            let mut tpot = r.slo.tpot.clone();
+            row.push(ProfileCell {
+                rate_rps: rate,
+                cache_tb: size,
+                mean_ttft_s: ttft.mean(),
+                mean_tpot_s: tpot.mean(),
+                p90_ttft_s: if ttft.is_empty() { 0.0 } else { ttft.p90() },
+                p90_tpot_s: if tpot.is_empty() { 0.0 } else { tpot.p90() },
+                ttft_attain: ttft.attainment(cfg.slo.ttft_s),
+                tpot_attain: tpot.attainment(cfg.slo.tpot_s),
+                mean_power_w: if r.accountant.elapsed_s() > 0.0 {
+                    r.accountant.energy_j() / r.accountant.elapsed_s()
+                } else {
+                    0.0
+                },
+                token_hit_rate: r.token_hit_rate,
+            });
+        }
+        cells.push(row);
+    }
+    ProfileTable {
+        task,
+        rates: cfg.rates.clone(),
+        sizes_tb: cfg.sizes_tb.clone(),
+        cells,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ConversationGen, ConversationParams, Workload};
+
+    fn quick_cfg() -> ProfilerConfig {
+        ProfilerConfig {
+            sizes_tb: vec![0, 4, 16],
+            rates: vec![0.2, 0.5],
+            warm_prompts: 8_000,
+            window_hours: 1,
+            ..ProfilerConfig::conv_70b()
+        }
+    }
+
+    fn conv_factory(seed: u64) -> Box<dyn Workload> {
+        Box::new(ConversationGen::new(ConversationParams::default(), seed))
+    }
+
+    #[test]
+    fn profile_matches_fig11_trends() {
+        let table = profile(&quick_cfg(), TaskKind::Conversation, &conv_factory);
+        // Fig. 11 trends: larger caches reduce TTFT at fixed rate...
+        for r in 0..table.rates.len() {
+            let no_cache = table.cell(r, 0);
+            let full = table.cell(r, 2);
+            assert!(
+                full.mean_ttft_s < no_cache.mean_ttft_s,
+                "rate {}: full-cache TTFT {} !< no-cache {}",
+                table.rates[r],
+                full.mean_ttft_s,
+                no_cache.mean_ttft_s
+            );
+            assert!(full.token_hit_rate > 0.2);
+            assert_eq!(no_cache.token_hit_rate, 0.0);
+        }
+        // ...and higher rates raise latency at fixed size.
+        for s in 0..table.sizes_tb.len() {
+            assert!(
+                table.cell(1, s).mean_ttft_s >= table.cell(0, s).mean_ttft_s * 0.8,
+                "size {}TB: latency should not fall sharply with load",
+                table.sizes_tb[s]
+            );
+        }
+    }
+
+    #[test]
+    fn attainment_decreases_without_cache_at_load() {
+        let table = profile(&quick_cfg(), TaskKind::Conversation, &conv_factory);
+        let hot = table.cell(1, 0); // 0.5 rps, no cache: near capacity
+        let cached = table.cell(1, 2);
+        assert!(
+            cached.ttft_attain > hot.ttft_attain,
+            "cache must improve TTFT attainment ({} vs {})",
+            cached.ttft_attain,
+            hot.ttft_attain
+        );
+    }
+
+    #[test]
+    fn power_scales_with_cache_allocation() {
+        let table = profile(&quick_cfg(), TaskKind::Conversation, &conv_factory);
+        // SSD idle draw makes the 16 TB config strictly hotter than 0 TB
+        // only if compute savings don't dominate; at least both positive.
+        for r in 0..table.rates.len() {
+            for s in 0..table.sizes_tb.len() {
+                assert!(table.cell(r, s).mean_power_w > 300.0);
+                assert!(table.cell(r, s).mean_power_w < 2000.0);
+            }
+        }
+    }
+
+    #[test]
+    fn row_lookup_and_interpolation() {
+        let table = profile(&quick_cfg(), TaskKind::Conversation, &conv_factory);
+        let row = table.row_for_rate(0.21);
+        assert_eq!(row[0].rate_rps, 0.2);
+        let mid = table.interpolate(0.35, 1);
+        let (a, b) = (table.cell(0, 1), table.cell(1, 1));
+        assert!(
+            (mid.mean_ttft_s - (a.mean_ttft_s + b.mean_ttft_s) / 2.0).abs()
+                < (a.mean_ttft_s - b.mean_ttft_s).abs()
+        );
+        // Clamping at the edges.
+        assert_eq!(table.interpolate(0.01, 1).mean_ttft_s, a.mean_ttft_s);
+        assert_eq!(table.interpolate(9.0, 1).mean_ttft_s, b.mean_ttft_s);
+    }
+}

@@ -1,0 +1,275 @@
+//! The PJRT engine: compile-once, execute-many request path.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::{KvState, ModelConfig};
+
+/// Timing + output of a prefill pass.
+#[derive(Debug, Clone)]
+pub struct PrefillResult {
+    pub logits: Vec<f32>,
+    /// Number of `prefill_chunk` executions (cache hits reduce this).
+    pub chunks_executed: usize,
+    pub wall: Duration,
+}
+
+/// Timing + output of a full generate call.
+#[derive(Debug, Clone)]
+pub struct GenerationResult {
+    pub tokens: Vec<i32>,
+    /// Time To First Token: prefill + first sample.
+    pub ttft: Duration,
+    /// Mean Time Per Output Token over the decode phase.
+    pub tpot: Duration,
+    pub chunks_executed: usize,
+    pub chunks_skipped: usize,
+    pub decode_steps: usize,
+}
+
+/// Compiled model: a PJRT CPU client plus the two AOT programs.
+///
+/// Not `Sync`: PJRT handles are raw pointers. The coordinator owns one
+/// engine per worker thread and communicates over channels (see
+/// `coordinator::server`).
+pub struct Engine {
+    cfg: ModelConfig,
+    #[allow(dead_code)]
+    client: PjRtClient,
+    prefill_exe: PjRtLoadedExecutable,
+    decode_exe: PjRtLoadedExecutable,
+    /// Cumulative XLA execute time (for perf accounting).
+    pub xla_time: std::cell::Cell<Duration>,
+}
+
+impl Engine {
+    /// Load + compile both programs from `artifact_dir`.
+    pub fn load(artifact_dir: &Path) -> crate::Result<Self> {
+        let cfg = ModelConfig::load(artifact_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e:?}"))?;
+        let prefill_exe = Self::compile(&client, &artifact_dir.join("prefill_chunk.hlo.txt"))?;
+        let decode_exe = Self::compile(&client, &artifact_dir.join("decode_step.hlo.txt"))?;
+        Ok(Engine {
+            cfg,
+            client,
+            prefill_exe,
+            decode_exe,
+            xla_time: std::cell::Cell::new(Duration::ZERO),
+        })
+    }
+
+    fn compile(client: &PjRtClient, path: &Path) -> crate::Result<PjRtLoadedExecutable> {
+        anyhow::ensure!(path.exists(), "missing artifact {path:?}; run `make artifacts`");
+        let proto = HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Fresh all-zero KV state.
+    pub fn empty_kv(&self) -> KvState {
+        KvState::empty(&self.cfg.kv_shape)
+    }
+
+    fn track<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.xla_time.set(self.xla_time.get() + t0.elapsed());
+        out
+    }
+
+    /// Run one `prefill_chunk` program: process `valid` tokens at
+    /// positions `start..start+valid` (tokens padded to chunk length).
+    /// KV is threaded as a `Literal` so the multi-chunk/decode loops skip
+    /// the bytes round-trip (EXPERIMENTS.md §Perf iteration 2).
+    fn run_prefill_chunk_lit(
+        &self,
+        tokens: &[i32],
+        kv_lit: Literal,
+        start: usize,
+        valid: usize,
+    ) -> crate::Result<(Literal, Vec<f32>)> {
+        let c = self.cfg.chunk;
+        anyhow::ensure!(tokens.len() == c, "chunk must be padded to {c}");
+        anyhow::ensure!(valid >= 1 && valid <= c, "valid {valid} out of range");
+        anyhow::ensure!(start + valid <= self.cfg.max_seq, "prefill overruns window");
+        let tok_lit = Literal::vec1(tokens);
+        let start_lit = Literal::from(start as i32);
+        let valid_lit = Literal::from(valid as i32);
+        let outs = self
+            .track(|| self.prefill_exe.execute::<Literal>(&[tok_lit, kv_lit, start_lit, valid_lit]))
+            .map_err(|e| anyhow::anyhow!("prefill execute: {e:?}"))?;
+        let result = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("prefill fetch: {e:?}"))?;
+        let (kv_out, logits) = result
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("prefill untuple: {e:?}"))?;
+        let logits: Vec<f32> = logits.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok((kv_out, logits))
+    }
+
+    /// One decode step on a threaded KV literal.
+    fn run_decode_step_lit(
+        &self,
+        token: i32,
+        kv_lit: Literal,
+        pos: usize,
+    ) -> crate::Result<(Literal, Vec<f32>)> {
+        let tok_lit = Literal::vec1(&[token]);
+        let pos_lit = Literal::from(pos as i32);
+        let outs = self
+            .track(|| self.decode_exe.execute::<Literal>(&[tok_lit, kv_lit, pos_lit]))
+            .map_err(|e| anyhow::anyhow!("decode execute: {e:?}"))?;
+        let result = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("decode fetch: {e:?}"))?;
+        let (logits, kv_out) = result
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("decode untuple: {e:?}"))?;
+        let logits: Vec<f32> = logits.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok((kv_out, logits))
+    }
+
+    /// Literal-threaded chunked prefill core shared by [`Self::prefill`]
+    /// and [`Self::generate`].
+    fn prefill_lit(
+        &self,
+        prompt: &[i32],
+        mut kv_lit: Literal,
+        cached_len: usize,
+    ) -> crate::Result<(Literal, Vec<f32>, usize)> {
+        let c = self.cfg.chunk;
+        let mut logits = Vec::new();
+        let mut chunks = 0usize;
+        let mut pos = cached_len;
+        while pos < prompt.len() {
+            let valid = (prompt.len() - pos).min(c);
+            let mut chunk = vec![0i32; c];
+            chunk[..valid].copy_from_slice(&prompt[pos..pos + valid]);
+            let (kv_new, l) = self.run_prefill_chunk_lit(&chunk, kv_lit, pos, valid)?;
+            kv_lit = kv_new;
+            logits = l;
+            pos += valid;
+            chunks += 1;
+        }
+        Ok((kv_lit, logits, chunks))
+    }
+
+    /// Chunked prefill of `prompt`, resuming after `kv.len` already-cached
+    /// tokens (must be a chunk multiple — cache entries snapshot at chunk
+    /// boundaries). Returns the updated KV and last-position logits.
+    pub fn prefill(
+        &self,
+        prompt: &[i32],
+        kv: &mut KvState,
+    ) -> crate::Result<PrefillResult> {
+        let t0 = Instant::now();
+        let c = self.cfg.chunk;
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(kv.len % c == 0, "cached prefix {} not chunk-aligned", kv.len);
+        anyhow::ensure!(kv.len < prompt.len(), "cached prefix covers whole prompt");
+        anyhow::ensure!(prompt.len() <= self.cfg.max_seq, "prompt exceeds context window");
+
+        let (kv_lit, logits, chunks) = self.prefill_lit(prompt, kv.to_literal()?, kv.len)?;
+        *kv = KvState::from_literal(&kv_lit, prompt.len(), &self.cfg.kv_shape)?;
+        Ok(PrefillResult {
+            logits,
+            chunks_executed: chunks,
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// One decode step at position `kv.len`; returns next-token logits.
+    pub fn decode_step(&self, token: i32, kv: &mut KvState) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(kv.len < self.cfg.max_seq, "context window full");
+        let (kv_out, logits) = self.run_decode_step_lit(token, kv.to_literal()?, kv.len)?;
+        *kv = KvState::from_literal(&kv_out, kv.len + 1, &self.cfg.kv_shape)?;
+        Ok(logits)
+    }
+
+    /// Greedy generation: chunked prefill (honouring a cached prefix in
+    /// `kv`) followed by `n_new` decode steps. Mirrors
+    /// `model.greedy_generate` on the python side.
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        n_new: usize,
+        kv: &mut KvState,
+    ) -> crate::Result<GenerationResult> {
+        anyhow::ensure!(n_new >= 1, "n_new must be >= 1");
+        anyhow::ensure!(
+            prompt.len() + n_new <= self.cfg.max_seq,
+            "prompt + n_new exceeds context window"
+        );
+        let c = self.cfg.chunk;
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(kv.len % c == 0, "cached prefix {} not chunk-aligned", kv.len);
+        anyhow::ensure!(kv.len < prompt.len(), "cached prefix covers whole prompt");
+        let skipped = kv.len / c;
+        let t0 = Instant::now();
+        // The whole generation threads the KV as a Literal; bytes are
+        // materialized exactly once at the end (§Perf iteration 2).
+        let (mut kv_lit, logits, chunks_executed) =
+            self.prefill_lit(prompt, kv.to_literal()?, kv.len)?;
+        let mut tok = argmax(&logits);
+        let ttft = t0.elapsed();
+
+        let mut tokens = vec![tok];
+        let mut pos = prompt.len();
+        let t_decode = Instant::now();
+        for _ in 0..n_new - 1 {
+            let (kv_new, logits) = self.run_decode_step_lit(tok, kv_lit, pos)?;
+            kv_lit = kv_new;
+            pos += 1;
+            tok = argmax(&logits);
+            tokens.push(tok);
+        }
+        let decode_steps = n_new - 1;
+        let tpot = if decode_steps > 0 {
+            t_decode.elapsed() / decode_steps as u32
+        } else {
+            Duration::ZERO
+        };
+        *kv = KvState::from_literal(&kv_lit, pos, &self.cfg.kv_shape)?;
+        Ok(GenerationResult {
+            tokens,
+            ttft,
+            tpot,
+            chunks_executed,
+            chunks_skipped: skipped,
+            decode_steps,
+        })
+    }
+}
+
+/// Index of the max logit (greedy sampling).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0]), 1);
+    }
+}

@@ -1,0 +1,124 @@
+//! Host-side KV cache state for one sequence.
+//!
+//! The PJRT programs take/return the full fixed-shape KV buffer
+//! `f32[L, 2, S, H, D]`; [`KvState`] pairs those bytes with the number of
+//! valid rows. Cache entries store a `KvState` snapshot at a chunk
+//! boundary; resuming from it is the context-cache hit.
+
+use xla::{ElementType, Literal};
+
+/// One sequence's KV cache: raw f32 bytes plus the valid prefix length.
+#[derive(Clone)]
+pub struct KvState {
+    /// Raw little-endian f32 buffer of shape `kv_shape`.
+    pub bytes: Vec<u8>,
+    /// Number of valid token rows (positions `0..len`).
+    pub len: usize,
+    /// The logical shape `[L, 2, S, H, D]`.
+    pub shape: Vec<usize>,
+}
+
+impl KvState {
+    /// All-zero cache (no valid rows).
+    pub fn empty(shape: &[usize]) -> Self {
+        let elems: usize = shape.iter().product();
+        KvState {
+            bytes: vec![0u8; elems * 4],
+            len: 0,
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn from_literal(lit: &Literal, len: usize, shape: &[usize]) -> crate::Result<Self> {
+        let v: Vec<f32> = lit.to_vec()?;
+        let elems: usize = shape.iter().product();
+        anyhow::ensure!(v.len() == elems, "kv literal has {} elems, want {elems}", v.len());
+        // Bulk reinterpret f32 → LE bytes (hot path: one memcpy instead of
+        // a per-element loop — see EXPERIMENTS.md §Perf). Little-endian
+        // targets only, which this build always is.
+        let mut bytes = vec![0u8; v.len() * 4];
+        debug_assert!(cfg!(target_endian = "little"));
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                v.as_ptr() as *const u8,
+                bytes.as_mut_ptr(),
+                v.len() * 4,
+            );
+        }
+        Ok(KvState { bytes, len, shape: shape.to_vec() })
+    }
+
+    pub fn to_literal(&self) -> crate::Result<Literal> {
+        Ok(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &self.shape,
+            &self.bytes,
+        )?)
+    }
+
+    /// Size in bytes of the raw buffer (what an SSD tier would store).
+    pub fn size_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// A cheap content fingerprint (FNV-1a) for tests and cache keys.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &b in &self.bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h ^ self.len as u64
+    }
+}
+
+impl std::fmt::Debug for KvState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KvState")
+            .field("len", &self.len)
+            .field("shape", &self.shape)
+            .field("bytes", &self.bytes.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zeroed() {
+        let kv = KvState::empty(&[2, 2, 8, 2, 4]);
+        assert_eq!(kv.len, 0);
+        assert_eq!(kv.bytes.len(), 2 * 2 * 8 * 2 * 4 * 4);
+        assert!(kv.bytes.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let shape = [1usize, 2, 4, 1, 2];
+        let mut kv = KvState::empty(&shape);
+        // Stamp a recognizable pattern.
+        for (i, chunk) in kv.bytes.chunks_mut(4).enumerate() {
+            chunk.copy_from_slice(&(i as f32).to_le_bytes());
+        }
+        kv.len = 3;
+        let lit = kv.to_literal().unwrap();
+        let back = KvState::from_literal(&lit, 3, &shape).unwrap();
+        assert_eq!(back.bytes, kv.bytes);
+        assert_eq!(back.len, 3);
+        assert_eq!(back.fingerprint(), kv.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_changes_with_content_and_len(){
+        let shape = [1usize, 2, 4, 1, 2];
+        let a = KvState::empty(&shape);
+        let mut b = KvState::empty(&shape);
+        b.bytes[0] = 1;
+        let mut c = KvState::empty(&shape);
+        c.len = 1;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+}

@@ -1,0 +1,182 @@
+//! PJRT runtime: load the AOT artifacts and drive the model request path.
+//!
+//! The python side (`make artifacts`) lowered two fixed-shape programs to
+//! HLO text (text, not serialized proto — xla_extension 0.5.1 rejects
+//! jax≥0.5 64-bit-id protos):
+//!
+//! * `prefill_chunk.hlo.txt`: `(tokens[C] s32, kv f32[L,2,S,H,D], start
+//!   s32, valid s32) -> (kv', logits[V])`
+//! * `decode_step.hlo.txt`: `(token[1] s32, kv, pos s32) -> (logits, kv')`
+//!
+//! [`Engine`] compiles both once on a `PjRtClient::cpu()` and exposes a
+//! sequence-level API: chunked prefill (optionally resuming from a cached
+//! KV prefix — the paper's context-cache hit) and greedy decode.
+
+mod engine;
+mod kv;
+
+pub use engine::{argmax, Engine, GenerationResult, PrefillResult};
+pub use kv::KvState;
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Model dimensions, read from `artifacts/model_config.json` (written by
+/// `python/compile/aot.py` from the same dataclass that shaped the HLO).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub max_seq: usize,
+    pub chunk: usize,
+    pub kv_shape: Vec<usize>,
+    pub kv_bytes: usize,
+    pub lowered_with_pallas_kernel: bool,
+}
+
+impl ModelConfig {
+    pub fn load(artifact_dir: &Path) -> crate::Result<Self> {
+        let path = artifact_dir.join("model_config.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {path:?}: {e}; run `make artifacts`"))?;
+        let cfg = Self::from_json(&Json::parse(&text)?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        Ok(ModelConfig {
+            vocab: v.usize_field("vocab")?,
+            d_model: v.usize_field("d_model")?,
+            n_layers: v.usize_field("n_layers")?,
+            n_heads: v.usize_field("n_heads")?,
+            d_head: v.usize_field("d_head")?,
+            d_ffn: v.usize_field("d_ffn")?,
+            max_seq: v.usize_field("max_seq")?,
+            chunk: v.usize_field("chunk")?,
+            kv_shape: v.usize_array_field("kv_shape")?,
+            kv_bytes: v.usize_field("kv_bytes")?,
+            lowered_with_pallas_kernel: v
+                .get("lowered_with_pallas_kernel")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+        })
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.max_seq % self.chunk == 0, "max_seq % chunk != 0");
+        anyhow::ensure!(
+            self.kv_shape
+                == vec![self.n_layers, 2, self.max_seq, self.n_heads, self.d_head],
+            "kv_shape mismatch: {:?}",
+            self.kv_shape
+        );
+        let elems: usize = self.kv_shape.iter().product();
+        anyhow::ensure!(self.kv_bytes == elems * 4, "kv_bytes mismatch");
+        Ok(())
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.max_seq / self.chunk
+    }
+
+    /// KV bytes per token — the unit the cache manager accounts in.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.kv_bytes / self.max_seq
+    }
+}
+
+/// Golden end-to-end vectors written by `aot.py`; used by integration
+/// tests to close the loop kernel → HLO → PJRT → tokens.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub prompt: Vec<i32>,
+    pub n_new: usize,
+    pub tokens: Vec<i32>,
+    pub prefix_len_for_hit: usize,
+}
+
+impl Golden {
+    pub fn load(artifact_dir: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(artifact_dir.join("golden.json"))?;
+        let v = Json::parse(&text)?;
+        Ok(Golden {
+            prompt: v
+                .i64_array_field("prompt")?
+                .into_iter()
+                .map(|x| x as i32)
+                .collect(),
+            n_new: v.usize_field("n_new")?,
+            tokens: v
+                .i64_array_field("tokens")?
+                .into_iter()
+                .map(|x| x as i32)
+                .collect(),
+            prefix_len_for_hit: v.usize_field("prefix_len_for_hit")?,
+        })
+    }
+}
+
+/// Default artifact directory: `$GREENCACHE_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("GREENCACHE_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| "artifacts".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 256,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_head: 32,
+            d_ffn: 256,
+            max_seq: 512,
+            chunk: 64,
+            kv_shape: vec![2, 2, 512, 4, 32],
+            kv_bytes: 2 * 2 * 512 * 4 * 32 * 4,
+            lowered_with_pallas_kernel: true,
+        }
+    }
+
+    #[test]
+    fn config_validates() {
+        cfg().validate().unwrap();
+        assert_eq!(cfg().n_chunks(), 8);
+        assert_eq!(cfg().kv_bytes_per_token(), 2 * 2 * 4 * 32 * 4);
+    }
+
+    #[test]
+    fn config_rejects_bad_kv_shape() {
+        let mut c = cfg();
+        c.kv_shape[2] = 17;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn config_rejects_unaligned_chunk() {
+        let mut c = cfg();
+        c.chunk = 100;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn config_from_json() {
+        let text = r#"{"vocab":256,"d_model":128,"n_layers":2,"n_heads":4,
+            "d_head":32,"d_ffn":256,"max_seq":512,"chunk":64,
+            "kv_shape":[2,2,512,4,32],"kv_bytes":1048576,
+            "lowered_with_pallas_kernel":true}"#;
+        let c = ModelConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        c.validate().unwrap();
+        assert!(c.lowered_with_pallas_kernel);
+    }
+}

@@ -1,0 +1,417 @@
+//! Iteration-level cluster simulator: vLLM-style continuous batching with
+//! Sarathi-style chunked prefill, context caching, power integration and
+//! SLO tracking.
+//!
+//! The simulated engine advances in *iterations* (like the real engine's
+//! scheduler loop): each iteration carries up to `prefill_budget` prompt
+//! tokens (given to the oldest admitted-but-unprefilled request) plus one
+//! decode step for every running sequence. Iteration latency and GPU
+//! utilization come from [`CostModel`]; energy integrates the
+//! [`PowerModel`]; carbon integrates Eq. 5 through [`CarbonAccountant`].
+
+use crate::cache::CacheManager;
+use crate::carbon::{CarbonAccountant, Ci, PowerModel};
+use crate::metrics::{Slo, SloTracker};
+use crate::workload::{ArrivalGen, Request, Workload};
+
+use super::cost::CostModel;
+
+/// Per-request lifecycle record.
+#[derive(Debug, Clone)]
+struct InFlight {
+    req: Request,
+    /// Prompt tokens still to prefill (after the cached prefix).
+    remaining_prefill: u32,
+    /// Decode tokens still to emit.
+    remaining_decode: u32,
+    /// One-shot KV-load penalty still to pay before prefill starts.
+    kv_load_pending: f64,
+    /// First-token timestamp (TTFT reference is arrival).
+    first_token_s: Option<f64>,
+    /// Decode timing accumulator.
+    decode_time_s: f64,
+    decode_steps: u32,
+}
+
+/// Periodic control hook: observe the last interval, resize the cache.
+pub trait Controller {
+    /// Called at every decision boundary (default: each hour). `hour` is
+    /// the index of the *completed* hour.
+    fn on_interval(&mut self, hour: usize, obs: &IntervalObservation, cache: &mut CacheManager);
+}
+
+/// A controller that never resizes (No Cache / Full Cache baselines).
+pub struct FixedController;
+impl Controller for FixedController {
+    fn on_interval(&mut self, _: usize, _: &IntervalObservation, _: &mut CacheManager) {}
+}
+
+/// What a controller gets to see at a decision boundary.
+#[derive(Debug, Clone, Default)]
+pub struct IntervalObservation {
+    pub hour: usize,
+    /// Observed request rate over the interval, rps.
+    pub observed_rps: f64,
+    /// Ground-truth CI of the interval (predictors may add error).
+    pub ci: f64,
+    /// Mean TTFT/TPOT over the interval, seconds.
+    pub mean_ttft_s: f64,
+    pub mean_tpot_s: f64,
+    pub completed: usize,
+}
+
+/// Per-hour timeline sample (drives Fig. 13/14).
+#[derive(Debug, Clone, Default)]
+pub struct HourSample {
+    pub hour: usize,
+    pub ci: f64,
+    pub rps: f64,
+    pub cache_bytes: u64,
+    pub completed: usize,
+    pub p90_ttft_s: f64,
+    pub p90_tpot_s: f64,
+    pub carbon_g: f64,
+    pub operational_g: f64,
+    pub cache_embodied_g: f64,
+    pub other_embodied_g: f64,
+}
+
+/// Full simulation outcome.
+#[derive(Debug)]
+pub struct SimResult {
+    pub slo: SloTracker,
+    pub accountant: CarbonAccountant,
+    pub completed: usize,
+    pub hours: Vec<HourSample>,
+    /// Mean prefill speedup vs the no-cache law (Fig. 3/5/6 reporting).
+    pub mean_ttft_s: f64,
+    pub mean_tpot_s: f64,
+    pub token_hit_rate: f64,
+    pub iterations: u64,
+}
+
+/// Simulator configuration.
+pub struct SimConfig {
+    pub cost: CostModel,
+    pub power: PowerModel,
+    pub slo: Slo,
+    /// Decision interval for controller callbacks, seconds (paper: 1 h).
+    pub interval_s: f64,
+    /// Simulation horizon, hours.
+    pub hours: usize,
+    /// RNG seed for workload draws.
+    pub seed: u64,
+}
+
+/// Run the simulation.
+///
+/// * `workload` draws request content; `rate_of_hour` the Poisson rate.
+/// * `ci_of_hour` gives ground-truth CI (gCO₂e/kWh) per hour.
+/// * `cache` is the provisioned context cache (capacity may be resized by
+///   the controller between intervals).
+/// * `accountant` carries the embodied model (callers configure SSD
+///   lifetime/unit carbon there for the sensitivity studies).
+pub fn simulate(
+    cfg: &SimConfig,
+    workload: &mut dyn Workload,
+    rate_of_hour: &dyn Fn(usize) -> f64,
+    ci_of_hour: &dyn Fn(usize) -> f64,
+    cache: &mut CacheManager,
+    mut accountant: CarbonAccountant,
+    controller: &mut dyn Controller,
+) -> SimResult {
+    let mut rng = crate::rng::Rng::new(cfg.seed ^ 0x51B_E11E);
+    let mut arrivals = ArrivalGen::new(cfg.seed);
+    let horizon_s = cfg.hours as f64 * 3600.0;
+
+    let mut slo = SloTracker::new(cfg.slo);
+    let mut now = 0.0f64;
+    let mut iterations = 0u64;
+
+    // Request streams.
+    let mut next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
+    let mut waiting: std::collections::VecDeque<InFlight> = Default::default();
+    let mut running: Vec<InFlight> = Vec::new();
+
+    // Interval bookkeeping.
+    let mut interval_idx = 0usize;
+    let mut interval_ttft: Vec<f64> = Vec::new();
+    let mut interval_tpot: Vec<f64> = Vec::new();
+    let mut interval_completed = 0usize;
+    let mut interval_arrived = 0usize;
+    let mut hours: Vec<HourSample> = Vec::new();
+    let mut prev_breakdown = accountant.breakdown();
+
+    let mut all_ttft_sum = 0.0f64;
+    let mut all_tpot_sum = 0.0f64;
+    let mut completed = 0usize;
+
+    // Energy accumulation within the current hour (CI is hourly-constant,
+    // §5.4.2 assumption 2).
+    let mut pending_energy_j = 0.0f64;
+    let mut pending_time_s = 0.0f64;
+
+    let flush_period =
+        |acc: &mut CarbonAccountant, energy: &mut f64, time: &mut f64, hour: usize, cache: &CacheManager| {
+            if *time > 0.0 {
+                acc.record_period(*time, *energy, Ci(ci_of_hour(hour)), cache.capacity_bytes() as f64);
+                *energy = 0.0;
+                *time = 0.0;
+            }
+        };
+
+    while now < horizon_s || !running.is_empty() || !waiting.is_empty() {
+        let hour = (now / 3600.0) as usize;
+
+        // Interval boundary: controller decision + timeline sample.
+        while now >= (interval_idx + 1) as f64 * cfg.interval_s {
+            let interval_start_hour =
+                ((interval_idx as f64 * cfg.interval_s) / 3600.0) as usize;
+            flush_period(&mut accountant, &mut pending_energy_j, &mut pending_time_s, hour.min(cfg.hours - 1), cache);
+            let b = accountant.breakdown();
+            let delta_op = b.operational_g - prev_breakdown.operational_g;
+            let delta_cache = b.cache_embodied_g - prev_breakdown.cache_embodied_g;
+            let delta_other = b.other_embodied_g - prev_breakdown.other_embodied_g;
+            prev_breakdown = b;
+
+            let mut tt = crate::metrics::LatencyStats::new();
+            for &x in &interval_ttft {
+                tt.record(x);
+            }
+            let mut tp = crate::metrics::LatencyStats::new();
+            for &x in &interval_tpot {
+                tp.record(x);
+            }
+            let obs = IntervalObservation {
+                hour: interval_idx,
+                observed_rps: interval_arrived as f64 / cfg.interval_s,
+                ci: ci_of_hour(interval_start_hour),
+                mean_ttft_s: if interval_ttft.is_empty() {
+                    0.0
+                } else {
+                    interval_ttft.iter().sum::<f64>() / interval_ttft.len() as f64
+                },
+                mean_tpot_s: if interval_tpot.is_empty() {
+                    0.0
+                } else {
+                    interval_tpot.iter().sum::<f64>() / interval_tpot.len() as f64
+                },
+                completed: interval_completed,
+            };
+            hours.push(HourSample {
+                hour: interval_idx,
+                ci: ci_of_hour(interval_start_hour),
+                rps: obs.observed_rps,
+                cache_bytes: cache.capacity_bytes(),
+                completed: interval_completed,
+                p90_ttft_s: if tt.is_empty() { 0.0 } else { tt.p90() },
+                p90_tpot_s: if tp.is_empty() { 0.0 } else { tp.p90() },
+                carbon_g: delta_op + delta_cache + delta_other,
+                operational_g: delta_op,
+                cache_embodied_g: delta_cache,
+                other_embodied_g: delta_other,
+            });
+            controller.on_interval(interval_idx, &obs, cache);
+            interval_idx += 1;
+            interval_ttft.clear();
+            interval_tpot.clear();
+            interval_completed = 0;
+            interval_arrived = 0;
+        }
+
+        // Admit arrivals up to `now`.
+        while next_arrival <= now && next_arrival < horizon_s {
+            let mut req = workload.next_request(&mut rng);
+            req.arrival_s = next_arrival;
+            interval_arrived += 1;
+            // Cache lookup at admission (the router's prefix match).
+            let hit = cache.lookup(&req, next_arrival);
+            let computed = req.prompt_tokens() - hit.hit_tokens;
+            waiting.push_back(InFlight {
+                kv_load_pending: cfg.cost.kv_load_s(hit.hit_tokens),
+                remaining_prefill: computed.max(1),
+                remaining_decode: req.output_tokens.max(1),
+                first_token_s: None,
+                decode_time_s: 0.0,
+                decode_steps: 0,
+                req,
+            });
+            next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
+        }
+
+        // Idle: jump to the next arrival (accounting idle power).
+        if running.is_empty() && waiting.is_empty() {
+            if next_arrival >= horizon_s && now >= horizon_s {
+                break;
+            }
+            let target = next_arrival.min(horizon_s).max(now);
+            let idle = target - now;
+            if idle > 0.0 {
+                let p = cfg.power.sample(
+                    0.0,
+                    0.05,
+                    cache.capacity_bytes() as f64 / 1e12,
+                    0.0,
+                );
+                pending_energy_j += p.total_w() * idle;
+                pending_time_s += idle;
+                now = target;
+            }
+            if next_arrival >= horizon_s && waiting.is_empty() && running.is_empty() {
+                // Horizon reached with an empty system.
+                if now >= horizon_s {
+                    break;
+                }
+            }
+            continue;
+        }
+
+        // Schedule one iteration: chunked prefill for the head-of-line
+        // waiting request (if batch has room), decode for all running.
+        let mut prefill_tokens = 0u32;
+        let mut kv_load_s = 0.0f64;
+        if running.len() < cfg.cost.max_batch {
+            if let Some(head) = waiting.front_mut() {
+                // Pay the KV load once, at prefill start.
+                if head.kv_load_pending > 0.0 {
+                    kv_load_s = head.kv_load_pending;
+                    head.kv_load_pending = 0.0;
+                }
+                let take = head.remaining_prefill.min(cfg.cost.prefill_budget);
+                head.remaining_prefill -= take;
+                prefill_tokens = take;
+            }
+        }
+
+        let batch = running.len();
+        let t_iter = cfg.cost.iteration_s(prefill_tokens, batch) + kv_load_s;
+
+        // Power/energy for this iteration.
+        let gpu_util = cfg.cost.gpu_util(prefill_tokens, batch);
+        let cpu_util = 0.15 + 0.25 * (batch as f64 / cfg.cost.max_batch as f64).min(1.0);
+        let ssd_active = if kv_load_s > 0.0 { (kv_load_s / t_iter).min(1.0) } else { 0.05 };
+        let p = cfg.power.sample(
+            gpu_util,
+            cpu_util,
+            cache.capacity_bytes() as f64 / 1e12,
+            ssd_active,
+        );
+        pending_energy_j += p.total_w() * t_iter;
+        pending_time_s += t_iter;
+        now += t_iter;
+        iterations += 1;
+
+        // Decode progress for the sequences that were in the batch this
+        // iteration (captured in `batch` — a request promoted below does
+        // not decode in the iteration that finished its prefill).
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, fly) in running.iter_mut().enumerate() {
+            fly.remaining_decode -= 1;
+            fly.decode_time_s += t_iter;
+            fly.decode_steps += 1;
+            if fly.remaining_decode == 0 {
+                finished.push(i);
+            }
+        }
+        let mut complete =
+            |fly: InFlight,
+             now: f64,
+             slo: &mut SloTracker,
+             interval_tpot: &mut Vec<f64>,
+             interval_completed: &mut usize,
+             cache: &mut CacheManager| {
+                let ttft = fly.first_token_s.unwrap() - fly.req.arrival_s;
+                let tpot = if fly.decode_steps > 0 {
+                    fly.decode_time_s / fly.decode_steps as f64
+                } else {
+                    0.0
+                };
+                slo.record(ttft, tpot);
+                interval_tpot.push(tpot);
+                all_tpot_sum += tpot;
+                *interval_completed += 1;
+                completed += 1;
+                // Admit the served context into the cache: context + this
+                // turn's prompt + generated reply become reusable KV
+                // (CachedAttention-style write-through).
+                let cached_tokens = fly.req.prompt_tokens() + fly.req.output_tokens;
+                cache.admit(&fly.req, cached_tokens, None, now);
+            };
+        for &i in finished.iter().rev() {
+            let fly = running.swap_remove(i);
+            complete(fly, now, &mut slo, &mut interval_tpot, &mut interval_completed, cache);
+        }
+
+        // Promote the head waiting request if its prefill completed. The
+        // prefill itself emits the first token (remaining_decode counts
+        // the rest of the output).
+        if prefill_tokens > 0 || kv_load_s > 0.0 {
+            let done = waiting
+                .front()
+                .map(|h| h.remaining_prefill == 0)
+                .unwrap_or(false);
+            if done {
+                let mut fly = waiting.pop_front().unwrap();
+                fly.first_token_s = Some(now);
+                let ttft = now - fly.req.arrival_s;
+                interval_ttft.push(ttft);
+                all_ttft_sum += ttft;
+                fly.remaining_decode -= 1; // first token emitted by prefill
+                if fly.remaining_decode == 0 {
+                    complete(fly, now, &mut slo, &mut interval_tpot, &mut interval_completed, cache);
+                } else {
+                    running.push(fly);
+                }
+            }
+        }
+
+        // Safety: simulations must terminate even under overload.
+        if iterations > 500_000_000 {
+            break;
+        }
+    }
+
+    // Flush the tail accounting period.
+    let last_hour = ((now / 3600.0) as usize).min(cfg.hours.saturating_sub(1));
+    if pending_time_s > 0.0 {
+        accountant.record_period(
+            pending_time_s,
+            pending_energy_j,
+            Ci(ci_of_hour(last_hour)),
+            cache.capacity_bytes() as f64,
+        );
+    }
+
+    let mean_ttft_s = if completed > 0 { all_ttft_sum / completed as f64 } else { 0.0 };
+    let mean_tpot_s = if completed > 0 { all_tpot_sum / completed as f64 } else { 0.0 };
+    SimResult {
+        slo,
+        accountant,
+        completed,
+        hours,
+        mean_ttft_s,
+        mean_tpot_s,
+        token_hit_rate: cache.stats().token_hit_rate(),
+        iterations,
+    }
+}
+
+/// Warm the cache with `n` requests (the paper initializes with 200 k
+/// prompts before measuring, §3): requests flow through lookup+admit with
+/// no latency simulation.
+pub fn warm_cache(
+    workload: &mut dyn Workload,
+    cache: &mut CacheManager,
+    n: usize,
+    seed: u64,
+) {
+    let mut rng = crate::rng::Rng::new(seed ^ 0x3A3A);
+    let mut t = -1.0 * n as f64; // warmup happens "before time zero"
+    for _ in 0..n {
+        let req = workload.next_request(&mut rng);
+        cache.lookup(&req, t);
+        let cached = req.prompt_tokens() + req.output_tokens;
+        cache.admit(&req, cached, None, t);
+        t += 1.0;
+    }
+}

@@ -1,0 +1,209 @@
+//! Calibrated discrete-event serving simulator (DESIGN.md §3).
+//!
+//! Reproduces the paper's evaluation at the paper's scale: a vLLM-style
+//! continuous-batching engine with chunked prefill, context caching, a
+//! component power model and Eq. 5 carbon integration. Latency/power laws
+//! are calibrated to the paper's reported anchors (see [`CostModel`]).
+
+mod cost;
+mod engine;
+
+pub use cost::CostModel;
+pub use engine::{
+    simulate, warm_cache, Controller, FixedController, HourSample,
+    IntervalObservation, SimConfig, SimResult,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{CacheManager, PolicyKind, KV_BYTES_PER_TOKEN_70B};
+    use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
+    use crate::metrics::Slo;
+    use crate::workload::{ConversationGen, ConversationParams};
+
+    fn sim_hours(
+        hours: usize,
+        rps: f64,
+        cache_tb: f64,
+        warm: usize,
+        seed: u64,
+    ) -> SimResult {
+        let cfg = SimConfig {
+            cost: CostModel::llama70b_4xl40(),
+            power: PowerModel::default(),
+            slo: Slo::conv_70b(),
+            interval_s: 3600.0,
+            hours,
+            seed,
+        };
+        let mut wl = ConversationGen::new(ConversationParams::default(), seed);
+        let mut cache = CacheManager::new(
+            (cache_tb * TB) as u64,
+            KV_BYTES_PER_TOKEN_70B,
+            PolicyKind::Lcs,
+        );
+        if warm > 0 {
+            warm_cache(&mut wl, &mut cache, warm, seed);
+        }
+        let acc = CarbonAccountant::new(EmbodiedModel::default());
+        simulate(
+            &cfg,
+            &mut wl,
+            &|_| rps,
+            &|_| 124.0, // ES-grid average CI
+            &mut cache,
+            acc,
+            &mut FixedController,
+        )
+    }
+
+    #[test]
+    fn conservation_every_request_completes() {
+        let r = sim_hours(1, 0.4, 16.0, 0, 1);
+        // ~1440 arrivals expected; all admitted requests must complete.
+        assert!(r.completed > 1200 && r.completed < 1700, "{}", r.completed);
+        assert_eq!(r.slo.total(), r.completed);
+    }
+
+    #[test]
+    fn caching_reduces_ttft() {
+        let cold = sim_hours(1, 0.6, 0.0, 0, 2);
+        let warm = sim_hours(1, 0.6, 16.0, 20_000, 2);
+        assert!(
+            warm.mean_ttft_s < cold.mean_ttft_s * 0.7,
+            "warm {:.2}s vs cold {:.2}s",
+            warm.mean_ttft_s,
+            cold.mean_ttft_s
+        );
+        assert!(warm.token_hit_rate > 0.3, "hit rate {}", warm.token_hit_rate);
+    }
+
+    #[test]
+    fn ttft_magnitude_matches_paper_anchor() {
+        // §2.2: no-cache ShareGPT on 70B/4×L40 ≈ 1.7 s average TTFT at
+        // the paper's operating load (compute + queueing; the no-cache
+        // capacity is ≈ 1.1 rps, so 0.8 rps is the stable-but-loaded
+        // regime — beyond that the no-cache baseline overloads, which is
+        // exactly why the paper's No Cache violates SLOs in Fig. 13).
+        let r = sim_hours(1, 0.5, 0.0, 0, 3);
+        assert!(
+            r.mean_ttft_s > 0.5 && r.mean_ttft_s < 3.5,
+            "mean TTFT {:.2}s",
+            r.mean_ttft_s
+        );
+    }
+
+    #[test]
+    fn higher_rate_increases_latency() {
+        let lo = sim_hours(1, 0.2, 0.0, 0, 4);
+        let hi = sim_hours(1, 0.6, 0.0, 0, 4);
+        assert!(hi.mean_ttft_s > lo.mean_ttft_s, "Takeaway 2 direction");
+        assert!(hi.mean_tpot_s > lo.mean_tpot_s);
+    }
+
+    #[test]
+    fn slo_attainment_high_at_low_load_with_cache() {
+        let r = sim_hours(1, 0.8, 16.0, 20_000, 5);
+        assert!(
+            r.slo.attainment() > 0.9,
+            "attainment {:.3}",
+            r.slo.attainment()
+        );
+    }
+
+    #[test]
+    fn carbon_accounting_is_positive_and_split() {
+        let r = sim_hours(1, 0.8, 16.0, 10_000, 6);
+        let b = r.accountant.breakdown();
+        assert!(b.operational_g > 0.0);
+        assert!(b.cache_embodied_g > 0.0);
+        assert!(b.other_embodied_g > 0.0);
+        // An hour of the 4×L40 platform at CI 124: order 10–500 g.
+        assert!(b.total_g() > 10.0 && b.total_g() < 500.0, "{}", b.total_g());
+    }
+
+    #[test]
+    fn no_cache_has_zero_cache_embodied() {
+        let r = sim_hours(1, 0.5, 0.0, 0, 7);
+        assert_eq!(r.accountant.breakdown().cache_embodied_g, 0.0);
+        assert_eq!(r.token_hit_rate, 0.0);
+    }
+
+    #[test]
+    fn hour_samples_cover_horizon() {
+        let r = sim_hours(2, 0.5, 8.0, 5_000, 8);
+        assert!(r.hours.len() >= 2);
+        assert_eq!(r.hours[0].hour, 0);
+        assert_eq!(r.hours[1].hour, 1);
+        for h in &r.hours[..2] {
+            assert!(h.completed > 0);
+            assert!(h.carbon_g > 0.0);
+            assert_eq!(h.cache_bytes, 8 * TB as u64);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = sim_hours(1, 0.5, 4.0, 1_000, 42);
+        let b = sim_hours(1, 0.5, 4.0, 1_000, 42);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.iterations, b.iterations);
+        assert!((a.mean_ttft_s - b.mean_ttft_s).abs() < 1e-12);
+        assert!(
+            (a.accountant.breakdown().total_g() - b.accountant.breakdown().total_g()).abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn resize_controller_hook_fires() {
+        struct Shrink(usize);
+        impl Controller for Shrink {
+            fn on_interval(
+                &mut self,
+                _h: usize,
+                _obs: &IntervalObservation,
+                cache: &mut CacheManager,
+            ) {
+                self.0 += 1;
+                cache.resize(TB as u64, 0.0);
+            }
+        }
+        let cfg = SimConfig {
+            cost: CostModel::llama70b_4xl40(),
+            power: PowerModel::default(),
+            slo: Slo::conv_70b(),
+            interval_s: 1800.0, // half-hour decisions (Fig. 18 regime)
+            hours: 1,
+            seed: 9,
+        };
+        let mut wl = ConversationGen::new(ConversationParams::default(), 9);
+        let mut cache =
+            CacheManager::new(16 * TB as u64, KV_BYTES_PER_TOKEN_70B, PolicyKind::Lcs);
+        let mut ctl = Shrink(0);
+        let r = simulate(
+            &cfg,
+            &mut wl,
+            &|_| 0.3,
+            &|_| 100.0,
+            &mut cache,
+            CarbonAccountant::new(EmbodiedModel::default()),
+            &mut ctl,
+        );
+        assert!(ctl.0 >= 1, "controller fired {} times", ctl.0);
+        assert_eq!(cache.capacity_bytes(), TB as u64);
+        assert!(r.completed > 0);
+    }
+
+    #[test]
+    fn warm_cache_populates_entries() {
+        let mut wl = ConversationGen::new(ConversationParams::default(), 3);
+        let mut cache =
+            CacheManager::new(16 * TB as u64, KV_BYTES_PER_TOKEN_70B, PolicyKind::Lru);
+        warm_cache(&mut wl, &mut cache, 10_000, 3);
+        assert!(cache.len() > 1000, "entries {}", cache.len());
+        assert!(cache.used_bytes() > 0);
+        cache.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,204 @@
+//! 0–1 Knapsack: DP solver + the Appendix-A reduction.
+//!
+//! Appendix A proves the GreenCache decision problem NP-hard by reducing
+//! 0–1 KNAPSACK to a restricted instance (binary cache decisions, global
+//! ρ constraint). We implement both the classic DP (the "baseline
+//! algorithm" for the restricted problem) and the reduction itself, and
+//! test that solving the reduced GreenCache instance answers the original
+//! knapsack question — i.e. the construction in the paper is faithful.
+
+use super::{IlpOption, IlpProblem};
+
+/// A 0–1 knapsack instance.
+#[derive(Debug, Clone)]
+pub struct Knapsack {
+    /// (weight, value) per item; weights and values positive.
+    pub items: Vec<(u64, u64)>,
+    pub budget: u64,
+}
+
+impl Knapsack {
+    /// Max achievable value within the weight budget (classic DP,
+    /// O(n·budget)).
+    pub fn max_value(&self) -> u64 {
+        let w = self.budget as usize;
+        let mut dp = vec![0u64; w + 1];
+        for &(wt, val) in &self.items {
+            let wt = wt as usize;
+            if wt > w {
+                continue;
+            }
+            for cap in (wt..=w).rev() {
+                dp[cap] = dp[cap].max(dp[cap - wt] + val);
+            }
+        }
+        dp[w]
+    }
+
+    /// Decision form: can value ≥ `target` be reached within budget?
+    pub fn decide(&self, target: u64) -> bool {
+        self.max_value() >= target
+    }
+
+    /// Appendix A's construction: map this instance + `target` onto a
+    /// restricted GreenCache problem. Item k → time step k with request
+    /// volume λ_k = v_k; S_k = 1 (cache on) makes all λ_k requests meet
+    /// both SLOs at incremental carbon w_k; S_k = 0 makes them all miss
+    /// at zero carbon. ρ = V/Λ. The instance is feasible within carbon
+    /// budget W iff the knapsack reaches V.
+    pub fn to_greencache(&self, target: u64) -> (IlpProblem, f64) {
+        let lambda_total: u64 = self.items.iter().map(|&(_, v)| v).sum();
+        // ρ = V/Λ, nudged half a request down so ceil(ρ·Λ) is exactly V
+        // despite floating-point — the reduction must be exact.
+        let rho = if lambda_total == 0 {
+            1.0
+        } else {
+            ((target as f64 - 0.5) / lambda_total as f64).clamp(0.0, 1.0)
+        };
+        let options = self
+            .items
+            .iter()
+            .map(|&(w, v)| {
+                vec![
+                    // S_k = 0: all requests miss, no incremental carbon.
+                    IlpOption {
+                        size: 0,
+                        cost_g: 0.0,
+                        ttft_ok: 0,
+                        tpot_ok: 0,
+                        n_requests: v,
+                    },
+                    // S_k = 1: all requests meet both SLOs, carbon w_k.
+                    IlpOption {
+                        size: 1,
+                        cost_g: w as f64,
+                        ttft_ok: v,
+                        tpot_ok: v,
+                        n_requests: v,
+                    },
+                ]
+            })
+            .collect();
+        (
+            IlpProblem {
+                options,
+                rho,
+            },
+            self.budget as f64,
+        )
+    }
+
+    /// Decide the knapsack via the GreenCache reduction: feasible within
+    /// the carbon budget ⇔ knapsack target reachable.
+    pub fn decide_via_greencache(&self, target: u64) -> anyhow::Result<bool> {
+        if target == 0 {
+            return Ok(true);
+        }
+        let lambda_total: u64 = self.items.iter().map(|&(_, v)| v).sum();
+        if target > lambda_total {
+            // Appendix A: trivially infeasible case.
+            return Ok(false);
+        }
+        let (prob, budget) = self.to_greencache(target);
+        // Minimum-carbon plan meeting ρ — feasible within budget?
+        Ok(match prob.solve()? {
+            Some(sol) => sol.total_cost_g <= budget + 1e-9,
+            None => false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn dp_classic_cases() {
+        let k = Knapsack {
+            items: vec![(2, 3), (3, 4), (4, 5), (5, 6)],
+            budget: 5,
+        };
+        assert_eq!(k.max_value(), 7); // items (2,3)+(3,4)
+        assert!(k.decide(7));
+        assert!(!k.decide(8));
+    }
+
+    #[test]
+    fn dp_empty_and_tight() {
+        assert_eq!(Knapsack { items: vec![], budget: 10 }.max_value(), 0);
+        let k = Knapsack { items: vec![(10, 100)], budget: 9 };
+        assert_eq!(k.max_value(), 0);
+        let k2 = Knapsack { items: vec![(10, 100)], budget: 10 };
+        assert_eq!(k2.max_value(), 100);
+    }
+
+    #[test]
+    fn reduction_matches_dp_on_examples() {
+        let k = Knapsack {
+            items: vec![(2, 3), (3, 4), (4, 5)],
+            budget: 5,
+        };
+        for target in 0..=13 {
+            assert_eq!(
+                k.decide_via_greencache(target).unwrap(),
+                k.decide(target),
+                "target {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn reduction_structure_is_appendix_a() {
+        let k = Knapsack { items: vec![(7, 5)], budget: 7 };
+        let (p, budget) = k.to_greencache(5);
+        assert_eq!(p.options.len(), 1);
+        assert_eq!(p.options[0].len(), 2);
+        assert_eq!(p.options[0][0].cost_g, 0.0);
+        assert_eq!(p.options[0][1].cost_g, 7.0);
+        assert_eq!(p.options[0][1].ttft_ok, 5);
+        assert_eq!(budget, 7.0);
+        // ρ = (V − ½)/Λ = 4.5/5: ceil(ρΛ) = V = 5 exactly.
+        assert!((p.rho - 0.9).abs() < 1e-12);
+        assert_eq!((p.rho * 5.0).ceil() as u64, 5);
+    }
+
+    #[test]
+    fn prop_reduction_equivalence() {
+        check("knapsack-reduction", |rng: &mut Rng| {
+            let n = rng.range(1, 6) as usize;
+            let items: Vec<(u64, u64)> = (0..n)
+                .map(|_| (rng.range(1, 10) as u64, rng.range(1, 10) as u64))
+                .collect();
+            let budget = rng.range(1, 25) as u64;
+            let k = Knapsack { items, budget };
+            let total_v: u64 = k.items.iter().map(|&(_, v)| v).sum();
+            let target = rng.below(total_v + 3);
+            let via = k
+                .decide_via_greencache(target)
+                .map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                via == k.decide(target),
+                "reduction mismatch: items={:?} budget={} target={target}",
+                k.items,
+                k.budget
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dp_never_exceeds_total() {
+        check("knapsack-dp-bound", |rng: &mut Rng| {
+            let n = rng.range(0, 8) as usize;
+            let items: Vec<(u64, u64)> = (0..n)
+                .map(|_| (rng.range(1, 20) as u64, rng.range(1, 20) as u64))
+                .collect();
+            let total: u64 = items.iter().map(|&(_, v)| v).sum();
+            let k = Knapsack { items, budget: rng.range(0, 50) as u64 };
+            crate::prop_assert!(k.max_value() <= total);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,112 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are declared with `harness = false` and call
+//! [`Bench::run`]: warmup, then timed iterations until a wall-clock budget
+//! or iteration cap, reporting mean / p50 / p95 / min and throughput. The
+//! output format is stable so EXPERIMENTS.md can quote it.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group; prints results as it goes.
+pub struct Bench {
+    name: String,
+    /// Minimum measured iterations per case.
+    pub min_iters: usize,
+    /// Wall-clock budget per case.
+    pub budget: Duration,
+    /// Warmup iterations.
+    pub warmup: usize,
+    results: Vec<CaseResult>,
+}
+
+/// Summary statistics for one case.
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            min_iters: 10,
+            budget: Duration::from_secs(2),
+            warmup: 3,
+            results: Vec::new(),
+        }
+    }
+
+    /// Fewer, longer iterations (for end-to-end cases).
+    pub fn slow(mut self) -> Self {
+        self.min_iters = 3;
+        self.budget = Duration::from_secs(5);
+        self.warmup = 1;
+        self
+    }
+
+    /// Benchmark `f`, which must consume-and-return so the optimizer can't
+    /// elide it; use [`black_box`] inside where needed.
+    pub fn case<T>(&mut self, case_name: &str, mut f: impl FnMut() -> T) -> &CaseResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters || start.elapsed() < self.budget {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let res = CaseResult {
+            name: format!("{}/{}", self.name, case_name),
+            iters: samples.len(),
+            mean: total / samples.len() as u32,
+            p50: samples[samples.len() / 2],
+            p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+            min: samples[0],
+        };
+        println!(
+            "bench {:<52} iters={:<6} mean={:>12?} p50={:>12?} p95={:>12?} min={:>12?}",
+            res.name, res.iters, res.mean, res.p50, res.p95, res.min
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+}
+
+/// Optimization barrier (stable-rust version of `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let mut b = Bench::new("t");
+        b.min_iters = 5;
+        b.budget = Duration::from_millis(10);
+        b.warmup = 1;
+        let r = b.case("noop", || 1 + 1).clone();
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+        assert_eq!(r.name, "t/noop");
+    }
+}

@@ -1,0 +1,112 @@
+//! Tiny CSV writer for the figure/bench harness result files.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Accumulates rows and writes an RFC-4180-ish CSV file.
+#[derive(Debug, Default, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width != header width"
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: numeric row.
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        self.row(
+            &cells
+                .iter()
+                .map(|x| format!("{x}"))
+                .collect::<Vec<_>>(),
+        );
+    }
+
+    fn escape(cell: &str) -> String {
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header
+                .iter()
+                .map(|c| Self::escape(c))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter()
+                    .map(|c| Self::escape(c))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            );
+        }
+        out
+    }
+
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_string())?;
+        Ok(())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_layout() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into(), "x".into()]);
+        c.row_f64(&[2.5, 3.0]);
+        assert_eq!(c.to_string(), "a,b\n1,x\n2.5,3\n");
+        assert_eq!(c.n_rows(), 2);
+    }
+
+    #[test]
+    fn escapes_commas_and_quotes() {
+        let mut c = Csv::new(&["a"]);
+        c.row(&["x,y".into()]);
+        c.row(&["say \"hi\"".into()]);
+        assert_eq!(c.to_string(), "a\n\"x,y\"\n\"say \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree replacements for the usual crates.io utility stack (the build
+//! environment is fully offline: only `xla` + `anyhow` are vendored).
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod proptest;

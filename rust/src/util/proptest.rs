@@ -1,0 +1,74 @@
+//! Property-testing helper (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over N seeded-random cases; on failure it
+//! reports the failing seed so the case can be replayed deterministically
+//! (`PROPTEST_SEED=<seed> cargo test ...`). This is a deliberate
+//! minimal subset of proptest: random generation + replay, no shrinking —
+//! our generators take an [`Rng`] directly so cases stay readable.
+
+use crate::rng::Rng;
+
+/// Number of cases per property (override with env `PROPTEST_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `default_cases()` random cases. `prop` gets a fresh
+/// seeded [`Rng`] per case and returns `Err(reason)` (or panics) to fail.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let forced: Option<u64> = std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    let cases = if forced.is_some() { 1 } else { default_cases() };
+    for case in 0..cases {
+        let seed = forced.unwrap_or(0xD00D_0000 + case as u64 * 7919);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed (replay with PROPTEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper returning `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("sum-commutes", |rng| {
+            let a = rng.range(-100, 100);
+            let b = rng.range(-100, 100);
+            prop_assert!(a + b == b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", |_rng| Err("nope".into()));
+    }
+}

@@ -1,0 +1,235 @@
+//! Document reading-comprehension workload (TriviaQA-like, §6.1 / Fig. 4b).
+//!
+//! A fixed corpus of documents; each request asks a (short) question
+//! about one document. Document popularity follows a bounded Zipf —
+//! TriviaQA itself is near-uniform, so the paper *introduces* skew with
+//! α=0.4 (10 % of docs ↔ ~25 % of prompts) and α=0.7 (↔ ~50 %), which we
+//! replicate. Document lengths are lognormal with mean ≈ 5880 tokens
+//! (Fig. 4b's "average context length of 5880 tokens").
+
+use super::request::{Request, TaskKind};
+use crate::rng::{Rng, Zipf};
+
+/// Calibration knobs for the document workload.
+#[derive(Debug, Clone)]
+pub struct DocumentParams {
+    /// Corpus size.
+    pub n_docs: usize,
+    /// Zipf skew (0.4 / 0.7 in the paper).
+    pub zipf_alpha: f64,
+    /// Lognormal (mu, sigma) of document token lengths.
+    pub doc_mu: f64,
+    pub doc_sigma: f64,
+    /// Lognormal (mu, sigma) of question token lengths.
+    pub question_mu: f64,
+    pub question_sigma: f64,
+    /// Lognormal (mu, sigma) of answer (decode) lengths.
+    pub answer_mu: f64,
+    pub answer_sigma: f64,
+    /// Context window cap, tokens.
+    pub max_context: u32,
+}
+
+impl Default for DocumentParams {
+    fn default() -> Self {
+        // exp(8.6 + 0.55²/2) ≈ 6300·0.93 ≈ 5870 ≈ Fig. 4b's 5880 mean.
+        DocumentParams {
+            n_docs: 10_000,
+            zipf_alpha: 0.4,
+            doc_mu: 8.6,
+            doc_sigma: 0.55,
+            question_mu: 3.0,
+            question_sigma: 0.5,
+            answer_mu: 4.0,
+            answer_sigma: 0.5,
+            max_context: 8192,
+        }
+    }
+}
+
+impl DocumentParams {
+    pub fn with_alpha(alpha: f64) -> Self {
+        DocumentParams {
+            zipf_alpha: alpha,
+            ..Default::default()
+        }
+    }
+
+    /// Rescaled into the tiny model's 512-token window.
+    pub fn tiny_model() -> Self {
+        DocumentParams {
+            n_docs: 256,
+            zipf_alpha: 0.7,
+            doc_mu: 5.2, // ~190-token documents
+            doc_sigma: 0.4,
+            question_mu: 2.3,
+            question_sigma: 0.4,
+            answer_mu: 2.8,
+            answer_sigma: 0.4,
+            max_context: 384,
+        }
+    }
+}
+
+/// Generator: fixed corpus + Zipf access.
+#[derive(Debug)]
+pub struct DocumentGen {
+    params: DocumentParams,
+    /// Token length of each document (immutable corpus).
+    doc_tokens: Vec<u32>,
+    zipf: Zipf,
+    /// Rank→document shuffle so popularity isn't correlated with length.
+    rank_to_doc: Vec<usize>,
+    next_req: u64,
+}
+
+impl DocumentGen {
+    pub fn new(params: DocumentParams, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xD0C5);
+        let doc_tokens: Vec<u32> = (0..params.n_docs)
+            .map(|_| {
+                (rng.lognormal(params.doc_mu, params.doc_sigma) as u32)
+                    .clamp(100, params.max_context)
+            })
+            .collect();
+        let zipf = Zipf::new(params.n_docs, params.zipf_alpha);
+        let mut rank_to_doc: Vec<usize> = (0..params.n_docs).collect();
+        rng.shuffle(&mut rank_to_doc);
+        DocumentGen {
+            params,
+            doc_tokens,
+            zipf,
+            rank_to_doc,
+            next_req: 0,
+        }
+    }
+
+    pub fn corpus_len(&self) -> usize {
+        self.doc_tokens.len()
+    }
+
+    pub fn doc_len(&self, doc: usize) -> u32 {
+        self.doc_tokens[doc]
+    }
+
+    pub fn next(&mut self, rng: &mut Rng) -> Request {
+        let rank = self.zipf.sample(rng);
+        let doc = self.rank_to_doc[rank];
+        let q = (rng.lognormal(self.params.question_mu, self.params.question_sigma) as u32)
+            .clamp(1, 512);
+        let a = (rng.lognormal(self.params.answer_mu, self.params.answer_sigma) as u32)
+            .clamp(1, 1024);
+        let req = Request {
+            id: self.next_req,
+            task: TaskKind::DocQa,
+            context_id: doc as u64,
+            context_version: 0, // documents never change
+            context_tokens: self.doc_tokens[doc],
+            new_tokens: q,
+            output_tokens: a,
+            arrival_s: 0.0,
+        };
+        self.next_req += 1;
+        req
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn sample(n: usize, params: DocumentParams) -> Vec<Request> {
+        let mut gen = DocumentGen::new(params, 0);
+        let mut rng = Rng::new(7);
+        (0..n).map(|_| gen.next(&mut rng)).collect()
+    }
+
+    #[test]
+    fn fig4b_mean_context_length() {
+        let reqs = sample(20_000, DocumentParams::default());
+        let mean: f64 = reqs.iter().map(|r| r.context_tokens as f64).sum::<f64>()
+            / reqs.len() as f64;
+        assert!(
+            (mean - 5880.0).abs() < 600.0,
+            "mean document context {mean:.0} (want ≈ 5880)"
+        );
+    }
+
+    #[test]
+    fn zipf_skew_calibration_alpha04() {
+        // §6.1: α=0.4 → 10 % of documents get ~25 % of accesses.
+        let reqs = sample(100_000, DocumentParams::with_alpha(0.4));
+        let frac = top_docs_access_share(&reqs, 0.10);
+        assert!((frac - 0.25).abs() < 0.05, "α=0.4 top-10% share {frac:.3}");
+    }
+
+    #[test]
+    fn zipf_skew_calibration_alpha07() {
+        // §6.1: α=0.7 → 10 % of documents get ~50 % of accesses.
+        let reqs = sample(100_000, DocumentParams::with_alpha(0.7));
+        let frac = top_docs_access_share(&reqs, 0.10);
+        assert!((frac - 0.50).abs() < 0.07, "α=0.7 top-10% share {frac:.3}");
+    }
+
+    fn top_docs_access_share(reqs: &[Request], top_frac: f64) -> f64 {
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for r in reqs {
+            *counts.entry(r.context_id).or_default() += 1;
+        }
+        let mut by_count: Vec<usize> = counts.values().cloned().collect();
+        by_count.sort_unstable_by(|a, b| b.cmp(a));
+        let n_docs = 10_000; // params corpus size
+        let k = (n_docs as f64 * top_frac) as usize;
+        let top: usize = by_count.iter().take(k).sum();
+        top as f64 / reqs.len() as f64
+    }
+
+    #[test]
+    fn same_document_has_stable_length() {
+        let mut gen = DocumentGen::new(DocumentParams::default(), 0);
+        let mut rng = Rng::new(9);
+        let mut seen: HashMap<u64, u32> = HashMap::new();
+        for _ in 0..10_000 {
+            let r = gen.next(&mut rng);
+            if let Some(&len) = seen.get(&r.context_id) {
+                assert_eq!(len, r.context_tokens, "document length changed");
+            }
+            seen.insert(r.context_id, r.context_tokens);
+        }
+        assert!(seen.len() > 100, "should touch many documents");
+    }
+
+    #[test]
+    fn questions_are_short() {
+        let reqs = sample(5_000, DocumentParams::default());
+        let mean_q: f64 =
+            reqs.iter().map(|r| r.new_tokens as f64).sum::<f64>() / reqs.len() as f64;
+        assert!(mean_q < 60.0, "questions should be short, mean {mean_q}");
+    }
+
+    #[test]
+    fn doc_version_is_zero() {
+        assert!(sample(100, DocumentParams::default())
+            .iter()
+            .all(|r| r.context_version == 0));
+    }
+
+    #[test]
+    fn tiny_model_fits_window() {
+        let reqs = sample(2_000, DocumentParams::tiny_model());
+        assert!(reqs.iter().all(|r| r.context_tokens <= 384));
+        let mean: f64 = reqs.iter().map(|r| r.context_tokens as f64).sum::<f64>()
+            / reqs.len() as f64;
+        assert!(mean > 80.0 && mean < 320.0, "tiny doc mean {mean}");
+    }
+
+    #[test]
+    fn deterministic_corpus() {
+        let a = DocumentGen::new(DocumentParams::default(), 5);
+        let b = DocumentGen::new(DocumentParams::default(), 5);
+        assert_eq!(a.doc_tokens, b.doc_tokens);
+        let c = DocumentGen::new(DocumentParams::default(), 6);
+        assert_ne!(a.doc_tokens, c.doc_tokens);
+    }
+}

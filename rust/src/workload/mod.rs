@@ -1,0 +1,52 @@
+//! Workload generators for the paper's two LLM tasks (§6.1).
+//!
+//! * **Multi-turn conversation** (ShareGPT [30]): each conversation is a
+//!   sequence of turns; every turn's prompt carries the full prior
+//!   context, which is exactly the KV prefix a context cache can reuse.
+//!   Calibrated to Fig. 4a: 77.2 % of prompts carry > 1000 context tokens.
+//! * **Document comprehension** (TriviaQA [32]): questions reference
+//!   documents (average context 5880 tokens, Fig. 4b) chosen under a
+//!   Zipf popularity with α ∈ {0.4, 0.7} (§6.1).
+//!
+//! Arrivals are Poisson at rates given by a [`crate::load::LoadTrace`]
+//! (§6.1). The same [`Request`] type feeds both the calibrated simulator
+//! (paper-scale token counts) and the real-model runtime (token counts
+//! rescaled into the tiny model's 512-token window).
+
+mod conversation;
+mod document;
+mod request;
+
+pub use conversation::{ConversationGen, ConversationParams};
+pub use document::{DocumentGen, DocumentParams};
+pub use request::{ArrivalGen, Request, TaskKind};
+
+use crate::rng::Rng;
+
+/// A workload: an infinite stream of requests with context-reuse
+/// structure. `next_request` draws the logical content; arrival times are
+/// layered on by [`ArrivalGen`].
+pub trait Workload {
+    fn task(&self) -> TaskKind;
+    /// Draw the next request (content only; `arrival_s` is filled by the
+    /// arrival process).
+    fn next_request(&mut self, rng: &mut Rng) -> Request;
+}
+
+impl Workload for ConversationGen {
+    fn task(&self) -> TaskKind {
+        TaskKind::Conversation
+    }
+    fn next_request(&mut self, rng: &mut Rng) -> Request {
+        self.next(rng)
+    }
+}
+
+impl Workload for DocumentGen {
+    fn task(&self) -> TaskKind {
+        TaskKind::DocQa
+    }
+    fn next_request(&mut self, rng: &mut Rng) -> Request {
+        self.next(rng)
+    }
+}

@@ -1,0 +1,173 @@
+//! Request model shared by the simulator and the real-model coordinator.
+
+use crate::rng::Rng;
+
+/// The paper's two evaluated tasks (§6.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Conversation,
+    DocQa,
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Conversation => "multi-turn-conversation",
+            TaskKind::DocQa => "document-comprehension",
+        }
+    }
+}
+
+/// One LLM serving request.
+///
+/// `context_tokens` is the *reusable* prefix (prior turns / the document)
+/// — the part a context cache can serve from stored KV. `new_tokens` is
+/// the fresh suffix (the user's latest message / question). The prompt the
+/// model prefills is `context_tokens + new_tokens` long; on a full cache
+/// hit only `new_tokens` must be computed.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub task: TaskKind,
+    /// Identity of the reusable context (conversation id / document id) —
+    /// the cache key.
+    pub context_id: u64,
+    /// Version of the context (turn number for conversations; 0 for
+    /// documents, whose text never changes).
+    pub context_version: u32,
+    /// Reusable context length, tokens.
+    pub context_tokens: u32,
+    /// Fresh prompt suffix length, tokens.
+    pub new_tokens: u32,
+    /// Decode length, tokens.
+    pub output_tokens: u32,
+    /// Arrival time, seconds from trace start (set by [`ArrivalGen`]).
+    pub arrival_s: f64,
+}
+
+impl Request {
+    /// Total prompt length the prefill phase must cover.
+    pub fn prompt_tokens(&self) -> u32 {
+        self.context_tokens + self.new_tokens
+    }
+}
+
+/// Poisson arrival process over a varying hourly rate (§6.1: "The request
+/// follows a Poisson distribution"; rates follow the Azure trace).
+#[derive(Debug)]
+pub struct ArrivalGen {
+    now_s: f64,
+    rng: Rng,
+}
+
+impl ArrivalGen {
+    pub fn new(seed: u64) -> Self {
+        ArrivalGen {
+            now_s: 0.0,
+            rng: Rng::new(seed ^ 0xA11C_E5ED),
+        }
+    }
+
+    /// Advance to the next arrival given the instantaneous rate at the
+    /// current hour (`rate_of_hour(hour_index) -> rps`). Uses thinning-
+    /// free per-hour exponential steps: correct because the rate is
+    /// piecewise-constant per hour in our traces.
+    pub fn next_arrival(&mut self, rate_of_hour: impl Fn(usize) -> f64) -> f64 {
+        loop {
+            let hour = (self.now_s / 3600.0) as usize;
+            let rate = rate_of_hour(hour);
+            if rate <= 0.0 {
+                // Jump to the next hour boundary.
+                self.now_s = (hour + 1) as f64 * 3600.0;
+                continue;
+            }
+            let dt = self.rng.exponential(rate);
+            let hour_end = (hour + 1) as f64 * 3600.0;
+            if self.now_s + dt <= hour_end {
+                self.now_s += dt;
+                return self.now_s;
+            }
+            // The exponential crossed an hour boundary where the rate
+            // changes: restart from the boundary (memorylessness).
+            self.now_s = hour_end;
+        }
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_tokens_is_sum() {
+        let r = Request {
+            id: 0,
+            task: TaskKind::Conversation,
+            context_id: 1,
+            context_version: 2,
+            context_tokens: 1000,
+            new_tokens: 50,
+            output_tokens: 100,
+            arrival_s: 0.0,
+        };
+        assert_eq!(r.prompt_tokens(), 1050);
+    }
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let mut gen = ArrivalGen::new(1);
+        let rate = 2.0;
+        let mut n = 0;
+        while gen.next_arrival(|_| rate) < 3600.0 {
+            n += 1;
+        }
+        let expect = rate * 3600.0;
+        assert!(
+            (n as f64 - expect).abs() < expect * 0.1,
+            "{n} arrivals vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn rate_change_at_hour_boundary() {
+        // Hour 0: 1 rps, hour 1: 10 rps.
+        let mut gen = ArrivalGen::new(2);
+        let rate = |h: usize| if h == 0 { 1.0 } else { 10.0 };
+        let (mut n0, mut n1) = (0, 0);
+        loop {
+            let t = gen.next_arrival(rate);
+            if t < 3600.0 {
+                n0 += 1;
+            } else if t < 7200.0 {
+                n1 += 1;
+            } else {
+                break;
+            }
+        }
+        assert!(n0 > 3000 && n0 < 4300, "hour0 {n0}");
+        assert!(n1 > 33000 && n1 < 39000, "hour1 {n1}");
+    }
+
+    #[test]
+    fn zero_rate_hours_are_skipped() {
+        let mut gen = ArrivalGen::new(3);
+        let rate = |h: usize| if h < 2 { 0.0 } else { 1.0 };
+        let t = gen.next_arrival(rate);
+        assert!(t >= 7200.0, "first arrival at {t}");
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let mut gen = ArrivalGen::new(4);
+        let mut last = 0.0;
+        for _ in 0..1000 {
+            let t = gen.next_arrival(|_| 0.5);
+            assert!(t > last);
+            last = t;
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! End-to-end integration: Pallas kernel → JAX model → HLO text → PJRT →
+//! rust decode loop, checked against golden vectors computed by the
+//! python reference path at AOT time.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use greencache::runtime::{default_artifact_dir, Engine, Golden, KvState};
+
+fn engine_or_skip() -> Option<(Engine, Golden)> {
+    let dir = default_artifact_dir();
+    if !dir.join("model_config.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?}; run `make artifacts`");
+        return None;
+    }
+    let engine = Engine::load(&dir).expect("engine load");
+    let golden = Golden::load(&dir).expect("golden load");
+    Some((engine, golden))
+}
+
+#[test]
+fn golden_tokens_match_python_reference() {
+    let Some((engine, golden)) = engine_or_skip() else { return };
+    let mut kv = engine.empty_kv();
+    let out = engine
+        .generate(&golden.prompt, golden.n_new, &mut kv)
+        .expect("generate");
+    assert_eq!(out.tokens, golden.tokens, "rust PJRT path diverges from python oracle");
+    assert_eq!(out.decode_steps, golden.n_new - 1);
+    // 100-token prompt, 64-token chunks → 2 chunk executions.
+    assert_eq!(out.chunks_executed, 2);
+    assert_eq!(out.chunks_skipped, 0);
+}
+
+#[test]
+fn cache_hit_path_is_output_identical_and_skips_prefill() {
+    let Some((engine, golden)) = engine_or_skip() else { return };
+    let chunk = engine.config().chunk;
+    let plen = golden.prefix_len_for_hit;
+    assert_eq!(plen % chunk, 0);
+
+    // Build the cached prefix exactly as the cache manager would: prefill
+    // the context prefix alone and snapshot the KV at the chunk boundary.
+    let mut prefix_kv = engine.empty_kv();
+    engine
+        .prefill(&golden.prompt[..plen], &mut prefix_kv)
+        .expect("prefix prefill");
+    assert_eq!(prefix_kv.len, plen);
+
+    let mut kv = prefix_kv.clone();
+    let out = engine
+        .generate(&golden.prompt, golden.n_new, &mut kv)
+        .expect("generate with cached prefix");
+    assert_eq!(out.tokens, golden.tokens, "cache hit changed the output");
+    assert_eq!(out.chunks_skipped, plen / chunk);
+    assert_eq!(out.chunks_executed, 1, "hit should skip the cached chunk");
+}
+
+#[test]
+fn decode_step_matches_prefill_extension() {
+    // decode_step(t) after prefill(P) must equal prefill(P ++ [t]).
+    let Some((engine, _)) = engine_or_skip() else { return };
+    let prompt: Vec<i32> = (1..80).map(|i| (i * 7) % 250 + 1).collect();
+
+    let mut kv_a = engine.empty_kv();
+    let pre = engine.prefill(&prompt, &mut kv_a).unwrap();
+    let next_tok = greencache::runtime::argmax(&pre.logits);
+    let logits_decode = engine.decode_step(next_tok, &mut kv_a).unwrap();
+
+    let mut extended = prompt.clone();
+    extended.push(next_tok);
+    let mut kv_b = engine.empty_kv();
+    let pre_b = engine.prefill(&extended, &mut kv_b).unwrap();
+
+    let da = greencache::runtime::argmax(&logits_decode);
+    let db = greencache::runtime::argmax(&pre_b.logits);
+    assert_eq!(da, db, "decode vs prefill-extension argmax mismatch");
+    // Logits should agree to f32 tolerance, not just argmax.
+    for (i, (a, b)) in logits_decode.iter().zip(pre_b.logits.iter()).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3,
+            "logit {i} differs: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn kv_state_round_trips_through_prefill() {
+    let Some((engine, _)) = engine_or_skip() else { return };
+    let prompt: Vec<i32> = (0..64).map(|i| (i * 3) % 200 + 1).collect();
+    let mut kv1 = engine.empty_kv();
+    engine.prefill(&prompt, &mut kv1).unwrap();
+
+    // Serialize / deserialize as the SSD tier would, then keep decoding.
+    let blob = kv1.bytes.clone();
+    let mut kv2 = KvState {
+        bytes: blob,
+        len: kv1.len,
+        shape: kv1.shape.clone(),
+    };
+    let l1 = engine.decode_step(5, &mut kv1).unwrap();
+    let l2 = engine.decode_step(5, &mut kv2).unwrap();
+    assert_eq!(l1, l2, "KV blob round-trip changed decode output");
+}
+
+#[test]
+fn rejects_invalid_requests() {
+    let Some((engine, _)) = engine_or_skip() else { return };
+    let mut kv = engine.empty_kv();
+    // empty prompt
+    assert!(engine.prefill(&[], &mut kv).is_err());
+    // prompt longer than the window
+    let long = vec![1i32; engine.config().max_seq + 1];
+    let mut kv2 = engine.empty_kv();
+    assert!(engine.prefill(&long, &mut kv2).is_err());
+    // unaligned cached prefix
+    let mut kv3 = engine.empty_kv();
+    kv3.len = 3;
+    assert!(engine.prefill(&[1, 2, 3, 4, 5], &mut kv3).is_err());
+    // generation overflowing the window
+    let mut kv4 = engine.empty_kv();
+    let prompt = vec![1i32; engine.config().max_seq - 2];
+    assert!(engine.generate(&prompt, 10, &mut kv4).is_err());
+}

@@ -1,0 +1,169 @@
+//! Integration: the real-model server (router + cache + PJRT engine).
+
+use greencache::cache::PolicyKind;
+use greencache::coordinator::server::{Server, ServerConfig};
+use greencache::runtime::{default_artifact_dir, Engine};
+use greencache::workload::{Request, TaskKind};
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = default_artifact_dir();
+    if !dir.join("model_config.json").exists() {
+        eprintln!("SKIP: no artifacts; run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine"))
+}
+
+fn req(ctx: u64, version: u32, context: u32, new: u32) -> Request {
+    Request {
+        id: ctx * 100 + version as u64,
+        task: TaskKind::Conversation,
+        context_id: ctx,
+        context_version: version,
+        context_tokens: context,
+        new_tokens: new,
+        output_tokens: 8,
+        arrival_s: 0.0,
+    }
+}
+
+fn prompt_for(ctx: u64, len: u32) -> Vec<i32> {
+    (0..len).map(|p| ((ctx * 31 + p as u64 * 7) % 250 + 1) as i32).collect()
+}
+
+#[test]
+fn second_turn_hits_and_output_is_stable() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut server = Server::new(engine, ServerConfig::default());
+
+    // Turn 1: 128-token prompt, no context.
+    let r1 = req(5, 0, 0, 128);
+    let p1 = prompt_for(5, 128);
+    let s1 = server.serve_one(&r1, &p1, 0.0).unwrap();
+    assert_eq!(s1.hit_tokens, 0);
+    assert_eq!(s1.chunks_skipped, 0);
+
+    // Turn 2: context = turn-1 prompt, + 40 new tokens.
+    let r2 = req(5, 1, 128, 40);
+    let mut p2 = p1.clone();
+    p2.extend(prompt_for(99, 40));
+    let s2 = server.serve_one(&r2, &p2, 1.0).unwrap();
+    assert!(s2.hit_tokens > 0, "second turn must hit the cache");
+    assert!(s2.chunks_skipped >= 1, "hit must skip prefill chunks");
+
+    // Same turn served cold must produce identical tokens.
+    let engine2 = Engine::load(&default_artifact_dir()).unwrap();
+    let mut cold = Server::new(
+        engine2,
+        ServerConfig {
+            cache_bytes: 0,
+            ..Default::default()
+        },
+    );
+    let s2_cold = cold.serve_one(&r2, &p2, 0.0).unwrap();
+    assert_eq!(s2.tokens, s2_cold.tokens, "cache hit changed the output");
+    assert_eq!(s2_cold.chunks_skipped, 0);
+}
+
+#[test]
+fn serve_batch_reports_consistent_stats() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut server = Server::new(engine, ServerConfig::default());
+    let mut reqs = Vec::new();
+    for turn in 0..3u32 {
+        for ctx in 0..4u64 {
+            let context = turn * 60;
+            let r = req(ctx, turn, context, 60);
+            let p = prompt_for(ctx, context + 60);
+            reqs.push((r, p));
+        }
+    }
+    let report = server.serve(&reqs).unwrap();
+    assert_eq!(report.served.len(), 12);
+    assert_eq!(report.slo.total(), 12);
+    assert!(report.token_hit_rate > 0.0, "later turns must hit");
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.xla_fraction > 0.3, "xla fraction {}", report.xla_fraction);
+    // Chunk-skipping means hits executed fewer chunks than their prompt
+    // length implies.
+    let total_skipped: usize = report.served.iter().map(|s| s.chunks_skipped).sum();
+    assert!(total_skipped > 0);
+}
+
+#[test]
+fn tiny_cache_evicts_but_stays_correct() {
+    let Some(engine) = engine_or_skip() else { return };
+    let kv_per_token = engine.config().kv_bytes_per_token() as u64;
+    // Room for ~130 tokens only → constant eviction.
+    let mut server = Server::new(
+        engine,
+        ServerConfig {
+            cache_bytes: kv_per_token * 130,
+            ..Default::default()
+        },
+    );
+    let mut outputs = Vec::new();
+    for ctx in 0..4u64 {
+        let r = req(ctx, 0, 0, 100);
+        let p = prompt_for(ctx, 100);
+        outputs.push(server.serve_one(&r, &p, ctx as f64).unwrap().tokens);
+    }
+    // Replays must match cold outputs regardless of what was evicted.
+    let engine2 = Engine::load(&default_artifact_dir()).unwrap();
+    let mut cold = Server::new(
+        engine2,
+        ServerConfig {
+            cache_bytes: 0,
+            ..Default::default()
+        },
+    );
+    for ctx in 0..4u64 {
+        let r = req(ctx, 0, 0, 100);
+        let p = prompt_for(ctx, 100);
+        assert_eq!(
+            cold.serve_one(&r, &p, 0.0).unwrap().tokens,
+            outputs[ctx as usize],
+            "ctx {ctx} diverged under eviction pressure"
+        );
+    }
+    server.cache().check_invariants().unwrap();
+}
+
+#[test]
+fn policies_behave_distinctly_under_pressure() {
+    let Some(engine) = engine_or_skip() else { return };
+    let kv_per_token = engine.config().kv_bytes_per_token() as u64;
+    drop(engine);
+    // Hot conversation (deep) + cold one-shot fillers; tiny cache.
+    let mut hit_rates = std::collections::HashMap::new();
+    for policy in [PolicyKind::Lru, PolicyKind::Lcs] {
+        let engine = Engine::load(&default_artifact_dir()).unwrap();
+        let mut server = Server::new(
+            engine,
+            ServerConfig {
+                cache_bytes: kv_per_token * 256,
+                policy,
+                ..Default::default()
+            },
+        );
+        let mut now = 0.0;
+        // Hot conversation grows turn by turn; fillers interleave.
+        for turn in 0..4u32 {
+            let context = turn * 64;
+            let r = req(1, turn, context, 64);
+            let p = prompt_for(1, context + 64);
+            server.serve_one(&r, &p, now).unwrap();
+            now += 1.0;
+            let filler = req(100 + turn as u64, 0, 0, 64);
+            let fp = prompt_for(100 + turn as u64, 64);
+            server.serve_one(&filler, &fp, now).unwrap();
+            now += 1.0;
+        }
+        hit_rates.insert(policy.name(), server.cache().stats().token_hit_rate());
+    }
+    // Both policies should produce hits; exact ordering depends on the
+    // interleave, but the stats must be well-formed.
+    for (name, rate) in &hit_rates {
+        assert!((0.0..=1.0).contains(rate), "{name} rate {rate}");
+    }
+}
