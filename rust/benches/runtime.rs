@@ -37,6 +37,8 @@ fn main() {
         black_box(engine.decode_step(7, &mut kv).unwrap().len())
     });
 
+    // Literal round-trips only exist on the PJRT backend.
+    #[cfg(feature = "pjrt")]
     b.case("kv_snapshot_roundtrip", || {
         let lit = snapshot.to_literal().unwrap();
         black_box(

@@ -1,5 +1,5 @@
 //! `figures` — regenerate every table and figure of the paper's
-//! evaluation (DESIGN.md §5 index; results recorded in EXPERIMENTS.md).
+//! evaluation (README § Experiments).
 //!
 //! ```text
 //! figures <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig8|fig11|fig12|fig13|

@@ -585,6 +585,133 @@ mod tests {
         });
     }
 
+    /// All four policies, for properties that must hold per policy.
+    const ALL_POLICIES: [PolicyKind; 4] = [
+        PolicyKind::Fifo,
+        PolicyKind::Lru,
+        PolicyKind::Lfu,
+        PolicyKind::Lcs,
+    ];
+
+    #[test]
+    fn prop_per_policy_capacity_and_hit_bounds() {
+        // For every policy: provisioned bytes never exceed capacity, and
+        // hit tokens never exceed input tokens (token hit rate ≤ 1).
+        for policy in ALL_POLICIES {
+            check(&format!("capacity-hit-bounds-{}", policy.name()), |rng: &mut Rng| {
+                let cap = rng.range(100, 3000) as u64;
+                let mut m = mgr(cap, policy);
+                let mut now = 0.0;
+                for step in 0..250 {
+                    now += rng.f64();
+                    let ctx = rng.below(15);
+                    let context = rng.range(0, 250) as u32;
+                    let new = rng.range(1, 80) as u32;
+                    let r = req(ctx, rng.below(4) as u32, context, new);
+                    let h = m.lookup(&r, now);
+                    crate::prop_assert!(
+                        h.hit_tokens <= r.context_tokens,
+                        "{policy:?} step {step}: hit beyond request context"
+                    );
+                    if rng.f64() < 0.8 {
+                        m.admit(&r, context + new, None, now);
+                    }
+                    crate::prop_assert!(
+                        m.used_bytes() <= m.capacity_bytes(),
+                        "{policy:?} step {step}: used {} > capacity {}",
+                        m.used_bytes(),
+                        m.capacity_bytes()
+                    );
+                }
+                let s = m.stats();
+                crate::prop_assert!(s.hit_tokens <= s.input_tokens, "{policy:?}: hit > input");
+                crate::prop_assert!(s.token_hit_rate() <= 1.0);
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn prop_shrink_then_grow_never_loses_accounting() {
+        // Shrinking evicts to fit; growing back must leave the survivors'
+        // accounting intact (sum of entry sizes == used bytes, entries
+        // still hittable) — no bytes leaked, none double-freed.
+        for policy in ALL_POLICIES {
+            check(&format!("shrink-grow-{}", policy.name()), |rng: &mut Rng| {
+                let cap = rng.range(500, 4000) as u64;
+                let mut m = mgr(cap, policy);
+                let mut now = 0.0;
+                for _ in 0..120 {
+                    now += 1.0;
+                    let context = rng.range(0, 200) as u32;
+                    let r = req(rng.below(25), 0, context, 20);
+                    m.lookup(&r, now);
+                    m.admit(&r, context + 20, None, now);
+                }
+                let small = rng.range(50, 400) as u64;
+                m.resize(small, now);
+                m.check_invariants().map_err(|e| format!("{policy:?} shrink: {e}"))?;
+                crate::prop_assert!(m.used_bytes() <= small);
+
+                let survivors: Vec<u64> =
+                    (0..25).filter(|k| m.entry(*k).is_some()).collect();
+                m.resize(cap * 2, now);
+                m.check_invariants().map_err(|e| format!("{policy:?} grow: {e}"))?;
+                // Growing evicts nothing and loses nothing.
+                for k in &survivors {
+                    crate::prop_assert!(
+                        m.entry(*k).is_some(),
+                        "{policy:?}: entry {k} lost by growing"
+                    );
+                }
+                // Survivors still produce hits with correct token counts.
+                for k in survivors {
+                    let tokens = m.entry(k).unwrap().tokens;
+                    let r = req(k, 1, tokens, 10);
+                    let h = m.lookup(&r, now + 1.0);
+                    crate::prop_assert!(h.hit && h.hit_tokens == tokens);
+                }
+                m.check_invariants().map_err(|e| format!("{policy:?} post-hit: {e}"))?;
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn prop_eviction_count_matches_insertions_minus_residents() {
+        // Every entry is either still resident or was evicted (clear()
+        // aside, which the churn below never calls): insertions ==
+        // evictions + len(), for every policy, under admissions, misses,
+        // oversized rejections and random resizes.
+        for policy in ALL_POLICIES {
+            check(&format!("evict-accounting-{}", policy.name()), |rng: &mut Rng| {
+                let mut m = mgr(rng.range(200, 2000) as u64, policy);
+                let mut now = 0.0;
+                for _ in 0..300 {
+                    now += 0.5;
+                    let context = rng.range(0, 400) as u32;
+                    let r = req(rng.below(30), rng.below(3) as u32, context, 10);
+                    m.lookup(&r, now);
+                    if rng.f64() < 0.75 {
+                        m.admit(&r, context + 10, None, now);
+                    }
+                    if rng.f64() < 0.05 {
+                        m.resize(rng.range(100, 2500) as u64, now);
+                    }
+                    let s = m.stats();
+                    crate::prop_assert!(
+                        s.insertions == s.evictions + m.len() as u64,
+                        "{policy:?}: insertions {} != evictions {} + residents {}",
+                        s.insertions,
+                        s.evictions,
+                        m.len()
+                    );
+                }
+                Ok(())
+            });
+        }
+    }
+
     #[test]
     fn prop_policies_differ_only_in_victims_not_accounting() {
         check("policy-accounting-agnostic", |rng: &mut Rng| {

@@ -8,7 +8,7 @@
 //! EnsembleCI-style adaptive ensemble whose MAPE lands in the paper's
 //! reported 6.8–15.3 % band (§6.5). The optimizer only ever consumes
 //! `(true CI, predicted CI)` pairs, so matching level + shape + error band
-//! preserves its decision problem (DESIGN.md §3).
+//! preserves its decision problem (README § System design).
 
 mod grids;
 mod predictor;

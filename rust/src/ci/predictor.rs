@@ -271,6 +271,19 @@ mod tests {
     }
 
     #[test]
+    fn holdout_mape_below_sanity_bound_on_every_grid() {
+        // Coarse sanity across all 12 grids (not just the Fig. 2a four):
+        // a held-out day must never blow past 30 % MAPE, and the
+        // evaluation must be seed-replayable.
+        for g in ALL_GRIDS {
+            let a = holdout_mape(g, 7);
+            let b = holdout_mape(g, 7);
+            assert_eq!(a, b, "{}: hold-out not replayable", g.name());
+            assert!(a < 30.0, "{}: hold-out MAPE {a:.1}% above sanity bound", g.name());
+        }
+    }
+
+    #[test]
     fn beats_raw_persistence_on_solar_grids() {
         // The diurnal swing makes persistence terrible on CISO; the
         // ensemble must exploit seasonality.

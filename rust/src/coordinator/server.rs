@@ -1,13 +1,17 @@
-//! Real-model request path: router + context cache + PJRT engine.
+//! Real-model request path: router + context cache + model backend.
 //!
-//! This is the end-to-end serving stack on the tiny-Llama artifacts: a
+//! This is the end-to-end serving stack on the tiny-Llama model: a
 //! request arrives with token ids and a context id; the router looks the
 //! context up in the [`CacheManager`] (payload = serialized KV bytes at a
 //! chunk boundary), the [`Engine`] resumes prefill after the cached
 //! prefix, decodes greedily, and the extended KV snapshot is written back
-//! to the cache. No Python anywhere; the engine thread owns the PJRT
-//! client (the handles are not `Sync`).
+//! to the cache. Under `--features pjrt` the engine is the real PJRT
+//! runtime over the AOT artifacts (and the engine thread owns the PJRT
+//! client — the handles are not `Sync`); the default build serves through
+//! the deterministic `SimBackend` instead, so the whole path runs
+//! offline.
 
+#[cfg(feature = "pjrt")]
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -29,7 +33,7 @@ pub struct Served {
     pub chunks_skipped: usize,
 }
 
-/// Aggregate serving report (printed by the examples / EXPERIMENTS.md).
+/// Aggregate serving report (printed by the examples).
 #[derive(Debug)]
 pub struct ServeReport {
     pub served: Vec<Served>,
@@ -205,7 +209,8 @@ impl Server {
 /// Run a server on its own thread, feeding requests through a channel —
 /// the deployment shape for a non-`Sync` PJRT client under a tokio-style
 /// app (the offline build has no tokio; std threads + mpsc carry the same
-/// structure).
+/// structure). PJRT-only: the default SimBackend path serves in-process.
+#[cfg(feature = "pjrt")]
 pub fn serve_on_thread(
     artifact_dir: std::path::PathBuf,
     cfg: ServerConfig,

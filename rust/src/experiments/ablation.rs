@@ -1,7 +1,12 @@
 //! §6.3–§6.6 ablations and sensitivity studies: Fig. 15–20 + Table 3.
+//!
+//! Fig. 15 (the densest cell grid here) expands through the scenario
+//! matrix and runs in parallel; the remaining exhibits keep their
+//! special-case loops (sensitivity overrides the matrix doesn't carry).
 
 use super::*;
 use crate::rng::Rng;
+use crate::scenario::{run_specs, Matrix};
 use crate::util::csv::Csv;
 
 /// Fig. 15: adaptive-caching ablation — GreenCache sizing with LRU
@@ -15,42 +20,54 @@ pub fn fig15(quick: bool) -> Csv {
         "carbon_per_request_g",
         "saving_vs_full_pct",
     ]);
-    let mut profiles = ProfileStore::new(quick);
     let es = Grid::Es.params().mean;
     println!("Fig 15 — adaptive caching ablation (ES avg CI {es:.0})");
+    // One matrix per (task, rate) pair — fixed_rps is a matrix-wide knob
+    // — concatenated into a single parallel run over all 18 cells.
+    let mut specs = Vec::new();
+    let mut rates = Vec::new();
     for task in [Task::Conversation, Task::Doc04] {
         let peak = Model::Llama70B.peak_rps(task.kind());
         for k in [2, 3, 4] {
             let rate = peak * k as f64 / 5.0;
-            let mut full_g = 0.0;
-            for baseline in [Baseline::FullCache, Baseline::LruOptimal, Baseline::GreenCache] {
-                let mut sc = DayScenario::new(Model::Llama70B, task, Grid::Es, baseline);
-                sc.fixed_rps = Some(rate);
-                sc.fixed_ci = Some(es);
-                if quick {
-                    sc = sc.quick();
-                } else {
-                    sc.hours = 12;
-                }
-                let r = run_day(&sc, &mut profiles);
-                if baseline == Baseline::FullCache {
-                    full_g = r.carbon_per_request_g;
-                }
-                let saving = saving_pct(full_g, r.carbon_per_request_g);
-                println!(
-                    "  {:<26} {rate:>5.2} rps {:<11}: {:>7.3} g/req  ({saving:>5.1}% vs Full)",
-                    task.name(),
-                    baseline.name(),
-                    r.carbon_per_request_g
-                );
-                csv.row(&[
-                    task.name().into(),
-                    format!("{rate:.2}"),
-                    baseline.name().into(),
-                    format!("{:.4}", r.carbon_per_request_g),
-                    format!("{saving:.2}"),
-                ]);
-            }
+            rates.push((task, rate));
+            specs.extend(
+                Matrix::new()
+                    .models(&[Model::Llama70B])
+                    .tasks(&[task])
+                    .grids(&[Grid::Es])
+                    .baselines(&[
+                        Baseline::FullCache,
+                        Baseline::LruOptimal,
+                        Baseline::GreenCache,
+                    ])
+                    .hours(12)
+                    .quick(quick)
+                    .fixed_rps(Some(rate))
+                    .fixed_ci(Some(es))
+                    .expand(),
+            );
+        }
+    }
+    let result = run_specs(&specs, 0);
+    for (gi, &(task, rate)) in rates.iter().enumerate() {
+        let group = &result.cells[gi * 3..gi * 3 + 3];
+        let full_g = group[0].carbon_per_request_g;
+        for c in group {
+            let saving = saving_pct(full_g, c.carbon_per_request_g);
+            println!(
+                "  {:<26} {rate:>5.2} rps {:<11}: {:>7.3} g/req  ({saving:>5.1}% vs Full)",
+                task.name(),
+                c.spec.baseline.name(),
+                c.carbon_per_request_g
+            );
+            csv.row(&[
+                task.name().into(),
+                format!("{rate:.2}"),
+                c.spec.baseline.name().into(),
+                format!("{:.4}", c.carbon_per_request_g),
+                format!("{saving:.2}"),
+            ]);
         }
     }
     println!("  (paper: up to 10.3% conv / 6.6-9.9% doc savings from adaptive sizing)");

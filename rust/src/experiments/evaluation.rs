@@ -1,6 +1,11 @@
 //! §6.2 headline evaluation: Figs. 11–14.
+//!
+//! The multi-cell exhibits (Figs. 12–14) expand a declarative
+//! [`Matrix`] and execute the cells in parallel through the scenario
+//! runner; only the printing/CSV shaping stays here.
 
 use super::*;
+use crate::scenario::{run_specs, Matrix};
 use crate::util::csv::Csv;
 
 /// Fig. 11: profiling heatmaps (TTFT, TPOT, carbon savings) over
@@ -79,54 +84,53 @@ pub fn fig12(quick: bool, models: &[Model]) -> Csv {
         "slo_attainment",
         "saving_vs_full_pct",
     ]);
-    let mut profiles = ProfileStore::new(quick);
     println!("Fig 12 — average carbon per request (24h co-simulation)");
-    for &model in models {
-        for task in Task::all() {
-            for grid in crate::ci::FIG2A_GRIDS {
-                let mut full_g = 0.0;
-                for baseline in [Baseline::NoCache, Baseline::FullCache, Baseline::GreenCache] {
-                    let mut sc = DayScenario::new(model, task, grid, baseline);
-                    if quick {
-                        sc = sc.quick();
-                    }
-                    let r = run_day(&sc, &mut profiles);
-                    if baseline == Baseline::FullCache {
-                        full_g = r.carbon_per_request_g;
-                    }
-                    let saving = if baseline == Baseline::GreenCache {
-                        saving_pct(full_g, r.carbon_per_request_g)
-                    } else {
-                        0.0
-                    };
-                    println!(
-                        "  {:<11} {:<26} {:<5} {:<11}: {:>8.3} g/req  cache {:>5.1} TB  SLO {:>5.1}%{}",
-                        model.name(),
-                        task.name(),
-                        grid.name(),
-                        baseline.name(),
-                        r.carbon_per_request_g,
-                        r.mean_cache_tb,
-                        r.sim.slo.attainment() * 100.0,
-                        if baseline == Baseline::GreenCache {
-                            format!("  saves {saving:.1}% vs Full")
-                        } else {
-                            String::new()
-                        }
-                    );
-                    csv.row(&[
-                        model.name().into(),
-                        task.name().into(),
-                        grid.name().into(),
-                        baseline.name().into(),
-                        format!("{:.4}", r.carbon_per_request_g),
-                        format!("{:.2}", r.mean_cache_tb),
-                        format!("{:.4}", r.sim.slo.attainment()),
-                        format!("{saving:.2}"),
-                    ]);
-                }
-            }
+    // The full model × task × grid × baseline cartesian, executed in
+    // parallel (cells stay in model-major expansion order, so each
+    // (model, task, grid) group is three consecutive baselines).
+    let matrix = Matrix::new()
+        .models(models)
+        .tasks(&Task::all())
+        .grids(&crate::ci::FIG2A_GRIDS)
+        .baselines(&[Baseline::NoCache, Baseline::FullCache, Baseline::GreenCache])
+        .quick(quick);
+    let result = run_specs(&matrix.expand(), 0);
+    let mut full_g = 0.0;
+    for c in &result.cells {
+        let baseline = c.spec.baseline;
+        if baseline == Baseline::FullCache {
+            full_g = c.carbon_per_request_g;
         }
+        let saving = if baseline == Baseline::GreenCache {
+            saving_pct(full_g, c.carbon_per_request_g)
+        } else {
+            0.0
+        };
+        println!(
+            "  {:<11} {:<26} {:<5} {:<11}: {:>8.3} g/req  cache {:>5.1} TB  SLO {:>5.1}%{}",
+            c.spec.model.name(),
+            c.spec.task.name(),
+            c.spec.grid.name(),
+            baseline.name(),
+            c.carbon_per_request_g,
+            c.mean_cache_tb,
+            c.slo_attainment * 100.0,
+            if baseline == Baseline::GreenCache {
+                format!("  saves {saving:.1}% vs Full")
+            } else {
+                String::new()
+            }
+        );
+        csv.row(&[
+            c.spec.model.name().into(),
+            c.spec.task.name().into(),
+            c.spec.grid.name().into(),
+            baseline.name().into(),
+            format!("{:.4}", c.carbon_per_request_g),
+            format!("{:.2}", c.mean_cache_tb),
+            format!("{:.4}", c.slo_attainment),
+            format!("{saving:.2}"),
+        ]);
     }
     csv
 }
@@ -142,42 +146,40 @@ pub fn fig13(quick: bool) -> Csv {
         "ttft_slo_s",
         "tpot_slo_s",
     ]);
-    let mut profiles = ProfileStore::new(quick);
     let model = Model::Llama70B;
     let slo = model.slo(TaskKind::Conversation);
     println!("Fig 13 — P90 latency timelines vs SLO (conversation, 70B)");
-    for grid in [Grid::Fr, Grid::Ciso] {
-        for baseline in [Baseline::NoCache, Baseline::FullCache, Baseline::GreenCache] {
-            let mut sc = DayScenario::new(model, Task::Conversation, grid, baseline);
-            if quick {
-                sc = sc.quick();
-            }
-            let r = run_day(&sc, &mut profiles);
-            let violations = r
-                .sim
-                .hours
-                .iter()
-                .filter(|h| h.p90_ttft_s > slo.ttft_s || h.p90_tpot_s > slo.tpot_s)
-                .count();
-            println!(
-                "  {:<5} {:<11}: SLO attainment {:>5.1}%, {}/{} hours with P90 over threshold",
-                grid.name(),
-                baseline.name(),
-                r.sim.slo.attainment() * 100.0,
-                violations,
-                r.sim.hours.len()
-            );
-            for h in &r.sim.hours {
-                csv.row(&[
-                    grid.name().into(),
-                    baseline.name().into(),
-                    h.hour.to_string(),
-                    format!("{:.3}", h.p90_ttft_s),
-                    format!("{:.4}", h.p90_tpot_s),
-                    format!("{}", slo.ttft_s),
-                    format!("{}", slo.tpot_s),
-                ]);
-            }
+    let matrix = Matrix::new()
+        .models(&[model])
+        .tasks(&[Task::Conversation])
+        .grids(&[Grid::Fr, Grid::Ciso])
+        .baselines(&[Baseline::NoCache, Baseline::FullCache, Baseline::GreenCache])
+        .quick(quick);
+    let result = run_specs(&matrix.expand(), 0);
+    for c in &result.cells {
+        let violations = c
+            .hours
+            .iter()
+            .filter(|h| h.p90_ttft_s > slo.ttft_s || h.p90_tpot_s > slo.tpot_s)
+            .count();
+        println!(
+            "  {:<5} {:<11}: SLO attainment {:>5.1}%, {}/{} hours with P90 over threshold",
+            c.spec.grid.name(),
+            c.spec.baseline.name(),
+            c.slo_attainment * 100.0,
+            violations,
+            c.hours.len()
+        );
+        for h in &c.hours {
+            csv.row(&[
+                c.spec.grid.name().into(),
+                c.spec.baseline.name().into(),
+                h.hour.to_string(),
+                format!("{:.3}", h.p90_ttft_s),
+                format!("{:.4}", h.p90_tpot_s),
+                format!("{}", slo.ttft_s),
+                format!("{}", slo.tpot_s),
+            ]);
         }
     }
     csv
@@ -196,62 +198,51 @@ pub fn fig14(quick: bool) -> Csv {
         "cache_tb",
         "carbon_per_prompt_g",
     ]);
-    let mut profiles = ProfileStore::new(quick);
     let model = Model::Llama70B;
     println!("Fig 14 — daily timelines (cache size adapts to CI and load)");
+    let matrix = Matrix::new()
+        .models(&[model])
+        .tasks(&[Task::Conversation, Task::Doc04])
+        .grids(&crate::ci::FIG2A_GRIDS)
+        .baselines(&[Baseline::FullCache, Baseline::GreenCache])
+        .quick(quick);
+    let result = run_specs(&matrix.expand(), 0);
+    let per_prompt = |h: &crate::sim::HourSample| -> f64 {
+        if h.completed > 0 {
+            h.carbon_g / h.completed as f64
+        } else {
+            0.0
+        }
+    };
     for task in [Task::Conversation, Task::Doc04] {
         for grid in crate::ci::FIG2A_GRIDS {
-            let mut day_saving = Vec::new();
-            let mut rows: Vec<Vec<String>> = Vec::new();
-            let mut full_hours = Vec::new();
-            for baseline in [Baseline::FullCache, Baseline::GreenCache] {
-                let mut sc = DayScenario::new(model, task, grid, baseline);
-                if quick {
-                    sc = sc.quick();
-                }
-                let r = run_day(&sc, &mut profiles);
-                for h in &r.sim.hours {
-                    let per_prompt = if h.completed > 0 {
-                        h.carbon_g / h.completed as f64
-                    } else {
-                        0.0
-                    };
-                    rows.push(vec![
+            let full = result
+                .find(model, task, grid, Baseline::FullCache)
+                .expect("full cell");
+            let green = result
+                .find(model, task, grid, Baseline::GreenCache)
+                .expect("green cell");
+            for c in [full, green] {
+                for h in &c.hours {
+                    csv.row(&[
                         task.name().into(),
                         grid.name().into(),
-                        baseline.name().into(),
+                        c.spec.baseline.name().into(),
                         h.hour.to_string(),
                         format!("{:.1}", h.ci),
                         format!("{:.3}", h.rps),
                         format!("{:.1}", h.cache_bytes as f64 / TB),
-                        format!("{per_prompt:.4}"),
+                        format!("{:.4}", per_prompt(h)),
                     ]);
                 }
-                if baseline == Baseline::FullCache {
-                    full_hours = r
-                        .sim
-                        .hours
-                        .iter()
-                        .map(|h| {
-                            if h.completed > 0 {
-                                h.carbon_g / h.completed as f64
-                            } else {
-                                0.0
-                            }
-                        })
-                        .collect();
-                } else {
-                    for (i, h) in r.sim.hours.iter().enumerate() {
-                        if i < full_hours.len() && h.completed > 0 && full_hours[i] > 0.0 {
-                            let g = h.carbon_g / h.completed as f64;
-                            day_saving.push(saving_pct(full_hours[i], g));
-                        }
-                    }
-                }
             }
-            for row in rows {
-                csv.row(&row);
-            }
+            let day_saving: Vec<f64> = green
+                .hours
+                .iter()
+                .zip(&full.hours)
+                .filter(|&(g, f)| g.completed > 0 && per_prompt(f) > 0.0)
+                .map(|(g, f)| saving_pct(per_prompt(f), per_prompt(g)))
+                .collect();
             if !day_saving.is_empty() {
                 let avg = day_saving.iter().sum::<f64>() / day_saving.len() as f64;
                 let max = day_saving.iter().cloned().fold(f64::NEG_INFINITY, f64::max);

@@ -1,12 +1,14 @@
 //! Experiment harness: regenerates every table and figure of the paper's
-//! evaluation (DESIGN.md §5 experiment index).
+//! evaluation (README § Experiments).
 //!
 //! Each `figN`/`tableN` function runs the corresponding workload on the
 //! calibrated simulator (or the characterization cost model), prints the
 //! paper-shaped rows, and returns a [`crate::util::csv::Csv`] the
 //! `figures` binary writes under `results/`. The paper's absolute rates
-//! don't transfer (different substrate — see EXPERIMENTS.md §Scaling);
+//! don't transfer (different substrate — see README § Scaling);
 //! the comparisons, orderings and crossovers are the reproduction target.
+//! Multi-cell exhibits fan out through [`crate::scenario`]'s parallel
+//! matrix runner.
 
 pub mod ablation;
 pub mod characterization;
@@ -86,7 +88,7 @@ impl Model {
 
     /// Peak request rate the platform sustains with a warm cache — the
     /// Azure trace is downscaled to this (§6.1). The paper's absolute
-    /// axis is ≈ 2–3× higher (their testbed; see EXPERIMENTS.md §Scaling).
+    /// axis is ≈ 2–3× higher (their testbed; see README § Scaling).
     pub fn peak_rps(&self, task: TaskKind) -> f64 {
         match (self, task) {
             (Model::Llama70B, TaskKind::Conversation) => 0.9,
@@ -201,6 +203,9 @@ pub struct DayScenario {
     pub fixed_rps: Option<f64>,
     /// Fixed CI instead of the grid trace (§6.3/§6.6 use grid averages).
     pub fixed_ci: Option<f64>,
+    /// Eviction-policy override; `None` keeps the baseline's default
+    /// pairing (the scenario matrix's policy axis drives this).
+    pub policy_override: Option<PolicyKind>,
 }
 
 impl DayScenario {
@@ -221,6 +226,7 @@ impl DayScenario {
             profile_noise: 0.0,
             fixed_rps: None,
             fixed_ci: None,
+            policy_override: None,
         }
     }
 
@@ -240,7 +246,9 @@ pub struct DayResult {
 }
 
 /// Profile cache: profiling is the expensive step and identical across
-/// baselines/grids, so share per (model, task, policy).
+/// baselines/grids, so share per (model, task, policy). `Clone` lets the
+/// scenario-matrix runner hand each worker thread a prewarmed copy.
+#[derive(Clone)]
 pub struct ProfileStore {
     entries: std::collections::HashMap<(Model, Task, PolicyKind), ProfileTable>,
     quick: bool,
@@ -314,14 +322,14 @@ pub fn run_day(sc: &DayScenario, profiles: &mut ProfileStore) -> DayResult {
         .clone()
         .unwrap_or_else(|| model.embodied());
 
-    // Cache setup per baseline.
+    // Cache setup per baseline (policy overridable by the scenario
+    // matrix's policy axis).
     let max_bytes = model.max_cache_tb() as u64 * TB as u64;
-    let (capacity, policy) = match sc.baseline {
-        Baseline::NoCache => (0u64, PolicyKind::Lcs),
-        Baseline::FullCache => (max_bytes, PolicyKind::Lru),
-        Baseline::GreenCache => (max_bytes, PolicyKind::Lcs),
-        Baseline::LruOptimal => (max_bytes, PolicyKind::Lru),
+    let capacity = match sc.baseline {
+        Baseline::NoCache => 0u64,
+        _ => max_bytes,
     };
+    let policy = sc.policy_override.unwrap_or_else(|| sc.baseline.policy());
     let mut cache = CacheManager::new(capacity, model.kv_bytes_per_token(), policy);
     let mut wl = sc.task.make_workload(sc.seed);
     if capacity > 0 {

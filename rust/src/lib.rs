@@ -1,9 +1,9 @@
 //! GreenCache: carbon-aware KV-cache management for LLM serving.
 //!
 //! Reproduction of *"Cache Your Prompt When It's Green: Carbon-Aware
-//! Caching for Large Language Model Serving"* (CS.DC 2025). See DESIGN.md
-//! for the system inventory and the per-experiment index, and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! Caching for Large Language Model Serving"* (CS.DC 2025). See
+//! README.md for the system inventory, build/feature instructions and
+//! the per-experiment index.
 //!
 //! The crate is the L3 coordinator of a three-layer stack:
 //!
@@ -11,15 +11,18 @@
 //!   compiled at build time.
 //! * **L2** — a tiny Llama-style JAX model (`python/compile/model.py`)
 //!   exported as fixed-shape HLO-text programs (`artifacts/`).
-//! * **L3** — this crate: loads the artifacts through PJRT ([`runtime`]),
+//! * **L3** — this crate: drives the model through a prefill/decode
+//!   backend ([`runtime`] — the PJRT engine under `--features pjrt`, a
+//!   deterministic `SimBackend` by default so everything runs offline),
 //!   routes/batches requests ([`coordinator`]), manages the context cache
 //!   ([`cache`]), accounts carbon ([`carbon`]), predicts carbon intensity
 //!   ([`ci`]) and load ([`load`]), sizes the cache with an ILP
-//!   ([`solver`]), and reproduces the paper's evaluation through a
-//!   calibrated cluster simulator ([`sim`] + [`profiler`]).
+//!   ([`solver`]), reproduces the paper's evaluation through a
+//!   calibrated cluster simulator ([`sim`] + [`profiler`]), and fans
+//!   evaluation cells out through the parallel [`scenario`] matrix.
 //!
-//! Python never runs on the request path: after `make artifacts`, the rust
-//! binary is self-contained.
+//! Python never runs on the request path: the default build is
+//! self-contained, and after `make artifacts` the `pjrt` build is too.
 
 pub mod cache;
 pub mod carbon;
@@ -31,6 +34,7 @@ pub mod metrics;
 pub mod profiler;
 pub mod rng;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod solver;
 pub mod util;

@@ -194,6 +194,47 @@ mod tests {
     }
 
     #[test]
+    fn forecast_deterministic_under_fixed_seed() {
+        // Same seed → same trace → bit-identical fit and forecast: the
+        // whole predictor path is replayable.
+        let t1 = LoadTrace::azure_like(4, 2.0, 77);
+        let t2 = LoadTrace::azure_like(4, 2.0, 77);
+        assert_eq!(t1.hourly_rps, t2.hourly_rps, "trace synthesis not seeded");
+        let m1 = Sarima::fit(&t1.hourly_rps[..72], 24, 2).unwrap();
+        let m2 = Sarima::fit(&t2.hourly_rps[..72], 24, 2).unwrap();
+        assert_eq!(m1.coefficients(), m2.coefficients());
+        assert_eq!(m1.forecast(24), m2.forecast(24));
+    }
+
+    #[test]
+    fn diurnal_seasonality_is_picked_up() {
+        // On a synthetic diurnal trace, the seasonal (24 h) structure
+        // must carry into the forecast: SARIMA beats the best
+        // season-blind forecast (flat persistence) by a wide margin, and
+        // the forecast actually swings (not a flat line).
+        let t = LoadTrace::azure_like(4, 2.0, 21);
+        let (train, test) = t.hourly_rps.split_at(72);
+        let m = Sarima::fit(train, 24, 2).unwrap();
+        let pred = m.forecast(24);
+
+        let sarima_mape = mape(test, &pred);
+        let persist = vec![*train.last().unwrap(); 24];
+        let persist_mape = mape(test, &persist);
+        assert!(
+            sarima_mape < persist_mape,
+            "SARIMA {sarima_mape:.1}% must beat season-blind persistence {persist_mape:.1}%"
+        );
+
+        let mean = pred.iter().sum::<f64>() / pred.len() as f64;
+        let swing = pred.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            - pred.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            swing > 0.2 * mean,
+            "forecast is flat (swing {swing:.3} vs mean {mean:.3}) — no diurnal cycle"
+        );
+    }
+
+    #[test]
     fn forecast_nonnegative() {
         let t = LoadTrace::azure_like(4, 0.2, 9);
         let m = Sarima::fit(&t.hourly_rps[..72], 24, 2).unwrap();

@@ -1,5 +1,5 @@
 //! Azure-style diurnal request-rate trace (substitute for [3], see
-//! DESIGN.md §3).
+//! README § System design).
 
 use crate::rng::Rng;
 

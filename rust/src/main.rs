@@ -6,6 +6,10 @@
 //! greencache serve    [--requests N] [--cache-mb M] [--policy lcs|lru|fifo|lfu]
 //! greencache simulate [--task conv|doc04|doc07] [--grid FR|FI|ES|CISO|...]
 //!                     [--baseline none|full|green|lru-optimal] [--hours H] [--quick]
+//! greencache matrix   [--models 70b,8b] [--tasks conv,doc04,doc07]
+//!                     [--grids FR,ES,...] [--baselines none,full,green]
+//!                     [--policies lcs,lru] [--hours H] [--threads N]
+//!                     [--seed S] [--quick]
 //! greencache profile  [--task conv|doc04|doc07] [--quick]
 //! greencache decide   [--grid ES] [--hour H]
 //! greencache info
@@ -14,9 +18,10 @@
 use greencache::cache::PolicyKind;
 use greencache::ci::Grid;
 use greencache::coordinator::server::{Server, ServerConfig};
-use greencache::experiments::{run_day, Baseline, DayScenario, Model, ProfileStore, Task};
+use greencache::experiments::{Baseline, Model, ProfileStore, Task};
 use greencache::rng::Rng;
 use greencache::runtime::{default_artifact_dir, Engine};
+use greencache::scenario::{Matrix, MatrixRunner, ScenarioSpec};
 use greencache::workload::{ConversationGen, ConversationParams, Request, Workload};
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
@@ -119,7 +124,10 @@ fn parse_baseline(s: &str) -> Baseline {
 fn cmd_info() -> greencache::Result<()> {
     let dir = default_artifact_dir();
     println!("artifact dir: {dir:?}");
-    let cfg = greencache::runtime::ModelConfig::load(&dir)?;
+    if !dir.join("model_config.json").exists() {
+        println!("(no artifacts on disk — showing the built-in SimBackend shape)");
+    }
+    let cfg = greencache::runtime::ModelConfig::load_or_default(&dir)?;
     println!(
         "model: vocab={} d_model={} layers={} heads={} window={} chunk={} (pallas kernel: {})",
         cfg.vocab,
@@ -205,39 +213,111 @@ fn cmd_simulate(args: &Args) -> greencache::Result<()> {
     let task = parse_task(args.get("task").unwrap_or("conv"));
     let grid = parse_grid(args.get("grid").unwrap_or("ES"));
     let baseline = parse_baseline(args.get("baseline").unwrap_or("green"));
-    let hours = args.usize("hours", 24);
     let quick = args.bool("quick");
 
-    let mut sc = DayScenario::new(Model::Llama70B, task, grid, baseline);
-    sc.hours = hours;
+    // One-cell scenario driven through the same spec/runner layer as the
+    // full matrix.
+    let mut spec = ScenarioSpec::new(Model::Llama70B, task, grid, baseline);
+    spec.hours = args.usize("hours", 24);
     if quick {
-        sc = sc.quick();
+        spec = spec.quick();
     }
-    let mut profiles = ProfileStore::new(quick);
     println!(
         "simulating {} on {} grid with {} ({}h)...",
         task.name(),
         grid.name(),
         baseline.name(),
-        sc.hours
+        spec.hours
     );
-    let r = run_day(&sc, &mut profiles);
+    let result = greencache::scenario::run_specs(&[spec], 1);
+    let c = &result.cells[0];
     println!(
         "completed {} requests; carbon {:.3} g/request; mean cache {:.1} TB; SLO attainment {:.1}%",
-        r.sim.completed,
-        r.carbon_per_request_g,
-        r.mean_cache_tb,
-        r.sim.slo.attainment() * 100.0
+        c.completed,
+        c.carbon_per_request_g,
+        c.mean_cache_tb,
+        c.slo_attainment * 100.0
     );
     println!(
         "mean TTFT {:.2}s, mean TPOT {:.3}s, token hit rate {:.2}",
-        r.sim.mean_ttft_s, r.sim.mean_tpot_s, r.sim.token_hit_rate
+        c.mean_ttft_s, c.mean_tpot_s, c.token_hit_rate
     );
-    if !r.decisions.is_empty() {
-        let avg: f64 = r.decisions.iter().map(|d| d.solve_time_s).sum::<f64>()
-            / r.decisions.len() as f64;
-        println!("{} resize decisions, avg solve {:.4}s", r.decisions.len(), avg);
+    if c.n_decisions > 0 {
+        println!(
+            "{} resize decisions, avg solve {:.4}s",
+            c.n_decisions, c.mean_solve_time_s
+        );
     }
+    Ok(())
+}
+
+/// Parse a comma-separated axis list with a per-item parser.
+fn parse_list<T>(args: &Args, key: &str, default: &str, parse: impl Fn(&str) -> T) -> Vec<T> {
+    args.get(key)
+        .unwrap_or(default)
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(parse)
+        .collect()
+}
+
+/// Run a full scenario matrix in parallel and print the result table.
+fn cmd_matrix(args: &Args) -> greencache::Result<()> {
+    let models = parse_list(args, "models", "70b", |s| {
+        match s.to_ascii_lowercase().as_str() {
+            "8b" | "llama8b" => Model::Llama8B,
+            "70b" | "llama70b" => Model::Llama70B,
+            other => {
+                eprintln!("unknown model {other}, using 70b");
+                Model::Llama70B
+            }
+        }
+    });
+    let tasks = parse_list(args, "tasks", "conv", parse_task);
+    let grids = parse_list(args, "grids", "FR,ES", parse_grid);
+    let baselines = parse_list(args, "baselines", "none,full,green", parse_baseline);
+    let policies: Vec<Option<PolicyKind>> = match args.get("policies") {
+        None => vec![None],
+        Some(list) => list
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| Some(parse_policy(s)))
+            .collect(),
+    };
+
+    let matrix = Matrix::new()
+        .models(&models)
+        .tasks(&tasks)
+        .grids(&grids)
+        .baselines(&baselines)
+        .policies(&policies)
+        .hours(args.usize("hours", 24))
+        .quick(args.bool("quick"))
+        .seed(args.usize("seed", 20_25) as u64);
+    let specs = matrix.expand();
+    anyhow::ensure!(!specs.is_empty(), "matrix expanded to zero cells");
+
+    let runner = MatrixRunner {
+        threads: args.usize("threads", 0),
+        verbose: true,
+    };
+    println!(
+        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies)...",
+        specs.len(),
+        models.len(),
+        tasks.len(),
+        grids.len(),
+        baselines.len(),
+        policies.len()
+    );
+    let result = runner.run(&specs);
+    print!("{}", result.table());
+    println!(
+        "{} cells in {:.1}s on {} threads",
+        result.cells.len(),
+        result.wall_s,
+        result.threads
+    );
     Ok(())
 }
 
@@ -298,11 +378,12 @@ fn main() {
     let result = match cmd {
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
+        "matrix" => cmd_matrix(&args),
         "profile" => cmd_profile(&args),
         "decide" => cmd_decide(&args),
         "info" => cmd_info(),
         _ => {
-            println!("usage: greencache <serve|simulate|profile|decide|info> [--flags]");
+            println!("usage: greencache <serve|simulate|matrix|profile|decide|info> [--flags]");
             println!("see rust/src/main.rs docs for flags");
             Ok(())
         }

@@ -5,29 +5,7 @@ use std::time::{Duration, Instant};
 
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-use super::{KvState, ModelConfig};
-
-/// Timing + output of a prefill pass.
-#[derive(Debug, Clone)]
-pub struct PrefillResult {
-    pub logits: Vec<f32>,
-    /// Number of `prefill_chunk` executions (cache hits reduce this).
-    pub chunks_executed: usize,
-    pub wall: Duration,
-}
-
-/// Timing + output of a full generate call.
-#[derive(Debug, Clone)]
-pub struct GenerationResult {
-    pub tokens: Vec<i32>,
-    /// Time To First Token: prefill + first sample.
-    pub ttft: Duration,
-    /// Mean Time Per Output Token over the decode phase.
-    pub tpot: Duration,
-    pub chunks_executed: usize,
-    pub chunks_skipped: usize,
-    pub decode_steps: usize,
-}
+use super::{argmax, GenerationResult, KvState, ModelConfig, PrefillResult};
 
 /// Compiled model: a PJRT CPU client plus the two AOT programs.
 ///
@@ -89,7 +67,7 @@ impl Engine {
     /// Run one `prefill_chunk` program: process `valid` tokens at
     /// positions `start..start+valid` (tokens padded to chunk length).
     /// KV is threaded as a `Literal` so the multi-chunk/decode loops skip
-    /// the bytes round-trip (EXPERIMENTS.md §Perf iteration 2).
+    /// the bytes round-trip (README § Performance notes).
     fn run_prefill_chunk_lit(
         &self,
         tokens: &[i32],
@@ -217,7 +195,7 @@ impl Engine {
         let skipped = kv.len / c;
         let t0 = Instant::now();
         // The whole generation threads the KV as a Literal; bytes are
-        // materialized exactly once at the end (§Perf iteration 2).
+        // materialized exactly once at the end.
         let (mut kv_lit, logits, chunks_executed) =
             self.prefill_lit(prompt, kv.to_literal()?, kv.len)?;
         let mut tok = argmax(&logits);
@@ -251,25 +229,3 @@ impl Engine {
     }
 }
 
-/// Index of the max logit (greedy sampling).
-pub fn argmax(logits: &[f32]) -> i32 {
-    let mut best = 0usize;
-    for (i, &x) in logits.iter().enumerate() {
-        if x > logits[best] {
-            best = i;
-        }
-    }
-    best as i32
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn argmax_picks_first_max() {
-        assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]), 1);
-        assert_eq!(argmax(&[5.0]), 0);
-        assert_eq!(argmax(&[-2.0, -1.0]), 1);
-    }
-}

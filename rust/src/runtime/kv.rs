@@ -1,10 +1,13 @@
 //! Host-side KV cache state for one sequence.
 //!
-//! The PJRT programs take/return the full fixed-shape KV buffer
+//! The backend programs take/return the full fixed-shape KV buffer
 //! `f32[L, 2, S, H, D]`; [`KvState`] pairs those bytes with the number of
 //! valid rows. Cache entries store a `KvState` snapshot at a chunk
-//! boundary; resuming from it is the context-cache hit.
+//! boundary; resuming from it is the context-cache hit. The XLA `Literal`
+//! round-trips are only compiled under the `pjrt` feature — the default
+//! SimBackend operates on the raw bytes directly.
 
+#[cfg(feature = "pjrt")]
 use xla::{ElementType, Literal};
 
 /// One sequence's KV cache: raw f32 bytes plus the valid prefix length.
@@ -29,13 +32,14 @@ impl KvState {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &Literal, len: usize, shape: &[usize]) -> crate::Result<Self> {
         let v: Vec<f32> = lit.to_vec()?;
         let elems: usize = shape.iter().product();
         anyhow::ensure!(v.len() == elems, "kv literal has {} elems, want {elems}", v.len());
         // Bulk reinterpret f32 → LE bytes (hot path: one memcpy instead of
-        // a per-element loop — see EXPERIMENTS.md §Perf). Little-endian
-        // targets only, which this build always is.
+        // a per-element loop). Little-endian targets only, which this
+        // build always is.
         let mut bytes = vec![0u8; v.len() * 4];
         debug_assert!(cfg!(target_endian = "little"));
         unsafe {
@@ -48,6 +52,7 @@ impl KvState {
         Ok(KvState { bytes, len, shape: shape.to_vec() })
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> crate::Result<Literal> {
         Ok(Literal::create_from_shape_and_untyped_data(
             ElementType::F32,
@@ -94,6 +99,7 @@ mod tests {
         assert!(kv.bytes.iter().all(|&b| b == 0));
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_round_trip() {
         let shape = [1usize, 2, 4, 1, 2];
@@ -111,7 +117,7 @@ mod tests {
     }
 
     #[test]
-    fn fingerprint_changes_with_content_and_len(){
+    fn fingerprint_changes_with_content_and_len() {
         let shape = [1usize, 2, 4, 1, 2];
         let a = KvState::empty(&shape);
         let mut b = KvState::empty(&shape);

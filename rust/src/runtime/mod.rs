@@ -1,25 +1,72 @@
-//! PJRT runtime: load the AOT artifacts and drive the model request path.
+//! Model runtime: the prefill/decode backend behind the request path.
 //!
-//! The python side (`make artifacts`) lowered two fixed-shape programs to
-//! HLO text (text, not serialized proto — xla_extension 0.5.1 rejects
-//! jax≥0.5 64-bit-id protos):
+//! Two interchangeable backends implement the same sequence-level API
+//! (chunked prefill optionally resuming from a cached KV prefix — the
+//! paper's context-cache hit — plus greedy decode):
 //!
-//! * `prefill_chunk.hlo.txt`: `(tokens[C] s32, kv f32[L,2,S,H,D], start
-//!   s32, valid s32) -> (kv', logits[V])`
-//! * `decode_step.hlo.txt`: `(token[1] s32, kv, pos s32) -> (logits, kv')`
+//! * **PJRT** (`--features pjrt`): loads the AOT artifacts produced by
+//!   `make artifacts` (the python side lowered two fixed-shape programs
+//!   to HLO text — `prefill_chunk.hlo.txt` and `decode_step.hlo.txt`),
+//!   compiles them once on a CPU PJRT client and executes them per
+//!   request. Requires the vendored `xla` crate (README § Features).
+//! * **SimBackend** (default): a fully deterministic stand-in with the
+//!   same invariants and chunk accounting, so the entire serving stack —
+//!   router, context cache, golden tests, examples — builds and runs
+//!   offline with no artifacts and no XLA present.
 //!
-//! [`Engine`] compiles both once on a `PjRtClient::cpu()` and exposes a
-//! sequence-level API: chunked prefill (optionally resuming from a cached
-//! KV prefix — the paper's context-cache hit) and greedy decode.
+//! `Engine` is the active backend: the PJRT engine under `pjrt`, the
+//! deterministic stub otherwise. Code downstream (coordinator, tests,
+//! examples) only ever names `runtime::Engine`.
 
+#[cfg(feature = "pjrt")]
 mod engine;
 mod kv;
+mod sim_backend;
 
-pub use engine::{argmax, Engine, GenerationResult, PrefillResult};
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
 pub use kv::KvState;
+pub use sim_backend::SimBackend;
+
+#[cfg(not(feature = "pjrt"))]
+pub use sim_backend::SimBackend as Engine;
 
 use crate::util::json::Json;
 use std::path::Path;
+use std::time::Duration;
+
+/// Timing + output of a prefill pass.
+#[derive(Debug, Clone)]
+pub struct PrefillResult {
+    pub logits: Vec<f32>,
+    /// Number of `prefill_chunk` executions (cache hits reduce this).
+    pub chunks_executed: usize,
+    pub wall: Duration,
+}
+
+/// Timing + output of a full generate call.
+#[derive(Debug, Clone)]
+pub struct GenerationResult {
+    pub tokens: Vec<i32>,
+    /// Time To First Token: prefill + first sample.
+    pub ttft: Duration,
+    /// Mean Time Per Output Token over the decode phase.
+    pub tpot: Duration,
+    pub chunks_executed: usize,
+    pub chunks_skipped: usize,
+    pub decode_steps: usize,
+}
+
+/// Index of the max logit (greedy sampling).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
 
 /// Model dimensions, read from `artifacts/model_config.json` (written by
 /// `python/compile/aot.py` from the same dataclass that shaped the HLO).
@@ -46,6 +93,38 @@ impl ModelConfig {
         let cfg = Self::from_json(&Json::parse(&text)?)?;
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Load the artifact config if present, otherwise fall back to the
+    /// built-in tiny-Llama shape. This is what lets the default
+    /// (SimBackend) build run with no artifacts on disk.
+    pub fn load_or_default(artifact_dir: &Path) -> crate::Result<Self> {
+        if artifact_dir.join("model_config.json").exists() {
+            Self::load(artifact_dir)
+        } else {
+            Ok(Self::tiny_default())
+        }
+    }
+
+    /// The tiny-Llama shape the python pipeline exports (mirrors the
+    /// dataclass in `python/compile/model.py`); the SimBackend default.
+    pub fn tiny_default() -> Self {
+        let (n_layers, n_heads, d_head, max_seq) = (2usize, 4usize, 32usize, 512usize);
+        let kv_shape = vec![n_layers, 2, max_seq, n_heads, d_head];
+        let kv_bytes = kv_shape.iter().product::<usize>() * 4;
+        ModelConfig {
+            vocab: 256,
+            d_model: 128,
+            n_layers,
+            n_heads,
+            d_head,
+            d_ffn: 256,
+            max_seq,
+            chunk: 64,
+            kv_shape,
+            kv_bytes,
+            lowered_with_pallas_kernel: false,
+        }
     }
 
     pub fn from_json(v: &Json) -> crate::Result<Self> {
@@ -156,6 +235,14 @@ mod tests {
     }
 
     #[test]
+    fn tiny_default_validates() {
+        let c = ModelConfig::tiny_default();
+        c.validate().unwrap();
+        assert_eq!(c.max_seq % c.chunk, 0);
+        assert!(c.kv_bytes_per_token() >= 8);
+    }
+
+    #[test]
     fn config_rejects_bad_kv_shape() {
         let mut c = cfg();
         c.kv_shape[2] = 17;
@@ -178,5 +265,12 @@ mod tests {
         let c = ModelConfig::from_json(&Json::parse(text).unwrap()).unwrap();
         c.validate().unwrap();
         assert!(c.lowered_with_pallas_kernel);
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[-2.0, -1.0]), 1);
     }
 }

@@ -1,0 +1,327 @@
+//! Deterministic stand-in backend for the PJRT engine.
+//!
+//! The default (no-`pjrt`) build has no XLA, no artifacts and no model
+//! weights, yet the whole serving stack — router, context cache, golden
+//! tests, examples — must still exercise the real request path. The
+//! [`SimBackend`] provides that: it implements the exact prefill/decode
+//! interface of the PJRT [`super::Engine`] (same invariants, same chunk
+//! accounting, same KV-snapshot semantics) with a deterministic token
+//! function instead of a neural net.
+//!
+//! The "model" is a rolling 64-bit state hash: processing token `t` at
+//! position `p` advances `h_p = mix(h_{p-1}, t, p)`, and the logits for
+//! the next position are a pure function of `h_p`. The running state for
+//! every position is written into the KV byte buffer (8 bytes at offset
+//! `p * 8` — the buffer always has ≥ 8 bytes per token row), which gives
+//! the stub the property the cache layer depends on: **resuming from a
+//! KV snapshot at any chunk boundary produces byte-identical output to
+//! recomputing from scratch.** That makes hit-vs-cold equivalence, KV
+//! blob round-trips and snapshot truncation all testable offline.
+
+use std::cell::Cell;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use super::{argmax, GenerationResult, KvState, ModelConfig, PrefillResult};
+
+/// Initial state before any token (FNV-1a offset basis).
+const H0: u64 = 0xcbf29ce484222325;
+
+/// SplitMix64 finalizer: the diffusion core of the token function.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Advance the rolling state by one token at one position.
+fn step(h: u64, token: i32, pos: usize) -> u64 {
+    let t = (token as u32 as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    mix(h ^ t ^ ((pos as u64) << 32))
+}
+
+/// The state hash stored for position `p` in the KV buffer.
+fn read_state(kv: &KvState, p: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&kv.bytes[p * 8..p * 8 + 8]);
+    u64::from_le_bytes(b)
+}
+
+fn write_state(kv: &mut KvState, p: usize, h: u64) {
+    kv.bytes[p * 8..p * 8 + 8].copy_from_slice(&h.to_le_bytes());
+}
+
+/// State after the last valid row, or [`H0`] for an empty prefix.
+fn state_at(kv: &KvState) -> u64 {
+    if kv.len == 0 {
+        H0
+    } else {
+        read_state(kv, kv.len - 1)
+    }
+}
+
+/// Deterministic drop-in for the PJRT engine (see module docs).
+pub struct SimBackend {
+    cfg: ModelConfig,
+    /// Cumulative backend execute time. Named for interface parity with
+    /// the PJRT engine's XLA-time perf accounting.
+    pub xla_time: Cell<Duration>,
+}
+
+impl SimBackend {
+    /// Load the artifact `model_config.json` if present, else use the
+    /// built-in tiny-Llama shape — the stub needs no artifacts.
+    pub fn load(artifact_dir: &Path) -> crate::Result<Self> {
+        let cfg = ModelConfig::load_or_default(artifact_dir)?;
+        anyhow::ensure!(
+            cfg.kv_bytes_per_token() >= 8,
+            "SimBackend needs >= 8 KV bytes/token to thread its state"
+        );
+        Ok(SimBackend {
+            cfg,
+            xla_time: Cell::new(Duration::ZERO),
+        })
+    }
+
+    /// Build directly from a config (tests).
+    pub fn from_config(cfg: ModelConfig) -> crate::Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            cfg.kv_bytes_per_token() >= 8,
+            "SimBackend needs >= 8 KV bytes/token to thread its state"
+        );
+        Ok(SimBackend {
+            cfg,
+            xla_time: Cell::new(Duration::ZERO),
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Fresh all-zero KV state.
+    pub fn empty_kv(&self) -> KvState {
+        KvState::empty(&self.cfg.kv_shape)
+    }
+
+    fn track<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.xla_time.set(self.xla_time.get() + t0.elapsed());
+        out
+    }
+
+    /// Logits for the next position given the rolling state: a pure hash
+    /// of `(h, vocab index)`, so greedy decode is fully deterministic.
+    fn logits_for(&self, h: u64) -> Vec<f32> {
+        (0..self.cfg.vocab)
+            .map(|i| {
+                let z = mix(h ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F));
+                // Map to [0, 1): same scale trick as Rng::f64.
+                (z >> 11) as f32 * (1.0 / (1u64 << 53) as f32)
+            })
+            .collect()
+    }
+
+    /// Shared invariant checks, identical to the PJRT engine's.
+    fn check_prefill_args(&self, prompt: &[i32], kv: &KvState) -> crate::Result<()> {
+        let c = self.cfg.chunk;
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(kv.len % c == 0, "cached prefix {} not chunk-aligned", kv.len);
+        anyhow::ensure!(kv.len < prompt.len(), "cached prefix covers whole prompt");
+        anyhow::ensure!(prompt.len() <= self.cfg.max_seq, "prompt exceeds context window");
+        Ok(())
+    }
+
+    /// Advance the state over `prompt[kv.len..]`, chunk by chunk, writing
+    /// per-position states into the KV buffer. Returns last-position
+    /// logits and the number of chunk executions.
+    fn prefill_core(&self, prompt: &[i32], kv: &mut KvState) -> (Vec<f32>, usize) {
+        let c = self.cfg.chunk;
+        let mut h = state_at(kv);
+        let mut pos = kv.len;
+        let mut chunks = 0usize;
+        while pos < prompt.len() {
+            let valid = (prompt.len() - pos).min(c);
+            self.track(|| {
+                for k in 0..valid {
+                    h = step(h, prompt[pos + k], pos + k);
+                    write_state(kv, pos + k, h);
+                }
+            });
+            pos += valid;
+            chunks += 1;
+        }
+        kv.len = prompt.len();
+        (self.logits_for(h), chunks)
+    }
+
+    /// Chunked prefill of `prompt`, resuming after `kv.len` already-cached
+    /// tokens (must be a chunk multiple — cache entries snapshot at chunk
+    /// boundaries). Returns the updated KV and last-position logits.
+    pub fn prefill(&self, prompt: &[i32], kv: &mut KvState) -> crate::Result<PrefillResult> {
+        let t0 = Instant::now();
+        self.check_prefill_args(prompt, kv)?;
+        let (logits, chunks) = self.prefill_core(prompt, kv);
+        Ok(PrefillResult {
+            logits,
+            chunks_executed: chunks,
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// One decode step at position `kv.len`; returns next-token logits.
+    pub fn decode_step(&self, token: i32, kv: &mut KvState) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(kv.len < self.cfg.max_seq, "context window full");
+        let pos = kv.len;
+        let h = self.track(|| {
+            let h = step(state_at(kv), token, pos);
+            write_state(kv, pos, h);
+            h
+        });
+        kv.len = pos + 1;
+        Ok(self.logits_for(h))
+    }
+
+    /// Greedy generation: chunked prefill (honouring a cached prefix in
+    /// `kv`) followed by `n_new` decode steps. Mirrors the PJRT engine's
+    /// `generate` — including leaving the KV at `prompt + n_new - 1`
+    /// valid rows (the last sampled token is never written back).
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        n_new: usize,
+        kv: &mut KvState,
+    ) -> crate::Result<GenerationResult> {
+        anyhow::ensure!(n_new >= 1, "n_new must be >= 1");
+        anyhow::ensure!(
+            prompt.len() + n_new <= self.cfg.max_seq,
+            "prompt + n_new exceeds context window"
+        );
+        self.check_prefill_args(prompt, kv)?;
+        let skipped = kv.len / self.cfg.chunk;
+        let t0 = Instant::now();
+        let (logits, chunks_executed) = self.prefill_core(prompt, kv);
+        let mut tok = argmax(&logits);
+        let ttft = t0.elapsed();
+
+        let mut tokens = vec![tok];
+        let t_decode = Instant::now();
+        for _ in 0..n_new - 1 {
+            let logits = self.decode_step(tok, kv)?;
+            tok = argmax(&logits);
+            tokens.push(tok);
+        }
+        let decode_steps = n_new - 1;
+        let tpot = if decode_steps > 0 {
+            t_decode.elapsed() / decode_steps as u32
+        } else {
+            Duration::ZERO
+        };
+        Ok(GenerationResult {
+            tokens,
+            ttft,
+            tpot,
+            chunks_executed,
+            chunks_skipped: skipped,
+            decode_steps,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> SimBackend {
+        SimBackend::from_config(ModelConfig::tiny_default()).unwrap()
+    }
+
+    fn prompt(n: usize) -> Vec<i32> {
+        (0..n).map(|i| ((i * 13) % 250 + 1) as i32).collect()
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let (a, b) = (backend(), backend());
+        let p = prompt(100);
+        let mut kva = a.empty_kv();
+        let mut kvb = b.empty_kv();
+        let ra = a.generate(&p, 8, &mut kva).unwrap();
+        let rb = b.generate(&p, 8, &mut kvb).unwrap();
+        assert_eq!(ra.tokens, rb.tokens);
+        assert_eq!(kva.bytes, kvb.bytes);
+    }
+
+    #[test]
+    fn cached_prefix_is_output_identical() {
+        let be = backend();
+        let p = prompt(130);
+        let chunk = be.config().chunk;
+
+        let mut cold_kv = be.empty_kv();
+        let cold = be.generate(&p, 6, &mut cold_kv).unwrap();
+        assert_eq!(cold.chunks_skipped, 0);
+
+        // Snapshot at one chunk boundary, resume from it.
+        let mut snap = be.empty_kv();
+        be.prefill(&p[..chunk], &mut snap).unwrap();
+        let hit = be.generate(&p, 6, &mut snap).unwrap();
+        assert_eq!(hit.tokens, cold.tokens, "hit changed the output");
+        assert_eq!(hit.chunks_skipped, 1);
+        assert_eq!(hit.chunks_executed + 1, cold.chunks_executed);
+    }
+
+    #[test]
+    fn decode_matches_prefill_extension() {
+        let be = backend();
+        let p = prompt(80);
+        let mut kv = be.empty_kv();
+        let pre = be.prefill(&p, &mut kv).unwrap();
+        let next = argmax(&pre.logits);
+        let dec_logits = be.decode_step(next, &mut kv).unwrap();
+
+        let mut ext = p.clone();
+        ext.push(next);
+        let mut kv2 = be.empty_kv();
+        let pre2 = be.prefill(&ext, &mut kv2).unwrap();
+        assert_eq!(dec_logits, pre2.logits, "decode diverged from prefill extension");
+        assert_eq!(kv.bytes, kv2.bytes);
+    }
+
+    #[test]
+    fn chunk_accounting_matches_engine_contract() {
+        let be = backend();
+        let c = be.config().chunk;
+        let p = prompt(2 * c + 5);
+        let mut kv = be.empty_kv();
+        let r = be.prefill(&p, &mut kv).unwrap();
+        assert_eq!(r.chunks_executed, 3); // 2 full chunks + the tail
+        assert_eq!(kv.len, p.len());
+    }
+
+    #[test]
+    fn rejects_invalid_requests() {
+        let be = backend();
+        let mut kv = be.empty_kv();
+        assert!(be.prefill(&[], &mut kv).is_err());
+        let long = vec![1i32; be.config().max_seq + 1];
+        let mut kv2 = be.empty_kv();
+        assert!(be.prefill(&long, &mut kv2).is_err());
+        let mut kv3 = be.empty_kv();
+        kv3.len = 3; // unaligned
+        assert!(be.prefill(&[1, 2, 3, 4, 5], &mut kv3).is_err());
+        let mut kv4 = be.empty_kv();
+        let p = vec![1i32; be.config().max_seq - 2];
+        assert!(be.generate(&p, 10, &mut kv4).is_err());
+    }
+
+    #[test]
+    fn tracks_backend_time() {
+        let be = backend();
+        let mut kv = be.empty_kv();
+        be.generate(&prompt(64), 4, &mut kv).unwrap();
+        assert!(be.xla_time.get() > Duration::ZERO);
+    }
+}

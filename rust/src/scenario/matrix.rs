@@ -1,0 +1,206 @@
+//! Cartesian matrix expander: axis values → a deterministic cell list.
+
+use super::{workload_seed, ScenarioSpec};
+use crate::cache::PolicyKind;
+use crate::ci::Grid;
+use crate::experiments::{Baseline, Model, Task};
+
+/// A declarative scenario matrix. Every axis is a list of values; the
+/// expansion is their cartesian product in a fixed order (model-major,
+/// then task, grid, baseline, policy), so cell order — and therefore the
+/// golden table — is stable.
+#[derive(Debug, Clone)]
+pub struct Matrix {
+    pub models: Vec<Model>,
+    pub tasks: Vec<Task>,
+    pub grids: Vec<Grid>,
+    pub baselines: Vec<Baseline>,
+    /// Policy axis; `None` entries keep each baseline's default pairing.
+    pub policies: Vec<Option<PolicyKind>>,
+    pub hours: usize,
+    pub quick: bool,
+    /// Base seed combined per-cell via [`workload_seed`].
+    pub base_seed: u64,
+    pub interval_s: f64,
+    pub fixed_rps: Option<f64>,
+    pub fixed_ci: Option<f64>,
+}
+
+impl Matrix {
+    /// A matrix with the paper's default axes empty and default knobs.
+    pub fn new() -> Self {
+        Matrix {
+            models: Vec::new(),
+            tasks: Vec::new(),
+            grids: Vec::new(),
+            baselines: Vec::new(),
+            policies: vec![None],
+            hours: 24,
+            quick: false,
+            base_seed: 20_25,
+            interval_s: 3600.0,
+            fixed_rps: None,
+            fixed_ci: None,
+        }
+    }
+
+    pub fn models(mut self, v: &[Model]) -> Self {
+        self.models = v.to_vec();
+        self
+    }
+
+    pub fn tasks(mut self, v: &[Task]) -> Self {
+        self.tasks = v.to_vec();
+        self
+    }
+
+    pub fn grids(mut self, v: &[Grid]) -> Self {
+        self.grids = v.to_vec();
+        self
+    }
+
+    pub fn baselines(mut self, v: &[Baseline]) -> Self {
+        self.baselines = v.to_vec();
+        self
+    }
+
+    pub fn policies(mut self, v: &[Option<PolicyKind>]) -> Self {
+        self.policies = v.to_vec();
+        self
+    }
+
+    pub fn hours(mut self, h: usize) -> Self {
+        self.hours = h;
+        self
+    }
+
+    pub fn quick(mut self, q: bool) -> Self {
+        self.quick = q;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+
+    pub fn fixed_rps(mut self, r: Option<f64>) -> Self {
+        self.fixed_rps = r;
+        self
+    }
+
+    pub fn fixed_ci(mut self, c: Option<f64>) -> Self {
+        self.fixed_ci = c;
+        self
+    }
+
+    pub fn interval_s(mut self, s: f64) -> Self {
+        self.interval_s = s;
+        self
+    }
+
+    /// Number of cells the expansion will produce.
+    pub fn len(&self) -> usize {
+        self.models.len()
+            * self.tasks.len()
+            * self.grids.len()
+            * self.baselines.len()
+            * self.policies.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand to the ordered cell list.
+    pub fn expand(&self) -> Vec<ScenarioSpec> {
+        let mut cells = Vec::with_capacity(self.len());
+        for &model in &self.models {
+            for &task in &self.tasks {
+                for &grid in &self.grids {
+                    let seed = workload_seed(self.base_seed, model, task, grid);
+                    for &baseline in &self.baselines {
+                        for &policy in &self.policies {
+                            let mut spec = ScenarioSpec::new(model, task, grid, baseline);
+                            spec.policy = policy;
+                            spec.hours = self.hours;
+                            spec.seed = seed;
+                            spec.interval_s = self.interval_s;
+                            spec.fixed_rps = self.fixed_rps;
+                            spec.fixed_ci = self.fixed_ci;
+                            if self.quick {
+                                spec = spec.quick();
+                            }
+                            cells.push(spec);
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+impl Default for Matrix {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Matrix {
+        Matrix::new()
+            .models(&[Model::Llama70B])
+            .tasks(&[Task::Conversation, Task::Doc04])
+            .grids(&[Grid::Fr, Grid::Es])
+            .baselines(&[Baseline::FullCache, Baseline::GreenCache])
+            .quick(true)
+    }
+
+    #[test]
+    fn expansion_size_is_product_of_axes() {
+        let m = small();
+        assert_eq!(m.len(), 1 * 2 * 2 * 2);
+        assert_eq!(m.expand().len(), m.len());
+    }
+
+    #[test]
+    fn baselines_share_the_workload_seed() {
+        let cells = small().expand();
+        // Cells 0 and 1 differ only by baseline (conv/FR full vs green).
+        assert_eq!(cells[0].seed, cells[1].seed);
+        assert_ne!(cells[0].baseline, cells[1].baseline);
+        // Different grids get different seeds.
+        assert_ne!(cells[0].seed, cells[2].seed);
+    }
+
+    #[test]
+    fn expansion_is_deterministic() {
+        let a: Vec<String> = small().expand().iter().map(|c| c.label()).collect();
+        let b: Vec<String> = small().expand().iter().map(|c| c.label()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quick_propagates_to_cells() {
+        for c in small().expand() {
+            assert!(c.quick);
+            assert_eq!(c.hours, 6);
+        }
+    }
+
+    #[test]
+    fn policy_axis_multiplies_cells() {
+        let m = small().policies(&[None, Some(PolicyKind::Lru)]);
+        assert_eq!(m.len(), 16);
+        let with_policy = m
+            .expand()
+            .iter()
+            .filter(|c| c.policy == Some(PolicyKind::Lru))
+            .count();
+        assert_eq!(with_policy, 8);
+    }
+}

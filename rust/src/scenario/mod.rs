@@ -1,0 +1,198 @@
+//! Scenario-matrix subsystem: declarative evaluation cells, a cartesian
+//! expander, and a multi-threaded runner.
+//!
+//! The paper's claims only hold across a *matrix* of grids × models ×
+//! tasks × baselines × policies (Fig. 12 alone is 4 × 3 × 2 × 3 cells);
+//! the seed code ran those cells through hand-rolled nested loops, one
+//! after another. This module makes the matrix a first-class object:
+//!
+//! * [`ScenarioSpec`] — one fully-specified evaluation cell (what
+//!   `experiments::run_day` consumes, declaratively).
+//! * [`Matrix`] — the cartesian product over axis values, expanded to a
+//!   deterministic `Vec<ScenarioSpec>` with per-cell workload seeds that
+//!   are stable under re-ordering (baselines share a workload seed so
+//!   comparisons stay apples-to-apples).
+//! * [`run_specs`] / [`MatrixRunner`] — executes cells in parallel on
+//!   std scoped threads (one worker per core by default) after a
+//!   sequential profile prewarm, and emits a [`MatrixResult`] table.
+//!
+//! Everything is seeded and replayable: running the same matrix twice
+//! produces byte-identical tables (the golden regression test in
+//! `rust/tests/matrix_golden.rs` pins this).
+
+mod matrix;
+mod runner;
+
+pub use matrix::Matrix;
+pub use runner::{run_specs, CellResult, MatrixResult, MatrixRunner};
+
+use crate::cache::PolicyKind;
+use crate::ci::Grid;
+use crate::experiments::{Baseline, DayScenario, Model, Task};
+
+/// One fully-specified cell of the evaluation matrix.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub model: Model,
+    pub task: Task,
+    pub grid: Grid,
+    pub baseline: Baseline,
+    /// Eviction-policy override; `None` keeps the baseline's default
+    /// pairing (LCS for GreenCache/NoCache, LRU for Full/LRU+Optimal).
+    pub policy: Option<PolicyKind>,
+    /// Evaluated horizon, hours.
+    pub hours: usize,
+    /// Shrunken warm-up/profile grids for smoke runs.
+    pub quick: bool,
+    /// Workload/trace seed. Cells that differ only by baseline/policy
+    /// should share this so they replay the same day.
+    pub seed: u64,
+    /// Decision interval, seconds.
+    pub interval_s: f64,
+    /// Fixed request rate instead of the Azure-like trace.
+    pub fixed_rps: Option<f64>,
+    /// Fixed CI instead of the grid trace.
+    pub fixed_ci: Option<f64>,
+}
+
+impl ScenarioSpec {
+    /// A 24-hour full-fidelity cell with the default seed.
+    pub fn new(model: Model, task: Task, grid: Grid, baseline: Baseline) -> Self {
+        ScenarioSpec {
+            model,
+            task,
+            grid,
+            baseline,
+            policy: None,
+            hours: 24,
+            quick: false,
+            seed: 20_25,
+            interval_s: 3600.0,
+            fixed_rps: None,
+            fixed_ci: None,
+        }
+    }
+
+    /// Quick mode: capped horizon, shrunken warm-up (same as
+    /// `DayScenario::quick`).
+    pub fn quick(mut self) -> Self {
+        self.quick = true;
+        self.hours = self.hours.min(6);
+        self
+    }
+
+    /// The effective eviction policy of this cell.
+    pub fn effective_policy(&self) -> PolicyKind {
+        self.policy.unwrap_or_else(|| self.baseline.policy())
+    }
+
+    /// Whether this cell runs the adaptive (profile-consuming) controller.
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self.baseline, Baseline::GreenCache | Baseline::LruOptimal)
+    }
+
+    /// Lower to the `experiments` layer's scenario.
+    pub fn to_day_scenario(&self) -> DayScenario {
+        let mut sc = DayScenario::new(self.model, self.task, self.grid, self.baseline);
+        sc.policy_override = self.policy;
+        sc.hours = self.hours;
+        sc.quick = self.quick;
+        sc.seed = self.seed;
+        sc.interval_s = self.interval_s;
+        sc.fixed_rps = self.fixed_rps;
+        sc.fixed_ci = self.fixed_ci;
+        sc
+    }
+
+    /// Compact human/golden-stable label, e.g.
+    /// `Llama-3-70B/multi-turn-conversation/ES/GreenCache`.
+    pub fn label(&self) -> String {
+        let mut s = format!(
+            "{}/{}/{}/{}",
+            self.model.name(),
+            self.task.name(),
+            self.grid.name(),
+            self.baseline.name()
+        );
+        if let Some(p) = self.policy {
+            s.push('/');
+            s.push_str(p.name());
+        }
+        s
+    }
+}
+
+/// Stable per-cell workload seed: a function of the *workload-shaping*
+/// axes only (model, task, grid, base seed) — never of baseline or
+/// policy, so competing baselines replay the identical day.
+pub fn workload_seed(base: u64, model: Model, task: Task, grid: Grid) -> u64 {
+    let mut h = base ^ 0x5CE9_A7B0_C0FF_EE00u64;
+    for s in [model.name(), task.name(), grid.name()] {
+        for b in s.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h = h.rotate_left(17);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_seed_ignores_baseline_axes() {
+        // Same (model, task, grid) → same seed regardless of how the
+        // caller later sets baseline/policy on the spec.
+        let a = workload_seed(7, Model::Llama70B, Task::Conversation, Grid::Es);
+        let b = workload_seed(7, Model::Llama70B, Task::Conversation, Grid::Es);
+        assert_eq!(a, b);
+        let c = workload_seed(7, Model::Llama70B, Task::Conversation, Grid::Fr);
+        assert_ne!(a, c, "grid must shape the seed");
+        let d = workload_seed(8, Model::Llama70B, Task::Conversation, Grid::Es);
+        assert_ne!(a, d, "base seed must shape the seed");
+    }
+
+    #[test]
+    fn spec_lowers_to_day_scenario() {
+        let mut spec =
+            ScenarioSpec::new(Model::Llama8B, Task::Doc04, Grid::Ciso, Baseline::GreenCache)
+                .quick();
+        spec.fixed_ci = Some(200.0);
+        spec.policy = Some(PolicyKind::Lfu);
+        let day = spec.to_day_scenario();
+        assert_eq!(day.hours, 6);
+        assert!(day.quick);
+        assert_eq!(day.fixed_ci, Some(200.0));
+        assert_eq!(day.policy_override, Some(PolicyKind::Lfu));
+        assert_eq!(spec.effective_policy(), PolicyKind::Lfu);
+    }
+
+    #[test]
+    fn effective_policy_defaults_to_baseline_pairing() {
+        let spec = ScenarioSpec::new(
+            Model::Llama70B,
+            Task::Conversation,
+            Grid::Es,
+            Baseline::FullCache,
+        );
+        assert_eq!(spec.effective_policy(), PolicyKind::Lru);
+        assert!(!spec.is_adaptive());
+        let green =
+            ScenarioSpec::new(Model::Llama70B, Task::Conversation, Grid::Es, Baseline::GreenCache);
+        assert_eq!(green.effective_policy(), PolicyKind::Lcs);
+        assert!(green.is_adaptive());
+    }
+
+    #[test]
+    fn label_is_readable() {
+        let spec = ScenarioSpec::new(
+            Model::Llama70B,
+            Task::Conversation,
+            Grid::Es,
+            Baseline::GreenCache,
+        );
+        assert_eq!(spec.label(), "Llama-3-70B/multi-turn-conversation/ES/GreenCache");
+    }
+}

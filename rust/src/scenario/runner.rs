@@ -1,0 +1,274 @@
+//! Multi-threaded scenario-matrix runner.
+//!
+//! Profiling is the expensive, shareable step, so the runner prewarms one
+//! [`ProfileStore`] sequentially (deterministic, shared across cells of
+//! the same model/task/policy), then fans the cells out over std scoped
+//! threads — one worker per core by default — with a lock-free work queue
+//! (an atomic next-index counter). Each cell is seeded by its spec, so
+//! results are identical no matter how many workers run or which worker
+//! picks which cell; only wall-clock changes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::ScenarioSpec;
+use crate::experiments::{run_day, Baseline, Model, ProfileStore, Task};
+use crate::ci::Grid;
+use crate::sim::HourSample;
+
+/// Summary of one executed cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub spec: ScenarioSpec,
+    pub completed: usize,
+    pub carbon_per_request_g: f64,
+    pub mean_cache_tb: f64,
+    pub slo_attainment: f64,
+    pub token_hit_rate: f64,
+    pub mean_ttft_s: f64,
+    pub mean_tpot_s: f64,
+    pub n_decisions: usize,
+    pub mean_solve_time_s: f64,
+    /// Hourly timeline (drives the Fig. 13/14 refactors).
+    pub hours: Vec<HourSample>,
+}
+
+/// All cells of a matrix run, in expansion order.
+#[derive(Debug)]
+pub struct MatrixResult {
+    pub cells: Vec<CellResult>,
+    pub wall_s: f64,
+    pub threads: usize,
+}
+
+impl MatrixResult {
+    /// Look a cell up by its comparison axes (first match).
+    pub fn find(
+        &self,
+        model: Model,
+        task: Task,
+        grid: Grid,
+        baseline: Baseline,
+    ) -> Option<&CellResult> {
+        self.cells.iter().find(|c| {
+            c.spec.model == model
+                && c.spec.task == task
+                && c.spec.grid == grid
+                && c.spec.baseline == baseline
+        })
+    }
+
+    /// Deterministic fixed-width table of the headline quantities — the
+    /// golden-snapshot format (`rust/tests/golden/matrix_quick.txt`).
+    /// Excludes wall-clock and thread count on purpose: the table must be
+    /// byte-identical across runs and machines.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<64} {:>10} {:>9} {:>7} {:>7} {:>8} {:>9}\n",
+            "cell", "g/req", "cacheTB", "slo%", "hit", "ttft_s", "completed"
+        ));
+        for c in &self.cells {
+            out.push_str(&format!(
+                "{:<64} {:>10.4} {:>9.2} {:>7.1} {:>7.3} {:>8.3} {:>9}\n",
+                c.spec.label(),
+                c.carbon_per_request_g,
+                c.mean_cache_tb,
+                c.slo_attainment * 100.0,
+                c.token_hit_rate,
+                c.mean_ttft_s,
+                c.completed
+            ));
+        }
+        out
+    }
+}
+
+/// Runner configuration.
+#[derive(Debug, Clone)]
+pub struct MatrixRunner {
+    /// Worker threads; 0 → one per available core.
+    pub threads: usize,
+    /// Per-cell progress lines on stderr.
+    pub verbose: bool,
+}
+
+impl Default for MatrixRunner {
+    fn default() -> Self {
+        MatrixRunner {
+            threads: 0,
+            verbose: false,
+        }
+    }
+}
+
+impl MatrixRunner {
+    fn effective_threads(&self, n_cells: usize) -> usize {
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let t = if self.threads == 0 { hw } else { self.threads };
+        t.clamp(1, n_cells.max(1))
+    }
+
+    /// Execute every cell; results come back in spec order.
+    pub fn run(&self, specs: &[ScenarioSpec]) -> MatrixResult {
+        let t0 = Instant::now();
+        let threads = self.effective_threads(specs.len());
+
+        // Profiles are identical across grids/baselines, so prewarm them
+        // once, sequentially (deterministic), and clone per worker.
+        // Fidelity is a per-cell property (a quick cell must see quick
+        // profiles no matter what else rides in the spec list), so two
+        // stores are kept and each cell picks by its own `quick` flag.
+        let mut master_quick = ProfileStore::new(true);
+        let mut master_full = ProfileStore::new(false);
+        for s in specs {
+            if s.is_adaptive() {
+                let store = if s.quick { &mut master_quick } else { &mut master_full };
+                store.get(s.model, s.task, s.effective_policy());
+            }
+        }
+
+        let next = AtomicUsize::new(0);
+        let results: Mutex<Vec<Option<CellResult>>> =
+            Mutex::new((0..specs.len()).map(|_| None).collect());
+
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let master_quick = &master_quick;
+                let master_full = &master_full;
+                let next = &next;
+                let results = &results;
+                scope.spawn(move || {
+                    let mut profiles_quick = master_quick.clone();
+                    let mut profiles_full = master_full.clone();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(spec) = specs.get(i) else { break };
+                        let profiles = if spec.quick {
+                            &mut profiles_quick
+                        } else {
+                            &mut profiles_full
+                        };
+                        let cell = run_cell(spec, profiles);
+                        if self.verbose {
+                            eprintln!(
+                                "[matrix {}/{}] {}: {:.4} g/req",
+                                i + 1,
+                                specs.len(),
+                                spec.label(),
+                                cell.carbon_per_request_g
+                            );
+                        }
+                        results.lock().unwrap()[i] = Some(cell);
+                    }
+                });
+            }
+        });
+
+        let cells = results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|c| c.expect("every cell index was claimed by a worker"))
+            .collect();
+        MatrixResult {
+            cells,
+            wall_s: t0.elapsed().as_secs_f64(),
+            threads,
+        }
+    }
+}
+
+/// Execute one cell against a (possibly shared-prewarmed) profile store.
+fn run_cell(spec: &ScenarioSpec, profiles: &mut ProfileStore) -> CellResult {
+    let day = run_day(&spec.to_day_scenario(), profiles);
+    let mean_solve_time_s = if day.decisions.is_empty() {
+        0.0
+    } else {
+        day.decisions.iter().map(|d| d.solve_time_s).sum::<f64>() / day.decisions.len() as f64
+    };
+    CellResult {
+        spec: spec.clone(),
+        completed: day.sim.completed,
+        carbon_per_request_g: day.carbon_per_request_g,
+        mean_cache_tb: day.mean_cache_tb,
+        slo_attainment: day.sim.slo.attainment(),
+        token_hit_rate: day.sim.token_hit_rate,
+        mean_ttft_s: day.sim.mean_ttft_s,
+        mean_tpot_s: day.sim.mean_tpot_s,
+        n_decisions: day.decisions.len(),
+        mean_solve_time_s,
+        hours: day.sim.hours.clone(),
+    }
+}
+
+/// Convenience: run `specs` with `threads` workers (0 = one per core).
+pub fn run_specs(specs: &[ScenarioSpec], threads: usize) -> MatrixResult {
+    MatrixRunner {
+        threads,
+        verbose: false,
+    }
+    .run(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Matrix;
+
+    fn three_cells() -> Vec<ScenarioSpec> {
+        Matrix::new()
+            .models(&[Model::Llama70B])
+            .tasks(&[Task::Conversation])
+            .grids(&[Grid::Es])
+            .baselines(&[Baseline::NoCache, Baseline::FullCache, Baseline::GreenCache])
+            .quick(true)
+            .expand()
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let specs = three_cells();
+        let serial = run_specs(&specs, 1);
+        let parallel = run_specs(&specs, 3);
+        assert_eq!(serial.table(), parallel.table(), "thread count changed results");
+    }
+
+    #[test]
+    fn results_keep_expansion_order() {
+        let specs = three_cells();
+        let r = run_specs(&specs, 2);
+        assert_eq!(r.cells.len(), 3);
+        for (cell, spec) in r.cells.iter().zip(&specs) {
+            assert_eq!(cell.spec.label(), spec.label());
+        }
+    }
+
+    #[test]
+    fn find_locates_cells_by_axes() {
+        let r = run_specs(&three_cells(), 0);
+        let full = r
+            .find(Model::Llama70B, Task::Conversation, Grid::Es, Baseline::FullCache)
+            .expect("full cell");
+        assert_eq!(full.spec.baseline, Baseline::FullCache);
+        assert!(full.completed > 0);
+        assert!(r
+            .find(Model::Llama8B, Task::Conversation, Grid::Es, Baseline::FullCache)
+            .is_none());
+    }
+
+    #[test]
+    fn baseline_ordering_holds_in_matrix() {
+        // The same sanity the ad-hoc loops asserted: caching beats no
+        // cache on latency, and full cache provisions the max all day.
+        let r = run_specs(&three_cells(), 0);
+        let none = &r.cells[0];
+        let full = &r.cells[1];
+        assert!(full.mean_ttft_s < none.mean_ttft_s);
+        assert!((full.mean_cache_tb - 16.0).abs() < 1e-9);
+        assert_eq!(none.mean_cache_tb, 0.0);
+    }
+}

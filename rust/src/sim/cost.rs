@@ -12,7 +12,7 @@
 //!   queueing near the no-cache capacity point. Rates are therefore a
 //!   constant factor below the paper's axis labels (their exact testbed
 //!   throughput is not published); crossover *shapes* are preserved and
-//!   EXPERIMENTS.md reports the scaling factor;
+//!   the README § Scaling notes report the scaling factor;
 //! * loading cached KV ≈ 0.03 s for ≈ 1 k-token contexts (§2.2)
 //!   → ≈ 30 µs per loaded token;
 //! * TPOT ≈ 40 ms at batch 1, growing gently with batch size (decode is

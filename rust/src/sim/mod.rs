@@ -1,4 +1,4 @@
-//! Calibrated discrete-event serving simulator (DESIGN.md §3).
+//! Calibrated discrete-event serving simulator (README § System design).
 //!
 //! Reproduces the paper's evaluation at the paper's scale: a vLLM-style
 //! continuous-batching engine with chunked prefill, context caching, a

@@ -188,6 +188,47 @@ mod tests {
         });
     }
 
+    /// Reference: enumerate all 2^n subsets (n ≤ 16 in tests).
+    fn brute_force_max(items: &[(u64, u64)], budget: u64) -> u64 {
+        let n = items.len();
+        assert!(n <= 16, "exponential reference only for tiny n");
+        let mut best = 0u64;
+        for mask in 0u32..(1u32 << n) {
+            let (mut w, mut v) = (0u64, 0u64);
+            for (i, &(wt, val)) in items.iter().enumerate() {
+                if mask & (1 << i) != 0 {
+                    w += wt;
+                    v += val;
+                }
+            }
+            if w <= budget {
+                best = best.max(v);
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn prop_dp_matches_subset_enumeration() {
+        // Seeded + replayable (PROPTEST_SEED): the DP optimum equals the
+        // exhaustive subset enumeration on randomized small instances.
+        check("knapsack-vs-enumeration", |rng: &mut Rng| {
+            let n = rng.range(0, 8) as usize;
+            let items: Vec<(u64, u64)> = (0..n)
+                .map(|_| (rng.range(1, 15) as u64, rng.range(1, 15) as u64))
+                .collect();
+            let budget = rng.range(0, 40) as u64;
+            let k = Knapsack { items: items.clone(), budget };
+            let dp = k.max_value();
+            let brute = brute_force_max(&items, budget);
+            crate::prop_assert!(
+                dp == brute,
+                "DP {dp} != enumeration {brute} for items={items:?} budget={budget}"
+            );
+            Ok(())
+        });
+    }
+
     #[test]
     fn prop_dp_never_exceeds_total() {
         check("knapsack-dp-bound", |rng: &mut Rng| {

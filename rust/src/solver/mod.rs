@@ -427,6 +427,44 @@ mod tests {
     }
 
     #[test]
+    fn prop_eight_hours_four_sizes_matches_brute_force() {
+        // The satellite-scale cross-check: randomized 8-hour × 4-size
+        // instances (4^8 = 65 536 assignments), seeded and replayable via
+        // PROPTEST_SEED. The DP must agree with exhaustive enumeration on
+        // both feasibility and optimal cost.
+        check("ilp-8x4-brute-force", |rng: &mut Rng| {
+            let n = rng.range(4, 25) as u64;
+            let mut p = random_problem(rng, 8, 4, n);
+            for opts in &mut p.options {
+                for o in opts.iter_mut() {
+                    o.ttft_ok = rng.below(n + 1);
+                    o.tpot_ok = rng.below(n + 1);
+                    o.cost_g = rng.range(0, 15) as f64;
+                }
+            }
+            let got = p.solve().map_err(|e| e.to_string())?;
+            let want = p.solve_brute_force();
+            match (got, want) {
+                (None, None) => Ok(()),
+                (Some(g), Some((_, wc))) => {
+                    crate::prop_assert!(
+                        (g.total_cost_g - wc).abs() < 1e-9,
+                        "8x4: DP cost {} != brute force {}",
+                        g.total_cost_g,
+                        wc
+                    );
+                    Ok(())
+                }
+                (g, w) => Err(format!(
+                    "8x4 feasibility mismatch: dp={:?} brute={:?}",
+                    g.map(|x| x.total_cost_g),
+                    w.map(|x| x.1)
+                )),
+            }
+        });
+    }
+
+    #[test]
     fn prop_solution_always_meets_rho() {
         check("solution-feasible", |rng: &mut Rng| {
             let t_len = rng.range(1, 6) as usize;

@@ -3,7 +3,7 @@
 //! `cargo bench` targets are declared with `harness = false` and call
 //! [`Bench::run`]: warmup, then timed iterations until a wall-clock budget
 //! or iteration cap, reporting mean / p50 / p95 / min and throughput. The
-//! output format is stable so EXPERIMENTS.md can quote it.
+//! output format is stable so results docs can quote it.
 
 use std::time::{Duration, Instant};
 

@@ -1,7 +1,7 @@
 //! Integration: the full simulated evaluation pipeline — workloads →
 //! cache → simulator → predictors → solver → controller → carbon.
 //!
-//! These are the "shape" assertions of DESIGN.md: who wins, in which
+//! These are the "shape" assertions of README § Experiments: who wins, in which
 //! grid, with SLOs intact. Quick-mode horizons keep the suite fast.
 
 use greencache::ci::Grid;

@@ -1,0 +1,83 @@
+//! Golden regression for the scenario-matrix subsystem.
+//!
+//! A quick-mode 3-cell matrix (No Cache / Full Cache / GreenCache on the
+//! ES grid, conversation, 70B) is executed in parallel and its result
+//! table is diffed against `rust/tests/golden/matrix_quick.txt`.
+//!
+//! * `UPDATE_GOLDEN=1 cargo test -q --test matrix_golden` regenerates
+//!   the snapshot.
+//! * If the snapshot does not exist yet (fresh checkout state), the test
+//!   bootstraps it and passes — the diff bites from the next run on.
+//!
+//! Separately from the snapshot, the test asserts that the same matrix
+//! run twice — serial and maximally parallel — produces byte-identical
+//! tables, which pins the per-cell seeding against thread-count and
+//! scheduling effects.
+
+use std::path::PathBuf;
+
+use greencache::ci::Grid;
+use greencache::experiments::{Baseline, Model, Task};
+use greencache::scenario::{run_specs, Matrix, ScenarioSpec};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/matrix_quick.txt")
+}
+
+fn quick_matrix() -> Vec<ScenarioSpec> {
+    Matrix::new()
+        .models(&[Model::Llama70B])
+        .tasks(&[Task::Conversation])
+        .grids(&[Grid::Es])
+        .baselines(&[Baseline::NoCache, Baseline::FullCache, Baseline::GreenCache])
+        .quick(true)
+        .expand()
+}
+
+#[test]
+fn quick_matrix_runs_parallel_and_matches_golden() {
+    let specs = quick_matrix();
+    assert_eq!(specs.len(), 3);
+
+    // Determinism across schedules: 3 workers vs 1 worker.
+    let parallel = run_specs(&specs, 3);
+    let serial = run_specs(&specs, 1);
+    let table = parallel.table();
+    assert_eq!(table, serial.table(), "matrix results depend on thread count");
+    assert_eq!(parallel.threads, 3);
+
+    // Sanity on content before pinning bytes.
+    assert!(table.lines().count() == 4, "header + 3 cells:\n{table}");
+    for cell in &parallel.cells {
+        assert!(cell.completed > 0, "{} completed nothing", cell.spec.label());
+    }
+
+    // Golden diff (UPDATE_GOLDEN=1 regenerates; first run bootstraps).
+    let path = golden_path();
+    let update = std::env::var("UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false);
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &table).unwrap();
+        eprintln!("wrote golden snapshot {path:?}");
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        table, want,
+        "matrix table diverged from {path:?}; run with UPDATE_GOLDEN=1 if intentional"
+    );
+}
+
+#[test]
+fn matrix_cells_are_replayable_one_by_one() {
+    // Any single cell replayed alone must reproduce its in-matrix result
+    // (per-cell seeding means no cross-cell state).
+    let specs = quick_matrix();
+    let all = run_specs(&specs, 0);
+    let lone = run_specs(&specs[1..2], 1);
+    let a = &all.cells[1];
+    let b = &lone.cells[0];
+    assert_eq!(a.completed, b.completed);
+    assert!((a.carbon_per_request_g - b.carbon_per_request_g).abs() < 1e-12);
+    assert!((a.token_hit_rate - b.token_hit_rate).abs() < 1e-12);
+}

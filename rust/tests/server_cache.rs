@@ -1,10 +1,14 @@
-//! Integration: the real-model server (router + cache + PJRT engine).
+//! Integration: the real-model server (router + cache + model backend).
+//! Runs against the PJRT engine when built with `--features pjrt` (and
+//! artifacts exist); against the deterministic SimBackend otherwise, so
+//! the full request path is exercised offline.
 
 use greencache::cache::PolicyKind;
 use greencache::coordinator::server::{Server, ServerConfig};
 use greencache::runtime::{default_artifact_dir, Engine};
 use greencache::workload::{Request, TaskKind};
 
+#[cfg(feature = "pjrt")]
 fn engine_or_skip() -> Option<Engine> {
     let dir = default_artifact_dir();
     if !dir.join("model_config.json").exists() {
@@ -12,6 +16,12 @@ fn engine_or_skip() -> Option<Engine> {
         return None;
     }
     Some(Engine::load(&dir).expect("engine"))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn engine_or_skip() -> Option<Engine> {
+    // The SimBackend needs no artifacts.
+    Some(Engine::load(&default_artifact_dir()).expect("sim backend"))
 }
 
 fn req(ctx: u64, version: u32, context: u32, new: u32) -> Request {
@@ -83,7 +93,11 @@ fn serve_batch_reports_consistent_stats() {
     assert_eq!(report.slo.total(), 12);
     assert!(report.token_hit_rate > 0.0, "later turns must hit");
     assert!(report.throughput_rps > 0.0);
+    // Real XLA executions dominate wall time; the stub's token function
+    // is too cheap for that bound, so only pin the range there.
+    #[cfg(feature = "pjrt")]
     assert!(report.xla_fraction > 0.3, "xla fraction {}", report.xla_fraction);
+    assert!((0.0..=1.0).contains(&report.xla_fraction));
     // Chunk-skipping means hits executed fewer chunks than their prompt
     // length implies.
     let total_skipped: usize = report.served.iter().map(|s| s.chunks_skipped).sum();
