@@ -3,14 +3,14 @@
 //!
 //! ```text
 //! figures <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig8|fig11|fig12|fig13|
-//!          fig14|fig15|table3|fig16|fig17|fig18|fig19|fig20|all>
+//!          fig14|fig15|table3|fig16|fig17|fig18|fig19|fig20|fleet|all>
 //!         [--quick] [--out results] [--models 70b|8b|both]
 //! ```
 //!
 //! Each exhibit prints the paper-shaped rows and writes a CSV under the
 //! output directory. `--quick` shrinks horizons/warm-up for smoke runs.
 
-use greencache::experiments::{ablation, characterization, evaluation, Model};
+use greencache::experiments::{ablation, characterization, evaluation, fleet, Model};
 use greencache::util::csv::Csv;
 use std::path::PathBuf;
 
@@ -107,10 +107,13 @@ fn main() {
     if want("fig20") {
         run("fig20", &|| ablation::fig20(quick), &mut outputs);
     }
+    if want("fleet") {
+        run("fleet", &|| fleet::fleet(quick), &mut outputs);
+    }
 
     if outputs.is_empty() {
         println!(
-            "usage: figures <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig8|fig11|fig12|fig13|fig14|fig15|table3|fig16|fig17|fig18|fig19|fig20|all> [--quick] [--out DIR] [--models 70b|8b|both]"
+            "usage: figures <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig8|fig11|fig12|fig13|fig14|fig15|table3|fig16|fig17|fig18|fig19|fig20|fleet|all> [--quick] [--out DIR] [--models 70b|8b|both]"
         );
         return;
     }

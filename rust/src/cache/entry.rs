@@ -8,6 +8,7 @@ use crate::workload::TaskKind;
 pub struct Entry {
     /// Cache key: the workload's `context_id`.
     pub key: u64,
+    /// Which task family the context belongs to (LCS score dispatch).
     pub task: TaskKind,
     /// Number of context tokens whose KV is stored.
     pub tokens: u32,

@@ -36,12 +36,19 @@ pub struct HitInfo {
 /// Aggregate statistics (Table 3 + Fig. 6b feed off these).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CacheStats {
+    /// Lookup calls observed.
     pub lookups: u64,
+    /// Lookups that found a non-empty prefix.
     pub hits: u64,
+    /// Total tokens served from cache.
     pub hit_tokens: u64,
+    /// Total prompt tokens offered (hit-rate denominator, §6.3.2).
     pub input_tokens: u64,
+    /// Entries inserted.
     pub insertions: u64,
+    /// Entries evicted.
     pub evictions: u64,
+    /// Admissions rejected because the entry exceeded the whole capacity.
     pub rejected_too_large: u64,
 }
 
@@ -68,11 +75,47 @@ impl CacheStats {
 /// An evicted entry (returned so the coordinator can release payloads).
 #[derive(Debug)]
 pub struct Evicted {
+    /// The evicted entry's cache key (`context_id`).
     pub key: u64,
+    /// Bytes the eviction released.
     pub bytes: u64,
 }
 
 /// The cache manager.
+///
+/// # Example
+///
+/// A two-turn conversation: the first turn misses and is admitted, the
+/// second turn's context prefix is served from cache.
+///
+/// ```
+/// use greencache::cache::{CacheManager, PolicyKind};
+/// use greencache::workload::{Request, TaskKind};
+///
+/// // 1 MB capacity, 1000 bytes of KV per token, the paper's LCS policy.
+/// let mut cache = CacheManager::new(1_000_000, 1_000, PolicyKind::Lcs);
+/// let turn1 = Request {
+///     id: 0,
+///     task: TaskKind::Conversation,
+///     context_id: 7,
+///     context_version: 0,
+///     context_tokens: 0,
+///     new_tokens: 100,
+///     output_tokens: 20,
+///     arrival_s: 0.0,
+/// };
+/// assert!(!cache.lookup(&turn1, 0.0).hit);
+/// // After serving, prompt + reply become reusable KV (write-through).
+/// cache.admit(&turn1, 120, None, 0.0);
+///
+/// let turn2 = Request {
+///     context_version: 1,
+///     context_tokens: 120,
+///     ..turn1.clone()
+/// };
+/// assert_eq!(cache.lookup(&turn2, 1.0).hit_tokens, 120);
+/// assert!(cache.stats().token_hit_rate() > 0.0);
+/// ```
 #[derive(Debug)]
 pub struct CacheManager {
     capacity_bytes: u64,
@@ -85,6 +128,7 @@ pub struct CacheManager {
 }
 
 impl CacheManager {
+    /// Build an empty cache with `capacity_bytes` of provisioned storage.
     pub fn new(capacity_bytes: u64, kv_bytes_per_token: u64, policy: PolicyKind) -> Self {
         assert!(kv_bytes_per_token > 0);
         CacheManager {
@@ -98,32 +142,52 @@ impl CacheManager {
         }
     }
 
+    /// The eviction policy in force.
     pub fn policy(&self) -> PolicyKind {
         self.index.kind
     }
 
+    /// Provisioned capacity, bytes.
     pub fn capacity_bytes(&self) -> u64 {
         self.capacity_bytes
     }
 
+    /// Bytes currently held by resident entries.
     pub fn used_bytes(&self) -> u64 {
         self.used_bytes
     }
 
+    /// Number of resident entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether the cache holds no entries.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// Aggregate hit/eviction statistics so far.
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
 
+    /// Inspect a resident entry by key.
     pub fn entry(&self, key: u64) -> Option<&Entry> {
         self.entries.get(&key)
+    }
+
+    /// Non-mutating prefix probe: how many of `req`'s context tokens this
+    /// cache could serve, without touching hit statistics or recency.
+    ///
+    /// This is the *affinity* signal the cluster router reads on every
+    /// replica before placing a request — only the chosen replica's
+    /// [`Self::lookup`] actually accounts the hit.
+    pub fn peek(&self, req: &Request) -> u32 {
+        self.entries
+            .get(&req.prefix_key())
+            .map(|e| e.tokens.min(req.context_tokens))
+            .unwrap_or(0)
     }
 
     fn next_seq(&mut self) -> u64 {
@@ -137,7 +201,7 @@ impl CacheManager {
         self.stats.lookups += 1;
         self.stats.input_tokens += req.prompt_tokens() as u64;
         let seq = self.next_seq();
-        let info = match self.entries.get_mut(&req.context_id) {
+        let info = match self.entries.get_mut(&req.prefix_key()) {
             Some(e) => {
                 // The stored KV covers min(entry.tokens, request context):
                 // conversations extend their context monotonically, so the
@@ -160,7 +224,7 @@ impl CacheManager {
             None => HitInfo { hit_tokens: 0, hit: false },
         };
         if info.hit {
-            self.index.on_access(req.context_id);
+            self.index.on_access(req.prefix_key());
         }
         info
     }
@@ -184,7 +248,7 @@ impl CacheManager {
         let seq = self.next_seq();
         let mut evicted = Vec::new();
 
-        let delta = match self.entries.get(&req.context_id) {
+        let delta = match self.entries.get(&req.prefix_key()) {
             Some(e) if e.tokens >= cached_tokens => {
                 // Already covers this context — refresh only.
                 0i64
@@ -197,19 +261,19 @@ impl CacheManager {
         // unless nothing else remains.
         while self.used_bytes as i64 + delta > self.capacity_bytes as i64 {
             match self.index.victim(&self.entries, now_s) {
-                Some(victim) if victim != req.context_id => {
+                Some(victim) if victim != req.prefix_key() => {
                     evicted.push(self.remove(victim));
                 }
                 _ => {
-                    if self.entries.contains_key(&req.context_id) {
-                        evicted.push(self.remove(req.context_id));
+                    if self.entries.contains_key(&req.prefix_key()) {
+                        evicted.push(self.remove(req.prefix_key()));
                     }
                     break;
                 }
             }
         }
 
-        match self.entries.get_mut(&req.context_id) {
+        match self.entries.get_mut(&req.prefix_key()) {
             Some(e) => {
                 if cached_tokens > e.tokens {
                     self.used_bytes -= e.size_bytes;
@@ -223,14 +287,14 @@ impl CacheManager {
                 if payload.is_some() {
                     e.payload = payload;
                 }
-                self.index.on_access(req.context_id);
+                self.index.on_access(req.prefix_key());
             }
             None => {
                 if self.used_bytes + new_size <= self.capacity_bytes {
                     self.entries.insert(
-                        req.context_id,
+                        req.prefix_key(),
                         Entry {
-                            key: req.context_id,
+                            key: req.prefix_key(),
                             task: req.task,
                             tokens: cached_tokens,
                             size_bytes: new_size,
@@ -244,7 +308,7 @@ impl CacheManager {
                         },
                     );
                     self.used_bytes += new_size;
-                    self.index.on_insert(req.context_id);
+                    self.index.on_insert(req.prefix_key());
                     self.stats.insertions += 1;
                 }
             }
@@ -358,6 +422,25 @@ mod tests {
         let r2 = req(1, 1, 300, 10);
         let h = m.lookup(&r2, 1.0);
         assert_eq!(h.hit_tokens, 120);
+    }
+
+    #[test]
+    fn peek_reports_prefix_without_accounting() {
+        let mut m = mgr(1000, PolicyKind::Lcs);
+        let r = req(1, 0, 100, 10);
+        assert_eq!(m.peek(&r), 0);
+        m.lookup(&r, 0.0);
+        m.admit(&r, 110, None, 0.0);
+        let r2 = req(1, 1, 300, 10);
+        let stats_before = m.stats();
+        assert_eq!(m.peek(&r2), 110); // capped by what's cached
+        let r3 = req(1, 1, 50, 10);
+        assert_eq!(m.peek(&r3), 50); // capped by the request's context
+        // Peeking never accounts lookups/hits or touches recency.
+        let stats_after = m.stats();
+        assert_eq!(stats_before.lookups, stats_after.lookups);
+        assert_eq!(stats_before.hit_tokens, stats_after.hit_tokens);
+        assert_eq!(stats_before.input_tokens, stats_after.input_tokens);
     }
 
     #[test]

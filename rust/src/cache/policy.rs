@@ -15,14 +15,18 @@ use std::collections::{BTreeSet, HashMap};
 /// Which replacement policy the cache manager runs (§6.3.2's comparison).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PolicyKind {
+    /// First-in first-out.
     Fifo,
+    /// Least recently used.
     Lru,
+    /// Least frequently used (recency tie-break).
     Lfu,
     /// Least Carbon Savings — the paper's policy (Eq. 7/8/9).
     Lcs,
 }
 
 impl PolicyKind {
+    /// Stable policy label.
     pub fn name(&self) -> &'static str {
         match self {
             PolicyKind::Fifo => "FIFO",
@@ -88,6 +92,7 @@ struct ScanIndex {
 /// Policy-driven victim selection over the entry table.
 #[derive(Debug)]
 pub struct EvictionIndex {
+    /// The policy this index implements.
     pub kind: PolicyKind,
     ordered: OrderedIndex,
     scan: ScanIndex,
@@ -96,6 +101,7 @@ pub struct EvictionIndex {
 }
 
 impl EvictionIndex {
+    /// An empty index for `kind`.
     pub fn new(kind: PolicyKind) -> Self {
         EvictionIndex {
             kind,

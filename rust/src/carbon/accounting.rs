@@ -18,6 +18,7 @@ pub struct CarbonBreakdown {
 }
 
 impl CarbonBreakdown {
+    /// Total emissions across all three sources, grams.
     pub fn total_g(&self) -> f64 {
         self.operational_g + self.cache_embodied_g + self.other_embodied_g
     }
@@ -54,6 +55,7 @@ pub struct CarbonAccountant {
 }
 
 impl CarbonAccountant {
+    /// An accountant with zeroed counters over `embodied`.
     pub fn new(embodied: EmbodiedModel) -> Self {
         CarbonAccountant {
             embodied,
@@ -63,6 +65,7 @@ impl CarbonAccountant {
         }
     }
 
+    /// The embodied inventory being amortized.
     pub fn embodied_model(&self) -> &EmbodiedModel {
         &self.embodied
     }
@@ -88,14 +91,17 @@ impl CarbonAccountant {
         self.energy_j += energy_j;
     }
 
+    /// Cumulative emissions so far, split by source.
     pub fn breakdown(&self) -> CarbonBreakdown {
         self.acc
     }
 
+    /// Total accounted duration, seconds.
     pub fn elapsed_s(&self) -> f64 {
         self.elapsed_s
     }
 
+    /// Total accounted energy, Joules.
     pub fn energy_j(&self) -> f64 {
         self.energy_j
     }

@@ -10,13 +10,18 @@
 /// Instantaneous platform power split, watts.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PowerSample {
+    /// All GPUs, watts.
     pub gpu_w: f64,
+    /// CPU package, watts.
     pub cpu_w: f64,
+    /// DRAM, watts.
     pub mem_w: f64,
+    /// SSD tier (provisioned cache), watts.
     pub ssd_w: f64,
 }
 
 impl PowerSample {
+    /// Whole-platform draw, watts.
     pub fn total_w(&self) -> f64 {
         self.gpu_w + self.cpu_w + self.mem_w + self.ssd_w
     }
@@ -27,16 +32,19 @@ impl PowerSample {
 pub struct PowerModel {
     /// Number of GPUs (4 for the 70B platform, 2 for 8B — §6.1).
     pub n_gpus: usize,
-    /// Per-GPU idle / peak watts.
+    /// Per-GPU idle watts.
     pub gpu_idle_w: f64,
+    /// Per-GPU peak watts.
     pub gpu_peak_w: f64,
-    /// CPU idle / peak watts.
+    /// CPU idle watts.
     pub cpu_idle_w: f64,
+    /// CPU peak watts.
     pub cpu_peak_w: f64,
     /// DRAM watts (capacity-proportional, roughly constant under load).
     pub mem_w: f64,
-    /// SSD idle / active watts per provisioned TB.
+    /// SSD idle watts per provisioned TB.
     pub ssd_idle_w_per_tb: f64,
+    /// SSD active (streaming) watts per provisioned TB.
     pub ssd_active_w_per_tb: f64,
 }
 

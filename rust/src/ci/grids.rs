@@ -13,17 +13,29 @@ use crate::rng::Rng;
 /// twelve).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Grid {
+    /// France (nuclear; ~33 g/kWh).
     Fr,
+    /// Norway (hydro; the greenest evaluated grid).
     No,
+    /// Sweden.
     Se,
+    /// Switzerland.
     Ch,
+    /// Finland.
     Fi,
+    /// Spain (solar-heavy; ~124 g/kWh).
     Es,
+    /// Great Britain.
     Gb,
+    /// California ISO (deep solar duck curve, Fig. 2b).
     Ciso,
+    /// Netherlands.
     Nl,
+    /// Germany.
     De,
+    /// PJM interconnection (US east; fossil-heavy).
     Pjm,
+    /// MISO (US midwest; coal-heavy, ~485 g/kWh).
     Miso,
 }
 
@@ -49,6 +61,7 @@ pub const FIG2A_GRIDS: [Grid; 4] = [Grid::Fr, Grid::Fi, Grid::Es, Grid::Ciso];
 /// Trace-generation parameters for one grid.
 #[derive(Debug, Clone, Copy)]
 pub struct GridTrace {
+    /// The grid these parameters describe.
     pub grid: Grid,
     /// Average CI, gCO₂e/kWh.
     pub mean: f64,
@@ -64,6 +77,7 @@ pub struct GridTrace {
 }
 
 impl Grid {
+    /// Short grid code (golden/label-stable).
     pub fn name(&self) -> &'static str {
         match self {
             Grid::Fr => "FR",
@@ -81,6 +95,7 @@ impl Grid {
         }
     }
 
+    /// Calibrated trace parameters for this grid.
     pub fn params(&self) -> GridTrace {
         // mean / amp / min_hour / noise / renewable share.
         let (mean, diurnal_amp, min_hour, noise, renew) = match self {

@@ -21,32 +21,39 @@ use crate::carbon::Ci;
 /// An hourly CI series (one value per hour, arbitrary horizon).
 #[derive(Debug, Clone)]
 pub struct CiSeries {
+    /// The grid the series belongs to.
     pub grid: Grid,
     /// gCO₂e/kWh at each hour.
     pub hourly: Vec<f64>,
 }
 
 impl CiSeries {
+    /// CI at hour `h` (wraps past the end).
     pub fn at_hour(&self, h: usize) -> Ci {
         Ci(self.hourly[h % self.hourly.len()])
     }
 
+    /// Number of hours in the series.
     pub fn len(&self) -> usize {
         self.hourly.len()
     }
 
+    /// Whether the series is empty.
     pub fn is_empty(&self) -> bool {
         self.hourly.is_empty()
     }
 
+    /// Mean CI over the series.
     pub fn mean(&self) -> f64 {
         self.hourly.iter().sum::<f64>() / self.hourly.len().max(1) as f64
     }
 
+    /// Minimum hourly CI.
     pub fn min(&self) -> f64 {
         self.hourly.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Maximum hourly CI.
     pub fn max(&self) -> f64 {
         self.hourly.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }

@@ -18,6 +18,7 @@ use super::mape;
 
 /// One base forecaster's output for an h-hour horizon.
 pub trait Forecaster {
+    /// The member's name (weight reporting).
     fn name(&self) -> &'static str;
     /// Forecast `horizon` hours following `history`.
     fn forecast(&self, history: &[f64], horizon: usize) -> Vec<f64>;
@@ -181,6 +182,7 @@ impl Default for CiPredictor {
 }
 
 impl CiPredictor {
+    /// The four-member ensemble with uniform initial weights.
     pub fn new() -> Self {
         CiPredictor {
             forecasters: vec![
@@ -232,6 +234,7 @@ impl CiPredictor {
             .collect()
     }
 
+    /// Current ensemble weights (sum to one after a successful fit).
     pub fn weights(&self) -> &[f64] {
         &self.weights
     }

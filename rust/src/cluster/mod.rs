@@ -1,0 +1,42 @@
+//! Multi-replica, multi-grid cluster layer: a carbon-aware router in
+//! front of N per-replica serving engines.
+//!
+//! The paper's GreenCache controller sizes one cache on one replica in
+//! one grid. Fleet-scale serving spreads replicas across *different*
+//! grids (GreenLLM, EcoServe argue the carbon win must be planned
+//! fleet-wide), which opens a second carbon knob next to cache sizing:
+//! **where** each request runs. This module adds that layer on top of the
+//! existing single-node machinery, reusing it wholesale:
+//!
+//! * [`ClusterSpec`] — N [`ReplicaSpec`]s (each with its own
+//!   [`crate::ci::Grid`], platform [`crate::sim::CostModel`] via its
+//!   model, and cache budget) plus the fleet-level workload and router
+//!   choice.
+//! * [`Router`] / [`RouterPolicy`] — round-robin, least-loaded
+//!   (join-shortest-queue) and the carbon-greedy policy that weights
+//!   per-replica forecast CI against queue depth and the cache affinity
+//!   of the request's context prefix ([`crate::workload::Request::prefix_key`]).
+//! * [`ClusterSim`] / [`run_cluster`] — steps every replica's
+//!   discrete-event engine ([`crate::sim::ReplicaEngine`]) in lockstep to
+//!   each arrival instant, routes the request against live queue/cache
+//!   state, and runs each replica's GreenCache controller independently
+//!   at its own decision boundaries.
+//! * [`ClusterResult`] — per-replica outcomes plus fleet-level SLO /
+//!   carbon / hit-rate aggregates (exact merges, not re-simulations).
+//!
+//! Everything stays deterministic: one arrival stream, one router, and
+//! per-replica seeded engines — replaying a [`ClusterSpec`] reproduces
+//! the fleet table byte-for-byte regardless of thread count (cluster
+//! cells parallelize across the scenario matrix, never within a cell).
+//!
+//! The scenario layer sweeps this via [`crate::scenario::ClusterVariant`];
+//! the CLI exposes it as `greencache cluster`.
+
+mod router;
+mod sim;
+
+pub use router::{CarbonGreedy, LeastLoaded, ReplicaView, RoundRobin, Router, RouterPolicy};
+pub use sim::{
+    grid_join, run_cluster, ClusterResult, ClusterSim, ClusterSpec, ReplicaOutcome,
+    ReplicaSpec,
+};

@@ -1,0 +1,316 @@
+//! Carbon-aware request routers for the multi-replica fleet.
+//!
+//! A [`Router`] places each arriving request on one replica, given a
+//! per-replica [`ReplicaView`] snapshot taken at the arrival instant
+//! (queue depth, the replica grid's carbon intensity for the current
+//! interval, and the cache-affinity of the request's context prefix).
+//! Three policies ship:
+//!
+//! * [`RouterPolicy::RoundRobin`] — cycle through replicas; the
+//!   carbon-oblivious baseline.
+//! * [`RouterPolicy::LeastLoaded`] — join-shortest-queue, normalized by
+//!   each replica's batch capacity (heterogeneous fleets).
+//! * [`RouterPolicy::CarbonGreedy`] — score every replica by forecast CI,
+//!   queue pressure and prefix affinity, and place the request on the
+//!   lowest-scoring one: work drains toward green grids until their
+//!   queues back up, and conversations stay sticky to the replica that
+//!   holds their KV prefix.
+
+use crate::workload::Request;
+
+/// What the router sees of one replica at a routing instant.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView {
+    /// Requests admitted but not completed (waiting + running).
+    pub queue_depth: usize,
+    /// The replica engine's max concurrent decode batch (queue-pressure
+    /// normalizer, so heterogeneous replicas compare fairly).
+    pub max_batch: usize,
+    /// The replica grid's carbon intensity over the current decision
+    /// interval, gCO₂e/kWh (a persistence forecast of the interval).
+    pub ci_gpkwh: f64,
+    /// Context-prefix tokens of the request already cached on this
+    /// replica (from [`crate::cache::CacheManager::peek`]).
+    pub affinity_tokens: u32,
+}
+
+/// A routing policy: pick the replica index for a request.
+///
+/// Implementations must be deterministic functions of their own state and
+/// the `(req, replicas)` arguments — cluster simulations replay
+/// byte-identically because nothing else feeds the decision.
+pub trait Router {
+    /// Choose a replica index in `0..replicas.len()` for `req`.
+    /// `replicas` is never empty.
+    fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize;
+}
+
+/// The named router policies (the scenario matrix's router axis).
+///
+/// # Example
+///
+/// Under equal load and no cached prefix, the carbon-greedy policy picks
+/// the greener grid:
+///
+/// ```
+/// use greencache::cluster::{ReplicaView, Router, RouterPolicy};
+/// use greencache::workload::{Request, TaskKind};
+///
+/// let req = Request {
+///     id: 0,
+///     task: TaskKind::Conversation,
+///     context_id: 1,
+///     context_version: 0,
+///     context_tokens: 0,
+///     new_tokens: 64,
+///     output_tokens: 32,
+///     arrival_s: 0.0,
+/// };
+/// let views = [
+///     ReplicaView { queue_depth: 2, max_batch: 64, ci_gpkwh: 33.0, affinity_tokens: 0 },
+///     ReplicaView { queue_depth: 2, max_batch: 64, ci_gpkwh: 485.0, affinity_tokens: 0 },
+/// ];
+/// let mut router = RouterPolicy::CarbonGreedy.build();
+/// assert_eq!(router.route(&req, &views), 0);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RouterPolicy {
+    /// Cycle through replicas in index order.
+    RoundRobin,
+    /// Join the shortest (capacity-normalized) queue.
+    LeastLoaded,
+    /// Weight forecast CI against queue depth and cache affinity.
+    CarbonGreedy,
+}
+
+impl RouterPolicy {
+    /// All policies, in comparison order (the matrix router axis).
+    pub fn all() -> [RouterPolicy; 3] {
+        [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::CarbonGreedy,
+        ]
+    }
+
+    /// Stable human/golden label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::CarbonGreedy => "carbon-greedy",
+        }
+    }
+
+    /// Instantiate the policy's (stateful) router.
+    pub fn build(&self) -> Box<dyn Router> {
+        match self {
+            RouterPolicy::RoundRobin => Box::new(RoundRobin::default()),
+            RouterPolicy::LeastLoaded => Box::new(LeastLoaded),
+            RouterPolicy::CarbonGreedy => Box::new(CarbonGreedy::default()),
+        }
+    }
+}
+
+/// Cycle through replicas in index order, one request each.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl Router for RoundRobin {
+    fn route(&mut self, _req: &Request, replicas: &[ReplicaView]) -> usize {
+        let i = self.next % replicas.len();
+        self.next = self.next.wrapping_add(1);
+        i
+    }
+}
+
+/// Join-shortest-queue, normalized by batch capacity; ties break to the
+/// lowest index.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl Router for LeastLoaded {
+    fn route(&mut self, _req: &Request, replicas: &[ReplicaView]) -> usize {
+        let mut best = 0usize;
+        let mut best_load = f64::INFINITY;
+        for (i, r) in replicas.iter().enumerate() {
+            let load = r.queue_depth as f64 / r.max_batch.max(1) as f64;
+            if load < best_load {
+                best_load = load;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// The carbon-aware policy: place the request on the replica minimizing
+///
+/// ```text
+/// score_i = ci_weight · CI_i / max_j CI_j
+///         + queue_weight · queue_i / max_batch_i
+///         − affinity_weight · cached_prefix_i / prompt_tokens
+/// ```
+///
+/// With the default weights a fully-loaded green replica loses to an
+/// empty dirty one (the SLO guard: `queue_weight > ci_weight`), and a
+/// warm prefix pulls a request toward its KV unless the grid gap is
+/// extreme. Ties break to the lowest index, so decisions are
+/// deterministic.
+#[derive(Debug, Clone)]
+pub struct CarbonGreedy {
+    /// Weight on the normalized carbon-intensity term.
+    pub ci_weight: f64,
+    /// Weight on the queue-pressure term (must dominate `ci_weight` so
+    /// overload on a green replica falls back to dirtier ones).
+    pub queue_weight: f64,
+    /// Weight on the cache-affinity discount.
+    pub affinity_weight: f64,
+}
+
+impl Default for CarbonGreedy {
+    fn default() -> Self {
+        CarbonGreedy {
+            ci_weight: 1.0,
+            queue_weight: 1.5,
+            affinity_weight: 0.5,
+        }
+    }
+}
+
+impl Router for CarbonGreedy {
+    fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize {
+        let ci_max = replicas
+            .iter()
+            .map(|r| r.ci_gpkwh)
+            .fold(f64::NEG_INFINITY, f64::max)
+            .max(1e-9);
+        let prompt = req.prompt_tokens().max(1) as f64;
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for (i, r) in replicas.iter().enumerate() {
+            let ci_term = r.ci_gpkwh / ci_max;
+            let queue_term = r.queue_depth as f64 / r.max_batch.max(1) as f64;
+            let affinity_term = (r.affinity_tokens as f64 / prompt).min(1.0);
+            let score = self.ci_weight * ci_term + self.queue_weight * queue_term
+                - self.affinity_weight * affinity_term;
+            if score < best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TaskKind;
+
+    fn req(context_tokens: u32, new_tokens: u32) -> Request {
+        Request {
+            id: 0,
+            task: TaskKind::Conversation,
+            context_id: 42,
+            context_version: 0,
+            context_tokens,
+            new_tokens,
+            output_tokens: 10,
+            arrival_s: 0.0,
+        }
+    }
+
+    fn view(queue: usize, ci: f64, affinity: u32) -> ReplicaView {
+        ReplicaView {
+            queue_depth: queue,
+            max_batch: 64,
+            ci_gpkwh: ci,
+            affinity_tokens: affinity,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = RouterPolicy::RoundRobin.build();
+        let views = [view(0, 100.0, 0), view(5, 100.0, 0), view(9, 100.0, 0)];
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&req(0, 10), &views)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min_queue() {
+        let mut r = RouterPolicy::LeastLoaded.build();
+        let views = [view(7, 33.0, 0), view(2, 485.0, 0), view(4, 100.0, 0)];
+        assert_eq!(r.route(&req(0, 10), &views), 1);
+        // Ties break to the lowest index.
+        let tied = [view(3, 33.0, 0), view(3, 485.0, 0)];
+        assert_eq!(r.route(&req(0, 10), &tied), 0);
+    }
+
+    #[test]
+    fn least_loaded_normalizes_by_capacity() {
+        let mut r = RouterPolicy::LeastLoaded.build();
+        // 10/128 < 6/64: the big replica is relatively emptier.
+        let views = [
+            ReplicaView { queue_depth: 6, max_batch: 64, ci_gpkwh: 50.0, affinity_tokens: 0 },
+            ReplicaView { queue_depth: 10, max_batch: 128, ci_gpkwh: 50.0, affinity_tokens: 0 },
+        ];
+        assert_eq!(r.route(&req(0, 10), &views), 1);
+    }
+
+    #[test]
+    fn carbon_greedy_prefers_low_ci_at_equal_load() {
+        let mut r = RouterPolicy::CarbonGreedy.build();
+        // FR (33) vs ES (124) vs MISO (485), identical queues, no prefix.
+        let views = [view(3, 124.0, 0), view(3, 33.0, 0), view(3, 485.0, 0)];
+        assert_eq!(r.route(&req(1000, 50), &views), 1);
+    }
+
+    #[test]
+    fn carbon_greedy_falls_back_under_queue_imbalance() {
+        let mut r = RouterPolicy::CarbonGreedy.build();
+        // The green replica's queue is saturated: an empty dirty replica
+        // must win (queue_weight dominates the max CI gap of 1.0).
+        let views = [view(64, 33.0, 0), view(0, 485.0, 0)];
+        assert_eq!(r.route(&req(1000, 50), &views), 1);
+        // Mild imbalance does not flip the decision.
+        let mild = [view(6, 33.0, 0), view(0, 485.0, 0)];
+        assert_eq!(r.route(&req(1000, 50), &mild), 0);
+    }
+
+    #[test]
+    fn carbon_greedy_honors_prefix_affinity() {
+        let mut r = RouterPolicy::CarbonGreedy.build();
+        // Equal CI and load; replica 1 holds the whole context prefix.
+        let views = [view(3, 124.0, 0), view(3, 124.0, 950)];
+        assert_eq!(r.route(&req(950, 50), &views), 1);
+        // Affinity can outweigh a moderate CI gap...
+        let views = [view(3, 100.0, 0), view(3, 124.0, 950)];
+        assert_eq!(r.route(&req(950, 50), &views), 1);
+        // ...but not an extreme one (FR vs MISO).
+        let views = [view(3, 33.0, 0), view(3, 485.0, 950)];
+        assert_eq!(r.route(&req(950, 50), &views), 0);
+    }
+
+    #[test]
+    fn routers_are_deterministic() {
+        let views = [view(1, 50.0, 0), view(2, 400.0, 100), view(0, 200.0, 0)];
+        for policy in RouterPolicy::all() {
+            let mut a = policy.build();
+            let mut b = policy.build();
+            for _ in 0..10 {
+                assert_eq!(a.route(&req(200, 20), &views), b.route(&req(200, 20), &views));
+            }
+        }
+    }
+
+    #[test]
+    fn policy_names_are_stable() {
+        assert_eq!(RouterPolicy::RoundRobin.name(), "round-robin");
+        assert_eq!(RouterPolicy::LeastLoaded.name(), "least-loaded");
+        assert_eq!(RouterPolicy::CarbonGreedy.name(), "carbon-greedy");
+    }
+}

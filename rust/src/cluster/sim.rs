@@ -1,0 +1,767 @@
+//! Lockstep multi-replica simulation: spec, driver and fleet aggregation.
+
+use crate::cache::{CacheManager, CacheStats, PolicyKind};
+use crate::carbon::{CarbonAccountant, TB};
+use crate::ci::Grid;
+use crate::coordinator::{GreenCacheConfig, GreenCacheController};
+use crate::experiments::{Baseline, Model, ProfileStore, Task};
+use crate::load::LoadTrace;
+use crate::rng::Rng;
+use crate::sim::{
+    Controller, FixedController, HourSample, ReplicaEngine, SimConfig, SimResult,
+};
+use crate::workload::ArrivalGen;
+
+use super::router::{ReplicaView, RouterPolicy};
+
+/// The canonical `FR+ES+MISO`-style grid-list label, shared by
+/// [`ClusterSpec::fleet_label`] and the scenario layer's
+/// [`crate::scenario::ClusterVariant`] so CLI and golden labels cannot
+/// diverge.
+pub fn grid_join(grids: &[Grid]) -> String {
+    grids
+        .iter()
+        .map(|g| g.name())
+        .collect::<Vec<_>>()
+        .join("+")
+}
+
+/// One replica of the fleet: a serving platform pinned to a grid.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaSpec {
+    /// The electric grid this replica draws from (its CI trace).
+    pub grid: Grid,
+    /// Model/platform pairing — supplies the replica's [`crate::sim::CostModel`],
+    /// power and embodied models, and KV bytes per token.
+    pub model: Model,
+    /// Max provisioned cache, TB (the per-replica controller's budget).
+    pub max_cache_tb: u32,
+}
+
+impl ReplicaSpec {
+    /// A replica of `model` on `grid` with the model's default cache
+    /// budget (§6.1: 16 TB for 70B, 8 TB for 8B).
+    pub fn new(model: Model, grid: Grid) -> Self {
+        ReplicaSpec {
+            grid,
+            model,
+            max_cache_tb: model.max_cache_tb(),
+        }
+    }
+}
+
+/// A fully-specified fleet evaluation: replicas, workload, router and
+/// horizon. The analogue of [`crate::experiments::DayScenario`] one level
+/// up.
+///
+/// Fleet runs start **cold**: replicas build their own cache working sets
+/// under the router (which is what makes affinity routing measurable).
+/// Fleet cells are therefore comparable to *each other* — including
+/// 1-replica fleets — but not to `run_day`'s single-node exhibits, which
+/// pre-warm the cache before the evaluated day.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    /// The fleet (at least one replica).
+    pub replicas: Vec<ReplicaSpec>,
+    /// Fleet-level workload (one request stream, routed).
+    pub task: Task,
+    /// Per-replica cache mode: `NoCache` / `FullCache` fix every cache,
+    /// `GreenCache` / `LruOptimal` run one independent sizing controller
+    /// per replica against its own grid.
+    pub baseline: Baseline,
+    /// Eviction-policy override; `None` keeps the baseline's pairing.
+    pub policy: Option<PolicyKind>,
+    /// Request placement policy.
+    pub router: RouterPolicy,
+    /// Evaluated horizon, hours.
+    pub hours: usize,
+    /// Trace history preceding the evaluated day (predictor food).
+    pub history_days: usize,
+    /// Workload/trace seed (router comparisons should share it).
+    pub seed: u64,
+    /// Controller decision interval, seconds.
+    pub interval_s: f64,
+    /// Shrunken-profile smoke mode (matches `ScenarioSpec::quick`).
+    pub quick: bool,
+    /// Fixed total fleet request rate; `None` replays the Azure-like
+    /// trace scaled to the fleet's summed platform peaks.
+    pub fixed_rps: Option<f64>,
+    /// Fixed CI applied to **every** replica instead of the per-grid
+    /// traces (sensitivity studies). Flattens the carbon-greedy router's
+    /// CI signal — only queue depth and affinity remain.
+    pub fixed_ci: Option<f64>,
+}
+
+impl ClusterSpec {
+    /// A homogeneous fleet: one `model` replica per grid in `grids`.
+    pub fn homogeneous(model: Model, task: Task, grids: &[Grid], router: RouterPolicy) -> Self {
+        ClusterSpec {
+            replicas: grids.iter().map(|&g| ReplicaSpec::new(model, g)).collect(),
+            task,
+            baseline: Baseline::GreenCache,
+            policy: None,
+            router,
+            hours: 24,
+            history_days: 3,
+            seed: 20_25,
+            interval_s: 3600.0,
+            quick: false,
+            fixed_rps: None,
+            fixed_ci: None,
+        }
+    }
+
+    /// Quick mode: capped horizon (profiles shrink via the quick
+    /// [`ProfileStore`] the caller passes to [`run_cluster`]).
+    pub fn quick(mut self) -> Self {
+        self.quick = true;
+        self.hours = self.hours.min(crate::experiments::QUICK_HOURS_CAP);
+        self
+    }
+
+    /// The effective eviction policy of every replica cache.
+    pub fn effective_policy(&self) -> PolicyKind {
+        self.policy.unwrap_or_else(|| self.baseline.policy())
+    }
+
+    /// Whether replicas run the adaptive (profile-consuming) controller.
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self.baseline, Baseline::GreenCache | Baseline::LruOptimal)
+    }
+
+    /// Stable fleet label, e.g. `FR+ES+MISO`.
+    pub fn fleet_label(&self) -> String {
+        let grids: Vec<Grid> = self.replicas.iter().map(|r| r.grid).collect();
+        grid_join(&grids)
+    }
+
+    /// Summed platform peak rate of the fleet, rps (the Azure-like trace
+    /// is scaled to this when `fixed_rps` is unset).
+    pub fn fleet_peak_rps(&self) -> f64 {
+        self.replicas
+            .iter()
+            .map(|r| r.model.peak_rps(self.task.kind()))
+            .sum()
+    }
+}
+
+/// One replica's outcome within a fleet run.
+#[derive(Debug)]
+pub struct ReplicaOutcome {
+    /// The replica as specified.
+    pub spec: ReplicaSpec,
+    /// The replica's full single-node simulation result.
+    pub sim: SimResult,
+    /// Requests the router placed on this replica.
+    pub routed: usize,
+    /// Mean provisioned cache over the evaluated hours, TB.
+    pub mean_cache_tb: f64,
+    /// Final cache statistics (token-level hit accounting).
+    pub cache_stats: CacheStats,
+    /// Mean ground-truth CI of the replica's grid over the evaluated
+    /// hours, gCO₂e/kWh.
+    pub mean_ci: f64,
+}
+
+/// Fleet-level result: per-replica outcomes plus exact aggregates.
+#[derive(Debug)]
+pub struct ClusterResult {
+    /// Per-replica outcomes, in [`ClusterSpec::replicas`] order.
+    pub replicas: Vec<ReplicaOutcome>,
+    /// Fleet-wide completed requests.
+    pub completed: usize,
+    /// Fleet-wide total emissions, grams (sum of replica breakdowns).
+    pub total_carbon_g: f64,
+    /// Fleet-wide grams per completed request.
+    pub carbon_per_request_g: f64,
+    /// Fleet-wide joint SLO attainment (request-weighted merge of the
+    /// per-replica trackers).
+    pub slo_attainment: f64,
+    /// Fleet-wide token hit rate: Σ hit tokens / Σ input tokens.
+    pub token_hit_rate: f64,
+    /// Completed-weighted mean TTFT, seconds.
+    pub mean_ttft_s: f64,
+    /// Completed-weighted mean TPOT, seconds.
+    pub mean_tpot_s: f64,
+    /// Total provisioned cache across the fleet (sum of per-replica
+    /// hourly means), TB.
+    pub fleet_mean_cache_tb: f64,
+    /// Fleet-aggregated timeline: per interval, rates/completions/carbon
+    /// are summed, `cache_bytes` is the fleet total, `ci` is the
+    /// unweighted mean across replicas, and the P90 fields carry the
+    /// worst (max) replica — a conservative fleet latency signal.
+    pub hours: Vec<HourSample>,
+}
+
+impl ClusterResult {
+    /// Fold per-replica outcomes into the fleet aggregates.
+    pub fn aggregate(replicas: Vec<ReplicaOutcome>) -> Self {
+        assert!(!replicas.is_empty(), "fleet must have at least one replica");
+        let completed: usize = replicas.iter().map(|r| r.sim.completed).sum();
+        let total_carbon_g: f64 = replicas
+            .iter()
+            .map(|r| r.sim.accountant.breakdown().total_g())
+            .sum();
+        let mut slo = replicas[0].sim.slo.clone();
+        for r in &replicas[1..] {
+            slo.merge(&r.sim.slo);
+        }
+        let (hit, input) = replicas.iter().fold((0u64, 0u64), |(h, i), r| {
+            (h + r.cache_stats.hit_tokens, i + r.cache_stats.input_tokens)
+        });
+        let wmean = |f: &dyn Fn(&ReplicaOutcome) -> f64| -> f64 {
+            if completed == 0 {
+                0.0
+            } else {
+                replicas
+                    .iter()
+                    .map(|r| f(r) * r.sim.completed as f64)
+                    .sum::<f64>()
+                    / completed as f64
+            }
+        };
+        let mean_ttft_s = wmean(&|r| r.sim.mean_ttft_s);
+        let mean_tpot_s = wmean(&|r| r.sim.mean_tpot_s);
+        let fleet_mean_cache_tb = replicas.iter().map(|r| r.mean_cache_tb).sum();
+        let hours = Self::fleet_hours(&replicas);
+        ClusterResult {
+            completed,
+            total_carbon_g,
+            carbon_per_request_g: total_carbon_g / completed.max(1) as f64,
+            slo_attainment: slo.attainment(),
+            token_hit_rate: if input == 0 { 0.0 } else { hit as f64 / input as f64 },
+            mean_ttft_s,
+            mean_tpot_s,
+            fleet_mean_cache_tb,
+            hours,
+            replicas,
+        }
+    }
+
+    fn fleet_hours(replicas: &[ReplicaOutcome]) -> Vec<HourSample> {
+        let n_intervals = replicas.iter().map(|r| r.sim.hours.len()).max().unwrap_or(0);
+        let mut out = Vec::with_capacity(n_intervals);
+        for i in 0..n_intervals {
+            let parts: Vec<&HourSample> = replicas
+                .iter()
+                .filter_map(|r| r.sim.hours.get(i))
+                .collect();
+            let mut h = HourSample {
+                hour: i,
+                ..HourSample::default()
+            };
+            for p in &parts {
+                h.rps += p.rps;
+                h.cache_bytes += p.cache_bytes;
+                h.completed += p.completed;
+                h.carbon_g += p.carbon_g;
+                h.operational_g += p.operational_g;
+                h.cache_embodied_g += p.cache_embodied_g;
+                h.other_embodied_g += p.other_embodied_g;
+                h.ci += p.ci;
+                h.p90_ttft_s = h.p90_ttft_s.max(p.p90_ttft_s);
+                h.p90_tpot_s = h.p90_tpot_s.max(p.p90_tpot_s);
+            }
+            if !parts.is_empty() {
+                h.ci /= parts.len() as f64;
+            }
+            out.push(h);
+        }
+        out
+    }
+
+    /// Deterministic per-replica breakdown table (CLI reporting; fleet
+    /// golden snapshots go through the scenario matrix table instead).
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<8} {:>8} {:>9} {:>10} {:>9} {:>7} {:>8}\n",
+            "replica", "meanCI", "routed", "completed", "carbon_g", "hit", "cacheTB"
+        ));
+        for r in &self.replicas {
+            out.push_str(&format!(
+                "{:<8} {:>8.1} {:>9} {:>10} {:>9.1} {:>7.3} {:>8.2}\n",
+                r.spec.grid.name(),
+                r.mean_ci,
+                r.routed,
+                r.sim.completed,
+                r.sim.accountant.breakdown().total_g(),
+                r.cache_stats.token_hit_rate(),
+                r.mean_cache_tb,
+            ));
+        }
+        out.push_str(&format!(
+            "{:<8} {:>8} {:>9} {:>10} {:>9.1} {:>7.3} {:>8.2}\n",
+            "fleet",
+            "-",
+            self.replicas.iter().map(|r| r.routed).sum::<usize>(),
+            self.completed,
+            self.total_carbon_g,
+            self.token_hit_rate,
+            self.fleet_mean_cache_tb,
+        ));
+        out
+    }
+}
+
+/// Internal per-replica live state during a fleet run.
+struct Rep {
+    spec: ReplicaSpec,
+    engine: ReplicaEngine,
+    controller: Box<dyn Controller>,
+    /// Absolute hourly CI trace (history + evaluated horizon).
+    ci: Vec<f64>,
+    routed: usize,
+}
+
+/// Advance one replica's engine to `t` against its own CI trace and
+/// controller (field-disjoint borrows keep this a free function).
+fn advance(rep: &mut Rep, base_hour: usize, t: f64) {
+    let Rep {
+        engine,
+        controller,
+        ci,
+        ..
+    } = rep;
+    let ci: &[f64] = ci;
+    let last = ci.len() - 1;
+    let ci_fn = move |h: usize| ci[(base_hour + h).min(last)];
+    engine.run_until(t, &ci_fn, controller.as_mut());
+}
+
+/// The lockstep fleet simulator.
+///
+/// Construction assembles the per-replica engines, traces and
+/// controllers; [`ClusterSim::run`] consumes the simulator, interleaving
+/// one shared arrival stream with per-replica engine stepping:
+///
+/// ```text
+/// for each arrival t (one Poisson stream at the fleet rate):
+///     every replica engine advances to t        (lockstep)
+///     router places the request on one replica  (live queues + caches)
+/// at the horizon: every engine drains, results aggregate
+/// ```
+pub struct ClusterSim {
+    spec: ClusterSpec,
+    reps: Vec<Rep>,
+    load_trace: LoadTrace,
+    base_hour: usize,
+}
+
+impl ClusterSim {
+    /// Assemble the fleet. `profiles` feeds each adaptive replica
+    /// controller its (model, task, policy) profile table — pass a
+    /// quick-mode store for smoke runs.
+    pub fn new(spec: &ClusterSpec, profiles: &mut ProfileStore) -> Self {
+        assert!(!spec.replicas.is_empty(), "fleet must have at least one replica");
+        let kind = spec.task.kind();
+        let total_days = spec.history_days + spec.hours.div_ceil(24).max(1);
+        let base_hour = spec.history_days * 24;
+        let fleet_peak = spec.fleet_peak_rps();
+
+        let load_trace = match spec.fixed_rps {
+            Some(r) => LoadTrace::constant(total_days * 24, r),
+            None => LoadTrace::azure_like(total_days, fleet_peak, spec.seed ^ 0x10AD),
+        };
+        let policy = spec.effective_policy();
+
+        let mut reps = Vec::with_capacity(spec.replicas.len());
+        for (i, r) in spec.replicas.iter().enumerate() {
+            // Same-seeded grid traces: replicas on the same grid see the
+            // same CI (it is the grid's weather, not the replica's). A
+            // fixed-CI override replaces the *evaluated* hours only —
+            // predictor history stays the real trace, exactly like
+            // `run_day`'s fixed_ci semantics, so fleet and single-node
+            // sensitivity cells train their controllers identically.
+            let mut ci = r.grid.trace(total_days, spec.seed ^ 0xC1).hourly;
+            if let Some(c) = spec.fixed_ci {
+                for v in ci[base_hour..].iter_mut() {
+                    *v = c;
+                }
+            }
+            let max_bytes = r.max_cache_tb as u64 * TB as u64;
+            let capacity = match spec.baseline {
+                Baseline::NoCache => 0u64,
+                _ => max_bytes,
+            };
+            let mut cache =
+                CacheManager::new(capacity, r.model.kv_bytes_per_token(), policy);
+
+            // Pre-day bootstrap shared with `experiments::run_day` via
+            // `GreenCacheController::bootstrapped`. (Caches start cold
+            // here, unlike run_day's pre-warmed single node — see the
+            // ClusterSpec docs.)
+            let controller: Box<dyn Controller> = if spec.is_adaptive() && capacity > 0 {
+                let profile = profiles.get(r.model, spec.task, policy).clone();
+                let ci_hist = ci[..base_hour].to_vec();
+                // Each controller's *pre-deployment* history assumes a
+                // peak-proportional share of the fleet load. A routing
+                // policy that concentrates traffic (carbon-greedy) makes
+                // that first plan wrong, but `on_interval` feeds each
+                // controller its replica's *observed* rps from hour one,
+                // so SARIMA refits onto the real split as the day runs.
+                // Co-planning routing and sizing fleet-wide is a ROADMAP
+                // open item.
+                let share = r.model.peak_rps(kind) / fleet_peak.max(1e-9);
+                let load_hist: Vec<f64> = load_trace.hourly_rps[..base_hour]
+                    .iter()
+                    .map(|x| x * share)
+                    .collect();
+                let gc_cfg = GreenCacheConfig::paper_defaults(
+                    r.max_cache_tb,
+                    r.model.embodied(),
+                    spec.interval_s / 3600.0,
+                    spec.seed ^ (i as u64),
+                );
+                Box::new(GreenCacheController::bootstrapped(
+                    gc_cfg, profile, ci_hist, load_hist, base_hour, &mut cache,
+                ))
+            } else {
+                Box::new(FixedController)
+            };
+
+            let cfg = SimConfig {
+                cost: r.model.cost(),
+                power: r.model.power(),
+                slo: r.model.slo(kind),
+                interval_s: spec.interval_s,
+                hours: spec.hours,
+                // The engine itself draws nothing from this seed — all
+                // fleet randomness lives in ClusterSim::run's shared
+                // arrival/workload generators.
+                seed: spec.seed,
+            };
+            let accountant = CarbonAccountant::new(r.model.embodied());
+            reps.push(Rep {
+                spec: *r,
+                engine: ReplicaEngine::new(cfg, cache, accountant),
+                controller,
+                ci,
+                routed: 0,
+            });
+        }
+
+        ClusterSim {
+            spec: spec.clone(),
+            reps,
+            load_trace,
+            base_hour,
+        }
+    }
+
+    /// Run the fleet to the horizon and aggregate.
+    pub fn run(self) -> ClusterResult {
+        let ClusterSim {
+            spec,
+            mut reps,
+            load_trace,
+            base_hour,
+        } = self;
+        let horizon_s = spec.hours as f64 * 3600.0;
+        let last_load = load_trace.hourly_rps.len() - 1;
+        let rate_of_hour =
+            |h: usize| load_trace.hourly_rps[(base_hour + h).min(last_load)];
+
+        // Same arrival/workload seeding as the single-node `simulate`, so
+        // a 1-replica fleet replays the same request stream.
+        let mut workload = spec.task.make_workload(spec.seed);
+        let mut rng = Rng::new(spec.seed ^ 0x51B_E11E);
+        let mut arrivals = ArrivalGen::new(spec.seed);
+        let mut router = spec.router.build();
+
+        let mut next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
+        while next_arrival < horizon_s {
+            // Lockstep: every replica reaches the arrival instant before
+            // the router reads queues and caches.
+            for rep in reps.iter_mut() {
+                advance(rep, base_hour, next_arrival);
+            }
+            // A tripped overload valve anywhere freezes that engine's
+            // clock; stop the stream rather than distort its statistics.
+            if reps.iter().any(|rep| rep.engine.overloaded()) {
+                break;
+            }
+            let mut req = workload.next_request(&mut rng);
+            req.arrival_s = next_arrival;
+
+            let hour = (next_arrival / 3600.0) as usize;
+            let views: Vec<ReplicaView> = reps
+                .iter()
+                .map(|rep| ReplicaView {
+                    queue_depth: rep.engine.queue_depth(),
+                    max_batch: rep.engine.cost().max_batch,
+                    ci_gpkwh: rep.ci[(base_hour + hour).min(rep.ci.len() - 1)],
+                    affinity_tokens: rep.engine.cache().peek(&req),
+                })
+                .collect();
+            let choice = router.route(&req, &views).min(reps.len() - 1);
+            reps[choice].routed += 1;
+            reps[choice].engine.inject(req);
+
+            next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
+        }
+
+        let hours = spec.hours;
+        let outcomes: Vec<ReplicaOutcome> = reps
+            .into_iter()
+            .map(|rep| {
+                let Rep {
+                    spec: rspec,
+                    engine,
+                    mut controller,
+                    ci,
+                    routed,
+                    ..
+                } = rep;
+                let ci_slice: &[f64] = &ci;
+                let last = ci_slice.len() - 1;
+                let ci_fn = move |h: usize| ci_slice[(base_hour + h).min(last)];
+                let (sim, cache) = engine.finish(horizon_s, &ci_fn, controller.as_mut());
+                let mean_cache_tb = sim.mean_cache_tb(cache.capacity_bytes());
+                let eval = &ci[base_hour..(base_hour + hours).min(ci.len())];
+                let mean_ci = if eval.is_empty() {
+                    0.0
+                } else {
+                    eval.iter().sum::<f64>() / eval.len() as f64
+                };
+                ReplicaOutcome {
+                    spec: rspec,
+                    routed,
+                    mean_cache_tb,
+                    cache_stats: cache.stats(),
+                    mean_ci,
+                    sim,
+                }
+            })
+            .collect();
+        ClusterResult::aggregate(outcomes)
+    }
+}
+
+/// Convenience: assemble and run a fleet in one call.
+pub fn run_cluster(spec: &ClusterSpec, profiles: &mut ProfileStore) -> ClusterResult {
+    ClusterSim::new(spec, profiles).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A 2-replica FR+MISO conversation fleet at a fixed, comfortably
+    /// sub-capacity rate — the canonical router-comparison scenario.
+    fn fr_miso(router: RouterPolicy) -> ClusterSpec {
+        let mut spec = ClusterSpec::homogeneous(
+            Model::Llama70B,
+            Task::Conversation,
+            &[Grid::Fr, Grid::Miso],
+            router,
+        );
+        spec.baseline = Baseline::FullCache;
+        spec.hours = 4;
+        spec.fixed_rps = Some(0.35);
+        spec
+    }
+
+    fn run(spec: &ClusterSpec) -> ClusterResult {
+        let mut profiles = ProfileStore::new(true);
+        run_cluster(spec, &mut profiles)
+    }
+
+    #[test]
+    fn fleet_runs_and_conserves_requests() {
+        let r = run(&fr_miso(RouterPolicy::RoundRobin));
+        // ~0.35 rps × 4 h ≈ 5040 arrivals; all routed requests complete.
+        let routed: usize = r.replicas.iter().map(|x| x.routed).sum();
+        assert!(routed > 4000 && routed < 6200, "routed {routed}");
+        assert_eq!(r.completed, routed, "every routed request must complete");
+        for rep in &r.replicas {
+            assert_eq!(rep.routed, rep.sim.completed);
+        }
+    }
+
+    #[test]
+    fn round_robin_splits_evenly() {
+        let r = run(&fr_miso(RouterPolicy::RoundRobin));
+        let a = r.replicas[0].routed as i64;
+        let b = r.replicas[1].routed as i64;
+        assert!((a - b).abs() <= 1, "round-robin split {a}/{b}");
+    }
+
+    #[test]
+    fn carbon_greedy_concentrates_on_green_grid() {
+        let r = run(&fr_miso(RouterPolicy::CarbonGreedy));
+        let fr = &r.replicas[0];
+        let miso = &r.replicas[1];
+        assert!(
+            fr.routed > 3 * miso.routed,
+            "greedy should pull work to FR: {} vs {}",
+            fr.routed,
+            miso.routed
+        );
+    }
+
+    #[test]
+    fn carbon_greedy_beats_round_robin_at_equal_slo() {
+        // The acceptance scenario: same fleet, same workload seed, only
+        // the router differs. Carbon-greedy must cut total carbon without
+        // giving up SLO attainment.
+        let rr = run(&fr_miso(RouterPolicy::RoundRobin));
+        let greedy = run(&fr_miso(RouterPolicy::CarbonGreedy));
+        assert!(
+            greedy.total_carbon_g < rr.total_carbon_g,
+            "greedy {:.1} g !< round-robin {:.1} g",
+            greedy.total_carbon_g,
+            rr.total_carbon_g
+        );
+        assert!(
+            greedy.slo_attainment >= rr.slo_attainment - 0.03,
+            "greedy SLO {:.3} gave up too much vs rr {:.3}",
+            greedy.slo_attainment,
+            rr.slo_attainment
+        );
+    }
+
+    #[test]
+    fn affinity_routing_raises_hit_rate_on_equal_grids() {
+        // Two replicas on the SAME grid: CI terms tie, so carbon-greedy
+        // reduces to sticky (affinity + queue) routing. Round-robin slices
+        // conversations across replicas and loses prefix reuse.
+        let mk = |router| {
+            let mut spec = ClusterSpec::homogeneous(
+                Model::Llama70B,
+                Task::Conversation,
+                &[Grid::Es, Grid::Es],
+                router,
+            );
+            spec.baseline = Baseline::FullCache;
+            spec.hours = 3;
+            spec.fixed_rps = Some(0.4);
+            run(&spec)
+        };
+        let rr = mk(RouterPolicy::RoundRobin);
+        let greedy = mk(RouterPolicy::CarbonGreedy);
+        assert!(
+            greedy.token_hit_rate > rr.token_hit_rate,
+            "sticky routing hit rate {:.3} !> round-robin {:.3}",
+            greedy.token_hit_rate,
+            rr.token_hit_rate
+        );
+    }
+
+    #[test]
+    fn aggregation_equals_per_replica_sums_and_weighted_means() {
+        let r = run(&fr_miso(RouterPolicy::LeastLoaded));
+        let completed: usize = r.replicas.iter().map(|x| x.sim.completed).sum();
+        assert_eq!(r.completed, completed);
+        let carbon: f64 = r
+            .replicas
+            .iter()
+            .map(|x| x.sim.accountant.breakdown().total_g())
+            .sum();
+        assert!((r.total_carbon_g - carbon).abs() < 1e-9);
+        assert!(
+            (r.carbon_per_request_g - carbon / completed.max(1) as f64).abs() < 1e-12
+        );
+        // Token hit rate is the exact token-weighted merge.
+        let hit: u64 = r.replicas.iter().map(|x| x.cache_stats.hit_tokens).sum();
+        let input: u64 = r.replicas.iter().map(|x| x.cache_stats.input_tokens).sum();
+        assert!((r.token_hit_rate - hit as f64 / input as f64).abs() < 1e-12);
+        // SLO attainment is the request-weighted mean of replica parts.
+        let want_slo: f64 = r
+            .replicas
+            .iter()
+            .map(|x| x.sim.slo.attainment() * x.sim.slo.total() as f64)
+            .sum::<f64>()
+            / r.replicas.iter().map(|x| x.sim.slo.total()).sum::<usize>() as f64;
+        assert!((r.slo_attainment - want_slo).abs() < 1e-12);
+        // Weighted-mean latencies.
+        let want_ttft: f64 = r
+            .replicas
+            .iter()
+            .map(|x| x.sim.mean_ttft_s * x.sim.completed as f64)
+            .sum::<f64>()
+            / completed as f64;
+        assert!((r.mean_ttft_s - want_ttft).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_hours_sum_carbon_and_completions() {
+        let r = run(&fr_miso(RouterPolicy::RoundRobin));
+        assert!(r.hours.len() >= 4);
+        let timeline_total: usize = r.hours.iter().map(|h| h.completed).sum();
+        let replica_total: usize = r
+            .replicas
+            .iter()
+            .map(|x| x.sim.hours.iter().map(|h| h.completed).sum::<usize>())
+            .sum();
+        assert_eq!(timeline_total, replica_total);
+        for (i, h) in r.hours.iter().enumerate() {
+            assert_eq!(h.hour, i);
+            let want: f64 = r
+                .replicas
+                .iter()
+                .filter_map(|x| x.sim.hours.get(i))
+                .map(|h| h.carbon_g)
+                .sum();
+            assert!((h.carbon_g - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cluster_runs_are_deterministic() {
+        let a = run(&fr_miso(RouterPolicy::CarbonGreedy));
+        let b = run(&fr_miso(RouterPolicy::CarbonGreedy));
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.table(), b.table());
+        assert!((a.total_carbon_g - b.total_carbon_g).abs() < 1e-9);
+        assert!((a.token_hit_rate - b.token_hit_rate).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_replica_fleet_ignores_router_choice() {
+        let mk = |router| {
+            let mut spec = ClusterSpec::homogeneous(
+                Model::Llama70B,
+                Task::Conversation,
+                &[Grid::Es],
+                router,
+            );
+            spec.baseline = Baseline::FullCache;
+            spec.hours = 2;
+            spec.fixed_rps = Some(0.3);
+            run(&spec)
+        };
+        let a = mk(RouterPolicy::RoundRobin);
+        let b = mk(RouterPolicy::CarbonGreedy);
+        assert_eq!(a.completed, b.completed);
+        assert!((a.total_carbon_g - b.total_carbon_g).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adaptive_fleet_sizes_caches_per_grid() {
+        // GreenCache per replica: the FR replica (33 g/kWh) should
+        // provision no more cache than the MISO one (485 g/kWh) — at low
+        // CI the embodied term dominates (Takeaway 5, per replica).
+        let mut spec = ClusterSpec::homogeneous(
+            Model::Llama70B,
+            Task::Conversation,
+            &[Grid::Fr, Grid::Miso],
+            RouterPolicy::RoundRobin,
+        );
+        spec.hours = 3;
+        spec.fixed_rps = Some(0.3);
+        let r = run(&spec);
+        let fr = &r.replicas[0];
+        let miso = &r.replicas[1];
+        assert!(
+            fr.mean_cache_tb <= miso.mean_cache_tb + 1e-9,
+            "FR provisioned {:.1} TB > MISO {:.1} TB",
+            fr.mean_cache_tb,
+            miso.mean_cache_tb
+        );
+        // Both controllers stayed within budget.
+        for rep in &r.replicas {
+            assert!(rep.mean_cache_tb <= rep.spec.max_cache_tb as f64 + 1e-9);
+        }
+    }
+}

@@ -40,8 +40,11 @@ pub struct GreenCacheConfig {
     pub horizon_hours: usize,
     /// SLO attainment target ρ.
     pub rho: f64,
+    /// Embodied inventory for the Eq. 6 cost coefficients.
     pub embodied: EmbodiedModel,
+    /// Where the CI forecast comes from.
     pub ci_source: CiSource,
+    /// Where the load forecast comes from.
     pub load_source: LoadSource,
     /// Multiplicative noise injected into profile lookups (Fig. 17's
     /// "profiler error"); 0.0 = exact profile.
@@ -52,32 +55,53 @@ pub struct GreenCacheConfig {
     /// the whole interval to ensure the SLO attainment goal" (§6.6.1) —
     /// which is exactly why long intervals erode the savings.
     pub interval_hours: f64,
+    /// Seed for the (optional) profile-noise jitter.
     pub seed: u64,
 }
 
 impl GreenCacheConfig {
-    pub fn default_70b() -> Self {
+    /// The paper's controller constants (granularity 1 TB, 24 h horizon,
+    /// ρ = 0.9, predictor-driven forecasts, exact profile) around a
+    /// platform's cache budget and embodied inventory. The single source
+    /// of these defaults — `experiments::run_day` and the cluster layer's
+    /// per-replica setup both build from here, so single-node and fleet
+    /// cells cannot drift apart when the constants are tuned.
+    pub fn paper_defaults(
+        max_cache_tb: u32,
+        embodied: EmbodiedModel,
+        interval_hours: f64,
+        seed: u64,
+    ) -> Self {
         GreenCacheConfig {
-            max_cache_tb: 16,
+            max_cache_tb,
             granularity_tb: 1,
             horizon_hours: 24,
             rho: 0.9,
-            embodied: EmbodiedModel::default(),
+            embodied,
             ci_source: CiSource::Predictor,
             load_source: LoadSource::Sarima,
             profile_noise: 0.0,
-            interval_hours: 1.0,
-            seed: 13,
+            interval_hours,
+            seed,
         }
+    }
+
+    /// §6.1 defaults for the 70B platform.
+    pub fn default_70b() -> Self {
+        Self::paper_defaults(16, EmbodiedModel::default(), 1.0, 13)
     }
 }
 
 /// One logged resize decision (feeds Fig. 14 timelines + Fig. 16 latency).
 #[derive(Debug, Clone, Copy)]
 pub struct Decision {
+    /// Absolute hour the decision takes effect.
     pub hour: usize,
+    /// Chosen cache size, TB.
     pub chosen_tb: u32,
+    /// Wall-clock of the solve, seconds.
     pub solve_time_s: f64,
+    /// DP transitions explored by the solver.
     pub nodes_explored: u64,
     /// True when the ILP was infeasible and the controller fell back to
     /// the max cache (§4.2).
@@ -95,6 +119,7 @@ pub struct GreenCacheController {
     rng: Rng,
     /// Absolute hour of the next interval to decide for.
     base_hour: usize,
+    /// Every decision taken so far, in order.
     pub decisions: Vec<Decision>,
 }
 
@@ -121,6 +146,26 @@ impl GreenCacheController {
             base_hour,
             decisions: Vec::new(),
         }
+    }
+
+    /// [`Self::new`] plus the paper's pre-day bootstrap (§4.1): take the
+    /// initial decision for `base_hour` and apply it to `cache` before
+    /// the evaluated day starts. The one shared entry point for
+    /// `experiments::run_day` and the per-replica setup in
+    /// `cluster::ClusterSim`, so the bootstrap protocol cannot drift
+    /// between single-node and fleet cells.
+    pub fn bootstrapped(
+        cfg: GreenCacheConfig,
+        profile: ProfileTable,
+        ci_history: Vec<f64>,
+        load_history: Vec<f64>,
+        base_hour: usize,
+        cache: &mut crate::cache::CacheManager,
+    ) -> Self {
+        let mut ctl = Self::new(cfg, profile, ci_history, load_history, base_hour);
+        let first = ctl.decide(base_hour);
+        cache.resize(first.chosen_tb as u64 * TB as u64, 0.0);
+        ctl
     }
 
     /// Candidate sizes: 0, g, 2g, ..., max (§5.4.3's discrete set).

@@ -24,25 +24,40 @@ use crate::workload::Request;
 /// A served request's outcome.
 #[derive(Debug, Clone)]
 pub struct Served {
+    /// The request's id.
     pub request_id: u64,
+    /// Generated token ids.
     pub tokens: Vec<i32>,
+    /// Time to first token, seconds.
     pub ttft_s: f64,
+    /// Time per output token, seconds.
     pub tpot_s: f64,
+    /// Context tokens served from cache.
     pub hit_tokens: u32,
+    /// Prefill chunks executed.
     pub chunks_executed: usize,
+    /// Prefill chunks skipped via the cached prefix.
     pub chunks_skipped: usize,
 }
 
 /// Aggregate serving report (printed by the examples).
 #[derive(Debug)]
 pub struct ServeReport {
+    /// Per-request outcomes, in serving order.
     pub served: Vec<Served>,
+    /// SLO attainment over the run.
     pub slo: SloTracker,
+    /// TTFT samples over the run.
     pub ttft: LatencyStats,
+    /// Wall-clock of the run, seconds.
     pub wall_s: f64,
+    /// Requests per second.
     pub throughput_rps: f64,
+    /// Token-level cache hit rate.
     pub token_hit_rate: f64,
+    /// Request-level cache hit rate.
     pub request_hit_rate: f64,
+    /// Carbon accounted over the run.
     pub carbon: CarbonAccountant,
     /// Fraction of wall time inside XLA executions (perf accounting).
     pub xla_fraction: f64,
@@ -52,9 +67,11 @@ pub struct ServeReport {
 pub struct ServerConfig {
     /// Cache capacity, bytes (the tiny model's "SSD tier").
     pub cache_bytes: u64,
+    /// Cache eviction policy.
     pub policy: PolicyKind,
     /// Decode length per request.
     pub n_new: usize,
+    /// SLO thresholds for the report.
     pub slo: Slo,
     /// Carbon intensity to account the run under.
     pub ci: Ci,
@@ -87,16 +104,19 @@ pub struct Server {
 }
 
 impl Server {
+    /// A server over `engine` with a fresh cache sized by `cfg`.
     pub fn new(engine: Engine, cfg: ServerConfig) -> Self {
         let kv_per_token = engine.config().kv_bytes_per_token() as u64;
         let cache = CacheManager::new(cfg.cache_bytes, kv_per_token, cfg.policy);
         Server { engine, cache, cfg }
     }
 
+    /// The server's context cache.
     pub fn cache(&self) -> &CacheManager {
         &self.cache
     }
 
+    /// The serving backend.
     pub fn engine(&self) -> &Engine {
         &self.engine
     }

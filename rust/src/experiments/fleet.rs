@@ -1,0 +1,144 @@
+//! Fleet experiment: single-replica vs multi-replica, multi-grid serving
+//! under the three router policies.
+//!
+//! The cluster analogue of Fig. 12: fleets of 1 / 2 / 4 replicas spread
+//! across grids from near-zero-carbon hydro/nuclear (FR) to coal-heavy
+//! (PJM/MISO), serving one Azure-shaped request stream scaled to each
+//! fleet's capacity. Every fleet × router × baseline combination is one
+//! scenario-matrix cell, so the whole exhibit runs in parallel through
+//! the standard [`MatrixRunner`](crate::scenario::MatrixRunner) and the
+//! comparison within a fleet replays the identical day (shared workload
+//! seed).
+//!
+//! Expected shape: the carbon-greedy router beats round-robin on total
+//! carbon at equal SLO attainment in the multi-grid fleets (it drains
+//! work toward green grids until queues push back, and keeps
+//! conversations sticky to their cached prefix), while least-loaded sits
+//! between the two on carbon but leads on latency headroom.
+
+use super::*;
+use crate::cluster::RouterPolicy;
+use crate::scenario::{run_specs, ClusterVariant, Matrix};
+use crate::util::csv::Csv;
+
+/// The evaluated fleet shapes: (label, replica grids).
+fn fleets() -> Vec<(&'static str, Vec<Grid>)> {
+    vec![
+        ("1xES", vec![Grid::Es]),
+        ("2x(FR+MISO)", vec![Grid::Fr, Grid::Miso]),
+        (
+            "4x(FR+ES+PJM+MISO)",
+            vec![Grid::Fr, Grid::Es, Grid::Pjm, Grid::Miso],
+        ),
+    ]
+}
+
+/// Fleet comparison: replica counts × router policies × baselines.
+pub fn fleet(quick: bool) -> Csv {
+    let mut csv = Csv::new(&[
+        "fleet",
+        "router",
+        "baseline",
+        "carbon_per_request_g",
+        "slo_attainment",
+        "token_hit_rate",
+        "mean_cache_tb",
+        "completed",
+    ]);
+    println!("Fleet — multi-replica multi-grid serving, router policy comparison");
+
+    // Every fleet under every router; single-replica fleets are routed
+    // trivially, so one router entry suffices there.
+    let mut clusters: Vec<Option<ClusterVariant>> = Vec::new();
+    for (_, grids) in fleets() {
+        if grids.len() == 1 {
+            clusters.push(Some(ClusterVariant::new(&grids, RouterPolicy::RoundRobin)));
+        } else {
+            for r in RouterPolicy::all() {
+                clusters.push(Some(ClusterVariant::new(&grids, r)));
+            }
+        }
+    }
+
+    let matrix = Matrix::new()
+        .models(&[Model::Llama70B])
+        .tasks(&[Task::Conversation])
+        .grids(&[Grid::Es]) // seeding axis; fleet grids live in the variant
+        .baselines(&[Baseline::FullCache, Baseline::GreenCache])
+        .clusters(&clusters)
+        .quick(quick);
+    let result = run_specs(&matrix.expand(), 0);
+
+    for c in &result.cells {
+        let cv = c.spec.cluster.as_ref().expect("fleet cells only");
+        let fleet_label = fleets()
+            .iter()
+            .find(|(_, g)| *g == cv.grids)
+            .map(|(l, _)| *l)
+            .unwrap_or("?")
+            .to_string();
+        println!(
+            "  {:<20} {:<13} {:<11}: {:>8.3} g/req  SLO {:>5.1}%  hit {:>5.3}  cache {:>5.1} TB  ({} reqs)",
+            fleet_label,
+            cv.router.name(),
+            c.spec.baseline.name(),
+            c.carbon_per_request_g,
+            c.slo_attainment * 100.0,
+            c.token_hit_rate,
+            c.mean_cache_tb,
+            c.completed,
+        );
+        csv.row(&[
+            fleet_label,
+            cv.router.name().into(),
+            c.spec.baseline.name().into(),
+            format!("{:.4}", c.carbon_per_request_g),
+            format!("{:.4}", c.slo_attainment),
+            format!("{:.4}", c.token_hit_rate),
+            format!("{:.2}", c.mean_cache_tb),
+            c.completed.to_string(),
+        ]);
+    }
+
+    // Headline: carbon-greedy vs round-robin within each multi-grid fleet.
+    for baseline in [Baseline::FullCache, Baseline::GreenCache] {
+        for (label, grids) in fleets().iter().filter(|(_, g)| g.len() > 1) {
+            let find = |router: RouterPolicy| {
+                result.cells.iter().find(|c| {
+                    c.spec.baseline == baseline
+                        && c.spec.cluster.as_ref().is_some_and(|cv| {
+                            cv.router == router && cv.grids == *grids
+                        })
+                })
+            };
+            if let (Some(rr), Some(greedy)) =
+                (find(RouterPolicy::RoundRobin), find(RouterPolicy::CarbonGreedy))
+            {
+                println!(
+                    "  {:<20} {:<11}: carbon-greedy saves {:>5.1}% vs round-robin (SLO {:+.1} pp)",
+                    label,
+                    baseline.name(),
+                    saving_pct(rr.carbon_per_request_g, greedy.carbon_per_request_g),
+                    (greedy.slo_attainment - rr.slo_attainment) * 100.0,
+                );
+            }
+        }
+    }
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_axis_covers_all_shapes() {
+        // 1 single-replica entry + 2 multi-grid fleets × 3 routers each,
+        // times 2 baselines.
+        let shapes = fleets();
+        assert_eq!(shapes.len(), 3);
+        assert_eq!(shapes[0].1.len(), 1);
+        assert_eq!(shapes[1].1.len(), 2);
+        assert_eq!(shapes[2].1.len(), 4);
+    }
+}

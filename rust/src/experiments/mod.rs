@@ -8,11 +8,13 @@
 //! don't transfer (different substrate — see README § Scaling);
 //! the comparisons, orderings and crossovers are the reproduction target.
 //! Multi-cell exhibits fan out through [`crate::scenario`]'s parallel
-//! matrix runner.
+//! matrix runner; the [`fleet`] exhibit additionally lifts cells to
+//! multi-replica clusters via [`crate::cluster`].
 
 pub mod ablation;
 pub mod characterization;
 pub mod evaluation;
+pub mod fleet;
 
 use crate::cache::{CacheManager, PolicyKind, KV_BYTES_PER_TOKEN_70B, KV_BYTES_PER_TOKEN_8B};
 use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
@@ -26,14 +28,22 @@ use crate::workload::{
     ConversationGen, ConversationParams, DocumentGen, DocumentParams, TaskKind, Workload,
 };
 
+/// Horizon cap applied by every quick (smoke) mode —
+/// `DayScenario::quick`, `ScenarioSpec::quick` and `ClusterSpec::quick`
+/// all clamp to this so quick cells replay the same day everywhere.
+pub const QUICK_HOURS_CAP: usize = 6;
+
 /// Which model/platform pairing an experiment runs (§6.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Model {
+    /// Llama-3 70B analogue on 4× L40.
     Llama70B,
+    /// Llama-3 8B analogue on 2× L40.
     Llama8B,
 }
 
 impl Model {
+    /// Human-readable model name.
     pub fn name(&self) -> &'static str {
         match self {
             Model::Llama70B => "Llama-3-70B",
@@ -41,6 +51,7 @@ impl Model {
         }
     }
 
+    /// The platform's latency/utilization law.
     pub fn cost(&self) -> CostModel {
         match self {
             Model::Llama70B => CostModel::llama70b_4xl40(),
@@ -48,6 +59,7 @@ impl Model {
         }
     }
 
+    /// The platform's component power model.
     pub fn power(&self) -> PowerModel {
         match self {
             Model::Llama70B => PowerModel::default(),
@@ -55,6 +67,7 @@ impl Model {
         }
     }
 
+    /// The platform's embodied-carbon inventory.
     pub fn embodied(&self) -> EmbodiedModel {
         match self {
             Model::Llama70B => EmbodiedModel::default(),
@@ -62,6 +75,7 @@ impl Model {
         }
     }
 
+    /// KV bytes per cached token for this model.
     pub fn kv_bytes_per_token(&self) -> u64 {
         match self {
             Model::Llama70B => KV_BYTES_PER_TOKEN_70B,
@@ -77,6 +91,7 @@ impl Model {
         }
     }
 
+    /// The §6.1 SLO thresholds for this model/task pairing.
     pub fn slo(&self, task: TaskKind) -> Slo {
         match (self, task) {
             (Model::Llama70B, TaskKind::Conversation) => Slo::conv_70b(),
@@ -102,16 +117,21 @@ impl Model {
 /// The three §6.1 evaluation workloads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Task {
+    /// Multi-turn conversation (ShareGPT-like).
     Conversation,
+    /// Document comprehension, Zipf α=0.4.
     Doc04,
+    /// Document comprehension, Zipf α=0.7.
     Doc07,
 }
 
 impl Task {
+    /// All three tasks, in the paper's order.
     pub fn all() -> [Task; 3] {
         [Task::Conversation, Task::Doc04, Task::Doc07]
     }
 
+    /// Human-readable task name.
     pub fn name(&self) -> &'static str {
         match self {
             Task::Conversation => "multi-turn-conversation",
@@ -120,6 +140,7 @@ impl Task {
         }
     }
 
+    /// The request-level task family.
     pub fn kind(&self) -> TaskKind {
         match self {
             Task::Conversation => TaskKind::Conversation,
@@ -127,6 +148,7 @@ impl Task {
         }
     }
 
+    /// Instantiate the task's seeded workload generator.
     pub fn make_workload(&self, seed: u64) -> Box<dyn Workload> {
         match self {
             Task::Conversation => Box::new(ConversationGen::new(
@@ -156,14 +178,18 @@ impl Task {
 /// Evaluation baselines (§6.1 comparison points + §6.3.1 ablation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Baseline {
+    /// No context cache at all.
     NoCache,
+    /// The max cache, provisioned all day.
     FullCache,
+    /// The paper's adaptive carbon-aware sizing controller.
     GreenCache,
     /// §6.3.1: GreenCache sizing with the stock LRU policy.
     LruOptimal,
 }
 
 impl Baseline {
+    /// Human-readable baseline name.
     pub fn name(&self) -> &'static str {
         match self {
             Baseline::NoCache => "No Cache",
@@ -173,6 +199,7 @@ impl Baseline {
         }
     }
 
+    /// The eviction policy this baseline pairs with by default.
     pub fn policy(&self) -> PolicyKind {
         match self {
             Baseline::LruOptimal | Baseline::FullCache => PolicyKind::Lru,
@@ -183,21 +210,31 @@ impl Baseline {
 
 /// Scenario for one simulated day.
 pub struct DayScenario {
+    /// Model/platform pairing.
     pub model: Model,
+    /// Workload.
     pub task: Task,
+    /// Electric grid (CI trace).
     pub grid: Grid,
+    /// Cache mode / controller under evaluation.
     pub baseline: Baseline,
+    /// Evaluated horizon, hours.
     pub hours: usize,
     /// Trace history days preceding the evaluated day (predictor food).
     pub history_days: usize,
+    /// Workload/trace seed.
     pub seed: u64,
+    /// Shrunken warm-up/profile smoke mode.
     pub quick: bool,
     /// Decision interval, seconds (Fig. 18 sweeps this).
     pub interval_s: f64,
-    /// Overrides for sensitivity studies.
+    /// Embodied-model override for sensitivity studies.
     pub embodied_override: Option<EmbodiedModel>,
+    /// CI forecast source override (oracle vs predictor, §6.5).
     pub ci_source_override: Option<CiSource>,
+    /// Load forecast source override.
     pub load_source_override: Option<LoadSource>,
+    /// Multiplicative profile noise (Fig. 17's profiler-error study).
     pub profile_noise: f64,
     /// Fixed request rate instead of the Azure-like trace (§6.3/§6.6).
     pub fixed_rps: Option<f64>,
@@ -209,6 +246,7 @@ pub struct DayScenario {
 }
 
 impl DayScenario {
+    /// A 24-hour full-fidelity day with the default seed.
     pub fn new(model: Model, task: Task, grid: Grid, baseline: Baseline) -> Self {
         DayScenario {
             model,
@@ -230,18 +268,23 @@ impl DayScenario {
         }
     }
 
+    /// Quick mode: capped horizon and shrunken warm-up.
     pub fn quick(mut self) -> Self {
         self.quick = true;
-        self.hours = self.hours.min(6);
+        self.hours = self.hours.min(QUICK_HOURS_CAP);
         self
     }
 }
 
 /// Outcome of one simulated day, with the quantities Figs. 12–14 plot.
 pub struct DayResult {
+    /// The full simulation result.
     pub sim: SimResult,
+    /// Mean provisioned cache over the day, TB.
     pub mean_cache_tb: f64,
+    /// Grams CO₂e per completed request.
     pub carbon_per_request_g: f64,
+    /// The controller's resize decisions (empty for fixed baselines).
     pub decisions: Vec<crate::coordinator::Decision>,
 }
 
@@ -255,6 +298,7 @@ pub struct ProfileStore {
 }
 
 impl ProfileStore {
+    /// An empty store; `quick` shrinks the profiling grids for smoke runs.
     pub fn new(quick: bool) -> Self {
         ProfileStore {
             entries: Default::default(),
@@ -262,6 +306,7 @@ impl ProfileStore {
         }
     }
 
+    /// The profile table for a (model, task, policy), built on first use.
     pub fn get(&mut self, model: Model, task: Task, policy: PolicyKind) -> &ProfileTable {
         let quick = self.quick;
         self.entries.entry((model, task, policy)).or_insert_with(|| {
@@ -349,30 +394,25 @@ pub fn run_day(sc: &DayScenario, profiles: &mut ProfileStore) -> DayResult {
     let adaptive = matches!(sc.baseline, Baseline::GreenCache | Baseline::LruOptimal);
     let (sim, decisions) = if adaptive {
         let profile = profiles.get(model, sc.task, policy).clone();
-        let gc_cfg = GreenCacheConfig {
-            max_cache_tb: model.max_cache_tb(),
-            granularity_tb: 1,
-            horizon_hours: 24,
-            rho: 0.9,
+        let mut gc_cfg = GreenCacheConfig::paper_defaults(
+            model.max_cache_tb(),
             embodied,
-            ci_source: sc
-                .ci_source_override
-                .clone()
-                .unwrap_or(CiSource::Predictor),
-            load_source: sc
-                .load_source_override
-                .clone()
-                .unwrap_or(LoadSource::Sarima),
-            profile_noise: sc.profile_noise,
-            interval_hours: sc.interval_s / 3600.0,
-            seed: sc.seed,
-        };
-        let mut ctl =
-            GreenCacheController::new(gc_cfg, profile, ci_hist, load_hist, base_hour);
-        // Initial decision before the day starts (the paper reconfigures
-        // ahead of time to allow warm-up, §4.1).
-        let first = ctl.decide(base_hour);
-        cache.resize(first.chosen_tb as u64 * TB as u64, 0.0);
+            sc.interval_s / 3600.0,
+            sc.seed,
+        );
+        // Sensitivity-study overrides on top of the shared defaults.
+        if let Some(src) = sc.ci_source_override.clone() {
+            gc_cfg.ci_source = src;
+        }
+        if let Some(src) = sc.load_source_override.clone() {
+            gc_cfg.load_source = src;
+        }
+        gc_cfg.profile_noise = sc.profile_noise;
+        // §4.1 pre-day bootstrap (shared with the cluster layer's
+        // per-replica setup).
+        let mut ctl = GreenCacheController::bootstrapped(
+            gc_cfg, profile, ci_hist, load_hist, base_hour, &mut cache,
+        );
         let sim = simulate(
             &sim_cfg,
             wl.as_mut(),
@@ -397,15 +437,7 @@ pub fn run_day(sc: &DayScenario, profiles: &mut ProfileStore) -> DayResult {
         (sim, Vec::new())
     };
 
-    let mean_cache_tb = if sim.hours.is_empty() {
-        cache.capacity_bytes() as f64 / TB
-    } else {
-        sim.hours
-            .iter()
-            .map(|h| h.cache_bytes as f64 / TB)
-            .sum::<f64>()
-            / sim.hours.len() as f64
-    };
+    let mean_cache_tb = sim.mean_cache_tb(cache.capacity_bytes());
     let carbon_per_request_g = sim
         .accountant
         .per_request_g(sim.completed.max(1));

@@ -1,9 +1,10 @@
 //! GreenCache: carbon-aware KV-cache management for LLM serving.
 //!
 //! Reproduction of *"Cache Your Prompt When It's Green: Carbon-Aware
-//! Caching for Large Language Model Serving"* (CS.DC 2025). See
-//! README.md for the system inventory, build/feature instructions and
-//! the per-experiment index.
+//! Caching for Large Language Model Serving"* (CS.DC 2025), grown into a
+//! multi-replica, multi-grid serving fleet. See ARCHITECTURE.md for the
+//! module map and data-flow diagram, and README.md for build/feature
+//! instructions and the per-experiment index.
 //!
 //! The crate is the L3 coordinator of a three-layer stack:
 //!
@@ -18,15 +19,20 @@
 //!   ([`cache`]), accounts carbon ([`carbon`]), predicts carbon intensity
 //!   ([`ci`]) and load ([`load`]), sizes the cache with an ILP
 //!   ([`solver`]), reproduces the paper's evaluation through a
-//!   calibrated cluster simulator ([`sim`] + [`profiler`]), and fans
-//!   evaluation cells out through the parallel [`scenario`] matrix.
+//!   calibrated cluster simulator ([`sim`] + [`profiler`]), scales it to
+//!   a multi-replica fleet behind a carbon-aware router ([`cluster`]),
+//!   and fans evaluation cells out through the parallel [`scenario`]
+//!   matrix.
 //!
 //! Python never runs on the request path: the default build is
 //! self-contained, and after `make artifacts` the `pjrt` build is too.
 
+#![warn(missing_docs)]
+
 pub mod cache;
 pub mod carbon;
 pub mod ci;
+pub mod cluster;
 pub mod coordinator;
 pub mod experiments;
 pub mod load;

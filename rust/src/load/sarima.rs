@@ -152,6 +152,7 @@ impl Sarima {
         Ok(())
     }
 
+    /// The fitted AR coefficients.
     pub fn coefficients(&self) -> &[f64] {
         &self.coef
     }

@@ -60,22 +60,27 @@ impl LoadTrace {
         }
     }
 
+    /// Number of hours in the trace.
     pub fn len(&self) -> usize {
         self.hourly_rps.len()
     }
 
+    /// Whether the trace is empty.
     pub fn is_empty(&self) -> bool {
         self.hourly_rps.is_empty()
     }
 
+    /// Rate at hour `h` (wraps past the end).
     pub fn at_hour(&self, h: usize) -> f64 {
         self.hourly_rps[h % self.hourly_rps.len()]
     }
 
+    /// Peak hourly rate.
     pub fn peak(&self) -> f64 {
         self.hourly_rps.iter().cloned().fold(0.0, f64::max)
     }
 
+    /// Mean hourly rate.
     pub fn mean(&self) -> f64 {
         self.hourly_rps.iter().sum::<f64>() / self.hourly_rps.len().max(1) as f64
     }

@@ -6,6 +6,9 @@
 //! greencache serve    [--requests N] [--cache-mb M] [--policy lcs|lru|fifo|lfu]
 //! greencache simulate [--task conv|doc04|doc07] [--grid FR|FI|ES|CISO|...]
 //!                     [--baseline none|full|green|lru-optimal] [--hours H] [--quick]
+//! greencache cluster  [--grids FR,MISO,...] [--router rr|jsq|greedy|all]
+//!                     [--task conv|doc04|doc07] [--baseline none|full|green]
+//!                     [--hours H] [--rps R] [--quick]
 //! greencache matrix   [--models 70b,8b] [--tasks conv,doc04,doc07]
 //!                     [--grids FR,ES,...] [--baselines none,full,green]
 //!                     [--policies lcs,lru] [--hours H] [--threads N]
@@ -17,6 +20,7 @@
 
 use greencache::cache::PolicyKind;
 use greencache::ci::Grid;
+use greencache::cluster::{run_cluster, ClusterSpec, RouterPolicy};
 use greencache::coordinator::server::{Server, ServerConfig};
 use greencache::experiments::{Baseline, Model, ProfileStore, Task};
 use greencache::rng::Rng;
@@ -251,6 +255,85 @@ fn cmd_simulate(args: &Args) -> greencache::Result<()> {
     Ok(())
 }
 
+/// Multi-replica fleet comparison: run the same fleet/day under one or
+/// all router policies and print fleet + per-replica breakdowns.
+fn cmd_cluster(args: &Args) -> greencache::Result<()> {
+    let grids = parse_list(args, "grids", "FR,MISO", parse_grid);
+    let task = parse_task(args.get("task").unwrap_or("conv"));
+    let baseline = parse_baseline(args.get("baseline").unwrap_or("green"));
+    let quick = args.bool("quick");
+    let routers: Vec<RouterPolicy> = match args.get("router").unwrap_or("all") {
+        "rr" | "round-robin" => vec![RouterPolicy::RoundRobin],
+        "jsq" | "least-loaded" => vec![RouterPolicy::LeastLoaded],
+        "greedy" | "carbon-greedy" => vec![RouterPolicy::CarbonGreedy],
+        "all" => RouterPolicy::all().to_vec(),
+        other => {
+            eprintln!("unknown router {other}, comparing all");
+            RouterPolicy::all().to_vec()
+        }
+    };
+
+    let fixed_rps: Option<f64> = match args.get("rps") {
+        None => None,
+        Some(raw) => match raw.parse() {
+            Ok(r) => Some(r),
+            Err(_) => {
+                eprintln!("unparseable --rps {raw}, replaying the Azure-like trace instead");
+                None
+            }
+        },
+    };
+
+    let mut profiles = ProfileStore::new(quick);
+    let mut summary: Vec<(RouterPolicy, f64, f64)> = Vec::new();
+    for router in &routers {
+        let mut spec = ClusterSpec::homogeneous(Model::Llama70B, task, &grids, *router);
+        spec.baseline = baseline;
+        spec.hours = args.usize("hours", 24);
+        if quick {
+            spec = spec.quick();
+        }
+        spec.fixed_rps = fixed_rps;
+        println!(
+            "fleet {} x{} | {} | {} | router {} ({}h)...",
+            spec.fleet_label(),
+            spec.replicas.len(),
+            task.name(),
+            baseline.name(),
+            router.name(),
+            spec.hours
+        );
+        let result = run_cluster(&spec, &mut profiles);
+        print!("{}", result.table());
+        println!(
+            "fleet: {:.3} g/req | SLO {:.1}% | hit {:.3} | TTFT {:.2}s\n",
+            result.carbon_per_request_g,
+            result.slo_attainment * 100.0,
+            result.token_hit_rate,
+            result.mean_ttft_s
+        );
+        summary.push((*router, result.total_carbon_g, result.slo_attainment));
+    }
+    if summary.len() > 1 {
+        println!("router comparison (same fleet, same day):");
+        let base = summary
+            .iter()
+            .find(|(r, _, _)| *r == RouterPolicy::RoundRobin)
+            .map(|&(_, c, _)| c)
+            .unwrap_or(summary[0].1);
+        for (router, carbon, slo) in &summary {
+            println!(
+                "  {:<13}: {:>9.1} g total ({:>+5.1}% vs round-robin), SLO {:>5.1}%",
+                router.name(),
+                carbon,
+                100.0 * (carbon - base) / base.max(1e-12),
+                slo * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Parse a comma-separated axis list with a per-item parser.
 fn parse_list<T>(args: &Args, key: &str, default: &str, parse: impl Fn(&str) -> T) -> Vec<T> {
     args.get(key)
@@ -378,12 +461,15 @@ fn main() {
     let result = match cmd {
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
+        "cluster" => cmd_cluster(&args),
         "matrix" => cmd_matrix(&args),
         "profile" => cmd_profile(&args),
         "decide" => cmd_decide(&args),
         "info" => cmd_info(),
         _ => {
-            println!("usage: greencache <serve|simulate|matrix|profile|decide|info> [--flags]");
+            println!(
+                "usage: greencache <serve|simulate|cluster|matrix|profile|decide|info> [--flags]"
+            );
             println!("see rust/src/main.rs docs for flags");
             Ok(())
         }

@@ -43,19 +43,30 @@ pub struct LatencyStats {
 }
 
 impl LatencyStats {
+    /// An empty reservoir.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one sample.
     pub fn record(&mut self, v: f64) {
         self.samples.push(v);
         self.sorted = false;
     }
 
+    /// Absorb every sample of `other` (fleet-level aggregation: merged
+    /// percentiles are exact because samples are stored, not sketched).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
+    /// Number of recorded samples.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// Whether no samples were recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
@@ -77,18 +88,22 @@ impl LatencyStats {
         self.samples[rank.min(n) - 1]
     }
 
+    /// Median.
     pub fn p50(&mut self) -> f64 {
         self.percentile(50.0)
     }
 
+    /// 90th percentile (the paper's headline latency statistic).
     pub fn p90(&mut self) -> f64 {
         self.percentile(90.0)
     }
 
+    /// 99th percentile.
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             0.0
@@ -97,6 +112,7 @@ impl LatencyStats {
         }
     }
 
+    /// Largest sample.
     pub fn max(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
@@ -114,8 +130,11 @@ impl LatencyStats {
 /// Joint TTFT+TPOT SLO attainment over a run (Eq. 6's z variables).
 #[derive(Debug, Clone)]
 pub struct SloTracker {
+    /// The thresholds in force.
     pub slo: Slo,
+    /// TTFT samples.
     pub ttft: LatencyStats,
+    /// TPOT samples.
     pub tpot: LatencyStats,
     /// Requests meeting BOTH thresholds (z_TTFT ∧ z_TPOT).
     both_ok: usize,
@@ -123,6 +142,7 @@ pub struct SloTracker {
 }
 
 impl SloTracker {
+    /// An empty tracker under `slo`.
     pub fn new(slo: Slo) -> Self {
         SloTracker {
             slo,
@@ -133,6 +153,7 @@ impl SloTracker {
         }
     }
 
+    /// Record one completed request's latencies.
     pub fn record(&mut self, ttft_s: f64, tpot_s: f64) {
         self.ttft.record(ttft_s);
         self.tpot.record(tpot_s);
@@ -142,6 +163,19 @@ impl SloTracker {
         }
     }
 
+    /// Absorb another tracker (fleet-level SLO attainment across
+    /// replicas). Each request keeps the verdict of the replica that
+    /// served it — replicas may run different thresholds in a
+    /// heterogeneous fleet — so the merged attainment is the
+    /// request-weighted mean of the parts.
+    pub fn merge(&mut self, other: &SloTracker) {
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.both_ok += other.both_ok;
+        self.total += other.total;
+    }
+
+    /// Requests recorded.
     pub fn total(&self) -> usize {
         self.total
     }
@@ -211,6 +245,46 @@ mod tests {
         assert_eq!(t.attainment(), 0.5);
         assert!(!t.meets_slo());
         assert_eq!(t.total(), 4);
+    }
+
+    #[test]
+    fn merge_is_request_weighted() {
+        let slo = Slo { ttft_s: 2.0, tpot_s: 0.2, rho: 0.9 };
+        let mut a = SloTracker::new(slo);
+        a.record(1.0, 0.1); // ok
+        a.record(3.0, 0.1); // violation
+        let mut b = SloTracker::new(slo);
+        b.record(1.0, 0.1); // ok
+        b.record(1.0, 0.1); // ok
+        b.record(1.0, 0.1); // ok
+        b.record(1.0, 0.3); // violation
+        let (at_a, at_b) = (a.attainment(), b.attainment());
+        a.merge(&b);
+        assert_eq!(a.total(), 6);
+        let want = (at_a * 2.0 + at_b * 4.0) / 6.0;
+        assert!((a.attainment() - want).abs() < 1e-12);
+        // Merged percentiles see all samples.
+        assert_eq!(a.ttft.len(), 6);
+        assert_eq!(a.ttft.max(), 3.0);
+    }
+
+    #[test]
+    fn latency_merge_matches_flat_recording() {
+        let mut flat = LatencyStats::new();
+        let mut x = LatencyStats::new();
+        let mut y = LatencyStats::new();
+        for v in [5.0, 1.0, 3.0] {
+            flat.record(v);
+            x.record(v);
+        }
+        for v in [2.0, 4.0] {
+            flat.record(v);
+            y.record(v);
+        }
+        x.merge(&y);
+        assert_eq!(x.len(), flat.len());
+        assert_eq!(x.p50(), flat.p50());
+        assert_eq!(x.mean(), flat.mean());
     }
 
     #[test]

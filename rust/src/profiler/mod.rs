@@ -17,31 +17,43 @@ use crate::workload::TaskKind;
 /// One profiled (rate, size) cell.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ProfileCell {
+    /// Profiled request rate, rps.
     pub rate_rps: f64,
+    /// Profiled cache size, TB.
     pub cache_tb: u32,
+    /// Mean TTFT, seconds.
     pub mean_ttft_s: f64,
+    /// Mean TPOT, seconds.
     pub mean_tpot_s: f64,
+    /// P90 TTFT, seconds.
     pub p90_ttft_s: f64,
+    /// P90 TPOT, seconds.
     pub p90_tpot_s: f64,
-    /// Fraction of requests meeting the TTFT / TPOT thresholds.
+    /// Fraction of requests meeting the TTFT threshold.
     pub ttft_attain: f64,
+    /// Fraction of requests meeting the TPOT threshold.
     pub tpot_attain: f64,
     /// Mean platform power, watts.
     pub mean_power_w: f64,
+    /// Token-level cache hit rate in the profiled window.
     pub token_hit_rate: f64,
 }
 
 /// The (rate × size) profile grid for one task/model pairing.
 #[derive(Debug, Clone)]
 pub struct ProfileTable {
+    /// Profiled task family.
     pub task: TaskKind,
+    /// The swept request rates, rps.
     pub rates: Vec<f64>,
+    /// The swept cache sizes, TB.
     pub sizes_tb: Vec<u32>,
     /// Row-major `cells[rate_idx][size_idx]`.
     pub cells: Vec<Vec<ProfileCell>>,
 }
 
 impl ProfileTable {
+    /// The cell at `(rate_idx, size_idx)`.
     pub fn cell(&self, rate_idx: usize, size_idx: usize) -> &ProfileCell {
         &self.cells[rate_idx][size_idx]
     }
@@ -109,10 +121,15 @@ impl ProfileTable {
 
 /// Profiler configuration.
 pub struct ProfilerConfig {
+    /// Platform latency/utilization law.
     pub cost: CostModel,
+    /// Platform power model.
     pub power: PowerModel,
+    /// SLO thresholds the attainment columns are measured against.
     pub slo: Slo,
+    /// KV bytes per cached token.
     pub kv_bytes_per_token: u64,
+    /// Eviction policy the cache runs while profiling.
     pub policy: PolicyKind,
     /// Cache sizes to sweep, TB.
     pub sizes_tb: Vec<u32>,
@@ -122,6 +139,7 @@ pub struct ProfilerConfig {
     pub warm_prompts: usize,
     /// Measurement window per cell, simulated hours (≥ 1).
     pub window_hours: usize,
+    /// Base seed; each cell derives its own.
     pub seed: u64,
 }
 

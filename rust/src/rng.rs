@@ -16,6 +16,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded generator.
     pub fn new(seed: u64) -> Self {
         Rng { state: seed }
     }
@@ -25,6 +26,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -137,6 +139,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Build the CDF over `n` ranks with exponent `alpha`.
     pub fn new(n: usize, alpha: f64) -> Self {
         assert!(n > 0);
         let mut cdf = Vec::with_capacity(n);
@@ -152,15 +155,18 @@ impl Zipf {
         Zipf { cdf }
     }
 
+    /// Draw a rank by inverse-CDF lookup.
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
         self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
     }
 
+    /// Number of ranks.
     pub fn len(&self) -> usize {
         self.cdf.len()
     }
 
+    /// Whether the sampler is empty.
     pub fn is_empty(&self) -> bool {
         self.cdf.is_empty()
     }

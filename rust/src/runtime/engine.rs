@@ -48,6 +48,7 @@ impl Engine {
             .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))
     }
 
+    /// The model shape in force.
     pub fn config(&self) -> &ModelConfig {
         &self.cfg
     }

@@ -32,6 +32,7 @@ impl KvState {
         }
     }
 
+    /// Snapshot an XLA literal into host bytes (PJRT path).
     #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &Literal, len: usize, shape: &[usize]) -> crate::Result<Self> {
         let v: Vec<f32> = lit.to_vec()?;
@@ -52,6 +53,7 @@ impl KvState {
         Ok(KvState { bytes, len, shape: shape.to_vec() })
     }
 
+    /// Rebuild the XLA literal from the stored bytes (PJRT path).
     #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> crate::Result<Literal> {
         Ok(Literal::create_from_shape_and_untyped_data(

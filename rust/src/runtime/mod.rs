@@ -38,22 +38,28 @@ use std::time::Duration;
 /// Timing + output of a prefill pass.
 #[derive(Debug, Clone)]
 pub struct PrefillResult {
+    /// Last-position logits after the prefill.
     pub logits: Vec<f32>,
     /// Number of `prefill_chunk` executions (cache hits reduce this).
     pub chunks_executed: usize,
+    /// Wall-clock of the pass.
     pub wall: Duration,
 }
 
 /// Timing + output of a full generate call.
 #[derive(Debug, Clone)]
 pub struct GenerationResult {
+    /// Generated token ids.
     pub tokens: Vec<i32>,
     /// Time To First Token: prefill + first sample.
     pub ttft: Duration,
     /// Mean Time Per Output Token over the decode phase.
     pub tpot: Duration,
+    /// Prefill chunks actually executed.
     pub chunks_executed: usize,
+    /// Prefill chunks skipped thanks to a cached KV prefix.
     pub chunks_skipped: usize,
+    /// Decode steps taken.
     pub decode_steps: usize,
 }
 
@@ -72,20 +78,32 @@ pub fn argmax(logits: &[f32]) -> i32 {
 /// `python/compile/aot.py` from the same dataclass that shaped the HLO).
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Residual width.
     pub d_model: usize,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub d_head: usize,
+    /// Feed-forward width.
     pub d_ffn: usize,
+    /// Context window, tokens.
     pub max_seq: usize,
+    /// Prefill chunk size, tokens.
     pub chunk: usize,
+    /// KV buffer shape `[layers, 2, max_seq, heads, d_head]`.
     pub kv_shape: Vec<usize>,
+    /// Total KV buffer bytes (f32).
     pub kv_bytes: usize,
+    /// Whether the HLO was lowered through the Pallas kernel (L1).
     pub lowered_with_pallas_kernel: bool,
 }
 
 impl ModelConfig {
+    /// Load and validate `artifacts/model_config.json`.
     pub fn load(artifact_dir: &Path) -> crate::Result<Self> {
         let path = artifact_dir.join("model_config.json");
         let text = std::fs::read_to_string(&path)
@@ -127,6 +145,7 @@ impl ModelConfig {
         }
     }
 
+    /// Parse from the artifact JSON shape.
     pub fn from_json(v: &Json) -> crate::Result<Self> {
         Ok(ModelConfig {
             vocab: v.usize_field("vocab")?,
@@ -146,6 +165,7 @@ impl ModelConfig {
         })
     }
 
+    /// Check internal shape consistency.
     pub fn validate(&self) -> crate::Result<()> {
         anyhow::ensure!(self.max_seq % self.chunk == 0, "max_seq % chunk != 0");
         anyhow::ensure!(
@@ -159,6 +179,7 @@ impl ModelConfig {
         Ok(())
     }
 
+    /// Prefill chunks per full window.
     pub fn n_chunks(&self) -> usize {
         self.max_seq / self.chunk
     }
@@ -173,13 +194,18 @@ impl ModelConfig {
 /// tests to close the loop kernel → HLO → PJRT → tokens.
 #[derive(Debug, Clone)]
 pub struct Golden {
+    /// The golden prompt token ids.
     pub prompt: Vec<i32>,
+    /// Tokens to generate.
     pub n_new: usize,
+    /// Expected output tokens.
     pub tokens: Vec<i32>,
+    /// Prefix length the cache-hit replay resumes from.
     pub prefix_len_for_hit: usize,
 }
 
 impl Golden {
+    /// Load `artifacts/golden.json`.
     pub fn load(artifact_dir: &Path) -> crate::Result<Self> {
         let text = std::fs::read_to_string(artifact_dir.join("golden.json"))?;
         let v = Json::parse(&text)?;

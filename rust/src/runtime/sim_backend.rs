@@ -96,6 +96,7 @@ impl SimBackend {
         })
     }
 
+    /// The model shape in force.
     pub fn config(&self) -> &ModelConfig {
         &self.cfg
     }

@@ -1,28 +1,65 @@
 //! Cartesian matrix expander: axis values → a deterministic cell list.
 
-use super::{workload_seed, ScenarioSpec};
+use super::{workload_seed, ClusterVariant, ScenarioSpec};
 use crate::cache::PolicyKind;
 use crate::ci::Grid;
 use crate::experiments::{Baseline, Model, Task};
 
 /// A declarative scenario matrix. Every axis is a list of values; the
 /// expansion is their cartesian product in a fixed order (model-major,
-/// then task, grid, baseline, policy), so cell order — and therefore the
-/// golden table — is stable.
+/// then task, grid, baseline, policy, cluster), so cell order — and
+/// therefore the golden table — is stable.
+///
+/// # Example
+///
+/// Expansion is pure and deterministic; competing baselines share a
+/// workload seed so they replay the identical day:
+///
+/// ```
+/// use greencache::ci::Grid;
+/// use greencache::experiments::{Baseline, Model, Task};
+/// use greencache::scenario::Matrix;
+///
+/// let cells = Matrix::new()
+///     .models(&[Model::Llama70B])
+///     .tasks(&[Task::Conversation])
+///     .grids(&[Grid::Fr, Grid::Es])
+///     .baselines(&[Baseline::FullCache, Baseline::GreenCache])
+///     .expand();
+/// assert_eq!(cells.len(), 4);
+/// // Same (model, task, grid) → same seed across baselines...
+/// assert_eq!(cells[0].seed, cells[1].seed);
+/// // ...but different grids replay different days.
+/// assert_ne!(cells[0].seed, cells[2].seed);
+/// ```
 #[derive(Debug, Clone)]
 pub struct Matrix {
+    /// Model axis.
     pub models: Vec<Model>,
+    /// Task axis.
     pub tasks: Vec<Task>,
+    /// Grid axis.
     pub grids: Vec<Grid>,
+    /// Baseline axis.
     pub baselines: Vec<Baseline>,
     /// Policy axis; `None` entries keep each baseline's default pairing.
     pub policies: Vec<Option<PolicyKind>>,
+    /// Cluster axis: `None` entries are single-node cells, `Some` entries
+    /// lift the cell to a fleet of that shape — sweeping replica counts
+    /// and router policies is just more entries here.
+    pub clusters: Vec<Option<ClusterVariant>>,
+    /// Evaluated horizon per cell, hours.
     pub hours: usize,
+    /// Shrunken warm-up/profile smoke mode.
     pub quick: bool,
     /// Base seed combined per-cell via [`workload_seed`].
     pub base_seed: u64,
+    /// Decision interval per cell, seconds.
     pub interval_s: f64,
+    /// Fixed request rate instead of the Azure-like trace.
     pub fixed_rps: Option<f64>,
+    /// Fixed CI instead of the grid trace (fleet cells apply it to every
+    /// replica, flattening the carbon-greedy router's CI signal).
     pub fixed_ci: Option<f64>,
 }
 
@@ -35,6 +72,7 @@ impl Matrix {
             grids: Vec::new(),
             baselines: Vec::new(),
             policies: vec![None],
+            clusters: vec![None],
             hours: 24,
             quick: false,
             base_seed: 20_25,
@@ -44,56 +82,73 @@ impl Matrix {
         }
     }
 
+    /// Set the model axis.
     pub fn models(mut self, v: &[Model]) -> Self {
         self.models = v.to_vec();
         self
     }
 
+    /// Set the task axis.
     pub fn tasks(mut self, v: &[Task]) -> Self {
         self.tasks = v.to_vec();
         self
     }
 
+    /// Set the grid axis.
     pub fn grids(mut self, v: &[Grid]) -> Self {
         self.grids = v.to_vec();
         self
     }
 
+    /// Set the baseline axis.
     pub fn baselines(mut self, v: &[Baseline]) -> Self {
         self.baselines = v.to_vec();
         self
     }
 
+    /// Set the policy axis.
     pub fn policies(mut self, v: &[Option<PolicyKind>]) -> Self {
         self.policies = v.to_vec();
         self
     }
 
+    /// Set the cluster axis (`None` = single node; `Some` = that fleet).
+    pub fn clusters(mut self, v: &[Option<ClusterVariant>]) -> Self {
+        self.clusters = v.to_vec();
+        self
+    }
+
+    /// Set the per-cell horizon, hours.
     pub fn hours(mut self, h: usize) -> Self {
         self.hours = h;
         self
     }
 
+    /// Toggle quick (smoke) mode.
     pub fn quick(mut self, q: bool) -> Self {
         self.quick = q;
         self
     }
 
+    /// Set the base workload seed.
     pub fn seed(mut self, s: u64) -> Self {
         self.base_seed = s;
         self
     }
 
+    /// Fix the request rate instead of replaying the Azure-like trace.
     pub fn fixed_rps(mut self, r: Option<f64>) -> Self {
         self.fixed_rps = r;
         self
     }
 
+    /// Fix the CI instead of replaying the grid trace.
     pub fn fixed_ci(mut self, c: Option<f64>) -> Self {
         self.fixed_ci = c;
         self
     }
 
+    /// Set the decision interval, seconds.
     pub fn interval_s(mut self, s: f64) -> Self {
         self.interval_s = s;
         self
@@ -106,8 +161,10 @@ impl Matrix {
             * self.grids.len()
             * self.baselines.len()
             * self.policies.len()
+            * self.clusters.len()
     }
 
+    /// Whether the expansion would be empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -121,17 +178,21 @@ impl Matrix {
                     let seed = workload_seed(self.base_seed, model, task, grid);
                     for &baseline in &self.baselines {
                         for &policy in &self.policies {
-                            let mut spec = ScenarioSpec::new(model, task, grid, baseline);
-                            spec.policy = policy;
-                            spec.hours = self.hours;
-                            spec.seed = seed;
-                            spec.interval_s = self.interval_s;
-                            spec.fixed_rps = self.fixed_rps;
-                            spec.fixed_ci = self.fixed_ci;
-                            if self.quick {
-                                spec = spec.quick();
+                            for cluster in &self.clusters {
+                                let mut spec =
+                                    ScenarioSpec::new(model, task, grid, baseline);
+                                spec.policy = policy;
+                                spec.hours = self.hours;
+                                spec.seed = seed;
+                                spec.interval_s = self.interval_s;
+                                spec.fixed_rps = self.fixed_rps;
+                                spec.fixed_ci = self.fixed_ci;
+                                spec.cluster = cluster.clone();
+                                if self.quick {
+                                    spec = spec.quick();
+                                }
+                                cells.push(spec);
                             }
-                            cells.push(spec);
                         }
                     }
                 }
@@ -202,5 +263,31 @@ mod tests {
             .filter(|c| c.policy == Some(PolicyKind::Lru))
             .count();
         assert_eq!(with_policy, 8);
+    }
+
+    #[test]
+    fn cluster_axis_sweeps_fleets_and_routers() {
+        use crate::cluster::RouterPolicy;
+        let fleets: Vec<Option<ClusterVariant>> = std::iter::once(None)
+            .chain(RouterPolicy::all().iter().map(|&r| {
+                Some(ClusterVariant::new(&[Grid::Fr, Grid::Miso], r))
+            }))
+            .collect();
+        let m = small().clusters(&fleets);
+        assert_eq!(m.len(), 8 * 4);
+        let cells = m.expand();
+        assert_eq!(cells.len(), 32);
+        // Router sweeps share the workload seed within a (model, task,
+        // grid) group, so fleet comparisons replay the same day.
+        let fleet_cells: Vec<_> = cells
+            .iter()
+            .filter(|c| c.cluster.is_some() && c.grid == Grid::Fr)
+            .collect();
+        assert!(fleet_cells.len() >= 3);
+        assert!(fleet_cells
+            .windows(2)
+            .all(|w| w[0].task != w[1].task || w[0].seed == w[1].seed));
+        // Single-node cells survive untouched.
+        assert_eq!(cells.iter().filter(|c| c.cluster.is_none()).count(), 8);
     }
 }

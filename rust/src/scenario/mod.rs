@@ -28,14 +28,52 @@ pub use runner::{run_specs, CellResult, MatrixResult, MatrixRunner};
 
 use crate::cache::PolicyKind;
 use crate::ci::Grid;
+use crate::cluster::{ClusterSpec, ReplicaSpec, RouterPolicy};
 use crate::experiments::{Baseline, DayScenario, Model, Task};
+
+/// The cluster shape of a fleet cell: one replica per grid, plus the
+/// routing policy. Rides on a [`ScenarioSpec`] (which supplies the
+/// model, task, baseline, policy, horizon and seed for every replica) so
+/// the matrix can sweep replica counts and router policies exactly like
+/// any other axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterVariant {
+    /// One replica per entry (the replica's grid); length = fleet size.
+    pub grids: Vec<Grid>,
+    /// Request placement policy.
+    pub router: RouterPolicy,
+}
+
+impl ClusterVariant {
+    /// A fleet of one replica per grid under `router`.
+    pub fn new(grids: &[Grid], router: RouterPolicy) -> Self {
+        ClusterVariant {
+            grids: grids.to_vec(),
+            router,
+        }
+    }
+
+    /// Stable label suffix, e.g. `fleet[FR+MISO]/carbon-greedy`.
+    pub fn label(&self) -> String {
+        format!(
+            "fleet[{}]/{}",
+            crate::cluster::grid_join(&self.grids),
+            self.router.name()
+        )
+    }
+}
 
 /// One fully-specified cell of the evaluation matrix.
 #[derive(Debug, Clone)]
 pub struct ScenarioSpec {
+    /// Model/platform pairing of the cell (every replica, for fleets).
     pub model: Model,
+    /// Workload of the cell.
     pub task: Task,
+    /// Electric grid (single-node cells; fleet cells carry their grids in
+    /// [`ScenarioSpec::cluster`] and use this axis only for seeding).
     pub grid: Grid,
+    /// Comparison baseline (cache mode / controller).
     pub baseline: Baseline,
     /// Eviction-policy override; `None` keeps the baseline's default
     /// pairing (LCS for GreenCache/NoCache, LRU for Full/LRU+Optimal).
@@ -53,6 +91,9 @@ pub struct ScenarioSpec {
     pub fixed_rps: Option<f64>,
     /// Fixed CI instead of the grid trace.
     pub fixed_ci: Option<f64>,
+    /// `Some` lifts the cell from one node to a multi-replica fleet (the
+    /// runner dispatches to [`crate::cluster::run_cluster`]).
+    pub cluster: Option<ClusterVariant>,
 }
 
 impl ScenarioSpec {
@@ -70,6 +111,7 @@ impl ScenarioSpec {
             interval_s: 3600.0,
             fixed_rps: None,
             fixed_ci: None,
+            cluster: None,
         }
     }
 
@@ -77,7 +119,7 @@ impl ScenarioSpec {
     /// `DayScenario::quick`).
     pub fn quick(mut self) -> Self {
         self.quick = true;
-        self.hours = self.hours.min(6);
+        self.hours = self.hours.min(crate::experiments::QUICK_HOURS_CAP);
         self
     }
 
@@ -89,6 +131,30 @@ impl ScenarioSpec {
     /// Whether this cell runs the adaptive (profile-consuming) controller.
     pub fn is_adaptive(&self) -> bool {
         matches!(self.baseline, Baseline::GreenCache | Baseline::LruOptimal)
+    }
+
+    /// Lower a fleet cell to the `cluster` layer's spec. `None` for
+    /// single-node cells.
+    pub fn to_cluster_spec(&self) -> Option<ClusterSpec> {
+        let cv = self.cluster.as_ref()?;
+        Some(ClusterSpec {
+            replicas: cv
+                .grids
+                .iter()
+                .map(|&g| ReplicaSpec::new(self.model, g))
+                .collect(),
+            task: self.task,
+            baseline: self.baseline,
+            policy: self.policy,
+            router: cv.router,
+            hours: self.hours,
+            history_days: 3,
+            seed: self.seed,
+            interval_s: self.interval_s,
+            quick: self.quick,
+            fixed_rps: self.fixed_rps,
+            fixed_ci: self.fixed_ci,
+        })
     }
 
     /// Lower to the `experiments` layer's scenario.
@@ -105,7 +171,8 @@ impl ScenarioSpec {
     }
 
     /// Compact human/golden-stable label, e.g.
-    /// `Llama-3-70B/multi-turn-conversation/ES/GreenCache`.
+    /// `Llama-3-70B/multi-turn-conversation/ES/GreenCache` — fleet cells
+    /// append `/fleet[FR+MISO]/carbon-greedy`.
     pub fn label(&self) -> String {
         let mut s = format!(
             "{}/{}/{}/{}",
@@ -117,6 +184,10 @@ impl ScenarioSpec {
         if let Some(p) = self.policy {
             s.push('/');
             s.push_str(p.name());
+        }
+        if let Some(cv) = &self.cluster {
+            s.push('/');
+            s.push_str(&cv.label());
         }
         s
     }
@@ -183,6 +254,32 @@ mod tests {
             ScenarioSpec::new(Model::Llama70B, Task::Conversation, Grid::Es, Baseline::GreenCache);
         assert_eq!(green.effective_policy(), PolicyKind::Lcs);
         assert!(green.is_adaptive());
+    }
+
+    #[test]
+    fn cluster_variant_lowers_and_labels() {
+        use crate::cluster::RouterPolicy;
+        let mut spec = ScenarioSpec::new(
+            Model::Llama70B,
+            Task::Conversation,
+            Grid::Es,
+            Baseline::GreenCache,
+        );
+        assert!(spec.to_cluster_spec().is_none());
+        spec.cluster = Some(ClusterVariant::new(
+            &[Grid::Fr, Grid::Miso],
+            RouterPolicy::CarbonGreedy,
+        ));
+        let cs = spec.to_cluster_spec().expect("fleet cell lowers");
+        assert_eq!(cs.replicas.len(), 2);
+        assert_eq!(cs.replicas[0].grid, Grid::Fr);
+        assert_eq!(cs.replicas[1].grid, Grid::Miso);
+        assert_eq!(cs.replicas[0].max_cache_tb, 16);
+        assert_eq!(cs.seed, spec.seed);
+        assert_eq!(
+            spec.label(),
+            "Llama-3-70B/multi-turn-conversation/ES/GreenCache/fleet[FR+MISO]/carbon-greedy"
+        );
     }
 
     #[test]

@@ -17,28 +17,43 @@ use crate::experiments::{run_day, Baseline, Model, ProfileStore, Task};
 use crate::ci::Grid;
 use crate::sim::HourSample;
 
-/// Summary of one executed cell.
+/// Summary of one executed cell (single-node or fleet).
 #[derive(Debug, Clone)]
 pub struct CellResult {
+    /// The cell as specified.
     pub spec: ScenarioSpec,
+    /// Completed requests (fleet-wide for cluster cells).
     pub completed: usize,
+    /// Grams CO₂e per completed request.
     pub carbon_per_request_g: f64,
+    /// Mean provisioned cache, TB (fleet total for cluster cells).
     pub mean_cache_tb: f64,
+    /// Joint TTFT+TPOT SLO attainment.
     pub slo_attainment: f64,
+    /// Token-level cache hit rate (§6.3.2).
     pub token_hit_rate: f64,
+    /// Mean TTFT, seconds.
     pub mean_ttft_s: f64,
+    /// Mean TPOT, seconds.
     pub mean_tpot_s: f64,
+    /// Controller resize decisions taken (0 for fleet cells, whose
+    /// controllers run per replica).
     pub n_decisions: usize,
+    /// Mean controller solve time, seconds.
     pub mean_solve_time_s: f64,
-    /// Hourly timeline (drives the Fig. 13/14 refactors).
+    /// Hourly timeline (drives the Fig. 13/14 refactors; fleet cells
+    /// carry the aggregated fleet timeline).
     pub hours: Vec<HourSample>,
 }
 
 /// All cells of a matrix run, in expansion order.
 #[derive(Debug)]
 pub struct MatrixResult {
+    /// Per-cell results, in expansion order.
     pub cells: Vec<CellResult>,
+    /// Wall-clock of the whole run, seconds.
     pub wall_s: f64,
+    /// Worker threads used.
     pub threads: usize,
 }
 
@@ -60,18 +75,20 @@ impl MatrixResult {
     }
 
     /// Deterministic fixed-width table of the headline quantities — the
-    /// golden-snapshot format (`rust/tests/golden/matrix_quick.txt`).
-    /// Excludes wall-clock and thread count on purpose: the table must be
-    /// byte-identical across runs and machines.
+    /// golden-snapshot format (`rust/tests/golden/matrix_quick.txt` and
+    /// `cluster_quick.txt`). Excludes wall-clock and thread count on
+    /// purpose: the table must be byte-identical across runs and
+    /// machines. The cell column is sized for the longest fleet label
+    /// (`model/task/grid/baseline/fleet[...]/router`).
     pub fn table(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<64} {:>10} {:>9} {:>7} {:>7} {:>8} {:>9}\n",
+            "{:<88} {:>10} {:>9} {:>7} {:>7} {:>8} {:>9}\n",
             "cell", "g/req", "cacheTB", "slo%", "hit", "ttft_s", "completed"
         ));
         for c in &self.cells {
             out.push_str(&format!(
-                "{:<64} {:>10.4} {:>9.2} {:>7.1} {:>7.3} {:>8.3} {:>9}\n",
+                "{:<88} {:>10.4} {:>9.2} {:>7.1} {:>7.3} {:>8.3} {:>9}\n",
                 c.spec.label(),
                 c.carbon_per_request_g,
                 c.mean_cache_tb,
@@ -183,7 +200,25 @@ impl MatrixRunner {
 }
 
 /// Execute one cell against a (possibly shared-prewarmed) profile store.
+/// Fleet cells dispatch to the cluster layer; single-node cells to
+/// `run_day`.
 fn run_cell(spec: &ScenarioSpec, profiles: &mut ProfileStore) -> CellResult {
+    if let Some(cluster_spec) = spec.to_cluster_spec() {
+        let fleet = crate::cluster::run_cluster(&cluster_spec, profiles);
+        return CellResult {
+            spec: spec.clone(),
+            completed: fleet.completed,
+            carbon_per_request_g: fleet.carbon_per_request_g,
+            mean_cache_tb: fleet.fleet_mean_cache_tb,
+            slo_attainment: fleet.slo_attainment,
+            token_hit_rate: fleet.token_hit_rate,
+            mean_ttft_s: fleet.mean_ttft_s,
+            mean_tpot_s: fleet.mean_tpot_s,
+            n_decisions: 0,
+            mean_solve_time_s: 0.0,
+            hours: fleet.hours,
+        };
+    }
     let day = run_day(&spec.to_day_scenario(), profiles);
     let mean_solve_time_s = if day.decisions.is_empty() {
         0.0
@@ -258,6 +293,47 @@ mod tests {
         assert!(r
             .find(Model::Llama8B, Task::Conversation, Grid::Es, Baseline::FullCache)
             .is_none());
+    }
+
+    #[test]
+    fn cluster_cells_run_in_matrix_and_are_thread_invariant() {
+        use crate::cluster::RouterPolicy;
+        use crate::scenario::ClusterVariant;
+        // One single-node cell + a 2-replica fleet under two routers,
+        // executed through the standard runner.
+        let mut m = Matrix::new()
+            .models(&[Model::Llama70B])
+            .tasks(&[Task::Conversation])
+            .grids(&[Grid::Es])
+            .baselines(&[Baseline::FullCache])
+            .clusters(&[
+                None,
+                Some(ClusterVariant::new(
+                    &[Grid::Fr, Grid::Miso],
+                    RouterPolicy::RoundRobin,
+                )),
+                Some(ClusterVariant::new(
+                    &[Grid::Fr, Grid::Miso],
+                    RouterPolicy::CarbonGreedy,
+                )),
+            ]);
+        m.hours = 2;
+        m.fixed_rps = Some(0.3);
+        let specs = m.expand();
+        assert_eq!(specs.len(), 3);
+        let serial = run_specs(&specs, 1);
+        let parallel = run_specs(&specs, 3);
+        assert_eq!(
+            serial.table(),
+            parallel.table(),
+            "fleet cells must not depend on thread count"
+        );
+        for c in &serial.cells {
+            assert!(c.completed > 0, "{} completed nothing", c.spec.label());
+            assert!(c.carbon_per_request_g > 0.0);
+        }
+        // The fleet cells carry an aggregated timeline.
+        assert!(!serial.cells[1].hours.is_empty());
     }
 
     #[test]

@@ -31,13 +31,15 @@ pub struct CostModel {
     pub iter_overhead_s: f64,
     /// Prefill compute per prompt token, seconds.
     pub prefill_s_per_token: f64,
-    /// Decode cost: `decode_base_s + decode_s_per_seq × batch` per
+    /// Decode cost base: `decode_base_s + decode_s_per_seq × batch` per
     /// iteration that carries a decode batch.
     pub decode_base_s: f64,
+    /// Decode cost slope per running sequence.
     pub decode_s_per_seq: f64,
     /// SSD→HBM KV load cost per cached token, seconds (charged once per
     /// request at prefill start on a hit).
     pub kv_load_s_per_token: f64,
+    /// Fixed per-request KV load overhead, seconds.
     pub kv_load_overhead_s: f64,
     /// Max prompt tokens prefetched per iteration (chunked prefill).
     pub prefill_budget: u32,

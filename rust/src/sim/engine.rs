@@ -8,13 +8,26 @@
 //! decode step for every running sequence. Iteration latency and GPU
 //! utilization come from [`CostModel`]; energy integrates the
 //! [`PowerModel`]; carbon integrates Eq. 5 through [`CarbonAccountant`].
+//!
+//! Since the multi-replica cluster layer landed, the event loop lives in
+//! [`ReplicaEngine`] — a steppable engine with an *external* arrival feed
+//! (`inject`) that [`crate::cluster::ClusterSim`]'s router drives for N
+//! replicas in lockstep. The single-node [`simulate`] entrypoint is a thin
+//! driver that generates Poisson arrivals and feeds one engine.
+
+use std::collections::VecDeque;
 
 use crate::cache::CacheManager;
-use crate::carbon::{CarbonAccountant, Ci, PowerModel};
+use crate::carbon::{CarbonAccountant, CarbonBreakdown, Ci, PowerModel};
 use crate::metrics::{Slo, SloTracker};
 use crate::workload::{ArrivalGen, Request, Workload};
 
 use super::cost::CostModel;
+
+/// Iteration count past which a run is declared overloaded and cut short
+/// (simulations must terminate even when the offered load exceeds
+/// capacity forever).
+const MAX_ITERATIONS: u64 = 500_000_000;
 
 /// Per-request lifecycle record.
 #[derive(Debug, Clone)]
@@ -49,51 +62,94 @@ impl Controller for FixedController {
 /// What a controller gets to see at a decision boundary.
 #[derive(Debug, Clone, Default)]
 pub struct IntervalObservation {
+    /// Index of the completed decision interval.
     pub hour: usize,
     /// Observed request rate over the interval, rps.
     pub observed_rps: f64,
     /// Ground-truth CI of the interval (predictors may add error).
     pub ci: f64,
-    /// Mean TTFT/TPOT over the interval, seconds.
+    /// Mean TTFT over the interval, seconds.
     pub mean_ttft_s: f64,
+    /// Mean TPOT over the interval, seconds.
     pub mean_tpot_s: f64,
+    /// Requests completed during the interval.
     pub completed: usize,
 }
 
-/// Per-hour timeline sample (drives Fig. 13/14).
+/// Per-hour timeline sample (drives Fig. 13/14 and the fleet timelines).
 #[derive(Debug, Clone, Default)]
 pub struct HourSample {
+    /// Interval index.
     pub hour: usize,
+    /// Ground-truth CI over the interval, gCO₂e/kWh.
     pub ci: f64,
+    /// Observed request rate, rps.
     pub rps: f64,
+    /// Provisioned cache capacity at the end of the interval, bytes.
     pub cache_bytes: u64,
+    /// Requests completed during the interval.
     pub completed: usize,
+    /// P90 TTFT over the interval, seconds.
     pub p90_ttft_s: f64,
+    /// P90 TPOT over the interval, seconds.
     pub p90_tpot_s: f64,
+    /// Total emissions over the interval, grams.
     pub carbon_g: f64,
+    /// Operational (energy × CI) emissions over the interval, grams.
     pub operational_g: f64,
+    /// Cache (SSD) embodied emissions over the interval, grams.
     pub cache_embodied_g: f64,
+    /// Non-storage embodied emissions over the interval, grams.
     pub other_embodied_g: f64,
 }
 
 /// Full simulation outcome.
 #[derive(Debug)]
 pub struct SimResult {
+    /// Joint TTFT+TPOT SLO tracker over the whole run.
     pub slo: SloTracker,
+    /// Carbon accountant carrying the Eq. 5 breakdown.
     pub accountant: CarbonAccountant,
+    /// Completed request count.
     pub completed: usize,
+    /// Hourly timeline samples.
     pub hours: Vec<HourSample>,
-    /// Mean prefill speedup vs the no-cache law (Fig. 3/5/6 reporting).
+    /// Mean TTFT over completed requests, seconds.
     pub mean_ttft_s: f64,
+    /// Mean TPOT over completed requests, seconds.
     pub mean_tpot_s: f64,
+    /// Token-level cache hit rate (§6.3.2 definition).
     pub token_hit_rate: f64,
+    /// Engine iterations executed.
     pub iterations: u64,
 }
 
+impl SimResult {
+    /// Mean provisioned cache over the run's timeline, TB. Falls back to
+    /// `fallback_capacity_bytes` (the cache's final capacity) when the
+    /// run was too short to emit any interval sample.
+    pub fn mean_cache_tb(&self, fallback_capacity_bytes: u64) -> f64 {
+        use crate::carbon::TB;
+        if self.hours.is_empty() {
+            fallback_capacity_bytes as f64 / TB
+        } else {
+            self.hours
+                .iter()
+                .map(|h| h.cache_bytes as f64 / TB)
+                .sum::<f64>()
+                / self.hours.len() as f64
+        }
+    }
+}
+
 /// Simulator configuration.
+#[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// Latency/utilization law of the platform.
     pub cost: CostModel,
+    /// Component power model of the platform.
     pub power: PowerModel,
+    /// SLO thresholds tracked over the run.
     pub slo: Slo,
     /// Decision interval for controller callbacks, seconds (paper: 1 h).
     pub interval_s: f64,
@@ -103,107 +159,278 @@ pub struct SimConfig {
     pub seed: u64,
 }
 
-/// Run the simulation.
+/// One replica's steppable discrete-event engine.
 ///
-/// * `workload` draws request content; `rate_of_hour` the Poisson rate.
-/// * `ci_of_hour` gives ground-truth CI (gCO₂e/kWh) per hour.
-/// * `cache` is the provisioned context cache (capacity may be resized by
-///   the controller between intervals).
-/// * `accountant` carries the embodied model (callers configure SSD
-///   lifetime/unit carbon there for the sensitivity studies).
-pub fn simulate(
-    cfg: &SimConfig,
-    workload: &mut dyn Workload,
-    rate_of_hour: &dyn Fn(usize) -> f64,
-    ci_of_hour: &dyn Fn(usize) -> f64,
-    cache: &mut CacheManager,
-    mut accountant: CarbonAccountant,
-    controller: &mut dyn Controller,
-) -> SimResult {
-    let mut rng = crate::rng::Rng::new(cfg.seed ^ 0x51B_E11E);
-    let mut arrivals = ArrivalGen::new(cfg.seed);
-    let horizon_s = cfg.hours as f64 * 3600.0;
-
-    let mut slo = SloTracker::new(cfg.slo);
-    let mut now = 0.0f64;
-    let mut iterations = 0u64;
-
-    // Request streams.
-    let mut next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
-    let mut waiting: std::collections::VecDeque<InFlight> = Default::default();
-    let mut running: Vec<InFlight> = Vec::new();
-
+/// Unlike [`simulate`] — which owns the whole arrival process — a
+/// `ReplicaEngine` is fed arrivals from outside via [`inject`] and is
+/// advanced explicitly via [`run_until`]. That external feed is what lets
+/// [`crate::cluster`] step N replicas in lockstep and route each request
+/// at its arrival instant against live queue depths and cache contents.
+///
+/// The protocol is:
+///
+/// 1. [`run_until`]`(t)` — process iterations (and idle gaps, and interval
+///    boundaries) until the engine clock reaches `t`;
+/// 2. [`inject`] — admit a request whose `arrival_s == t` (performs the
+///    cache prefix lookup at admission, like the real router);
+/// 3. repeat for every arrival in time order;
+/// 4. [`finish`]`(horizon)` — run idle up to the horizon, drain the
+///    queues, flush the tail accounting period and return the
+///    [`SimResult`] together with the cache.
+///
+/// [`inject`]: ReplicaEngine::inject
+/// [`run_until`]: ReplicaEngine::run_until
+/// [`finish`]: ReplicaEngine::finish
+pub struct ReplicaEngine {
+    cfg: SimConfig,
+    cache: CacheManager,
+    accountant: CarbonAccountant,
+    slo: SloTracker,
+    now: f64,
+    iterations: u64,
+    waiting: VecDeque<InFlight>,
+    running: Vec<InFlight>,
     // Interval bookkeeping.
-    let mut interval_idx = 0usize;
-    let mut interval_ttft: Vec<f64> = Vec::new();
-    let mut interval_tpot: Vec<f64> = Vec::new();
-    let mut interval_completed = 0usize;
-    let mut interval_arrived = 0usize;
-    let mut hours: Vec<HourSample> = Vec::new();
-    let mut prev_breakdown = accountant.breakdown();
-
-    let mut all_ttft_sum = 0.0f64;
-    let mut all_tpot_sum = 0.0f64;
-    let mut completed = 0usize;
-
+    interval_idx: usize,
+    interval_ttft: Vec<f64>,
+    interval_tpot: Vec<f64>,
+    interval_completed: usize,
+    interval_arrived: usize,
+    hours: Vec<HourSample>,
+    prev_breakdown: CarbonBreakdown,
+    // Whole-run accumulators.
+    all_ttft_sum: f64,
+    all_tpot_sum: f64,
+    completed: usize,
     // Energy accumulation within the current hour (CI is hourly-constant,
     // §5.4.2 assumption 2).
-    let mut pending_energy_j = 0.0f64;
-    let mut pending_time_s = 0.0f64;
+    pending_energy_j: f64,
+    pending_time_s: f64,
+}
 
-    let flush_period =
-        |acc: &mut CarbonAccountant, energy: &mut f64, time: &mut f64, hour: usize, cache: &CacheManager| {
-            if *time > 0.0 {
-                acc.record_period(*time, *energy, Ci(ci_of_hour(hour)), cache.capacity_bytes() as f64);
-                *energy = 0.0;
-                *time = 0.0;
+impl ReplicaEngine {
+    /// Build an engine at time zero over a (possibly pre-warmed) cache.
+    pub fn new(cfg: SimConfig, cache: CacheManager, accountant: CarbonAccountant) -> Self {
+        let prev_breakdown = accountant.breakdown();
+        let slo = SloTracker::new(cfg.slo);
+        ReplicaEngine {
+            cfg,
+            cache,
+            accountant,
+            slo,
+            now: 0.0,
+            iterations: 0,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            interval_idx: 0,
+            interval_ttft: Vec::new(),
+            interval_tpot: Vec::new(),
+            interval_completed: 0,
+            interval_arrived: 0,
+            hours: Vec::new(),
+            prev_breakdown,
+            all_ttft_sum: 0.0,
+            all_tpot_sum: 0.0,
+            completed: 0,
+            pending_energy_j: 0.0,
+            pending_time_s: 0.0,
+        }
+    }
+
+    /// Engine clock, seconds from simulation start.
+    pub fn now_s(&self) -> f64 {
+        self.now
+    }
+
+    /// Requests admitted but not yet completed (waiting + running) — the
+    /// load signal the least-loaded and carbon-greedy routers consume.
+    pub fn queue_depth(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    /// Whether the engine has no admitted work.
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+    }
+
+    /// Requests completed so far.
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    /// The replica's context cache (read-only — routers peek affinity).
+    pub fn cache(&self) -> &CacheManager {
+        &self.cache
+    }
+
+    /// The replica's platform cost model.
+    pub fn cost(&self) -> &CostModel {
+        &self.cfg.cost
+    }
+
+    /// Whether the overload safety valve tripped (the 500M-iteration
+    /// cap exceeded). Drivers must stop injecting arrivals once this is set —
+    /// the engine clock is frozen and further requests would only distort
+    /// cache statistics.
+    pub fn overloaded(&self) -> bool {
+        self.iterations > MAX_ITERATIONS
+    }
+
+    /// Admit a request. Arrivals must be injected in time order (by
+    /// `arrival_s`); the engine clock may already sit past `arrival_s`
+    /// by up to one iteration when `run_until` overshot — the request
+    /// then queues exactly as it would behind a real in-flight
+    /// iteration. Performs the cache prefix lookup at admission, like
+    /// the real router.
+    pub fn inject(&mut self, req: Request) {
+        self.interval_arrived += 1;
+        let hit = self.cache.lookup(&req, req.arrival_s);
+        let computed = req.prompt_tokens() - hit.hit_tokens;
+        self.waiting.push_back(InFlight {
+            kv_load_pending: self.cfg.cost.kv_load_s(hit.hit_tokens),
+            remaining_prefill: computed.max(1),
+            remaining_decode: req.output_tokens.max(1),
+            first_token_s: None,
+            decode_time_s: 0.0,
+            decode_steps: 0,
+            req,
+        });
+    }
+
+    /// Advance the engine until its clock reaches `t`: runs iterations
+    /// while work is queued, accounts idle power across empty gaps, and
+    /// fires `controller` at every crossed decision boundary. The clock
+    /// may overshoot `t` by up to one iteration (an in-flight iteration
+    /// is never preempted, exactly like the real scheduler loop).
+    pub fn run_until(
+        &mut self,
+        t: f64,
+        ci_of_hour: &dyn Fn(usize) -> f64,
+        controller: &mut dyn Controller,
+    ) {
+        loop {
+            self.catch_up_intervals(ci_of_hour, controller);
+            if self.now >= t || self.overloaded() {
+                break;
             }
+            if self.is_idle() {
+                self.idle_advance(t);
+                continue;
+            }
+            self.run_one_iteration();
+        }
+    }
+
+    /// Run idle up to `horizon_s`, drain the remaining queued work, flush
+    /// the tail accounting period and return the result plus the cache
+    /// (whose stats carry the token-level hit accounting).
+    ///
+    /// The interval ending exactly at the horizon is always closed
+    /// (sample emitted, controller fired) — including for runs that end
+    /// idle, where the pre-`ReplicaEngine` loop used to break out before
+    /// the final boundary. That old asymmetry (busy-ending runs emitted
+    /// the final sample during drain, idle-ending runs dropped it) was an
+    /// artifact, not a contract; timelines now cover the horizon either
+    /// way.
+    pub fn finish(
+        mut self,
+        horizon_s: f64,
+        ci_of_hour: &dyn Fn(usize) -> f64,
+        controller: &mut dyn Controller,
+    ) -> (SimResult, CacheManager) {
+        self.run_until(horizon_s, ci_of_hour, controller);
+        while !self.is_idle() && !self.overloaded() {
+            self.catch_up_intervals(ci_of_hour, controller);
+            self.run_one_iteration();
+        }
+        // Close every interval the clock fully covered (the drain's last
+        // iteration may have crossed a boundary on its way out).
+        self.catch_up_intervals(ci_of_hour, controller);
+
+        // Flush the tail accounting period.
+        let last_hour = ((self.now / 3600.0) as usize).min(self.cfg.hours.saturating_sub(1));
+        self.flush_pending(ci_of_hour, last_hour);
+
+        let mean_ttft_s = if self.completed > 0 {
+            self.all_ttft_sum / self.completed as f64
+        } else {
+            0.0
         };
+        let mean_tpot_s = if self.completed > 0 {
+            self.all_tpot_sum / self.completed as f64
+        } else {
+            0.0
+        };
+        let result = SimResult {
+            slo: self.slo,
+            accountant: self.accountant,
+            completed: self.completed,
+            hours: self.hours,
+            mean_ttft_s,
+            mean_tpot_s,
+            token_hit_rate: self.cache.stats().token_hit_rate(),
+            iterations: self.iterations,
+        };
+        (result, self.cache)
+    }
 
-    while now < horizon_s || !running.is_empty() || !waiting.is_empty() {
-        let hour = (now / 3600.0) as usize;
-
-        // Interval boundary: controller decision + timeline sample.
-        while now >= (interval_idx + 1) as f64 * cfg.interval_s {
+    /// Process every decision boundary the clock has crossed: flush the
+    /// pending energy into the accountant, emit the interval's
+    /// [`HourSample`], hand the observation to the controller (which may
+    /// resize the cache) and reset the interval accumulators.
+    fn catch_up_intervals(
+        &mut self,
+        ci_of_hour: &dyn Fn(usize) -> f64,
+        controller: &mut dyn Controller,
+    ) {
+        while self.now >= (self.interval_idx + 1) as f64 * self.cfg.interval_s {
             let interval_start_hour =
-                ((interval_idx as f64 * cfg.interval_s) / 3600.0) as usize;
-            flush_period(&mut accountant, &mut pending_energy_j, &mut pending_time_s, hour.min(cfg.hours - 1), cache);
-            let b = accountant.breakdown();
-            let delta_op = b.operational_g - prev_breakdown.operational_g;
-            let delta_cache = b.cache_embodied_g - prev_breakdown.cache_embodied_g;
-            let delta_other = b.other_embodied_g - prev_breakdown.other_embodied_g;
-            prev_breakdown = b;
+                ((self.interval_idx as f64 * self.cfg.interval_s) / 3600.0) as usize;
+            // Price the interval's energy at the hour it was consumed in
+            // (the pre-refactor loop flushed at the hour containing `now`
+            // — i.e. the *next* hour at a boundary — which made each
+            // HourSample's `ci` and `operational_g` disagree by one hour
+            // on steep duck-curve grids).
+            self.flush_pending(
+                ci_of_hour,
+                interval_start_hour.min(self.cfg.hours.saturating_sub(1)),
+            );
+            let b = self.accountant.breakdown();
+            let delta_op = b.operational_g - self.prev_breakdown.operational_g;
+            let delta_cache = b.cache_embodied_g - self.prev_breakdown.cache_embodied_g;
+            let delta_other = b.other_embodied_g - self.prev_breakdown.other_embodied_g;
+            self.prev_breakdown = b;
 
             let mut tt = crate::metrics::LatencyStats::new();
-            for &x in &interval_ttft {
+            for &x in &self.interval_ttft {
                 tt.record(x);
             }
             let mut tp = crate::metrics::LatencyStats::new();
-            for &x in &interval_tpot {
+            for &x in &self.interval_tpot {
                 tp.record(x);
             }
             let obs = IntervalObservation {
-                hour: interval_idx,
-                observed_rps: interval_arrived as f64 / cfg.interval_s,
+                hour: self.interval_idx,
+                observed_rps: self.interval_arrived as f64 / self.cfg.interval_s,
                 ci: ci_of_hour(interval_start_hour),
-                mean_ttft_s: if interval_ttft.is_empty() {
+                mean_ttft_s: if self.interval_ttft.is_empty() {
                     0.0
                 } else {
-                    interval_ttft.iter().sum::<f64>() / interval_ttft.len() as f64
+                    self.interval_ttft.iter().sum::<f64>() / self.interval_ttft.len() as f64
                 },
-                mean_tpot_s: if interval_tpot.is_empty() {
+                mean_tpot_s: if self.interval_tpot.is_empty() {
                     0.0
                 } else {
-                    interval_tpot.iter().sum::<f64>() / interval_tpot.len() as f64
+                    self.interval_tpot.iter().sum::<f64>() / self.interval_tpot.len() as f64
                 },
-                completed: interval_completed,
+                completed: self.interval_completed,
             };
-            hours.push(HourSample {
-                hour: interval_idx,
+            self.hours.push(HourSample {
+                hour: self.interval_idx,
                 ci: ci_of_hour(interval_start_hour),
                 rps: obs.observed_rps,
-                cache_bytes: cache.capacity_bytes(),
-                completed: interval_completed,
+                cache_bytes: self.cache.capacity_bytes(),
+                completed: self.interval_completed,
                 p90_ttft_s: if tt.is_empty() { 0.0 } else { tt.p90() },
                 p90_tpot_s: if tp.is_empty() { 0.0 } else { tp.p90() },
                 carbon_g: delta_op + delta_cache + delta_other,
@@ -211,101 +438,92 @@ pub fn simulate(
                 cache_embodied_g: delta_cache,
                 other_embodied_g: delta_other,
             });
-            controller.on_interval(interval_idx, &obs, cache);
-            interval_idx += 1;
-            interval_ttft.clear();
-            interval_tpot.clear();
-            interval_completed = 0;
-            interval_arrived = 0;
+            controller.on_interval(self.interval_idx, &obs, &mut self.cache);
+            self.interval_idx += 1;
+            self.interval_ttft.clear();
+            self.interval_tpot.clear();
+            self.interval_completed = 0;
+            self.interval_arrived = 0;
         }
+    }
 
-        // Admit arrivals up to `now`.
-        while next_arrival <= now && next_arrival < horizon_s {
-            let mut req = workload.next_request(&mut rng);
-            req.arrival_s = next_arrival;
-            interval_arrived += 1;
-            // Cache lookup at admission (the router's prefix match).
-            let hit = cache.lookup(&req, next_arrival);
-            let computed = req.prompt_tokens() - hit.hit_tokens;
-            waiting.push_back(InFlight {
-                kv_load_pending: cfg.cost.kv_load_s(hit.hit_tokens),
-                remaining_prefill: computed.max(1),
-                remaining_decode: req.output_tokens.max(1),
-                first_token_s: None,
-                decode_time_s: 0.0,
-                decode_steps: 0,
-                req,
-            });
-            next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
+    /// Record the accumulated (energy, time) against the hour's CI.
+    fn flush_pending(&mut self, ci_of_hour: &dyn Fn(usize) -> f64, hour: usize) {
+        if self.pending_time_s > 0.0 {
+            self.accountant.record_period(
+                self.pending_time_s,
+                self.pending_energy_j,
+                Ci(ci_of_hour(hour)),
+                self.cache.capacity_bytes() as f64,
+            );
+            self.pending_energy_j = 0.0;
+            self.pending_time_s = 0.0;
         }
+    }
 
-        // Idle: jump to the next arrival (accounting idle power).
-        if running.is_empty() && waiting.is_empty() {
-            if next_arrival >= horizon_s && now >= horizon_s {
-                break;
-            }
-            let target = next_arrival.min(horizon_s).max(now);
-            let idle = target - now;
-            if idle > 0.0 {
-                let p = cfg.power.sample(
-                    0.0,
-                    0.05,
-                    cache.capacity_bytes() as f64 / 1e12,
-                    0.0,
-                );
-                pending_energy_j += p.total_w() * idle;
-                pending_time_s += idle;
-                now = target;
-            }
-            if next_arrival >= horizon_s && waiting.is_empty() && running.is_empty() {
-                // Horizon reached with an empty system.
-                if now >= horizon_s {
-                    break;
-                }
-            }
-            continue;
+    /// Jump an empty engine forward to `target`, accounting idle power.
+    fn idle_advance(&mut self, target: f64) {
+        let target = target.max(self.now);
+        let idle = target - self.now;
+        if idle > 0.0 {
+            let p = self.cfg.power.sample(
+                0.0,
+                0.05,
+                self.cache.capacity_bytes() as f64 / 1e12,
+                0.0,
+            );
+            self.pending_energy_j += p.total_w() * idle;
+            self.pending_time_s += idle;
+            self.now = target;
         }
+    }
 
-        // Schedule one iteration: chunked prefill for the head-of-line
-        // waiting request (if batch has room), decode for all running.
+    /// One engine iteration: chunked prefill for the head-of-line waiting
+    /// request (if the batch has room) plus one decode step for every
+    /// running sequence.
+    fn run_one_iteration(&mut self) {
         let mut prefill_tokens = 0u32;
         let mut kv_load_s = 0.0f64;
-        if running.len() < cfg.cost.max_batch {
-            if let Some(head) = waiting.front_mut() {
+        if self.running.len() < self.cfg.cost.max_batch {
+            if let Some(head) = self.waiting.front_mut() {
                 // Pay the KV load once, at prefill start.
                 if head.kv_load_pending > 0.0 {
                     kv_load_s = head.kv_load_pending;
                     head.kv_load_pending = 0.0;
                 }
-                let take = head.remaining_prefill.min(cfg.cost.prefill_budget);
+                let take = head.remaining_prefill.min(self.cfg.cost.prefill_budget);
                 head.remaining_prefill -= take;
                 prefill_tokens = take;
             }
         }
 
-        let batch = running.len();
-        let t_iter = cfg.cost.iteration_s(prefill_tokens, batch) + kv_load_s;
+        let batch = self.running.len();
+        let t_iter = self.cfg.cost.iteration_s(prefill_tokens, batch) + kv_load_s;
 
         // Power/energy for this iteration.
-        let gpu_util = cfg.cost.gpu_util(prefill_tokens, batch);
-        let cpu_util = 0.15 + 0.25 * (batch as f64 / cfg.cost.max_batch as f64).min(1.0);
-        let ssd_active = if kv_load_s > 0.0 { (kv_load_s / t_iter).min(1.0) } else { 0.05 };
-        let p = cfg.power.sample(
+        let gpu_util = self.cfg.cost.gpu_util(prefill_tokens, batch);
+        let cpu_util = 0.15 + 0.25 * (batch as f64 / self.cfg.cost.max_batch as f64).min(1.0);
+        let ssd_active = if kv_load_s > 0.0 {
+            (kv_load_s / t_iter).min(1.0)
+        } else {
+            0.05
+        };
+        let p = self.cfg.power.sample(
             gpu_util,
             cpu_util,
-            cache.capacity_bytes() as f64 / 1e12,
+            self.cache.capacity_bytes() as f64 / 1e12,
             ssd_active,
         );
-        pending_energy_j += p.total_w() * t_iter;
-        pending_time_s += t_iter;
-        now += t_iter;
-        iterations += 1;
+        self.pending_energy_j += p.total_w() * t_iter;
+        self.pending_time_s += t_iter;
+        self.now += t_iter;
+        self.iterations += 1;
 
         // Decode progress for the sequences that were in the batch this
         // iteration (captured in `batch` — a request promoted below does
         // not decode in the iteration that finished its prefill).
         let mut finished: Vec<usize> = Vec::new();
-        for (i, fly) in running.iter_mut().enumerate() {
+        for (i, fly) in self.running.iter_mut().enumerate() {
             fly.remaining_decode -= 1;
             fly.decode_time_s += t_iter;
             fly.decode_steps += 1;
@@ -313,87 +531,105 @@ pub fn simulate(
                 finished.push(i);
             }
         }
-        let mut complete =
-            |fly: InFlight,
-             now: f64,
-             slo: &mut SloTracker,
-             interval_tpot: &mut Vec<f64>,
-             interval_completed: &mut usize,
-             cache: &mut CacheManager| {
-                let ttft = fly.first_token_s.unwrap() - fly.req.arrival_s;
-                let tpot = if fly.decode_steps > 0 {
-                    fly.decode_time_s / fly.decode_steps as f64
-                } else {
-                    0.0
-                };
-                slo.record(ttft, tpot);
-                interval_tpot.push(tpot);
-                all_tpot_sum += tpot;
-                *interval_completed += 1;
-                completed += 1;
-                // Admit the served context into the cache: context + this
-                // turn's prompt + generated reply become reusable KV
-                // (CachedAttention-style write-through).
-                let cached_tokens = fly.req.prompt_tokens() + fly.req.output_tokens;
-                cache.admit(&fly.req, cached_tokens, None, now);
-            };
         for &i in finished.iter().rev() {
-            let fly = running.swap_remove(i);
-            complete(fly, now, &mut slo, &mut interval_tpot, &mut interval_completed, cache);
+            let fly = self.running.swap_remove(i);
+            self.complete(fly);
         }
 
         // Promote the head waiting request if its prefill completed. The
         // prefill itself emits the first token (remaining_decode counts
         // the rest of the output).
         if prefill_tokens > 0 || kv_load_s > 0.0 {
-            let done = waiting
+            let done = self
+                .waiting
                 .front()
                 .map(|h| h.remaining_prefill == 0)
                 .unwrap_or(false);
             if done {
-                let mut fly = waiting.pop_front().unwrap();
-                fly.first_token_s = Some(now);
-                let ttft = now - fly.req.arrival_s;
-                interval_ttft.push(ttft);
-                all_ttft_sum += ttft;
+                let mut fly = self.waiting.pop_front().unwrap();
+                fly.first_token_s = Some(self.now);
+                let ttft = self.now - fly.req.arrival_s;
+                self.interval_ttft.push(ttft);
+                self.all_ttft_sum += ttft;
                 fly.remaining_decode -= 1; // first token emitted by prefill
                 if fly.remaining_decode == 0 {
-                    complete(fly, now, &mut slo, &mut interval_tpot, &mut interval_completed, cache);
+                    self.complete(fly);
                 } else {
-                    running.push(fly);
+                    self.running.push(fly);
                 }
             }
         }
+    }
 
-        // Safety: simulations must terminate even under overload.
-        if iterations > 500_000_000 {
+    /// Account a completed request and write its served context through
+    /// to the cache (CachedAttention-style write-through).
+    fn complete(&mut self, fly: InFlight) {
+        let ttft = fly.first_token_s.unwrap() - fly.req.arrival_s;
+        let tpot = if fly.decode_steps > 0 {
+            fly.decode_time_s / fly.decode_steps as f64
+        } else {
+            0.0
+        };
+        self.slo.record(ttft, tpot);
+        self.interval_tpot.push(tpot);
+        self.all_tpot_sum += tpot;
+        self.interval_completed += 1;
+        self.completed += 1;
+        // Admit the served context into the cache: context + this turn's
+        // prompt + generated reply become reusable KV.
+        let cached_tokens = fly.req.prompt_tokens() + fly.req.output_tokens;
+        self.cache.admit(&fly.req, cached_tokens, None, self.now);
+    }
+}
+
+/// Run the single-node simulation.
+///
+/// * `workload` draws request content; `rate_of_hour` the Poisson rate.
+/// * `ci_of_hour` gives ground-truth CI (gCO₂e/kWh) per hour.
+/// * `cache` is the provisioned context cache (capacity may be resized by
+///   the controller between intervals).
+/// * `accountant` carries the embodied model (callers configure SSD
+///   lifetime/unit carbon there for the sensitivity studies).
+///
+/// This is a thin driver over [`ReplicaEngine`]: it draws Poisson
+/// arrivals and injects them one by one; the multi-replica
+/// [`crate::cluster`] layer drives the same engine with a router in the
+/// middle.
+pub fn simulate(
+    cfg: &SimConfig,
+    workload: &mut dyn Workload,
+    rate_of_hour: &dyn Fn(usize) -> f64,
+    ci_of_hour: &dyn Fn(usize) -> f64,
+    cache: &mut CacheManager,
+    accountant: CarbonAccountant,
+    controller: &mut dyn Controller,
+) -> SimResult {
+    let mut rng = crate::rng::Rng::new(cfg.seed ^ 0x51B_E11E);
+    let mut arrivals = ArrivalGen::new(cfg.seed);
+    let horizon_s = cfg.hours as f64 * 3600.0;
+
+    // The engine owns the cache while running; swap it out and back so
+    // callers keep inspecting their `&mut CacheManager` afterwards.
+    let placeholder = CacheManager::new(0, 1, cache.policy());
+    let owned = std::mem::replace(cache, placeholder);
+    let mut engine = ReplicaEngine::new(cfg.clone(), owned, accountant);
+
+    let mut next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
+    while next_arrival < horizon_s {
+        engine.run_until(next_arrival, ci_of_hour, controller);
+        // The valve may have tripped while advancing: stop the stream
+        // rather than distort cache statistics on a frozen clock.
+        if engine.overloaded() {
             break;
         }
+        let mut req = workload.next_request(&mut rng);
+        req.arrival_s = next_arrival;
+        engine.inject(req);
+        next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
     }
-
-    // Flush the tail accounting period.
-    let last_hour = ((now / 3600.0) as usize).min(cfg.hours.saturating_sub(1));
-    if pending_time_s > 0.0 {
-        accountant.record_period(
-            pending_time_s,
-            pending_energy_j,
-            Ci(ci_of_hour(last_hour)),
-            cache.capacity_bytes() as f64,
-        );
-    }
-
-    let mean_ttft_s = if completed > 0 { all_ttft_sum / completed as f64 } else { 0.0 };
-    let mean_tpot_s = if completed > 0 { all_tpot_sum / completed as f64 } else { 0.0 };
-    SimResult {
-        slo,
-        accountant,
-        completed,
-        hours,
-        mean_ttft_s,
-        mean_tpot_s,
-        token_hit_rate: cache.stats().token_hit_rate(),
-        iterations,
-    }
+    let (result, cache_back) = engine.finish(horizon_s, ci_of_hour, controller);
+    *cache = cache_back;
+    result
 }
 
 /// Warm the cache with `n` requests (the paper initializes with 200 k

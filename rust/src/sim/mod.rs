@@ -1,9 +1,14 @@
-//! Calibrated discrete-event serving simulator (README § System design).
+//! Calibrated discrete-event serving simulator (ARCHITECTURE.md § sim).
 //!
 //! Reproduces the paper's evaluation at the paper's scale: a vLLM-style
 //! continuous-batching engine with chunked prefill, context caching, a
 //! component power model and Eq. 5 carbon integration. Latency/power laws
 //! are calibrated to the paper's reported anchors (see [`CostModel`]).
+//!
+//! The event loop is a steppable [`ReplicaEngine`] with an external
+//! arrival feed; [`simulate`] drives one engine with a Poisson arrival
+//! process, and [`crate::cluster`] drives N of them in lockstep behind a
+//! carbon-aware router.
 
 mod cost;
 mod engine;
@@ -11,7 +16,7 @@ mod engine;
 pub use cost::CostModel;
 pub use engine::{
     simulate, warm_cache, Controller, FixedController, HourSample,
-    IntervalObservation, SimConfig, SimResult,
+    IntervalObservation, ReplicaEngine, SimConfig, SimResult,
 };
 
 #[cfg(test)]

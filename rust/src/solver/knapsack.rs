@@ -14,6 +14,7 @@ use super::{IlpOption, IlpProblem};
 pub struct Knapsack {
     /// (weight, value) per item; weights and values positive.
     pub items: Vec<(u64, u64)>,
+    /// Weight budget.
     pub budget: u64,
 }
 

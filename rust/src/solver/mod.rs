@@ -43,14 +43,18 @@ pub struct IlpProblem {
 pub struct IlpSolution {
     /// Chosen option index per step.
     pub choice: Vec<usize>,
+    /// Total carbon of the plan, grams.
     pub total_cost_g: f64,
+    /// Achieved TTFT attainment fraction.
     pub ttft_attainment: f64,
+    /// Achieved TPOT attainment fraction.
     pub tpot_attainment: f64,
     /// Search statistics (Fig. 16 / §6.4 reporting).
     pub nodes_explored: u64,
 }
 
 impl IlpProblem {
+    /// Total requests over the horizon (the ρN denominator).
     pub fn total_requests(&self) -> u64 {
         self.options
             .iter()

@@ -22,15 +22,22 @@ pub struct Bench {
 /// Summary statistics for one case.
 #[derive(Debug, Clone)]
 pub struct CaseResult {
+    /// `group/case` label.
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Mean iteration time.
     pub mean: Duration,
+    /// Median iteration time.
     pub p50: Duration,
+    /// 95th-percentile iteration time.
     pub p95: Duration,
+    /// Fastest iteration.
     pub min: Duration,
 }
 
 impl Bench {
+    /// A bench group with default budgets.
     pub fn new(name: &str) -> Self {
         Bench {
             name: name.to_string(),
@@ -83,6 +90,7 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// All cases measured so far.
     pub fn results(&self) -> &[CaseResult] {
         &self.results
     }

@@ -11,6 +11,7 @@ pub struct Csv {
 }
 
 impl Csv {
+    /// An empty table with the given header.
     pub fn new(header: &[&str]) -> Self {
         Csv {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -18,6 +19,7 @@ impl Csv {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(
             cells.len(),
@@ -45,6 +47,7 @@ impl Csv {
         }
     }
 
+    /// Serialize to RFC-4180-ish text.
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(
@@ -69,6 +72,7 @@ impl Csv {
         out
     }
 
+    /// Write the file, creating parent directories.
     pub fn write(&self, path: &Path) -> anyhow::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -77,6 +81,7 @@ impl Csv {
         Ok(())
     }
 
+    /// Number of data rows.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }

@@ -13,17 +13,24 @@ use std::fmt::Write as _;
 /// deterministic — results files diff cleanly between runs.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (f64 storage).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Array(Vec<Json>),
+    /// An object with ordered keys.
     Object(BTreeMap<String, Json>),
 }
 
 impl Json {
     // -- accessors ---------------------------------------------------------
 
+    /// Object field lookup (`None` for non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Object(m) => m.get(key),
@@ -31,6 +38,7 @@ impl Json {
         }
     }
 
+    /// The number value, if numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -38,6 +46,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if exactly one.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 {
@@ -48,6 +57,7 @@ impl Json {
         })
     }
 
+    /// The value as a signed integer, if exactly one.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().and_then(|x| {
             if x.fract() == 0.0 {
@@ -58,6 +68,7 @@ impl Json {
         })
     }
 
+    /// The boolean value, if boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -65,6 +76,7 @@ impl Json {
         }
     }
 
+    /// The string value, if a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -72,6 +84,7 @@ impl Json {
         }
     }
 
+    /// The array elements, if an array.
     pub fn as_array(&self) -> Option<&[Json]> {
         match self {
             Json::Array(v) => Some(v),
@@ -86,12 +99,14 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing/invalid usize field `{key}`"))
     }
 
+    /// `get` + `as_array` with a contextual error.
     pub fn array_field(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.get(key)
             .and_then(Json::as_array)
             .ok_or_else(|| anyhow::anyhow!("missing/invalid array field `{key}`"))
     }
 
+    /// A field parsed as a `Vec<usize>`.
     pub fn usize_array_field(&self, key: &str) -> anyhow::Result<Vec<usize>> {
         self.array_field(key)?
             .iter()
@@ -102,6 +117,7 @@ impl Json {
             .collect()
     }
 
+    /// A field parsed as a `Vec<i64>`.
     pub fn i64_array_field(&self, key: &str) -> anyhow::Result<Vec<i64>> {
         self.array_field(key)?
             .iter()
@@ -111,16 +127,19 @@ impl Json {
 
     // -- construction helpers ----------------------------------------------
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a numeric array.
     pub fn from_f64s(xs: &[f64]) -> Json {
         Json::Array(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
     // -- serialization -------------------------------------------------------
 
+    /// Serialize deterministically (ordered object keys).
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
@@ -184,6 +203,7 @@ impl Json {
 
     // -- parsing -------------------------------------------------------------
 
+    /// Parse a JSON document (errors carry byte offsets).
     pub fn parse(text: &str) -> anyhow::Result<Json> {
         let mut p = Parser {
             bytes: text.as_bytes(),

@@ -18,12 +18,14 @@ pub struct ConversationParams {
     pub pool: usize,
     /// Geometric continue-probability per turn (mean turns = 1/(1-p)).
     pub continue_p: f64,
-    /// Lognormal (mu, sigma) of user-message tokens.
+    /// Lognormal mu of user-message tokens.
     pub user_mu: f64,
+    /// Lognormal sigma of user-message tokens.
     pub user_sigma: f64,
-    /// Lognormal (mu, sigma) of assistant-reply tokens (joins the context
-    /// for subsequent turns, and is the decode length of this turn).
+    /// Lognormal mu of assistant-reply tokens (joins the context for
+    /// subsequent turns, and is the decode length of this turn).
     pub reply_mu: f64,
+    /// Lognormal sigma of assistant-reply tokens.
     pub reply_sigma: f64,
     /// Context window cap, tokens (§6.1: 8k window, truncate beyond).
     pub max_context: u32,

@@ -17,14 +17,17 @@ pub struct DocumentParams {
     pub n_docs: usize,
     /// Zipf skew (0.4 / 0.7 in the paper).
     pub zipf_alpha: f64,
-    /// Lognormal (mu, sigma) of document token lengths.
+    /// Lognormal mu of document token lengths.
     pub doc_mu: f64,
+    /// Lognormal sigma of document token lengths.
     pub doc_sigma: f64,
-    /// Lognormal (mu, sigma) of question token lengths.
+    /// Lognormal mu of question token lengths.
     pub question_mu: f64,
+    /// Lognormal sigma of question token lengths.
     pub question_sigma: f64,
-    /// Lognormal (mu, sigma) of answer (decode) lengths.
+    /// Lognormal mu of answer (decode) lengths.
     pub answer_mu: f64,
+    /// Lognormal sigma of answer (decode) lengths.
     pub answer_sigma: f64,
     /// Context window cap, tokens.
     pub max_context: u32,
@@ -48,6 +51,7 @@ impl Default for DocumentParams {
 }
 
 impl DocumentParams {
+    /// Default corpus with the given Zipf skew (§6.1's α).
     pub fn with_alpha(alpha: f64) -> Self {
         DocumentParams {
             zipf_alpha: alpha,
@@ -84,6 +88,7 @@ pub struct DocumentGen {
 }
 
 impl DocumentGen {
+    /// Build the seeded corpus (lengths, popularity ranks).
     pub fn new(params: DocumentParams, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0xD0C5);
         let doc_tokens: Vec<u32> = (0..params.n_docs)
@@ -104,14 +109,17 @@ impl DocumentGen {
         }
     }
 
+    /// Number of documents in the corpus.
     pub fn corpus_len(&self) -> usize {
         self.doc_tokens.len()
     }
 
+    /// Token length of document `doc`.
     pub fn doc_len(&self, doc: usize) -> u32 {
         self.doc_tokens[doc]
     }
 
+    /// Draw the next question against a Zipf-sampled document.
     pub fn next(&mut self, rng: &mut Rng) -> Request {
         let rank = self.zipf.sample(rng);
         let doc = self.rank_to_doc[rank];

@@ -27,6 +27,7 @@ use crate::rng::Rng;
 /// structure. `next_request` draws the logical content; arrival times are
 /// layered on by [`ArrivalGen`].
 pub trait Workload {
+    /// Which task family the generator produces.
     fn task(&self) -> TaskKind;
     /// Draw the next request (content only; `arrival_s` is filled by the
     /// arrival process).

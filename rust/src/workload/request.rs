@@ -5,11 +5,14 @@ use crate::rng::Rng;
 /// The paper's two evaluated tasks (§6.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TaskKind {
+    /// Multi-turn conversation (ShareGPT-like).
     Conversation,
+    /// Document reading comprehension (TriviaQA-like).
     DocQa,
 }
 
 impl TaskKind {
+    /// Human-readable task name.
     pub fn name(&self) -> &'static str {
         match self {
             TaskKind::Conversation => "multi-turn-conversation",
@@ -27,7 +30,9 @@ impl TaskKind {
 /// hit only `new_tokens` must be computed.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Globally unique request id.
     pub id: u64,
+    /// Which workload produced the request.
     pub task: TaskKind,
     /// Identity of the reusable context (conversation id / document id) —
     /// the cache key.
@@ -50,6 +55,14 @@ impl Request {
     pub fn prompt_tokens(&self) -> u32 {
         self.context_tokens + self.new_tokens
     }
+
+    /// The key under which this request's reusable context prefix is (or
+    /// would be) cached — the cluster router's *affinity* key. Requests
+    /// sharing a `prefix_key` hit the same cache entry, so routing them to
+    /// the same replica preserves prefix reuse across a fleet.
+    pub fn prefix_key(&self) -> u64 {
+        self.context_id
+    }
 }
 
 /// Poisson arrival process over a varying hourly rate (§6.1: "The request
@@ -61,6 +74,7 @@ pub struct ArrivalGen {
 }
 
 impl ArrivalGen {
+    /// A seeded arrival process starting at time zero.
     pub fn new(seed: u64) -> Self {
         ArrivalGen {
             now_s: 0.0,
@@ -93,6 +107,7 @@ impl ArrivalGen {
         }
     }
 
+    /// The process clock (time of the last generated arrival), seconds.
     pub fn now_s(&self) -> f64 {
         self.now_s
     }

@@ -1,0 +1,120 @@
+//! Golden regression for the multi-replica cluster layer.
+//!
+//! A 2-hour, fixed-rate FR+MISO fleet is evaluated under all three router
+//! policies through the standard scenario matrix, and the result table is
+//! diffed against `rust/tests/golden/cluster_quick.txt`.
+//!
+//! * `UPDATE_GOLDEN=1 cargo test -q --test cluster_golden` regenerates
+//!   the snapshot.
+//! * If the snapshot does not exist yet (fresh checkout state), the test
+//!   bootstraps it and passes — the diff bites from the next run on.
+//!
+//! Separately from the snapshot, the test pins the acceptance property of
+//! the cluster layer: the carbon-greedy router beats round-robin on
+//! carbon per request at (near-)equal SLO attainment, deterministically
+//! across thread counts.
+
+use std::path::PathBuf;
+
+use greencache::ci::Grid;
+use greencache::cluster::RouterPolicy;
+use greencache::experiments::{Baseline, Model, Task};
+use greencache::scenario::{run_specs, ClusterVariant, Matrix, ScenarioSpec};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/cluster_quick.txt")
+}
+
+/// One fleet under all three routers: fixed fleet rate, fixed horizon,
+/// FullCache per replica (no controller noise in the golden numbers).
+fn fleet_matrix() -> Vec<ScenarioSpec> {
+    let fleets: Vec<Option<ClusterVariant>> = RouterPolicy::all()
+        .iter()
+        .map(|&r| Some(ClusterVariant::new(&[Grid::Fr, Grid::Miso], r)))
+        .collect();
+    let mut m = Matrix::new()
+        .models(&[Model::Llama70B])
+        .tasks(&[Task::Conversation])
+        .grids(&[Grid::Es])
+        .baselines(&[Baseline::FullCache])
+        .clusters(&fleets);
+    m.hours = 2;
+    m.fixed_rps = Some(0.35);
+    m.expand()
+}
+
+#[test]
+fn cluster_matrix_matches_golden_and_thread_counts() {
+    let specs = fleet_matrix();
+    assert_eq!(specs.len(), 3);
+
+    // Determinism across schedules: 3 workers vs 1 worker.
+    let parallel = run_specs(&specs, 3);
+    let serial = run_specs(&specs, 1);
+    let table = parallel.table();
+    assert_eq!(table, serial.table(), "fleet results depend on thread count");
+
+    // Content sanity before pinning bytes.
+    assert_eq!(table.lines().count(), 4, "header + 3 fleet cells:\n{table}");
+    for cell in &parallel.cells {
+        assert!(cell.completed > 0, "{} completed nothing", cell.spec.label());
+        assert!(cell.carbon_per_request_g > 0.0);
+    }
+
+    // The acceptance property: carbon-greedy beats round-robin on carbon
+    // at (near-)equal SLO attainment, on the same replayed day.
+    let by_router = |r: RouterPolicy| {
+        parallel
+            .cells
+            .iter()
+            .find(|c| {
+                c.spec
+                    .cluster
+                    .as_ref()
+                    .is_some_and(|cv| cv.router == r)
+            })
+            .expect("router cell present")
+    };
+    let rr = by_router(RouterPolicy::RoundRobin);
+    let greedy = by_router(RouterPolicy::CarbonGreedy);
+    assert!(
+        greedy.carbon_per_request_g < rr.carbon_per_request_g,
+        "carbon-greedy {:.4} g/req !< round-robin {:.4} g/req",
+        greedy.carbon_per_request_g,
+        rr.carbon_per_request_g
+    );
+    assert!(
+        greedy.slo_attainment >= rr.slo_attainment - 0.03,
+        "carbon-greedy SLO {:.3} fell more than 3 pp below round-robin {:.3}",
+        greedy.slo_attainment,
+        rr.slo_attainment
+    );
+
+    // Golden diff (UPDATE_GOLDEN=1 regenerates; first run bootstraps).
+    let path = golden_path();
+    let update = std::env::var("UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false);
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &table).unwrap();
+        eprintln!("wrote golden snapshot {path:?}");
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        table, want,
+        "cluster table diverged from {path:?}; run with UPDATE_GOLDEN=1 if intentional"
+    );
+}
+
+#[test]
+fn fleet_cells_are_replayable_one_by_one() {
+    // A fleet cell replayed alone reproduces its in-matrix result.
+    let specs = fleet_matrix();
+    let all = run_specs(&specs, 0);
+    let lone = run_specs(&specs[2..3], 1);
+    let a = &all.cells[2];
+    let b = &lone.cells[0];
+    assert_eq!(a.completed, b.completed);
+    assert!((a.carbon_per_request_g - b.carbon_per_request_g).abs() < 1e-12);
+    assert!((a.token_hit_rate - b.token_hit_rate).abs() < 1e-12);
+}
