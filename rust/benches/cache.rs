@@ -1,9 +1,15 @@
 //! Cache-manager bench: policy ops/s under realistic churn (the Table-3
 //! substrate must not bottleneck the day-scale simulations).
+//!
+//! The per-policy churn cases come from `experiments::bench::cache_report`
+//! (shared with `greencache bench`, which maintains the repo-root
+//! `BENCH_CACHE.json`); the resize-storm case is local. Set
+//! `BENCH_JSON=<path>` to write the machine-readable report.
 
 use greencache::cache::{CacheManager, PolicyKind};
+use greencache::experiments::bench::cache_report;
 use greencache::rng::Rng;
-use greencache::util::bench::{black_box, Bench};
+use greencache::util::bench::{black_box, emit_json_env, Bench};
 use greencache::workload::{Request, TaskKind};
 
 fn req(ctx: u64, version: u32, context: u32) -> Request {
@@ -19,35 +25,11 @@ fn req(ctx: u64, version: u32, context: u32) -> Request {
     }
 }
 
-/// lookup+admit churn over `n_ops` operations on a cache holding ~8k
-/// entries at steady state.
-fn churn(policy: PolicyKind, n_ops: usize, seed: u64) -> u64 {
-    let mut m = CacheManager::new(8_000 * 1_000, 1_000, policy);
-    let mut rng = Rng::new(seed);
-    let mut now = 0.0;
-    let mut acc = 0u64;
-    for _ in 0..n_ops {
-        now += 0.01;
-        let ctx = rng.below(20_000);
-        let context = rng.range(100, 900) as u32;
-        let r = req(ctx, rng.below(8) as u32, context);
-        let h = m.lookup(&r, now);
-        acc += h.hit_tokens as u64;
-        m.admit(&r, context + 150, None, now);
-    }
-    acc + m.stats().evictions
-}
-
 fn main() {
-    let mut b = Bench::new("cache");
-    for policy in [PolicyKind::Fifo, PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::Lcs] {
-        let r = b.case(&format!("churn_20k_ops_{}", policy.name()), || {
-            black_box(churn(policy, 20_000, 42))
-        });
-        let ops_per_sec = 20_000.0 / r.mean.as_secs_f64();
-        println!("    -> {:.0} lookup+admit ops/s", ops_per_sec);
-    }
+    let report = cache_report(false);
+
     // Resize storms: shrink/grow cycles (the coordinator's hourly path).
+    let mut b = Bench::new("cache");
     b.case("resize_cycle_lcs", || {
         let mut m = CacheManager::new(8_000 * 1_000, 1_000, PolicyKind::Lcs);
         let mut rng = Rng::new(7);
@@ -63,4 +45,6 @@ fn main() {
         }
         black_box(m.len())
     });
+
+    emit_json_env(&report);
 }

@@ -4,7 +4,7 @@
 
 use greencache::ci::{CiPredictor, Grid};
 use greencache::load::{LoadTrace, Sarima};
-use greencache::util::bench::{black_box, Bench};
+use greencache::util::bench::{black_box, emit_json_env, Bench};
 
 fn main() {
     let mut b = Bench::new("predictors");
@@ -29,4 +29,6 @@ fn main() {
     b.case("ci_trace_synthesis_30d", || {
         black_box(Grid::Es.trace(30, 3).hourly.len())
     });
+
+    emit_json_env(&b.to_json());
 }

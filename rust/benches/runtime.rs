@@ -3,7 +3,7 @@
 //! effect on the real path). Skips gracefully without artifacts.
 
 use greencache::runtime::{default_artifact_dir, Engine};
-use greencache::util::bench::{black_box, Bench};
+use greencache::util::bench::{black_box, emit_json_env, Bench};
 
 fn main() {
     let dir = default_artifact_dir();
@@ -65,4 +65,6 @@ fn main() {
         engine.xla_time.get().as_secs_f64()
             / results.iter().map(|r| r.mean.as_secs_f64() * r.iters as f64).sum::<f64>()
     );
+
+    emit_json_env(&b.to_json());
 }

@@ -1,11 +1,21 @@
 //! Simulator bench: simulated-day throughput. Figs. 12–14 run dozens of
 //! day-scale simulations; each must complete in seconds.
+//!
+//! The headline case is the decode-heavy day-scale report from
+//! `experiments::bench`, which replays the same day under the
+//! per-iteration reference loop and the event-driven fast-forward engine
+//! and prints the measured speedup. Set `BENCH_JSON=<path>` to also
+//! write the machine-readable report (same shape as the repo-root
+//! `BENCH_SIM.json` that `greencache bench` maintains).
 
 use greencache::cache::{CacheManager, PolicyKind, KV_BYTES_PER_TOKEN_70B};
 use greencache::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
+use greencache::experiments::bench::sim_report;
 use greencache::metrics::Slo;
-use greencache::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig};
-use greencache::util::bench::{black_box, Bench};
+use greencache::sim::{
+    simulate, warm_cache, CostModel, FixedController, SimConfig, Stepping,
+};
+use greencache::util::bench::{black_box, emit_json_env, Bench};
 use greencache::workload::{ConversationGen, ConversationParams};
 
 fn day(hours: usize, rps: f64, cache_tb: f64, warm: usize, seed: u64) -> (usize, u64) {
@@ -16,6 +26,7 @@ fn day(hours: usize, rps: f64, cache_tb: f64, warm: usize, seed: u64) -> (usize,
         interval_s: 3600.0,
         hours,
         seed,
+        stepping: Stepping::FastForward,
     };
     let mut wl = ConversationGen::new(ConversationParams::default(), seed);
     let mut cache = CacheManager::new(
@@ -58,4 +69,9 @@ fn main() {
         warm_cache(&mut wl, &mut cache, 30_000, 3);
         black_box(cache.len())
     });
+
+    // The before/after headline: same decode-heavy day, both stepping
+    // modes, measured speedup in the report.
+    let report = sim_report(false);
+    emit_json_env(&report);
 }

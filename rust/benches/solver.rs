@@ -5,7 +5,7 @@
 
 use greencache::rng::Rng;
 use greencache::solver::{IlpOption, IlpProblem};
-use greencache::util::bench::{black_box, Bench};
+use greencache::util::bench::{black_box, emit_json_env, Bench};
 
 fn problem(t_len: usize, k: usize, n: u64, seed: u64) -> IlpProblem {
     let mut rng = Rng::new(seed);
@@ -56,4 +56,6 @@ fn main() {
         paper_mean,
         7.03 / paper_mean.max(1e-9)
     );
+
+    emit_json_env(&b.to_json());
 }

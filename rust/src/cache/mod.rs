@@ -340,12 +340,15 @@ impl CacheManager {
         evicted
     }
 
-    /// Drop everything (used between benchmark phases).
+    /// Drop everything (used between benchmark phases): drain the entry
+    /// table and notify the eviction index per key — no scratch key
+    /// `Vec`, no per-key re-hashing through [`Self::remove`]. Does not
+    /// count as evictions, exactly like the old behavior.
     pub fn clear(&mut self) {
-        let keys: Vec<u64> = self.entries.keys().copied().collect();
-        for k in keys {
-            self.remove(k);
+        for (key, _entry) in self.entries.drain() {
+            self.index.on_remove(key);
         }
+        self.used_bytes = 0;
     }
 
     /// Verify internal accounting invariants (used by property tests).

@@ -8,7 +8,7 @@ use crate::experiments::{Baseline, Model, ProfileStore, Task};
 use crate::load::LoadTrace;
 use crate::rng::Rng;
 use crate::sim::{
-    Controller, FixedController, HourSample, ReplicaEngine, SimConfig, SimResult,
+    Controller, FixedController, HourSample, ReplicaEngine, SimConfig, SimResult, Stepping,
 };
 use crate::workload::ArrivalGen;
 
@@ -90,6 +90,12 @@ pub struct ClusterSpec {
     /// traces (sensitivity studies). Flattens the carbon-greedy router's
     /// CI signal — only queue depth and affinity remain.
     pub fixed_ci: Option<f64>,
+    /// Engine stepping mode for every replica. Lockstep `advance` and
+    /// router observation instants are stepping-invariant (stretches
+    /// stop at the same event boundaries the per-iteration loop visits),
+    /// so this stays [`Stepping::FastForward`] outside equivalence
+    /// tests.
+    pub stepping: Stepping,
 }
 
 impl ClusterSpec {
@@ -108,6 +114,7 @@ impl ClusterSpec {
             quick: false,
             fixed_rps: None,
             fixed_ci: None,
+            stepping: Stepping::default(),
         }
     }
 
@@ -202,8 +209,10 @@ impl ClusterResult {
             .iter()
             .map(|r| r.sim.accountant.breakdown().total_g())
             .sum();
-        let mut slo = replicas[0].sim.slo.clone();
-        for r in &replicas[1..] {
+        // Merge into an empty tracker instead of cloning replica 0's full
+        // sample reservoirs and then merging the rest on top.
+        let mut slo = crate::metrics::SloTracker::new(replicas[0].sim.slo.slo);
+        for r in &replicas {
             slo.merge(&r.sim.slo);
         }
         let (hit, input) = replicas.iter().fold((0u64, 0u64), |(h, i), r| {
@@ -392,7 +401,7 @@ impl ClusterSim {
             // here, unlike run_day's pre-warmed single node — see the
             // ClusterSpec docs.)
             let controller: Box<dyn Controller> = if spec.is_adaptive() && capacity > 0 {
-                let profile = profiles.get(r.model, spec.task, policy).clone();
+                let profile = profiles.get_shared(r.model, spec.task, policy);
                 let ci_hist = ci[..base_hour].to_vec();
                 // Each controller's *pre-deployment* history assumes a
                 // peak-proportional share of the fleet load. A routing
@@ -430,6 +439,7 @@ impl ClusterSim {
                 // fleet randomness lives in ClusterSim::run's shared
                 // arrival/workload generators.
                 seed: spec.seed,
+                stepping: spec.stepping,
             };
             let accountant = CarbonAccountant::new(r.model.embodied());
             reps.push(Rep {
@@ -715,6 +725,29 @@ mod tests {
         assert_eq!(a.table(), b.table());
         assert!((a.total_carbon_g - b.total_carbon_g).abs() < 1e-9);
         assert!((a.token_hit_rate - b.token_hit_rate).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stepping_modes_agree_on_fleet_runs() {
+        // The cluster layer's lockstep protocol (all replicas advance to
+        // each arrival instant, then the router reads live views) must
+        // be stepping-invariant: the fast-forward engine stops at the
+        // same event boundaries the per-iteration loop visits.
+        let mut fast_spec = fr_miso(RouterPolicy::CarbonGreedy);
+        fast_spec.stepping = Stepping::FastForward;
+        let mut ref_spec = fr_miso(RouterPolicy::CarbonGreedy);
+        ref_spec.stepping = Stepping::Reference;
+        let fast = run(&fast_spec);
+        let slow = run(&ref_spec);
+        assert_eq!(fast.completed, slow.completed);
+        for (f, s) in fast.replicas.iter().zip(&slow.replicas) {
+            assert_eq!(f.routed, s.routed, "routing must be stepping-invariant");
+            assert_eq!(f.sim.iterations, s.sim.iterations);
+        }
+        assert!((fast.total_carbon_g - slow.total_carbon_g).abs() < 1e-6);
+        // At most 2 threshold-straddling samples may flip (clock noise).
+        let flip_tol = 2.0 / fast.completed.max(1) as f64 + 1e-12;
+        assert!((fast.slo_attainment - slow.slo_attainment).abs() <= flip_tol);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! The adaptive cache-sizing controller (paper §5.1–§5.4).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cache::CacheManager;
@@ -112,7 +113,9 @@ pub struct Decision {
 /// trains predictors on historical traces before deployment, §5.3/§6.1).
 pub struct GreenCacheController {
     cfg: GreenCacheConfig,
-    profile: ProfileTable,
+    /// Shared profile table — fleets hand every replica controller a
+    /// handle to one allocation instead of a deep copy per replica.
+    profile: Arc<ProfileTable>,
     ci_history: Vec<f64>,
     load_history: Vec<f64>,
     ci_predictor: CiPredictor,
@@ -130,7 +133,7 @@ impl GreenCacheController {
     /// are indexed absolutely).
     pub fn new(
         cfg: GreenCacheConfig,
-        profile: ProfileTable,
+        profile: impl Into<Arc<ProfileTable>>,
         ci_history: Vec<f64>,
         load_history: Vec<f64>,
         base_hour: usize,
@@ -138,7 +141,7 @@ impl GreenCacheController {
         let seed = cfg.seed;
         GreenCacheController {
             cfg,
-            profile,
+            profile: profile.into(),
             ci_history,
             load_history,
             ci_predictor: CiPredictor::new(),
@@ -156,7 +159,7 @@ impl GreenCacheController {
     /// between single-node and fleet cells.
     pub fn bootstrapped(
         cfg: GreenCacheConfig,
-        profile: ProfileTable,
+        profile: impl Into<Arc<ProfileTable>>,
         ci_history: Vec<f64>,
         load_history: Vec<f64>,
         base_hour: usize,

@@ -1,0 +1,273 @@
+//! Reproducible performance reports (`BENCH_SIM.json` / `BENCH_CACHE.json`).
+//!
+//! The day-scale simulator report runs the *same* decode-heavy scenario
+//! under both [`Stepping`] modes — the per-iteration reference loop and
+//! the event-driven fast-forward engine — so every report carries its own
+//! before/after: the measured speedup of the O(events) hot path over the
+//! O(decode tokens) one, on the exact commit that produced it. The cache
+//! report measures lookup+admit churn per eviction policy.
+//!
+//! Consumers: the `greencache bench` CLI subcommand (writes the repo-root
+//! `BENCH_*.json` the README performance table is seeded from, and which
+//! CI's `bench-smoke` job uploads as an artifact) and the `cargo bench`
+//! binaries (`rust/benches/sim.rs`, `rust/benches/cache.rs`), which print
+//! the same cases and honor `BENCH_JSON=<path>`.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::cache::{CacheManager, PolicyKind, KV_BYTES_PER_TOKEN_70B};
+use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
+use crate::metrics::Slo;
+use crate::rng::Rng;
+use crate::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig, Stepping};
+use crate::util::bench::{black_box, write_json, Bench};
+use crate::util::json::Json;
+use crate::workload::{ConversationGen, ConversationParams, Request, TaskKind};
+
+/// The decode-heavy day-scale scenario both stepping modes replay: long
+/// assistant replies (lognormal mean ≈ 630 output tokens) at a high
+/// request rate for the 70B/4×L40 platform, warm cache — the regime
+/// where the per-iteration loop spends almost all its passes on pure
+/// decode and fast-forward collapses them.
+#[derive(Debug, Clone)]
+pub struct SimBenchConfig {
+    /// Simulated horizon, hours (24 = the day-scale headline case).
+    pub hours: usize,
+    /// Poisson request rate, rps.
+    pub rps: f64,
+    /// Provisioned cache, TB.
+    pub cache_tb: f64,
+    /// Warm-up prompts before the measured day.
+    pub warm_prompts: usize,
+    /// Lognormal mu of reply lengths (6.2 → mean ≈ 630 decode tokens).
+    pub reply_mu: f64,
+    /// Workload seed.
+    pub seed: u64,
+}
+
+impl SimBenchConfig {
+    /// The standard decode-heavy scenario; `quick` shrinks the horizon
+    /// for CI smoke runs without changing the regime.
+    pub fn decode_heavy(quick: bool) -> Self {
+        SimBenchConfig {
+            hours: if quick { 2 } else { 24 },
+            rps: 0.5,
+            cache_tb: 16.0,
+            warm_prompts: if quick { 2_000 } else { 10_000 },
+            reply_mu: 6.2,
+            seed: 17,
+        }
+    }
+}
+
+/// Run the scenario once under `stepping`; returns `(completed,
+/// iterations)` — mode-independent by the equivalence contract, which
+/// the report asserts.
+pub fn run_day_scale(cfg: &SimBenchConfig, stepping: Stepping) -> (usize, u64) {
+    let sim_cfg = SimConfig {
+        cost: CostModel::llama70b_4xl40(),
+        power: PowerModel::default(),
+        slo: Slo::conv_70b(),
+        interval_s: 3600.0,
+        hours: cfg.hours,
+        seed: cfg.seed,
+        stepping,
+    };
+    let params = ConversationParams {
+        reply_mu: cfg.reply_mu,
+        ..ConversationParams::default()
+    };
+    let mut wl = ConversationGen::new(params, cfg.seed);
+    let mut cache = CacheManager::new(
+        (cfg.cache_tb * TB) as u64,
+        KV_BYTES_PER_TOKEN_70B,
+        PolicyKind::Lcs,
+    );
+    if cfg.warm_prompts > 0 {
+        warm_cache(&mut wl, &mut cache, cfg.warm_prompts, cfg.seed);
+    }
+    let r = simulate(
+        &sim_cfg,
+        &mut wl,
+        &|_| cfg.rps,
+        &|_| 124.0,
+        &mut cache,
+        CarbonAccountant::new(EmbodiedModel::default()),
+        &mut FixedController,
+    );
+    (r.completed, r.iterations)
+}
+
+fn mode_json(wall_s: f64, completed: usize, iterations: u64) -> Json {
+    Json::obj(vec![
+        ("wall_s", Json::Num(wall_s)),
+        ("completed", Json::Num(completed as f64)),
+        ("iterations", Json::Num(iterations as f64)),
+        (
+            "iterations_per_s",
+            Json::Num(if wall_s > 0.0 {
+                iterations as f64 / wall_s
+            } else {
+                0.0
+            }),
+        ),
+    ])
+}
+
+/// Measure the decode-heavy scenario under both stepping modes and
+/// return the before/after report (`speedup` = reference wall over
+/// fast-forward wall). Panics if the modes disagree on `completed` or
+/// `iterations` — the bench doubles as an equivalence smoke check.
+pub fn sim_report(quick: bool) -> Json {
+    let cfg = SimBenchConfig::decode_heavy(quick);
+    let mut walls = Vec::new();
+    for stepping in [Stepping::Reference, Stepping::FastForward] {
+        let t0 = Instant::now();
+        let (completed, iterations) = run_day_scale(&cfg, stepping);
+        let wall_s = t0.elapsed().as_secs_f64();
+        println!(
+            "bench sim/day_scale_decode_heavy[{:<12}] wall={wall_s:>8.3}s \
+             iterations={iterations} completed={completed} ({:.0} sim-iters/s)",
+            stepping.name(),
+            iterations as f64 / wall_s.max(1e-9),
+        );
+        walls.push((stepping, wall_s, completed, iterations));
+    }
+    let (_, ref_wall, ref_completed, ref_iters) = walls[0];
+    let (_, ff_wall, ff_completed, ff_iters) = walls[1];
+    assert_eq!(
+        (ref_completed, ref_iters),
+        (ff_completed, ff_iters),
+        "stepping modes diverged on the bench scenario"
+    );
+    let speedup = ref_wall / ff_wall.max(1e-9);
+    println!("    -> fast-forward speedup over reference: {speedup:.1}x");
+    Json::obj(vec![
+        ("bench", Json::Str("sim".into())),
+        ("schema", Json::Str(BENCH_SCHEMA.into())),
+        ("quick", Json::Bool(quick)),
+        (
+            "config",
+            Json::obj(vec![
+                ("hours", Json::Num(cfg.hours as f64)),
+                ("rps", Json::Num(cfg.rps)),
+                ("cache_tb", Json::Num(cfg.cache_tb)),
+                ("warm_prompts", Json::Num(cfg.warm_prompts as f64)),
+                ("reply_mu", Json::Num(cfg.reply_mu)),
+                ("seed", Json::Num(cfg.seed as f64)),
+            ]),
+        ),
+        ("reference", mode_json(ref_wall, ref_completed, ref_iters)),
+        ("fast_forward", mode_json(ff_wall, ff_completed, ff_iters)),
+        ("speedup", Json::Num(speedup)),
+    ])
+}
+
+/// Schema tag stamped into every report (bump when fields change).
+pub const BENCH_SCHEMA: &str = "greencache-bench-v1";
+
+fn churn_request(ctx: u64, version: u32, context: u32) -> Request {
+    Request {
+        id: 0,
+        task: TaskKind::Conversation,
+        context_id: ctx,
+        context_version: version,
+        context_tokens: context,
+        new_tokens: 50,
+        output_tokens: 100,
+        arrival_s: 0.0,
+    }
+}
+
+/// lookup+admit churn over `n_ops` operations on a cache holding ~8k
+/// entries at steady state (shared with `rust/benches/cache.rs`).
+pub fn cache_churn(policy: PolicyKind, n_ops: usize, seed: u64) -> u64 {
+    let mut m = CacheManager::new(8_000 * 1_000, 1_000, policy);
+    let mut rng = Rng::new(seed);
+    let mut now = 0.0;
+    let mut acc = 0u64;
+    for _ in 0..n_ops {
+        now += 0.01;
+        let ctx = rng.below(20_000);
+        let context = rng.range(100, 900) as u32;
+        let r = churn_request(ctx, rng.below(8) as u32, context);
+        let h = m.lookup(&r, now);
+        acc += h.hit_tokens as u64;
+        m.admit(&r, context + 150, None, now);
+    }
+    acc + m.stats().evictions
+}
+
+/// Measure per-policy churn throughput and return the report.
+pub fn cache_report(quick: bool) -> Json {
+    let n_ops = if quick { 5_000 } else { 20_000 };
+    // Quick (CI smoke) profile: one measured pass per case.
+    let mut b = if quick {
+        Bench::new("cache").once()
+    } else {
+        Bench::new("cache")
+    };
+    for policy in [
+        PolicyKind::Fifo,
+        PolicyKind::Lru,
+        PolicyKind::Lfu,
+        PolicyKind::Lcs,
+    ] {
+        let r = b.case(&format!("churn_{}k_ops_{}", n_ops / 1_000, policy.name()), || {
+            black_box(cache_churn(policy, n_ops, 42))
+        });
+        println!(
+            "    -> {:.0} lookup+admit ops/s",
+            n_ops as f64 / r.mean.as_secs_f64()
+        );
+    }
+    let mut j = match b.to_json() {
+        Json::Object(m) => m,
+        _ => unreachable!("Bench::to_json returns an object"),
+    };
+    j.insert("bench".into(), Json::Str("cache".into()));
+    j.insert("schema".into(), Json::Str(BENCH_SCHEMA.into()));
+    j.insert("quick".into(), Json::Bool(quick));
+    j.insert("ops_per_case".into(), Json::Num(n_ops as f64));
+    Json::Object(j)
+}
+
+/// Write `BENCH_SIM.json` and `BENCH_CACHE.json` under `dir` and return
+/// their paths. This is what `greencache bench` runs; CI's `bench-smoke`
+/// job uploads the results as artifacts.
+pub fn write_reports(dir: &Path, quick: bool) -> anyhow::Result<(PathBuf, PathBuf)> {
+    let sim_path = dir.join("BENCH_SIM.json");
+    let cache_path = dir.join("BENCH_CACHE.json");
+    write_json(&sim_path, &sim_report(quick))?;
+    write_json(&cache_path, &cache_report(quick))?;
+    Ok((sim_path, cache_path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sim_report_has_speedup_and_equal_counts() {
+        // Tiny variant of the report scenario so the test stays fast;
+        // the in-report assert_eq already checks mode agreement.
+        let cfg = SimBenchConfig {
+            hours: 1,
+            warm_prompts: 500,
+            ..SimBenchConfig::decode_heavy(true)
+        };
+        let a = run_day_scale(&cfg, Stepping::Reference);
+        let b = run_day_scale(&cfg, Stepping::FastForward);
+        assert_eq!(a, b);
+        assert!(a.0 > 0, "bench scenario must complete requests");
+    }
+
+    #[test]
+    fn cache_churn_is_deterministic() {
+        let a = cache_churn(PolicyKind::Lcs, 2_000, 7);
+        let b = cache_churn(PolicyKind::Lcs, 2_000, 7);
+        assert_eq!(a, b);
+        assert!(a > 0);
+    }
+}

@@ -126,6 +126,7 @@ fn rate_point(task: Task, rps: f64, cache_tb: f64, seed: u64, quick: bool) -> Si
         interval_s: 3600.0,
         hours: if quick { 1 } else { 2 },
         seed,
+        stepping: Stepping::FastForward,
     };
     let mut wl = task.make_workload(seed);
     let mut cache = CacheManager::new(
@@ -241,6 +242,7 @@ pub fn fig7(quick: bool) -> Csv {
                 interval_s: 3600.0,
                 hours: if quick { 1 } else { 2 },
                 seed: 54,
+                stepping: Stepping::FastForward,
             };
             let mut wl = Task::Conversation.make_workload(54);
             let mut cache = CacheManager::new(
@@ -295,6 +297,7 @@ pub fn fig8(quick: bool) -> Csv {
             interval_s: 3600.0,
             hours: if quick { 1 } else { 2 },
             seed: 55,
+            stepping: Stepping::FastForward,
         };
         let mut wl = Task::Conversation.make_workload(55);
         let mut cache =
@@ -349,6 +352,7 @@ pub fn fig8(quick: bool) -> Csv {
             interval_s: 3600.0,
             hours: 1,
             seed: 56 + h as u64,
+            stepping: Stepping::FastForward,
         };
         let run = |cache_tb: f64, seed: u64| {
             let mut wl = Task::Conversation.make_workload(seed);

@@ -25,7 +25,7 @@ pub fn fig11(quick: bool) -> Csv {
     println!("Fig 11 — profiler heatmaps (ES-grid carbon savings; ratio >1 = saving)");
     for task in [Task::Conversation, Task::Doc04] {
         let model = Model::Llama70B;
-        let table = profiles.get(model, task, PolicyKind::Lcs).clone();
+        let table = profiles.get_shared(model, task, PolicyKind::Lcs);
         let es_ci = crate::carbon::Ci(Grid::Es.params().mean);
         let embodied = model.embodied();
         println!("  task {}", task.name());

@@ -12,6 +12,7 @@
 //! multi-replica clusters via [`crate::cluster`].
 
 pub mod ablation;
+pub mod bench;
 pub mod characterization;
 pub mod evaluation;
 pub mod fleet;
@@ -23,7 +24,7 @@ use crate::coordinator::{CiSource, GreenCacheConfig, GreenCacheController, LoadS
 use crate::load::LoadTrace;
 use crate::metrics::Slo;
 use crate::profiler::{profile, ProfileTable, ProfilerConfig};
-use crate::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig, SimResult};
+use crate::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig, SimResult, Stepping};
 use crate::workload::{
     ConversationGen, ConversationParams, DocumentGen, DocumentParams, TaskKind, Workload,
 };
@@ -289,11 +290,13 @@ pub struct DayResult {
 }
 
 /// Profile cache: profiling is the expensive step and identical across
-/// baselines/grids, so share per (model, task, policy). `Clone` lets the
-/// scenario-matrix runner hand each worker thread a prewarmed copy.
+/// baselines/grids, so share per (model, task, policy). Tables are held
+/// behind `Arc` so per-replica controllers borrow one shared profile
+/// instead of deep-copying it, and `Clone` stays cheap when the
+/// scenario-matrix runner hands each worker thread a prewarmed copy.
 #[derive(Clone)]
 pub struct ProfileStore {
-    entries: std::collections::HashMap<(Model, Task, PolicyKind), ProfileTable>,
+    entries: std::collections::HashMap<(Model, Task, PolicyKind), std::sync::Arc<ProfileTable>>,
     quick: bool,
 }
 
@@ -306,10 +309,17 @@ impl ProfileStore {
         }
     }
 
-    /// The profile table for a (model, task, policy), built on first use.
-    pub fn get(&mut self, model: Model, task: Task, policy: PolicyKind) -> &ProfileTable {
+    /// Shared handle to the (model, task, policy) table, built on first
+    /// use — every consumer (per-replica controllers, exhibits, the
+    /// matrix prewarm) references one allocation.
+    pub fn get_shared(
+        &mut self,
+        model: Model,
+        task: Task,
+        policy: PolicyKind,
+    ) -> std::sync::Arc<ProfileTable> {
         let quick = self.quick;
-        self.entries.entry((model, task, policy)).or_insert_with(|| {
+        let entry = self.entries.entry((model, task, policy)).or_insert_with(|| {
             let peak = model.peak_rps(task.kind());
             let sizes: Vec<u32> = if quick {
                 (0..=model.max_cache_tb()).step_by(4).collect()
@@ -329,8 +339,11 @@ impl ProfileStore {
                 window_hours: 1,
                 seed: 7,
             };
-            profile(&cfg, task.kind(), &|seed| task.make_workload(seed))
-        })
+            std::sync::Arc::new(profile(&cfg, task.kind(), &|seed| {
+                task.make_workload(seed)
+            }))
+        });
+        std::sync::Arc::clone(entry)
     }
 }
 
@@ -388,12 +401,13 @@ pub fn run_day(sc: &DayScenario, profiles: &mut ProfileStore) -> DayResult {
         interval_s: sc.interval_s,
         hours: sc.hours,
         seed: sc.seed,
+        stepping: Stepping::FastForward,
     };
     let accountant = CarbonAccountant::new(embodied.clone());
 
     let adaptive = matches!(sc.baseline, Baseline::GreenCache | Baseline::LruOptimal);
     let (sim, decisions) = if adaptive {
-        let profile = profiles.get(model, sc.task, policy).clone();
+        let profile = profiles.get_shared(model, sc.task, policy);
         let mut gc_cfg = GreenCacheConfig::paper_defaults(
             model.max_cache_tb(),
             embodied,

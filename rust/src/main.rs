@@ -15,6 +15,7 @@
 //!                     [--seed S] [--quick]
 //! greencache profile  [--task conv|doc04|doc07] [--quick]
 //! greencache decide   [--grid ES] [--hour H]
+//! greencache bench    [--quick] [--out DIR]
 //! greencache info
 //! ```
 
@@ -408,7 +409,7 @@ fn cmd_profile(args: &Args) -> greencache::Result<()> {
     let task = parse_task(args.get("task").unwrap_or("conv"));
     let quick = args.bool("quick");
     let mut profiles = ProfileStore::new(quick);
-    let table = profiles.get(Model::Llama70B, task, PolicyKind::Lcs).clone();
+    let table = profiles.get_shared(Model::Llama70B, task, PolicyKind::Lcs);
     println!("profile for {} (rates x sizes):", task.name());
     print!("{:>8}", "rps\\TB");
     for &s in &table.sizes_tb {
@@ -430,9 +431,8 @@ fn cmd_decide(args: &Args) -> greencache::Result<()> {
     use greencache::coordinator::{GreenCacheConfig, GreenCacheController};
     let grid = parse_grid(args.get("grid").unwrap_or("ES"));
     let mut profiles = ProfileStore::new(true);
-    let profile = profiles
-        .get(Model::Llama70B, Task::Conversation, PolicyKind::Lcs)
-        .clone();
+    let profile =
+        profiles.get_shared(Model::Llama70B, Task::Conversation, PolicyKind::Lcs);
     let ci_hist = grid.trace(4, 1).hourly;
     let load_hist = greencache::load::LoadTrace::azure_like(4, 0.9, 1).hourly_rps;
     let mut ctl = GreenCacheController::new(
@@ -454,6 +454,24 @@ fn cmd_decide(args: &Args) -> greencache::Result<()> {
     Ok(())
 }
 
+/// Run the performance reports and write `BENCH_SIM.json` /
+/// `BENCH_CACHE.json` (repo root by default; `--out` overrides). The sim
+/// report replays the same decode-heavy day under the per-iteration
+/// reference engine and the fast-forward engine, so the files carry the
+/// measured before/after speedup of the simulator hot path.
+fn cmd_bench(args: &Args) -> greencache::Result<()> {
+    let quick = args.bool("quick");
+    let out = std::path::PathBuf::from(args.get("out").unwrap_or("."));
+    anyhow::ensure!(out.is_dir(), "--out {} is not a directory", out.display());
+    let (sim_path, cache_path) = greencache::experiments::bench::write_reports(&out, quick)?;
+    println!(
+        "wrote {} and {}",
+        sim_path.display(),
+        cache_path.display()
+    );
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
@@ -465,10 +483,11 @@ fn main() {
         "matrix" => cmd_matrix(&args),
         "profile" => cmd_profile(&args),
         "decide" => cmd_decide(&args),
+        "bench" => cmd_bench(&args),
         "info" => cmd_info(),
         _ => {
             println!(
-                "usage: greencache <serve|simulate|cluster|matrix|profile|decide|info> [--flags]"
+                "usage: greencache <serve|simulate|cluster|matrix|profile|decide|bench|info> [--flags]"
             );
             println!("see rust/src/main.rs docs for flags");
             Ok(())

@@ -11,7 +11,7 @@
 use crate::cache::{CacheManager, PolicyKind};
 use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
 use crate::metrics::Slo;
-use crate::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig};
+use crate::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig, Stepping};
 use crate::workload::TaskKind;
 
 /// One profiled (rate, size) cell.
@@ -189,6 +189,7 @@ pub fn profile(
                 interval_s: 3600.0,
                 hours: cfg.window_hours.max(1),
                 seed,
+                stepping: Stepping::FastForward,
             };
             // CI is irrelevant for the performance/power profile; carbon
             // coefficients are assembled later from (power, CI).

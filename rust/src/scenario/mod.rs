@@ -154,6 +154,7 @@ impl ScenarioSpec {
             quick: self.quick,
             fixed_rps: self.fixed_rps,
             fixed_ci: self.fixed_ci,
+            stepping: crate::sim::Stepping::default(),
         })
     }
 

@@ -144,7 +144,7 @@ impl MatrixRunner {
         for s in specs {
             if s.is_adaptive() {
                 let store = if s.quick { &mut master_quick } else { &mut master_full };
-                store.get(s.model, s.task, s.effective_policy());
+                store.get_shared(s.model, s.task, s.effective_policy());
             }
         }
 

@@ -16,7 +16,7 @@ mod engine;
 pub use cost::CostModel;
 pub use engine::{
     simulate, warm_cache, Controller, FixedController, HourSample,
-    IntervalObservation, ReplicaEngine, SimConfig, SimResult,
+    IntervalObservation, ReplicaEngine, SimConfig, SimResult, Stepping,
 };
 
 #[cfg(test)]
@@ -34,6 +34,17 @@ mod tests {
         warm: usize,
         seed: u64,
     ) -> SimResult {
+        sim_hours_stepped(hours, rps, cache_tb, warm, seed, Stepping::FastForward)
+    }
+
+    fn sim_hours_stepped(
+        hours: usize,
+        rps: f64,
+        cache_tb: f64,
+        warm: usize,
+        seed: u64,
+        stepping: Stepping,
+    ) -> SimResult {
         let cfg = SimConfig {
             cost: CostModel::llama70b_4xl40(),
             power: PowerModel::default(),
@@ -41,6 +52,7 @@ mod tests {
             interval_s: 3600.0,
             hours,
             seed,
+            stepping,
         };
         let mut wl = ConversationGen::new(ConversationParams::default(), seed);
         let mut cache = CacheManager::new(
@@ -162,6 +174,38 @@ mod tests {
     }
 
     #[test]
+    fn fast_forward_matches_reference_smoke() {
+        // The full seeded matrix lives in rust/tests/engine_equivalence.rs;
+        // this is the in-crate canary. Counts are exact in both modes;
+        // float aggregates carry the documented k·x-vs-repeated-add
+        // tolerance (see the engine module docs).
+        let fast = sim_hours_stepped(1, 0.5, 8.0, 2_000, 11, Stepping::FastForward);
+        let slow = sim_hours_stepped(1, 0.5, 8.0, 2_000, 11, Stepping::Reference);
+        assert_eq!(fast.completed, slow.completed);
+        assert_eq!(fast.iterations, slow.iterations);
+        assert_eq!(fast.slo.total(), slow.slo.total());
+        // At most 2 threshold-straddling samples may flip (clock noise).
+        let flip_tol = 2.0 / fast.slo.total().max(1) as f64 + 1e-12;
+        assert!(
+            (fast.slo.attainment() - slow.slo.attainment()).abs() <= flip_tol,
+            "attainment {} vs {}",
+            fast.slo.attainment(),
+            slow.slo.attainment()
+        );
+        assert!(
+            (fast.mean_ttft_s - slow.mean_ttft_s).abs() < 1e-6,
+            "ttft {} vs {}",
+            fast.mean_ttft_s,
+            slow.mean_ttft_s
+        );
+        let (a, b) = (
+            fast.accountant.breakdown().total_g(),
+            slow.accountant.breakdown().total_g(),
+        );
+        assert!((a - b).abs() <= 1e-6 * b.abs().max(1.0), "carbon {a} vs {b}");
+    }
+
+    #[test]
     fn resize_controller_hook_fires() {
         struct Shrink(usize);
         impl Controller for Shrink {
@@ -182,6 +226,7 @@ mod tests {
             interval_s: 1800.0, // half-hour decisions (Fig. 18 regime)
             hours: 1,
             seed: 9,
+            stepping: Stepping::FastForward,
         };
         let mut wl = ConversationGen::new(ConversationParams::default(), 9);
         let mut cache =

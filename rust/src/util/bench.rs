@@ -1,11 +1,18 @@
 //! Micro-bench harness (criterion is unavailable offline).
 //!
 //! `cargo bench` targets are declared with `harness = false` and call
-//! [`Bench::run`]: warmup, then timed iterations until a wall-clock budget
-//! or iteration cap, reporting mean / p50 / p95 / min and throughput. The
-//! output format is stable so results docs can quote it.
+//! [`Bench::case`]: warmup, then timed iterations until a wall-clock
+//! budget or iteration cap, reporting mean / p50 / p95 / min and
+//! throughput. The printed format is stable so results docs can quote
+//! it, and every group serializes to machine-readable JSON
+//! ([`Bench::to_json`]) — bench binaries honor a `BENCH_JSON=<path>`
+//! environment variable ([`emit_json_env`]), and `greencache bench`
+//! writes the repo-root `BENCH_SIM.json` / `BENCH_CACHE.json` the
+//! README performance table is seeded from.
 
 use std::time::{Duration, Instant};
+
+use super::json::Json;
 
 /// One benchmark group; prints results as it goes.
 pub struct Bench {
@@ -90,9 +97,66 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// One-shot profile: no warmup, a single measured iteration. For
+    /// end-to-end cases whose single run already takes seconds (the
+    /// day-scale reference-engine case) — statistics would cost minutes.
+    pub fn once(mut self) -> Self {
+        self.min_iters = 1;
+        self.budget = Duration::ZERO;
+        self.warmup = 0;
+        self
+    }
+
     /// All cases measured so far.
     pub fn results(&self) -> &[CaseResult] {
         &self.results
+    }
+
+    /// Machine-readable form of the whole group:
+    /// `{"group": ..., "cases": [{"name", "iters", "mean_s", ...}]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("group", Json::Str(self.name.clone())),
+            (
+                "cases",
+                Json::Array(self.results.iter().map(CaseResult::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// Write a bench report to `path` (trailing newline, deterministic key
+/// order via [`Json`]).
+pub fn write_json(path: &std::path::Path, report: &Json) -> anyhow::Result<()> {
+    std::fs::write(path, report.to_string() + "\n")?;
+    Ok(())
+}
+
+/// If `BENCH_JSON` is set in the environment, write `report` there.
+/// Every bench binary calls this last, so
+/// `BENCH_JSON=out.json cargo bench --bench sim` leaves a
+/// machine-readable artifact next to the printed lines.
+pub fn emit_json_env(report: &Json) {
+    if let Ok(path) = std::env::var("BENCH_JSON") {
+        if !path.is_empty() {
+            if let Err(e) = write_json(std::path::Path::new(&path), report) {
+                eprintln!("bench: could not write BENCH_JSON={path}: {e:#}");
+            }
+        }
+    }
+}
+
+impl CaseResult {
+    /// Machine-readable form of one case (durations in seconds).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.mean.as_secs_f64())),
+            ("p50_s", Json::Num(self.p50.as_secs_f64())),
+            ("p95_s", Json::Num(self.p95.as_secs_f64())),
+            ("min_s", Json::Num(self.min.as_secs_f64())),
+        ])
     }
 }
 
@@ -116,5 +180,29 @@ mod tests {
         assert!(r.iters >= 5);
         assert!(r.min <= r.p50 && r.p50 <= r.p95);
         assert_eq!(r.name, "t/noop");
+    }
+
+    #[test]
+    fn once_measures_exactly_one_iteration() {
+        let mut b = Bench::new("t").once();
+        let r = b.case("single", || 2 * 2).clone();
+        assert_eq!(r.iters, 1);
+        assert_eq!(r.mean, r.p50);
+    }
+
+    #[test]
+    fn json_round_trips_cases() {
+        let mut b = Bench::new("grp").once();
+        b.case("a", || 1);
+        b.case("b", || 2);
+        let j = b.to_json();
+        assert_eq!(j.get("group").unwrap().as_str().unwrap(), "grp");
+        let cases = j.get("cases").unwrap().as_array().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("name").unwrap().as_str().unwrap(), "grp/a");
+        assert!(cases[0].get("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+        // Serialized form parses back (the artifact is real JSON).
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
     }
 }

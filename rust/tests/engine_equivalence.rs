@@ -1,0 +1,268 @@
+//! Seeded equivalence suite: the event-driven fast-forward engine
+//! ([`Stepping::FastForward`]) against the per-iteration reference loop
+//! ([`Stepping::Reference`]), side by side on identical scenarios.
+//!
+//! Contract (documented in `sim/engine.rs`'s module docs):
+//!
+//! * **exact** — `completed`, `iterations` (logical scheduler
+//!   iterations), SLO sample counts, token hit accounting (integer
+//!   cache state), interval counts and per-interval completions. The
+//!   two modes take identical discrete decisions at identical logical
+//!   iterations.
+//! * **tolerance** — float aggregates (latency means, attainment,
+//!   carbon). Fast-forward replaces `k` repeated additions with one
+//!   multiplication (`k·x` vs `x+x+…+x`), which differs in the final
+//!   ULPs. Energy/carbon integrals agree to ~1e-12 relative; latency
+//!   samples inherit the *clock* difference, which queueing compounds
+//!   over hundreds of thousands of iterations to nanosecond-order
+//!   simulated time (measured ≲5e-9 relative on 2-hour high-load runs),
+//!   so latency means are compared at 1e-7 relative. A latency sample
+//!   landing within that noise band of an SLO threshold could flip its
+//!   verdict, so attainment is allowed to differ by up to 2 samples —
+//!   a real divergence would first break the exact iteration/count
+//!   asserts above.
+
+use greencache::cache::{CacheManager, PolicyKind, KV_BYTES_PER_TOKEN_70B};
+use greencache::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
+use greencache::experiments::Task;
+use greencache::metrics::Slo;
+use greencache::sim::{
+    simulate, warm_cache, Controller, CostModel, FixedController, IntervalObservation,
+    SimConfig, SimResult, Stepping,
+};
+
+/// Relative tolerance for float aggregates (see the module docs above:
+/// measured divergence is ≲5e-9 on the worst scenario; 1e-7 leaves
+/// margin without masking real bugs, which break the exact asserts
+/// first).
+const REL_TOL: f64 = 1e-7;
+/// Absolute floor for near-zero comparisons.
+const ABS_TOL: f64 = 1e-9;
+
+/// One scenario both stepping modes replay.
+struct Scenario {
+    label: &'static str,
+    task: Task,
+    hours: usize,
+    interval_s: f64,
+    rps: f64,
+    cache_tb: f64,
+    warm: usize,
+    seed: u64,
+    /// Alternate the cache between two capacities at interval
+    /// boundaries (exercises resize + power-draw changes mid-run).
+    toggle_resize: bool,
+}
+
+impl Scenario {
+    fn conv(label: &'static str) -> Self {
+        Scenario {
+            label,
+            task: Task::Conversation,
+            hours: 1,
+            interval_s: 3600.0,
+            rps: 0.5,
+            cache_tb: 16.0,
+            warm: 3_000,
+            seed: 101,
+            toggle_resize: false,
+        }
+    }
+}
+
+/// Interval controller that flips the provisioned capacity between two
+/// sizes — a deterministic stand-in for the GreenCache controller that
+/// still forces eviction storms and power-model changes at boundaries.
+struct ToggleResize {
+    hi_bytes: u64,
+    lo_bytes: u64,
+    fired: usize,
+}
+
+impl Controller for ToggleResize {
+    fn on_interval(&mut self, _h: usize, _o: &IntervalObservation, cache: &mut CacheManager) {
+        self.fired += 1;
+        let cap = if self.fired % 2 == 1 {
+            self.lo_bytes
+        } else {
+            self.hi_bytes
+        };
+        cache.resize(cap, 0.0);
+    }
+}
+
+fn run(sc: &Scenario, stepping: Stepping) -> SimResult {
+    let cfg = SimConfig {
+        cost: CostModel::llama70b_4xl40(),
+        power: PowerModel::default(),
+        slo: Slo::conv_70b(),
+        interval_s: sc.interval_s,
+        hours: sc.hours,
+        seed: sc.seed,
+        stepping,
+    };
+    let mut wl = sc.task.make_workload(sc.seed);
+    let mut cache = CacheManager::new(
+        (sc.cache_tb * TB) as u64,
+        KV_BYTES_PER_TOKEN_70B,
+        PolicyKind::Lcs,
+    );
+    if sc.warm > 0 && sc.cache_tb > 0.0 {
+        warm_cache(wl.as_mut(), &mut cache, sc.warm, sc.seed);
+    }
+    let acc = CarbonAccountant::new(EmbodiedModel::default());
+    let rate = |_: usize| sc.rps;
+    // A mildly varying CI so interval pricing is exercised.
+    let ci = |h: usize| 80.0 + 40.0 * (h % 3) as f64;
+    if sc.toggle_resize {
+        let mut ctl = ToggleResize {
+            hi_bytes: (sc.cache_tb * TB) as u64,
+            lo_bytes: TB as u64,
+            fired: 0,
+        };
+        simulate(&cfg, wl.as_mut(), &rate, &ci, &mut cache, acc, &mut ctl)
+    } else {
+        simulate(
+            &cfg,
+            wl.as_mut(),
+            &rate,
+            &ci,
+            &mut cache,
+            acc,
+            &mut FixedController,
+        )
+    }
+}
+
+fn assert_close(a: f64, b: f64, what: &str, label: &str) {
+    let tol = REL_TOL * a.abs().max(b.abs()) + ABS_TOL;
+    assert!(
+        (a - b).abs() <= tol,
+        "{label}: {what} diverged: fast-forward {a} vs reference {b}"
+    );
+}
+
+fn assert_equivalent(sc: &Scenario) {
+    let fast = run(sc, Stepping::FastForward);
+    let slow = run(sc, Stepping::Reference);
+    let label = sc.label;
+
+    // Discrete state: exact.
+    assert_eq!(fast.completed, slow.completed, "{label}: completed");
+    assert_eq!(fast.iterations, slow.iterations, "{label}: iterations");
+    assert_eq!(fast.slo.total(), slow.slo.total(), "{label}: slo samples");
+    assert_eq!(
+        fast.token_hit_rate, slow.token_hit_rate,
+        "{label}: token hit accounting is integer state and must be identical"
+    );
+    assert_eq!(fast.hours.len(), slow.hours.len(), "{label}: intervals");
+    for (f, s) in fast.hours.iter().zip(&slow.hours) {
+        assert_eq!(f.completed, s.completed, "{label}: hour {} completions", f.hour);
+        assert_eq!(f.cache_bytes, s.cache_bytes, "{label}: hour {} cache", f.hour);
+        assert_close(f.carbon_g, s.carbon_g, "hourly carbon", label);
+    }
+
+    // Float aggregates: documented tolerance. Attainment may differ by
+    // at most 2 threshold-straddling samples (see module docs).
+    let flip_tol = 2.0 / fast.slo.total().max(1) as f64 + 1e-12;
+    assert!(
+        (fast.slo.attainment() - slow.slo.attainment()).abs() <= flip_tol,
+        "{label}: attainment diverged beyond 2 samples: {} vs {}",
+        fast.slo.attainment(),
+        slow.slo.attainment()
+    );
+    assert_close(fast.mean_ttft_s, slow.mean_ttft_s, "mean ttft", label);
+    assert_close(fast.mean_tpot_s, slow.mean_tpot_s, "mean tpot", label);
+    let (bf, bs) = (fast.accountant.breakdown(), slow.accountant.breakdown());
+    assert_close(bf.operational_g, bs.operational_g, "operational carbon", label);
+    assert_close(bf.cache_embodied_g, bs.cache_embodied_g, "cache embodied", label);
+    assert_close(bf.other_embodied_g, bs.other_embodied_g, "other embodied", label);
+    assert_close(bf.total_g(), bs.total_g(), "total carbon", label);
+
+    assert!(fast.completed > 0, "{label}: scenario must complete work");
+}
+
+#[test]
+fn conversation_warm_cache_steady_load() {
+    assert_equivalent(&Scenario::conv("conv-warm-steady"));
+}
+
+#[test]
+fn conversation_no_cache() {
+    assert_equivalent(&Scenario {
+        cache_tb: 0.0,
+        warm: 0,
+        seed: 102,
+        ..Scenario::conv("conv-no-cache")
+    });
+}
+
+#[test]
+fn conversation_decode_heavy() {
+    // The bench regime: long replies, most iterations are pure decode —
+    // the stretch the fast-forward engine collapses hardest.
+    let cfg = greencache::experiments::bench::SimBenchConfig {
+        hours: 1,
+        warm_prompts: 1_000,
+        ..greencache::experiments::bench::SimBenchConfig::decode_heavy(true)
+    };
+    let a = greencache::experiments::bench::run_day_scale(&cfg, Stepping::FastForward);
+    let b = greencache::experiments::bench::run_day_scale(&cfg, Stepping::Reference);
+    assert_eq!(a, b, "decode-heavy (completed, iterations) must match");
+}
+
+#[test]
+fn document_workload_zipf() {
+    assert_equivalent(&Scenario {
+        task: Task::Doc04,
+        rps: 0.25,
+        cache_tb: 8.0,
+        warm: 2_000,
+        seed: 103,
+        ..Scenario::conv("doc-zipf-0.4")
+    });
+}
+
+#[test]
+fn idle_gaps_between_sparse_arrivals() {
+    // ~0.02 rps leaves multi-minute idle gaps: exercises idle_advance
+    // interleaved with fast-forward stretches and empty intervals.
+    assert_equivalent(&Scenario {
+        hours: 2,
+        rps: 0.02,
+        warm: 500,
+        seed: 104,
+        ..Scenario::conv("idle-gaps")
+    });
+}
+
+#[test]
+fn overload_sustained_super_capacity() {
+    // ~1.4× the no-cache capacity: the backlog grows all hour and drains
+    // past the horizon — the regime whose per-iteration cost motivated
+    // the fast-forward engine.
+    let sc = Scenario {
+        rps: 1.5,
+        cache_tb: 0.0,
+        warm: 0,
+        seed: 105,
+        ..Scenario::conv("overload")
+    };
+    assert_equivalent(&sc);
+    // Drain semantics: everything injected still completes.
+    let r = run(&sc, Stepping::FastForward);
+    assert_eq!(r.slo.total(), r.completed);
+}
+
+#[test]
+fn resize_controller_at_half_hour_intervals() {
+    // Sub-hour decision boundaries + capacity toggling: stretches must
+    // stop at every interval crossing so the controller observes and
+    // resizes at the same instants in both modes.
+    assert_equivalent(&Scenario {
+        interval_s: 1800.0,
+        toggle_resize: true,
+        seed: 106,
+        ..Scenario::conv("toggle-resize-30min")
+    });
+}
