@@ -6,7 +6,7 @@
 //! `BENCH_CACHE.json`); the resize-storm case is local. Set
 //! `BENCH_JSON=<path>` to write the machine-readable report.
 
-use greencache::cache::{CacheManager, PolicyKind};
+use greencache::cache::{LocalStore, PolicyKind};
 use greencache::experiments::bench::cache_report;
 use greencache::rng::Rng;
 use greencache::util::bench::{black_box, emit_json_env, Bench};
@@ -31,7 +31,7 @@ fn main() {
     // Resize storms: shrink/grow cycles (the coordinator's hourly path).
     let mut b = Bench::new("cache");
     b.case("resize_cycle_lcs", || {
-        let mut m = CacheManager::new(8_000 * 1_000, 1_000, PolicyKind::Lcs);
+        let mut m = LocalStore::new(8_000 * 1_000, 1_000, PolicyKind::Lcs);
         let mut rng = Rng::new(7);
         let mut now = 0.0;
         for _ in 0..5_000 {

@@ -8,7 +8,7 @@
 //! write the machine-readable report (same shape as the repo-root
 //! `BENCH_SIM.json` that `greencache bench` maintains).
 
-use greencache::cache::{CacheManager, PolicyKind, KV_BYTES_PER_TOKEN_70B};
+use greencache::cache::{LocalStore, PolicyKind, KV_BYTES_PER_TOKEN_70B};
 use greencache::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
 use greencache::experiments::bench::sim_report;
 use greencache::metrics::Slo;
@@ -29,7 +29,7 @@ fn day(hours: usize, rps: f64, cache_tb: f64, warm: usize, seed: u64) -> (usize,
         stepping: Stepping::FastForward,
     };
     let mut wl = ConversationGen::new(ConversationParams::default(), seed);
-    let mut cache = CacheManager::new(
+    let mut cache = LocalStore::new(
         (cache_tb * TB) as u64,
         KV_BYTES_PER_TOKEN_70B,
         PolicyKind::Lcs,
@@ -65,7 +65,7 @@ fn main() {
     b.case("warmup_30k_prompts", || {
         let mut wl = ConversationGen::new(ConversationParams::default(), 3);
         let mut cache =
-            CacheManager::new(16 * TB as u64, KV_BYTES_PER_TOKEN_70B, PolicyKind::Lcs);
+            LocalStore::new(16 * TB as u64, KV_BYTES_PER_TOKEN_70B, PolicyKind::Lcs);
         warm_cache(&mut wl, &mut cache, 30_000, 3);
         black_box(cache.len())
     });

@@ -1,17 +1,31 @@
-//! KV context-cache manager (the LMCache analogue, §5.5).
+//! KV context-cache layer (the LMCache analogue, §5.5).
 //!
-//! Tracks one [`Entry`] per reusable context (conversation / document),
-//! accounts provisioned bytes against a resizable capacity (1 TB
-//! granularity in the coordinator), and evicts by a pluggable
-//! [`PolicyKind`] — FIFO / LRU / LFU / the paper's LCS. Hit accounting
-//! uses the paper's token-level definition (§6.3.2): *hit rate = tokens
-//! reused from cache ÷ total input tokens*.
+//! The [`CacheStore`] trait is the one cache API every layer above
+//! programs against (see `store.rs` for the contract); [`LocalStore`] is
+//! its first implementation — one [`Entry`] per reusable context
+//! (conversation / document), provisioned bytes accounted against a
+//! resizable capacity (1 TB granularity in the coordinator), eviction by
+//! a pluggable [`PolicyKind`] — FIFO / LRU / LFU / the paper's LCS.
+//! [`TieredStore`] adds a DRAM hot tier, [`SharedStore`] a fleet-level
+//! pool with per-replica handles; the [`CacheVariant`] axis sweeps them.
+//! Hit accounting uses the paper's token-level definition (§6.3.2):
+//! *hit rate = tokens reused from cache ÷ total input tokens*.
+//!
+//! Numeric compatibility: routing [`LocalStore`] through the trait (the
+//! engine holds `Box<dyn CacheStore>`) changes no arithmetic — pre-trait
+//! golden tables reproduce byte-identically for `local` cells.
 
 mod entry;
 mod policy;
+mod shared;
+mod store;
+mod tiered;
 
 pub use entry::Entry;
 pub use policy::{EvictionIndex, PolicyKind};
+pub use shared::{SharedHandle, SharedStore};
+pub use store::{CacheStore, CacheVariant, TierBytes};
+pub use tiered::{TieredStore, TIERED_HOT_FRACTION};
 
 use crate::workload::Request;
 use std::collections::HashMap;
@@ -29,12 +43,16 @@ pub const KV_BYTES_PER_TOKEN_8B: u64 = 131_072;
 pub struct HitInfo {
     /// Context tokens served from cache (prefix of the request's context).
     pub hit_tokens: u32,
+    /// Of [`HitInfo::hit_tokens`], how many were served from a DRAM hot
+    /// tier — those skip the SSD KV-load latency penalty in the engine.
+    /// Always 0 for single-tier stores.
+    pub hot_tokens: u32,
     /// Whether any prefix was found.
     pub hit: bool,
 }
 
 /// Aggregate statistics (Table 3 + Fig. 6b feed off these).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Lookup calls observed.
     pub lookups: u64,
@@ -81,7 +99,45 @@ pub struct Evicted {
     pub bytes: u64,
 }
 
-/// The cache manager.
+/// The one definition of a prefix match, shared by every backend's
+/// `peek` and `lookup` so the two can never disagree on hit-token
+/// counts: the stored KV covers `min(entry.tokens, request context)` —
+/// conversations extend their context monotonically, so the cached
+/// tokens are a prefix of the new context; documents are immutable.
+pub(crate) fn prefix_hit_tokens(entry: &Entry, req: &Request) -> u32 {
+    entry.tokens.min(req.context_tokens)
+}
+
+/// Entry bookkeeping on a counted hit — one definition for every
+/// backend's `lookup`, so hit/recency/turn refresh rules cannot drift
+/// between stores.
+pub(crate) fn touch_on_hit(e: &mut Entry, req: &Request, hit_tokens: u32, now_s: f64, seq: u64) {
+    e.hits += 1;
+    e.accu_hit_tokens += hit_tokens as u64;
+    e.last_access_s = now_s;
+    e.turn = e.turn.max(req.context_version);
+    e.touch_seq = seq;
+}
+
+/// Entry bookkeeping on admit/extension — one definition for every
+/// backend's `admit` (turn advance, recency, payload write-through).
+pub(crate) fn touch_on_admit(
+    e: &mut Entry,
+    req: &Request,
+    payload: Option<Vec<u8>>,
+    now_s: f64,
+    seq: u64,
+) {
+    e.turn = e.turn.max(req.context_version + 1);
+    e.last_access_s = now_s;
+    e.touch_seq = seq;
+    if payload.is_some() {
+        e.payload = payload;
+    }
+}
+
+/// The single-tier SSD store — the paper's §5.5 cache manager, and the
+/// reference [`CacheStore`] implementation.
 ///
 /// # Example
 ///
@@ -89,11 +145,11 @@ pub struct Evicted {
 /// second turn's context prefix is served from cache.
 ///
 /// ```
-/// use greencache::cache::{CacheManager, PolicyKind};
+/// use greencache::cache::{LocalStore, PolicyKind};
 /// use greencache::workload::{Request, TaskKind};
 ///
 /// // 1 MB capacity, 1000 bytes of KV per token, the paper's LCS policy.
-/// let mut cache = CacheManager::new(1_000_000, 1_000, PolicyKind::Lcs);
+/// let mut cache = LocalStore::new(1_000_000, 1_000, PolicyKind::Lcs);
 /// let turn1 = Request {
 ///     id: 0,
 ///     task: TaskKind::Conversation,
@@ -117,7 +173,7 @@ pub struct Evicted {
 /// assert!(cache.stats().token_hit_rate() > 0.0);
 /// ```
 #[derive(Debug)]
-pub struct CacheManager {
+pub struct LocalStore {
     capacity_bytes: u64,
     used_bytes: u64,
     kv_bytes_per_token: u64,
@@ -127,11 +183,15 @@ pub struct CacheManager {
     touch_counter: u64,
 }
 
-impl CacheManager {
+/// Back-compat alias from before the [`CacheStore`] redesign, when the
+/// single-tier store was the only cache and was named for its role.
+pub type CacheManager = LocalStore;
+
+impl LocalStore {
     /// Build an empty cache with `capacity_bytes` of provisioned storage.
     pub fn new(capacity_bytes: u64, kv_bytes_per_token: u64, policy: PolicyKind) -> Self {
         assert!(kv_bytes_per_token > 0);
-        CacheManager {
+        LocalStore {
             capacity_bytes,
             used_bytes: 0,
             kv_bytes_per_token,
@@ -186,7 +246,7 @@ impl CacheManager {
     pub fn peek(&self, req: &Request) -> u32 {
         self.entries
             .get(&req.prefix_key())
-            .map(|e| e.tokens.min(req.context_tokens))
+            .map(|e| prefix_hit_tokens(e, req))
             .unwrap_or(0)
     }
 
@@ -203,25 +263,18 @@ impl CacheManager {
         let seq = self.next_seq();
         let info = match self.entries.get_mut(&req.prefix_key()) {
             Some(e) => {
-                // The stored KV covers min(entry.tokens, request context):
-                // conversations extend their context monotonically, so the
-                // cached tokens are a prefix of the new context; documents
-                // are immutable.
-                let hit_tokens = e.tokens.min(req.context_tokens);
+                // Same prefix rule as peek, via the shared helper.
+                let hit_tokens = prefix_hit_tokens(e, req);
                 if hit_tokens > 0 {
-                    e.hits += 1;
-                    e.accu_hit_tokens += hit_tokens as u64;
-                    e.last_access_s = now_s;
-                    e.turn = e.turn.max(req.context_version);
-                    e.touch_seq = seq;
+                    touch_on_hit(e, req, hit_tokens, now_s, seq);
                     self.stats.hits += 1;
                     self.stats.hit_tokens += hit_tokens as u64;
-                    HitInfo { hit_tokens, hit: true }
+                    HitInfo { hit_tokens, hot_tokens: 0, hit: true }
                 } else {
-                    HitInfo { hit_tokens: 0, hit: false }
+                    HitInfo { hit_tokens: 0, hot_tokens: 0, hit: false }
                 }
             }
-            None => HitInfo { hit_tokens: 0, hit: false },
+            None => HitInfo { hit_tokens: 0, hot_tokens: 0, hit: false },
         };
         if info.hit {
             self.index.on_access(req.prefix_key());
@@ -281,12 +334,7 @@ impl CacheManager {
                     e.size_bytes = new_size;
                     self.used_bytes += new_size;
                 }
-                e.turn = e.turn.max(req.context_version + 1);
-                e.last_access_s = now_s;
-                e.touch_seq = seq;
-                if payload.is_some() {
-                    e.payload = payload;
-                }
+                touch_on_admit(e, req, payload, now_s, seq);
                 self.index.on_access(req.prefix_key());
             }
             None => {
@@ -374,6 +422,55 @@ impl CacheManager {
             );
         }
         Ok(())
+    }
+}
+
+/// [`LocalStore`] *is* the reference trait semantics — every method
+/// delegates to the inherent implementation above, so concrete callers
+/// (the real-model server, tests) and trait-object callers (engine,
+/// cluster, controller) observe identical behavior.
+impl CacheStore for LocalStore {
+    fn lookup(&mut self, req: &Request, now_s: f64) -> HitInfo {
+        LocalStore::lookup(self, req, now_s)
+    }
+    fn admit(
+        &mut self,
+        req: &Request,
+        cached_tokens: u32,
+        payload: Option<Vec<u8>>,
+        now_s: f64,
+    ) -> Vec<Evicted> {
+        LocalStore::admit(self, req, cached_tokens, payload, now_s)
+    }
+    fn peek(&self, req: &Request) -> u32 {
+        LocalStore::peek(self, req)
+    }
+    fn resize(&mut self, new_capacity_bytes: u64, now_s: f64) -> Vec<Evicted> {
+        LocalStore::resize(self, new_capacity_bytes, now_s)
+    }
+    fn clear(&mut self) {
+        LocalStore::clear(self)
+    }
+    fn stats(&self) -> CacheStats {
+        LocalStore::stats(self)
+    }
+    fn check_invariants(&self) -> anyhow::Result<()> {
+        LocalStore::check_invariants(self)
+    }
+    fn capacity_bytes(&self) -> u64 {
+        LocalStore::capacity_bytes(self)
+    }
+    fn used_bytes(&self) -> u64 {
+        LocalStore::used_bytes(self)
+    }
+    fn len(&self) -> usize {
+        LocalStore::len(self)
+    }
+    fn is_empty(&self) -> bool {
+        LocalStore::is_empty(self)
+    }
+    fn policy(&self) -> PolicyKind {
+        LocalStore::policy(self)
     }
 }
 
@@ -795,6 +892,142 @@ mod tests {
                 }
                 Ok(())
             });
+        }
+    }
+
+    /// A one-replica shared pool that syncs after every write — adapts
+    /// the buffered [`SharedHandle`] to the immediate-effect contract
+    /// the generic churn below drives, so the shared backend rides the
+    /// same per-policy suite as the others (its multi-handle fleet
+    /// properties — attribution sums, time-ordered application — live
+    /// in `shared.rs`).
+    struct SyncedShared {
+        pool: SharedStore,
+        handle: SharedHandle,
+    }
+
+    impl SyncedShared {
+        fn new(cap: u64, policy: PolicyKind) -> Self {
+            let pool = SharedStore::new(1, policy, &[cap]);
+            let handle = pool.handle(0);
+            SyncedShared { pool, handle }
+        }
+    }
+
+    impl CacheStore for SyncedShared {
+        fn lookup(&mut self, req: &Request, now_s: f64) -> HitInfo {
+            self.handle.lookup(req, now_s)
+        }
+        fn admit(
+            &mut self,
+            req: &Request,
+            cached_tokens: u32,
+            payload: Option<Vec<u8>>,
+            now_s: f64,
+        ) -> Vec<Evicted> {
+            let ev = self.handle.admit(req, cached_tokens, payload, now_s);
+            self.pool.sync();
+            ev
+        }
+        fn peek(&self, req: &Request) -> u32 {
+            self.handle.peek(req)
+        }
+        fn resize(&mut self, new_capacity_bytes: u64, now_s: f64) -> Vec<Evicted> {
+            let ev = self.handle.resize(new_capacity_bytes, now_s);
+            self.pool.sync();
+            ev
+        }
+        fn clear(&mut self) {
+            self.handle.clear()
+        }
+        fn stats(&self) -> CacheStats {
+            self.handle.stats()
+        }
+        fn check_invariants(&self) -> anyhow::Result<()> {
+            self.pool.check_invariants()
+        }
+        fn capacity_bytes(&self) -> u64 {
+            self.handle.capacity_bytes()
+        }
+        fn used_bytes(&self) -> u64 {
+            self.handle.used_bytes()
+        }
+        fn len(&self) -> usize {
+            CacheStore::len(&self.handle)
+        }
+        fn policy(&self) -> PolicyKind {
+            self.handle.policy()
+        }
+    }
+
+    #[test]
+    fn prop_invariants_hold_for_every_store_backend() {
+        // The per-policy contract, driven through `dyn CacheStore` for
+        // every backend: per-(tier-)capacity bounds, hit-token bounds,
+        // and conservation (insertions == evictions + residents) under
+        // random churn with resizes. The shared backend participates
+        // through the sync-per-write adapter above; its fleet-level
+        // properties are pinned separately in `shared.rs`.
+        type Factory = fn(u64, PolicyKind) -> Box<dyn CacheStore>;
+        let factories: [(&str, Factory); 4] = [
+            ("local", |cap, p| Box::new(LocalStore::new(cap, 1, p))),
+            ("tiered", |cap, p| {
+                Box::new(TieredStore::new(cap, 0.25, 1, p))
+            }),
+            ("tiered-thin-hot", |cap, p| {
+                Box::new(TieredStore::new(cap, 1.0 / 16.0, 1, p))
+            }),
+            ("shared-synced", |cap, p| Box::new(SyncedShared::new(cap, p))),
+        ];
+        for (name, make) in factories {
+            for policy in ALL_POLICIES {
+                check(&format!("store-invariants-{name}-{}", policy.name()), |rng: &mut Rng| {
+                    let cap = rng.range(100, 3000) as u64;
+                    let mut m = make(cap, policy);
+                    let mut now = 0.0;
+                    for step in 0..250 {
+                        now += rng.f64();
+                        let context = rng.range(0, 300) as u32;
+                        let r = req(
+                            rng.below(20),
+                            rng.below(5) as u32,
+                            context,
+                            rng.range(1, 80) as u32,
+                        );
+                        let h = m.lookup(&r, now);
+                        crate::prop_assert!(
+                            h.hit_tokens <= r.context_tokens,
+                            "{name}/{policy:?} step {step}: hit beyond request context"
+                        );
+                        crate::prop_assert!(
+                            h.hot_tokens <= h.hit_tokens,
+                            "{name}/{policy:?} step {step}: hot tokens exceed the hit"
+                        );
+                        if rng.f64() < 0.75 {
+                            m.admit(&r, context + 10, None, now);
+                        }
+                        if rng.f64() < 0.05 {
+                            m.resize(rng.range(50, 3500) as u64, now);
+                        }
+                        if let Err(e) = m.check_invariants() {
+                            return Err(format!("{name}/{policy:?} step {step}: {e}"));
+                        }
+                        let s = m.stats();
+                        crate::prop_assert!(
+                            s.insertions == s.evictions + m.len() as u64,
+                            "{name}/{policy:?} step {step}: insertions {} != evictions {} + residents {}",
+                            s.insertions,
+                            s.evictions,
+                            m.len()
+                        );
+                        crate::prop_assert!(
+                            m.used_bytes() <= m.capacity_bytes(),
+                            "{name}/{policy:?} step {step}: used > capacity"
+                        );
+                    }
+                    Ok(())
+                });
+            }
         }
     }
 

@@ -1,0 +1,528 @@
+//! [`SharedStore`]: one fleet-level KV pool with per-replica handles.
+//!
+//! The cluster layer's per-replica [`LocalStore`]s waste capacity on
+//! duplicated prefixes and lose every hit whose conversation migrates
+//! between replicas (queue spikes push requests off their sticky
+//! replica). A shared pool serves the prefix no matter where the router
+//! places the request — the ROADMAP's cross-replica cache sharing item.
+//!
+//! # Lockstep access protocol (byte-determinism)
+//!
+//! Replica engines mutate their caches *between* arrival instants
+//! (write-through admissions at request completion, controller resizes
+//! at interval boundaries). Applying those writes to a shared pool in
+//! engine-advance order would make pool state depend on the order the
+//! driver steps replicas in — deterministic, but causally inconsistent
+//! with simulated time. Handles therefore **buffer writes**: [`admit`]
+//! and [`resize`] enqueue `(simulated time, replica, op)` and return
+//! immediately; [`SharedStore::sync`] — called by
+//! [`crate::cluster::ClusterSim`] at every lockstep router instant and
+//! once after the final drain — applies the queue sorted by
+//! `(time, replica, arrival order)`. Reads that happen only at router
+//! instants ([`lookup`] at injection, [`peek`] for router affinity) go
+//! straight to the pool, which sync has just brought current. Fleet runs
+//! are byte-identical regardless of replica stepping order or matrix
+//! thread count.
+//!
+//! Visibility granularity: a replica engine advancing to instant `t` may
+//! overshoot by up to one iteration (that is `run_until`'s contract), so
+//! the sync at `t` can apply writes stamped up to one iteration past `t`
+//! — exactly the same overshoot a *local* store exposes to its own
+//! replica's next lookup. Sharing widens that per-replica overshoot
+//! window to the fleet; ops still apply in simulated-time order, and
+//! holding back post-`t` ops instead would break the pinned one-replica
+//! equivalence with [`LocalStore`].
+//!
+//! # Per-replica attribution
+//!
+//! Token-hit accounting ([`CacheStats`]) is attributed to the replica
+//! whose handle performed the lookup, and insertions/evictions to the
+//! replica whose write triggered them, so summing replica stats —
+//! exactly what [`crate::cluster::ClusterResult::aggregate`] does —
+//! reproduces the pool totals with no double counting.
+//!
+//! [`admit`]: CacheStore::admit
+//! [`resize`]: CacheStore::resize
+//! [`lookup`]: CacheStore::lookup
+//! [`peek`]: CacheStore::peek
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::workload::Request;
+
+use super::{CacheStats, CacheStore, Evicted, HitInfo, LocalStore, PolicyKind, TierBytes};
+
+/// A write buffered by a replica handle until the next sync instant.
+#[derive(Debug)]
+struct PendingOp {
+    now_s: f64,
+    replica: usize,
+    seq: u64,
+    op: Op,
+}
+
+#[derive(Debug)]
+enum Op {
+    Admit {
+        req: Request,
+        cached_tokens: u32,
+        payload: Option<Vec<u8>>,
+    },
+    Resize {
+        bytes: u64,
+    },
+}
+
+/// The pool itself plus the per-replica bookkeeping.
+#[derive(Debug)]
+struct SharedCore {
+    /// The pooled store; its capacity is always `slices.iter().sum()`.
+    inner: LocalStore,
+    /// Per-replica provisioned contribution to the pool (a replica's
+    /// controller resizes its own slice; eviction acts on the pool).
+    slices: Vec<u64>,
+    /// Per-replica attributed statistics (sum == `inner.stats()`).
+    per_replica: Vec<CacheStats>,
+    /// Buffered writes awaiting the next [`SharedStore::sync`].
+    pending: Vec<PendingOp>,
+    seq: u64,
+}
+
+impl SharedCore {
+    fn apply(&mut self, op: PendingOp) {
+        let before = self.inner.stats();
+        match op.op {
+            Op::Admit { req, cached_tokens, payload } => {
+                // Evicted payload bytes are dropped here; the simulator
+                // tracks sizes only and the stats carry the counts.
+                let _ = self.inner.admit(&req, cached_tokens, payload, op.now_s);
+            }
+            Op::Resize { bytes } => {
+                self.slices[op.replica] = bytes;
+                let total: u64 = self.slices.iter().sum();
+                let _ = self.inner.resize(total, op.now_s);
+            }
+        }
+        let after = self.inner.stats();
+        let per = &mut self.per_replica[op.replica];
+        per.insertions += after.insertions - before.insertions;
+        per.evictions += after.evictions - before.evictions;
+        per.rejected_too_large += after.rejected_too_large - before.rejected_too_large;
+    }
+
+    fn check_invariants(&self) -> anyhow::Result<()> {
+        self.inner.check_invariants()?;
+        let total: u64 = self.slices.iter().sum();
+        anyhow::ensure!(
+            total == self.inner.capacity_bytes(),
+            "slice sum {} != pool capacity {}",
+            total,
+            self.inner.capacity_bytes()
+        );
+        let fleet = self.inner.stats();
+        let mut sum = CacheStats::default();
+        for s in &self.per_replica {
+            sum.lookups += s.lookups;
+            sum.hits += s.hits;
+            sum.hit_tokens += s.hit_tokens;
+            sum.input_tokens += s.input_tokens;
+            sum.insertions += s.insertions;
+            sum.evictions += s.evictions;
+            sum.rejected_too_large += s.rejected_too_large;
+        }
+        anyhow::ensure!(
+            sum == fleet,
+            "per-replica stats {sum:?} do not sum to pool stats {fleet:?}"
+        );
+        Ok(())
+    }
+}
+
+/// One fleet-level store. Construct with the per-replica capacity
+/// slices, hand a [`SharedHandle`] to each replica engine, and call
+/// [`SharedStore::sync`] at every lockstep instant (the cluster driver
+/// does both). See the module docs for the protocol.
+#[derive(Debug)]
+pub struct SharedStore {
+    core: Rc<RefCell<SharedCore>>,
+}
+
+impl SharedStore {
+    /// A pool of `slices.iter().sum()` bytes over one KV format; slice
+    /// `i` is replica `i`'s provisioned contribution.
+    pub fn new(kv_bytes_per_token: u64, policy: PolicyKind, slices: &[u64]) -> Self {
+        assert!(!slices.is_empty(), "a shared store needs at least one replica");
+        let total: u64 = slices.iter().sum();
+        SharedStore {
+            core: Rc::new(RefCell::new(SharedCore {
+                inner: LocalStore::new(total, kv_bytes_per_token, policy),
+                slices: slices.to_vec(),
+                per_replica: vec![CacheStats::default(); slices.len()],
+                pending: Vec::new(),
+                seq: 0,
+            })),
+        }
+    }
+
+    /// Replica `i`'s handle onto the pool.
+    pub fn handle(&self, replica: usize) -> SharedHandle {
+        let slice = {
+            let core = self.core.borrow();
+            assert!(replica < core.slices.len(), "replica {replica} out of range");
+            core.slices[replica]
+        };
+        SharedHandle {
+            core: Rc::clone(&self.core),
+            replica,
+            slice_view: slice,
+        }
+    }
+
+    /// Apply every buffered write in `(time, replica, arrival)` order.
+    /// The cluster driver calls this after advancing all replicas to a
+    /// router instant (and once after the final drain), so reads at
+    /// those instants see a pool consistent with simulated time.
+    pub fn sync(&self) {
+        let mut core = self.core.borrow_mut();
+        let mut ops = std::mem::take(&mut core.pending);
+        ops.sort_by(|a, b| {
+            a.now_s
+                .total_cmp(&b.now_s)
+                .then(a.replica.cmp(&b.replica))
+                .then(a.seq.cmp(&b.seq))
+        });
+        for op in ops {
+            core.apply(op);
+        }
+    }
+
+    /// Pool-wide statistics (== the sum of every handle's [`stats`]).
+    ///
+    /// [`stats`]: CacheStore::stats
+    pub fn fleet_stats(&self) -> CacheStats {
+        self.core.borrow().inner.stats()
+    }
+
+    /// Pool capacity, bytes (sum of the per-replica slices).
+    pub fn capacity_bytes(&self) -> u64 {
+        self.core.borrow().inner.capacity_bytes()
+    }
+
+    /// Entries resident in the pool.
+    pub fn len(&self) -> usize {
+        self.core.borrow().inner.len()
+    }
+
+    /// Whether the pool holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Buffered writes not yet applied (tests).
+    pub fn pending_len(&self) -> usize {
+        self.core.borrow().pending.len()
+    }
+
+    /// Pool-level invariants: the inner store's books, slice/capacity
+    /// agreement, and exact per-replica stats attribution.
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        self.core.borrow().check_invariants()
+    }
+}
+
+/// One replica's view of a [`SharedStore`]. Implements [`CacheStore`],
+/// so a replica engine drives it exactly like a private store; see the
+/// module docs for which calls are buffered.
+#[derive(Debug)]
+pub struct SharedHandle {
+    core: Rc<RefCell<SharedCore>>,
+    replica: usize,
+    /// The replica's provisioned slice as of its *own* last resize —
+    /// reported immediately (power draw and timeline samples follow a
+    /// resize right away, like a private store), while the pool-level
+    /// capacity change applies at the next sync.
+    slice_view: u64,
+}
+
+impl SharedHandle {
+    fn push(&self, now_s: f64, op: Op) {
+        let mut core = self.core.borrow_mut();
+        let seq = core.seq;
+        core.seq += 1;
+        core.pending.push(PendingOp {
+            now_s,
+            replica: self.replica,
+            seq,
+            op,
+        });
+    }
+}
+
+impl CacheStore for SharedHandle {
+    /// Reads the pool as of the last sync and attributes the hit to this
+    /// replica. In the lockstep protocol this runs only at router
+    /// instants, right after a sync.
+    fn lookup(&mut self, req: &Request, now_s: f64) -> HitInfo {
+        let mut core = self.core.borrow_mut();
+        let info = core.inner.lookup(req, now_s);
+        let per = &mut core.per_replica[self.replica];
+        per.lookups += 1;
+        per.input_tokens += req.prompt_tokens() as u64;
+        if info.hit {
+            per.hits += 1;
+            per.hit_tokens += info.hit_tokens as u64;
+        }
+        info
+    }
+
+    /// Buffered: enqueued for the next sync; returns no evictions (the
+    /// stats catch up when the op applies).
+    fn admit(
+        &mut self,
+        req: &Request,
+        cached_tokens: u32,
+        payload: Option<Vec<u8>>,
+        now_s: f64,
+    ) -> Vec<Evicted> {
+        self.push(
+            now_s,
+            Op::Admit {
+                req: req.clone(),
+                cached_tokens,
+                payload,
+            },
+        );
+        Vec::new()
+    }
+
+    fn peek(&self, req: &Request) -> u32 {
+        self.core.borrow().inner.peek(req)
+    }
+
+    /// Buffered: resizes this replica's slice of the pool at the next
+    /// sync (pool capacity = sum of slices); [`capacity_bytes`] reflects
+    /// the new slice immediately.
+    ///
+    /// [`capacity_bytes`]: CacheStore::capacity_bytes
+    fn resize(&mut self, new_capacity_bytes: u64, now_s: f64) -> Vec<Evicted> {
+        self.slice_view = new_capacity_bytes;
+        self.push(now_s, Op::Resize { bytes: new_capacity_bytes });
+        Vec::new()
+    }
+
+    /// Drops the whole pool *and* any buffered writes (bench-phase
+    /// reset; not meaningful mid-run).
+    fn clear(&mut self) {
+        let mut core = self.core.borrow_mut();
+        core.pending.clear();
+        core.inner.clear();
+    }
+
+    /// This replica's attributed share of the pool statistics.
+    fn stats(&self) -> CacheStats {
+        self.core.borrow().per_replica[self.replica]
+    }
+
+    fn check_invariants(&self) -> anyhow::Result<()> {
+        self.core.borrow().check_invariants()
+    }
+
+    /// The replica's provisioned slice (not the pool total), so
+    /// per-replica embodied carbon, power draw and timeline samples sum
+    /// to the fleet figure instead of multiply-counting the pool.
+    fn capacity_bytes(&self) -> u64 {
+        self.slice_view
+    }
+
+    /// Pool-wide residency (entries are pooled, not owned per replica).
+    fn used_bytes(&self) -> u64 {
+        self.core.borrow().inner.used_bytes()
+    }
+
+    /// Pool-wide entry count.
+    fn len(&self) -> usize {
+        self.core.borrow().inner.len()
+    }
+
+    fn policy(&self) -> PolicyKind {
+        self.core.borrow().inner.policy()
+    }
+
+    fn tier_bytes(&self) -> TierBytes {
+        TierBytes {
+            ssd: self.slice_view,
+            dram: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TaskKind;
+
+    fn req(ctx_id: u64, version: u32, context: u32, new: u32) -> Request {
+        Request {
+            id: 0,
+            task: TaskKind::Conversation,
+            context_id: ctx_id,
+            context_version: version,
+            context_tokens: context,
+            new_tokens: new,
+            output_tokens: 10,
+            arrival_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn admissions_defer_until_sync() {
+        let store = SharedStore::new(1, PolicyKind::Lcs, &[500, 500]);
+        let mut h0 = store.handle(0);
+        let r = req(1, 0, 0, 100);
+        h0.lookup(&r, 0.0);
+        assert!(h0.admit(&r, 100, None, 0.0).is_empty());
+        assert_eq!(store.len(), 0, "write is buffered");
+        assert_eq!(store.pending_len(), 1);
+        store.sync();
+        assert_eq!(store.len(), 1);
+        assert_eq!(h0.peek(&req(1, 1, 100, 10)), 100);
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn single_handle_syncing_every_step_matches_local_store() {
+        // A one-replica pool synced after every write is observationally
+        // identical to a private LocalStore over the same op sequence —
+        // the degenerate case the cluster layer's `local` vs `shared`
+        // equivalence test pins end to end.
+        let mut local = LocalStore::new(300, 1, PolicyKind::Lru);
+        let store = SharedStore::new(1, PolicyKind::Lru, &[300]);
+        let mut h = store.handle(0);
+        let mut now = 0.0;
+        for step in 0..200u64 {
+            now += 0.5;
+            let r = req(step % 7, (step / 7) as u32, (step % 5) as u32 * 40, 20);
+            let a = local.lookup(&r, now);
+            let b = h.lookup(&r, now);
+            assert_eq!(a, b, "step {step}: lookups diverged");
+            let cached = r.context_tokens + r.new_tokens;
+            local.admit(&r, cached, None, now);
+            h.admit(&r, cached, None, now);
+            store.sync();
+            if step % 50 == 0 {
+                let cap = 100 + (step % 3) * 100;
+                local.resize(cap, now);
+                h.resize(cap, now);
+                store.sync();
+            }
+            assert_eq!(local.used_bytes(), h.used_bytes(), "step {step}");
+            assert_eq!(local.len(), CacheStore::len(&h), "step {step}");
+        }
+        assert_eq!(local.stats(), h.stats());
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sync_applies_in_simulated_time_order_across_replicas() {
+        // Replica 1 buffers an *earlier* write than replica 0; sync must
+        // apply replica 1's first (time order, not push order).
+        let store = SharedStore::new(1, PolicyKind::Lru, &[100, 100]);
+        let mut h0 = store.handle(0);
+        let mut h1 = store.handle(1);
+        let (a, b, c) = (req(1, 0, 0, 100), req(2, 0, 0, 100), req(3, 0, 0, 100));
+        // Pool holds 2 entries; the third admission evicts the LRU one.
+        h0.lookup(&a, 5.0);
+        h0.admit(&a, 100, None, 5.0); // pushed first, time 5
+        h1.lookup(&b, 1.0);
+        h1.admit(&b, 100, None, 1.0); // pushed second, time 1
+        h0.lookup(&c, 9.0);
+        h0.admit(&c, 100, None, 9.0); // time 9 → evicts the true LRU: b
+        store.sync();
+        assert_eq!(store.len(), 2);
+        assert_eq!(h0.peek(&req(2, 1, 100, 1)), 0, "b (t=1) must be the victim");
+        assert_eq!(h0.peek(&req(1, 1, 100, 1)), 100);
+        // The eviction is attributed to replica 0, whose write triggered it.
+        assert_eq!(h0.stats().evictions, 1);
+        assert_eq!(h1.stats().evictions, 0);
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn per_replica_attribution_sums_to_pool_totals_for_every_policy() {
+        for policy in [
+            PolicyKind::Fifo,
+            PolicyKind::Lru,
+            PolicyKind::Lfu,
+            PolicyKind::Lcs,
+        ] {
+            let store = SharedStore::new(1, policy, &[400, 400]);
+            let mut handles = [store.handle(0), store.handle(1)];
+            let mut now = 0.0;
+            for step in 0..300u64 {
+                now += 0.25;
+                let h = &mut handles[(step % 2) as usize];
+                let r = req(step % 11, 0, (step % 4) as u32 * 50, 30);
+                h.lookup(&r, now);
+                h.admit(&r, r.context_tokens + 30, None, now);
+                if step % 16 == 0 {
+                    // check_invariants pins Σ per-replica == pool stats
+                    // (the exact-merge contract) at every sync point.
+                    store.sync();
+                    store.check_invariants().unwrap();
+                }
+                if step == 150 {
+                    handles[0].resize(150, now); // mid-run slice shrink
+                }
+            }
+            store.sync();
+            store.check_invariants().unwrap();
+            let fleet = store.fleet_stats();
+            let sum_hits: u64 = handles.iter().map(|h| h.stats().hit_tokens).sum();
+            assert_eq!(sum_hits, fleet.hit_tokens, "{policy:?}");
+            let sum_ins: u64 = handles.iter().map(|h| h.stats().insertions).sum();
+            assert_eq!(sum_ins, fleet.insertions, "{policy:?}");
+            // Conservation fleet-wide.
+            assert_eq!(
+                fleet.insertions,
+                fleet.evictions + store.len() as u64,
+                "{policy:?}"
+            );
+            assert!(fleet.hit_tokens > 0, "{policy:?}: churn must produce hits");
+        }
+    }
+
+    #[test]
+    fn slice_resize_changes_pool_capacity_at_sync() {
+        let store = SharedStore::new(1, PolicyKind::Lru, &[300, 300]);
+        let mut h0 = store.handle(0);
+        assert_eq!(store.capacity_bytes(), 600);
+        h0.resize(100, 1.0);
+        // The handle sees its new slice immediately...
+        assert_eq!(h0.capacity_bytes(), 100);
+        assert_eq!(h0.tier_bytes().ssd, 100);
+        // ...the pool at the next sync.
+        assert_eq!(store.capacity_bytes(), 600);
+        store.sync();
+        assert_eq!(store.capacity_bytes(), 400);
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cross_replica_hits_are_the_point() {
+        // Replica 0 admits a conversation; replica 1's lookup hits it —
+        // the sharing per-replica LocalStores cannot provide.
+        let store = SharedStore::new(1, PolicyKind::Lcs, &[500, 500]);
+        let mut h0 = store.handle(0);
+        let mut h1 = store.handle(1);
+        let r = req(42, 0, 0, 120);
+        h0.lookup(&r, 0.0);
+        h0.admit(&r, 120, None, 0.0);
+        store.sync();
+        let h = h1.lookup(&req(42, 1, 120, 10), 1.0);
+        assert!(h.hit);
+        assert_eq!(h.hit_tokens, 120);
+        assert_eq!(h1.stats().hit_tokens, 120);
+        assert_eq!(h0.stats().hit_tokens, 0);
+    }
+}

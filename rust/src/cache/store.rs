@@ -1,0 +1,294 @@
+//! The [`CacheStore`] trait: the one cache API every layer above programs
+//! against.
+//!
+//! The seed code threaded one concrete `CacheManager` struct by value
+//! through the engine, cluster, coordinator, profiler and experiments —
+//! which left no seam for the ROADMAP's cross-replica sharing or for
+//! tiered DRAM/SSD stores whose per-tier embodied intensity is exactly
+//! the Eq. 5 trade-off the paper studies. This trait is that seam. Three
+//! backends ship:
+//!
+//! * [`LocalStore`](crate::cache::LocalStore) — the original single-tier
+//!   SSD store (the paper's §5.5 manager), unchanged semantics.
+//! * [`TieredStore`](crate::cache::TieredStore) — a DRAM hot tier in
+//!   front of an SSD capacity tier, with deterministic promotion /
+//!   demotion and per-tier embodied intensity (DRAM ≈ 2× the gCO₂e/byte
+//!   of SSD, but hits served from it skip the SSD KV-load penalty).
+//! * [`SharedStore`](crate::cache::SharedStore) — one fleet-level pool
+//!   with per-replica handles; writes are buffered per replica and
+//!   applied in simulated-time order at lockstep sync instants, so fleet
+//!   runs stay byte-deterministic.
+//!
+//! # Example
+//!
+//! Any backend drives the same way — the engine, router and controller
+//! only ever see `dyn CacheStore`:
+//!
+//! ```
+//! use greencache::cache::{CacheStore, LocalStore, PolicyKind, TieredStore};
+//! use greencache::workload::{Request, TaskKind};
+//!
+//! let req = Request {
+//!     id: 0,
+//!     task: TaskKind::Conversation,
+//!     context_id: 7,
+//!     context_version: 1,
+//!     context_tokens: 100,
+//!     new_tokens: 10,
+//!     output_tokens: 20,
+//!     arrival_s: 0.0,
+//! };
+//! let mut stores: Vec<Box<dyn CacheStore>> = vec![
+//!     Box::new(LocalStore::new(1_000_000, 1_000, PolicyKind::Lcs)),
+//!     Box::new(TieredStore::new(1_000_000, 0.25, 1_000, PolicyKind::Lcs)),
+//! ];
+//! for store in &mut stores {
+//!     assert!(!store.lookup(&req, 0.0).hit);
+//!     store.admit(&req, 130, None, 0.0);
+//!     // The context prefix is now resident (peek caps at the request's
+//!     // own context length) — and the books balance on every backend.
+//!     assert_eq!(store.peek(&req), 100);
+//!     assert_eq!(store.stats().insertions, 1);
+//!     store.check_invariants().unwrap();
+//! }
+//! ```
+
+use crate::workload::Request;
+
+use super::{CacheStats, Evicted, HitInfo, PolicyKind};
+
+/// Provisioned capacity split by storage tier, bytes. Feeds the per-tier
+/// embodied accounting (Eq. 4 per tier via
+/// [`crate::carbon::EmbodiedModel`]) and the component power model.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierBytes {
+    /// Bytes provisioned on the SSD capacity tier.
+    pub ssd: u64,
+    /// Bytes provisioned on the DRAM hot tier (0 for single-tier stores).
+    pub dram: u64,
+}
+
+impl TierBytes {
+    /// Total provisioned bytes across tiers.
+    pub fn total(&self) -> u64 {
+        self.ssd + self.dram
+    }
+}
+
+/// A KV context-cache backend.
+///
+/// The contract every implementation upholds (the per-policy property
+/// tests in `cache` exercise all backends against it):
+///
+/// * **Hit accounting** is token-level (§6.3.2): [`lookup`] accounts the
+///   request's prompt tokens and the reused prefix exactly once; [`peek`]
+///   never accounts anything or touches recency.
+/// * **Capacity** is enforced at every return: provisioned bytes of
+///   resident entries never exceed [`capacity_bytes`] (per tier, for
+///   tiered stores — [`check_invariants`] verifies the split).
+/// * **Conservation**: every inserted entry is either still resident or
+///   was reported evicted — `insertions == evictions + len()` (fleet-wide
+///   for shared stores, where eviction work is attributed to the replica
+///   whose write triggered it).
+/// * **Determinism**: victim selection and promotion/demotion are pure
+///   functions of the store state and the call arguments — replays are
+///   byte-identical.
+///
+/// Buffered backends (the shared store's per-replica handles) may defer
+/// the *work* of [`admit`]/[`resize`] to their next sync instant; such
+/// calls return an empty eviction list and the stats catch up at sync.
+///
+/// [`lookup`]: CacheStore::lookup
+/// [`peek`]: CacheStore::peek
+/// [`admit`]: CacheStore::admit
+/// [`resize`]: CacheStore::resize
+/// [`capacity_bytes`]: CacheStore::capacity_bytes
+/// [`check_invariants`]: CacheStore::check_invariants
+pub trait CacheStore {
+    /// Look up the reusable prefix for a request and account the hit.
+    /// Call exactly once per request, *before* [`CacheStore::admit`].
+    fn lookup(&mut self, req: &Request, now_s: f64) -> HitInfo;
+
+    /// Admit/extend the entry for a processed request (write-through:
+    /// after serving, old prefix + new tokens are cached). Returns the
+    /// evictions performed — possibly empty for buffered backends.
+    fn admit(
+        &mut self,
+        req: &Request,
+        cached_tokens: u32,
+        payload: Option<Vec<u8>>,
+        now_s: f64,
+    ) -> Vec<Evicted>;
+
+    /// Non-mutating prefix probe: how many of `req`'s context tokens this
+    /// store could serve, without touching hit statistics or recency.
+    /// This is the *affinity* signal the cluster router reads on every
+    /// replica before placing a request.
+    fn peek(&self, req: &Request) -> u32;
+
+    /// Resize the provisioned capacity (§5.5's cache controller),
+    /// evicting until the contents fit when shrinking.
+    fn resize(&mut self, new_capacity_bytes: u64, now_s: f64) -> Vec<Evicted>;
+
+    /// Drop every entry (not counted as evictions — bench phase resets).
+    fn clear(&mut self);
+
+    /// Aggregate hit/eviction statistics so far. For shared stores this
+    /// is the *calling replica's* attributed share, so fleet aggregation
+    /// by summing replica stats stays exact.
+    fn stats(&self) -> CacheStats;
+
+    /// Verify internal accounting invariants (property tests call this
+    /// after every step).
+    fn check_invariants(&self) -> anyhow::Result<()>;
+
+    /// Provisioned capacity, bytes (a shared handle reports its
+    /// replica's slice of the pool).
+    fn capacity_bytes(&self) -> u64;
+
+    /// Bytes currently held by resident entries (pool-wide for shared
+    /// stores, whose entries are not owned by any one replica).
+    fn used_bytes(&self) -> u64;
+
+    /// Number of resident entries (pool-wide for shared stores).
+    fn len(&self) -> usize;
+
+    /// Whether the store holds no entries.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The eviction policy in force.
+    fn policy(&self) -> PolicyKind;
+
+    /// Provisioned capacity split by tier. Single-tier stores report
+    /// everything as SSD; the engine prices each tier's embodied carbon
+    /// and power draw separately.
+    fn tier_bytes(&self) -> TierBytes {
+        TierBytes {
+            ssd: self.capacity_bytes(),
+            dram: 0,
+        }
+    }
+}
+
+/// Mutable references delegate, so `&mut LocalStore` (and `&mut dyn
+/// CacheStore`) can be boxed into a [`crate::sim::ReplicaEngine`] without
+/// giving up ownership — this is what lets `simulate` borrow the caller's
+/// store for the run and hand it back.
+impl<T: CacheStore + ?Sized> CacheStore for &mut T {
+    fn lookup(&mut self, req: &Request, now_s: f64) -> HitInfo {
+        (**self).lookup(req, now_s)
+    }
+    fn admit(
+        &mut self,
+        req: &Request,
+        cached_tokens: u32,
+        payload: Option<Vec<u8>>,
+        now_s: f64,
+    ) -> Vec<Evicted> {
+        (**self).admit(req, cached_tokens, payload, now_s)
+    }
+    fn peek(&self, req: &Request) -> u32 {
+        (**self).peek(req)
+    }
+    fn resize(&mut self, new_capacity_bytes: u64, now_s: f64) -> Vec<Evicted> {
+        (**self).resize(new_capacity_bytes, now_s)
+    }
+    fn clear(&mut self) {
+        (**self).clear()
+    }
+    fn stats(&self) -> CacheStats {
+        (**self).stats()
+    }
+    fn check_invariants(&self) -> anyhow::Result<()> {
+        (**self).check_invariants()
+    }
+    fn capacity_bytes(&self) -> u64 {
+        (**self).capacity_bytes()
+    }
+    fn used_bytes(&self) -> u64 {
+        (**self).used_bytes()
+    }
+    fn len(&self) -> usize {
+        (**self).len()
+    }
+    fn is_empty(&self) -> bool {
+        (**self).is_empty()
+    }
+    fn policy(&self) -> PolicyKind {
+        (**self).policy()
+    }
+    fn tier_bytes(&self) -> TierBytes {
+        (**self).tier_bytes()
+    }
+}
+
+/// The cache-backend axis of the scenario matrix (`greencache cluster
+/// --cache`, `greencache matrix --caches`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum CacheVariant {
+    /// One single-tier SSD store per replica
+    /// ([`LocalStore`](crate::cache::LocalStore)) — the paper's setup.
+    #[default]
+    Local,
+    /// DRAM hot tier + SSD capacity tier per replica
+    /// ([`TieredStore`](crate::cache::TieredStore)).
+    Tiered,
+    /// One fleet-level pool with per-replica handles
+    /// ([`SharedStore`](crate::cache::SharedStore)). Single-node cells
+    /// degenerate to [`CacheVariant::Local`] (a one-replica pool is a
+    /// local store).
+    Shared,
+}
+
+impl CacheVariant {
+    /// All variants, in comparison order (the matrix cache axis).
+    pub fn all() -> [CacheVariant; 3] {
+        [
+            CacheVariant::Local,
+            CacheVariant::Tiered,
+            CacheVariant::Shared,
+        ]
+    }
+
+    /// Stable human/golden/CLI label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CacheVariant::Local => "local",
+            CacheVariant::Tiered => "tiered",
+            CacheVariant::Shared => "shared",
+        }
+    }
+
+    /// Parse a CLI label; `None` for unknown input.
+    pub fn parse(s: &str) -> Option<CacheVariant> {
+        match s {
+            "local" => Some(CacheVariant::Local),
+            "tiered" => Some(CacheVariant::Tiered),
+            "shared" => Some(CacheVariant::Shared),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_bytes_totals() {
+        let t = TierBytes { ssd: 10, dram: 5 };
+        assert_eq!(t.total(), 15);
+        assert_eq!(TierBytes::default().total(), 0);
+    }
+
+    #[test]
+    fn variant_labels_round_trip() {
+        for v in CacheVariant::all() {
+            assert_eq!(CacheVariant::parse(v.name()), Some(v));
+        }
+        assert_eq!(CacheVariant::parse("bogus"), None);
+        assert_eq!(CacheVariant::default(), CacheVariant::Local);
+    }
+}

@@ -1,0 +1,601 @@
+//! [`TieredStore`]: a DRAM hot tier in front of an SSD capacity tier.
+//!
+//! The paper prices the KV cache as one SSD pool (Eq. 4). Real
+//! deployments (CachedAttention-style hierarchies) put the hottest
+//! prefixes in host DRAM: hits served from DRAM skip the SSD KV-load
+//! latency, but DRAM carries roughly **2× the embodied carbon per byte**
+//! of SSD (Table 1: 512 GB DDR4 = 30.8 kg → ~60 kg/TB, vs 30 kg/TB for
+//! SSD) and a standing refresh power draw — exactly the per-tier Eq. 5
+//! trade-off this backend exposes. The engine reads the provisioned
+//! split via [`CacheStore::tier_bytes`] and prices each tier separately
+//! (embodied through [`crate::carbon::EmbodiedModel`], power through
+//! [`crate::carbon::PowerModel`]).
+//!
+//! # Placement rules (deterministic)
+//!
+//! * **Admission** writes through to the hot tier (the entry was just
+//!   served, so its KV is in memory); entries larger than the whole hot
+//!   tier go straight to SSD.
+//! * **Promotion**: a cold hit moves the entry to the hot tier.
+//! * **Demotion**: when the hot tier overflows, the hot entry with the
+//!   lowest policy keep-score moves to SSD (ties break to the smallest
+//!   key). Demotion is bookkeeping only — the KV bytes stay resident.
+//! * **Eviction**: when total capacity overflows, the lowest-score
+//!   *cold* entry is evicted first; hot entries are only evicted once no
+//!   cold candidate remains.
+//!
+//! Victim selection scans the tier's entries (O(n)) with a
+//! (score, key) total order, so replays are byte-identical; the
+//! `tiered` cases in `experiments::bench`'s cache report track the cost
+//! against [`super::LocalStore`]'s indexed path.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::workload::Request;
+
+use super::{
+    prefix_hit_tokens, touch_on_admit, touch_on_hit, CacheStats, CacheStore, Entry, Evicted,
+    HitInfo, PolicyKind, TierBytes,
+};
+
+/// Default DRAM share of total provisioned capacity for tiered cells
+/// (1/16 → 1 TB of DRAM in front of the 70B platform's 16 TB budget —
+/// twice the platform's base 512 GB, a realistic host-memory ceiling).
+pub const TIERED_HOT_FRACTION: f64 = 1.0 / 16.0;
+
+/// Two-tier DRAM + SSD context-cache store. See the module docs for the
+/// placement rules; the accounting contract is [`CacheStore`]'s.
+#[derive(Debug)]
+pub struct TieredStore {
+    capacity_bytes: u64,
+    hot_fraction: f64,
+    hot_capacity_bytes: u64,
+    kv_bytes_per_token: u64,
+    policy: PolicyKind,
+    entries: HashMap<u64, Entry>,
+    /// Keys resident in the DRAM hot tier (always a subset of `entries`).
+    hot: HashSet<u64>,
+    used_bytes: u64,
+    hot_used_bytes: u64,
+    stats: CacheStats,
+    touch_counter: u64,
+    promotions: u64,
+    demotions: u64,
+}
+
+impl TieredStore {
+    /// Build an empty tiered store: `hot_fraction` of `capacity_bytes`
+    /// is provisioned as the DRAM hot tier, the rest as SSD.
+    pub fn new(
+        capacity_bytes: u64,
+        hot_fraction: f64,
+        kv_bytes_per_token: u64,
+        policy: PolicyKind,
+    ) -> Self {
+        assert!(kv_bytes_per_token > 0);
+        assert!(
+            (0.0..=1.0).contains(&hot_fraction),
+            "hot_fraction must be in [0, 1]"
+        );
+        TieredStore {
+            capacity_bytes,
+            hot_fraction,
+            hot_capacity_bytes: Self::hot_cap(capacity_bytes, hot_fraction),
+            kv_bytes_per_token,
+            policy,
+            entries: HashMap::new(),
+            hot: HashSet::new(),
+            used_bytes: 0,
+            hot_used_bytes: 0,
+            stats: CacheStats::default(),
+            touch_counter: 0,
+            promotions: 0,
+            demotions: 0,
+        }
+    }
+
+    fn hot_cap(capacity_bytes: u64, hot_fraction: f64) -> u64 {
+        ((capacity_bytes as f64 * hot_fraction) as u64).min(capacity_bytes)
+    }
+
+    /// Provisioned DRAM hot-tier capacity, bytes.
+    pub fn hot_capacity_bytes(&self) -> u64 {
+        self.hot_capacity_bytes
+    }
+
+    /// Bytes resident in the DRAM hot tier.
+    pub fn hot_used_bytes(&self) -> u64 {
+        self.hot_used_bytes
+    }
+
+    /// Entries resident in the DRAM hot tier.
+    pub fn hot_len(&self) -> usize {
+        self.hot.len()
+    }
+
+    /// Cold→hot promotions performed so far.
+    pub fn promotions(&self) -> u64 {
+        self.promotions
+    }
+
+    /// Hot→cold demotions performed so far.
+    pub fn demotions(&self) -> u64 {
+        self.demotions
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.touch_counter += 1;
+        self.touch_counter
+    }
+
+    /// Lowest (keep-score, key) entry of one tier, excluding `protect`.
+    fn victim_among(&self, in_hot: bool, protect: Option<u64>, now_s: f64) -> Option<u64> {
+        let mut best: Option<(f64, u64)> = None;
+        for e in self.entries.values() {
+            if self.hot.contains(&e.key) != in_hot || Some(e.key) == protect {
+                continue;
+            }
+            let s = self.policy.score(e, now_s);
+            let better = match best {
+                None => true,
+                Some((bs, bk)) => s < bs || (s == bs && e.key < bk),
+            };
+            if better {
+                best = Some((s, e.key));
+            }
+        }
+        best.map(|(_, k)| k)
+    }
+
+    /// Mark an entry hot if it fits the tier at all (oversized entries
+    /// stay on SSD).
+    fn promote(&mut self, key: u64, size_bytes: u64) {
+        if size_bytes <= self.hot_capacity_bytes && self.hot.insert(key) {
+            self.hot_used_bytes += size_bytes;
+            self.promotions += 1;
+        }
+    }
+
+    /// Demote lowest-score hot entries until the hot tier fits,
+    /// preferring to keep `protect` (the entry being served) resident.
+    fn rebalance_hot(&mut self, protect: Option<u64>, now_s: f64) {
+        while self.hot_used_bytes > self.hot_capacity_bytes {
+            let victim = self
+                .victim_among(true, protect, now_s)
+                .or_else(|| self.victim_among(true, None, now_s));
+            match victim {
+                Some(k) => {
+                    let size = self.entries[&k].size_bytes;
+                    self.hot.remove(&k);
+                    self.hot_used_bytes -= size;
+                    self.demotions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn remove(&mut self, key: u64) -> Evicted {
+        let e = self.entries.remove(&key).expect("victim must exist");
+        if self.hot.remove(&key) {
+            self.hot_used_bytes -= e.size_bytes;
+        }
+        self.used_bytes -= e.size_bytes;
+        Evicted { key, bytes: e.size_bytes }
+    }
+
+    /// Evict until `used + headroom ≤ capacity`: cold victims first,
+    /// hot only when no cold candidate remains, `protect` strictly last
+    /// of all. Note this is *stronger* protection than
+    /// [`super::LocalStore::admit`] gives its extended entry: the local
+    /// store evicts the protected key the moment the policy ranks it as
+    /// the global victim, while the tiered scan skips it until no other
+    /// entry remains — so tiered-vs-local resident sets can differ under
+    /// pressure even at equal policy and history.
+    fn evict_until_fit(
+        &mut self,
+        headroom: i64,
+        protect: Option<u64>,
+        now_s: f64,
+        evicted: &mut Vec<Evicted>,
+    ) {
+        while self.used_bytes as i64 + headroom > self.capacity_bytes as i64 {
+            let victim = self
+                .victim_among(false, protect, now_s)
+                .or_else(|| self.victim_among(true, protect, now_s));
+            match victim {
+                Some(k) => evicted.push(self.remove(k)),
+                None => {
+                    if let Some(k) = protect {
+                        if self.entries.contains_key(&k) {
+                            evicted.push(self.remove(k));
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    /// See [`CacheStore::lookup`]; additionally reports DRAM-served
+    /// tokens in [`HitInfo::hot_tokens`] and promotes cold hits.
+    pub fn lookup(&mut self, req: &Request, now_s: f64) -> HitInfo {
+        self.stats.lookups += 1;
+        self.stats.input_tokens += req.prompt_tokens() as u64;
+        let seq = self.next_seq();
+        let key = req.prefix_key();
+        let was_hot = self.hot.contains(&key);
+        let (info, promote_size) = match self.entries.get_mut(&key) {
+            Some(e) => {
+                let hit_tokens = prefix_hit_tokens(e, req);
+                if hit_tokens > 0 {
+                    touch_on_hit(e, req, hit_tokens, now_s, seq);
+                    self.stats.hits += 1;
+                    self.stats.hit_tokens += hit_tokens as u64;
+                    let hot_tokens = if was_hot { hit_tokens } else { 0 };
+                    (
+                        HitInfo { hit_tokens, hot_tokens, hit: true },
+                        if was_hot { None } else { Some(e.size_bytes) },
+                    )
+                } else {
+                    (HitInfo { hit_tokens: 0, hot_tokens: 0, hit: false }, None)
+                }
+            }
+            None => (HitInfo { hit_tokens: 0, hot_tokens: 0, hit: false }, None),
+        };
+        if let Some(size) = promote_size {
+            self.promote(key, size);
+            self.rebalance_hot(Some(key), now_s);
+        }
+        info
+    }
+
+    /// See [`CacheStore::admit`]; the admitted/extended entry lands in
+    /// the hot tier (write-through to DRAM).
+    pub fn admit(
+        &mut self,
+        req: &Request,
+        cached_tokens: u32,
+        payload: Option<Vec<u8>>,
+        now_s: f64,
+    ) -> Vec<Evicted> {
+        let new_size = cached_tokens as u64 * self.kv_bytes_per_token;
+        if new_size > self.capacity_bytes {
+            self.stats.rejected_too_large += 1;
+            return Vec::new();
+        }
+        let seq = self.next_seq();
+        let mut evicted = Vec::new();
+        let key = req.prefix_key();
+
+        let delta = match self.entries.get(&key) {
+            Some(e) if e.tokens >= cached_tokens => 0i64,
+            Some(e) => new_size as i64 - e.size_bytes as i64,
+            None => new_size as i64,
+        };
+        self.evict_until_fit(delta, Some(key), now_s, &mut evicted);
+
+        let was_hot = self.hot.contains(&key);
+        match self.entries.get_mut(&key) {
+            Some(e) => {
+                if cached_tokens > e.tokens {
+                    self.used_bytes -= e.size_bytes;
+                    if was_hot {
+                        self.hot_used_bytes -= e.size_bytes;
+                    }
+                    e.tokens = cached_tokens;
+                    e.size_bytes = new_size;
+                    self.used_bytes += new_size;
+                    if was_hot {
+                        self.hot_used_bytes += new_size;
+                    }
+                }
+                touch_on_admit(e, req, payload, now_s, seq);
+                let size = e.size_bytes;
+                if !was_hot {
+                    self.promote(key, size);
+                }
+            }
+            None => {
+                if self.used_bytes + new_size <= self.capacity_bytes {
+                    self.entries.insert(
+                        key,
+                        Entry {
+                            key,
+                            task: req.task,
+                            tokens: cached_tokens,
+                            size_bytes: new_size,
+                            created_s: now_s,
+                            last_access_s: now_s,
+                            hits: 0,
+                            accu_hit_tokens: 0,
+                            turn: req.context_version + 1,
+                            payload,
+                            touch_seq: seq,
+                        },
+                    );
+                    self.used_bytes += new_size;
+                    self.stats.insertions += 1;
+                    self.promote(key, new_size);
+                }
+            }
+        }
+        self.rebalance_hot(Some(key), now_s);
+        self.stats.evictions += evicted.len() as u64;
+        evicted
+    }
+
+    /// See [`CacheStore::resize`]: recomputes the DRAM/SSD split from
+    /// the construction-time hot fraction, demotes, then evicts to fit.
+    pub fn resize(&mut self, new_capacity_bytes: u64, now_s: f64) -> Vec<Evicted> {
+        self.capacity_bytes = new_capacity_bytes;
+        self.hot_capacity_bytes = Self::hot_cap(new_capacity_bytes, self.hot_fraction);
+        self.rebalance_hot(None, now_s);
+        let mut evicted = Vec::new();
+        self.evict_until_fit(0, None, now_s, &mut evicted);
+        self.stats.evictions += evicted.len() as u64;
+        evicted
+    }
+
+    /// See [`CacheStore::clear`].
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.hot.clear();
+        self.used_bytes = 0;
+        self.hot_used_bytes = 0;
+    }
+
+    /// See [`CacheStore::check_invariants`]; additionally checks the
+    /// per-tier books: hot residency is a subset of the entry table and
+    /// each tier's bytes respect its own capacity.
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.used_bytes <= self.capacity_bytes,
+            "used {} > capacity {}",
+            self.used_bytes,
+            self.capacity_bytes
+        );
+        anyhow::ensure!(
+            self.hot_used_bytes <= self.hot_capacity_bytes,
+            "hot used {} > hot capacity {}",
+            self.hot_used_bytes,
+            self.hot_capacity_bytes
+        );
+        let sum: u64 = self.entries.values().map(|e| e.size_bytes).sum();
+        anyhow::ensure!(sum == self.used_bytes, "sum {} != used {}", sum, self.used_bytes);
+        let hot_sum: u64 = self
+            .hot
+            .iter()
+            .map(|k| {
+                self.entries
+                    .get(k)
+                    .map(|e| e.size_bytes)
+                    .unwrap_or(u64::MAX / 4) // poisons the sum if dangling
+            })
+            .sum();
+        anyhow::ensure!(
+            hot_sum == self.hot_used_bytes,
+            "hot sum {} != hot used {} (or dangling hot key)",
+            hot_sum,
+            self.hot_used_bytes
+        );
+        for e in self.entries.values() {
+            anyhow::ensure!(
+                e.size_bytes == e.tokens as u64 * self.kv_bytes_per_token,
+                "entry {} size/token mismatch",
+                e.key
+            );
+        }
+        Ok(())
+    }
+
+    /// Inspect a resident entry by key (tests).
+    pub fn entry(&self, key: u64) -> Option<&Entry> {
+        self.entries.get(&key)
+    }
+
+    /// Whether `key` is resident in the DRAM hot tier.
+    pub fn is_hot(&self, key: u64) -> bool {
+        self.hot.contains(&key)
+    }
+}
+
+impl CacheStore for TieredStore {
+    fn lookup(&mut self, req: &Request, now_s: f64) -> HitInfo {
+        TieredStore::lookup(self, req, now_s)
+    }
+    fn admit(
+        &mut self,
+        req: &Request,
+        cached_tokens: u32,
+        payload: Option<Vec<u8>>,
+        now_s: f64,
+    ) -> Vec<Evicted> {
+        TieredStore::admit(self, req, cached_tokens, payload, now_s)
+    }
+    fn peek(&self, req: &Request) -> u32 {
+        self.entries
+            .get(&req.prefix_key())
+            .map(|e| prefix_hit_tokens(e, req))
+            .unwrap_or(0)
+    }
+    fn resize(&mut self, new_capacity_bytes: u64, now_s: f64) -> Vec<Evicted> {
+        TieredStore::resize(self, new_capacity_bytes, now_s)
+    }
+    fn clear(&mut self) {
+        TieredStore::clear(self)
+    }
+    fn stats(&self) -> CacheStats {
+        self.stats
+    }
+    fn check_invariants(&self) -> anyhow::Result<()> {
+        TieredStore::check_invariants(self)
+    }
+    fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+    fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+    fn policy(&self) -> PolicyKind {
+        self.policy
+    }
+    fn tier_bytes(&self) -> TierBytes {
+        TierBytes {
+            ssd: self.capacity_bytes - self.hot_capacity_bytes,
+            dram: self.hot_capacity_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TaskKind;
+
+    fn req(ctx_id: u64, version: u32, context: u32, new: u32) -> Request {
+        Request {
+            id: 0,
+            task: TaskKind::Conversation,
+            context_id: ctx_id,
+            context_version: version,
+            context_tokens: context,
+            new_tokens: new,
+            output_tokens: 10,
+            arrival_s: 0.0,
+        }
+    }
+
+    /// Store with `n` tokens of total capacity at 1 byte/token and a
+    /// given hot fraction.
+    fn store(n_tokens: u64, hot_fraction: f64, policy: PolicyKind) -> TieredStore {
+        TieredStore::new(n_tokens, hot_fraction, 1, policy)
+    }
+
+    #[test]
+    fn admit_lands_hot_and_hit_reports_hot_tokens() {
+        let mut m = store(1000, 0.5, PolicyKind::Lcs);
+        let r = req(1, 0, 100, 10);
+        assert!(!m.lookup(&r, 0.0).hit);
+        m.admit(&r, 110, None, 0.0);
+        assert!(m.is_hot(1), "fresh admission must land in the hot tier");
+        let h = m.lookup(&req(1, 1, 110, 10), 1.0);
+        assert!(h.hit);
+        assert_eq!(h.hit_tokens, 110);
+        assert_eq!(h.hot_tokens, 110, "hot hits are served from DRAM");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hot_overflow_demotes_lowest_score_deterministically() {
+        // Hot tier fits one 100-token entry; two admissions → the older
+        // (lower LRU score) one demotes to SSD but stays resident.
+        let mut m = store(1000, 0.1, PolicyKind::Lru);
+        for (id, t) in [(1u64, 0.0), (2u64, 1.0)] {
+            let r = req(id, 0, 0, 100);
+            m.lookup(&r, t);
+            m.admit(&r, 100, None, t);
+        }
+        assert_eq!(m.len(), 2, "demotion must not evict");
+        assert!(!m.is_hot(1) && m.is_hot(2));
+        assert_eq!(m.demotions(), 1);
+        // A cold hit promotes back (and demotes the other).
+        let h = m.lookup(&req(1, 1, 100, 10), 2.0);
+        assert!(h.hit && h.hot_tokens == 0, "cold hit serves from SSD");
+        assert!(m.is_hot(1) && !m.is_hot(2));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_prefers_cold_tier() {
+        // Capacity 200 / hot 100: entries of 100 tokens each. The third
+        // admission must evict the *cold* resident, not the hot one.
+        let mut m = store(200, 0.5, PolicyKind::Lru);
+        for (id, t) in [(1u64, 0.0), (2u64, 1.0), (3u64, 2.0)] {
+            let r = req(id, 0, 0, 100);
+            m.lookup(&r, t);
+            m.admit(&r, 100, None, t);
+            m.check_invariants().unwrap();
+        }
+        assert_eq!(m.len(), 2);
+        // 1 was demoted cold by 2, then evicted to fit 3; 2 went cold.
+        assert!(m.entry(1).is_none(), "cold entry 1 is the eviction victim");
+        assert!(m.entry(2).is_some() && m.entry(3).is_some());
+        assert!(m.is_hot(3));
+    }
+
+    #[test]
+    fn oversized_for_dram_goes_cold_oversized_for_store_rejected() {
+        let mut m = store(1000, 0.1, PolicyKind::Lcs);
+        let big = req(1, 0, 0, 500); // > 100-byte hot tier, fits SSD
+        m.lookup(&big, 0.0);
+        m.admit(&big, 500, None, 0.0);
+        assert_eq!(m.len(), 1);
+        assert!(!m.is_hot(1), "DRAM-oversized entries stay on SSD");
+        let huge = req(2, 0, 0, 2000);
+        m.lookup(&huge, 1.0);
+        assert!(m.admit(&huge, 2000, None, 1.0).is_empty());
+        assert_eq!(m.stats.rejected_too_large, 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn resize_recomputes_split_and_evicts_to_fit() {
+        let mut m = store(1000, 0.5, PolicyKind::Lru);
+        for id in 0..8 {
+            let r = req(id, 0, 0, 100);
+            m.lookup(&r, id as f64);
+            m.admit(&r, 100, None, id as f64);
+        }
+        assert_eq!(m.len(), 8);
+        let ev = m.resize(300, 10.0);
+        assert_eq!(ev.len(), 5);
+        assert_eq!(m.hot_capacity_bytes(), 150);
+        assert!(m.hot_used_bytes() <= 150);
+        assert!(m.used_bytes() <= 300);
+        m.check_invariants().unwrap();
+        // LRU keeps the most recent.
+        assert!(m.entry(7).is_some());
+    }
+
+    #[test]
+    fn zero_hot_fraction_degenerates_to_cold_only() {
+        let mut m = store(1000, 0.0, PolicyKind::Lcs);
+        let r = req(1, 0, 0, 100);
+        m.lookup(&r, 0.0);
+        m.admit(&r, 100, None, 0.0);
+        assert_eq!(m.hot_len(), 0);
+        let h = m.lookup(&req(1, 1, 100, 10), 1.0);
+        assert!(h.hit);
+        assert_eq!(h.hot_tokens, 0);
+        assert_eq!(m.tier_bytes().dram, 0);
+        assert_eq!(m.tier_bytes().ssd, 1000);
+    }
+
+    #[test]
+    fn tier_bytes_reports_provisioned_split() {
+        let m = store(1600, 1.0 / 16.0, PolicyKind::Lcs);
+        let t = m.tier_bytes();
+        assert_eq!(t.dram, 100);
+        assert_eq!(t.ssd, 1500);
+        assert_eq!(t.total(), 1600);
+    }
+
+    #[test]
+    fn clear_resets_both_tiers() {
+        let mut m = store(1000, 0.5, PolicyKind::Fifo);
+        for id in 0..4 {
+            let r = req(id, 0, 0, 50);
+            m.lookup(&r, 0.0);
+            m.admit(&r, 50, None, 0.0);
+        }
+        m.clear();
+        assert_eq!(m.len(), 0);
+        assert_eq!(m.used_bytes(), 0);
+        assert_eq!(m.hot_used_bytes(), 0);
+        m.check_invariants().unwrap();
+    }
+}

@@ -11,7 +11,8 @@ use super::{Ci, EmbodiedModel};
 pub struct CarbonBreakdown {
     /// E × CI over all periods.
     pub operational_g: f64,
-    /// Eq. 4 cache (SSD) embodied.
+    /// Eq. 4 cache-tier embodied (SSD, plus any DRAM hot tier at its
+    /// own intensity).
     pub cache_embodied_g: f64,
     /// Amortized GPU/CPU/Mem embodied.
     pub other_embodied_g: f64,
@@ -73,7 +74,8 @@ impl CarbonAccountant {
     /// Account one period of `duration_s` with `energy_j` consumed at
     /// carbon intensity `ci`, while `cache_alloc_bytes` of SSD were
     /// provisioned. (Eq. 5 with piecewise-constant CI — assumption 2 of
-    /// §5.4.2.)
+    /// §5.4.2.) Single-tier convenience over
+    /// [`Self::record_period_split`].
     pub fn record_period(
         &mut self,
         duration_s: f64,
@@ -81,11 +83,30 @@ impl CarbonAccountant {
         ci: Ci,
         cache_alloc_bytes: f64,
     ) {
+        self.record_period_split(duration_s, energy_j, ci, cache_alloc_bytes, 0.0);
+    }
+
+    /// [`Self::record_period`] with the provisioned cache split by
+    /// storage tier: `ssd_alloc_bytes` at the SSD embodied intensity and
+    /// `dram_alloc_bytes` at the DRAM intensity (the
+    /// [`crate::cache::TieredStore`] hot tier). Both land in the
+    /// breakdown's `cache_embodied_g` — they are the cache tier's Eq. 4
+    /// term, whichever medium holds it.
+    pub fn record_period_split(
+        &mut self,
+        duration_s: f64,
+        energy_j: f64,
+        ci: Ci,
+        ssd_alloc_bytes: f64,
+        dram_alloc_bytes: f64,
+    ) {
         debug_assert!(duration_s >= 0.0 && energy_j >= 0.0);
         self.acc.operational_g += ci.operational_g(energy_j);
-        self.acc.cache_embodied_g += self
-            .embodied
-            .cache_amortized_g(cache_alloc_bytes, duration_s);
+        self.acc.cache_embodied_g += self.embodied.tiered_cache_amortized_g(
+            ssd_alloc_bytes,
+            dram_alloc_bytes,
+            duration_s,
+        );
         self.acc.other_embodied_g += self.embodied.non_storage_amortized_g(duration_s);
         self.elapsed_s += duration_s;
         self.energy_j += energy_j;
@@ -154,6 +175,23 @@ mod tests {
         assert!((ba.total_g() - bb.total_g()).abs() < 1e-12);
         assert_eq!(a.elapsed_s(), 20.0);
         assert_eq!(a.energy_j(), 200.0);
+    }
+
+    #[test]
+    fn split_period_prices_each_tier() {
+        let m = EmbodiedModel::default();
+        let mut a = CarbonAccountant::new(m.clone());
+        a.record_period_split(3600.0, 1000.0, Ci(100.0), 15.0 * TB, TB);
+        let want = m.tiered_cache_amortized_g(15.0 * TB, TB, 3600.0);
+        assert!((a.breakdown().cache_embodied_g - want).abs() < 1e-9);
+        // DRAM-for-SSD swap at equal total capacity costs *more* embodied
+        // (the tiered trade-off).
+        let mut b = CarbonAccountant::new(m);
+        b.record_period(3600.0, 1000.0, Ci(100.0), 16.0 * TB);
+        assert!(a.breakdown().cache_embodied_g > b.breakdown().cache_embodied_g);
+        // Operational and other terms are tier-agnostic.
+        assert_eq!(a.breakdown().operational_g, b.breakdown().operational_g);
+        assert_eq!(a.breakdown().other_embodied_g, b.breakdown().other_embodied_g);
     }
 
     #[test]

@@ -11,18 +11,27 @@ pub const TB: f64 = 1e12;
 /// Defaults reproduce Table 1: AMD 7453 CPU 9.3 kg, 4× NVIDIA L40
 /// 106.4 kg, 512 GB DDR4 30.8 kg, SSD 30 kg/TB (ACT [26]; §6.6.3 sweeps
 /// 30–90), all amortized over a 5-year lifetime (§2.3; §6.6.2 sweeps SSD
-/// 3–7 years).
+/// 3–7 years). The per-byte DRAM intensity (Table 1's own 30.8 kg over
+/// 512 GB ≈ 60 kg/TB — about **2× SSD**) prices the
+/// [`crate::cache::TieredStore`] hot tier: per-tier intensity is the
+/// knob that moves the Eq. 5 operational-vs-embodied crossover.
 #[derive(Debug, Clone)]
 pub struct EmbodiedModel {
     /// GPU embodied carbon, grams (whole GPU complement).
     pub gpu_g: f64,
+    /// DRAM embodied carbon, grams (the platform's base 512 GB — not the
+    /// tiered cache's hot tier, which is priced per byte below).
+    pub mem_g: f64,
     /// CPU embodied carbon, grams.
     pub cpu_g: f64,
-    /// DRAM embodied carbon, grams.
-    pub mem_g: f64,
     /// SSD embodied carbon per byte, grams (Eq. 4's `C_e,SSD^Unit`).
     pub ssd_g_per_byte: f64,
-    /// Lifetime of compute components (GPU/CPU/Mem), seconds.
+    /// DRAM embodied carbon per byte, grams — Eq. 4 applied to the
+    /// tiered store's hot tier. Default derives from Table 1's own DRAM
+    /// row (30.8 kg / 512 GB).
+    pub dram_g_per_byte: f64,
+    /// Lifetime of compute components (GPU/CPU/Mem — including the DRAM
+    /// cache tier, which lives and dies with the host), seconds.
     pub lt_compute_s: f64,
     /// Lifetime of the SSD tier, seconds.
     pub lt_ssd_s: f64,
@@ -35,6 +44,7 @@ impl Default for EmbodiedModel {
             cpu_g: 9.3e3,
             mem_g: 30.8e3,
             ssd_g_per_byte: 30.0e3 / TB, // 30 kgCO2e/TB
+            dram_g_per_byte: 30.8e3 / 512e9, // Table 1: 30.8 kg / 512 GB
             lt_compute_s: 5.0 * SECONDS_PER_YEAR,
             lt_ssd_s: 5.0 * SECONDS_PER_YEAR,
         }
@@ -77,6 +87,26 @@ impl EmbodiedModel {
     /// `alloc_bytes` is the *provisioned* SSD capacity.
     pub fn cache_amortized_g(&self, alloc_bytes: f64, duration_s: f64) -> f64 {
         alloc_bytes * self.ssd_g_per_byte * duration_s / self.lt_ssd_s
+    }
+
+    /// Eq. 4 for the DRAM hot tier of a tiered cache: provisioned DRAM
+    /// bytes at the DRAM unit intensity, amortized over the *compute*
+    /// lifetime (the memory lives and dies with the host).
+    pub fn dram_cache_amortized_g(&self, alloc_bytes: f64, duration_s: f64) -> f64 {
+        alloc_bytes * self.dram_g_per_byte * duration_s / self.lt_compute_s
+    }
+
+    /// Per-tier Eq. 4 over a provisioned
+    /// [`crate::cache::TierBytes`]-style split: SSD bytes at the SSD
+    /// intensity plus DRAM bytes at the DRAM intensity.
+    pub fn tiered_cache_amortized_g(
+        &self,
+        ssd_bytes: f64,
+        dram_bytes: f64,
+        duration_s: f64,
+    ) -> f64 {
+        self.cache_amortized_g(ssd_bytes, duration_s)
+            + self.dram_cache_amortized_g(dram_bytes, duration_s)
     }
 
     /// Full-platform embodied total (Eq. 3) at a given SSD allocation,
@@ -138,6 +168,31 @@ mod tests {
         assert!(
             m3.cache_amortized_g(TB, 3600.0) > m7.cache_amortized_g(TB, 3600.0)
         );
+    }
+
+    #[test]
+    fn dram_tier_is_about_twice_ssd_intensity() {
+        let m = EmbodiedModel::default();
+        // Table 1's own DRAM row: 30.8 kg / 512 GB ≈ 60.2 kg/TB — ~2×
+        // the 30 kg/TB SSD intensity (the tiered-store trade-off).
+        let ratio = m.dram_g_per_byte / m.ssd_g_per_byte;
+        assert!(ratio > 1.8 && ratio < 2.2, "ratio {ratio}");
+        // 1 TB of DRAM held for the whole compute lifetime = its full
+        // unit carbon (~60.2 kg).
+        let g = m.dram_cache_amortized_g(TB, m.lt_compute_s);
+        assert!((g - 30.8e3 * TB / 512e9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tiered_amortization_sums_per_tier() {
+        let m = EmbodiedModel::default();
+        let want = m.cache_amortized_g(15.0 * TB, 3600.0)
+            + m.dram_cache_amortized_g(TB, 3600.0);
+        let got = m.tiered_cache_amortized_g(15.0 * TB, TB, 3600.0);
+        assert!((got - want).abs() < 1e-12);
+        // All-SSD split reduces to the single-tier Eq. 4.
+        let single = m.tiered_cache_amortized_g(16.0 * TB, 0.0, 3600.0);
+        assert!((single - m.cache_amortized_g(16.0 * TB, 3600.0)).abs() < 1e-12);
     }
 
     #[test]

@@ -46,6 +46,10 @@ pub struct PowerModel {
     pub ssd_idle_w_per_tb: f64,
     /// SSD active (streaming) watts per provisioned TB.
     pub ssd_active_w_per_tb: f64,
+    /// Standing watts per provisioned TB of DRAM *cache* tier (the
+    /// tiered store's hot tier, on top of the platform's base `mem_w`).
+    /// Refresh/standby-dominated: ≈ 0.1 W/GB.
+    pub dram_cache_w_per_tb: f64,
 }
 
 impl Default for PowerModel {
@@ -60,6 +64,9 @@ impl Default for PowerModel {
             // One 4 TB-class NVMe device ≈ 8 W active / 1.5 W idle → per-TB.
             ssd_idle_w_per_tb: 0.4,
             ssd_active_w_per_tb: 2.0,
+            // DDR4 background/refresh ≈ 0.1 W/GB for provisioned-but-
+            // mostly-standby cache capacity.
+            dram_cache_w_per_tb: 100.0,
         }
     }
 }
@@ -85,6 +92,23 @@ impl PowerModel {
         ssd_alloc_tb: f64,
         ssd_active: f64,
     ) -> PowerSample {
+        self.sample_split(gpu_util, cpu_util, ssd_alloc_tb, 0.0, ssd_active)
+    }
+
+    /// [`Self::sample`] with the provisioned cache split by tier:
+    /// `dram_cache_tb` (the tiered store's hot tier) adds its standing
+    /// draw to the memory component; `ssd_alloc_tb` prices only the SSD
+    /// capacity tier. The engine feeds this from
+    /// [`crate::cache::CacheStore::tier_bytes`], so single-tier stores
+    /// reproduce [`Self::sample`] exactly.
+    pub fn sample_split(
+        &self,
+        gpu_util: f64,
+        cpu_util: f64,
+        ssd_alloc_tb: f64,
+        dram_cache_tb: f64,
+        ssd_active: f64,
+    ) -> PowerSample {
         let gu = gpu_util.clamp(0.0, 1.0);
         let cu = cpu_util.clamp(0.0, 1.0);
         let sa = ssd_active.clamp(0.0, 1.0);
@@ -92,7 +116,7 @@ impl PowerModel {
             gpu_w: self.n_gpus as f64
                 * (self.gpu_idle_w + (self.gpu_peak_w - self.gpu_idle_w) * gu),
             cpu_w: self.cpu_idle_w + (self.cpu_peak_w - self.cpu_idle_w) * cu,
-            mem_w: self.mem_w,
+            mem_w: self.mem_w + dram_cache_tb * self.dram_cache_w_per_tb,
             ssd_w: ssd_alloc_tb
                 * (self.ssd_idle_w_per_tb
                     + (self.ssd_active_w_per_tb - self.ssd_idle_w_per_tb) * sa),
@@ -147,6 +171,19 @@ mod tests {
         let m = PowerModel::default();
         let p = m.sample(0.5, 0.5, 8.0, 0.2).total_w();
         assert!((m.energy_j(0.5, 0.5, 8.0, 0.2, 10.0) - 10.0 * p).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dram_cache_tier_adds_standing_memory_draw() {
+        let m = PowerModel::default();
+        let base = m.sample(0.5, 0.5, 15.0, 0.2);
+        let split = m.sample_split(0.5, 0.5, 15.0, 1.0, 0.2);
+        // 1 TB hot tier at 0.1 W/GB ≈ 100 W, on the memory component only.
+        assert!((split.mem_w - base.mem_w - 100.0).abs() < 1e-9);
+        assert_eq!(split.ssd_w, base.ssd_w);
+        assert_eq!(split.gpu_w, base.gpu_w);
+        // dram = 0 reproduces sample() exactly.
+        assert_eq!(m.sample_split(0.5, 0.5, 15.0, 0.0, 0.2), base);
     }
 
     #[test]

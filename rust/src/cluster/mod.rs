@@ -20,7 +20,11 @@
 //!   discrete-event engine ([`crate::sim::ReplicaEngine`]) in lockstep to
 //!   each arrival instant, routes the request against live queue/cache
 //!   state, and runs each replica's GreenCache controller independently
-//!   at its own decision boundaries.
+//!   at its own decision boundaries. The per-replica cache is any
+//!   [`crate::cache::CacheStore`] backend ([`ClusterSpec::cache`]):
+//!   private local/tiered stores, or one fleet-level
+//!   [`crate::cache::SharedStore`] pool whose buffered writes the driver
+//!   syncs at every router instant.
 //! * [`ClusterResult`] — per-replica outcomes plus fleet-level SLO /
 //!   carbon / hit-rate aggregates (exact merges, not re-simulations).
 //!

@@ -30,7 +30,9 @@ pub struct ReplicaView {
     /// interval, gCO₂e/kWh (a persistence forecast of the interval).
     pub ci_gpkwh: f64,
     /// Context-prefix tokens of the request already cached on this
-    /// replica (from [`crate::cache::CacheManager::peek`]).
+    /// replica (from [`crate::cache::CacheStore::peek`]; under a shared
+    /// fleet pool every replica reports the same value, so the affinity
+    /// term cancels and placement follows CI and queue pressure alone).
     pub affinity_tokens: u32,
 }
 

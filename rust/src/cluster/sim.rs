@@ -1,6 +1,9 @@
 //! Lockstep multi-replica simulation: spec, driver and fleet aggregation.
 
-use crate::cache::{CacheManager, CacheStats, PolicyKind};
+use crate::cache::{
+    CacheStats, CacheStore, CacheVariant, LocalStore, PolicyKind, SharedStore, TieredStore,
+    TIERED_HOT_FRACTION,
+};
 use crate::carbon::{CarbonAccountant, TB};
 use crate::ci::Grid;
 use crate::coordinator::{GreenCacheConfig, GreenCacheController};
@@ -96,6 +99,14 @@ pub struct ClusterSpec {
     /// so this stays [`Stepping::FastForward`] outside equivalence
     /// tests.
     pub stepping: Stepping,
+    /// Cache backend of the fleet (`greencache cluster --cache`):
+    /// [`CacheVariant::Local`] gives every replica its own single-tier
+    /// store, [`CacheVariant::Tiered`] its own DRAM+SSD store, and
+    /// [`CacheVariant::Shared`] one fleet-level [`SharedStore`] pool
+    /// accessed through per-replica handles at lockstep sync instants —
+    /// per-replica budgets become slices of the pool, so total fleet
+    /// capacity matches the `local` fleet exactly.
+    pub cache: CacheVariant,
 }
 
 impl ClusterSpec {
@@ -115,6 +126,7 @@ impl ClusterSpec {
             fixed_rps: None,
             fixed_ci: None,
             stepping: Stepping::default(),
+            cache: CacheVariant::Local,
         }
     }
 
@@ -316,7 +328,7 @@ impl ClusterResult {
 /// Internal per-replica live state during a fleet run.
 struct Rep {
     spec: ReplicaSpec,
-    engine: ReplicaEngine,
+    engine: ReplicaEngine<'static>,
     controller: Box<dyn Controller>,
     /// Absolute hourly CI trace (history + evaluated horizon).
     ci: Vec<f64>,
@@ -355,6 +367,10 @@ pub struct ClusterSim {
     reps: Vec<Rep>,
     load_trace: LoadTrace,
     base_hour: usize,
+    /// The fleet pool when [`ClusterSpec::cache`] is
+    /// [`CacheVariant::Shared`]: the driver syncs its buffered writes at
+    /// every router instant (see [`SharedStore`]'s protocol docs).
+    shared: Option<SharedStore>,
 }
 
 impl ClusterSim {
@@ -373,6 +389,31 @@ impl ClusterSim {
             None => LoadTrace::azure_like(total_days, fleet_peak, spec.seed ^ 0x10AD),
         };
         let policy = spec.effective_policy();
+
+        // Shared mode: one pool, provisioned as per-replica slices so
+        // fleet capacity equals the per-replica fleets it compares to.
+        let shared = match spec.cache {
+            CacheVariant::Shared => {
+                let kv = spec.replicas[0].model.kv_bytes_per_token();
+                assert!(
+                    spec.replicas
+                        .iter()
+                        .all(|r| r.model.kv_bytes_per_token() == kv),
+                    "a shared store pools one KV format; mixed-model fleets must use \
+                     per-replica caches"
+                );
+                let slices: Vec<u64> = spec
+                    .replicas
+                    .iter()
+                    .map(|r| match spec.baseline {
+                        Baseline::NoCache => 0u64,
+                        _ => r.max_cache_tb as u64 * TB as u64,
+                    })
+                    .collect();
+                Some(SharedStore::new(kv, policy, &slices))
+            }
+            _ => None,
+        };
 
         let mut reps = Vec::with_capacity(spec.replicas.len());
         for (i, r) in spec.replicas.iter().enumerate() {
@@ -393,8 +434,20 @@ impl ClusterSim {
                 Baseline::NoCache => 0u64,
                 _ => max_bytes,
             };
-            let mut cache =
-                CacheManager::new(capacity, r.model.kv_bytes_per_token(), policy);
+            let mut cache: Box<dyn CacheStore> = match (&shared, spec.cache) {
+                (Some(pool), _) => Box::new(pool.handle(i)),
+                (None, CacheVariant::Tiered) => Box::new(TieredStore::new(
+                    capacity,
+                    TIERED_HOT_FRACTION,
+                    r.model.kv_bytes_per_token(),
+                    policy,
+                )),
+                (None, _) => Box::new(LocalStore::new(
+                    capacity,
+                    r.model.kv_bytes_per_token(),
+                    policy,
+                )),
+            };
 
             // Pre-day bootstrap shared with `experiments::run_day` via
             // `GreenCacheController::bootstrapped`. (Caches start cold
@@ -423,7 +476,12 @@ impl ClusterSim {
                     spec.seed ^ (i as u64),
                 );
                 Box::new(GreenCacheController::bootstrapped(
-                    gc_cfg, profile, ci_hist, load_hist, base_hour, &mut cache,
+                    gc_cfg,
+                    profile,
+                    ci_hist,
+                    load_hist,
+                    base_hour,
+                    cache.as_mut(),
                 ))
             } else {
                 Box::new(FixedController)
@@ -456,6 +514,7 @@ impl ClusterSim {
             reps,
             load_trace,
             base_hour,
+            shared,
         }
     }
 
@@ -466,6 +525,7 @@ impl ClusterSim {
             mut reps,
             load_trace,
             base_hour,
+            shared,
         } = self;
         let horizon_s = spec.hours as f64 * 3600.0;
         let last_load = load_trace.hourly_rps.len() - 1;
@@ -485,6 +545,12 @@ impl ClusterSim {
             // the router reads queues and caches.
             for rep in reps.iter_mut() {
                 advance(rep, base_hour, next_arrival);
+            }
+            // Shared pool: apply the window's buffered writes in
+            // simulated-time order, so the router's peek and the chosen
+            // replica's lookup read a pool consistent with this instant.
+            if let Some(pool) = &shared {
+                pool.sync();
             }
             // A tripped overload valve anywhere freezes that engine's
             // clock; stop the stream rather than distort its statistics.
@@ -512,21 +578,34 @@ impl ClusterSim {
         }
 
         let hours = spec.hours;
-        let outcomes: Vec<ReplicaOutcome> = reps
+        // Drain every engine first: with a shared pool, a replica's
+        // final write-through admissions are buffered and only attribute
+        // their insertions/evictions at the post-drain sync below, so
+        // stats are read in a second pass.
+        let finished: Vec<(ReplicaSpec, usize, Vec<f64>, SimResult, Box<dyn CacheStore>)> =
+            reps.into_iter()
+                .map(|rep| {
+                    let Rep {
+                        spec: rspec,
+                        engine,
+                        mut controller,
+                        ci,
+                        routed,
+                        ..
+                    } = rep;
+                    let ci_slice: &[f64] = &ci;
+                    let last = ci_slice.len() - 1;
+                    let ci_fn = move |h: usize| ci_slice[(base_hour + h).min(last)];
+                    let (sim, cache) = engine.finish(horizon_s, &ci_fn, controller.as_mut());
+                    (rspec, routed, ci, sim, cache)
+                })
+                .collect();
+        if let Some(pool) = &shared {
+            pool.sync();
+        }
+        let outcomes: Vec<ReplicaOutcome> = finished
             .into_iter()
-            .map(|rep| {
-                let Rep {
-                    spec: rspec,
-                    engine,
-                    mut controller,
-                    ci,
-                    routed,
-                    ..
-                } = rep;
-                let ci_slice: &[f64] = &ci;
-                let last = ci_slice.len() - 1;
-                let ci_fn = move |h: usize| ci_slice[(base_hour + h).min(last)];
-                let (sim, cache) = engine.finish(horizon_s, &ci_fn, controller.as_mut());
+            .map(|(rspec, routed, ci, sim, cache)| {
                 let mean_cache_tb = sim.mean_cache_tb(cache.capacity_bytes());
                 let eval = &ci[base_hour..(base_hour + hours).min(ci.len())];
                 let mean_ci = if eval.is_empty() {
@@ -768,6 +847,105 @@ mod tests {
         let b = mk(RouterPolicy::CarbonGreedy);
         assert_eq!(a.completed, b.completed);
         assert!((a.total_carbon_g - b.total_carbon_g).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_store_on_one_replica_is_byte_identical_to_local() {
+        // A one-replica pool is a local store: same arrivals, same
+        // admissions (applied before every subsequent lookup by the
+        // lockstep sync), same evictions at the same timestamps. This
+        // pins the whole buffered-write protocol against the reference
+        // backend end to end.
+        let mk = |cache| {
+            let mut spec = ClusterSpec::homogeneous(
+                Model::Llama70B,
+                Task::Conversation,
+                &[Grid::Es],
+                RouterPolicy::RoundRobin,
+            );
+            spec.baseline = Baseline::FullCache;
+            spec.hours = 2;
+            spec.fixed_rps = Some(0.35);
+            spec.cache = cache;
+            run(&spec)
+        };
+        let local = mk(CacheVariant::Local);
+        let pooled = mk(CacheVariant::Shared);
+        assert_eq!(local.completed, pooled.completed);
+        assert_eq!(local.table(), pooled.table());
+        assert_eq!(
+            local.replicas[0].cache_stats,
+            pooled.replicas[0].cache_stats
+        );
+        assert!((local.total_carbon_g - pooled.total_carbon_g).abs() < 1e-9);
+        assert!((local.mean_ttft_s - pooled.mean_ttft_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shared_store_lifts_fleet_hit_rate_at_equal_capacity() {
+        // The acceptance scenario for cross-replica sharing: FR+MISO
+        // under carbon-greedy routing. Sticky affinity keeps most
+        // conversations on FR, but queue spikes and the 0.93 CI-gap pull
+        // bounce some onto MISO and back — per-replica LocalStores lose
+        // every bounced prefix, the pool serves it from wherever it was
+        // written. Total fleet capacity is identical (slices == budgets).
+        // The rate exceeds one replica's capacity (but not the fleet's)
+        // so spillover — and therefore bouncing — is sustained, not
+        // incidental.
+        let mk = |cache| {
+            let mut spec = fr_miso(RouterPolicy::CarbonGreedy);
+            spec.hours = 2;
+            spec.fixed_rps = Some(1.2);
+            spec.cache = cache;
+            run(&spec)
+        };
+        let local = mk(CacheVariant::Local);
+        let pooled = mk(CacheVariant::Shared);
+        assert!(
+            (local.fleet_mean_cache_tb - pooled.fleet_mean_cache_tb).abs() < 1e-9,
+            "comparison must be at equal fleet capacity: {} vs {} TB",
+            local.fleet_mean_cache_tb,
+            pooled.fleet_mean_cache_tb
+        );
+        assert!(
+            pooled.token_hit_rate > local.token_hit_rate,
+            "shared pool must lift fleet hit rate: shared {:.4} !> local {:.4}",
+            pooled.token_hit_rate,
+            local.token_hit_rate
+        );
+        // Attribution stays exact under pooling: the fleet rate is still
+        // the token-weighted merge of per-replica stats.
+        let hit: u64 = pooled.replicas.iter().map(|x| x.cache_stats.hit_tokens).sum();
+        let input: u64 = pooled
+            .replicas
+            .iter()
+            .map(|x| x.cache_stats.input_tokens)
+            .sum();
+        assert!((pooled.token_hit_rate - hit as f64 / input as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiered_fleet_cuts_latency_and_pays_embodied_carbon() {
+        let mk = |cache| {
+            let mut spec = fr_miso(RouterPolicy::RoundRobin);
+            spec.cache = cache;
+            run(&spec)
+        };
+        let local = mk(CacheVariant::Local);
+        let tiered = mk(CacheVariant::Tiered);
+        assert_eq!(local.completed, tiered.completed);
+        assert!(
+            tiered.mean_ttft_s < local.mean_ttft_s,
+            "DRAM hot hits must cut fleet TTFT: {:.4} !< {:.4}",
+            tiered.mean_ttft_s,
+            local.mean_ttft_s
+        );
+        assert!(
+            tiered.total_carbon_g > local.total_carbon_g,
+            "the DRAM tier's power + embodied must cost carbon: {:.1} !> {:.1} g",
+            tiered.total_carbon_g,
+            local.total_carbon_g
+        );
     }
 
     #[test]

@@ -3,7 +3,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::cache::CacheManager;
+use crate::cache::CacheStore;
 use crate::carbon::{EmbodiedModel, TB};
 use crate::ci::CiPredictor;
 use crate::load::Sarima;
@@ -163,7 +163,7 @@ impl GreenCacheController {
         ci_history: Vec<f64>,
         load_history: Vec<f64>,
         base_hour: usize,
-        cache: &mut crate::cache::CacheManager,
+        cache: &mut dyn CacheStore,
     ) -> Self {
         let mut ctl = Self::new(cfg, profile, ci_history, load_history, base_hour);
         let first = ctl.decide(base_hour);
@@ -311,7 +311,7 @@ impl Controller for GreenCacheController {
         &mut self,
         hour: usize,
         obs: &IntervalObservation,
-        cache: &mut CacheManager,
+        cache: &mut dyn CacheStore,
     ) {
         // Record the completed interval's observations (§5.3's online
         // step-ahead regime).
@@ -329,7 +329,7 @@ impl Controller for GreenCacheController {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cache::{CacheManager, PolicyKind, KV_BYTES_PER_TOKEN_70B};
+    use crate::cache::{LocalStore, PolicyKind, KV_BYTES_PER_TOKEN_70B};
     use crate::ci::Grid;
     use crate::load::LoadTrace;
     use crate::profiler::{profile, ProfilerConfig, ProfileTable};
@@ -422,7 +422,7 @@ mod tests {
             ..GreenCacheConfig::default_70b()
         });
         let mut cache =
-            CacheManager::new(16 * TB as u64, KV_BYTES_PER_TOKEN_70B, PolicyKind::Lcs);
+            LocalStore::new(16 * TB as u64, KV_BYTES_PER_TOKEN_70B, PolicyKind::Lcs);
         let obs = IntervalObservation {
             hour: 0,
             observed_rps: 0.4,

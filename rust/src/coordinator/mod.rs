@@ -20,12 +20,12 @@ pub use greencache::{
 
 /// Baseline controllers (§6.1's comparison points).
 pub mod baselines {
-    use crate::cache::CacheManager;
+    use crate::cache::CacheStore;
     use crate::sim::{Controller, IntervalObservation};
 
     /// `No Cache` and `Full Cache`: a fixed capacity, never resized.
     pub struct Fixed;
     impl Controller for Fixed {
-        fn on_interval(&mut self, _: usize, _: &IntervalObservation, _: &mut CacheManager) {}
+        fn on_interval(&mut self, _: usize, _: &IntervalObservation, _: &mut dyn CacheStore) {}
     }
 }

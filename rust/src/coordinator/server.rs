@@ -2,7 +2,7 @@
 //!
 //! This is the end-to-end serving stack on the tiny-Llama model: a
 //! request arrives with token ids and a context id; the router looks the
-//! context up in the [`CacheManager`] (payload = serialized KV bytes at a
+//! context up in the [`LocalStore`] (payload = serialized KV bytes at a
 //! chunk boundary), the [`Engine`] resumes prefill after the cached
 //! prefix, decodes greedily, and the extended KV snapshot is written back
 //! to the cache. Under `--features pjrt` the engine is the real PJRT
@@ -15,7 +15,7 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::cache::{CacheManager, PolicyKind};
+use crate::cache::{LocalStore, PolicyKind};
 use crate::carbon::{CarbonAccountant, Ci, EmbodiedModel};
 use crate::metrics::{LatencyStats, Slo, SloTracker};
 use crate::runtime::{Engine, KvState};
@@ -99,7 +99,7 @@ impl Default for ServerConfig {
 /// request-level parallelism on one client adds nothing on this testbed.)
 pub struct Server {
     engine: Engine,
-    cache: CacheManager,
+    cache: LocalStore,
     cfg: ServerConfig,
 }
 
@@ -107,12 +107,12 @@ impl Server {
     /// A server over `engine` with a fresh cache sized by `cfg`.
     pub fn new(engine: Engine, cfg: ServerConfig) -> Self {
         let kv_per_token = engine.config().kv_bytes_per_token() as u64;
-        let cache = CacheManager::new(cfg.cache_bytes, kv_per_token, cfg.policy);
+        let cache = LocalStore::new(cfg.cache_bytes, kv_per_token, cfg.policy);
         Server { engine, cache, cfg }
     }
 
     /// The server's context cache.
-    pub fn cache(&self) -> &CacheManager {
+    pub fn cache(&self) -> &LocalStore {
         &self.cache
     }
 

@@ -90,7 +90,7 @@ pub fn table3(quick: bool) -> Csv {
             let mut rates = Vec::new();
             for policy in [PolicyKind::Fifo, PolicyKind::Lru, PolicyKind::Lcs] {
                 let mut wl = task.make_workload(99);
-                let mut cache = CacheManager::new(
+                let mut cache = LocalStore::new(
                     tb * TB as u64,
                     Model::Llama70B.kv_bytes_per_token(),
                     policy,

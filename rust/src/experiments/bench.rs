@@ -16,7 +16,10 @@
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use crate::cache::{CacheManager, PolicyKind, KV_BYTES_PER_TOKEN_70B};
+use crate::cache::{
+    CacheStore, CacheVariant, LocalStore, PolicyKind, SharedStore, TieredStore,
+    KV_BYTES_PER_TOKEN_70B,
+};
 use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
 use crate::metrics::Slo;
 use crate::rng::Rng;
@@ -79,7 +82,7 @@ pub fn run_day_scale(cfg: &SimBenchConfig, stepping: Stepping) -> (usize, u64) {
         ..ConversationParams::default()
     };
     let mut wl = ConversationGen::new(params, cfg.seed);
-    let mut cache = CacheManager::new(
+    let mut cache = LocalStore::new(
         (cfg.cache_tb * TB) as u64,
         KV_BYTES_PER_TOKEN_70B,
         PolicyKind::Lcs,
@@ -182,8 +185,10 @@ fn churn_request(ctx: u64, version: u32, context: u32) -> Request {
 
 /// lookup+admit churn over `n_ops` operations on a cache holding ~8k
 /// entries at steady state (shared with `rust/benches/cache.rs`).
+/// Statically dispatched on the concrete [`LocalStore`] — the pre-trait
+/// code path, kept as the baseline the `dyn_*` cases are compared to.
 pub fn cache_churn(policy: PolicyKind, n_ops: usize, seed: u64) -> u64 {
-    let mut m = CacheManager::new(8_000 * 1_000, 1_000, policy);
+    let mut m = LocalStore::new(8_000 * 1_000, 1_000, policy);
     let mut rng = Rng::new(seed);
     let mut now = 0.0;
     let mut acc = 0u64;
@@ -199,7 +204,61 @@ pub fn cache_churn(policy: PolicyKind, n_ops: usize, seed: u64) -> u64 {
     acc + m.stats().evictions
 }
 
-/// Measure per-policy churn throughput and return the report.
+/// The same churn through `&mut dyn CacheStore` — what the engine
+/// actually executes since the trait redesign. `local` vs the concrete
+/// [`cache_churn`] case isolates the virtual-dispatch overhead;
+/// `tiered` adds promotion/demotion; `shared` drives a two-handle pool,
+/// alternating 32-op bursts per handle with a sync after each burst
+/// (the lockstep cadence, scaled down).
+pub fn cache_churn_dyn(variant: CacheVariant, n_ops: usize, seed: u64) -> u64 {
+    fn churn(store: &mut dyn CacheStore, ops: usize, rng: &mut Rng, now: &mut f64) -> u64 {
+        let mut acc = 0u64;
+        for _ in 0..ops {
+            *now += 0.01;
+            let ctx = rng.below(20_000);
+            let context = rng.range(100, 900) as u32;
+            let r = churn_request(ctx, rng.below(8) as u32, context);
+            acc += store.lookup(&r, *now).hit_tokens as u64;
+            store.admit(&r, context + 150, None, *now);
+        }
+        acc
+    }
+    let mut rng = Rng::new(seed);
+    let mut now = 0.0;
+    match variant {
+        CacheVariant::Local => {
+            let mut m = LocalStore::new(8_000 * 1_000, 1_000, PolicyKind::Lcs);
+            churn(&mut m, n_ops, &mut rng, &mut now) + m.stats().evictions
+        }
+        CacheVariant::Tiered => {
+            let mut m = TieredStore::new(8_000 * 1_000, 0.25, 1_000, PolicyKind::Lcs);
+            churn(&mut m, n_ops, &mut rng, &mut now) + m.stats().evictions
+        }
+        CacheVariant::Shared => {
+            let pool =
+                SharedStore::new(1_000, PolicyKind::Lcs, &[4_000 * 1_000, 4_000 * 1_000]);
+            let mut handles = [pool.handle(0), pool.handle(1)];
+            let mut acc = 0u64;
+            let mut i = 0;
+            let mut remaining = n_ops;
+            while remaining > 0 {
+                let burst = remaining.min(32);
+                acc += churn(&mut handles[i % 2], burst, &mut rng, &mut now);
+                i += 1;
+                remaining -= burst;
+                pool.sync();
+            }
+            acc + pool.fleet_stats().evictions
+        }
+    }
+}
+
+/// Measure churn throughput per eviction policy (concrete static
+/// dispatch — the pre-trait path, case names unchanged for report
+/// continuity) and per [`CacheStore`] backend through dynamic dispatch,
+/// then return the report. `BENCH_CACHE.json` thereby tracks the
+/// trait-dispatch overhead (`dyn_local` vs `…_LCS`) alongside the
+/// tiered/shared backend costs.
 pub fn cache_report(quick: bool) -> Json {
     let n_ops = if quick { 5_000 } else { 20_000 };
     // Quick (CI smoke) profile: one measured pass per case.
@@ -222,6 +281,17 @@ pub fn cache_report(quick: bool) -> Json {
             n_ops as f64 / r.mean.as_secs_f64()
         );
     }
+    for variant in CacheVariant::all() {
+        let r = b.case(
+            &format!("churn_{}k_ops_dyn_{}", n_ops / 1_000, variant.name()),
+            || black_box(cache_churn_dyn(variant, n_ops, 42)),
+        );
+        println!(
+            "    -> {:.0} lookup+admit ops/s (dyn {})",
+            n_ops as f64 / r.mean.as_secs_f64(),
+            variant.name()
+        );
+    }
     let mut j = match b.to_json() {
         Json::Object(m) => m,
         _ => unreachable!("Bench::to_json returns an object"),
@@ -230,6 +300,15 @@ pub fn cache_report(quick: bool) -> Json {
     j.insert("schema".into(), Json::Str(BENCH_SCHEMA.into()));
     j.insert("quick".into(), Json::Bool(quick));
     j.insert("ops_per_case".into(), Json::Num(n_ops as f64));
+    j.insert(
+        "backends".into(),
+        Json::Array(
+            CacheVariant::all()
+                .iter()
+                .map(|v| Json::Str(v.name().into()))
+                .collect(),
+        ),
+    );
     Json::Object(j)
 }
 
@@ -269,5 +348,22 @@ mod tests {
         let b = cache_churn(PolicyKind::Lcs, 2_000, 7);
         assert_eq!(a, b);
         assert!(a > 0);
+    }
+
+    #[test]
+    fn dyn_backend_churn_is_deterministic() {
+        for v in CacheVariant::all() {
+            let a = cache_churn_dyn(v, 2_000, 7);
+            let b = cache_churn_dyn(v, 2_000, 7);
+            assert_eq!(a, b, "{} backend not deterministic", v.name());
+            assert!(a > 0, "{} backend did no work", v.name());
+        }
+        // The dyn-local case does the same work as the concrete one —
+        // identical op stream, identical result — so the two cases'
+        // wall-clock difference in BENCH_CACHE.json is pure dispatch.
+        assert_eq!(
+            cache_churn_dyn(CacheVariant::Local, 2_000, 7),
+            cache_churn(PolicyKind::Lcs, 2_000, 7)
+        );
     }
 }

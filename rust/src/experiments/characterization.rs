@@ -129,7 +129,7 @@ fn rate_point(task: Task, rps: f64, cache_tb: f64, seed: u64, quick: bool) -> Si
         stepping: Stepping::FastForward,
     };
     let mut wl = task.make_workload(seed);
-    let mut cache = CacheManager::new(
+    let mut cache = LocalStore::new(
         (cache_tb * TB) as u64,
         model.kv_bytes_per_token(),
         PolicyKind::Lcs,
@@ -245,7 +245,7 @@ pub fn fig7(quick: bool) -> Csv {
                 stepping: Stepping::FastForward,
             };
             let mut wl = Task::Conversation.make_workload(54);
-            let mut cache = CacheManager::new(
+            let mut cache = LocalStore::new(
                 (tb * TB) as u64,
                 model.kv_bytes_per_token(),
                 PolicyKind::Lcs,
@@ -301,7 +301,7 @@ pub fn fig8(quick: bool) -> Csv {
         };
         let mut wl = Task::Conversation.make_workload(55);
         let mut cache =
-            CacheManager::new(16 * TB as u64, model.kv_bytes_per_token(), PolicyKind::Lcs);
+            LocalStore::new(16 * TB as u64, model.kv_bytes_per_token(), PolicyKind::Lcs);
         warm_cache(wl.as_mut(), &mut cache, Task::Conversation.warm_prompts(quick), 55);
         let cached = simulate(
             &cfg,
@@ -313,7 +313,7 @@ pub fn fig8(quick: bool) -> Csv {
             &mut FixedController,
         );
         let mut wl2 = Task::Conversation.make_workload(55);
-        let mut no_cache = CacheManager::new(0, model.kv_bytes_per_token(), PolicyKind::Lcs);
+        let mut no_cache = LocalStore::new(0, model.kv_bytes_per_token(), PolicyKind::Lcs);
         let none_grid = simulate(
             &cfg,
             wl2.as_mut(),
@@ -356,7 +356,7 @@ pub fn fig8(quick: bool) -> Csv {
         };
         let run = |cache_tb: f64, seed: u64| {
             let mut wl = Task::Conversation.make_workload(seed);
-            let mut cache = CacheManager::new(
+            let mut cache = LocalStore::new(
                 (cache_tb * TB) as u64,
                 model.kv_bytes_per_token(),
                 PolicyKind::Lcs,

@@ -1,20 +1,26 @@
 //! Fleet experiment: single-replica vs multi-replica, multi-grid serving
-//! under the three router policies.
+//! under the three router policies and the cache-backend axis.
 //!
 //! The cluster analogue of Fig. 12: fleets of 1 / 2 / 4 replicas spread
 //! across grids from near-zero-carbon hydro/nuclear (FR) to coal-heavy
 //! (PJM/MISO), serving one Azure-shaped request stream scaled to each
-//! fleet's capacity. Every fleet × router × baseline combination is one
-//! scenario-matrix cell, so the whole exhibit runs in parallel through
-//! the standard [`MatrixRunner`](crate::scenario::MatrixRunner) and the
-//! comparison within a fleet replays the identical day (shared workload
-//! seed).
+//! fleet's capacity. Every fleet × router × baseline × cache combination
+//! is one scenario-matrix cell, so the whole exhibit runs in parallel
+//! through the standard [`MatrixRunner`](crate::scenario::MatrixRunner)
+//! and the comparison within a fleet replays the identical day (shared
+//! workload seed).
 //!
 //! Expected shape: the carbon-greedy router beats round-robin on total
 //! carbon at equal SLO attainment in the multi-grid fleets (it drains
 //! work toward green grids until queues push back, and keeps
 //! conversations sticky to their cached prefix), while least-loaded sits
-//! between the two on carbon but leads on latency headroom.
+//! between the two on carbon but leads on latency headroom. On the cache
+//! axis, the fleet-level [`SharedStore`](crate::cache::SharedStore) pool
+//! lifts the fleet token hit rate over per-replica
+//! [`LocalStore`](crate::cache::LocalStore)s at **equal total
+//! capacity** — every prefix a bounced conversation left on another
+//! replica is still served — which is the cross-replica sharing item
+//! from the ROADMAP made measurable.
 
 use super::*;
 use crate::cluster::RouterPolicy;
@@ -33,41 +39,57 @@ fn fleets() -> Vec<(&'static str, Vec<Grid>)> {
     ]
 }
 
-/// Fleet comparison: replica counts × router policies × baselines.
+/// Fleet comparison: replica counts × router policies × baselines ×
+/// cache backends (per-replica local stores vs one shared fleet pool).
 pub fn fleet(quick: bool) -> Csv {
     let mut csv = Csv::new(&[
         "fleet",
         "router",
         "baseline",
+        "cache",
         "carbon_per_request_g",
         "slo_attainment",
         "token_hit_rate",
         "mean_cache_tb",
         "completed",
     ]);
-    println!("Fleet — multi-replica multi-grid serving, router policy comparison");
+    println!("Fleet — multi-replica multi-grid serving, router & cache-backend comparison");
 
     // Every fleet under every router; single-replica fleets are routed
-    // trivially, so one router entry suffices there.
-    let mut clusters: Vec<Option<ClusterVariant>> = Vec::new();
+    // trivially, so one router entry suffices there — and they skip the
+    // shared-pool axis too, since a one-slice pool is byte-identical to
+    // a local store (pinned in `cluster::sim`) and would only duplicate
+    // day-scale simulations and CSV rows.
+    let mut solo: Vec<Option<ClusterVariant>> = Vec::new();
+    let mut multi: Vec<Option<ClusterVariant>> = Vec::new();
     for (_, grids) in fleets() {
         if grids.len() == 1 {
-            clusters.push(Some(ClusterVariant::new(&grids, RouterPolicy::RoundRobin)));
+            solo.push(Some(ClusterVariant::new(&grids, RouterPolicy::RoundRobin)));
         } else {
             for r in RouterPolicy::all() {
-                clusters.push(Some(ClusterVariant::new(&grids, r)));
+                multi.push(Some(ClusterVariant::new(&grids, r)));
             }
         }
     }
 
-    let matrix = Matrix::new()
-        .models(&[Model::Llama70B])
-        .tasks(&[Task::Conversation])
-        .grids(&[Grid::Es]) // seeding axis; fleet grids live in the variant
-        .baselines(&[Baseline::FullCache, Baseline::GreenCache])
-        .clusters(&clusters)
-        .quick(quick);
-    let result = run_specs(&matrix.expand(), 0);
+    // Same workload-shaping axes in both sub-matrices → shared per-cell
+    // seeds, so every row still replays the identical day.
+    let base = || {
+        Matrix::new()
+            .models(&[Model::Llama70B])
+            .tasks(&[Task::Conversation])
+            .grids(&[Grid::Es]) // seeding axis; fleet grids live in the variant
+            .baselines(&[Baseline::FullCache, Baseline::GreenCache])
+            .quick(quick)
+    };
+    let mut specs = base().caches(&[CacheVariant::Local]).clusters(&solo).expand();
+    specs.extend(
+        base()
+            .caches(&[CacheVariant::Local, CacheVariant::Shared])
+            .clusters(&multi)
+            .expand(),
+    );
+    let result = run_specs(&specs, 0);
 
     for c in &result.cells {
         let cv = c.spec.cluster.as_ref().expect("fleet cells only");
@@ -78,10 +100,11 @@ pub fn fleet(quick: bool) -> Csv {
             .unwrap_or("?")
             .to_string();
         println!(
-            "  {:<20} {:<13} {:<11}: {:>8.3} g/req  SLO {:>5.1}%  hit {:>5.3}  cache {:>5.1} TB  ({} reqs)",
+            "  {:<20} {:<13} {:<11} {:<7}: {:>8.3} g/req  SLO {:>5.1}%  hit {:>5.3}  cache {:>5.1} TB  ({} reqs)",
             fleet_label,
             cv.router.name(),
             c.spec.baseline.name(),
+            c.spec.cache.name(),
             c.carbon_per_request_g,
             c.slo_attainment * 100.0,
             c.token_hit_rate,
@@ -92,6 +115,7 @@ pub fn fleet(quick: bool) -> Csv {
             fleet_label,
             cv.router.name().into(),
             c.spec.baseline.name().into(),
+            c.spec.cache.name().into(),
             format!("{:.4}", c.carbon_per_request_g),
             format!("{:.4}", c.slo_attainment),
             format!("{:.4}", c.token_hit_rate),
@@ -100,26 +124,54 @@ pub fn fleet(quick: bool) -> Csv {
         ]);
     }
 
-    // Headline: carbon-greedy vs round-robin within each multi-grid fleet.
+    let find = |baseline: Baseline,
+                grids: &[Grid],
+                router: RouterPolicy,
+                cache: CacheVariant| {
+        result.cells.iter().find(|c| {
+            c.spec.baseline == baseline
+                && c.spec.cache == cache
+                && c.spec.cluster.as_ref().is_some_and(|cv| {
+                    cv.router == router && cv.grids == *grids
+                })
+        })
+    };
+
+    // Headline 1: carbon-greedy vs round-robin within each multi-grid
+    // fleet (per-replica local stores — the PR-2 comparison).
     for baseline in [Baseline::FullCache, Baseline::GreenCache] {
         for (label, grids) in fleets().iter().filter(|(_, g)| g.len() > 1) {
-            let find = |router: RouterPolicy| {
-                result.cells.iter().find(|c| {
-                    c.spec.baseline == baseline
-                        && c.spec.cluster.as_ref().is_some_and(|cv| {
-                            cv.router == router && cv.grids == *grids
-                        })
-                })
-            };
-            if let (Some(rr), Some(greedy)) =
-                (find(RouterPolicy::RoundRobin), find(RouterPolicy::CarbonGreedy))
-            {
+            if let (Some(rr), Some(greedy)) = (
+                find(baseline, grids, RouterPolicy::RoundRobin, CacheVariant::Local),
+                find(baseline, grids, RouterPolicy::CarbonGreedy, CacheVariant::Local),
+            ) {
                 println!(
                     "  {:<20} {:<11}: carbon-greedy saves {:>5.1}% vs round-robin (SLO {:+.1} pp)",
                     label,
                     baseline.name(),
                     saving_pct(rr.carbon_per_request_g, greedy.carbon_per_request_g),
                     (greedy.slo_attainment - rr.slo_attainment) * 100.0,
+                );
+            }
+        }
+    }
+
+    // Headline 2: shared fleet pool vs per-replica stores at equal total
+    // capacity, under carbon-greedy routing.
+    for baseline in [Baseline::FullCache, Baseline::GreenCache] {
+        for (label, grids) in fleets().iter().filter(|(_, g)| g.len() > 1) {
+            if let (Some(local), Some(pooled)) = (
+                find(baseline, grids, RouterPolicy::CarbonGreedy, CacheVariant::Local),
+                find(baseline, grids, RouterPolicy::CarbonGreedy, CacheVariant::Shared),
+            ) {
+                println!(
+                    "  {:<20} {:<11}: shared pool hit {:>5.3} vs local {:>5.3} ({:+.1} pp), carbon {:+.1}%",
+                    label,
+                    baseline.name(),
+                    pooled.token_hit_rate,
+                    local.token_hit_rate,
+                    (pooled.token_hit_rate - local.token_hit_rate) * 100.0,
+                    -saving_pct(local.carbon_per_request_g, pooled.carbon_per_request_g),
                 );
             }
         }
@@ -134,7 +186,7 @@ mod tests {
     #[test]
     fn fleet_axis_covers_all_shapes() {
         // 1 single-replica entry + 2 multi-grid fleets × 3 routers each,
-        // times 2 baselines.
+        // times 2 baselines × 2 cache backends.
         let shapes = fleets();
         assert_eq!(shapes.len(), 3);
         assert_eq!(shapes[0].1.len(), 1);

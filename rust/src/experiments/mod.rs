@@ -17,7 +17,10 @@ pub mod characterization;
 pub mod evaluation;
 pub mod fleet;
 
-use crate::cache::{CacheManager, PolicyKind, KV_BYTES_PER_TOKEN_70B, KV_BYTES_PER_TOKEN_8B};
+use crate::cache::{
+    CacheStore, CacheVariant, LocalStore, PolicyKind, TieredStore, KV_BYTES_PER_TOKEN_70B,
+    KV_BYTES_PER_TOKEN_8B, TIERED_HOT_FRACTION,
+};
 use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
 use crate::ci::Grid;
 use crate::coordinator::{CiSource, GreenCacheConfig, GreenCacheController, LoadSource};
@@ -244,6 +247,11 @@ pub struct DayScenario {
     /// Eviction-policy override; `None` keeps the baseline's default
     /// pairing (the scenario matrix's policy axis drives this).
     pub policy_override: Option<PolicyKind>,
+    /// Cache backend of the cell (the scenario matrix's cache axis).
+    /// [`CacheVariant::Shared`] degenerates to a [`LocalStore`] on a
+    /// single node — a one-replica pool *is* a local store (the cluster
+    /// layer pins that equivalence byte-for-byte).
+    pub cache_variant: CacheVariant,
 }
 
 impl DayScenario {
@@ -266,6 +274,7 @@ impl DayScenario {
             fixed_rps: None,
             fixed_ci: None,
             policy_override: None,
+            cache_variant: CacheVariant::Local,
         }
     }
 
@@ -388,10 +397,23 @@ pub fn run_day(sc: &DayScenario, profiles: &mut ProfileStore) -> DayResult {
         _ => max_bytes,
     };
     let policy = sc.policy_override.unwrap_or_else(|| sc.baseline.policy());
-    let mut cache = CacheManager::new(capacity, model.kv_bytes_per_token(), policy);
+    let mut cache: Box<dyn CacheStore> = match sc.cache_variant {
+        CacheVariant::Tiered => Box::new(TieredStore::new(
+            capacity,
+            TIERED_HOT_FRACTION,
+            model.kv_bytes_per_token(),
+            policy,
+        )),
+        // Local, and Shared's single-node degenerate case.
+        CacheVariant::Local | CacheVariant::Shared => Box::new(LocalStore::new(
+            capacity,
+            model.kv_bytes_per_token(),
+            policy,
+        )),
+    };
     let mut wl = sc.task.make_workload(sc.seed);
     if capacity > 0 {
-        warm_cache(wl.as_mut(), &mut cache, sc.task.warm_prompts(sc.quick), sc.seed);
+        warm_cache(wl.as_mut(), cache.as_mut(), sc.task.warm_prompts(sc.quick), sc.seed);
     }
 
     let sim_cfg = SimConfig {
@@ -425,14 +447,19 @@ pub fn run_day(sc: &DayScenario, profiles: &mut ProfileStore) -> DayResult {
         // §4.1 pre-day bootstrap (shared with the cluster layer's
         // per-replica setup).
         let mut ctl = GreenCacheController::bootstrapped(
-            gc_cfg, profile, ci_hist, load_hist, base_hour, &mut cache,
+            gc_cfg,
+            profile,
+            ci_hist,
+            load_hist,
+            base_hour,
+            cache.as_mut(),
         );
         let sim = simulate(
             &sim_cfg,
             wl.as_mut(),
             &rate_of_hour,
             &ci_of_hour,
-            &mut cache,
+            cache.as_mut(),
             accountant,
             &mut ctl,
         );
@@ -444,7 +471,7 @@ pub fn run_day(sc: &DayScenario, profiles: &mut ProfileStore) -> DayResult {
             wl.as_mut(),
             &rate_of_hour,
             &ci_of_hour,
-            &mut cache,
+            cache.as_mut(),
             accountant,
             &mut FixedController,
         );

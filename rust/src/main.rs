@@ -8,18 +8,19 @@
 //!                     [--baseline none|full|green|lru-optimal] [--hours H] [--quick]
 //! greencache cluster  [--grids FR,MISO,...] [--router rr|jsq|greedy|all]
 //!                     [--task conv|doc04|doc07] [--baseline none|full|green]
+//!                     [--cache local|tiered|shared]
 //!                     [--hours H] [--rps R] [--quick]
 //! greencache matrix   [--models 70b,8b] [--tasks conv,doc04,doc07]
 //!                     [--grids FR,ES,...] [--baselines none,full,green]
-//!                     [--policies lcs,lru] [--hours H] [--threads N]
-//!                     [--seed S] [--quick]
+//!                     [--policies lcs,lru] [--caches local,tiered,shared]
+//!                     [--hours H] [--threads N] [--seed S] [--quick]
 //! greencache profile  [--task conv|doc04|doc07] [--quick]
 //! greencache decide   [--grid ES] [--hour H]
 //! greencache bench    [--quick] [--out DIR]
 //! greencache info
 //! ```
 
-use greencache::cache::PolicyKind;
+use greencache::cache::{CacheVariant, PolicyKind};
 use greencache::ci::Grid;
 use greencache::cluster::{run_cluster, ClusterSpec, RouterPolicy};
 use greencache::coordinator::server::{Server, ServerConfig};
@@ -111,6 +112,13 @@ fn parse_policy(s: &str) -> PolicyKind {
             PolicyKind::Lcs
         }
     }
+}
+
+fn parse_cache(s: &str) -> CacheVariant {
+    CacheVariant::parse(s).unwrap_or_else(|| {
+        eprintln!("unknown cache backend {s}, using local");
+        CacheVariant::Local
+    })
 }
 
 fn parse_baseline(s: &str) -> Baseline {
@@ -262,6 +270,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
     let grids = parse_list(args, "grids", "FR,MISO", parse_grid);
     let task = parse_task(args.get("task").unwrap_or("conv"));
     let baseline = parse_baseline(args.get("baseline").unwrap_or("green"));
+    let cache = parse_cache(args.get("cache").unwrap_or("local"));
     let quick = args.bool("quick");
     let routers: Vec<RouterPolicy> = match args.get("router").unwrap_or("all") {
         "rr" | "round-robin" => vec![RouterPolicy::RoundRobin],
@@ -290,18 +299,20 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
     for router in &routers {
         let mut spec = ClusterSpec::homogeneous(Model::Llama70B, task, &grids, *router);
         spec.baseline = baseline;
+        spec.cache = cache;
         spec.hours = args.usize("hours", 24);
         if quick {
             spec = spec.quick();
         }
         spec.fixed_rps = fixed_rps;
         println!(
-            "fleet {} x{} | {} | {} | router {} ({}h)...",
+            "fleet {} x{} | {} | {} | router {} | cache {} ({}h)...",
             spec.fleet_label(),
             spec.replicas.len(),
             task.name(),
             baseline.name(),
             router.name(),
+            cache.name(),
             spec.hours
         );
         let result = run_cluster(&spec, &mut profiles);
@@ -368,6 +379,7 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
             .map(|s| Some(parse_policy(s)))
             .collect(),
     };
+    let caches = parse_list(args, "caches", "local", parse_cache);
 
     let matrix = Matrix::new()
         .models(&models)
@@ -375,6 +387,7 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         .grids(&grids)
         .baselines(&baselines)
         .policies(&policies)
+        .caches(&caches)
         .hours(args.usize("hours", 24))
         .quick(args.bool("quick"))
         .seed(args.usize("seed", 20_25) as u64);
@@ -386,13 +399,14 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         verbose: true,
     };
     println!(
-        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies)...",
+        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies x {} caches)...",
         specs.len(),
         models.len(),
         tasks.len(),
         grids.len(),
         baselines.len(),
-        policies.len()
+        policies.len(),
+        caches.len()
     );
     let result = runner.run(&specs);
     print!("{}", result.table());

@@ -3,12 +3,15 @@
 //!
 //! The paper's profiler samples prompts on the real cluster after cache
 //! warm-up under the LCS policy; ours runs the calibrated simulator for a
-//! short window per combination. The resulting [`ProfileTable`] is what
+//! short window per combination, over a [`LocalStore`] (profiles price
+//! *capacity*, and the controller consumes them through the
+//! size-indexed table regardless of which
+//! [`crate::cache::CacheStore`] backend serves the evaluated day). The resulting [`ProfileTable`] is what
 //! the constraint solver (§5.4) consumes: for a predicted (rate, CI) it
 //! yields each candidate cache size's expected energy, latency and SLO
 //! attainment — the Eq. 6 coefficients.
 
-use crate::cache::{CacheManager, PolicyKind};
+use crate::cache::{LocalStore, PolicyKind};
 use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
 use crate::metrics::Slo;
 use crate::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig, Stepping};
@@ -174,7 +177,7 @@ pub fn profile(
         for (si, &size) in cfg.sizes_tb.iter().enumerate() {
             let seed = cfg.seed ^ ((ri as u64) << 32) ^ (si as u64);
             let mut wl = make_workload(seed);
-            let mut cache = CacheManager::new(
+            let mut cache = LocalStore::new(
                 size as u64 * TB as u64,
                 cfg.kv_bytes_per_token,
                 cfg.policy,

@@ -1,14 +1,14 @@
 //! Cartesian matrix expander: axis values → a deterministic cell list.
 
 use super::{workload_seed, ClusterVariant, ScenarioSpec};
-use crate::cache::PolicyKind;
+use crate::cache::{CacheVariant, PolicyKind};
 use crate::ci::Grid;
 use crate::experiments::{Baseline, Model, Task};
 
 /// A declarative scenario matrix. Every axis is a list of values; the
 /// expansion is their cartesian product in a fixed order (model-major,
-/// then task, grid, baseline, policy, cluster), so cell order — and
-/// therefore the golden table — is stable.
+/// then task, grid, baseline, policy, cache, cluster), so cell order —
+/// and therefore the golden table — is stable.
 ///
 /// # Example
 ///
@@ -44,6 +44,8 @@ pub struct Matrix {
     pub baselines: Vec<Baseline>,
     /// Policy axis; `None` entries keep each baseline's default pairing.
     pub policies: Vec<Option<PolicyKind>>,
+    /// Cache-backend axis (local / tiered / shared stores).
+    pub caches: Vec<CacheVariant>,
     /// Cluster axis: `None` entries are single-node cells, `Some` entries
     /// lift the cell to a fleet of that shape — sweeping replica counts
     /// and router policies is just more entries here.
@@ -72,6 +74,7 @@ impl Matrix {
             grids: Vec::new(),
             baselines: Vec::new(),
             policies: vec![None],
+            caches: vec![CacheVariant::Local],
             clusters: vec![None],
             hours: 24,
             quick: false,
@@ -109,6 +112,12 @@ impl Matrix {
     /// Set the policy axis.
     pub fn policies(mut self, v: &[Option<PolicyKind>]) -> Self {
         self.policies = v.to_vec();
+        self
+    }
+
+    /// Set the cache-backend axis.
+    pub fn caches(mut self, v: &[CacheVariant]) -> Self {
+        self.caches = v.to_vec();
         self
     }
 
@@ -161,6 +170,7 @@ impl Matrix {
             * self.grids.len()
             * self.baselines.len()
             * self.policies.len()
+            * self.caches.len()
             * self.clusters.len()
     }
 
@@ -178,20 +188,23 @@ impl Matrix {
                     let seed = workload_seed(self.base_seed, model, task, grid);
                     for &baseline in &self.baselines {
                         for &policy in &self.policies {
-                            for cluster in &self.clusters {
-                                let mut spec =
-                                    ScenarioSpec::new(model, task, grid, baseline);
-                                spec.policy = policy;
-                                spec.hours = self.hours;
-                                spec.seed = seed;
-                                spec.interval_s = self.interval_s;
-                                spec.fixed_rps = self.fixed_rps;
-                                spec.fixed_ci = self.fixed_ci;
-                                spec.cluster = cluster.clone();
-                                if self.quick {
-                                    spec = spec.quick();
+                            for &cache in &self.caches {
+                                for cluster in &self.clusters {
+                                    let mut spec =
+                                        ScenarioSpec::new(model, task, grid, baseline);
+                                    spec.policy = policy;
+                                    spec.hours = self.hours;
+                                    spec.seed = seed;
+                                    spec.interval_s = self.interval_s;
+                                    spec.fixed_rps = self.fixed_rps;
+                                    spec.fixed_ci = self.fixed_ci;
+                                    spec.cache = cache;
+                                    spec.cluster = cluster.clone();
+                                    if self.quick {
+                                        spec = spec.quick();
+                                    }
+                                    cells.push(spec);
                                 }
-                                cells.push(spec);
                             }
                         }
                     }
@@ -263,6 +276,27 @@ mod tests {
             .filter(|c| c.policy == Some(PolicyKind::Lru))
             .count();
         assert_eq!(with_policy, 8);
+    }
+
+    #[test]
+    fn cache_axis_multiplies_cells_and_shares_seeds() {
+        let m = small().caches(&CacheVariant::all());
+        assert_eq!(m.len(), 8 * 3);
+        let cells = m.expand();
+        assert_eq!(cells.len(), 24);
+        // The cache axis never shapes the workload seed: backends of the
+        // same (model, task, grid) replay the identical day.
+        for w in cells.chunks(3) {
+            // caches is the innermost-but-one axis (cluster default = 1
+            // entry), so consecutive triples share all other axes.
+            assert_eq!(w[0].seed, w[1].seed);
+            assert_eq!(w[1].seed, w[2].seed);
+            assert_ne!(w[0].cache, w[1].cache);
+        }
+        assert_eq!(
+            cells.iter().filter(|c| c.cache == CacheVariant::Tiered).count(),
+            8
+        );
     }
 
     #[test]

@@ -26,7 +26,7 @@ mod runner;
 pub use matrix::Matrix;
 pub use runner::{run_specs, CellResult, MatrixResult, MatrixRunner};
 
-use crate::cache::PolicyKind;
+use crate::cache::{CacheVariant, PolicyKind};
 use crate::ci::Grid;
 use crate::cluster::{ClusterSpec, ReplicaSpec, RouterPolicy};
 use crate::experiments::{Baseline, DayScenario, Model, Task};
@@ -94,6 +94,11 @@ pub struct ScenarioSpec {
     /// `Some` lifts the cell from one node to a multi-replica fleet (the
     /// runner dispatches to [`crate::cluster::run_cluster`]).
     pub cluster: Option<ClusterVariant>,
+    /// Cache backend of the cell (local / tiered / shared) — the matrix
+    /// cache axis. Fleet cells pass it to [`ClusterSpec::cache`];
+    /// single-node cells to `DayScenario` (where `shared` degenerates to
+    /// `local`: a one-replica pool is a local store).
+    pub cache: CacheVariant,
 }
 
 impl ScenarioSpec {
@@ -112,6 +117,7 @@ impl ScenarioSpec {
             fixed_rps: None,
             fixed_ci: None,
             cluster: None,
+            cache: CacheVariant::Local,
         }
     }
 
@@ -155,6 +161,7 @@ impl ScenarioSpec {
             fixed_rps: self.fixed_rps,
             fixed_ci: self.fixed_ci,
             stepping: crate::sim::Stepping::default(),
+            cache: self.cache,
         })
     }
 
@@ -168,12 +175,14 @@ impl ScenarioSpec {
         sc.interval_s = self.interval_s;
         sc.fixed_rps = self.fixed_rps;
         sc.fixed_ci = self.fixed_ci;
+        sc.cache_variant = self.cache;
         sc
     }
 
     /// Compact human/golden-stable label, e.g.
     /// `Llama-3-70B/multi-turn-conversation/ES/GreenCache` — fleet cells
-    /// append `/fleet[FR+MISO]/carbon-greedy`.
+    /// append `/fleet[FR+MISO]/carbon-greedy`, non-default cache
+    /// backends `/cache=tiered` or `/cache=shared`.
     pub fn label(&self) -> String {
         let mut s = format!(
             "{}/{}/{}/{}",
@@ -189,6 +198,10 @@ impl ScenarioSpec {
         if let Some(cv) = &self.cluster {
             s.push('/');
             s.push_str(&cv.label());
+        }
+        if self.cache != CacheVariant::Local {
+            s.push_str("/cache=");
+            s.push_str(self.cache.name());
         }
         s
     }
@@ -280,6 +293,34 @@ mod tests {
         assert_eq!(
             spec.label(),
             "Llama-3-70B/multi-turn-conversation/ES/GreenCache/fleet[FR+MISO]/carbon-greedy"
+        );
+    }
+
+    #[test]
+    fn cache_axis_lowers_and_labels() {
+        let mut spec = ScenarioSpec::new(
+            Model::Llama70B,
+            Task::Conversation,
+            Grid::Es,
+            Baseline::FullCache,
+        );
+        assert_eq!(spec.cache, CacheVariant::Local);
+        assert!(!spec.label().contains("cache="), "local is the unlabeled default");
+        spec.cache = CacheVariant::Tiered;
+        assert!(spec.label().ends_with("/cache=tiered"));
+        assert_eq!(spec.to_day_scenario().cache_variant, CacheVariant::Tiered);
+        spec.cache = CacheVariant::Shared;
+        spec.cluster = Some(ClusterVariant::new(
+            &[Grid::Fr, Grid::Miso],
+            RouterPolicy::CarbonGreedy,
+        ));
+        assert_eq!(
+            spec.label(),
+            "Llama-3-70B/multi-turn-conversation/ES/Full Cache/fleet[FR+MISO]/carbon-greedy/cache=shared"
+        );
+        assert_eq!(
+            spec.to_cluster_spec().expect("fleet").cache,
+            CacheVariant::Shared
         );
     }
 

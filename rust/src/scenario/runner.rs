@@ -79,16 +79,16 @@ impl MatrixResult {
     /// `cluster_quick.txt`). Excludes wall-clock and thread count on
     /// purpose: the table must be byte-identical across runs and
     /// machines. The cell column is sized for the longest fleet label
-    /// (`model/task/grid/baseline/fleet[...]/router`).
+    /// (`model/task/grid/baseline/fleet[...]/router/cache=...`).
     pub fn table(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<88} {:>10} {:>9} {:>7} {:>7} {:>8} {:>9}\n",
+            "{:<100} {:>10} {:>9} {:>7} {:>7} {:>8} {:>9}\n",
             "cell", "g/req", "cacheTB", "slo%", "hit", "ttft_s", "completed"
         ));
         for c in &self.cells {
             out.push_str(&format!(
-                "{:<88} {:>10.4} {:>9.2} {:>7.1} {:>7.3} {:>8.3} {:>9}\n",
+                "{:<100} {:>10.4} {:>9.2} {:>7.1} {:>7.3} {:>8.3} {:>9}\n",
                 c.spec.label(),
                 c.carbon_per_request_g,
                 c.mean_cache_tb,

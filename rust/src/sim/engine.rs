@@ -91,7 +91,7 @@
 
 use std::collections::VecDeque;
 
-use crate::cache::CacheManager;
+use crate::cache::CacheStore;
 use crate::carbon::{CarbonAccountant, CarbonBreakdown, Ci, PowerModel};
 use crate::metrics::{Slo, SloTracker};
 use crate::workload::{ArrivalGen, Request, Workload};
@@ -121,16 +121,19 @@ struct InFlight {
 }
 
 /// Periodic control hook: observe the last interval, resize the cache.
+/// Controllers see the cache through the [`CacheStore`] trait, so one
+/// controller drives local, tiered and (per-replica handles of) shared
+/// backends unchanged.
 pub trait Controller {
     /// Called at every decision boundary (default: each hour). `hour` is
     /// the index of the *completed* hour.
-    fn on_interval(&mut self, hour: usize, obs: &IntervalObservation, cache: &mut CacheManager);
+    fn on_interval(&mut self, hour: usize, obs: &IntervalObservation, cache: &mut dyn CacheStore);
 }
 
 /// A controller that never resizes (No Cache / Full Cache baselines).
 pub struct FixedController;
 impl Controller for FixedController {
-    fn on_interval(&mut self, _: usize, _: &IntervalObservation, _: &mut CacheManager) {}
+    fn on_interval(&mut self, _: usize, _: &IntervalObservation, _: &mut dyn CacheStore) {}
 }
 
 /// What a controller gets to see at a decision boundary.
@@ -171,7 +174,8 @@ pub struct HourSample {
     pub carbon_g: f64,
     /// Operational (energy × CI) emissions over the interval, grams.
     pub operational_g: f64,
-    /// Cache (SSD) embodied emissions over the interval, grams.
+    /// Cache-tier embodied emissions over the interval, grams (SSD plus
+    /// any DRAM hot tier, each at its own intensity).
     pub cache_embodied_g: f64,
     /// Non-storage embodied emissions over the interval, grams.
     pub other_embodied_g: f64,
@@ -278,12 +282,21 @@ pub struct SimConfig {
 ///    queues, flush the tail accounting period and return the
 ///    [`SimResult`] together with the cache.
 ///
+/// The engine owns its cache as a boxed [`CacheStore`], so the same
+/// event loop runs over a private [`crate::cache::LocalStore`], a
+/// [`crate::cache::TieredStore`] (whose DRAM hits skip the SSD KV-load
+/// penalty and whose tier split is priced separately in power and
+/// embodied carbon via [`CacheStore::tier_bytes`]) or a
+/// [`crate::cache::SharedHandle`] onto a fleet pool. The lifetime `'c`
+/// lets [`simulate`] lend the caller's store for one run; long-lived
+/// cluster engines use `'static` boxes.
+///
 /// [`inject`]: ReplicaEngine::inject
 /// [`run_until`]: ReplicaEngine::run_until
 /// [`finish`]: ReplicaEngine::finish
-pub struct ReplicaEngine {
+pub struct ReplicaEngine<'c> {
     cfg: SimConfig,
-    cache: CacheManager,
+    cache: Box<dyn CacheStore + 'c>,
     accountant: CarbonAccountant,
     slo: SloTracker,
     now: f64,
@@ -308,9 +321,13 @@ pub struct ReplicaEngine {
     pending_time_s: f64,
 }
 
-impl ReplicaEngine {
+impl<'c> ReplicaEngine<'c> {
     /// Build an engine at time zero over a (possibly pre-warmed) cache.
-    pub fn new(cfg: SimConfig, cache: CacheManager, accountant: CarbonAccountant) -> Self {
+    pub fn new(
+        cfg: SimConfig,
+        cache: Box<dyn CacheStore + 'c>,
+        accountant: CarbonAccountant,
+    ) -> Self {
         let prev_breakdown = accountant.breakdown();
         let slo = SloTracker::new(cfg.slo);
         ReplicaEngine {
@@ -359,8 +376,8 @@ impl ReplicaEngine {
     }
 
     /// The replica's context cache (read-only — routers peek affinity).
-    pub fn cache(&self) -> &CacheManager {
-        &self.cache
+    pub fn cache(&self) -> &(dyn CacheStore + 'c) {
+        self.cache.as_ref()
     }
 
     /// The replica's platform cost model.
@@ -387,7 +404,11 @@ impl ReplicaEngine {
         let hit = self.cache.lookup(&req, req.arrival_s);
         let computed = req.prompt_tokens() - hit.hit_tokens;
         self.waiting.push_back(InFlight {
-            kv_load_pending: self.cfg.cost.kv_load_s(hit.hit_tokens),
+            // Only the SSD-resident part of the hit pays the KV-load
+            // penalty; a tiered store's DRAM hot tokens are already in
+            // host memory (hot_tokens = 0 for single-tier stores, so
+            // this is byte-identical to the pre-trait engine there).
+            kv_load_pending: self.cfg.cost.kv_load_s(hit.hit_tokens - hit.hot_tokens),
             remaining_prefill: computed.max(1),
             remaining_decode: req.output_tokens.max(1),
             first_token_s: None,
@@ -437,7 +458,7 @@ impl ReplicaEngine {
         horizon_s: f64,
         ci_of_hour: &dyn Fn(usize) -> f64,
         controller: &mut dyn Controller,
-    ) -> (SimResult, CacheManager) {
+    ) -> (SimResult, Box<dyn CacheStore + 'c>) {
         self.run_until(horizon_s, ci_of_hour, controller);
         while !self.is_idle() && !self.overloaded() {
             self.catch_up_intervals(ci_of_hour, controller);
@@ -538,7 +559,7 @@ impl ReplicaEngine {
                 cache_embodied_g: delta_cache,
                 other_embodied_g: delta_other,
             });
-            controller.on_interval(self.interval_idx, &obs, &mut self.cache);
+            controller.on_interval(self.interval_idx, &obs, self.cache.as_mut());
             self.interval_idx += 1;
             self.interval_ttft.clear();
             self.interval_tpot.clear();
@@ -547,14 +568,19 @@ impl ReplicaEngine {
         }
     }
 
-    /// Record the accumulated (energy, time) against the hour's CI.
+    /// Record the accumulated (energy, time) against the hour's CI. The
+    /// provisioned cache is priced per tier (Eq. 4 at each tier's
+    /// embodied intensity) — single-tier stores report everything as SSD
+    /// and reproduce the pre-trait numbers exactly.
     fn flush_pending(&mut self, ci_of_hour: &dyn Fn(usize) -> f64, hour: usize) {
         if self.pending_time_s > 0.0 {
-            self.accountant.record_period(
+            let tiers = self.cache.tier_bytes();
+            self.accountant.record_period_split(
                 self.pending_time_s,
                 self.pending_energy_j,
                 Ci(ci_of_hour(hour)),
-                self.cache.capacity_bytes() as f64,
+                tiers.ssd as f64,
+                tiers.dram as f64,
             );
             self.pending_energy_j = 0.0;
             self.pending_time_s = 0.0;
@@ -566,10 +592,12 @@ impl ReplicaEngine {
         let target = target.max(self.now);
         let idle = target - self.now;
         if idle > 0.0 {
-            let p = self.cfg.power.sample(
+            let tiers = self.cache.tier_bytes();
+            let p = self.cfg.power.sample_split(
                 0.0,
                 0.05,
-                self.cache.capacity_bytes() as f64 / 1e12,
+                tiers.ssd as f64 / 1e12,
+                tiers.dram as f64 / 1e12,
                 0.0,
             );
             self.pending_energy_j += p.total_w() * idle;
@@ -639,10 +667,12 @@ impl ReplicaEngine {
         // Identical to the per-iteration decode-only power draw.
         let gpu_util = self.cfg.cost.gpu_util(0, batch);
         let cpu_util = 0.15 + 0.25 * (batch as f64 / self.cfg.cost.max_batch as f64).min(1.0);
-        let p = self.cfg.power.sample(
+        let tiers = self.cache.tier_bytes();
+        let p = self.cfg.power.sample_split(
             gpu_util,
             cpu_util,
-            self.cache.capacity_bytes() as f64 / 1e12,
+            tiers.ssd as f64 / 1e12,
+            tiers.dram as f64 / 1e12,
             0.05,
         );
         let kf = k as f64;
@@ -705,10 +735,12 @@ impl ReplicaEngine {
         } else {
             0.05
         };
-        let p = self.cfg.power.sample(
+        let tiers = self.cache.tier_bytes();
+        let p = self.cfg.power.sample_split(
             gpu_util,
             cpu_util,
-            self.cache.capacity_bytes() as f64 / 1e12,
+            tiers.ssd as f64 / 1e12,
+            tiers.dram as f64 / 1e12,
             ssd_active,
         );
         self.pending_energy_j += p.total_w() * t_iter;
@@ -776,8 +808,10 @@ impl ReplicaEngine {
 ///
 /// * `workload` draws request content; `rate_of_hour` the Poisson rate.
 /// * `ci_of_hour` gives ground-truth CI (gCO₂e/kWh) per hour.
-/// * `cache` is the provisioned context cache (capacity may be resized by
-///   the controller between intervals).
+/// * `cache` is the provisioned context cache — any [`CacheStore`]
+///   backend (capacity may be resized by the controller between
+///   intervals). The engine borrows it for the run; the caller keeps
+///   inspecting it afterwards.
 /// * `accountant` carries the embodied model (callers configure SSD
 ///   lifetime/unit carbon there for the sensitivity studies).
 ///
@@ -790,7 +824,7 @@ pub fn simulate(
     workload: &mut dyn Workload,
     rate_of_hour: &dyn Fn(usize) -> f64,
     ci_of_hour: &dyn Fn(usize) -> f64,
-    cache: &mut CacheManager,
+    cache: &mut dyn CacheStore,
     accountant: CarbonAccountant,
     controller: &mut dyn Controller,
 ) -> SimResult {
@@ -798,11 +832,10 @@ pub fn simulate(
     let mut arrivals = ArrivalGen::new(cfg.seed);
     let horizon_s = cfg.hours as f64 * 3600.0;
 
-    // The engine owns the cache while running; swap it out and back so
-    // callers keep inspecting their `&mut CacheManager` afterwards.
-    let placeholder = CacheManager::new(0, 1, cache.policy());
-    let owned = std::mem::replace(cache, placeholder);
-    let mut engine = ReplicaEngine::new(cfg.clone(), owned, accountant);
+    // Box the borrow, not the store: `&mut dyn CacheStore` implements
+    // `CacheStore` by delegation, so the engine runs over the caller's
+    // store in place and hands the borrow back when dropped.
+    let mut engine = ReplicaEngine::new(cfg.clone(), Box::new(cache), accountant);
 
     let mut next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
     while next_arrival < horizon_s {
@@ -817,8 +850,7 @@ pub fn simulate(
         engine.inject(req);
         next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
     }
-    let (result, cache_back) = engine.finish(horizon_s, ci_of_hour, controller);
-    *cache = cache_back;
+    let (result, _borrow) = engine.finish(horizon_s, ci_of_hour, controller);
     result
 }
 
@@ -827,7 +859,7 @@ pub fn simulate(
 /// no latency simulation.
 pub fn warm_cache(
     workload: &mut dyn Workload,
-    cache: &mut CacheManager,
+    cache: &mut dyn CacheStore,
     n: usize,
     seed: u64,
 ) {

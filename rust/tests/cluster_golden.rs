@@ -1,21 +1,26 @@
 //! Golden regression for the multi-replica cluster layer.
 //!
 //! A 2-hour, fixed-rate FR+MISO fleet is evaluated under all three router
-//! policies through the standard scenario matrix, and the result table is
-//! diffed against `rust/tests/golden/cluster_quick.txt`.
+//! policies × both cache backends (per-replica `local` stores and the
+//! fleet-level `shared` pool) through the standard scenario matrix, and
+//! the result table is diffed against
+//! `rust/tests/golden/cluster_quick.txt`.
 //!
 //! * `UPDATE_GOLDEN=1 cargo test -q --test cluster_golden` regenerates
 //!   the snapshot.
 //! * If the snapshot does not exist yet (fresh checkout state), the test
 //!   bootstraps it and passes — the diff bites from the next run on.
 //!
-//! Separately from the snapshot, the test pins the acceptance property of
-//! the cluster layer: the carbon-greedy router beats round-robin on
-//! carbon per request at (near-)equal SLO attainment, deterministically
-//! across thread counts.
+//! Separately from the snapshot, the test pins the acceptance properties
+//! of the cluster layer: the carbon-greedy router beats round-robin on
+//! carbon per request at (near-)equal SLO attainment, and the shared
+//! fleet pool lifts the fleet token hit rate over per-replica local
+//! stores at equal total capacity under carbon-greedy routing —
+//! deterministically across thread counts.
 
 use std::path::PathBuf;
 
+use greencache::cache::CacheVariant;
 use greencache::ci::Grid;
 use greencache::cluster::RouterPolicy;
 use greencache::experiments::{Baseline, Model, Task};
@@ -25,8 +30,9 @@ fn golden_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/cluster_quick.txt")
 }
 
-/// One fleet under all three routers: fixed fleet rate, fixed horizon,
-/// FullCache per replica (no controller noise in the golden numbers).
+/// One fleet under all three routers × both cache backends: fixed
+/// comfortably-sub-capacity fleet rate, fixed horizon, FullCache per
+/// replica (no controller noise in the golden numbers).
 fn fleet_matrix() -> Vec<ScenarioSpec> {
     let fleets: Vec<Option<ClusterVariant>> = RouterPolicy::all()
         .iter()
@@ -37,6 +43,7 @@ fn fleet_matrix() -> Vec<ScenarioSpec> {
         .tasks(&[Task::Conversation])
         .grids(&[Grid::Es])
         .baselines(&[Baseline::FullCache])
+        .caches(&[CacheVariant::Local, CacheVariant::Shared])
         .clusters(&fleets);
     m.hours = 2;
     m.fixed_rps = Some(0.35);
@@ -46,37 +53,41 @@ fn fleet_matrix() -> Vec<ScenarioSpec> {
 #[test]
 fn cluster_matrix_matches_golden_and_thread_counts() {
     let specs = fleet_matrix();
-    assert_eq!(specs.len(), 3);
+    assert_eq!(specs.len(), 6);
 
-    // Determinism across schedules: 3 workers vs 1 worker.
+    // Determinism across schedules: 3 workers vs 1 worker — this covers
+    // the shared pool's buffered-write protocol too (fleet cells
+    // parallelize across the matrix, never within a cell).
     let parallel = run_specs(&specs, 3);
     let serial = run_specs(&specs, 1);
     let table = parallel.table();
     assert_eq!(table, serial.table(), "fleet results depend on thread count");
 
     // Content sanity before pinning bytes.
-    assert_eq!(table.lines().count(), 4, "header + 3 fleet cells:\n{table}");
+    assert_eq!(table.lines().count(), 7, "header + 6 fleet cells:\n{table}");
     for cell in &parallel.cells {
         assert!(cell.completed > 0, "{} completed nothing", cell.spec.label());
         assert!(cell.carbon_per_request_g > 0.0);
     }
 
-    // The acceptance property: carbon-greedy beats round-robin on carbon
-    // at (near-)equal SLO attainment, on the same replayed day.
-    let by_router = |r: RouterPolicy| {
+    let by = |r: RouterPolicy, cache: CacheVariant| {
         parallel
             .cells
             .iter()
             .find(|c| {
-                c.spec
-                    .cluster
-                    .as_ref()
-                    .is_some_and(|cv| cv.router == r)
+                c.spec.cache == cache
+                    && c.spec
+                        .cluster
+                        .as_ref()
+                        .is_some_and(|cv| cv.router == r)
             })
-            .expect("router cell present")
+            .expect("router/cache cell present")
     };
-    let rr = by_router(RouterPolicy::RoundRobin);
-    let greedy = by_router(RouterPolicy::CarbonGreedy);
+
+    // Acceptance property 1: carbon-greedy beats round-robin on carbon
+    // at (near-)equal SLO attainment, on the same replayed day.
+    let rr = by(RouterPolicy::RoundRobin, CacheVariant::Local);
+    let greedy = by(RouterPolicy::CarbonGreedy, CacheVariant::Local);
     assert!(
         greedy.carbon_per_request_g < rr.carbon_per_request_g,
         "carbon-greedy {:.4} g/req !< round-robin {:.4} g/req",
@@ -88,6 +99,24 @@ fn cluster_matrix_matches_golden_and_thread_counts() {
         "carbon-greedy SLO {:.3} fell more than 3 pp below round-robin {:.3}",
         greedy.slo_attainment,
         rr.slo_attainment
+    );
+
+    // Cache-backend sanity at this sub-capacity rate: the pool compares
+    // at equal fleet capacity and can only help (bounced conversations —
+    // if any at this load — keep their prefixes). The *strict* lift is
+    // pinned under saturating load below.
+    let pooled = by(RouterPolicy::CarbonGreedy, CacheVariant::Shared);
+    assert!(
+        (pooled.mean_cache_tb - greedy.mean_cache_tb).abs() < 1e-9,
+        "local vs shared must compare at equal fleet capacity: {} vs {} TB",
+        greedy.mean_cache_tb,
+        pooled.mean_cache_tb
+    );
+    assert!(
+        pooled.token_hit_rate >= greedy.token_hit_rate,
+        "shared pool hit rate {:.4} < per-replica {:.4}",
+        pooled.token_hit_rate,
+        greedy.token_hit_rate
     );
 
     // Golden diff (UPDATE_GOLDEN=1 regenerates; first run bootstraps).
@@ -107,14 +136,60 @@ fn cluster_matrix_matches_golden_and_thread_counts() {
 }
 
 #[test]
+fn shared_pool_lifts_hit_rate_under_saturating_load() {
+    // The acceptance pin for cross-replica sharing (ISSUE 4): FR+MISO
+    // under carbon-greedy routing at a rate that saturates the green
+    // replica, so overflow continually bounces conversations onto MISO
+    // and back. Per-replica LocalStores lose every bounced prefix; the
+    // SharedStore pool — at the *same* total fleet capacity — serves
+    // them from wherever they were written, lifting the fleet token hit
+    // rate strictly.
+    let mk = |cache: CacheVariant| {
+        let mut m = Matrix::new()
+            .models(&[Model::Llama70B])
+            .tasks(&[Task::Conversation])
+            .grids(&[Grid::Es])
+            .baselines(&[Baseline::FullCache])
+            .caches(&[cache])
+            .clusters(&[Some(ClusterVariant::new(
+                &[Grid::Fr, Grid::Miso],
+                RouterPolicy::CarbonGreedy,
+            ))]);
+        m.hours = 2;
+        m.fixed_rps = Some(1.2); // > one replica's capacity, < the fleet's
+        m.expand()
+    };
+    let local = run_specs(&mk(CacheVariant::Local), 1);
+    let pooled = run_specs(&mk(CacheVariant::Shared), 1);
+    let (l, p) = (&local.cells[0], &pooled.cells[0]);
+    assert_eq!(l.completed, p.completed, "same replayed day");
+    assert!(
+        (l.mean_cache_tb - p.mean_cache_tb).abs() < 1e-9,
+        "equal total fleet capacity: {} vs {} TB",
+        l.mean_cache_tb,
+        p.mean_cache_tb
+    );
+    assert!(
+        p.token_hit_rate > l.token_hit_rate,
+        "shared pool must lift fleet hit rate under spillover: {:.4} !> {:.4}",
+        p.token_hit_rate,
+        l.token_hit_rate
+    );
+}
+
+#[test]
 fn fleet_cells_are_replayable_one_by_one() {
-    // A fleet cell replayed alone reproduces its in-matrix result.
+    // A fleet cell replayed alone reproduces its in-matrix result —
+    // including a shared-pool cell, whose state lives and dies with its
+    // own `ClusterSim`.
     let specs = fleet_matrix();
     let all = run_specs(&specs, 0);
-    let lone = run_specs(&specs[2..3], 1);
-    let a = &all.cells[2];
-    let b = &lone.cells[0];
-    assert_eq!(a.completed, b.completed);
-    assert!((a.carbon_per_request_g - b.carbon_per_request_g).abs() < 1e-12);
-    assert!((a.token_hit_rate - b.token_hit_rate).abs() < 1e-12);
+    for idx in [2usize, 5] {
+        let lone = run_specs(&specs[idx..idx + 1], 1);
+        let a = &all.cells[idx];
+        let b = &lone.cells[0];
+        assert_eq!(a.completed, b.completed, "{}", a.spec.label());
+        assert!((a.carbon_per_request_g - b.carbon_per_request_g).abs() < 1e-12);
+        assert!((a.token_hit_rate - b.token_hit_rate).abs() < 1e-12);
+    }
 }

@@ -22,7 +22,7 @@
 //!   a real divergence would first break the exact iteration/count
 //!   asserts above.
 
-use greencache::cache::{CacheManager, PolicyKind, KV_BYTES_PER_TOKEN_70B};
+use greencache::cache::{CacheStore, LocalStore, PolicyKind, KV_BYTES_PER_TOKEN_70B};
 use greencache::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
 use greencache::experiments::Task;
 use greencache::metrics::Slo;
@@ -80,7 +80,7 @@ struct ToggleResize {
 }
 
 impl Controller for ToggleResize {
-    fn on_interval(&mut self, _h: usize, _o: &IntervalObservation, cache: &mut CacheManager) {
+    fn on_interval(&mut self, _h: usize, _o: &IntervalObservation, cache: &mut dyn CacheStore) {
         self.fired += 1;
         let cap = if self.fired % 2 == 1 {
             self.lo_bytes
@@ -102,7 +102,7 @@ fn run(sc: &Scenario, stepping: Stepping) -> SimResult {
         stepping,
     };
     let mut wl = sc.task.make_workload(sc.seed);
-    let mut cache = CacheManager::new(
+    let mut cache = LocalStore::new(
         (sc.cache_tb * TB) as u64,
         KV_BYTES_PER_TOKEN_70B,
         PolicyKind::Lcs,
