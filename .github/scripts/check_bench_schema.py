@@ -1,0 +1,46 @@
+#!/usr/bin/env python3
+"""Validate BENCH_SIM.json / BENCH_CACHE.json against their key contract.
+
+Usage: check_bench_schema.py <dir> [<dir> ...]
+
+Each directory must contain both reports. The key lists are the single
+source of truth for the schema the README performance table and tooling
+read — CI runs this over the committed placeholders (repo root) and the
+freshly measured reports (bench-out/), so the two cannot drift apart.
+"""
+
+import json
+import sys
+
+SCHEMA = "greencache-bench-v1"
+REQUIRED = {
+    "BENCH_SIM.json": [
+        "bench", "config", "reference", "fast_forward", "speedup",
+        "quick", "schema",
+    ],
+    "BENCH_CACHE.json": [
+        "bench", "cases", "group", "ops_per_case", "quick", "schema",
+    ],
+}
+
+
+def check(path: str, required: list) -> None:
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != SCHEMA:
+        sys.exit(f"{path}: schema {data.get('schema')!r} != {SCHEMA!r}")
+    missing = [k for k in required if k not in data]
+    if missing:
+        sys.exit(f"{path}: missing keys {missing}")
+    print(f"{path}: ok ({len(data)} keys)")
+
+
+def main() -> None:
+    dirs = sys.argv[1:] or ["."]
+    for d in dirs:
+        for name, required in REQUIRED.items():
+            check(f"{d.rstrip('/')}/{name}", required)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,12 +19,16 @@
 //! * [`ClusterSim`] / [`run_cluster`] — steps every replica's
 //!   discrete-event engine ([`crate::sim::ReplicaEngine`]) in lockstep to
 //!   each arrival instant, routes the request against live queue/cache
-//!   state, and runs each replica's GreenCache controller independently
-//!   at its own decision boundaries. The per-replica cache is any
-//!   [`crate::cache::CacheStore`] backend ([`ClusterSpec::cache`]):
-//!   private local/tiered stores, or one fleet-level
-//!   [`crate::cache::SharedStore`] pool whose buffered writes the driver
-//!   syncs at every router instant.
+//!   state, and drives the fleet's control plane — a
+//!   [`crate::control::FleetController`] selected by
+//!   [`ClusterSpec::fleet`]: either N independent GreenCache controllers
+//!   behind the [`crate::control::PerReplica`] adapter, or the
+//!   [`crate::control::GreenCacheFleet`] planner that co-optimizes
+//!   router weights and per-replica cache sizes each interval. The
+//!   per-replica cache is any [`crate::cache::CacheStore`] backend
+//!   ([`ClusterSpec::cache`]): private local/tiered stores, or one
+//!   fleet-level [`crate::cache::SharedStore`] pool whose buffered
+//!   writes the driver syncs at every router instant.
 //! * [`ClusterResult`] — per-replica outcomes plus fleet-level SLO /
 //!   carbon / hit-rate aggregates (exact merges, not re-simulations).
 //!
@@ -39,7 +43,9 @@
 mod router;
 mod sim;
 
-pub use router::{CarbonGreedy, LeastLoaded, ReplicaView, RoundRobin, Router, RouterPolicy};
+pub use router::{
+    CarbonGreedy, LeastLoaded, ReplicaView, RoundRobin, Router, RouterPolicy, Weighted,
+};
 pub use sim::{
     grid_join, run_cluster, ClusterResult, ClusterSim, ClusterSpec, ReplicaOutcome,
     ReplicaSpec,

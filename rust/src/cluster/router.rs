@@ -3,8 +3,8 @@
 //! A [`Router`] places each arriving request on one replica, given a
 //! per-replica [`ReplicaView`] snapshot taken at the arrival instant
 //! (queue depth, the replica grid's carbon intensity for the current
-//! interval, and the cache-affinity of the request's context prefix).
-//! Three policies ship:
+//! interval plus its *forecast*, and the cache-affinity of the request's
+//! context prefix). Four policies ship:
 //!
 //! * [`RouterPolicy::RoundRobin`] — cycle through replicas; the
 //!   carbon-oblivious baseline.
@@ -14,7 +14,14 @@
 //!   queue pressure and prefix affinity, and place the request on the
 //!   lowest-scoring one: work drains toward green grids until their
 //!   queues back up, and conversations stay sticky to the replica that
-//!   holds their KV prefix.
+//!   holds their KV prefix. When a fleet planner has published target
+//!   weights ([`Router::set_weights`]), a deficit term steers the
+//!   realized split toward them without giving up stickiness.
+//! * [`RouterPolicy::Weighted`] — deterministic smooth weighted
+//!   round-robin over planner-set target weights; realizes the requested
+//!   split exactly over long streams (the fleet control plane's pure
+//!   actuator — not in [`RouterPolicy::all`], which stays the
+//!   three-way comparison axis the goldens pin).
 
 use crate::workload::Request;
 
@@ -27,8 +34,15 @@ pub struct ReplicaView {
     /// normalizer, so heterogeneous replicas compare fairly).
     pub max_batch: usize,
     /// The replica grid's carbon intensity over the current decision
-    /// interval, gCO₂e/kWh (a persistence forecast of the interval).
+    /// interval, gCO₂e/kWh (ground truth of the in-progress interval).
     pub ci_gpkwh: f64,
+    /// *Forecast* carbon intensity of the replica's grid over the
+    /// current decision interval, gCO₂e/kWh — what carbon-greedy scores
+    /// on, so placement follows where carbon is *going*. Defaults to the
+    /// persistence value ([`ReplicaView::ci_gpkwh`]) unless a fleet
+    /// controller published its predictor's interval forecast
+    /// ([`crate::control::FleetActuators::set_interval_ci_forecast`]).
+    pub ci_forecast_gpkwh: f64,
     /// Context-prefix tokens of the request already cached on this
     /// replica (from [`crate::cache::CacheStore::peek`]; under a shared
     /// fleet pool every replica reports the same value, so the affinity
@@ -45,6 +59,21 @@ pub trait Router {
     /// Choose a replica index in `0..replicas.len()` for `req`.
     /// `replicas` is never empty.
     fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize;
+
+    /// Update the per-replica target weights (fractions; normalized by
+    /// the implementation). The fleet control plane's routing actuator —
+    /// called by the cluster driver when a
+    /// [`crate::control::FleetController`] publishes a new plan.
+    /// Policies that don't support weighted placement ignore it
+    /// (the default).
+    fn set_weights(&mut self, _weights: &[f64]) {}
+
+    /// The target weights currently in force, if this policy honors
+    /// them (`None` for weight-oblivious policies, and before any
+    /// [`Router::set_weights`] call).
+    fn weights(&self) -> Option<&[f64]> {
+        None
+    }
 }
 
 /// The named router policies (the scenario matrix's router axis).
@@ -69,8 +98,14 @@ pub trait Router {
 ///     arrival_s: 0.0,
 /// };
 /// let views = [
-///     ReplicaView { queue_depth: 2, max_batch: 64, ci_gpkwh: 33.0, affinity_tokens: 0 },
-///     ReplicaView { queue_depth: 2, max_batch: 64, ci_gpkwh: 485.0, affinity_tokens: 0 },
+///     ReplicaView {
+///         queue_depth: 2, max_batch: 64,
+///         ci_gpkwh: 33.0, ci_forecast_gpkwh: 33.0, affinity_tokens: 0,
+///     },
+///     ReplicaView {
+///         queue_depth: 2, max_batch: 64,
+///         ci_gpkwh: 485.0, ci_forecast_gpkwh: 485.0, affinity_tokens: 0,
+///     },
 /// ];
 /// let mut router = RouterPolicy::CarbonGreedy.build();
 /// assert_eq!(router.route(&req, &views), 0);
@@ -83,10 +118,19 @@ pub enum RouterPolicy {
     LeastLoaded,
     /// Weight forecast CI against queue depth and cache affinity.
     CarbonGreedy,
+    /// Smooth weighted round-robin over fleet-planner target weights.
+    /// The cluster driver seeds it with the capacity-proportional
+    /// [`RouterPolicy::expected_split`] until a plan arrives; driven
+    /// standalone it self-initializes to an equal split.
+    Weighted,
 }
 
 impl RouterPolicy {
-    /// All policies, in comparison order (the matrix router axis).
+    /// The router *comparison* axis, in order (round-robin /
+    /// least-loaded / carbon-greedy). [`RouterPolicy::Weighted`] is
+    /// deliberately excluded: it is the fleet planner's actuator, not a
+    /// standalone comparison point, and the pinned golden matrices sweep
+    /// exactly these three.
     pub fn all() -> [RouterPolicy; 3] {
         [
             RouterPolicy::RoundRobin,
@@ -101,6 +145,7 @@ impl RouterPolicy {
             RouterPolicy::RoundRobin => "round-robin",
             RouterPolicy::LeastLoaded => "least-loaded",
             RouterPolicy::CarbonGreedy => "carbon-greedy",
+            RouterPolicy::Weighted => "weighted",
         }
     }
 
@@ -110,6 +155,28 @@ impl RouterPolicy {
             RouterPolicy::RoundRobin => Box::new(RoundRobin::default()),
             RouterPolicy::LeastLoaded => Box::new(LeastLoaded),
             RouterPolicy::CarbonGreedy => Box::new(CarbonGreedy::default()),
+            RouterPolicy::Weighted => Box::new(Weighted::default()),
+        }
+    }
+
+    /// The load split this policy is expected to realize a priori —
+    /// what per-replica controllers' pre-deployment training history is
+    /// scaled by before any split has been *observed* (the cluster
+    /// layer's bootstrap; from hour one, controllers refit on the
+    /// realized split). Round-robin splits uniformly; the queue- and
+    /// carbon-aware policies (and [`RouterPolicy::Weighted`]'s initial
+    /// weights) are assumed capacity-proportional — the static
+    /// peak-share assumption documented on
+    /// [`crate::control::PerReplica`].
+    pub fn expected_split(&self, peak_rps: &[f64]) -> Vec<f64> {
+        match self {
+            RouterPolicy::RoundRobin => {
+                vec![1.0 / peak_rps.len().max(1) as f64; peak_rps.len()]
+            }
+            _ => {
+                let total: f64 = peak_rps.iter().sum::<f64>().max(1e-9);
+                peak_rps.iter().map(|p| p / total).collect()
+            }
         }
     }
 }
@@ -151,9 +218,10 @@ impl Router for LeastLoaded {
 /// The carbon-aware policy: place the request on the replica minimizing
 ///
 /// ```text
-/// score_i = ci_weight · CI_i / max_j CI_j
+/// score_i = ci_weight · ĈI_i / max_j ĈI_j          (ĈI = interval forecast)
 ///         + queue_weight · queue_i / max_batch_i
 ///         − affinity_weight · cached_prefix_i / prompt_tokens
+///         + weight_weight · (realized_share_i − target_i)   (planner weights only)
 /// ```
 ///
 /// With the default weights a fully-loaded green replica loses to an
@@ -161,6 +229,14 @@ impl Router for LeastLoaded {
 /// warm prefix pulls a request toward its KV unless the grid gap is
 /// extreme. Ties break to the lowest index, so decisions are
 /// deterministic.
+///
+/// The CI term scores the interval *forecast*
+/// ([`ReplicaView::ci_forecast_gpkwh`]) — which equals the persistence
+/// value unless a fleet controller published its predictor's number, so
+/// plain fleets behave exactly as before. The deficit term only exists
+/// after [`Router::set_weights`]: it steers the realized split toward
+/// the planner's target while the CI/queue/affinity terms keep their
+/// say (a bounded nudge, not a hard quota).
 #[derive(Debug, Clone)]
 pub struct CarbonGreedy {
     /// Weight on the normalized carbon-intensity term.
@@ -170,6 +246,14 @@ pub struct CarbonGreedy {
     pub queue_weight: f64,
     /// Weight on the cache-affinity discount.
     pub affinity_weight: f64,
+    /// Weight on the planner-target deficit term (inert until
+    /// [`Router::set_weights`] is called).
+    pub weight_weight: f64,
+    /// Planner-set target split (normalized); `None` until set.
+    weights: Option<Vec<f64>>,
+    /// Requests routed per replica since the current targets were set
+    /// (the realized-share numerator of the deficit term).
+    routed: Vec<u64>,
 }
 
 impl Default for CarbonGreedy {
@@ -178,6 +262,9 @@ impl Default for CarbonGreedy {
             ci_weight: 1.0,
             queue_weight: 1.5,
             affinity_weight: 0.5,
+            weight_weight: 2.0,
+            weights: None,
+            routed: Vec::new(),
         }
     }
 }
@@ -186,24 +273,118 @@ impl Router for CarbonGreedy {
     fn route(&mut self, req: &Request, replicas: &[ReplicaView]) -> usize {
         let ci_max = replicas
             .iter()
-            .map(|r| r.ci_gpkwh)
+            .map(|r| r.ci_forecast_gpkwh)
             .fold(f64::NEG_INFINITY, f64::max)
             .max(1e-9);
         let prompt = req.prompt_tokens().max(1) as f64;
+        let targets = self
+            .weights
+            .as_deref()
+            .filter(|w| w.len() == replicas.len());
+        let total_routed: u64 = self.routed.iter().sum();
         let mut best = 0usize;
         let mut best_score = f64::INFINITY;
         for (i, r) in replicas.iter().enumerate() {
-            let ci_term = r.ci_gpkwh / ci_max;
+            let ci_term = r.ci_forecast_gpkwh / ci_max;
             let queue_term = r.queue_depth as f64 / r.max_batch.max(1) as f64;
             let affinity_term = (r.affinity_tokens as f64 / prompt).min(1.0);
-            let score = self.ci_weight * ci_term + self.queue_weight * queue_term
+            let mut score = self.ci_weight * ci_term + self.queue_weight * queue_term
                 - self.affinity_weight * affinity_term;
+            if let Some(w) = targets {
+                let share = if total_routed == 0 {
+                    w[i] // no deficit yet
+                } else {
+                    self.routed[i] as f64 / total_routed as f64
+                };
+                score += self.weight_weight * (share - w[i]);
+            }
             if score < best_score {
                 best_score = score;
                 best = i;
             }
         }
+        if targets.is_some() {
+            self.routed[best] += 1;
+        }
         best
+    }
+
+    fn set_weights(&mut self, weights: &[f64]) {
+        self.weights = Some(normalize_weights(weights));
+        self.routed = vec![0; weights.len()];
+    }
+
+    fn weights(&self) -> Option<&[f64]> {
+        self.weights.as_deref()
+    }
+}
+
+/// Clamp negatives to zero and normalize to sum 1 (uniform if the sum
+/// degenerates) — the shared sanitizer of every weight-honoring router.
+fn normalize_weights(weights: &[f64]) -> Vec<f64> {
+    let clamped: Vec<f64> = weights
+        .iter()
+        .map(|&w| if w.is_finite() && w > 0.0 { w } else { 0.0 })
+        .collect();
+    let total: f64 = clamped.iter().sum();
+    if total <= 0.0 {
+        vec![1.0 / weights.len().max(1) as f64; weights.len()]
+    } else {
+        clamped.into_iter().map(|w| w / total).collect()
+    }
+}
+
+/// Smooth weighted round-robin (the nginx algorithm): each decision adds
+/// every replica's weight to its running credit, routes to the highest
+/// credit, and debits the chosen replica by the weight total. Over a
+/// long stream the realized split converges to the target weights with
+/// bounded per-replica error (≤ 1 request per weight total) — the fleet
+/// planner's pure placement actuator. Deterministic; ties break to the
+/// lowest index.
+#[derive(Debug, Default)]
+pub struct Weighted {
+    weights: Vec<f64>,
+    credit: Vec<f64>,
+    /// Whether a planner actually published targets — the lazy equal-
+    /// split self-initialization in [`Router::route`] must not make
+    /// [`Router::weights`] claim a plan is in force.
+    planned: bool,
+}
+
+impl Router for Weighted {
+    fn route(&mut self, _req: &Request, replicas: &[ReplicaView]) -> usize {
+        let n = replicas.len();
+        if self.weights.len() != n {
+            // No plan yet (or the fleet changed shape): equal weights.
+            self.weights = vec![1.0 / n as f64; n];
+            self.credit = vec![0.0; n];
+        }
+        let total: f64 = self.weights.iter().sum();
+        let mut best = 0usize;
+        let mut best_credit = f64::NEG_INFINITY;
+        for i in 0..n {
+            self.credit[i] += self.weights[i];
+            if self.credit[i] > best_credit {
+                best_credit = self.credit[i];
+                best = i;
+            }
+        }
+        self.credit[best] -= total;
+        best
+    }
+
+    fn set_weights(&mut self, weights: &[f64]) {
+        self.weights = normalize_weights(weights);
+        self.credit = vec![0.0; weights.len()];
+        self.planned = true;
+    }
+
+    fn weights(&self) -> Option<&[f64]> {
+        if self.planned {
+            Some(&self.weights)
+        } else {
+            None
+        }
     }
 }
 
@@ -230,6 +411,7 @@ mod tests {
             queue_depth: queue,
             max_batch: 64,
             ci_gpkwh: ci,
+            ci_forecast_gpkwh: ci,
             affinity_tokens: affinity,
         }
     }
@@ -257,8 +439,20 @@ mod tests {
         let mut r = RouterPolicy::LeastLoaded.build();
         // 10/128 < 6/64: the big replica is relatively emptier.
         let views = [
-            ReplicaView { queue_depth: 6, max_batch: 64, ci_gpkwh: 50.0, affinity_tokens: 0 },
-            ReplicaView { queue_depth: 10, max_batch: 128, ci_gpkwh: 50.0, affinity_tokens: 0 },
+            ReplicaView {
+                queue_depth: 6,
+                max_batch: 64,
+                ci_gpkwh: 50.0,
+                ci_forecast_gpkwh: 50.0,
+                affinity_tokens: 0,
+            },
+            ReplicaView {
+                queue_depth: 10,
+                max_batch: 128,
+                ci_gpkwh: 50.0,
+                ci_forecast_gpkwh: 50.0,
+                affinity_tokens: 0,
+            },
         ];
         assert_eq!(r.route(&req(0, 10), &views), 1);
     }
@@ -314,5 +508,104 @@ mod tests {
         assert_eq!(RouterPolicy::RoundRobin.name(), "round-robin");
         assert_eq!(RouterPolicy::LeastLoaded.name(), "least-loaded");
         assert_eq!(RouterPolicy::CarbonGreedy.name(), "carbon-greedy");
+        assert_eq!(RouterPolicy::Weighted.name(), "weighted");
+        // The comparison axis stays the pinned three-way sweep.
+        assert_eq!(RouterPolicy::all().len(), 3);
+        assert!(!RouterPolicy::all().contains(&RouterPolicy::Weighted));
+    }
+
+    #[test]
+    fn carbon_greedy_routes_on_the_forecast_not_the_current_ci() {
+        let mut r = RouterPolicy::CarbonGreedy.build();
+        // Replica 0 is green *now* but forecast dirty; replica 1 the
+        // reverse. The forecast must win the placement.
+        let mut a = view(3, 33.0, 0);
+        a.ci_forecast_gpkwh = 485.0;
+        let mut b = view(3, 485.0, 0);
+        b.ci_forecast_gpkwh = 33.0;
+        assert_eq!(r.route(&req(1000, 50), &[a, b]), 1);
+    }
+
+    /// The satellite property: weighted routing realizes the requested
+    /// split within tolerance over a long arrival stream.
+    #[test]
+    fn weighted_router_realizes_target_split_over_a_long_stream() {
+        let views = [view(0, 100.0, 0), view(0, 200.0, 0), view(0, 50.0, 0)];
+        for weights in [
+            vec![0.5, 0.3, 0.2],
+            vec![1.0, 1.0, 2.0],
+            vec![0.9, 0.1, 0.0],
+        ] {
+            let mut r = RouterPolicy::Weighted.build();
+            r.set_weights(&weights);
+            let total_w: f64 = weights.iter().sum();
+            let n = 10_000usize;
+            let mut counts = [0usize; 3];
+            for _ in 0..n {
+                counts[r.route(&req(200, 20), &views)] += 1;
+            }
+            for (i, &c) in counts.iter().enumerate() {
+                let want = n as f64 * weights[i] / total_w;
+                assert!(
+                    (c as f64 - want).abs() <= 2.0,
+                    "weights {weights:?}: replica {i} got {c}, want ≈{want:.1}"
+                );
+            }
+            // And the sanitized targets are introspectable.
+            assert!(r.weights().is_some());
+        }
+    }
+
+    #[test]
+    fn weighted_router_defaults_to_equal_split() {
+        let mut r = RouterPolicy::Weighted.build();
+        let views = [view(0, 100.0, 0), view(7, 400.0, 0)];
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&req(0, 10), &views)).collect();
+        assert_eq!(picks.iter().filter(|&&p| p == 0).count(), 3);
+        assert_eq!(picks.iter().filter(|&&p| p == 1).count(), 3);
+        // The lazy self-initialization is not a plan: `weights()` keeps
+        // reporting that no planner has published targets.
+        assert!(r.weights().is_none());
+    }
+
+    #[test]
+    fn carbon_greedy_deficit_steers_toward_planner_weights() {
+        // Equal CI, equal queues, no affinity: unweighted carbon-greedy
+        // would send *everything* to replica 0 (tie-break). With planner
+        // weights set, the deficit term must realize the target split
+        // within tolerance over a long stream.
+        let views = [view(3, 124.0, 0), view(3, 124.0, 0)];
+        let mut r = RouterPolicy::CarbonGreedy.build();
+        r.set_weights(&[0.25, 0.75]);
+        let n = 8_000usize;
+        let mut counts = [0usize; 2];
+        for _ in 0..n {
+            counts[r.route(&req(200, 20), &views)] += 1;
+        }
+        let share0 = counts[0] as f64 / n as f64;
+        assert!(
+            (share0 - 0.25).abs() < 0.02,
+            "replica 0 realized share {share0:.3}, target 0.25"
+        );
+        // Without weights the same scenario degenerates to the tie-break.
+        let mut plain = RouterPolicy::CarbonGreedy.build();
+        assert_eq!(plain.route(&req(200, 20), &views), 0);
+        assert!(plain.weights().is_none());
+    }
+
+    #[test]
+    fn expected_split_matches_policy_shape() {
+        let peaks = [0.9, 0.9, 3.0];
+        let rr = RouterPolicy::RoundRobin.expected_split(&peaks);
+        assert!(rr.iter().all(|&w| (w - 1.0 / 3.0).abs() < 1e-12));
+        for p in [
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::CarbonGreedy,
+            RouterPolicy::Weighted,
+        ] {
+            let w = p.expected_split(&peaks);
+            assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+            assert!((w[2] - 3.0 / 4.8).abs() < 1e-12, "{p:?}: {w:?}");
+        }
     }
 }

@@ -6,16 +6,20 @@ use crate::cache::{
 };
 use crate::carbon::{CarbonAccountant, TB};
 use crate::ci::Grid;
+use crate::control::{
+    FleetActuators, FleetController, FleetObservation, FleetPolicy, GreenCacheFleet, PerReplica,
+};
 use crate::coordinator::{GreenCacheConfig, GreenCacheController};
 use crate::experiments::{Baseline, Model, ProfileStore, Task};
 use crate::load::LoadTrace;
 use crate::rng::Rng;
 use crate::sim::{
-    Controller, FixedController, HourSample, ReplicaEngine, SimConfig, SimResult, Stepping,
+    Controller, FixedController, HourSample, IntervalObservation, ReplicaEngine, SimConfig,
+    SimResult, Stepping,
 };
 use crate::workload::ArrivalGen;
 
-use super::router::{ReplicaView, RouterPolicy};
+use super::router::{ReplicaView, Router, RouterPolicy};
 
 /// The canonical `FR+ES+MISO`-style grid-list label, shared by
 /// [`ClusterSpec::fleet_label`] and the scenario layer's
@@ -107,6 +111,14 @@ pub struct ClusterSpec {
     /// per-replica budgets become slices of the pool, so total fleet
     /// capacity matches the `local` fleet exactly.
     pub cache: CacheVariant,
+    /// How the fleet's controllers are organized (`greencache cluster
+    /// --fleet`): [`FleetPolicy::PerReplica`] wraps N independent
+    /// sizing controllers (the pre-planner behavior, and the default);
+    /// [`FleetPolicy::GreenCacheFleet`] runs one joint
+    /// predict→profile→solve pass per interval over router weights and
+    /// every replica's cache size. Only meaningful for adaptive
+    /// baselines — fixed-capacity fleets have nothing to plan.
+    pub fleet: FleetPolicy,
 }
 
 impl ClusterSpec {
@@ -127,6 +139,7 @@ impl ClusterSpec {
             fixed_ci: None,
             stepping: Stepping::default(),
             cache: CacheVariant::Local,
+            fleet: FleetPolicy::PerReplica,
         }
     }
 
@@ -325,40 +338,146 @@ impl ClusterResult {
     }
 }
 
+/// The per-engine interval hook under fleet control: records each
+/// completed interval's observation for the fleet controller and never
+/// touches the cache itself. All actuation happens one level up, at the
+/// lockstep instants where [`ClusterSim`] fires the
+/// [`FleetController`] — see the timing contract in
+/// [`crate::control`]'s module docs.
+#[derive(Default)]
+struct Recorder {
+    observations: Vec<IntervalObservation>,
+}
+
+impl Controller for Recorder {
+    fn on_interval(&mut self, _: usize, obs: &IntervalObservation, _: &mut dyn CacheStore) {
+        self.observations.push(obs.clone());
+    }
+}
+
 /// Internal per-replica live state during a fleet run.
 struct Rep {
     spec: ReplicaSpec,
     engine: ReplicaEngine<'static>,
-    controller: Box<dyn Controller>,
+    /// Observation mailbox the engine fills at its own boundary
+    /// crossings (the fleet controller drains it at lockstep instants).
+    recorder: Recorder,
     /// Absolute hourly CI trace (history + evaluated horizon).
     ci: Vec<f64>,
     routed: usize,
+    /// Requests routed here per decision interval (the realized-split
+    /// signal in [`FleetObservation`]).
+    routed_by_interval: Vec<usize>,
 }
 
-/// Advance one replica's engine to `t` against its own CI trace and
-/// controller (field-disjoint borrows keep this a free function).
+/// Advance one replica's engine to `t` against its own CI trace
+/// (field-disjoint borrows keep this a free function).
 fn advance(rep: &mut Rep, base_hour: usize, t: f64) {
     let Rep {
         engine,
-        controller,
+        recorder,
         ci,
         ..
     } = rep;
     let ci: &[f64] = ci;
     let last = ci.len() - 1;
     let ci_fn = move |h: usize| ci[(base_hour + h).min(last)];
-    engine.run_until(t, &ci_fn, controller.as_mut());
+    engine.run_until(t, &ci_fn, recorder);
+}
+
+/// Assemble the fleet-consistent view of completed interval `k` (or the
+/// pre-day bootstrap when `k` is `None`), hand it to the fleet
+/// controller with actuators over every replica's cache, and apply the
+/// staged router weights / published CI forecasts. One pass with
+/// field-disjoint borrows: the observation reads each replica's CI
+/// trace and mailbox while the actuators mutably borrow each engine's
+/// cache.
+#[allow(clippy::too_many_arguments)]
+fn fire_fleet(
+    reps: &mut [Rep],
+    fleet: &mut dyn FleetController,
+    k: Option<usize>,
+    now_s: f64,
+    interval_s: f64,
+    base_hour: usize,
+    expected_split: &[f64],
+    router: &mut dyn Router,
+    ci_forecast: &mut [Option<f64>],
+) {
+    let n = reps.len();
+    // Hours fully covered by the completed intervals (CI history is
+    // hourly even when the decision interval is not).
+    let hours_done = k
+        .map(|k| (((k + 1) as f64 * interval_s) / 3600.0) as usize)
+        .unwrap_or(0);
+    let mut caches: Vec<&mut (dyn CacheStore + '_)> = Vec::with_capacity(n);
+    let mut ci_hist: Vec<&[f64]> = Vec::with_capacity(n);
+    let mut ci_next: Vec<f64> = Vec::with_capacity(n);
+    let mut interval_obs: Vec<IntervalObservation> = Vec::with_capacity(n);
+    let mut routed: Vec<usize> = Vec::with_capacity(n);
+    for rep in reps.iter_mut() {
+        let Rep {
+            engine,
+            recorder,
+            ci,
+            routed_by_interval,
+            ..
+        } = rep;
+        caches.push(engine.cache_mut());
+        let end = (base_hour + hours_done).min(ci.len());
+        ci_hist.push(&ci[..end]);
+        ci_next.push(ci[(base_hour + hours_done).min(ci.len() - 1)]);
+        if let Some(k) = k {
+            interval_obs.push(recorder.observations[k].clone());
+            routed.push(routed_by_interval.get(k).copied().unwrap_or(0));
+        }
+    }
+    let mut act = FleetActuators::new(caches, now_s);
+    match k {
+        None => fleet.bootstrap(&mut act),
+        Some(kk) => {
+            let total: usize = routed.iter().sum();
+            let load_split: Vec<f64> = if total == 0 {
+                expected_split.to_vec()
+            } else {
+                routed.iter().map(|&r| r as f64 / total as f64).collect()
+            };
+            let fleet_rps: f64 = interval_obs.iter().map(|o| o.observed_rps).sum();
+            let obs = FleetObservation {
+                hour: kk,
+                base_hour,
+                replicas: interval_obs,
+                ci_history: ci_hist,
+                ci_next,
+                load_split,
+                routed,
+                fleet_rps,
+            };
+            fleet.on_interval(kk, &obs, &mut act);
+        }
+    }
+    if let Some(w) = act.take_router_weights() {
+        router.set_weights(&w);
+    }
+    for (slot, f) in ci_forecast.iter_mut().zip(act.take_ci_forecasts()) {
+        if let Some(v) = f {
+            *slot = Some(v);
+        }
+    }
 }
 
 /// The lockstep fleet simulator.
 ///
-/// Construction assembles the per-replica engines, traces and
-/// controllers; [`ClusterSim::run`] consumes the simulator, interleaving
+/// Construction assembles the per-replica engines, traces and the fleet
+/// controller; [`ClusterSim::run`] consumes the simulator, interleaving
 /// one shared arrival stream with per-replica engine stepping:
 ///
 /// ```text
+/// fleet controller bootstraps (provisions caches, may set router weights)
 /// for each arrival t (one Poisson stream at the fleet rate):
 ///     every replica engine advances to t        (lockstep)
+///     once every replica crossed boundary k:
+///         FleetController::on_interval(k)       (resizes, weights, forecasts)
 ///     router places the request on one replica  (live queues + caches)
 /// at the horizon: every engine drains, results aggregate
 /// ```
@@ -371,6 +490,12 @@ pub struct ClusterSim {
     /// [`CacheVariant::Shared`]: the driver syncs its buffered writes at
     /// every router instant (see [`SharedStore`]'s protocol docs).
     shared: Option<SharedStore>,
+    /// The fleet-scoped control plane ([`ClusterSpec::fleet`]).
+    fleet: Box<dyn FleetController>,
+    /// The a-priori split of [`ClusterSpec::router`] — scales controller
+    /// bootstrap histories and stands in for the realized split over
+    /// arrival-free intervals.
+    expected_split: Vec<f64>,
 }
 
 impl ClusterSim {
@@ -415,7 +540,19 @@ impl ClusterSim {
             _ => None,
         };
 
+        let peaks: Vec<f64> = spec
+            .replicas
+            .iter()
+            .map(|r| r.model.peak_rps(kind))
+            .collect();
+        // The a-priori routing split: uniform for round-robin,
+        // capacity-proportional otherwise (the static-share assumption
+        // is documented on `control::PerReplica`; the fleet planner
+        // replaces it with planned weights from hour zero).
+        let expected_split = spec.router.expected_split(&peaks);
+
         let mut reps = Vec::with_capacity(spec.replicas.len());
+        let mut ctls: Vec<GreenCacheController> = Vec::new();
         for (i, r) in spec.replicas.iter().enumerate() {
             // Same-seeded grid traces: replicas on the same grid see the
             // same CI (it is the grid's weather, not the replica's). A
@@ -449,22 +586,23 @@ impl ClusterSim {
                 )),
             };
 
-            // Pre-day bootstrap shared with `experiments::run_day` via
-            // `GreenCacheController::bootstrapped`. (Caches start cold
-            // here, unlike run_day's pre-warmed single node — see the
-            // ClusterSpec docs.)
-            let controller: Box<dyn Controller> = if spec.is_adaptive() && capacity > 0 {
+            // Per-replica sizing state (adaptive baselines). The pre-day
+            // §4.1 bootstrap now happens fleet-wide, through
+            // `FleetController::bootstrap` at the start of `run` —
+            // caches start cold here, unlike run_day's pre-warmed single
+            // node (see the ClusterSpec docs). Each controller's
+            // *pre-deployment* history is scaled by the router's
+            // a-priori expected split (`expected_split`); see
+            // `control::PerReplica` for why that static assumption is a
+            // blind spot and `control::GreenCacheFleet` for the planner
+            // that removes it. Every replica of an adaptive fleet gets a
+            // controller — replica i must stay controller i for the
+            // fleet API — and a hand-built zero-budget replica simply
+            // gets the degenerate one whose only candidate size is 0 TB.
+            if spec.is_adaptive() {
                 let profile = profiles.get_shared(r.model, spec.task, policy);
                 let ci_hist = ci[..base_hour].to_vec();
-                // Each controller's *pre-deployment* history assumes a
-                // peak-proportional share of the fleet load. A routing
-                // policy that concentrates traffic (carbon-greedy) makes
-                // that first plan wrong, but `on_interval` feeds each
-                // controller its replica's *observed* rps from hour one,
-                // so SARIMA refits onto the real split as the day runs.
-                // Co-planning routing and sizing fleet-wide is a ROADMAP
-                // open item.
-                let share = r.model.peak_rps(kind) / fleet_peak.max(1e-9);
+                let share = expected_split[i];
                 let load_hist: Vec<f64> = load_trace.hourly_rps[..base_hour]
                     .iter()
                     .map(|x| x * share)
@@ -475,17 +613,10 @@ impl ClusterSim {
                     spec.interval_s / 3600.0,
                     spec.seed ^ (i as u64),
                 );
-                Box::new(GreenCacheController::bootstrapped(
-                    gc_cfg,
-                    profile,
-                    ci_hist,
-                    load_hist,
-                    base_hour,
-                    cache.as_mut(),
-                ))
-            } else {
-                Box::new(FixedController)
-            };
+                ctls.push(GreenCacheController::new(
+                    gc_cfg, profile, ci_hist, load_hist, base_hour,
+                ));
+            }
 
             let cfg = SimConfig {
                 cost: r.model.cost(),
@@ -503,11 +634,30 @@ impl ClusterSim {
             reps.push(Rep {
                 spec: *r,
                 engine: ReplicaEngine::new(cfg, cache, accountant),
-                controller,
+                recorder: Recorder::default(),
                 ci,
                 routed: 0,
+                routed_by_interval: Vec::new(),
             });
         }
+
+        // Organize the controllers per the fleet policy. Fixed-capacity
+        // baselines have nothing to plan, so `GreenCacheFleet`
+        // degenerates to the inert per-replica adapter there.
+        let n = spec.replicas.len();
+        let fleet: Box<dyn FleetController> = if ctls.is_empty() {
+            Box::new(PerReplica::new(
+                (0..n).map(|_| FixedController).collect::<Vec<_>>(),
+            ))
+        } else {
+            match spec.fleet {
+                FleetPolicy::PerReplica => Box::new(PerReplica::new(ctls)),
+                FleetPolicy::GreenCacheFleet => {
+                    let fleet_hist = load_trace.hourly_rps[..base_hour].to_vec();
+                    Box::new(GreenCacheFleet::new(ctls, fleet_hist, peaks, base_hour))
+                }
+            }
+        };
 
         ClusterSim {
             spec: spec.clone(),
@@ -515,6 +665,8 @@ impl ClusterSim {
             load_trace,
             base_hour,
             shared,
+            fleet,
+            expected_split,
         }
     }
 
@@ -526,6 +678,8 @@ impl ClusterSim {
             load_trace,
             base_hour,
             shared,
+            mut fleet,
+            expected_split,
         } = self;
         let horizon_s = spec.hours as f64 * 3600.0;
         let last_load = load_trace.hourly_rps.len() - 1;
@@ -538,6 +692,40 @@ impl ClusterSim {
         let mut rng = Rng::new(spec.seed ^ 0x51B_E11E);
         let mut arrivals = ArrivalGen::new(spec.seed);
         let mut router = spec.router.build();
+        // A weighted router starts on the same a-priori split the
+        // controllers' bootstrap histories were trained on (capacity-
+        // proportional), instead of its standalone equal-split default —
+        // otherwise heterogeneous `PerReplica` fleets would train for a
+        // split the router never realizes. Weight-oblivious policies
+        // must NOT get this call: on carbon-greedy it would activate the
+        // deficit term and change the pinned plain-fleet goldens.
+        if spec.router == RouterPolicy::Weighted {
+            router.set_weights(&expected_split);
+        }
+        // Fleet-published per-replica interval CI forecasts; views fall
+        // back to the ground-truth CI of the in-progress interval
+        // (persistence) until the controller publishes one.
+        let mut ci_forecast: Vec<Option<f64>> = vec![None; reps.len()];
+        // Decision intervals fully processed by the fleet controller.
+        let mut fleet_fired = 0usize;
+
+        // §4.1 pre-day bootstrap, fleet-wide: the controller provisions
+        // every cache (and may stage router weights / CI forecasts)
+        // before time zero.
+        fire_fleet(
+            &mut reps,
+            fleet.as_mut(),
+            None,
+            0.0,
+            spec.interval_s,
+            base_hour,
+            &expected_split,
+            router.as_mut(),
+            &mut ci_forecast,
+        );
+        if let Some(pool) = &shared {
+            pool.sync(); // bootstrap slice resizes apply before arrivals
+        }
 
         let mut next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
         while next_arrival < horizon_s {
@@ -552,6 +740,34 @@ impl ClusterSim {
             if let Some(pool) = &shared {
                 pool.sync();
             }
+            // Fire the fleet controller for every decision boundary that
+            // ALL replicas have now crossed (each engine overshoots
+            // boundaries by up to one iteration, so this lockstep
+            // instant is the first point a fleet-consistent view of the
+            // interval exists — see `control`'s timing contract).
+            while reps
+                .iter()
+                .all(|r| r.recorder.observations.len() > fleet_fired)
+            {
+                // Resize timestamps mirror the per-replica controller's
+                // end-of-completed-interval convention.
+                let now_s = (fleet_fired as f64 + 1.0) * spec.interval_s;
+                fire_fleet(
+                    &mut reps,
+                    fleet.as_mut(),
+                    Some(fleet_fired),
+                    now_s,
+                    spec.interval_s,
+                    base_hour,
+                    &expected_split,
+                    router.as_mut(),
+                    &mut ci_forecast,
+                );
+                fleet_fired += 1;
+                if let Some(pool) = &shared {
+                    pool.sync(); // planner slice resizes apply now
+                }
+            }
             // A tripped overload valve anywhere freezes that engine's
             // clock; stop the stream rather than distort its statistics.
             if reps.iter().any(|rep| rep.engine.overloaded()) {
@@ -561,17 +777,28 @@ impl ClusterSim {
             req.arrival_s = next_arrival;
 
             let hour = (next_arrival / 3600.0) as usize;
+            let interval = (next_arrival / spec.interval_s) as usize;
             let views: Vec<ReplicaView> = reps
                 .iter()
-                .map(|rep| ReplicaView {
-                    queue_depth: rep.engine.queue_depth(),
-                    max_batch: rep.engine.cost().max_batch,
-                    ci_gpkwh: rep.ci[(base_hour + hour).min(rep.ci.len() - 1)],
-                    affinity_tokens: rep.engine.cache().peek(&req),
+                .enumerate()
+                .map(|(i, rep)| {
+                    let ci_now = rep.ci[(base_hour + hour).min(rep.ci.len() - 1)];
+                    ReplicaView {
+                        queue_depth: rep.engine.queue_depth(),
+                        max_batch: rep.engine.cost().max_batch,
+                        ci_gpkwh: ci_now,
+                        ci_forecast_gpkwh: ci_forecast[i].unwrap_or(ci_now),
+                        affinity_tokens: rep.engine.cache().peek(&req),
+                    }
                 })
                 .collect();
             let choice = router.route(&req, &views).min(reps.len() - 1);
             reps[choice].routed += 1;
+            let by_interval = &mut reps[choice].routed_by_interval;
+            if by_interval.len() <= interval {
+                by_interval.resize(interval + 1, 0);
+            }
+            by_interval[interval] += 1;
             reps[choice].engine.inject(req);
 
             next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
@@ -581,14 +808,18 @@ impl ClusterSim {
         // Drain every engine first: with a shared pool, a replica's
         // final write-through admissions are buffered and only attribute
         // their insertions/evictions at the post-drain sync below, so
-        // stats are read in a second pass.
+        // stats are read in a second pass. Boundaries crossed during the
+        // drain still record per-replica observations, but the fleet
+        // controller no longer actuates — replicas drain independently,
+        // so no fleet-consistent instant exists past the horizon (the
+        // `control` module documents this edge of the timing contract).
         let finished: Vec<(ReplicaSpec, usize, Vec<f64>, SimResult, Box<dyn CacheStore>)> =
             reps.into_iter()
                 .map(|rep| {
                     let Rep {
                         spec: rspec,
                         engine,
-                        mut controller,
+                        mut recorder,
                         ci,
                         routed,
                         ..
@@ -596,7 +827,7 @@ impl ClusterSim {
                     let ci_slice: &[f64] = &ci;
                     let last = ci_slice.len() - 1;
                     let ci_fn = move |h: usize| ci_slice[(base_hour + h).min(last)];
-                    let (sim, cache) = engine.finish(horizon_s, &ci_fn, controller.as_mut());
+                    let (sim, cache) = engine.finish(horizon_s, &ci_fn, &mut recorder);
                     (rspec, routed, ci, sim, cache)
                 })
                 .collect();
@@ -974,5 +1205,102 @@ mod tests {
         for rep in &r.replicas {
             assert!(rep.mean_cache_tb <= rep.spec.max_cache_tb as f64 + 1e-9);
         }
+    }
+
+    #[test]
+    fn one_replica_fleet_planner_matches_per_replica_controller() {
+        // The degeneracy pin: with one replica the joint planner's
+        // candidate set collapses to [1.0], its fleet forecast equals
+        // the replica's own history, and every decision must reproduce
+        // the independent per-replica controller byte-for-byte.
+        let mk = |fleet| {
+            let mut spec = ClusterSpec::homogeneous(
+                Model::Llama70B,
+                Task::Conversation,
+                &[Grid::Es],
+                RouterPolicy::CarbonGreedy,
+            );
+            spec.hours = 3;
+            spec.fixed_rps = Some(0.3);
+            spec.fleet = fleet;
+            run(&spec)
+        };
+        let indep = mk(FleetPolicy::PerReplica);
+        let joint = mk(FleetPolicy::GreenCacheFleet);
+        assert_eq!(indep.completed, joint.completed);
+        assert_eq!(indep.table(), joint.table());
+        assert_eq!(
+            indep.replicas[0].cache_stats,
+            joint.replicas[0].cache_stats
+        );
+        assert!((indep.total_carbon_g - joint.total_carbon_g).abs() < 1e-12);
+        assert!((indep.mean_ttft_s - joint.mean_ttft_s).abs() < 1e-12);
+        assert_eq!(indep.replicas[0].mean_cache_tb, joint.replicas[0].mean_cache_tb);
+    }
+
+    #[test]
+    fn fleet_policy_is_inert_for_fixed_capacity_baselines() {
+        // Nothing to plan without a sizing controller: a FullCache fleet
+        // under the joint planner must be byte-identical to per-replica.
+        let mut a = fr_miso(RouterPolicy::CarbonGreedy);
+        a.fleet = FleetPolicy::PerReplica;
+        let mut b = fr_miso(RouterPolicy::CarbonGreedy);
+        b.fleet = FleetPolicy::GreenCacheFleet;
+        let ra = run(&a);
+        let rb = run(&b);
+        assert_eq!(ra.completed, rb.completed);
+        assert_eq!(ra.table(), rb.table());
+        assert!((ra.total_carbon_g - rb.total_carbon_g).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_router_fleet_realizes_capacity_split() {
+        // The Weighted policy with no plan set splits a homogeneous
+        // fleet evenly — and deterministically.
+        let mut spec = fr_miso(RouterPolicy::Weighted);
+        spec.hours = 2;
+        let r = run(&spec);
+        let a = r.replicas[0].routed as i64;
+        let b = r.replicas[1].routed as i64;
+        assert!((a - b).abs() <= 1, "weighted default split {a}/{b}");
+    }
+
+    #[test]
+    fn fleet_planner_steers_load_toward_the_green_grid() {
+        // FR (33 g/kWh) vs MISO (485) under the joint planner with the
+        // Weighted router: the planner's water-fill has headroom (0.35
+        // rps fleet vs 0.72 rps capped FR capacity), so it must
+        // concentrate load on FR — unlike the capacity split the same
+        // router realizes under independent control.
+        let mk = |fleet| {
+            let mut spec = ClusterSpec::homogeneous(
+                Model::Llama70B,
+                Task::Conversation,
+                &[Grid::Fr, Grid::Miso],
+                RouterPolicy::Weighted,
+            );
+            spec.hours = 3;
+            spec.fixed_rps = Some(0.35);
+            spec.fleet = fleet;
+            run(&spec)
+        };
+        let indep = mk(FleetPolicy::PerReplica);
+        let joint = mk(FleetPolicy::GreenCacheFleet);
+        let indep_fr = indep.replicas[0].routed as f64 / indep.completed.max(1) as f64;
+        let joint_fr = joint.replicas[0].routed as f64 / joint.completed.max(1) as f64;
+        assert!(
+            (indep_fr - 0.5).abs() < 0.05,
+            "independent fleets keep the capacity split: {indep_fr:.3}"
+        );
+        assert!(
+            joint_fr > 0.9,
+            "the planner should concentrate on FR: {joint_fr:.3}"
+        );
+        assert!(
+            joint.total_carbon_g < indep.total_carbon_g,
+            "planned routing must cut fleet carbon: {:.1} !< {:.1} g",
+            joint.total_carbon_g,
+            indep.total_carbon_g
+        );
     }
 }

@@ -1,0 +1,336 @@
+//! The fleet-scoped GreenCache planner: one predict → profile → solve
+//! pass over the whole fleet, jointly choosing router weights and
+//! per-replica cache sizes.
+
+use super::{FleetActuators, FleetController, FleetObservation};
+use crate::carbon::TB;
+use crate::coordinator::{seasonal_load_forecast, GreenCacheController};
+
+/// Utilization guard on planned router weights: no replica is assigned
+/// more than this fraction of its platform peak at the forecast fleet
+/// peak, so a carbon-chasing plan keeps queueing headroom (the Eq. 6
+/// feasibility check then vetoes anything the profile says would still
+/// violate the SLO).
+pub const FLEET_UTIL_CAP: f64 = 0.8;
+
+/// One committed fleet plan (per decision interval): the chosen router
+/// weights plus every replica's cache size — the fleet analogue of
+/// [`crate::coordinator::Decision`].
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    /// Absolute hour the plan takes effect.
+    pub hour: usize,
+    /// Router target weights, in replica order (sum 1).
+    pub weights: Vec<f64>,
+    /// Chosen cache size per replica, TB.
+    pub chosen_tb: Vec<u32>,
+    /// Whether any replica's solve fell back to the §4.2 max cache.
+    pub any_fallback: bool,
+}
+
+/// The joint planner ([`crate::control::FleetPolicy::GreenCacheFleet`]).
+///
+/// Every decision interval it runs **one** fleet-wide pass:
+///
+/// 1. **predict** — each grid's CI over the horizon (every replica's
+///    EnsembleCI-style predictor on its own observed history) and the
+///    *fleet-level* load (SARIMA on the summed observed rps — the same
+///    forecast-with-fallbacks chain the per-replica controller uses, so
+///    a one-replica fleet forecasts bit-identically);
+/// 2. **profile → solve, per candidate weight vector** — candidate
+///    router splits blend the capacity-proportional share toward a
+///    CI-ascending water-fill (greenest replicas absorb load up to
+///    [`FLEET_UTIL_CAP`] of their peak); each candidate is priced by
+///    solving every replica's Eq. 6 DP against its *weight-implied*
+///    load share — not the static peak share the independent
+///    controllers assume — and summing the plan carbon;
+/// 3. **actuate** — the cheapest feasible candidate's weights go to the
+///    router ([`FleetActuators::set_router_weights`]), each replica's
+///    cache is resized to its plan's first step, and the interval CI
+///    forecasts are published for the router's
+///    [`crate::cluster::ReplicaView::ci_forecast_gpkwh`].
+///
+/// With one replica the candidate set collapses to `[1.0]` and the
+/// planner reduces exactly to the per-replica controller (pinned
+/// byte-identical in `rust/tests/fleet_planner.rs`).
+pub struct GreenCacheFleet {
+    /// Per-replica sizing state: profile, CI history/predictor, Eq. 6
+    /// assembly and the decision log — reused wholesale from the
+    /// single-replica controller.
+    ctls: Vec<GreenCacheController>,
+    /// Fleet-level observed load history, rps (sum across replicas;
+    /// seeded with the pre-deployment trace).
+    fleet_load_history: Vec<f64>,
+    /// Per-replica platform peak rates, rps (the weight caps).
+    peaks: Vec<f64>,
+    /// Absolute hour where the evaluated horizon starts.
+    base_hour: usize,
+    /// Candidate blend factors between the capacity share (0.0) and the
+    /// full CI water-fill (1.0).
+    blends: Vec<f64>,
+    /// The plan currently in force.
+    weights: Vec<f64>,
+    /// Every committed plan, in order.
+    pub plans: Vec<FleetPlan>,
+}
+
+impl GreenCacheFleet {
+    /// Assemble the planner from one per-replica controller each (their
+    /// configs supply horizon/ρ/budgets), the fleet-level load history
+    /// and the per-replica peak rates. Controllers' own load histories
+    /// serve only as a fallback — planning always splits the fleet
+    /// forecast by the planned weights.
+    pub fn new(
+        ctls: Vec<GreenCacheController>,
+        fleet_load_history: Vec<f64>,
+        peaks: Vec<f64>,
+        base_hour: usize,
+    ) -> Self {
+        assert!(!ctls.is_empty(), "a fleet has at least one replica");
+        assert_eq!(ctls.len(), peaks.len(), "one peak rate per replica");
+        let n = ctls.len();
+        let total: f64 = peaks.iter().sum::<f64>().max(1e-9);
+        GreenCacheFleet {
+            weights: peaks.iter().map(|p| p / total).collect(),
+            ctls,
+            fleet_load_history,
+            peaks,
+            base_hour,
+            blends: vec![0.0, 0.35, 0.7, 1.0],
+            plans: Vec::new(),
+        }
+    }
+
+    /// The router weights currently in force (sum 1).
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// The wrapped per-replica controllers (decision logs live there).
+    pub fn controllers(&self) -> &[GreenCacheController] {
+        &self.ctls
+    }
+
+    /// One predict → profile → solve pass: pick the weight vector, then
+    /// commit every replica's decision and actuate.
+    fn plan_and_actuate(&mut self, next_abs: usize, act: &mut FleetActuators<'_>) {
+        let n = self.ctls.len();
+        let horizon = self.ctls[0].config().horizon_hours.max(1);
+        let cover = (self.ctls[0].config().interval_hours.ceil() as usize).clamp(1, horizon);
+
+        // Predict: per-grid CI + fleet load.
+        let ci_fcs: Vec<Vec<f64>> = self
+            .ctls
+            .iter_mut()
+            .map(|c| c.forecast_ci(horizon, next_abs))
+            .collect();
+        let fleet_fc = seasonal_load_forecast(&self.fleet_load_history, horizon);
+
+        // Candidate weights, scored by the summed per-replica Eq. 6 plan
+        // carbon at the weight-implied load shares. Ties (and the
+        // single-candidate one-replica case) keep the earliest
+        // candidate — the capacity share, i.e. the conservative default.
+        let candidates = weight_candidates(&ci_fcs, &self.peaks, &fleet_fc, cover, &self.blends);
+        let mut best = 0usize;
+        if candidates.len() > 1 {
+            let mut best_key = (usize::MAX, f64::INFINITY);
+            for (c, cand) in candidates.iter().enumerate() {
+                let mut infeasible = 0usize;
+                let mut cost = 0.0f64;
+                for i in 0..n {
+                    let load: Vec<f64> = fleet_fc.iter().map(|x| x * cand[i]).collect();
+                    let t = self.ctls[i].trial(&ci_fcs[i], &load);
+                    cost += t.cost_g;
+                    if !t.feasible {
+                        infeasible += 1;
+                    }
+                }
+                if infeasible < best_key.0 || (infeasible == best_key.0 && cost < best_key.1) {
+                    best_key = (infeasible, cost);
+                    best = c;
+                }
+            }
+        }
+        let weights = candidates[best].clone();
+
+        // Commit: every replica's DP against its planned share, first
+        // step applied — exactly the per-replica controller's MPC step,
+        // with the load share swapped from static to planned.
+        let mut chosen = Vec::with_capacity(n);
+        let mut any_fallback = false;
+        for i in 0..n {
+            let load: Vec<f64> = fleet_fc.iter().map(|x| x * weights[i]).collect();
+            let d = self.ctls[i].decide_with(next_abs, &ci_fcs[i], &load);
+            any_fallback |= d.fallback;
+            chosen.push(d.chosen_tb);
+            act.caches[i].resize(d.chosen_tb as u64 * TB as u64, act.now_s);
+            act.set_interval_ci_forecast(i, ci_fcs[i][0]);
+        }
+        act.set_router_weights(&weights);
+        self.plans.push(FleetPlan {
+            hour: next_abs,
+            weights: weights.clone(),
+            chosen_tb: chosen,
+            any_fallback,
+        });
+        self.weights = weights;
+    }
+}
+
+impl FleetController for GreenCacheFleet {
+    /// §4.1 pre-day bootstrap, fleet-wide: plan weights and sizes from
+    /// the pre-deployment histories and provision every cache before
+    /// time zero — the planner's replacement for the independent
+    /// controllers' static-share bootstrap.
+    fn bootstrap(&mut self, actuators: &mut FleetActuators) {
+        self.plan_and_actuate(self.base_hour, actuators);
+    }
+
+    fn on_interval(
+        &mut self,
+        hour: usize,
+        obs: &FleetObservation<'_>,
+        actuators: &mut FleetActuators<'_>,
+    ) {
+        assert_eq!(obs.replicas.len(), self.ctls.len());
+        // Observe: per-replica histories (CI + own rps, kept as the
+        // fallback signal) and the fleet-level rate the joint forecast
+        // consumes.
+        for (ctl, o) in self.ctls.iter_mut().zip(&obs.replicas) {
+            ctl.observe(o);
+        }
+        self.fleet_load_history.push(obs.fleet_rps);
+        // Same absolute-hour anchor as the per-replica controller:
+        // `hour` counts intervals, forecasts index hours (bit-identical
+        // at the 1 h default, where the product is `hour + 1`).
+        let interval_hours = self.ctls[0].config().interval_hours;
+        let next_abs =
+            self.base_hour + ((hour as f64 + 1.0) * interval_hours).floor() as usize;
+        self.plan_and_actuate(next_abs, actuators);
+    }
+}
+
+/// Candidate router-weight vectors: the capacity-proportional share
+/// blended toward a CI-ascending water-fill in which each replica
+/// absorbs load up to [`FLEET_UTIL_CAP`] of its platform peak at the
+/// forecast fleet peak (excess beyond total capped capacity spreads back
+/// by capacity share). Deterministic; exact duplicates are dropped. A
+/// one-replica fleet yields exactly `[[1.0]]`.
+fn weight_candidates(
+    ci_fcs: &[Vec<f64>],
+    peaks: &[f64],
+    fleet_fc: &[f64],
+    cover: usize,
+    blends: &[f64],
+) -> Vec<Vec<f64>> {
+    let n = peaks.len();
+    if n == 1 {
+        return vec![vec![1.0]];
+    }
+    let total_peak: f64 = peaks.iter().sum::<f64>().max(1e-9);
+    let cap_share: Vec<f64> = peaks.iter().map(|p| p / total_peak).collect();
+
+    // Mean forecast CI over the covered steps ranks the replicas.
+    let window = |v: &[f64]| -> &[f64] { &v[..cover.min(v.len()).max(1)] };
+    let ci_score: Vec<f64> = ci_fcs
+        .iter()
+        .map(|fc| window(fc).iter().sum::<f64>() / window(fc).len() as f64)
+        .collect();
+    // The forecast fleet peak over the covered window is the capacity
+    // denominator of the utilization guard.
+    let peak_fc = window(fleet_fc)
+        .iter()
+        .fold(0.0f64, |a, &b| a.max(b))
+        .max(1e-9);
+
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| ci_score[a].total_cmp(&ci_score[b]).then(a.cmp(&b)));
+    let mut waterfill = vec![0.0f64; n];
+    let mut remaining = 1.0f64;
+    for &i in &order {
+        let cap = (peaks[i] * FLEET_UTIL_CAP / peak_fc).min(1.0);
+        let take = cap.min(remaining).max(0.0);
+        waterfill[i] = take;
+        remaining -= take;
+    }
+    if remaining > 1e-12 {
+        // Fleet-wide overload at the forecast: no headroom to chase
+        // carbon with — spread the excess by capacity share.
+        for i in 0..n {
+            waterfill[i] += remaining * cap_share[i];
+        }
+    }
+
+    let mut out: Vec<Vec<f64>> = Vec::with_capacity(blends.len());
+    for &b in blends {
+        let w: Vec<f64> = (0..n)
+            .map(|i| (1.0 - b) * cap_share[i] + b * waterfill[i])
+            .collect();
+        if !out.contains(&w) {
+            out.push(w);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_replica_candidates_collapse() {
+        let c = weight_candidates(&[vec![100.0; 24]], &[0.9], &[0.5; 24], 1, &[0.0, 1.0]);
+        assert_eq!(c, vec![vec![1.0]]);
+    }
+
+    #[test]
+    fn waterfill_sends_load_to_the_green_replica_under_headroom() {
+        // Fleet forecast 0.35 rps, two 0.9-peak replicas: the green one
+        // alone can absorb everything under the 0.8 utilization cap, so
+        // the full water-fill is [1, 0] toward the low-CI replica.
+        let ci = [vec![33.0; 24], vec![485.0; 24]];
+        let c = weight_candidates(&ci, &[0.9, 0.9], &[0.35; 24], 1, &[0.0, 1.0]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0], vec![0.5, 0.5], "blend 0 is the capacity share");
+        assert!((c[1][0] - 1.0).abs() < 1e-12, "water-fill: all load to FR, got {:?}", c[1]);
+        assert!(c[1][1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn waterfill_respects_the_utilization_cap_under_load() {
+        // Fleet forecast 1.5 rps on two 0.9-peak replicas: the green one
+        // caps at 0.9·0.8/1.5 = 0.48 of the load; the rest overflows to
+        // the dirty one.
+        let ci = [vec![33.0; 24], vec![485.0; 24]];
+        let c = weight_candidates(&ci, &[0.9, 0.9], &[1.5; 24], 1, &[1.0]);
+        let w = &c[0];
+        assert!((w[0] - 0.48).abs() < 1e-9, "{w:?}");
+        assert!((w[1] - 0.52).abs() < 1e-9, "{w:?}");
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overloaded_fleet_spreads_excess_by_capacity() {
+        // Forecast beyond even the capped fleet capacity: weights must
+        // still sum to 1, spread by capacity share beyond the caps.
+        let ci = [vec![100.0; 24], vec![200.0; 24]];
+        let c = weight_candidates(&ci, &[0.9, 0.9], &[3.0; 24], 2, &[1.0]);
+        let w = &c[0];
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12, "{w:?}");
+        assert!(w[0] > 0.0 && w[1] > 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_peaks_shape_both_share_and_caps() {
+        // A 3.0-peak 8B replica next to a 0.9-peak 70B one: capacity
+        // share is 10/13 vs 3/13; the water-fill favors the green 70B
+        // replica only up to its (smaller) cap.
+        let ci = [vec![33.0; 24], vec![485.0; 24]];
+        let c = weight_candidates(&ci, &[0.9, 3.0], &[1.5; 24], 1, &[0.0, 1.0]);
+        let share = &c[0];
+        assert!((share[0] - 0.9 / 3.9).abs() < 1e-12);
+        let wf = &c[1];
+        assert!((wf[0] - 0.48).abs() < 1e-9, "70B cap 0.9·0.8/1.5: {wf:?}");
+        assert!((wf.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,444 @@
+//! Fleet-scoped control plane: one planner over N replicas' caches and
+//! the router (ARCHITECTURE.md § Fleet control plane).
+//!
+//! The paper's controller (§4) sizes *one* replica's cache from its own
+//! grid CI and load forecast. The cluster layer used to reproduce that
+//! by instantiating N independent [`Controller`]s, each planning against
+//! a static peak-proportional share of fleet load — so planning never
+//! reacted to what the router actually did, and the router never saw the
+//! CI forecast the planner had already computed. This module is the
+//! second level of the control hierarchy that closes that loop
+//! (EcoServe's co-optimization direction):
+//!
+//! * [`FleetController`] — the fleet-scoped hook: at every decision
+//!   boundary it receives a [`FleetObservation`] (every replica's
+//!   [`IntervalObservation`], each grid's CI history, and the router's
+//!   realized per-replica load split) and a [`FleetActuators`] handle
+//!   over every replica's cache, the router's target weights, and —
+//!   under a shared fleet pool — the per-replica slice split.
+//! * [`PerReplica`] — the adapter that lowers today's N independent
+//!   per-replica controllers onto the fleet API unchanged, so every
+//!   pre-existing cell reproduces through the new control plane.
+//! * [`GreenCacheFleet`] — the joint planner: one predict → profile →
+//!   solve pass over the whole fleet per interval, choosing router
+//!   weights and per-replica cache sizes together (greedy over the
+//!   Eq. 6 DP per replica).
+//! * [`FleetPolicy`] — the scenario axis selecting between them
+//!   (`greencache cluster --fleet`, `matrix --fleets`).
+//!
+//! # Timing contract
+//!
+//! [`crate::cluster::ClusterSim`] fires the fleet hook at the first
+//! *lockstep instant* (router arrival) by which **every** replica engine
+//! has crossed decision boundary `hour` — replicas overshoot boundaries
+//! by up to one engine iteration each, so a fleet-consistent view only
+//! exists at the next shared instant. Actuations (cache resizes, router
+//! weights) therefore land within one arrival gap of the boundary
+//! instead of exactly *at* each engine's own crossing, and intervals
+//! completed during the post-horizon drain observe but never actuate.
+//! For the pinned golden cells (fixed-capacity baselines) nothing ever
+//! actuates, so those runs are byte-identical to the pre-redesign
+//! driver; adaptive fleet cells are NOT bit-comparable across the
+//! redesign (goldens bootstrap after it).
+
+mod green;
+
+pub use green::GreenCacheFleet;
+
+use crate::cache::CacheStore;
+use crate::sim::{Controller, IntervalObservation};
+
+/// The fleet-control axis of a cluster cell: how the N replicas'
+/// controllers are organized (`greencache cluster --fleet`,
+/// `greencache matrix --fleets`, [`crate::scenario::Matrix::fleets`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum FleetPolicy {
+    /// N independent per-replica controllers behind the [`PerReplica`]
+    /// adapter — the pre-fleet-planner behavior, and the default.
+    #[default]
+    PerReplica,
+    /// The [`GreenCacheFleet`] joint planner: router weights and cache
+    /// sizes co-optimized fleet-wide each interval. Non-adaptive
+    /// baselines (No Cache / Full Cache) have nothing to plan and
+    /// degenerate to [`FleetPolicy::PerReplica`].
+    GreenCacheFleet,
+}
+
+impl FleetPolicy {
+    /// Both policies, in comparison order (the matrix fleet axis).
+    pub fn all() -> [FleetPolicy; 2] {
+        [FleetPolicy::PerReplica, FleetPolicy::GreenCacheFleet]
+    }
+
+    /// Stable human/golden label (`per-replica` stays off cell labels —
+    /// it is the default — so pre-redesign golden tables are unchanged).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetPolicy::PerReplica => "per-replica",
+            FleetPolicy::GreenCacheFleet => "green",
+        }
+    }
+
+    /// Parse a CLI spelling (`per-replica`/`independent`,
+    /// `green`/`fleet`/`green-fleet`).
+    pub fn parse(s: &str) -> Option<FleetPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "per-replica" | "independent" => Some(FleetPolicy::PerReplica),
+            "green" | "fleet" | "green-fleet" => Some(FleetPolicy::GreenCacheFleet),
+            _ => None,
+        }
+    }
+}
+
+/// What a fleet controller sees at a decision boundary: the per-replica
+/// interval observations plus the fleet-level signals no single replica
+/// can compute — each grid's CI history and the split the router
+/// actually realized.
+#[derive(Debug)]
+pub struct FleetObservation<'a> {
+    /// Index of the completed decision interval.
+    pub hour: usize,
+    /// Absolute hour where the evaluated horizon starts (histories run
+    /// from trace start; forecast calls index absolutely).
+    pub base_hour: usize,
+    /// Every replica's observation of the completed interval, in
+    /// replica order.
+    pub replicas: Vec<IntervalObservation>,
+    /// Per replica: the grid's hourly ground-truth CI from trace start
+    /// through the last fully observed hour — forecast feedstock
+    /// (replicas on the same grid alias the same trace values).
+    pub ci_history: Vec<&'a [f64]>,
+    /// Per replica: ground-truth CI of the *in-progress* interval — the
+    /// persistence signal the router's views carry by default.
+    pub ci_next: Vec<f64>,
+    /// The split the router realized over the completed interval
+    /// (fractions summing to 1; the a-priori expected split when the
+    /// interval saw no arrivals).
+    pub load_split: Vec<f64>,
+    /// Requests the router placed on each replica during the interval.
+    pub routed: Vec<usize>,
+    /// Fleet-total observed request rate over the interval, rps.
+    pub fleet_rps: f64,
+}
+
+/// What a fleet controller can actuate at a decision boundary: every
+/// replica's cache, the router's target weights, and the per-interval CI
+/// forecast the router scores on. Under a shared fleet pool
+/// ([`crate::cache::SharedStore`]), each cache is the replica's
+/// pool-slice handle, so resizing through it *re-splits the pool* —
+/// actuator (c) of the control hierarchy falls out of actuator (a).
+pub struct FleetActuators<'a> {
+    /// Per-replica caches, in replica order (resizes through these are
+    /// the cache-sizing actuator; they take effect immediately for
+    /// local/tiered stores and at the next lockstep sync for shared
+    /// pool slices).
+    pub caches: Vec<&'a mut (dyn CacheStore + 'a)>,
+    /// Simulated time of the actuation instant, seconds (resize
+    /// timestamps).
+    pub now_s: f64,
+    /// Staged router target weights (drained by the cluster driver into
+    /// [`crate::cluster::Router::set_weights`] right after the hook).
+    weights: Option<Vec<f64>>,
+    /// Staged per-replica interval CI forecasts (drained into the
+    /// router's [`crate::cluster::ReplicaView::ci_forecast_gpkwh`]).
+    ci_forecast: Vec<Option<f64>>,
+}
+
+impl<'a> FleetActuators<'a> {
+    /// Assemble actuators over `caches` at simulated time `now_s`
+    /// (driver-side; also handy for driving a [`FleetController`] by
+    /// hand in tests and examples).
+    pub fn new(caches: Vec<&'a mut (dyn CacheStore + 'a)>, now_s: f64) -> Self {
+        let n = caches.len();
+        FleetActuators {
+            caches,
+            now_s,
+            weights: None,
+            ci_forecast: vec![None; n],
+        }
+    }
+
+    /// Number of replicas under actuation.
+    pub fn n_replicas(&self) -> usize {
+        self.caches.len()
+    }
+
+    /// Stage new router target weights (fractions; the router normalizes).
+    /// Weight-oblivious router policies ignore them; carbon-greedy steers
+    /// its realized split toward them; [`crate::cluster::RouterPolicy::Weighted`]
+    /// realizes them exactly.
+    pub fn set_router_weights(&mut self, weights: &[f64]) {
+        assert_eq!(
+            weights.len(),
+            self.caches.len(),
+            "one weight per replica"
+        );
+        self.weights = Some(weights.to_vec());
+    }
+
+    /// Publish the controller's CI forecast for replica `i`'s grid over
+    /// the upcoming interval, gCO₂e/kWh — the router's views carry it
+    /// until the next publication (persistence of the ground-truth CI
+    /// when never published).
+    pub fn set_interval_ci_forecast(&mut self, i: usize, gpkwh: f64) {
+        self.ci_forecast[i] = Some(gpkwh);
+    }
+
+    /// Drain the staged router weights (driver-side).
+    pub fn take_router_weights(&mut self) -> Option<Vec<f64>> {
+        self.weights.take()
+    }
+
+    /// Drain the staged CI forecasts (driver-side).
+    pub fn take_ci_forecasts(&mut self) -> Vec<Option<f64>> {
+        std::mem::replace(&mut self.ci_forecast, vec![None; self.caches.len()])
+    }
+}
+
+/// A fleet-scoped controller: one planning hook over the whole fleet.
+///
+/// Where [`Controller`] observes one replica and resizes one cache,
+/// implementations of this trait observe the fleet and actuate every
+/// carbon knob the cluster exposes at once. The driver contract is in
+/// the [module docs](self): [`bootstrap`](FleetController::bootstrap)
+/// fires once before time zero, then
+/// [`on_interval`](FleetController::on_interval) fires at the first
+/// lockstep instant after every replica crossed each decision boundary.
+///
+/// # Example
+///
+/// A minimal fleet controller that drops every cache to zero whenever
+/// the fleet's mean observed CI falls below a threshold (cache embodied
+/// carbon can't pay for itself on a very green fleet — Takeaway 5 at
+/// fleet scope), and steers the router toward the greenest replica:
+///
+/// ```
+/// use greencache::cache::{CacheStore, LocalStore, PolicyKind};
+/// use greencache::control::{FleetActuators, FleetController, FleetObservation};
+/// use greencache::sim::IntervalObservation;
+///
+/// struct GreenFloor {
+///     threshold_gpkwh: f64,
+/// }
+///
+/// impl FleetController for GreenFloor {
+///     fn on_interval(&mut self, _hour: usize, obs: &FleetObservation, act: &mut FleetActuators) {
+///         let mean_ci = obs.ci_next.iter().sum::<f64>() / obs.ci_next.len() as f64;
+///         if mean_ci < self.threshold_gpkwh {
+///             for cache in act.caches.iter_mut() {
+///                 cache.resize(0, act.now_s);
+///             }
+///         }
+///         // All load to the replica whose next interval is greenest.
+///         let best = (0..obs.ci_next.len())
+///             .min_by(|&a, &b| obs.ci_next[a].total_cmp(&obs.ci_next[b]))
+///             .unwrap();
+///         let mut w = vec![0.0; obs.ci_next.len()];
+///         w[best] = 1.0;
+///         act.set_router_weights(&w);
+///     }
+/// }
+///
+/// // Drive one decision by hand over two local stores.
+/// let mut fr = LocalStore::new(1_000_000, 1_000, PolicyKind::Lcs);
+/// let mut miso = LocalStore::new(1_000_000, 1_000, PolicyKind::Lcs);
+/// let mut act =
+///     FleetActuators::new(vec![&mut fr as &mut dyn CacheStore, &mut miso], 3600.0);
+/// let ci_hist = [vec![20.0; 24], vec![480.0; 24]];
+/// let obs = FleetObservation {
+///     hour: 0,
+///     base_hour: 0,
+///     replicas: vec![IntervalObservation::default(); 2],
+///     ci_history: ci_hist.iter().map(|h| h.as_slice()).collect(),
+///     ci_next: vec![20.0, 480.0],
+///     load_split: vec![0.5, 0.5],
+///     routed: vec![10, 10],
+///     fleet_rps: 0.01,
+/// };
+/// let mut ctl = GreenFloor { threshold_gpkwh: 300.0 };
+/// ctl.on_interval(0, &obs, &mut act);
+/// assert_eq!(act.caches[0].capacity_bytes(), 0, "green fleet: caches dropped");
+/// assert_eq!(act.take_router_weights().as_deref(), Some(&[1.0, 0.0][..]));
+/// ```
+pub trait FleetController {
+    /// Pre-deployment provisioning: called once, before the first
+    /// arrival, with actuators over the cold fleet. Default: leave every
+    /// cache as provisioned.
+    fn bootstrap(&mut self, _actuators: &mut FleetActuators) {}
+
+    /// Called at the first lockstep instant after every replica crossed
+    /// decision boundary `hour` (the index of the completed interval).
+    fn on_interval(
+        &mut self,
+        hour: usize,
+        obs: &FleetObservation<'_>,
+        actuators: &mut FleetActuators<'_>,
+    );
+}
+
+/// The compatibility adapter: N independent per-replica [`Controller`]s
+/// behind the fleet API. Each wrapped controller sees exactly its own
+/// replica's [`IntervalObservation`] and cache — no fleet signal is
+/// consumed, no router weight is ever set.
+///
+/// # The static-share assumption
+///
+/// Per-replica controllers train their pre-deployment load predictors on
+/// an *a-priori* split of the fleet history — the wrapped controllers
+/// never see the router's realized split until the day starts (the
+/// cluster layer scales each bootstrap history by
+/// [`crate::cluster::RouterPolicy::expected_split`]: uniform for
+/// round-robin, capacity-proportional otherwise). A routing policy that
+/// concentrates traffic (carbon-greedy) makes that first plan wrong;
+/// `on_interval` feeds each controller its replica's *observed* rps from
+/// hour one, so SARIMA refits onto the real split as the day runs — but
+/// the plan is always one day of history behind what the router is
+/// doing. Removing that blind spot is exactly what
+/// [`GreenCacheFleet`] is for: it plans against the
+/// router-weight-implied split instead.
+pub struct PerReplica<C: Controller> {
+    inner: Vec<C>,
+}
+
+impl<C: Controller> PerReplica<C> {
+    /// Wrap one controller per replica, in replica order.
+    pub fn new(inner: Vec<C>) -> Self {
+        assert!(!inner.is_empty(), "a fleet has at least one replica");
+        PerReplica { inner }
+    }
+
+    /// The wrapped controllers, in replica order.
+    pub fn controllers(&self) -> &[C] {
+        &self.inner
+    }
+}
+
+impl<C: Controller> FleetController for PerReplica<C> {
+    fn bootstrap(&mut self, actuators: &mut FleetActuators) {
+        assert_eq!(self.inner.len(), actuators.caches.len());
+        for (ctl, cache) in self.inner.iter_mut().zip(actuators.caches.iter_mut()) {
+            ctl.bootstrap(*cache);
+        }
+    }
+
+    fn on_interval(
+        &mut self,
+        hour: usize,
+        obs: &FleetObservation<'_>,
+        actuators: &mut FleetActuators<'_>,
+    ) {
+        assert_eq!(self.inner.len(), obs.replicas.len());
+        for (i, ctl) in self.inner.iter_mut().enumerate() {
+            ctl.on_interval(hour, &obs.replicas[i], actuators.caches[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{LocalStore, PolicyKind};
+    use crate::carbon::TB;
+    use crate::sim::FixedController;
+
+    fn stores(n: usize) -> Vec<LocalStore> {
+        (0..n)
+            .map(|_| LocalStore::new(4 * TB as u64, 1_000, PolicyKind::Lcs))
+            .collect()
+    }
+
+    fn obs_for<'a>(n: usize, hist: &'a [Vec<f64>]) -> FleetObservation<'a> {
+        FleetObservation {
+            hour: 0,
+            base_hour: 0,
+            replicas: vec![Default::default(); n],
+            ci_history: hist.iter().map(|h| h.as_slice()).collect(),
+            ci_next: vec![100.0; n],
+            load_split: vec![1.0 / n as f64; n],
+            routed: vec![0; n],
+            fleet_rps: 0.0,
+        }
+    }
+
+    #[test]
+    fn per_replica_adapter_routes_each_observation_to_its_controller() {
+        struct Shrink(Vec<usize>);
+        impl Controller for Shrink {
+            fn on_interval(
+                &mut self,
+                hour: usize,
+                _: &crate::sim::IntervalObservation,
+                cache: &mut dyn crate::cache::CacheStore,
+            ) {
+                self.0.push(hour);
+                cache.resize(TB as u64, 0.0);
+            }
+        }
+        let mut s = stores(2);
+        let (a, b) = s.split_at_mut(1);
+        let mut act = FleetActuators::new(
+            vec![&mut a[0] as &mut dyn crate::cache::CacheStore, &mut b[0]],
+            0.0,
+        );
+        let hist = vec![vec![100.0; 24]; 2];
+        let obs = obs_for(2, &hist);
+        let mut fleet = PerReplica::new(vec![Shrink(Vec::new()), Shrink(Vec::new())]);
+        fleet.on_interval(0, &obs, &mut act);
+        assert_eq!(act.caches[0].capacity_bytes(), TB as u64);
+        assert_eq!(act.caches[1].capacity_bytes(), TB as u64);
+        assert_eq!(fleet.controllers()[0].0, vec![0]);
+        // The adapter stages no fleet-level actions.
+        assert!(act.take_router_weights().is_none());
+        assert!(act.take_ci_forecasts().iter().all(|f| f.is_none()));
+    }
+
+    #[test]
+    fn per_replica_with_fixed_controllers_is_inert() {
+        let mut s = stores(2);
+        let (a, b) = s.split_at_mut(1);
+        let mut act = FleetActuators::new(
+            vec![&mut a[0] as &mut dyn crate::cache::CacheStore, &mut b[0]],
+            0.0,
+        );
+        let hist = vec![vec![100.0; 24]; 2];
+        let obs = obs_for(2, &hist);
+        let mut fleet = PerReplica::new(vec![FixedController, FixedController]);
+        fleet.bootstrap(&mut act);
+        fleet.on_interval(0, &obs, &mut act);
+        assert_eq!(act.caches[0].capacity_bytes(), 4 * TB as u64);
+        assert!(act.take_router_weights().is_none());
+    }
+
+    #[test]
+    fn actuator_staging_round_trips() {
+        let mut s = stores(3);
+        let mut act = FleetActuators::new(
+            s.iter_mut()
+                .map(|c| c as &mut dyn crate::cache::CacheStore)
+                .collect(),
+            7.5,
+        );
+        assert_eq!(act.n_replicas(), 3);
+        assert!((act.now_s - 7.5).abs() < 1e-12);
+        act.set_router_weights(&[0.2, 0.3, 0.5]);
+        act.set_interval_ci_forecast(1, 42.0);
+        assert_eq!(act.take_router_weights(), Some(vec![0.2, 0.3, 0.5]));
+        assert!(act.take_router_weights().is_none(), "drained");
+        let fc = act.take_ci_forecasts();
+        assert_eq!(fc, vec![None, Some(42.0), None]);
+        assert!(act.take_ci_forecasts().iter().all(|f| f.is_none()));
+    }
+
+    #[test]
+    fn fleet_policy_axis_is_stable() {
+        assert_eq!(FleetPolicy::default(), FleetPolicy::PerReplica);
+        assert_eq!(FleetPolicy::all().len(), 2);
+        assert_eq!(FleetPolicy::PerReplica.name(), "per-replica");
+        assert_eq!(FleetPolicy::GreenCacheFleet.name(), "green");
+        assert_eq!(FleetPolicy::parse("green"), Some(FleetPolicy::GreenCacheFleet));
+        assert_eq!(FleetPolicy::parse("fleet"), Some(FleetPolicy::GreenCacheFleet));
+        assert_eq!(FleetPolicy::parse("per-replica"), Some(FleetPolicy::PerReplica));
+        assert_eq!(FleetPolicy::parse("independent"), Some(FleetPolicy::PerReplica));
+        assert_eq!(FleetPolicy::parse("nope"), None);
+    }
+}

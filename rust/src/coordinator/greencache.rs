@@ -109,6 +109,42 @@ pub struct Decision {
     pub fallback: bool,
 }
 
+/// SARIMA load forecast with the controller's cold-start fallbacks
+/// (seasonal naive once a day of history exists, persistence before
+/// that). Shared by [`GreenCacheController::decide`] and the fleet
+/// planner's fleet-level forecast, so a one-replica fleet's forecasts
+/// are bit-identical on either control path.
+pub fn seasonal_load_forecast(history: &[f64], horizon: usize) -> Vec<f64> {
+    match Sarima::fit(history, 24, 2) {
+        Ok(m) => m.forecast(horizon),
+        Err(_) => {
+            // Not enough history yet: seasonal naive on what we have,
+            // else persistence.
+            let n = history.len();
+            (0..horizon)
+                .map(|h| {
+                    if n >= 24 {
+                        history[n - 24 + (h % 24).min(23)]
+                    } else {
+                        *history.last().unwrap_or(&0.1)
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+/// Outcome of a trial (non-committing) Eq. 6 solve — the fleet planner
+/// scores candidate router-weight vectors by summing these per replica.
+#[derive(Debug, Clone, Copy)]
+pub struct TrialPlan {
+    /// Whether the SLO constraint was satisfiable at this load share.
+    pub feasible: bool,
+    /// Predicted plan carbon over the horizon, grams (for infeasible
+    /// trials: the §4.2 fallback cost of provisioning the max cache).
+    pub cost_g: f64,
+}
+
 /// The controller. Construct with observed history seeds (the paper
 /// trains predictors on historical traces before deployment, §5.3/§6.1).
 pub struct GreenCacheController {
@@ -155,8 +191,9 @@ impl GreenCacheController {
     /// initial decision for `base_hour` and apply it to `cache` before
     /// the evaluated day starts. The one shared entry point for
     /// `experiments::run_day` and the per-replica setup in
-    /// `cluster::ClusterSim`, so the bootstrap protocol cannot drift
-    /// between single-node and fleet cells.
+    /// `cluster::ClusterSim` (via [`Controller::bootstrap`]), so the
+    /// bootstrap protocol cannot drift between single-node and fleet
+    /// cells.
     pub fn bootstrapped(
         cfg: GreenCacheConfig,
         profile: impl Into<Arc<ProfileTable>>,
@@ -166,9 +203,23 @@ impl GreenCacheController {
         cache: &mut dyn CacheStore,
     ) -> Self {
         let mut ctl = Self::new(cfg, profile, ci_history, load_history, base_hour);
-        let first = ctl.decide(base_hour);
-        cache.resize(first.chosen_tb as u64 * TB as u64, 0.0);
+        Controller::bootstrap(&mut ctl, cache);
         ctl
+    }
+
+    /// The controller's configuration (the fleet planner reads horizon,
+    /// interval and budget from here).
+    pub fn config(&self) -> &GreenCacheConfig {
+        &self.cfg
+    }
+
+    /// Record a completed interval's observations into the forecast
+    /// histories (§5.3's online step-ahead regime). [`Controller::on_interval`]
+    /// calls this before deciding; the fleet planner calls it for each
+    /// replica before its joint solve.
+    pub fn observe(&mut self, obs: &IntervalObservation) {
+        self.ci_history.push(obs.ci);
+        self.load_history.push(obs.observed_rps);
     }
 
     /// Candidate sizes: 0, g, 2g, ..., max (§5.4.3's discrete set).
@@ -181,7 +232,11 @@ impl GreenCacheController {
         v
     }
 
-    fn forecast_ci(&mut self, horizon: usize, next_abs_hour: usize) -> Vec<f64> {
+    /// Forecast the replica grid's CI over `horizon` hours starting at
+    /// `next_abs_hour` (EnsembleCI-style on observed history, or the
+    /// oracle). Public for the fleet planner, which forecasts every
+    /// replica's grid before its joint weight/size solve.
+    pub fn forecast_ci(&mut self, horizon: usize, next_abs_hour: usize) -> Vec<f64> {
         match &self.cfg.ci_source {
             CiSource::Oracle(truth) => (0..horizon)
                 .map(|h| truth[(next_abs_hour + h) % truth.len()])
@@ -203,25 +258,7 @@ impl GreenCacheController {
             LoadSource::Oracle(truth) => (0..horizon)
                 .map(|h| truth[(next_abs_hour + h) % truth.len()])
                 .collect(),
-            LoadSource::Sarima => {
-                match Sarima::fit(&self.load_history, 24, 2) {
-                    Ok(m) => m.forecast(horizon),
-                    Err(_) => {
-                        // Not enough history yet: seasonal naive on what
-                        // we have, else persistence.
-                        let n = self.load_history.len();
-                        (0..horizon)
-                            .map(|h| {
-                                if n >= 24 {
-                                    self.load_history[n - 24 + (h % 24).min(23)]
-                                } else {
-                                    *self.load_history.last().unwrap_or(&0.1)
-                                }
-                            })
-                            .collect()
-                    }
-                }
-            }
+            LoadSource::Sarima => seasonal_load_forecast(&self.load_history, horizon),
         }
     }
 
@@ -275,13 +312,27 @@ impl GreenCacheController {
         let horizon = self.cfg.horizon_hours.max(1);
         let ci_fc = self.forecast_ci(horizon, next_abs_hour);
         let load_fc = self.forecast_load(horizon, next_abs_hour);
-        let problem = self.build_problem(&ci_fc, &load_fc);
+        self.decide_with(next_abs_hour, &ci_fc, &load_fc)
+    }
+
+    /// [`Self::decide`] against *explicit* forecasts: the fleet planner
+    /// feeds each replica the router-weight-implied share of the fleet
+    /// load forecast instead of this controller's own (static-share
+    /// trained) SARIMA. Fed this controller's own forecasts, it is
+    /// bit-identical to [`Self::decide`].
+    pub fn decide_with(
+        &mut self,
+        next_abs_hour: usize,
+        ci_fc: &[f64],
+        load_fc: &[f64],
+    ) -> Decision {
+        let problem = self.build_problem(ci_fc, load_fc);
         let t0 = Instant::now();
         let solved = problem.solve().ok().flatten();
         let solve_time_s = t0.elapsed().as_secs_f64();
         // Apply the plan's first `interval_hours` steps conservatively:
         // the provisioned size must satisfy every covered hour (§6.6.1).
-        let cover = (self.cfg.interval_hours.ceil() as usize).clamp(1, horizon);
+        let cover = (self.cfg.interval_hours.ceil() as usize).clamp(1, problem.options.len());
         let (chosen_tb, nodes, fallback) = match &solved {
             Some(sol) => (
                 (0..cover)
@@ -304,6 +355,29 @@ impl GreenCacheController {
         self.decisions.push(d);
         d
     }
+
+    /// Solve the Eq. 6 problem for explicit forecasts *without* logging
+    /// a decision — the fleet planner's candidate-scoring path. With the
+    /// default exact profile (`profile_noise == 0`) this consumes no RNG
+    /// state, so trial solves never perturb the committed decisions.
+    pub fn trial(&mut self, ci_fc: &[f64], load_fc: &[f64]) -> TrialPlan {
+        let problem = self.build_problem(ci_fc, load_fc);
+        match problem.solve().ok().flatten() {
+            Some(sol) => TrialPlan {
+                feasible: true,
+                cost_g: sol.total_cost_g,
+            },
+            // §4.2 fallback: price the plan at the max cache every step.
+            None => TrialPlan {
+                feasible: false,
+                cost_g: problem
+                    .options
+                    .iter()
+                    .map(|row| row.last().map_or(0.0, |o| o.cost_g))
+                    .sum(),
+            },
+        }
+    }
 }
 
 impl Controller for GreenCacheController {
@@ -313,16 +387,32 @@ impl Controller for GreenCacheController {
         obs: &IntervalObservation,
         cache: &mut dyn CacheStore,
     ) {
-        // Record the completed interval's observations (§5.3's online
-        // step-ahead regime).
-        self.ci_history.push(obs.ci);
-        self.load_history.push(obs.observed_rps);
-        let next_abs = self.base_hour + hour + 1;
+        self.observe(obs);
+        // `hour` counts completed *intervals*; forecasts index absolute
+        // *hours*, so anchor the solve at the hour containing the next
+        // interval's start (`base_hour + hour + 1` was only correct for
+        // 1 h intervals — sub-hour cells drifted ahead of sim time and
+        // multi-hour cells lagged it). At the 1 h default this is
+        // bit-identical to the old anchor.
+        let next_abs = self.base_hour
+            + ((hour as f64 + 1.0) * self.cfg.interval_hours).floor() as usize;
         let d = self.decide(next_abs);
+        // Stamp the resize at the end of the completed interval (`hour`
+        // counts *intervals*, so scale by the interval length — for
+        // sub-hour intervals the old `(hour+1)·3600` stamped simulated-
+        // future timestamps, distorting eviction recency; at the 1 h
+        // default the product is bit-identical to the old expression).
         cache.resize(
             d.chosen_tb as u64 * TB as u64,
-            (hour as f64 + 1.0) * 3600.0,
+            (hour as f64 + 1.0) * (self.cfg.interval_hours * 3600.0),
         );
+    }
+
+    /// §4.1 pre-day bootstrap: take the initial decision for `base_hour`
+    /// and provision `cache` before time zero.
+    fn bootstrap(&mut self, cache: &mut dyn CacheStore) {
+        let first = self.decide(self.base_hour);
+        cache.resize(first.chosen_tb as u64 * TB as u64, 0.0);
     }
 }
 

@@ -15,17 +15,15 @@ mod greencache;
 pub mod server;
 
 pub use greencache::{
-    CiSource, Decision, GreenCacheConfig, GreenCacheController, LoadSource,
+    seasonal_load_forecast, CiSource, Decision, GreenCacheConfig, GreenCacheController,
+    LoadSource, TrialPlan,
 };
 
 /// Baseline controllers (§6.1's comparison points).
 pub mod baselines {
-    use crate::cache::CacheStore;
-    use crate::sim::{Controller, IntervalObservation};
-
     /// `No Cache` and `Full Cache`: a fixed capacity, never resized.
-    pub struct Fixed;
-    impl Controller for Fixed {
-        fn on_interval(&mut self, _: usize, _: &IntervalObservation, _: &mut dyn CacheStore) {}
-    }
+    /// One shared type across every layer — this *is*
+    /// [`crate::sim::FixedController`] under the §6.1 baseline name (the
+    /// two used to be separate identical structs).
+    pub use crate::sim::FixedController as Fixed;
 }

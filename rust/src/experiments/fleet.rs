@@ -21,9 +21,24 @@
 //! capacity** — every prefix a bounced conversation left on another
 //! replica is still served — which is the cross-replica sharing item
 //! from the ROADMAP made measurable.
+//!
+//! The **fleet-planner section** compares the two fleet control planes
+//! ([`FleetPolicy`]) on GreenCache fleets: N independent per-replica
+//! controllers (each planning against an a-priori share of fleet load)
+//! versus the [`GreenCacheFleet`](crate::control::GreenCacheFleet) joint
+//! planner, which picks router weights and cache sizes in one Eq. 6 pass
+//! per interval and feeds every replica's solver its *planned* load
+//! share. Swept across a mixed-grid fleet and a GreenLLM-style
+//! mixed-model fleet (a 70B replica on FR next to an 8B one on MISO,
+//! via [`ClusterVariant::with_models`]). Expected shape: the planner
+//! cuts fleet carbon at equal SLO attainment — it concentrates work on
+//! green grids *by plan* (not just greedily per request) and stops
+//! de-loaded dirty replicas from provisioning cache for load that never
+//! arrives.
 
 use super::*;
 use crate::cluster::RouterPolicy;
+use crate::control::FleetPolicy;
 use crate::scenario::{run_specs, ClusterVariant, Matrix};
 use crate::util::csv::Csv;
 
@@ -39,21 +54,47 @@ fn fleets() -> Vec<(&'static str, Vec<Grid>)> {
     ]
 }
 
+/// The GreenLLM-style heterogeneous fleet: a 70B replica on the green
+/// grid next to an 8B one on the coal-heavy grid (models pinned per
+/// replica; the spec's model fills the `None` slot).
+fn mixed_model_fleet(router: RouterPolicy) -> ClusterVariant {
+    ClusterVariant::new(&[Grid::Fr, Grid::Miso], router)
+        .with_models(&[None, Some(Model::Llama8B)])
+}
+
+/// Friendly fleet-shape label for the comparison rows; mixed-model
+/// fleets reuse [`ClusterVariant::replica_join`]'s canonical tagging so
+/// exhibit rows cannot drift from cell labels.
+fn shape_label(cv: &ClusterVariant) -> String {
+    if cv.models.iter().all(|m| m.is_none()) {
+        fleets()
+            .iter()
+            .find(|(_, g)| *g == cv.grids)
+            .map(|(l, _)| *l)
+            .unwrap_or("?")
+            .to_string()
+    } else {
+        format!("{}x({})", cv.grids.len(), cv.replica_join())
+    }
+}
+
 /// Fleet comparison: replica counts × router policies × baselines ×
-/// cache backends (per-replica local stores vs one shared fleet pool).
+/// cache backends (per-replica local stores vs one shared fleet pool),
+/// plus the independent-vs-fleet-planner exhibit on GreenCache fleets.
 pub fn fleet(quick: bool) -> Csv {
     let mut csv = Csv::new(&[
         "fleet",
         "router",
         "baseline",
         "cache",
+        "planner",
         "carbon_per_request_g",
         "slo_attainment",
         "token_hit_rate",
         "mean_cache_tb",
         "completed",
     ]);
-    println!("Fleet — multi-replica multi-grid serving, router & cache-backend comparison");
+    println!("Fleet — multi-replica multi-grid serving, router/cache/planner comparison");
 
     // Every fleet under every router; single-replica fleets are routed
     // trivially, so one router entry suffices there — and they skip the
@@ -89,22 +130,43 @@ pub fn fleet(quick: bool) -> Csv {
             .clusters(&multi)
             .expand(),
     );
+    // The fleet-planner section: GreenCache fleets under carbon-greedy
+    // routing, independent vs joint control. The homogeneous
+    // independent cell already rides in the `multi` expansion above
+    // (same workload-shaping axes → same seed → same replayed day), so
+    // only the planner cell is added; the mixed-model fleet is new under
+    // both control planes.
+    specs.extend(
+        base()
+            .baselines(&[Baseline::GreenCache])
+            .caches(&[CacheVariant::Local])
+            .clusters(&[Some(ClusterVariant::new(
+                &[Grid::Fr, Grid::Miso],
+                RouterPolicy::CarbonGreedy,
+            ))])
+            .fleets(&[FleetPolicy::GreenCacheFleet])
+            .expand(),
+    );
+    specs.extend(
+        base()
+            .baselines(&[Baseline::GreenCache])
+            .caches(&[CacheVariant::Local])
+            .clusters(&[Some(mixed_model_fleet(RouterPolicy::CarbonGreedy))])
+            .fleets(&FleetPolicy::all())
+            .expand(),
+    );
     let result = run_specs(&specs, 0);
 
     for c in &result.cells {
         let cv = c.spec.cluster.as_ref().expect("fleet cells only");
-        let fleet_label = fleets()
-            .iter()
-            .find(|(_, g)| *g == cv.grids)
-            .map(|(l, _)| *l)
-            .unwrap_or("?")
-            .to_string();
+        let fleet_label = shape_label(cv);
         println!(
-            "  {:<20} {:<13} {:<11} {:<7}: {:>8.3} g/req  SLO {:>5.1}%  hit {:>5.3}  cache {:>5.1} TB  ({} reqs)",
+            "  {:<20} {:<13} {:<11} {:<7} {:<11}: {:>8.3} g/req  SLO {:>5.1}%  hit {:>5.3}  cache {:>5.1} TB  ({} reqs)",
             fleet_label,
             cv.router.name(),
             c.spec.baseline.name(),
             c.spec.cache.name(),
+            c.spec.fleet.name(),
             c.carbon_per_request_g,
             c.slo_attainment * 100.0,
             c.token_hit_rate,
@@ -116,6 +178,7 @@ pub fn fleet(quick: bool) -> Csv {
             cv.router.name().into(),
             c.spec.baseline.name().into(),
             c.spec.cache.name().into(),
+            c.spec.fleet.name().into(),
             format!("{:.4}", c.carbon_per_request_g),
             format!("{:.4}", c.slo_attainment),
             format!("{:.4}", c.token_hit_rate),
@@ -131,8 +194,11 @@ pub fn fleet(quick: bool) -> Csv {
         result.cells.iter().find(|c| {
             c.spec.baseline == baseline
                 && c.spec.cache == cache
+                && c.spec.fleet == FleetPolicy::PerReplica
                 && c.spec.cluster.as_ref().is_some_and(|cv| {
-                    cv.router == router && cv.grids == *grids
+                    cv.router == router
+                        && cv.grids == *grids
+                        && cv.models.iter().all(|m| m.is_none())
                 })
         })
     };
@@ -174,6 +240,37 @@ pub fn fleet(quick: bool) -> Csv {
                     -saving_pct(local.carbon_per_request_g, pooled.carbon_per_request_g),
                 );
             }
+        }
+    }
+
+    // Headline 3: the fleet planner vs independent per-replica control
+    // on GreenCache fleets (same day, same router, same caches — only
+    // the control plane differs), across the mixed-grid and the
+    // mixed-model fleet.
+    let find_planner = |cv_want: &ClusterVariant, fleet: FleetPolicy| {
+        result.cells.iter().find(|c| {
+            c.spec.baseline == Baseline::GreenCache
+                && c.spec.cache == CacheVariant::Local
+                && c.spec.fleet == fleet
+                && c.spec.cluster.as_ref() == Some(cv_want)
+        })
+    };
+    for cv in [
+        ClusterVariant::new(&[Grid::Fr, Grid::Miso], RouterPolicy::CarbonGreedy),
+        mixed_model_fleet(RouterPolicy::CarbonGreedy),
+    ] {
+        if let (Some(indep), Some(joint)) = (
+            find_planner(&cv, FleetPolicy::PerReplica),
+            find_planner(&cv, FleetPolicy::GreenCacheFleet),
+        ) {
+            println!(
+                "  {:<20} GreenCache : fleet planner saves {:>5.1}% vs independent (SLO {:+.1} pp, cache {:>5.1} vs {:>5.1} TB)",
+                shape_label(&cv),
+                saving_pct(indep.carbon_per_request_g, joint.carbon_per_request_g),
+                (joint.slo_attainment - indep.slo_attainment) * 100.0,
+                joint.mean_cache_tb,
+                indep.mean_cache_tb,
+            );
         }
     }
     csv

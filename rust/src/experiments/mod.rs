@@ -55,6 +55,14 @@ impl Model {
         }
     }
 
+    /// Compact label for mixed-model fleet cells (`fleet[FR:70B+…]`).
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            Model::Llama70B => "70B",
+            Model::Llama8B => "8B",
+        }
+    }
+
     /// The platform's latency/utilization law.
     pub fn cost(&self) -> CostModel {
         match self {
@@ -335,7 +343,16 @@ impl ProfileStore {
             } else {
                 (0..=model.max_cache_tb()).step_by(2).collect()
             };
-            let rates: Vec<f64> = (1..=5).map(|k| peak * k as f64 / 5.0).collect();
+            // peak/25 anchors the near-idle end of the grid: without it,
+            // `interpolate` clamps every rate below peak/5 to the peak/5
+            // row, flooring nighttime operational-cost estimates — and
+            // hiding the payoff of de-loading a dirty replica from the
+            // fleet planner's candidate scoring. A ~5%-of-peak window
+            // still completes enough requests for well-defined
+            // attainment columns (a true 0-rps window would not).
+            let rates: Vec<f64> = std::iter::once(peak / 25.0)
+                .chain((1..=5).map(|k| peak * k as f64 / 5.0))
+                .collect();
             let cfg = ProfilerConfig {
                 cost: model.cost(),
                 power: model.power(),

@@ -20,9 +20,10 @@
 //!   ([`ci`]) and load ([`load`]), sizes the cache with an ILP
 //!   ([`solver`]), reproduces the paper's evaluation through a
 //!   calibrated cluster simulator ([`sim`] + [`profiler`]), scales it to
-//!   a multi-replica fleet behind a carbon-aware router ([`cluster`]),
-//!   and fans evaluation cells out through the parallel [`scenario`]
-//!   matrix.
+//!   a multi-replica fleet behind a carbon-aware router ([`cluster`])
+//!   with a fleet-scoped control plane that co-optimizes router weights
+//!   and per-replica cache sizes ([`control`]), and fans evaluation
+//!   cells out through the parallel [`scenario`] matrix.
 //!
 //! Python never runs on the request path: the default build is
 //! self-contained, and after `make artifacts` the `pjrt` build is too.
@@ -33,6 +34,7 @@ pub mod cache;
 pub mod carbon;
 pub mod ci;
 pub mod cluster;
+pub mod control;
 pub mod coordinator;
 pub mod experiments;
 pub mod load;

@@ -6,13 +6,16 @@
 //! greencache serve    [--requests N] [--cache-mb M] [--policy lcs|lru|fifo|lfu]
 //! greencache simulate [--task conv|doc04|doc07] [--grid FR|FI|ES|CISO|...]
 //!                     [--baseline none|full|green|lru-optimal] [--hours H] [--quick]
-//! greencache cluster  [--grids FR,MISO,...] [--router rr|jsq|greedy|all]
+//! greencache cluster  [--grids FR,MISO,...] [--router rr|jsq|greedy|weighted|all]
 //!                     [--task conv|doc04|doc07] [--baseline none|full|green]
 //!                     [--cache local|tiered|shared]
+//!                     [--fleet per-replica|green|all]
 //!                     [--hours H] [--rps R] [--quick]
 //! greencache matrix   [--models 70b,8b] [--tasks conv,doc04,doc07]
 //!                     [--grids FR,ES,...] [--baselines none,full,green]
 //!                     [--policies lcs,lru] [--caches local,tiered,shared]
+//!                     [--cluster FR+MISO[@rr|jsq|greedy|weighted]]
+//!                     [--fleets per-replica,green]
 //!                     [--hours H] [--threads N] [--seed S] [--quick]
 //! greencache profile  [--task conv|doc04|doc07] [--quick]
 //! greencache decide   [--grid ES] [--hour H]
@@ -23,6 +26,7 @@
 use greencache::cache::{CacheVariant, PolicyKind};
 use greencache::ci::Grid;
 use greencache::cluster::{run_cluster, ClusterSpec, RouterPolicy};
+use greencache::control::FleetPolicy;
 use greencache::coordinator::server::{Server, ServerConfig};
 use greencache::experiments::{Baseline, Model, ProfileStore, Task};
 use greencache::rng::Rng;
@@ -119,6 +123,23 @@ fn parse_cache(s: &str) -> CacheVariant {
         eprintln!("unknown cache backend {s}, using local");
         CacheVariant::Local
     })
+}
+
+fn parse_fleet(s: &str) -> FleetPolicy {
+    FleetPolicy::parse(s).unwrap_or_else(|| {
+        eprintln!("unknown fleet policy {s}, using per-replica");
+        FleetPolicy::PerReplica
+    })
+}
+
+fn parse_router(s: &str) -> Option<RouterPolicy> {
+    match s {
+        "rr" | "round-robin" => Some(RouterPolicy::RoundRobin),
+        "jsq" | "least-loaded" => Some(RouterPolicy::LeastLoaded),
+        "greedy" | "carbon-greedy" => Some(RouterPolicy::CarbonGreedy),
+        "weighted" => Some(RouterPolicy::Weighted),
+        _ => None,
+    }
 }
 
 fn parse_baseline(s: &str) -> Baseline {
@@ -265,7 +286,8 @@ fn cmd_simulate(args: &Args) -> greencache::Result<()> {
 }
 
 /// Multi-replica fleet comparison: run the same fleet/day under one or
-/// all router policies and print fleet + per-replica breakdowns.
+/// all router policies (and one or both fleet control planes) and print
+/// fleet + per-replica breakdowns.
 fn cmd_cluster(args: &Args) -> greencache::Result<()> {
     let grids = parse_list(args, "grids", "FR,MISO", parse_grid);
     let task = parse_task(args.get("task").unwrap_or("conv"));
@@ -273,14 +295,18 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
     let cache = parse_cache(args.get("cache").unwrap_or("local"));
     let quick = args.bool("quick");
     let routers: Vec<RouterPolicy> = match args.get("router").unwrap_or("all") {
-        "rr" | "round-robin" => vec![RouterPolicy::RoundRobin],
-        "jsq" | "least-loaded" => vec![RouterPolicy::LeastLoaded],
-        "greedy" | "carbon-greedy" => vec![RouterPolicy::CarbonGreedy],
         "all" => RouterPolicy::all().to_vec(),
-        other => {
-            eprintln!("unknown router {other}, comparing all");
-            RouterPolicy::all().to_vec()
-        }
+        other => match parse_router(other) {
+            Some(r) => vec![r],
+            None => {
+                eprintln!("unknown router {other}, comparing all");
+                RouterPolicy::all().to_vec()
+            }
+        },
+    };
+    let fleet_policies: Vec<FleetPolicy> = match args.get("fleet").unwrap_or("per-replica") {
+        "all" => FleetPolicy::all().to_vec(),
+        other => vec![parse_fleet(other)],
     };
 
     let fixed_rps: Option<f64> = match args.get("rps") {
@@ -295,48 +321,55 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
     };
 
     let mut profiles = ProfileStore::new(quick);
-    let mut summary: Vec<(RouterPolicy, f64, f64)> = Vec::new();
+    let mut summary: Vec<(RouterPolicy, FleetPolicy, f64, f64)> = Vec::new();
     for router in &routers {
-        let mut spec = ClusterSpec::homogeneous(Model::Llama70B, task, &grids, *router);
-        spec.baseline = baseline;
-        spec.cache = cache;
-        spec.hours = args.usize("hours", 24);
-        if quick {
-            spec = spec.quick();
+        for fleet in &fleet_policies {
+            let mut spec = ClusterSpec::homogeneous(Model::Llama70B, task, &grids, *router);
+            spec.baseline = baseline;
+            spec.cache = cache;
+            spec.fleet = *fleet;
+            spec.hours = args.usize("hours", 24);
+            if quick {
+                spec = spec.quick();
+            }
+            spec.fixed_rps = fixed_rps;
+            println!(
+                "fleet {} x{} | {} | {} | router {} | cache {} | fleet-ctl {} ({}h)...",
+                spec.fleet_label(),
+                spec.replicas.len(),
+                task.name(),
+                baseline.name(),
+                router.name(),
+                cache.name(),
+                fleet.name(),
+                spec.hours
+            );
+            let result = run_cluster(&spec, &mut profiles);
+            print!("{}", result.table());
+            println!(
+                "fleet: {:.3} g/req | SLO {:.1}% | hit {:.3} | TTFT {:.2}s\n",
+                result.carbon_per_request_g,
+                result.slo_attainment * 100.0,
+                result.token_hit_rate,
+                result.mean_ttft_s
+            );
+            summary.push((*router, *fleet, result.total_carbon_g, result.slo_attainment));
         }
-        spec.fixed_rps = fixed_rps;
-        println!(
-            "fleet {} x{} | {} | {} | router {} | cache {} ({}h)...",
-            spec.fleet_label(),
-            spec.replicas.len(),
-            task.name(),
-            baseline.name(),
-            router.name(),
-            cache.name(),
-            spec.hours
-        );
-        let result = run_cluster(&spec, &mut profiles);
-        print!("{}", result.table());
-        println!(
-            "fleet: {:.3} g/req | SLO {:.1}% | hit {:.3} | TTFT {:.2}s\n",
-            result.carbon_per_request_g,
-            result.slo_attainment * 100.0,
-            result.token_hit_rate,
-            result.mean_ttft_s
-        );
-        summary.push((*router, result.total_carbon_g, result.slo_attainment));
     }
     if summary.len() > 1 {
-        println!("router comparison (same fleet, same day):");
+        println!("comparison (same fleet, same day):");
         let base = summary
             .iter()
-            .find(|(r, _, _)| *r == RouterPolicy::RoundRobin)
-            .map(|&(_, c, _)| c)
-            .unwrap_or(summary[0].1);
-        for (router, carbon, slo) in &summary {
+            .find(|(r, f, _, _)| {
+                *r == RouterPolicy::RoundRobin && *f == FleetPolicy::PerReplica
+            })
+            .map(|&(_, _, c, _)| c)
+            .unwrap_or(summary[0].2);
+        for (router, fleet, carbon, slo) in &summary {
             println!(
-                "  {:<13}: {:>9.1} g total ({:>+5.1}% vs round-robin), SLO {:>5.1}%",
+                "  {:<13} {:<11}: {:>9.1} g total ({:>+5.1}% vs baseline), SLO {:>5.1}%",
                 router.name(),
+                fleet.name(),
                 carbon,
                 100.0 * (carbon - base) / base.max(1e-12),
                 slo * 100.0
@@ -380,6 +413,37 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
             .collect(),
     };
     let caches = parse_list(args, "caches", "local", parse_cache);
+    // `--cluster FR+MISO@greedy` lifts every cell onto that fleet (the
+    // fleet-control axis below then becomes meaningful); default: all
+    // cells stay single-node.
+    let clusters: Vec<Option<greencache::scenario::ClusterVariant>> =
+        match args.get("cluster") {
+            None => vec![None],
+            Some(raw) => {
+                let (grid_part, router_part) = match raw.split_once('@') {
+                    Some((g, r)) => (g, r),
+                    None => (raw, "greedy"),
+                };
+                let fleet_grids: Vec<Grid> = grid_part
+                    .split('+')
+                    .filter(|s| !s.is_empty())
+                    .map(parse_grid)
+                    .collect();
+                anyhow::ensure!(!fleet_grids.is_empty(), "--cluster names no grids");
+                let router = parse_router(router_part).unwrap_or_else(|| {
+                    eprintln!("unknown router {router_part}, using carbon-greedy");
+                    RouterPolicy::CarbonGreedy
+                });
+                vec![Some(greencache::scenario::ClusterVariant::new(
+                    &fleet_grids,
+                    router,
+                ))]
+            }
+        };
+    let fleets = parse_list(args, "fleets", "per-replica", parse_fleet);
+    if fleets.len() > 1 && clusters == vec![None] {
+        eprintln!("note: --fleets only differentiates fleet cells; pass --cluster too");
+    }
 
     let matrix = Matrix::new()
         .models(&models)
@@ -388,6 +452,8 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         .baselines(&baselines)
         .policies(&policies)
         .caches(&caches)
+        .clusters(&clusters)
+        .fleets(&fleets)
         .hours(args.usize("hours", 24))
         .quick(args.bool("quick"))
         .seed(args.usize("seed", 20_25) as u64);
@@ -399,14 +465,15 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         verbose: true,
     };
     println!(
-        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies x {} caches)...",
+        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies x {} caches x {} fleets)...",
         specs.len(),
         models.len(),
         tasks.len(),
         grids.len(),
         baselines.len(),
         policies.len(),
-        caches.len()
+        caches.len(),
+        fleets.len()
     );
     let result = runner.run(&specs);
     print!("{}", result.table());

@@ -3,12 +3,13 @@
 use super::{workload_seed, ClusterVariant, ScenarioSpec};
 use crate::cache::{CacheVariant, PolicyKind};
 use crate::ci::Grid;
+use crate::control::FleetPolicy;
 use crate::experiments::{Baseline, Model, Task};
 
 /// A declarative scenario matrix. Every axis is a list of values; the
 /// expansion is their cartesian product in a fixed order (model-major,
-/// then task, grid, baseline, policy, cache, cluster), so cell order —
-/// and therefore the golden table — is stable.
+/// then task, grid, baseline, policy, cache, cluster, fleet), so cell
+/// order — and therefore the golden table — is stable.
 ///
 /// # Example
 ///
@@ -50,6 +51,12 @@ pub struct Matrix {
     /// lift the cell to a fleet of that shape — sweeping replica counts
     /// and router policies is just more entries here.
     pub clusters: Vec<Option<ClusterVariant>>,
+    /// Fleet-control axis (`greencache matrix --fleets`): how each
+    /// cluster cell's controllers are organized. Pairs with the cluster
+    /// axis — single-node cells ignore it (sweep it only on matrices
+    /// whose cluster axis is all-fleet, or the single-node cells repeat
+    /// per entry).
+    pub fleets: Vec<FleetPolicy>,
     /// Evaluated horizon per cell, hours.
     pub hours: usize,
     /// Shrunken warm-up/profile smoke mode.
@@ -76,6 +83,7 @@ impl Matrix {
             policies: vec![None],
             caches: vec![CacheVariant::Local],
             clusters: vec![None],
+            fleets: vec![FleetPolicy::PerReplica],
             hours: 24,
             quick: false,
             base_seed: 20_25,
@@ -127,6 +135,12 @@ impl Matrix {
         self
     }
 
+    /// Set the fleet-control axis (pairs with the cluster axis).
+    pub fn fleets(mut self, v: &[FleetPolicy]) -> Self {
+        self.fleets = v.to_vec();
+        self
+    }
+
     /// Set the per-cell horizon, hours.
     pub fn hours(mut self, h: usize) -> Self {
         self.hours = h;
@@ -172,6 +186,7 @@ impl Matrix {
             * self.policies.len()
             * self.caches.len()
             * self.clusters.len()
+            * self.fleets.len()
     }
 
     /// Whether the expansion would be empty.
@@ -190,20 +205,23 @@ impl Matrix {
                         for &policy in &self.policies {
                             for &cache in &self.caches {
                                 for cluster in &self.clusters {
-                                    let mut spec =
-                                        ScenarioSpec::new(model, task, grid, baseline);
-                                    spec.policy = policy;
-                                    spec.hours = self.hours;
-                                    spec.seed = seed;
-                                    spec.interval_s = self.interval_s;
-                                    spec.fixed_rps = self.fixed_rps;
-                                    spec.fixed_ci = self.fixed_ci;
-                                    spec.cache = cache;
-                                    spec.cluster = cluster.clone();
-                                    if self.quick {
-                                        spec = spec.quick();
+                                    for &fleet in &self.fleets {
+                                        let mut spec =
+                                            ScenarioSpec::new(model, task, grid, baseline);
+                                        spec.policy = policy;
+                                        spec.hours = self.hours;
+                                        spec.seed = seed;
+                                        spec.interval_s = self.interval_s;
+                                        spec.fixed_rps = self.fixed_rps;
+                                        spec.fixed_ci = self.fixed_ci;
+                                        spec.cache = cache;
+                                        spec.cluster = cluster.clone();
+                                        spec.fleet = fleet;
+                                        if self.quick {
+                                            spec = spec.quick();
+                                        }
+                                        cells.push(spec);
                                     }
-                                    cells.push(spec);
                                 }
                             }
                         }
@@ -323,5 +341,27 @@ mod tests {
             .all(|w| w[0].task != w[1].task || w[0].seed == w[1].seed));
         // Single-node cells survive untouched.
         assert_eq!(cells.iter().filter(|c| c.cluster.is_none()).count(), 8);
+    }
+
+    #[test]
+    fn fleet_axis_multiplies_cluster_cells_and_shares_seeds() {
+        use crate::cluster::RouterPolicy;
+        let m = small()
+            .clusters(&[Some(ClusterVariant::new(
+                &[Grid::Fr, Grid::Miso],
+                RouterPolicy::CarbonGreedy,
+            ))])
+            .fleets(&FleetPolicy::all());
+        assert_eq!(m.len(), 8 * 2);
+        let cells = m.expand();
+        // The fleet axis is innermost: consecutive pairs differ only by
+        // fleet policy and replay the identical day.
+        for w in cells.chunks(2) {
+            assert_eq!(w[0].seed, w[1].seed);
+            assert_eq!(w[0].fleet, FleetPolicy::PerReplica);
+            assert_eq!(w[1].fleet, FleetPolicy::GreenCacheFleet);
+            assert!(w[1].label().ends_with("/fleet=green"), "{}", w[1].label());
+            assert!(!w[0].label().contains("fleet="), "{}", w[0].label());
+        }
     }
 }

@@ -29,37 +29,73 @@ pub use runner::{run_specs, CellResult, MatrixResult, MatrixRunner};
 use crate::cache::{CacheVariant, PolicyKind};
 use crate::ci::Grid;
 use crate::cluster::{ClusterSpec, ReplicaSpec, RouterPolicy};
+use crate::control::FleetPolicy;
 use crate::experiments::{Baseline, DayScenario, Model, Task};
 
 /// The cluster shape of a fleet cell: one replica per grid, plus the
-/// routing policy. Rides on a [`ScenarioSpec`] (which supplies the
-/// model, task, baseline, policy, horizon and seed for every replica) so
-/// the matrix can sweep replica counts and router policies exactly like
-/// any other axis.
+/// routing policy, plus (optionally) per-replica models for
+/// heterogeneous fleets. Rides on a [`ScenarioSpec`] (which supplies the
+/// task, baseline, policy, horizon and seed for every replica, and the
+/// model for homogeneous fleets) so the matrix can sweep replica counts
+/// and router policies exactly like any other axis.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterVariant {
     /// One replica per entry (the replica's grid); length = fleet size.
     pub grids: Vec<Grid>,
     /// Request placement policy.
     pub router: RouterPolicy,
+    /// Per-replica models (GreenLLM-style heterogeneous fleets), in
+    /// `grids` order; `None` keeps the homogeneous default (every
+    /// replica runs the spec's model).
+    pub models: Vec<Option<Model>>,
 }
 
 impl ClusterVariant {
-    /// A fleet of one replica per grid under `router`.
+    /// A homogeneous fleet of one replica per grid under `router`.
     pub fn new(grids: &[Grid], router: RouterPolicy) -> Self {
         ClusterVariant {
+            models: vec![None; grids.len()],
             grids: grids.to_vec(),
             router,
         }
     }
 
-    /// Stable label suffix, e.g. `fleet[FR+MISO]/carbon-greedy`.
+    /// Pin per-replica models (must match the grid count); `None`
+    /// entries keep the spec's model — a GreenLLM-style mixed fleet,
+    /// e.g. a 70B replica on FR next to an 8B one on MISO.
+    pub fn with_models(mut self, models: &[Option<Model>]) -> Self {
+        assert_eq!(models.len(), self.grids.len(), "one model slot per replica");
+        self.models = models.to_vec();
+        self
+    }
+
+    /// The canonical replica-list label, e.g. `FR+MISO` —
+    /// model-overridden replicas are tagged, e.g. `FR+MISO:8B`
+    /// (untouched replicas keep the spec's model and stay bare, so
+    /// homogeneous labels are unchanged). The single source of this
+    /// formatting: [`ClusterVariant::label`] and the fleet exhibit's
+    /// shape column both build on it, so golden labels and exhibit rows
+    /// cannot drift apart.
+    pub fn replica_join(&self) -> String {
+        if self.models.iter().all(|m| m.is_none()) {
+            crate::cluster::grid_join(&self.grids)
+        } else {
+            self.grids
+                .iter()
+                .zip(&self.models)
+                .map(|(g, m)| match m {
+                    Some(m) => format!("{}:{}", g.name(), m.short_name()),
+                    None => g.name().to_string(),
+                })
+                .collect::<Vec<_>>()
+                .join("+")
+        }
+    }
+
+    /// Stable label suffix, e.g. `fleet[FR+MISO]/carbon-greedy` — with
+    /// model overrides, `fleet[FR+MISO:8B]/carbon-greedy`.
     pub fn label(&self) -> String {
-        format!(
-            "fleet[{}]/{}",
-            crate::cluster::grid_join(&self.grids),
-            self.router.name()
-        )
+        format!("fleet[{}]/{}", self.replica_join(), self.router.name())
     }
 }
 
@@ -99,6 +135,12 @@ pub struct ScenarioSpec {
     /// single-node cells to `DayScenario` (where `shared` degenerates to
     /// `local`: a one-replica pool is a local store).
     pub cache: CacheVariant,
+    /// Fleet control plane of a cluster cell (the matrix fleet axis):
+    /// independent per-replica controllers
+    /// ([`FleetPolicy::PerReplica`], the default) or the joint
+    /// [`FleetPolicy::GreenCacheFleet`] planner. Single-node cells
+    /// ignore it.
+    pub fleet: FleetPolicy,
 }
 
 impl ScenarioSpec {
@@ -118,6 +160,7 @@ impl ScenarioSpec {
             fixed_ci: None,
             cluster: None,
             cache: CacheVariant::Local,
+            fleet: FleetPolicy::PerReplica,
         }
     }
 
@@ -147,7 +190,8 @@ impl ScenarioSpec {
             replicas: cv
                 .grids
                 .iter()
-                .map(|&g| ReplicaSpec::new(self.model, g))
+                .zip(&cv.models)
+                .map(|(&g, m)| ReplicaSpec::new(m.unwrap_or(self.model), g))
                 .collect(),
             task: self.task,
             baseline: self.baseline,
@@ -162,6 +206,7 @@ impl ScenarioSpec {
             fixed_ci: self.fixed_ci,
             stepping: crate::sim::Stepping::default(),
             cache: self.cache,
+            fleet: self.fleet,
         })
     }
 
@@ -182,7 +227,9 @@ impl ScenarioSpec {
     /// Compact human/golden-stable label, e.g.
     /// `Llama-3-70B/multi-turn-conversation/ES/GreenCache` — fleet cells
     /// append `/fleet[FR+MISO]/carbon-greedy`, non-default cache
-    /// backends `/cache=tiered` or `/cache=shared`.
+    /// backends `/cache=tiered` or `/cache=shared`, and fleet cells
+    /// under the joint planner `/fleet=green` (the per-replica default
+    /// stays unlabeled, so pre-planner golden tables are unchanged).
     pub fn label(&self) -> String {
         let mut s = format!(
             "{}/{}/{}/{}",
@@ -202,6 +249,10 @@ impl ScenarioSpec {
         if self.cache != CacheVariant::Local {
             s.push_str("/cache=");
             s.push_str(self.cache.name());
+        }
+        if self.cluster.is_some() && self.fleet != FleetPolicy::PerReplica {
+            s.push_str("/fleet=");
+            s.push_str(self.fleet.name());
         }
         s
     }
@@ -321,6 +372,57 @@ mod tests {
         assert_eq!(
             spec.to_cluster_spec().expect("fleet").cache,
             CacheVariant::Shared
+        );
+    }
+
+    #[test]
+    fn fleet_policy_lowers_and_labels() {
+        use crate::cluster::RouterPolicy;
+        let mut spec = ScenarioSpec::new(
+            Model::Llama70B,
+            Task::Conversation,
+            Grid::Es,
+            Baseline::GreenCache,
+        );
+        spec.cluster = Some(ClusterVariant::new(
+            &[Grid::Fr, Grid::Miso],
+            RouterPolicy::CarbonGreedy,
+        ));
+        assert_eq!(spec.to_cluster_spec().unwrap().fleet, FleetPolicy::PerReplica);
+        assert!(!spec.label().contains("fleet="), "default stays unlabeled");
+        spec.fleet = FleetPolicy::GreenCacheFleet;
+        assert_eq!(
+            spec.label(),
+            "Llama-3-70B/multi-turn-conversation/ES/GreenCache/fleet[FR+MISO]/carbon-greedy/fleet=green"
+        );
+        assert_eq!(
+            spec.to_cluster_spec().unwrap().fleet,
+            FleetPolicy::GreenCacheFleet
+        );
+    }
+
+    #[test]
+    fn mixed_model_fleets_lower_and_label() {
+        use crate::cluster::RouterPolicy;
+        let mut spec = ScenarioSpec::new(
+            Model::Llama70B,
+            Task::Conversation,
+            Grid::Es,
+            Baseline::GreenCache,
+        );
+        spec.cluster = Some(
+            ClusterVariant::new(&[Grid::Fr, Grid::Miso], RouterPolicy::CarbonGreedy)
+                .with_models(&[None, Some(Model::Llama8B)]),
+        );
+        let cs = spec.to_cluster_spec().unwrap();
+        assert_eq!(cs.replicas[0].model, Model::Llama70B, "None keeps the spec model");
+        assert_eq!(cs.replicas[1].model, Model::Llama8B);
+        assert_eq!(cs.replicas[1].max_cache_tb, 8, "8B budget rides along");
+        // Only overridden replicas are model-tagged (None = spec model).
+        assert!(
+            spec.label().contains("fleet[FR+MISO:8B]/carbon-greedy"),
+            "{}",
+            spec.label()
         );
     }
 

@@ -145,6 +145,13 @@ impl MatrixRunner {
             if s.is_adaptive() {
                 let store = if s.quick { &mut master_quick } else { &mut master_full };
                 store.get_shared(s.model, s.task, s.effective_policy());
+                // Mixed-model fleet cells need every overridden
+                // replica's profile too.
+                if let Some(cv) = &s.cluster {
+                    for m in cv.models.iter().flatten() {
+                        store.get_shared(*m, s.task, s.effective_policy());
+                    }
+                }
             }
         }
 

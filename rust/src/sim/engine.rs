@@ -124,13 +124,26 @@ struct InFlight {
 /// Controllers see the cache through the [`CacheStore`] trait, so one
 /// controller drives local, tiered and (per-replica handles of) shared
 /// backends unchanged.
+///
+/// Per-replica controllers plug in here; fleet-scoped planners live one
+/// level up behind [`crate::control::FleetController`], whose
+/// [`crate::control::PerReplica`] adapter lowers a vector of these onto
+/// the fleet API.
 pub trait Controller {
     /// Called at every decision boundary (default: each hour). `hour` is
     /// the index of the *completed* hour.
     fn on_interval(&mut self, hour: usize, obs: &IntervalObservation, cache: &mut dyn CacheStore);
+
+    /// Pre-deployment provisioning (§4.1's pre-day bootstrap): apply the
+    /// controller's initial decision to `cache` before time zero.
+    /// Default: leave the cache as provisioned.
+    fn bootstrap(&mut self, _cache: &mut dyn CacheStore) {}
 }
 
-/// A controller that never resizes (No Cache / Full Cache baselines).
+/// A controller that never resizes (No Cache / Full Cache baselines) —
+/// the one no-op controller every layer shares (re-exported as
+/// `coordinator::baselines::Fixed` for the §6.1 naming).
+#[derive(Debug, Clone, Copy, Default)]
 pub struct FixedController;
 impl Controller for FixedController {
     fn on_interval(&mut self, _: usize, _: &IntervalObservation, _: &mut dyn CacheStore) {}
@@ -378,6 +391,14 @@ impl<'c> ReplicaEngine<'c> {
     /// The replica's context cache (read-only — routers peek affinity).
     pub fn cache(&self) -> &(dyn CacheStore + 'c) {
         self.cache.as_ref()
+    }
+
+    /// Mutable access to the replica's cache — the fleet control plane's
+    /// actuation path ([`crate::control::FleetActuators`] borrows every
+    /// engine's cache at a lockstep instant so a fleet-scoped planner
+    /// can resize them together).
+    pub fn cache_mut(&mut self) -> &mut (dyn CacheStore + 'c) {
+        self.cache.as_mut()
     }
 
     /// The replica's platform cost model.

@@ -17,6 +17,13 @@
 //! fleet pool lifts the fleet token hit rate over per-replica local
 //! stores at equal total capacity under carbon-greedy routing —
 //! deterministically across thread counts.
+//!
+//! Since the fleet-control-plane redesign, these cells run through the
+//! default `FleetPolicy::PerReplica` adapter; their fixed-capacity
+//! baselines never actuate, so the snapshot also pins that the new
+//! control plane reproduces the pre-redesign driver byte-for-byte on
+//! every pre-existing cell (the planner's own goldens live in
+//! `rust/tests/fleet_planner.rs`).
 
 use std::path::PathBuf;
 
