@@ -1,22 +1,34 @@
 #!/usr/bin/env python3
-"""Validate BENCH_SIM.json / BENCH_CACHE.json against their key contract.
+"""Validate BENCH_SIM.json / BENCH_CACHE.json and gate regressions.
 
-Usage: check_bench_schema.py <dir> [<dir> ...]
+Usage:
+  check_bench_schema.py <dir> [<dir> ...]
+      Schema check: each directory must contain both reports with the
+      expected schema tag and key set.
 
-Each directory must contain both reports. The key lists are the single
-source of truth for the schema the README performance table and tooling
-read — CI runs this over the committed placeholders (repo root) and the
-freshly measured reports (bench-out/), so the two cannot drift apart.
+  check_bench_schema.py --gate <baseline_dir> <fresh_dir> [min_ratio]
+      Regression gate: compares the freshly measured BENCH_SIM.json
+      against the committed baseline. Every speedup the baseline
+      actually measured (non-null) must hold at least `min_ratio`
+      (default 0.5) of its value in the fresh run. Placeholder (null)
+      baselines gate nothing — the schema check still applies — so the
+      gate bootstraps cleanly on repos whose committed reports were
+      authored without a Rust toolchain.
+
+The key lists are the single source of truth for the schema the README
+performance table and tooling read — CI runs the schema check over the
+committed placeholders (repo root) and the freshly measured reports
+(bench-out/), so the two cannot drift apart.
 """
 
 import json
 import sys
 
-SCHEMA = "greencache-bench-v1"
+SCHEMA = "greencache-bench-v2"
 REQUIRED = {
     "BENCH_SIM.json": [
         "bench", "config", "reference", "fast_forward", "speedup",
-        "quick", "schema",
+        "fleet", "quick", "schema",
     ],
     "BENCH_CACHE.json": [
         "bench", "cases", "group", "ops_per_case", "quick", "schema",
@@ -35,8 +47,52 @@ def check(path: str, required: list) -> None:
     print(f"{path}: ok ({len(data)} keys)")
 
 
+def speedups(sim: dict) -> dict:
+    """The gated metrics of a BENCH_SIM.json: name -> value or None."""
+    fleet = sim.get("fleet") or {}
+    out = {"fast_forward_speedup": sim.get("speedup")}
+    out["fleet_speedup"] = fleet.get("speedup") if isinstance(fleet, dict) else None
+    return out
+
+
+def gate(baseline_dir: str, fresh_dir: str, min_ratio: float) -> None:
+    with open(f"{baseline_dir.rstrip('/')}/BENCH_SIM.json") as f:
+        base = speedups(json.load(f))
+    with open(f"{fresh_dir.rstrip('/')}/BENCH_SIM.json") as f:
+        fresh = speedups(json.load(f))
+    failures = []
+    for name, base_v in base.items():
+        fresh_v = fresh.get(name)
+        if not isinstance(fresh_v, (int, float)) or fresh_v <= 0:
+            failures.append(f"{name}: fresh run measured {fresh_v!r}")
+            continue
+        if not isinstance(base_v, (int, float)):
+            print(f"gate {name}: baseline is a placeholder, "
+                  f"fresh={fresh_v:.2f}x recorded but not gated")
+            continue
+        floor = base_v * min_ratio
+        verdict = "ok" if fresh_v >= floor else "REGRESSION"
+        print(f"gate {name}: fresh {fresh_v:.2f}x vs baseline {base_v:.2f}x "
+              f"(floor {floor:.2f}x) -> {verdict}")
+        if fresh_v < floor:
+            failures.append(
+                f"{name}: {fresh_v:.2f}x fell below {floor:.2f}x "
+                f"({min_ratio:.0%} of committed {base_v:.2f}x)")
+    if failures:
+        sys.exit("bench regression gate failed:\n  " + "\n  ".join(failures))
+    print("bench regression gate: ok")
+
+
 def main() -> None:
-    dirs = sys.argv[1:] or ["."]
+    args = sys.argv[1:]
+    if args and args[0] == "--gate":
+        if len(args) < 3:
+            sys.exit("usage: check_bench_schema.py --gate <baseline_dir> "
+                     "<fresh_dir> [min_ratio]")
+        min_ratio = float(args[3]) if len(args) > 3 else 0.5
+        gate(args[1], args[2], min_ratio)
+        return
+    dirs = args or ["."]
     for d in dirs:
         for name, required in REQUIRED.items():
             check(f"{d.rstrip('/')}/{name}", required)

@@ -14,15 +14,30 @@
 //! engine-advance order would make pool state depend on the order the
 //! driver steps replicas in — deterministic, but causally inconsistent
 //! with simulated time. Handles therefore **buffer writes**: [`admit`]
-//! and [`resize`] enqueue `(simulated time, replica, op)` and return
-//! immediately; [`SharedStore::sync`] — called by
-//! [`crate::cluster::ClusterSim`] at every lockstep router instant and
-//! once after the final drain — applies the queue sorted by
-//! `(time, replica, arrival order)`. Reads that happen only at router
-//! instants ([`lookup`] at injection, [`peek`] for router affinity) go
-//! straight to the pool, which sync has just brought current. Fleet runs
-//! are byte-identical regardless of replica stepping order or matrix
-//! thread count.
+//! and [`resize`] enqueue `(simulated time, replica, op)` into the
+//! handle's own mailbox and return immediately; [`SharedStore::sync`] —
+//! called by [`crate::cluster::ClusterSim`] at every lockstep router
+//! instant and once after the final drain — drains every mailbox and
+//! applies the merged queue sorted by `(time, replica, arrival order)`.
+//! Reads that happen only at router instants ([`lookup`] at injection,
+//! [`peek`] for router affinity) go straight to the pool, which sync has
+//! just brought current. Fleet runs are byte-identical regardless of
+//! replica stepping order or matrix thread count.
+//!
+//! # Parallel stepping
+//!
+//! The same protocol is what makes the cluster driver's parallel replica
+//! advance (`cluster --threads`) sound: between sync points a replica's
+//! worker thread touches only its *own* mailbox (admits/resizes) and its
+//! handle-local `slice_view` (capacity/tier reads), never the pool, so
+//! worker threads share nothing hot. The arrival-order tiebreak is a
+//! **per-replica** sequence counter: sorting by `(time, replica, seq)`
+//! needs the tiebreak only *within* one `(time, replica)` key, where
+//! per-replica order equals global push order — so the merged apply
+//! order, and therefore every pool byte, is identical whether replicas
+//! advanced sequentially or on any number of threads. Pool reads that do
+//! happen mid-advance (a controller probing `used_bytes`) see the state
+//! frozen at the last sync, same as sequential stepping.
 //!
 //! Visibility granularity: a replica engine advancing to instant `t` may
 //! overshoot by up to one iteration (that is `run_until`'s contract), so
@@ -46,8 +61,7 @@
 //! [`lookup`]: CacheStore::lookup
 //! [`peek`]: CacheStore::peek
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::workload::Request;
 
@@ -74,7 +88,10 @@ enum Op {
     },
 }
 
-/// The pool itself plus the per-replica bookkeeping.
+/// The pool itself plus the per-replica bookkeeping. Behind one mutex;
+/// in the lockstep protocol it is only ever locked from the driver
+/// thread (sync/lookup/peek at router instants) or for reads of
+/// sync-frozen state, so the lock is effectively uncontended.
 #[derive(Debug)]
 struct SharedCore {
     /// The pooled store; its capacity is always `slices.iter().sum()`.
@@ -84,10 +101,13 @@ struct SharedCore {
     slices: Vec<u64>,
     /// Per-replica attributed statistics (sum == `inner.stats()`).
     per_replica: Vec<CacheStats>,
-    /// Buffered writes awaiting the next [`SharedStore::sync`].
-    pending: Vec<PendingOp>,
-    seq: u64,
 }
+
+/// One mailbox per replica: buffered writes awaiting the next
+/// [`SharedStore::sync`]. A separate lock per replica (outside the core
+/// mutex) so a replica's worker thread pushing an admit never contends
+/// with another replica or with pool reads.
+type Mailboxes = Arc<Vec<Mutex<Vec<PendingOp>>>>;
 
 impl SharedCore {
     fn apply(&mut self, op: PendingOp) {
@@ -145,7 +165,8 @@ impl SharedCore {
 /// does both). See the module docs for the protocol.
 #[derive(Debug)]
 pub struct SharedStore {
-    core: Rc<RefCell<SharedCore>>,
+    core: Arc<Mutex<SharedCore>>,
+    mailboxes: Mailboxes,
 }
 
 impl SharedStore {
@@ -155,43 +176,51 @@ impl SharedStore {
         assert!(!slices.is_empty(), "a shared store needs at least one replica");
         let total: u64 = slices.iter().sum();
         SharedStore {
-            core: Rc::new(RefCell::new(SharedCore {
+            core: Arc::new(Mutex::new(SharedCore {
                 inner: LocalStore::new(total, kv_bytes_per_token, policy),
                 slices: slices.to_vec(),
                 per_replica: vec![CacheStats::default(); slices.len()],
-                pending: Vec::new(),
-                seq: 0,
             })),
+            mailboxes: Arc::new(
+                slices.iter().map(|_| Mutex::new(Vec::new())).collect(),
+            ),
         }
     }
 
     /// Replica `i`'s handle onto the pool.
     pub fn handle(&self, replica: usize) -> SharedHandle {
         let slice = {
-            let core = self.core.borrow();
+            let core = self.core.lock().unwrap();
             assert!(replica < core.slices.len(), "replica {replica} out of range");
             core.slices[replica]
         };
         SharedHandle {
-            core: Rc::clone(&self.core),
+            core: Arc::clone(&self.core),
+            mailboxes: Arc::clone(&self.mailboxes),
             replica,
             slice_view: slice,
+            seq: 0,
         }
     }
 
     /// Apply every buffered write in `(time, replica, arrival)` order.
     /// The cluster driver calls this after advancing all replicas to a
     /// router instant (and once after the final drain), so reads at
-    /// those instants see a pool consistent with simulated time.
+    /// those instants see a pool consistent with simulated time. Must
+    /// not race replica advancement: the driver calls it only while no
+    /// worker thread is stepping an engine.
     pub fn sync(&self) {
-        let mut core = self.core.borrow_mut();
-        let mut ops = std::mem::take(&mut core.pending);
+        let mut ops: Vec<PendingOp> = Vec::new();
+        for mb in self.mailboxes.iter() {
+            ops.append(&mut mb.lock().unwrap());
+        }
         ops.sort_by(|a, b| {
             a.now_s
                 .total_cmp(&b.now_s)
                 .then(a.replica.cmp(&b.replica))
                 .then(a.seq.cmp(&b.seq))
         });
+        let mut core = self.core.lock().unwrap();
         for op in ops {
             core.apply(op);
         }
@@ -201,17 +230,17 @@ impl SharedStore {
     ///
     /// [`stats`]: CacheStore::stats
     pub fn fleet_stats(&self) -> CacheStats {
-        self.core.borrow().inner.stats()
+        self.core.lock().unwrap().inner.stats()
     }
 
     /// Pool capacity, bytes (sum of the per-replica slices).
     pub fn capacity_bytes(&self) -> u64 {
-        self.core.borrow().inner.capacity_bytes()
+        self.core.lock().unwrap().inner.capacity_bytes()
     }
 
     /// Entries resident in the pool.
     pub fn len(&self) -> usize {
-        self.core.borrow().inner.len()
+        self.core.lock().unwrap().inner.len()
     }
 
     /// Whether the pool holds no entries.
@@ -219,15 +248,15 @@ impl SharedStore {
         self.len() == 0
     }
 
-    /// Buffered writes not yet applied (tests).
+    /// Buffered writes not yet applied, across all mailboxes (tests).
     pub fn pending_len(&self) -> usize {
-        self.core.borrow().pending.len()
+        self.mailboxes.iter().map(|mb| mb.lock().unwrap().len()).sum()
     }
 
     /// Pool-level invariants: the inner store's books, slice/capacity
     /// agreement, and exact per-replica stats attribution.
     pub fn check_invariants(&self) -> anyhow::Result<()> {
-        self.core.borrow().check_invariants()
+        self.core.lock().unwrap().check_invariants()
     }
 }
 
@@ -236,21 +265,27 @@ impl SharedStore {
 /// module docs for which calls are buffered.
 #[derive(Debug)]
 pub struct SharedHandle {
-    core: Rc<RefCell<SharedCore>>,
+    core: Arc<Mutex<SharedCore>>,
+    mailboxes: Mailboxes,
     replica: usize,
     /// The replica's provisioned slice as of its *own* last resize —
     /// reported immediately (power draw and timeline samples follow a
     /// resize right away, like a private store), while the pool-level
     /// capacity change applies at the next sync.
     slice_view: u64,
+    /// Per-replica arrival-order tiebreak for the sync sort. Handle-local
+    /// (no shared counter) so buffering a write from a worker thread
+    /// touches nothing another replica can see; ordering across replicas
+    /// within one `(time)` key falls to the replica index, where a global
+    /// counter would add nothing.
+    seq: u64,
 }
 
 impl SharedHandle {
-    fn push(&self, now_s: f64, op: Op) {
-        let mut core = self.core.borrow_mut();
-        let seq = core.seq;
-        core.seq += 1;
-        core.pending.push(PendingOp {
+    fn push(&mut self, now_s: f64, op: Op) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.mailboxes[self.replica].lock().unwrap().push(PendingOp {
             now_s,
             replica: self.replica,
             seq,
@@ -264,7 +299,7 @@ impl CacheStore for SharedHandle {
     /// replica. In the lockstep protocol this runs only at router
     /// instants, right after a sync.
     fn lookup(&mut self, req: &Request, now_s: f64) -> HitInfo {
-        let mut core = self.core.borrow_mut();
+        let mut core = self.core.lock().unwrap();
         let info = core.inner.lookup(req, now_s);
         let per = &mut core.per_replica[self.replica];
         per.lookups += 1;
@@ -297,7 +332,7 @@ impl CacheStore for SharedHandle {
     }
 
     fn peek(&self, req: &Request) -> u32 {
-        self.core.borrow().inner.peek(req)
+        self.core.lock().unwrap().inner.peek(req)
     }
 
     /// Buffered: resizes this replica's slice of the pool at the next
@@ -311,21 +346,22 @@ impl CacheStore for SharedHandle {
         Vec::new()
     }
 
-    /// Drops the whole pool *and* any buffered writes (bench-phase
-    /// reset; not meaningful mid-run).
+    /// Drops the whole pool *and* every replica's buffered writes
+    /// (bench-phase reset; not meaningful mid-run).
     fn clear(&mut self) {
-        let mut core = self.core.borrow_mut();
-        core.pending.clear();
-        core.inner.clear();
+        for mb in self.mailboxes.iter() {
+            mb.lock().unwrap().clear();
+        }
+        self.core.lock().unwrap().inner.clear();
     }
 
     /// This replica's attributed share of the pool statistics.
     fn stats(&self) -> CacheStats {
-        self.core.borrow().per_replica[self.replica]
+        self.core.lock().unwrap().per_replica[self.replica]
     }
 
     fn check_invariants(&self) -> anyhow::Result<()> {
-        self.core.borrow().check_invariants()
+        self.core.lock().unwrap().check_invariants()
     }
 
     /// The replica's provisioned slice (not the pool total), so
@@ -337,16 +373,16 @@ impl CacheStore for SharedHandle {
 
     /// Pool-wide residency (entries are pooled, not owned per replica).
     fn used_bytes(&self) -> u64 {
-        self.core.borrow().inner.used_bytes()
+        self.core.lock().unwrap().inner.used_bytes()
     }
 
     /// Pool-wide entry count.
     fn len(&self) -> usize {
-        self.core.borrow().inner.len()
+        self.core.lock().unwrap().inner.len()
     }
 
     fn policy(&self) -> PolicyKind {
-        self.core.borrow().inner.policy()
+        self.core.lock().unwrap().inner.policy()
     }
 
     fn tier_bytes(&self) -> TierBytes {
@@ -506,6 +542,45 @@ mod tests {
         store.sync();
         assert_eq!(store.capacity_bytes(), 400);
         store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn parallel_mailbox_pushes_merge_identically() {
+        // The cluster driver's parallel advance moves each handle to its
+        // own worker thread between sync points. Replay one op stream
+        // buffered from the driver thread vs. buffered from per-replica
+        // threads: the merged `(time, replica, seq)` apply order — and so
+        // every pool byte — must match.
+        let ops = |h: &mut SharedHandle, r: usize| {
+            for step in 0..40u64 {
+                let t = step as f64 * 0.5 + r as f64 * 0.1;
+                let rq = req(step % 5 + r as u64 * 100, 0, 0, 50);
+                h.admit(&rq, 50, None, t);
+                if step % 10 == 0 {
+                    h.resize(200 + step, t);
+                }
+            }
+        };
+        let run = |parallel: bool| {
+            let store = SharedStore::new(1, PolicyKind::Lru, &[300, 300]);
+            let mut handles: Vec<SharedHandle> =
+                (0..2).map(|i| store.handle(i)).collect();
+            if parallel {
+                std::thread::scope(|s| {
+                    for (r, h) in handles.iter_mut().enumerate() {
+                        s.spawn(move || ops(h, r));
+                    }
+                });
+            } else {
+                for (r, h) in handles.iter_mut().enumerate() {
+                    ops(h, r);
+                }
+            }
+            store.sync();
+            store.check_invariants().unwrap();
+            (store.len(), store.capacity_bytes(), store.fleet_stats())
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

@@ -98,13 +98,19 @@ impl TierBytes {
 /// the *work* of [`admit`]/[`resize`] to their next sync instant; such
 /// calls return an empty eviction list and the stats catch up at sync.
 ///
+/// The `Send` supertrait lets the cluster driver fan replica engines
+/// (which own `Box<dyn CacheStore>`) out over scoped worker threads
+/// between lockstep sync points; shared-store handles satisfy it by
+/// buffering writes into their own mailbox and touching the pool only
+/// from the driver thread (see `cache::shared`).
+///
 /// [`lookup`]: CacheStore::lookup
 /// [`peek`]: CacheStore::peek
 /// [`admit`]: CacheStore::admit
 /// [`resize`]: CacheStore::resize
 /// [`capacity_bytes`]: CacheStore::capacity_bytes
 /// [`check_invariants`]: CacheStore::check_invariants
-pub trait CacheStore {
+pub trait CacheStore: Send {
     /// Look up the reusable prefix for a request and account the hit.
     /// Call exactly once per request, *before* [`CacheStore::admit`].
     fn lookup(&mut self, req: &Request, now_s: f64) -> HitInfo;

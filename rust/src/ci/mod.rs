@@ -48,13 +48,24 @@ impl CiSeries {
         self.hourly.iter().sum::<f64>() / self.hourly.len().max(1) as f64
     }
 
-    /// Minimum hourly CI.
+    /// Minimum hourly CI (0 when empty, matching [`mean`] — a bare fold
+    /// would return `+inf`, which the JSON writer turns into `null`).
+    ///
+    /// [`mean`]: CiSeries::mean
     pub fn min(&self) -> f64 {
+        if self.hourly.is_empty() {
+            return 0.0;
+        }
         self.hourly.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
-    /// Maximum hourly CI.
+    /// Maximum hourly CI (0 when empty, matching [`mean`]).
+    ///
+    /// [`mean`]: CiSeries::mean
     pub fn max(&self) -> f64 {
+        if self.hourly.is_empty() {
+            return 0.0;
+        }
         self.hourly.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -98,5 +109,14 @@ mod tests {
         assert_eq!(s.min(), 10.0);
         assert_eq!(s.max(), 30.0);
         assert_eq!(s.tail(2), &[20.0, 30.0]);
+    }
+
+    #[test]
+    fn empty_series_extrema_stay_finite() {
+        let s = CiSeries { grid: Grid::Fr, hourly: vec![] };
+        assert!(s.is_empty());
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
     }
 }

@@ -34,15 +34,23 @@
 //!
 //! Everything stays deterministic: one arrival stream, one router, and
 //! per-replica seeded engines — replaying a [`ClusterSpec`] reproduces
-//! the fleet table byte-for-byte regardless of thread count (cluster
-//! cells parallelize across the scenario matrix, never within a cell).
+//! the fleet table byte-for-byte regardless of thread count. Cluster
+//! cells parallelize both across the scenario matrix *and* within a
+//! cell: [`ClusterSpec::threads`] fans the lockstep replica advance out
+//! over a persistent scoped worker pool between sync points (the
+//! replicas are independent over each window; `SharedStore` writes are
+//! buffered per replica and applied in simulated-time order at sync, so
+//! thread count changes wall-clock only — the thread-invariance tests
+//! pin this byte-for-byte).
 //!
 //! The scenario layer sweeps this via [`crate::scenario::ClusterVariant`];
 //! the CLI exposes it as `greencache cluster`.
 
+mod parallel;
 mod router;
 mod sim;
 
+pub use parallel::effective_threads;
 pub use router::{
     CarbonGreedy, LeastLoaded, ReplicaView, RoundRobin, Router, RouterPolicy, Weighted,
 };

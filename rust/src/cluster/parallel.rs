@@ -1,0 +1,253 @@
+//! Persistent scoped worker pool for parallel lockstep replica stepping.
+//!
+//! [`crate::cluster::ClusterSim::run`] advances every replica engine to
+//! the same arrival instant between sync points. The replicas are
+//! independent over that window — each engine touches only its own
+//! state, and a shared-store handle only its own mailbox (see
+//! `cache::shared`) — so the advance is an embarrassingly parallel
+//! for-each over replica indices. The matrix runner's
+//! spawn-per-invocation scoped-thread pattern is too slow here (a fleet
+//! run has tens of thousands of sync windows, and a thread spawn costs
+//! more than a typical window's work), so this pool spawns its workers
+//! **once** per fleet run and coordinates rounds with two barriers:
+//!
+//! ```text
+//! driver: publish job + item count, reset the work counter
+//!         start barrier ─────────────────────────────┐
+//! all:    claim indices via fetch_add, run job(i)    │  one round
+//!         end barrier ───────────────────────────────┘
+//! driver: back to exclusive access (sync pools, route, inject)
+//! ```
+//!
+//! The driver participates in every round, so `threads` counts it. Work
+//! is claimed dynamically (an atomic next-index counter, same idiom as
+//! [`crate::scenario::MatrixRunner`]); that is deterministic because a
+//! round's items are mutually independent — which thread advances a
+//! replica can change only wall-clock, never bytes. Both barrier waits
+//! are full synchronization points, so the driver's pre-round writes
+//! happen-before the workers' reads and every worker's writes
+//! happen-before the driver's post-round reads.
+
+use std::any::Any;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+/// One round's work: applied to each index in `0..count`, each exactly
+/// once. `'static` because rounds hand shared access to driver-owned
+/// state through raw pointers (see [`SyncPtr`]), not borrows.
+type Job = Arc<dyn Fn(usize) + Send + Sync + 'static>;
+
+/// A raw pointer into driver-owned storage, asserted shareable so a
+/// round's job can reach `items[i]` from a worker thread.
+///
+/// # Safety protocol
+///
+/// The pointee outlives the round ([`Pool::round`] does not return until
+/// every item is done), the work counter hands each index to exactly one
+/// thread, and the driver touches the storage only outside rounds — so
+/// the `&mut` each claimant forms is unaliased. Constructing one is a
+/// promise to use it only under that protocol.
+pub(crate) struct SyncPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SyncPtr<T> {}
+unsafe impl<T> Sync for SyncPtr<T> {}
+
+impl<T> Clone for SyncPtr<T> {
+    fn clone(&self) -> Self {
+        SyncPtr(self.0)
+    }
+}
+impl<T> Copy for SyncPtr<T> {}
+
+/// Shared coordination state for one fleet run's worker pool.
+pub(crate) struct Pool {
+    /// The current round's job; `None` tells workers to exit.
+    job: Mutex<Option<Job>>,
+    /// Items in the current round.
+    count: AtomicUsize,
+    /// Next unclaimed item index.
+    next: AtomicUsize,
+    /// Round entry: job/count/next are published before it.
+    start: Barrier,
+    /// Round exit: all items done, worker writes visible to the driver.
+    end: Barrier,
+    /// First panic payload from any thread's job, re-thrown by the
+    /// driver after the round (a raw panic inside a round would strand
+    /// the other threads at the end barrier).
+    panicked: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Pool {
+    /// A pool of `threads` total participants (the driver plus
+    /// `threads - 1` spawned workers).
+    pub fn new(threads: usize) -> Self {
+        assert!(threads >= 2, "a pool below 2 threads is the sequential path");
+        Pool {
+            job: Mutex::new(None),
+            count: AtomicUsize::new(0),
+            next: AtomicUsize::new(0),
+            start: Barrier::new(threads),
+            end: Barrier::new(threads),
+            panicked: Mutex::new(None),
+        }
+    }
+
+    /// Worker body: `scope.spawn(|| pool.work())` once per non-driver
+    /// thread. Returns when [`Pool::shutdown`] runs.
+    pub fn work(&self) {
+        loop {
+            self.start.wait();
+            let job = self.job.lock().unwrap().clone();
+            let Some(job) = job else { return };
+            self.run_items(&job);
+            self.end.wait();
+        }
+    }
+
+    /// Run `job(i)` for every `i < count` across all threads, the caller
+    /// included. Returns once every item completed; re-throws the first
+    /// panic any item raised.
+    pub fn round(&self, count: usize, job: Job) {
+        *self.job.lock().unwrap() = Some(Arc::clone(&job));
+        self.count.store(count, Ordering::Relaxed);
+        self.next.store(0, Ordering::Relaxed);
+        self.start.wait();
+        self.run_items(&job);
+        self.end.wait();
+        if let Some(p) = self.panicked.lock().unwrap().take() {
+            panic::resume_unwind(p);
+        }
+    }
+
+    /// Release the workers (parked at the start barrier) to exit. The
+    /// driver must call this before leaving the thread scope — including
+    /// on unwind, or the scope's implicit join deadlocks.
+    pub fn shutdown(&self) {
+        *self.job.lock().unwrap() = None;
+        self.start.wait();
+    }
+
+    fn run_items(&self, job: &Job) {
+        let count = self.count.load(Ordering::Relaxed);
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= count {
+                break;
+            }
+            if let Err(p) = panic::catch_unwind(AssertUnwindSafe(|| job(i))) {
+                let mut slot = self.panicked.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Run `f(i)` for every `i < count`: inline when `pool` is `None` (the
+/// sequential path — `threads 1`, or a 1-replica fleet), as a pool round
+/// otherwise. One call site, byte-identical results either way.
+pub(crate) fn for_each(
+    pool: Option<&Pool>,
+    count: usize,
+    f: impl Fn(usize) + Send + Sync + 'static,
+) {
+    match pool {
+        None => {
+            for i in 0..count {
+                f(i);
+            }
+        }
+        Some(p) => p.round(count, Arc::new(f)),
+    }
+}
+
+/// Resolve a `threads` knob (0 = one per available core) against the
+/// fleet size: never more threads than replicas, never fewer than 1.
+pub fn effective_threads(threads: usize, n_replicas: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let t = if threads == 0 { hw } else { threads };
+    t.clamp(1, n_replicas.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn with_pool(threads: usize, f: impl FnOnce(&Pool)) {
+        let pool = Pool::new(threads);
+        std::thread::scope(|scope| {
+            for _ in 1..threads {
+                scope.spawn(|| pool.work());
+            }
+            let r = panic::catch_unwind(AssertUnwindSafe(|| f(&pool)));
+            pool.shutdown();
+            if let Err(p) = r {
+                panic::resume_unwind(p);
+            }
+        });
+    }
+
+    #[test]
+    fn every_index_runs_exactly_once_per_round() {
+        with_pool(4, |pool| {
+            let mut hits = vec![0u64; 100];
+            let ptr = SyncPtr(hits.as_mut_ptr());
+            for _ in 0..50 {
+                pool.round(
+                    hits.len(),
+                    Arc::new(move |i| unsafe { *ptr.0.add(i) += 1 }),
+                );
+            }
+            assert!(hits.iter().all(|&h| h == 50), "{hits:?}");
+        });
+    }
+
+    #[test]
+    fn rounds_synchronize_with_driver_mutation_between_them() {
+        // The driver mutates the storage between rounds (what the
+        // cluster driver does with router injects); each round must see
+        // the previous round's writes plus the driver's.
+        with_pool(3, |pool| {
+            let mut xs = vec![0u64; 16];
+            let ptr = SyncPtr(xs.as_mut_ptr());
+            for step in 0..20u64 {
+                pool.round(xs.len(), Arc::new(move |i| unsafe { *ptr.0.add(i) += 2 }));
+                for x in xs.iter_mut() {
+                    *x += 1; // exclusive access again after the round
+                }
+                assert!(xs.iter().all(|&x| x == (step + 1) * 3));
+            }
+        });
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_driver_round() {
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            with_pool(2, |pool| {
+                pool.round(
+                    8,
+                    Arc::new(|i| {
+                        if i == 5 {
+                            panic!("boom");
+                        }
+                    }),
+                );
+            });
+        }));
+        assert!(result.is_err(), "the item panic must surface");
+    }
+
+    #[test]
+    fn effective_threads_clamps_to_fleet_and_cores() {
+        assert_eq!(effective_threads(1, 8), 1);
+        assert_eq!(effective_threads(4, 2), 2);
+        assert_eq!(effective_threads(4, 8), 4);
+        assert!(effective_threads(0, 64) >= 1);
+        assert_eq!(effective_threads(3, 0), 1);
+    }
+}

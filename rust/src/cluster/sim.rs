@@ -19,6 +19,7 @@ use crate::sim::{
 };
 use crate::workload::ArrivalGen;
 
+use super::parallel::{effective_threads, for_each, Pool, SyncPtr};
 use super::router::{ReplicaView, Router, RouterPolicy};
 
 /// The canonical `FR+ES+MISO`-style grid-list label, shared by
@@ -119,6 +120,14 @@ pub struct ClusterSpec {
     /// every replica's cache size. Only meaningful for adaptive
     /// baselines — fixed-capacity fleets have nothing to plan.
     pub fleet: FleetPolicy,
+    /// Threads for the lockstep replica advance (`greencache cluster
+    /// --threads`): 1 (the default) steps replicas sequentially, N > 1
+    /// fans each advance-to-arrival window out over a persistent worker
+    /// pool, 0 uses one thread per available core. Capped at the
+    /// replica count. Results are byte-identical at any setting — only
+    /// wall-clock changes (see [`crate::cluster::effective_threads`] and
+    /// the module docs).
+    pub threads: usize,
 }
 
 impl ClusterSpec {
@@ -140,6 +149,7 @@ impl ClusterSpec {
             stepping: Stepping::default(),
             cache: CacheVariant::Local,
             fleet: FleetPolicy::PerReplica,
+            threads: 1,
         }
     }
 
@@ -369,6 +379,16 @@ struct Rep {
     /// signal in [`FleetObservation`]).
     routed_by_interval: Vec<usize>,
 }
+
+// The worker pool moves `&mut Rep` (advance) and whole `Rep`s plus their
+// drained results (finish) across threads through raw pointers, which
+// `SyncPtr` unconditionally asserts Send for — so prove the payloads
+// really are Send where the compiler can see it.
+const _: fn() = || {
+    fn is_send<T: Send>() {}
+    is_send::<Rep>();
+    is_send::<(ReplicaSpec, usize, Vec<f64>, SimResult, Box<dyn CacheStore>)>();
+};
 
 /// Advance one replica's engine to `t` against its own CI trace
 /// (field-disjoint borrows keep this a free function).
@@ -671,7 +691,37 @@ impl ClusterSim {
     }
 
     /// Run the fleet to the horizon and aggregate.
+    ///
+    /// With [`ClusterSpec::threads`] above 1 the lockstep replica
+    /// advance (and the final drain) fan out over a persistent worker
+    /// pool; everything the replicas share — pool sync, fleet-controller
+    /// firing, routing, injection — stays on this thread, between
+    /// rounds. Byte-identical to sequential stepping at any thread
+    /// count.
     pub fn run(self) -> ClusterResult {
+        let threads = effective_threads(self.spec.threads, self.reps.len());
+        if threads <= 1 {
+            return self.run_with(None);
+        }
+        let pool = Pool::new(threads);
+        std::thread::scope(|scope| {
+            for _ in 1..threads {
+                scope.spawn(|| pool.work());
+            }
+            // Shut the pool down even on unwind: the scope joins its
+            // workers, which otherwise wait forever at the start barrier.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.run_with(Some(&pool))
+            }));
+            pool.shutdown();
+            match result {
+                Ok(r) => r,
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        })
+    }
+
+    fn run_with(self, pool: Option<&Pool>) -> ClusterResult {
         let ClusterSim {
             spec,
             mut reps,
@@ -730,10 +780,20 @@ impl ClusterSim {
         let mut next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
         while next_arrival < horizon_s {
             // Lockstep: every replica reaches the arrival instant before
-            // the router reads queues and caches.
-            for rep in reps.iter_mut() {
-                advance(rep, base_hour, next_arrival);
-            }
+            // the router reads queues and caches. Replicas are mutually
+            // independent over this window (engines draw no randomness;
+            // shared-store writes go to per-replica mailboxes), so the
+            // advance fans out over the pool.
+            let t = next_arrival;
+            let reps_ptr = SyncPtr(reps.as_mut_ptr());
+            for_each(pool, reps.len(), move |i| {
+                // SAFETY: the round hands index i to exactly one thread
+                // and `reps` is untouched by this (driver) thread until
+                // for_each returns, so the &mut is unaliased; the Vec is
+                // not resized while the pointer lives.
+                let rep = unsafe { &mut *reps_ptr.0.add(i) };
+                advance(rep, base_hour, t);
+            });
             // Shared pool: apply the window's buffered writes in
             // simulated-time order, so the router's peek and the chosen
             // replica's lookup read a pool consistent with this instant.
@@ -813,24 +873,38 @@ impl ClusterSim {
         // controller no longer actuates — replicas drain independently,
         // so no fleet-consistent instant exists past the horizon (the
         // `control` module documents this edge of the timing contract).
-        let finished: Vec<(ReplicaSpec, usize, Vec<f64>, SimResult, Box<dyn CacheStore>)> =
-            reps.into_iter()
-                .map(|rep| {
-                    let Rep {
-                        spec: rspec,
-                        engine,
-                        mut recorder,
-                        ci,
-                        routed,
-                        ..
-                    } = rep;
-                    let ci_slice: &[f64] = &ci;
-                    let last = ci_slice.len() - 1;
-                    let ci_fn = move |h: usize| ci_slice[(base_hour + h).min(last)];
-                    let (sim, cache) = engine.finish(horizon_s, &ci_fn, &mut recorder);
-                    (rspec, routed, ci, sim, cache)
-                })
-                .collect();
+        type Drained = (ReplicaSpec, usize, Vec<f64>, SimResult, Box<dyn CacheStore>);
+        let n = reps.len();
+        let mut slots: Vec<Option<Rep>> = reps.into_iter().map(Some).collect();
+        let mut drained: Vec<Option<Drained>> = (0..n).map(|_| None).collect();
+        let slots_ptr = SyncPtr(slots.as_mut_ptr());
+        let drained_ptr = SyncPtr(drained.as_mut_ptr());
+        for_each(pool, n, move |i| {
+            // SAFETY: same round protocol as the advance — index i goes
+            // to exactly one thread, and the driver reads `slots` /
+            // `drained` only after for_each returns.
+            let rep = unsafe { &mut *slots_ptr.0.add(i) }
+                .take()
+                .expect("each slot is drained exactly once");
+            let Rep {
+                spec: rspec,
+                engine,
+                mut recorder,
+                ci,
+                routed,
+                ..
+            } = rep;
+            let ci_slice: &[f64] = &ci;
+            let last = ci_slice.len() - 1;
+            let ci_fn = move |h: usize| ci_slice[(base_hour + h).min(last)];
+            let (sim, cache) = engine.finish(horizon_s, &ci_fn, &mut recorder);
+            unsafe { *drained_ptr.0.add(i) = Some((rspec, routed, ci, sim, cache)) };
+        });
+        drop(slots);
+        let finished: Vec<Drained> = drained
+            .into_iter()
+            .map(|d| d.expect("every replica drained"))
+            .collect();
         if let Some(pool) = &shared {
             pool.sync();
         }
@@ -1263,6 +1337,91 @@ mod tests {
         let a = r.replicas[0].routed as i64;
         let b = r.replicas[1].routed as i64;
         assert!((a - b).abs() <= 1, "weighted default split {a}/{b}");
+    }
+
+    /// Bit-exact equality of two fleet results: headline aggregates,
+    /// per-replica tables, cache stats and the full interval timeline.
+    /// f64s are compared through their `Debug` form, which is shortest-
+    /// roundtrip and therefore distinguishes every bit pattern.
+    fn assert_identical(a: &ClusterResult, b: &ClusterResult, ctx: &str) {
+        assert_eq!(a.completed, b.completed, "{ctx}: completed");
+        assert_eq!(a.table(), b.table(), "{ctx}: table");
+        assert_eq!(
+            format!("{:?}", a.total_carbon_g),
+            format!("{:?}", b.total_carbon_g),
+            "{ctx}: carbon"
+        );
+        assert_eq!(
+            format!("{:?}", a.mean_ttft_s),
+            format!("{:?}", b.mean_ttft_s),
+            "{ctx}: ttft"
+        );
+        assert_eq!(a.hours.len(), b.hours.len(), "{ctx}: timeline length");
+        for (x, y) in a.hours.iter().zip(&b.hours) {
+            assert_eq!(
+                format!("{x:?}"),
+                format!("{y:?}"),
+                "{ctx}: timeline hour {}",
+                x.hour
+            );
+        }
+        for (x, y) in a.replicas.iter().zip(&b.replicas) {
+            assert_eq!(x.cache_stats, y.cache_stats, "{ctx}: cache stats");
+            assert_eq!(x.routed, y.routed, "{ctx}: routed");
+            assert_eq!(x.sim.iterations, y.sim.iterations, "{ctx}: iterations");
+        }
+    }
+
+    #[test]
+    fn parallel_stepping_is_thread_invariant_for_every_cache_backend() {
+        // The tentpole determinism contract: 1 vs N advance threads must
+        // produce byte-identical ClusterResults on all three backends.
+        // Shared is the hard case (pool sync ordering across mailboxes),
+        // so the rate exceeds one replica's capacity to keep requests
+        // bouncing between replicas.
+        for cache in CacheVariant::all() {
+            let mk = |threads: usize| {
+                let mut spec = fr_miso(RouterPolicy::CarbonGreedy);
+                spec.hours = 2;
+                spec.fixed_rps = Some(1.2);
+                spec.cache = cache;
+                spec.threads = threads;
+                run(&spec)
+            };
+            let seq = mk(1);
+            for threads in [2usize, 4, 8] {
+                let par = mk(threads);
+                assert_identical(
+                    &seq,
+                    &par,
+                    &format!("cache={} threads={threads}", cache.name()),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_stepping_is_thread_invariant_under_the_fleet_planner() {
+        // Adaptive 4-replica fleet under the joint planner: controller
+        // resizes and router-weight updates ride the same sync points
+        // the parallel advance respects.
+        let mk = |threads: usize| {
+            let mut spec = ClusterSpec::homogeneous(
+                Model::Llama70B,
+                Task::Conversation,
+                &[Grid::Fr, Grid::Es, Grid::Pjm, Grid::Miso],
+                RouterPolicy::Weighted,
+            );
+            spec.hours = 2;
+            spec.fixed_rps = Some(0.5);
+            spec.fleet = FleetPolicy::GreenCacheFleet;
+            spec.threads = threads;
+            run(&spec)
+        };
+        let seq = mk(1);
+        for threads in [2usize, 4, 0] {
+            assert_identical(&seq, &mk(threads), &format!("planner threads={threads}"));
+        }
     }
 
     #[test]

@@ -21,12 +21,16 @@ use crate::cache::{
     KV_BYTES_PER_TOKEN_70B,
 };
 use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
+use crate::ci::Grid;
+use crate::cluster::{run_cluster, ClusterSpec, RouterPolicy};
 use crate::metrics::Slo;
 use crate::rng::Rng;
 use crate::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig, Stepping};
 use crate::util::bench::{black_box, write_json, Bench};
 use crate::util::json::Json;
 use crate::workload::{ConversationGen, ConversationParams, Request, TaskKind};
+
+use super::{Model, ProfileStore, Task};
 
 /// The decode-heavy day-scale scenario both stepping modes replay: long
 /// assistant replies (lognormal mean ≈ 630 output tokens) at a high
@@ -164,11 +168,142 @@ pub fn sim_report(quick: bool) -> Json {
         ("reference", mode_json(ref_wall, ref_completed, ref_iters)),
         ("fast_forward", mode_json(ff_wall, ff_completed, ff_iters)),
         ("speedup", Json::Num(speedup)),
+        ("fleet", fleet_report(quick)),
     ])
 }
 
 /// Schema tag stamped into every report (bump when fields change).
-pub const BENCH_SCHEMA: &str = "greencache-bench-v1";
+/// v2 added the `fleet` section to `BENCH_SIM.json`: sequential-vs-
+/// parallel lockstep fleet stepping over a replicas × threads grid.
+pub const BENCH_SCHEMA: &str = "greencache-bench-v2";
+
+/// The fleet-stepping scenario: one shared-pool fleet of N replicas
+/// spread round-robin over four grids, carbon-greedy routing, load
+/// scaled with the fleet so per-replica work stays constant as the
+/// replica axis grows. The same cell runs once per thread count; the
+/// report asserts the outcomes are identical (the thread-invariance
+/// contract) and records wall-clock per run.
+#[derive(Debug, Clone)]
+pub struct FleetBenchConfig {
+    /// Fleet sizes to sweep (16+ is the headline cell).
+    pub replicas: Vec<usize>,
+    /// Thread counts to run each fleet under (1 = the sequential
+    /// baseline every speedup is measured against).
+    pub threads: Vec<usize>,
+    /// Simulated horizon per run, hours.
+    pub hours: usize,
+    /// Fixed fleet arrival rate per replica, rps.
+    pub rps_per_replica: f64,
+}
+
+impl FleetBenchConfig {
+    /// The standard sweep; `quick` shrinks the grid for CI smoke runs
+    /// while keeping the 16-replica headline cell.
+    pub fn lockstep(quick: bool) -> Self {
+        FleetBenchConfig {
+            replicas: if quick { vec![16] } else { vec![16, 32, 64] },
+            threads: if quick { vec![1, 4] } else { vec![1, 2, 4, 8] },
+            hours: 2,
+            rps_per_replica: 0.2,
+        }
+    }
+}
+
+/// Run one fleet cell under `threads` and return `(digest, wall_s)`.
+/// The digest captures the bit-exact outcome (`Debug` floats are
+/// shortest-roundtrip), so equal digests mean byte-identical results.
+pub fn run_fleet_cell(
+    cfg: &FleetBenchConfig,
+    n_replicas: usize,
+    threads: usize,
+    profiles: &mut ProfileStore,
+) -> (String, f64) {
+    const GRIDS: [Grid; 4] = [Grid::Fr, Grid::Es, Grid::Pjm, Grid::Miso];
+    let grids: Vec<Grid> = (0..n_replicas).map(|i| GRIDS[i % GRIDS.len()]).collect();
+    let mut spec = ClusterSpec::homogeneous(
+        Model::Llama70B,
+        Task::Conversation,
+        &grids,
+        RouterPolicy::CarbonGreedy,
+    )
+    .quick();
+    spec.hours = cfg.hours;
+    spec.cache = CacheVariant::Shared;
+    spec.fixed_rps = Some(cfg.rps_per_replica * n_replicas as f64);
+    spec.threads = threads;
+    let t0 = Instant::now();
+    let r = run_cluster(&spec, profiles);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let digest = format!(
+        "completed={} carbon={:?} hit={:?} ttft={:?}",
+        r.completed, r.total_carbon_g, r.token_hit_rate, r.mean_ttft_s
+    );
+    (digest, wall_s)
+}
+
+/// Measure lockstep fleet stepping over the replicas × threads grid and
+/// return the `fleet` section of `BENCH_SIM.json`. Panics if any thread
+/// count changes the fleet outcome — the bench doubles as a
+/// thread-invariance smoke check. `speedup` is the headline: the
+/// largest fleet's sequential wall over its best parallel wall.
+pub fn fleet_report(quick: bool) -> Json {
+    let cfg = FleetBenchConfig::lockstep(quick);
+    let mut profiles = ProfileStore::new(true);
+    let mut cells = Vec::new();
+    let mut headline_speedup = 0.0;
+    for &n in &cfg.replicas {
+        let mut runs = Vec::new();
+        let mut seq_wall = 0.0;
+        let mut seq_digest = String::new();
+        let mut best = (0usize, f64::INFINITY);
+        for &t in &cfg.threads {
+            let (digest, wall_s) = run_fleet_cell(&cfg, n, t, &mut profiles);
+            println!(
+                "bench sim/fleet_lockstep[{n:>3} replicas x {t} threads] wall={wall_s:>8.3}s"
+            );
+            if t == 1 {
+                seq_wall = wall_s;
+                seq_digest = digest.clone();
+            } else {
+                assert_eq!(
+                    digest, seq_digest,
+                    "{n}-replica fleet diverged at {t} threads"
+                );
+                if wall_s < best.1 {
+                    best = (t, wall_s);
+                }
+            }
+            runs.push(Json::obj(vec![
+                ("threads", Json::Num(t as f64)),
+                ("wall_s", Json::Num(wall_s)),
+            ]));
+        }
+        let speedup = if best.1.is_finite() {
+            seq_wall / best.1.max(1e-9)
+        } else {
+            1.0
+        };
+        println!(
+            "    -> {n} replicas: parallel speedup {speedup:.2}x (best at {} threads)",
+            best.0
+        );
+        headline_speedup = speedup; // replicas sweep ascends; last = largest
+        cells.push(Json::obj(vec![
+            ("replicas", Json::Num(n as f64)),
+            ("runs", Json::Array(runs)),
+            ("speedup", Json::Num(speedup)),
+            ("best_threads", Json::Num(best.0 as f64)),
+        ]));
+    }
+    Json::obj(vec![
+        ("router", Json::Str("carbon-greedy".into())),
+        ("cache", Json::Str("shared".into())),
+        ("hours", Json::Num(cfg.hours as f64)),
+        ("rps_per_replica", Json::Num(cfg.rps_per_replica)),
+        ("cells", Json::Array(cells)),
+        ("speedup", Json::Num(headline_speedup)),
+    ])
+}
 
 fn churn_request(ctx: u64, version: u32, context: u32) -> Request {
     Request {
@@ -340,6 +475,23 @@ mod tests {
         let b = run_day_scale(&cfg, Stepping::FastForward);
         assert_eq!(a, b);
         assert!(a.0 > 0, "bench scenario must complete requests");
+    }
+
+    #[test]
+    fn fleet_cell_digest_is_thread_invariant() {
+        // Tiny fleet so the test stays fast; the full replicas × threads
+        // grid runs in the bench report itself.
+        let cfg = FleetBenchConfig {
+            replicas: vec![4],
+            threads: vec![1, 2],
+            hours: 1,
+            rps_per_replica: 0.3,
+        };
+        let mut profiles = ProfileStore::new(true);
+        let (seq, _) = run_fleet_cell(&cfg, 4, 1, &mut profiles);
+        let (par, _) = run_fleet_cell(&cfg, 4, 2, &mut profiles);
+        assert_eq!(seq, par, "parallel stepping changed the fleet outcome");
+        assert!(seq.contains("completed="));
     }
 
     #[test]

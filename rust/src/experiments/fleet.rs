@@ -22,6 +22,12 @@
 //! replica is still served — which is the cross-replica sharing item
 //! from the ROADMAP made measurable.
 //!
+//! The **scale-sweep section** raises the replica axis to 16/32/64
+//! (cycling the four-grid mix) with each cell's lockstep stepping fanned
+//! out over every core (`ScenarioSpec::threads = 0`) — byte-identical
+//! to sequential stepping, but fast enough to make 64-replica fleets a
+//! routine exhibit.
+//!
 //! The **fleet-planner section** compares the two fleet control planes
 //! ([`FleetPolicy`]) on GreenCache fleets: N independent per-replica
 //! controllers (each planning against an a-priori share of fleet load)
@@ -52,6 +58,24 @@ fn fleets() -> Vec<(&'static str, Vec<Grid>)> {
             vec![Grid::Fr, Grid::Es, Grid::Pjm, Grid::Miso],
         ),
     ]
+}
+
+/// The scale-sweep shapes: 16/32/64 replicas cycling the four-grid mix
+/// (quick keeps only the 16-replica cell). These are the fleets the
+/// parallel lockstep stepping exists for — sequential stepping makes
+/// them wall-clock-prohibitive at day scale.
+fn scale_fleets(quick: bool) -> Vec<(String, Vec<Grid>)> {
+    const CYCLE: [Grid; 4] = [Grid::Fr, Grid::Es, Grid::Pjm, Grid::Miso];
+    let sizes: &[usize] = if quick { &[16] } else { &[16, 32, 64] };
+    sizes
+        .iter()
+        .map(|&n| {
+            (
+                format!("{n}x(FR+ES+PJM+MISO)"),
+                (0..n).map(|i| CYCLE[i % CYCLE.len()]).collect(),
+            )
+        })
+        .collect()
 }
 
 /// The GreenLLM-style heterogeneous fleet: a 70B replica on the green
@@ -273,6 +297,64 @@ pub fn fleet(quick: bool) -> Csv {
             );
         }
     }
+
+    // Scale sweep: 16/32/64-replica shared-pool fleets under
+    // carbon-greedy routing, each cell stepped in parallel
+    // (`cell_threads = 0` = one worker per core) and run one cell at a
+    // time so the pool owns the machine. Parallel stepping is
+    // byte-identical to sequential, so these rows are comparable to any
+    // sequential rerun — the knob only buys back the wall-clock that
+    // makes 64 replicas feasible at all. Shorter horizon and fixed
+    // per-replica load keep per-replica work constant as the fleet
+    // grows.
+    println!("  -- scale sweep (parallel lockstep stepping) --");
+    let scale_hours = if quick { 2 } else { 6 };
+    let mut scale_specs = Vec::new();
+    for (_, grids) in scale_fleets(quick) {
+        scale_specs.extend(
+            base()
+                .baselines(&[Baseline::GreenCache])
+                .caches(&[CacheVariant::Shared])
+                .clusters(&[Some(ClusterVariant::new(
+                    &grids,
+                    RouterPolicy::CarbonGreedy,
+                ))])
+                .hours(scale_hours)
+                .fixed_rps(Some(0.2 * grids.len() as f64))
+                .cell_threads(0)
+                .expand(),
+        );
+    }
+    let scale = run_specs(&scale_specs, 1);
+    for c in &scale.cells {
+        let cv = c.spec.cluster.as_ref().expect("fleet cells only");
+        let fleet_label = format!("{}x(FR+ES+PJM+MISO)", cv.grids.len());
+        println!(
+            "  {:<20} {:<13} {:<11} {:<7} {:<11}: {:>8.3} g/req  SLO {:>5.1}%  hit {:>5.3}  cache {:>5.1} TB  ({} reqs)",
+            fleet_label,
+            cv.router.name(),
+            c.spec.baseline.name(),
+            c.spec.cache.name(),
+            c.spec.fleet.name(),
+            c.carbon_per_request_g,
+            c.slo_attainment * 100.0,
+            c.token_hit_rate,
+            c.mean_cache_tb,
+            c.completed,
+        );
+        csv.row(&[
+            fleet_label,
+            cv.router.name().into(),
+            c.spec.baseline.name().into(),
+            c.spec.cache.name().into(),
+            c.spec.fleet.name().into(),
+            format!("{:.4}", c.carbon_per_request_g),
+            format!("{:.4}", c.slo_attainment),
+            format!("{:.4}", c.token_hit_rate),
+            format!("{:.2}", c.mean_cache_tb),
+            c.completed.to_string(),
+        ]);
+    }
     csv
 }
 
@@ -289,5 +371,22 @@ mod tests {
         assert_eq!(shapes[0].1.len(), 1);
         assert_eq!(shapes[1].1.len(), 2);
         assert_eq!(shapes[2].1.len(), 4);
+    }
+
+    #[test]
+    fn scale_sweep_cycles_the_grid_mix() {
+        let full = scale_fleets(false);
+        assert_eq!(
+            full.iter().map(|(_, g)| g.len()).collect::<Vec<_>>(),
+            vec![16, 32, 64]
+        );
+        for (label, grids) in &full {
+            assert_eq!(*label, format!("{}x(FR+ES+PJM+MISO)", grids.len()));
+            // Round-robin over the four-grid mix, exactly balanced.
+            for chunk in grids.chunks(4) {
+                assert_eq!(chunk, &[Grid::Fr, Grid::Es, Grid::Pjm, Grid::Miso]);
+            }
+        }
+        assert_eq!(scale_fleets(true).len(), 1, "quick keeps the 16-cell");
     }
 }

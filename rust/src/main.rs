@@ -10,12 +10,15 @@
 //!                     [--task conv|doc04|doc07] [--baseline none|full|green]
 //!                     [--cache local|tiered|shared]
 //!                     [--fleet per-replica|green|all]
+//!                     [--threads N]   (lockstep replica stepping; 1 = sequential,
+//!                                      0 = one per core — byte-identical results)
 //!                     [--hours H] [--rps R] [--quick]
 //! greencache matrix   [--models 70b,8b] [--tasks conv,doc04,doc07]
 //!                     [--grids FR,ES,...] [--baselines none,full,green]
 //!                     [--policies lcs,lru] [--caches local,tiered,shared]
 //!                     [--cluster FR+MISO[@rr|jsq|greedy|weighted]]
 //!                     [--fleets per-replica,green]
+//!                     [--cell-threads N]   (within-cell replica stepping)
 //!                     [--hours H] [--threads N] [--seed S] [--quick]
 //! greencache profile  [--task conv|doc04|doc07] [--quick]
 //! greencache decide   [--grid ES] [--hour H]
@@ -328,6 +331,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
             spec.baseline = baseline;
             spec.cache = cache;
             spec.fleet = *fleet;
+            spec.threads = args.usize("threads", 1);
             spec.hours = args.usize("hours", 24);
             if quick {
                 spec = spec.quick();
@@ -456,7 +460,8 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         .fleets(&fleets)
         .hours(args.usize("hours", 24))
         .quick(args.bool("quick"))
-        .seed(args.usize("seed", 20_25) as u64);
+        .seed(args.usize("seed", 20_25) as u64)
+        .cell_threads(args.usize("cell-threads", 1));
     let specs = matrix.expand();
     anyhow::ensure!(!specs.is_empty(), "matrix expanded to zero cells");
 

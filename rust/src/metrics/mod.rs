@@ -73,8 +73,10 @@ impl LatencyStats {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples
-                .sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp, not partial_cmp().unwrap(): one NaN sample must
+            // not abort a whole matrix run. NaNs sort to the top, where
+            // only the extreme percentiles can see them.
+            self.samples.sort_unstable_by(f64::total_cmp);
             self.sorted = true;
         }
     }
@@ -112,8 +114,14 @@ impl LatencyStats {
         }
     }
 
-    /// Largest sample.
+    /// Largest sample (0 when empty, like [`mean`]; a `-inf` here would
+    /// serialize as `null` in bench/figure JSON).
+    ///
+    /// [`mean`]: LatencyStats::mean
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -285,6 +293,31 @@ mod tests {
         assert_eq!(x.len(), flat.len());
         assert_eq!(x.p50(), flat.p50());
         assert_eq!(x.mean(), flat.mean());
+    }
+
+    #[test]
+    fn empty_reservoir_is_finite() {
+        // Zero-completion cells (overload shedding, 0-budget replicas)
+        // read mean/max/attainment off an empty reservoir; all three must
+        // stay finite so the JSON serializer never coerces them to null.
+        let s = LatencyStats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.attainment(1.0), 1.0);
+        assert!(s.max().is_finite());
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_percentiles() {
+        let mut s = LatencyStats::new();
+        s.record(2.0);
+        s.record(f64::NAN);
+        s.record(1.0);
+        // total_cmp sorts the NaN above every real sample: the median of
+        // three is still a real value, and nothing aborts.
+        assert_eq!(s.p50(), 2.0);
+        assert!(s.percentile(100.0).is_nan());
+        assert_eq!(s.len(), 3);
     }
 
     #[test]

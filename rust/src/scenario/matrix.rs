@@ -70,6 +70,11 @@ pub struct Matrix {
     /// Fixed CI instead of the grid trace (fleet cells apply it to every
     /// replica, flattening the carbon-greedy router's CI signal).
     pub fixed_ci: Option<f64>,
+    /// Within-cell worker threads for fleet cells
+    /// ([`ScenarioSpec::threads`], `greencache matrix --cell-threads`):
+    /// 1 = sequential, 0 = one per core. Not an axis — a wall-clock knob
+    /// copied into every cell; results are byte-identical at any value.
+    pub cell_threads: usize,
 }
 
 impl Matrix {
@@ -90,6 +95,7 @@ impl Matrix {
             interval_s: 3600.0,
             fixed_rps: None,
             fixed_ci: None,
+            cell_threads: 1,
         }
     }
 
@@ -177,6 +183,13 @@ impl Matrix {
         self
     }
 
+    /// Set the within-cell worker threads for fleet cells (0 = one per
+    /// core). Wall-clock only — cell results are byte-identical.
+    pub fn cell_threads(mut self, t: usize) -> Self {
+        self.cell_threads = t;
+        self
+    }
+
     /// Number of cells the expansion will produce.
     pub fn len(&self) -> usize {
         self.models.len()
@@ -217,6 +230,7 @@ impl Matrix {
                                         spec.cache = cache;
                                         spec.cluster = cluster.clone();
                                         spec.fleet = fleet;
+                                        spec.threads = self.cell_threads;
                                         if self.quick {
                                             spec = spec.quick();
                                         }
@@ -341,6 +355,18 @@ mod tests {
             .all(|w| w[0].task != w[1].task || w[0].seed == w[1].seed));
         // Single-node cells survive untouched.
         assert_eq!(cells.iter().filter(|c| c.cluster.is_none()).count(), 8);
+    }
+
+    #[test]
+    fn cell_threads_copy_into_every_cell_without_multiplying() {
+        let m = small().cell_threads(4);
+        assert_eq!(m.len(), 8, "a knob, not an axis");
+        let cells = m.expand();
+        assert!(cells.iter().all(|c| c.threads == 4));
+        // Labels (and therefore goldens) never see the knob.
+        let seq: Vec<String> = small().expand().iter().map(|c| c.label()).collect();
+        let par: Vec<String> = cells.iter().map(|c| c.label()).collect();
+        assert_eq!(seq, par);
     }
 
     #[test]

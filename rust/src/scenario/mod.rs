@@ -141,6 +141,13 @@ pub struct ScenarioSpec {
     /// [`FleetPolicy::GreenCacheFleet`] planner. Single-node cells
     /// ignore it.
     pub fleet: FleetPolicy,
+    /// Worker threads for the *within-cell* lockstep replica advance of
+    /// a fleet cell ([`ClusterSpec::threads`]): 1 = sequential (the
+    /// default), N > 1 = a persistent pool, 0 = one per available core.
+    /// A wall-clock knob only — results are byte-identical at any value,
+    /// so it never appears in [`ScenarioSpec::label`] and goldens are
+    /// unaffected. Single-node cells ignore it.
+    pub threads: usize,
 }
 
 impl ScenarioSpec {
@@ -161,6 +168,7 @@ impl ScenarioSpec {
             cluster: None,
             cache: CacheVariant::Local,
             fleet: FleetPolicy::PerReplica,
+            threads: 1,
         }
     }
 
@@ -207,6 +215,7 @@ impl ScenarioSpec {
             stepping: crate::sim::Stepping::default(),
             cache: self.cache,
             fleet: self.fleet,
+            threads: self.threads,
         })
     }
 
@@ -424,6 +433,27 @@ mod tests {
             "{}",
             spec.label()
         );
+    }
+
+    #[test]
+    fn threads_lower_but_never_label() {
+        use crate::cluster::RouterPolicy;
+        let mut spec = ScenarioSpec::new(
+            Model::Llama70B,
+            Task::Conversation,
+            Grid::Es,
+            Baseline::GreenCache,
+        );
+        spec.cluster = Some(ClusterVariant::new(
+            &[Grid::Fr, Grid::Miso],
+            RouterPolicy::CarbonGreedy,
+        ));
+        assert_eq!(spec.to_cluster_spec().unwrap().threads, 1, "sequential default");
+        let base_label = spec.label();
+        spec.threads = 8;
+        assert_eq!(spec.to_cluster_spec().unwrap().threads, 8);
+        // A wall-clock knob must never shape golden labels.
+        assert_eq!(spec.label(), base_label);
     }
 
     #[test]

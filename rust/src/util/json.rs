@@ -314,13 +314,40 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn number(&mut self) -> anyhow::Result<Json> {
-        let start = self.pos;
-        while matches!(
-            self.peek(),
-            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
-        ) {
+    /// One or more ASCII digits; errors (pointing at `at`) if none.
+    fn digits(&mut self, at: usize) -> anyhow::Result<()> {
+        let before = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
             self.pos += 1;
+        }
+        anyhow::ensure!(self.pos > before, "bad number at {at}");
+        Ok(())
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        // RFC 8259 §6: `-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?`,
+        // scanned explicitly. A greedy scan delegating to f64::from_str
+        // would also take `+5`, `.5`, `5.`, `inf` — forms real parsers
+        // reject, so goldens written that way would not round-trip.
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        match self.peek() {
+            Some(b'0') => self.pos += 1, // a leading 0 takes no more digits
+            Some(b'1'..=b'9') => self.digits(start)?,
+            _ => anyhow::bail!("bad number at {start}"),
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            self.digits(start)?;
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            self.digits(start)?;
         }
         let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
         Ok(Json::Num(s.parse::<f64>().map_err(|_| {
@@ -415,6 +442,30 @@ mod tests {
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("{\"a\" 1}").is_err());
         assert!(Json::parse("nul").is_err());
+        // RFC 8259 number grammar: no leading '+', no bare '.5'/'5.',
+        // no leading zeros, exponents and fractions need digits.
+        assert!(Json::parse("+5").is_err());
+        assert!(Json::parse(".5").is_err());
+        assert!(Json::parse("5.").is_err());
+        assert!(Json::parse("[5.]").is_err());
+        assert!(Json::parse("-").is_err());
+        assert!(Json::parse("-.5").is_err());
+        assert!(Json::parse("01").is_err());
+        assert!(Json::parse("1e").is_err());
+        assert!(Json::parse("1e+").is_err());
+        assert!(Json::parse("1.2e5e").is_err());
+        assert!(Json::parse("inf").is_err());
+        assert!(Json::parse("NaN").is_err());
+    }
+
+    #[test]
+    fn accepts_rfc8259_number_forms() {
+        assert_eq!(Json::parse("0").unwrap(), Json::Num(0.0));
+        assert_eq!(Json::parse("-0").unwrap(), Json::Num(0.0));
+        assert_eq!(Json::parse("0.5").unwrap(), Json::Num(0.5));
+        assert_eq!(Json::parse("-0.5e-1").unwrap(), Json::Num(-0.05));
+        assert_eq!(Json::parse("10E2").unwrap(), Json::Num(1000.0));
+        assert_eq!(Json::parse("2e+3").unwrap(), Json::Num(2000.0));
     }
 
     #[test]

@@ -1,0 +1,160 @@
+//! Thread-invariance suite for parallel lockstep fleet stepping.
+//!
+//! `ClusterSpec::threads` fans the between-sync-point replica advance
+//! out over a persistent worker pool. The contract is that the knob
+//! changes wall-clock **only**: the full `ClusterResult` — fleet
+//! aggregates, per-replica outcomes, and every timeline sample — is
+//! byte-identical at any thread count, on every cache backend
+//! (per-replica local and tiered stores, and the fleet-level shared
+//! pool whose buffered writes are merge-sorted at sync). The tests pin
+//! that via the `Debug` rendering of the whole result: Rust's float
+//! formatting is shortest-roundtrip, so two results that render
+//! identically are bit-identical in every `f64`.
+//!
+//! Alongside rides the empty-reservoir regression: a fleet whose
+//! evaluated day completes nothing must report finite (zero) latency
+//! aggregates, and the JSON serializer must emit `0` — not the `null`
+//! that `fold(NEG_INFINITY, max)` leaked before the fix.
+
+use greencache::cache::CacheVariant;
+use greencache::ci::Grid;
+use greencache::cluster::{run_cluster, ClusterSpec, RouterPolicy};
+use greencache::control::FleetPolicy;
+use greencache::experiments::{Baseline, Model, ProfileStore, Task};
+use greencache::metrics::LatencyStats;
+use greencache::scenario::{run_specs, ClusterVariant, Matrix};
+use greencache::util::json::Json;
+
+/// A 4-replica mixed-grid fleet at a rate that saturates the green
+/// replicas, so requests spill over and conversations bounce between
+/// replicas — the regime where cross-replica write ordering (and
+/// therefore any parallelism bug) actually shows in the numbers.
+fn fleet_spec(cache: CacheVariant, threads: usize) -> ClusterSpec {
+    let mut spec = ClusterSpec::homogeneous(
+        Model::Llama70B,
+        Task::Conversation,
+        &[Grid::Fr, Grid::Es, Grid::Pjm, Grid::Miso],
+        RouterPolicy::CarbonGreedy,
+    )
+    .quick();
+    spec.baseline = Baseline::FullCache;
+    spec.hours = 2;
+    spec.fixed_rps = Some(1.5);
+    spec.cache = cache;
+    spec.threads = threads;
+    spec
+}
+
+#[test]
+fn every_cache_backend_is_thread_invariant() {
+    for cache in CacheVariant::all() {
+        let mut profiles = ProfileStore::new(true);
+        let sequential = run_cluster(&fleet_spec(cache, 1), &mut profiles);
+        assert!(sequential.completed > 0, "{} fleet served nothing", cache.name());
+        let want = format!("{sequential:?}");
+        for threads in [2, 4, 8] {
+            let parallel = run_cluster(&fleet_spec(cache, threads), &mut profiles);
+            assert_eq!(
+                format!("{parallel:?}"),
+                want,
+                "{} fleet diverged at {} threads",
+                cache.name(),
+                threads
+            );
+        }
+    }
+}
+
+#[test]
+fn fleet_planner_cells_are_thread_invariant() {
+    // The joint planner resizes caches and reweights the router every
+    // interval — controller actuation must survive parallel stepping
+    // too. `threads: 0` (one per core) is the CLI's recommended setting,
+    // so it is the one pinned here against sequential.
+    let mk = |threads: usize| {
+        let mut spec = fleet_spec(CacheVariant::Shared, threads);
+        spec.baseline = Baseline::GreenCache;
+        spec.router = RouterPolicy::Weighted;
+        spec.fleet = FleetPolicy::GreenCacheFleet;
+        spec
+    };
+    let mut profiles = ProfileStore::new(true);
+    let sequential = run_cluster(&mk(1), &mut profiles);
+    let parallel = run_cluster(&mk(0), &mut profiles);
+    assert!(sequential.completed > 0);
+    assert_eq!(
+        format!("{parallel:?}"),
+        format!("{sequential:?}"),
+        "planner fleet diverged under per-core threading"
+    );
+}
+
+#[test]
+fn matrix_cell_threads_leave_tables_unchanged() {
+    // The scenario layer's `cell_threads` knob must never show in the
+    // golden-pinned matrix table — same cells, same bytes.
+    let mk = |cell_threads: usize| {
+        let mut m = Matrix::new()
+            .models(&[Model::Llama70B])
+            .tasks(&[Task::Conversation])
+            .grids(&[Grid::Es])
+            .baselines(&[Baseline::FullCache])
+            .caches(&[CacheVariant::Local, CacheVariant::Shared])
+            .clusters(&[Some(ClusterVariant::new(
+                &[Grid::Fr, Grid::Miso],
+                RouterPolicy::CarbonGreedy,
+            ))])
+            .cell_threads(cell_threads);
+        m.hours = 2;
+        m.fixed_rps = Some(0.8);
+        m.expand()
+    };
+    let sequential = run_specs(&mk(1), 1);
+    let parallel = run_specs(&mk(2), 1);
+    assert_eq!(
+        parallel.table(),
+        sequential.table(),
+        "cell_threads changed the matrix table"
+    );
+}
+
+#[test]
+fn empty_fleet_metrics_stay_finite_and_serialize_as_zero() {
+    // A day with (essentially) no arrivals: nothing completes, every
+    // latency reservoir stays empty. Aggregates must come out finite...
+    let mut spec = fleet_spec(CacheVariant::Local, 2);
+    spec.fixed_rps = Some(1e-9);
+    spec.hours = 1;
+    let mut profiles = ProfileStore::new(true);
+    let r = run_cluster(&spec, &mut profiles);
+    assert_eq!(r.completed, 0, "1e-9 rps must complete nothing in an hour");
+    for (name, v) in [
+        ("carbon_per_request_g", r.carbon_per_request_g),
+        ("slo_attainment", r.slo_attainment),
+        ("token_hit_rate", r.token_hit_rate),
+        ("mean_ttft_s", r.mean_ttft_s),
+        ("mean_tpot_s", r.mean_tpot_s),
+    ] {
+        assert!(v.is_finite(), "{name} not finite on an empty fleet: {v}");
+    }
+    let table = r.table();
+    assert!(
+        !table.contains("NaN") && !table.contains("inf"),
+        "empty-fleet table leaked a non-finite value:\n{table}"
+    );
+
+    // ...and the bench/report JSON layer must emit `0`, not `null` (the
+    // serializer maps non-finite numbers to null, which is exactly how
+    // the old empty-reservoir max() = -inf escaped into reports).
+    let empty = LatencyStats::new();
+    let j = Json::obj(vec![
+        ("mean", Json::Num(empty.mean())),
+        ("max", Json::Num(empty.max())),
+        ("attainment", Json::Num(empty.attainment(1.0))),
+    ]);
+    let s = j.to_string();
+    assert!(
+        !s.contains("null"),
+        "empty latency stats serialized a null: {s}"
+    );
+}
