@@ -24,7 +24,7 @@ committed placeholders (repo root) and the freshly measured reports
 import json
 import sys
 
-SCHEMA = "greencache-bench-v2"
+SCHEMA = "greencache-bench-v3"
 REQUIRED = {
     "BENCH_SIM.json": [
         "bench", "config", "reference", "fast_forward", "speedup",
@@ -32,6 +32,10 @@ REQUIRED = {
     ],
     "BENCH_CACHE.json": [
         "bench", "cases", "group", "ops_per_case", "quick", "schema",
+        # v3: the policy x backend sweep (token hit rate + dispatch wall
+        # per cell) and the off-vs-green prefetcher comparison. Null
+        # placeholders record-but-don't-gate, like the fleet section.
+        "policy_backend", "prefetch",
     ],
 }
 

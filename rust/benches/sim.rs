@@ -27,6 +27,7 @@ fn day(hours: usize, rps: f64, cache_tb: f64, warm: usize, seed: u64) -> (usize,
         hours,
         seed,
         stepping: Stepping::FastForward,
+        prefetch: greencache::cache::PrefetchMode::Off,
     };
     let mut wl = ConversationGen::new(ConversationParams::default(), seed);
     let mut cache = LocalStore::new(

@@ -1,0 +1,715 @@
+//! Ghost-list adaptive eviction state: ARC, SLRU and 2Q.
+//!
+//! The four static policies rank live entries only; the adaptive family
+//! additionally remembers *recently evicted* keys in byte-bounded ghost
+//! lists and uses re-references to them to steer the split between a
+//! recency list and a frequency list. All three flavours share one state
+//! machine — two resident lists ordered by a monotone stamp, plus up to
+//! two ghost lists — and differ only in their transition rules:
+//!
+//! * **ARC** (adaptive replacement cache): residents split into T1
+//!   (seen once) and T2 (seen twice+); evicted keys go to ghosts B1/B2.
+//!   A hit in B1 grows the adaptation target `p` (favour recency), a hit
+//!   in B2 shrinks it (favour frequency) — byte-weighted, so one large
+//!   ghost hit moves `p` as much as many small ones.
+//! * **SLRU** (segmented LRU): a probationary segment and a protected
+//!   segment capped at a fraction of capacity; a probationary hit
+//!   promotes, protected overflow demotes back to probationary MRU. No
+//!   ghosts, no tunable — the segmentation itself is the scan shield.
+//! * **2Q**: new keys enter a FIFO admission queue (A1in); only keys
+//!   re-referenced *after* eviction (tracked in the A1out ghost) enter
+//!   the long-term LRU main queue (Am). One-shot scans therefore flow
+//!   through A1in without ever touching Am.
+//!
+//! Degenerate configurations double as correctness oracles (the same
+//! pattern `Stepping::Reference` plays for the engine): ARC with the
+//! adaptation pinned ([`AdaptiveIndex::arc_pinned`]) and SLRU with a
+//! single segment ([`AdaptiveIndex::slru_single_segment`]) both reduce
+//! exactly to LRU, and the oracle tests in `cache` replay seeded traces
+//! asserting eviction-sequence equality against [`super::LocalStore`]
+//! running plain LRU.
+//!
+//! Determinism: every ordering decision reduces to `(stamp, key)` over
+//! `BTreeSet`s driven by one monotone counter — replays are
+//! byte-identical on every backend, which is what lets the shared pool
+//! keep its thread-invariance guarantee with these policies in force.
+
+use std::collections::{BTreeSet, HashMap};
+
+use super::{Entry, PolicyKind};
+
+/// Which adaptive state machine is in force, with its fixed parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Flavor {
+    /// ARC; `pinned` freezes the adaptation target and makes the victim
+    /// the globally least-recently-stamped entry (the LRU oracle mode).
+    Arc {
+        /// Freeze `p` and evict by global stamp order (oracle mode).
+        pinned: bool,
+    },
+    /// SLRU with the protected segment capped at this fraction of
+    /// capacity (0.0 = single segment = exact LRU).
+    Slru {
+        /// Protected-segment share of total capacity.
+        protected_fraction: f64,
+    },
+    /// 2Q with A1in targeted at capacity/4 and A1out bounded by
+    /// capacity/2 (the paper's recommended ~25%/50% defaults).
+    TwoQ,
+}
+
+/// SLRU protected-segment share for [`PolicyKind::Slru`] (the classic
+/// 80/20 split: most bytes protected, a thin probationary front).
+const SLRU_PROTECTED_FRACTION: f64 = 0.8;
+
+/// A byte-bounded list of recently evicted keys (metadata only — ghosts
+/// hold no KV bytes; the bound caps *remembered* bytes so ghost memory
+/// scales with capacity, not with history length).
+#[derive(Debug, Default)]
+struct GhostList {
+    /// (stamp, key) in eviction order — oldest first.
+    order: BTreeSet<(u64, u64)>,
+    /// key -> (stamp, bytes the entry held when evicted).
+    seat: HashMap<u64, (u64, u64)>,
+    /// Sum of remembered bytes.
+    bytes: u64,
+}
+
+impl GhostList {
+    fn insert(&mut self, key: u64, stamp: u64, bytes: u64) {
+        self.remove(&key);
+        self.order.insert((stamp, key));
+        self.seat.insert(key, (stamp, bytes));
+        self.bytes += bytes;
+    }
+
+    /// Remove `key`; returns the bytes it remembered, if present.
+    fn remove(&mut self, key: &u64) -> Option<u64> {
+        let (stamp, bytes) = self.seat.remove(key)?;
+        self.order.remove(&(stamp, *key));
+        self.bytes -= bytes;
+        Some(bytes)
+    }
+
+    fn contains(&self, key: &u64) -> bool {
+        self.seat.contains_key(key)
+    }
+
+    /// Drop oldest ghosts until remembered bytes fit `cap`.
+    fn trim(&mut self, cap: u64) {
+        while self.bytes > cap {
+            let Some(&(stamp, key)) = self.order.iter().next() else {
+                break;
+            };
+            self.order.remove(&(stamp, key));
+            let (_, b) = self.seat.remove(&key).expect("ghost seat exists");
+            self.bytes -= b;
+        }
+    }
+
+    fn clear(&mut self) {
+        self.order.clear();
+        self.seat.clear();
+        self.bytes = 0;
+    }
+
+    fn check(&self, label: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.order.len() == self.seat.len(),
+            "{label}: ghost order {} != seats {}",
+            self.order.len(),
+            self.seat.len()
+        );
+        let sum: u64 = self.seat.values().map(|&(_, b)| b).sum();
+        anyhow::ensure!(
+            sum == self.bytes,
+            "{label}: ghost byte sum {} != tracked {}",
+            sum,
+            self.bytes
+        );
+        Ok(())
+    }
+}
+
+/// A resident entry's place in the adaptive state.
+#[derive(Debug, Clone, Copy)]
+struct Seat {
+    stamp: u64,
+    bytes: u64,
+    /// In the frequency list (T2 / protected / Am) rather than the
+    /// recency list (T1 / probationary / A1in).
+    frequent: bool,
+}
+
+/// The ghost-list adaptive eviction state shared by ARC, SLRU and 2Q.
+///
+/// Hosted by [`super::EvictionIndex`] for [`super::LocalStore`] (and
+/// through it the shared pool), and directly by [`super::TieredStore`],
+/// whose per-tier victim scans rank entries with [`Self::keep_score`].
+/// The host store remains the source of truth for entries and bytes;
+/// this index holds ordering metadata only and is notified at every
+/// mutation.
+#[derive(Debug)]
+pub struct AdaptiveIndex {
+    flavor: Flavor,
+    /// Host capacity, bytes — bounds ghosts and the adaptation target.
+    capacity: u64,
+    /// Recency list (T1 / probationary / A1in), ordered by (stamp, key).
+    recent: BTreeSet<(u64, u64)>,
+    /// Frequency list (T2 / protected / Am), ordered by (stamp, key).
+    frequent: BTreeSet<(u64, u64)>,
+    /// key -> seat, for every resident entry.
+    seats: HashMap<u64, Seat>,
+    recent_bytes: u64,
+    frequent_bytes: u64,
+    /// Evicted-from-recency ghosts (ARC B1, 2Q A1out; unused by SLRU).
+    ghost_recent: GhostList,
+    /// Evicted-from-frequency ghosts (ARC B2 only).
+    ghost_frequent: GhostList,
+    /// ARC's adaptation target: bytes the recency list "deserves".
+    p: f64,
+    /// Monotone stamp source for every ordering decision.
+    next_stamp: u64,
+}
+
+impl AdaptiveIndex {
+    /// Adaptive state for `kind`, or `None` for the static policies.
+    pub fn new(kind: PolicyKind) -> Option<AdaptiveIndex> {
+        let flavor = match kind {
+            PolicyKind::Arc => Flavor::Arc { pinned: false },
+            PolicyKind::Slru => Flavor::Slru {
+                protected_fraction: SLRU_PROTECTED_FRACTION,
+            },
+            PolicyKind::TwoQ => Flavor::TwoQ,
+            _ => return None,
+        };
+        Some(Self::with_flavor(flavor))
+    }
+
+    /// ARC with the adaptation target frozen and victims taken in global
+    /// stamp order — provably equivalent to LRU (the degeneracy oracle).
+    pub fn arc_pinned() -> AdaptiveIndex {
+        Self::with_flavor(Flavor::Arc { pinned: true })
+    }
+
+    /// SLRU with a zero-byte protected segment: every promotion
+    /// immediately demotes back to probationary MRU, which is exact LRU
+    /// (the degeneracy oracle).
+    pub fn slru_single_segment() -> AdaptiveIndex {
+        Self::with_flavor(Flavor::Slru {
+            protected_fraction: 0.0,
+        })
+    }
+
+    fn with_flavor(flavor: Flavor) -> AdaptiveIndex {
+        AdaptiveIndex {
+            flavor,
+            capacity: 0,
+            recent: BTreeSet::new(),
+            frequent: BTreeSet::new(),
+            seats: HashMap::new(),
+            recent_bytes: 0,
+            frequent_bytes: 0,
+            ghost_recent: GhostList::default(),
+            ghost_frequent: GhostList::default(),
+            p: 0.0,
+            next_stamp: 0,
+        }
+    }
+
+    /// Which [`PolicyKind`] this state implements.
+    pub fn kind(&self) -> PolicyKind {
+        match self.flavor {
+            Flavor::Arc { .. } => PolicyKind::Arc,
+            Flavor::Slru { .. } => PolicyKind::Slru,
+            Flavor::TwoQ => PolicyKind::TwoQ,
+        }
+    }
+
+    /// Resident entries tracked (tests / `debug_assert`s in the host).
+    pub fn len(&self) -> usize {
+        self.seats.len()
+    }
+
+    /// Whether no resident entries are tracked.
+    pub fn is_empty(&self) -> bool {
+        self.seats.is_empty()
+    }
+
+    /// Remembered bytes in the (recency, frequency) ghost lists.
+    pub fn ghost_bytes(&self) -> (u64, u64) {
+        (self.ghost_recent.bytes, self.ghost_frequent.bytes)
+    }
+
+    /// Keys remembered in the (recency, frequency) ghost lists.
+    pub fn ghost_len(&self) -> (usize, usize) {
+        (self.ghost_recent.seat.len(), self.ghost_frequent.seat.len())
+    }
+
+    /// ARC's current adaptation target, bytes (tests pin that ghost hits
+    /// actually move it; 0 and meaningless for SLRU/2Q).
+    pub fn adaptation_bytes(&self) -> f64 {
+        self.p
+    }
+
+    fn stamp(&mut self) -> u64 {
+        let s = self.next_stamp;
+        self.next_stamp += 1;
+        s
+    }
+
+    fn ghost_cap_recent(&self) -> u64 {
+        match self.flavor {
+            // A1out remembers about half the capacity's worth of keys.
+            Flavor::TwoQ => self.capacity / 2,
+            _ => self.capacity,
+        }
+    }
+
+    /// 2Q's A1in byte target (capacity/4): above it, evict from A1in.
+    fn kin_target(&self) -> u64 {
+        self.capacity / 4
+    }
+
+    fn protected_cap(&self, fraction: f64) -> u64 {
+        (self.capacity as f64 * fraction) as u64
+    }
+
+    fn list_insert(&mut self, key: u64, bytes: u64, frequent: bool) {
+        let stamp = self.stamp();
+        let seat = Seat { stamp, bytes, frequent };
+        if frequent {
+            self.frequent.insert((stamp, key));
+            self.frequent_bytes += bytes;
+        } else {
+            self.recent.insert((stamp, key));
+            self.recent_bytes += bytes;
+        }
+        let prev = self.seats.insert(key, seat);
+        debug_assert!(prev.is_none(), "double insert of key {key}");
+    }
+
+    fn list_remove(&mut self, key: u64) -> Option<Seat> {
+        let seat = self.seats.remove(&key)?;
+        if seat.frequent {
+            self.frequent.remove(&(seat.stamp, key));
+            self.frequent_bytes -= seat.bytes;
+        } else {
+            self.recent.remove(&(seat.stamp, key));
+            self.recent_bytes -= seat.bytes;
+        }
+        Some(seat)
+    }
+
+    /// While the protected segment overflows, demote its LRU entry back
+    /// to probationary MRU (the classic SLRU overflow rule).
+    fn slru_rebalance(&mut self, fraction: f64) {
+        let cap = self.protected_cap(fraction);
+        while self.frequent_bytes > cap {
+            let Some(&(_, key)) = self.frequent.iter().next() else {
+                break;
+            };
+            let seat = self.list_remove(key).expect("seated");
+            self.list_insert(key, seat.bytes, false);
+        }
+    }
+
+    /// A fresh key becomes resident (`bytes` = its size in the host).
+    pub fn on_insert(&mut self, key: u64, bytes: u64) {
+        debug_assert!(!self.seats.contains_key(&key), "insert of seated key {key}");
+        match self.flavor {
+            Flavor::Slru { .. } => {
+                self.ghost_recent.remove(&key);
+                self.ghost_frequent.remove(&key);
+                self.list_insert(key, bytes, false);
+            }
+            Flavor::TwoQ => {
+                // A1out hit: the key earned its way into the main queue.
+                let from_ghost = self.ghost_recent.remove(&key).is_some();
+                self.ghost_frequent.remove(&key);
+                self.list_insert(key, bytes, from_ghost);
+            }
+            Flavor::Arc { pinned } => {
+                let b1 = self.ghost_recent.bytes.max(1) as f64;
+                let b2 = self.ghost_frequent.bytes.max(1) as f64;
+                if self.ghost_recent.contains(&key) {
+                    if !pinned {
+                        let delta = (b2 / b1).max(1.0) * bytes as f64;
+                        self.p = (self.p + delta).min(self.capacity as f64);
+                    }
+                    self.ghost_recent.remove(&key);
+                    self.list_insert(key, bytes, true);
+                } else if self.ghost_frequent.contains(&key) {
+                    if !pinned {
+                        let delta = (b1 / b2).max(1.0) * bytes as f64;
+                        self.p = (self.p - delta).max(0.0);
+                    }
+                    self.ghost_frequent.remove(&key);
+                    self.list_insert(key, bytes, true);
+                } else {
+                    self.list_insert(key, bytes, false);
+                }
+            }
+        }
+    }
+
+    /// A resident key was hit or extended (`bytes` = its *current* size
+    /// in the host, which may have grown since insertion).
+    pub fn on_access(&mut self, key: u64, bytes: u64) {
+        let Some(seat) = self.list_remove(key) else {
+            debug_assert!(false, "access of unseated key {key}");
+            return;
+        };
+        match self.flavor {
+            Flavor::Slru { protected_fraction } => {
+                // Probationary hit promotes; protected hit refreshes.
+                self.list_insert(key, bytes, true);
+                self.slru_rebalance(protected_fraction);
+            }
+            Flavor::TwoQ => {
+                if seat.frequent {
+                    self.list_insert(key, bytes, true);
+                } else {
+                    // A1in is a FIFO: accesses refresh bytes, not order.
+                    let stamp = seat.stamp;
+                    self.recent.insert((stamp, key));
+                    self.recent_bytes += bytes;
+                    self.seats.insert(key, Seat { stamp, bytes, frequent: false });
+                }
+            }
+            Flavor::Arc { .. } => {
+                // Any hit makes the entry "seen twice" — move/refresh T2.
+                self.list_insert(key, bytes, true);
+            }
+        }
+    }
+
+    /// A resident key left the host (`evicted` records it in the
+    /// flavour's ghost list; replacements via `clear` pass `false`).
+    pub fn on_remove(&mut self, key: u64, evicted: bool) {
+        let Some(seat) = self.list_remove(key) else {
+            return;
+        };
+        if !evicted {
+            return;
+        }
+        let stamp = self.stamp();
+        match self.flavor {
+            Flavor::Slru { .. } => {}
+            Flavor::TwoQ => {
+                // Only admission-queue evictions earn an A1out ghost —
+                // keys aged out of Am are simply forgotten.
+                if !seat.frequent {
+                    self.ghost_recent.insert(key, stamp, seat.bytes);
+                    self.ghost_recent.trim(self.ghost_cap_recent());
+                }
+            }
+            Flavor::Arc { .. } => {
+                if seat.frequent {
+                    self.ghost_frequent.insert(key, stamp, seat.bytes);
+                    self.ghost_frequent.trim(self.capacity);
+                } else {
+                    self.ghost_recent.insert(key, stamp, seat.bytes);
+                    self.ghost_recent.trim(self.ghost_cap_recent());
+                }
+            }
+        }
+    }
+
+    /// The host's capacity changed: rebound ghosts and the adaptation
+    /// target (called at construction and on every resize).
+    pub fn set_capacity(&mut self, bytes: u64) {
+        self.capacity = bytes;
+        self.p = self.p.min(bytes as f64);
+        self.ghost_recent.trim(self.ghost_cap_recent());
+        self.ghost_frequent.trim(self.capacity);
+        if let Flavor::Slru { protected_fraction } = self.flavor {
+            self.slru_rebalance(protected_fraction);
+        }
+    }
+
+    /// Drop all state, resident and ghost (host `clear`).
+    pub fn clear(&mut self) {
+        self.recent.clear();
+        self.frequent.clear();
+        self.seats.clear();
+        self.recent_bytes = 0;
+        self.frequent_bytes = 0;
+        self.ghost_recent.clear();
+        self.ghost_frequent.clear();
+        self.p = 0.0;
+    }
+
+    /// Whether the recency list is preferred for the next eviction
+    /// (ignoring emptiness — the caller falls back to whichever list has
+    /// candidates).
+    fn prefer_recent(&self) -> bool {
+        match self.flavor {
+            Flavor::Slru { .. } => true,
+            Flavor::TwoQ => self.recent_bytes > self.kin_target(),
+            Flavor::Arc { pinned: true } => true,
+            Flavor::Arc { pinned: false } => self.recent_bytes as f64 > self.p,
+        }
+    }
+
+    /// The next eviction victim, or `None` when nothing is resident.
+    pub fn victim(&self) -> Option<u64> {
+        if let Flavor::Arc { pinned: true } = self.flavor {
+            // Oracle mode: globally least-recently-stamped (exact LRU).
+            let r = self.recent.iter().next();
+            let f = self.frequent.iter().next();
+            return match (r, f) {
+                (Some(&a), Some(&b)) => Some(if a < b { a.1 } else { b.1 }),
+                (Some(&a), None) => Some(a.1),
+                (None, Some(&b)) => Some(b.1),
+                (None, None) => None,
+            };
+        }
+        let first = |s: &BTreeSet<(u64, u64)>| s.iter().next().map(|&(_, k)| k);
+        if self.prefer_recent() || self.frequent.is_empty() {
+            first(&self.recent).or_else(|| first(&self.frequent))
+        } else {
+            first(&self.frequent).or_else(|| first(&self.recent))
+        }
+    }
+
+    /// Total-order eviction rank for `key` (lower = evicted sooner),
+    /// consistent with [`Self::victim`] over any subset — this is what
+    /// [`super::TieredStore`]'s per-tier victim scans minimize. `None`
+    /// for keys this index does not seat.
+    pub fn keep_score(&self, key: u64) -> Option<f64> {
+        let seat = self.seats.get(&key)?;
+        let pinned = matches!(self.flavor, Flavor::Arc { pinned: true });
+        let level = if pinned {
+            0.0
+        } else {
+            let victim_list_is_recent = self.prefer_recent();
+            if seat.frequent == victim_list_is_recent {
+                // In the survivor list.
+                1.0
+            } else {
+                0.0
+            }
+        };
+        // Stamps stay far below 2^53, so the sum is exact.
+        Some(level * 1e15 + seat.stamp as f64)
+    }
+
+    /// Verify the metadata against the host's entry table: every entry
+    /// seated with its current size, list byte-sums exact, ghosts
+    /// internally consistent, byte-bounded by capacity and disjoint from
+    /// residents.
+    pub fn check_invariants(&self, entries: &HashMap<u64, Entry>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.seats.len() == entries.len(),
+            "seats {} != entries {}",
+            self.seats.len(),
+            entries.len()
+        );
+        anyhow::ensure!(
+            self.recent.len() + self.frequent.len() == self.seats.len(),
+            "list membership {}+{} != seats {}",
+            self.recent.len(),
+            self.frequent.len(),
+            self.seats.len()
+        );
+        let (mut rb, mut fb) = (0u64, 0u64);
+        for (key, e) in entries {
+            let seat = self
+                .seats
+                .get(key)
+                .ok_or_else(|| anyhow::anyhow!("entry {key} has no seat"))?;
+            anyhow::ensure!(
+                seat.bytes == e.size_bytes,
+                "entry {key}: seat bytes {} != entry bytes {}",
+                seat.bytes,
+                e.size_bytes
+            );
+            let listed = if seat.frequent {
+                fb += seat.bytes;
+                self.frequent.contains(&(seat.stamp, *key))
+            } else {
+                rb += seat.bytes;
+                self.recent.contains(&(seat.stamp, *key))
+            };
+            anyhow::ensure!(listed, "entry {key} seat not in its list");
+        }
+        anyhow::ensure!(
+            rb == self.recent_bytes && fb == self.frequent_bytes,
+            "list bytes drifted: recent {rb} vs {}, frequent {fb} vs {}",
+            self.recent_bytes,
+            self.frequent_bytes
+        );
+        self.ghost_recent.check("ghost-recent")?;
+        self.ghost_frequent.check("ghost-frequent")?;
+        anyhow::ensure!(
+            self.ghost_recent.bytes <= self.capacity,
+            "recency ghost bytes {} exceed capacity {}",
+            self.ghost_recent.bytes,
+            self.capacity
+        );
+        anyhow::ensure!(
+            self.ghost_frequent.bytes <= self.capacity,
+            "frequency ghost bytes {} exceed capacity {}",
+            self.ghost_frequent.bytes,
+            self.capacity
+        );
+        for key in self.seats.keys() {
+            anyhow::ensure!(
+                !self.ghost_recent.contains(key) && !self.ghost_frequent.contains(key),
+                "key {key} is both resident and ghost"
+            );
+        }
+        anyhow::ensure!(
+            self.p >= 0.0 && self.p <= self.capacity as f64,
+            "adaptation target {} outside [0, {}]",
+            self.p,
+            self.capacity
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive an index as a 1-byte-per-unit host would: insert/access
+    /// keys of the given sizes, evicting via `victim` when `used > cap`.
+    struct Host {
+        idx: AdaptiveIndex,
+        used: u64,
+        cap: u64,
+        sizes: HashMap<u64, u64>,
+        evicted: Vec<u64>,
+    }
+
+    impl Host {
+        fn new(mut idx: AdaptiveIndex, cap: u64) -> Host {
+            idx.set_capacity(cap);
+            Host { idx, used: 0, cap, sizes: HashMap::new(), evicted: Vec::new() }
+        }
+
+        fn touch(&mut self, key: u64, bytes: u64) {
+            if self.sizes.contains_key(&key) {
+                self.idx.on_access(key, self.sizes[&key]);
+                return;
+            }
+            while self.used + bytes > self.cap {
+                let v = self.idx.victim().expect("victim exists");
+                let b = self.sizes.remove(&v).expect("victim sized");
+                self.used -= b;
+                self.idx.on_remove(v, true);
+                self.evicted.push(v);
+            }
+            self.sizes.insert(key, bytes);
+            self.used += bytes;
+            self.idx.on_insert(key, bytes);
+        }
+
+        fn resident(&self, key: u64) -> bool {
+            self.sizes.contains_key(&key)
+        }
+    }
+
+    #[test]
+    fn arc_one_shot_scan_spares_the_frequent_set() {
+        // Working set {1,2} re-hit often, then a scan of one-shot keys
+        // bigger than capacity: the scan flows through T1 and its ghosts
+        // while the twice-seen working set survives in T2.
+        let mut h = Host::new(AdaptiveIndex::new(PolicyKind::Arc).unwrap(), 100);
+        h.touch(1, 40);
+        h.touch(2, 40);
+        h.touch(1, 40); // promote to T2
+        h.touch(2, 40);
+        for scan in 100..110 {
+            h.touch(scan, 20);
+        }
+        assert!(h.resident(1), "scan flushed frequent entry 1");
+        assert!(h.resident(2), "scan flushed frequent entry 2");
+    }
+
+    #[test]
+    fn arc_ghost_hit_moves_the_adaptation_target() {
+        let mut h = Host::new(AdaptiveIndex::new(PolicyKind::Arc).unwrap(), 90);
+        // Fill T1, force an eviction into B1, then re-reference it.
+        h.touch(1, 30);
+        h.touch(2, 30);
+        h.touch(3, 30);
+        h.touch(4, 30); // evicts 1 -> B1
+        assert!(!h.resident(1));
+        assert_eq!(h.idx.adaptation_bytes(), 0.0);
+        h.touch(1, 30); // B1 hit: p grows, entry resurrects into T2
+        assert!(h.idx.adaptation_bytes() > 0.0, "B1 hit must grow p");
+        let seat = h.idx.seats.get(&1).unwrap();
+        assert!(seat.frequent, "ghost hit lands in T2");
+    }
+
+    #[test]
+    fn two_q_needs_a_ghost_hit_to_enter_main() {
+        let mut h = Host::new(AdaptiveIndex::new(PolicyKind::TwoQ).unwrap(), 100);
+        h.touch(1, 20);
+        h.touch(1, 20); // A1in hit: stays in the FIFO, no promotion
+        assert!(!h.idx.seats[&1].frequent, "resident A1in hit must not promote");
+        // Push 1 out of A1in, then bring it back: now it enters Am.
+        for k in 2..=6 {
+            h.touch(k, 20); // the last insert evicts 1 (A1in head) -> A1out
+        }
+        assert!(!h.resident(1));
+        h.touch(1, 20);
+        assert!(h.idx.seats[&1].frequent, "A1out hit must enter Am");
+    }
+
+    #[test]
+    fn slru_promotes_and_demotes_at_the_protected_cap() {
+        let mut h = Host::new(AdaptiveIndex::new(PolicyKind::Slru).unwrap(), 100);
+        h.touch(1, 50);
+        h.touch(2, 30);
+        h.touch(1, 50); // promote 1 (50 <= 80 protected cap)
+        assert!(h.idx.seats[&1].frequent);
+        h.touch(2, 30); // promote 2 -> protected holds 80 <= 80
+        assert!(h.idx.seats[&2].frequent);
+        h.touch(3, 10);
+        h.touch(3, 10); // promote 3 -> 90 > 80: LRU of protected demotes
+        assert!(!h.idx.seats[&1].frequent, "protected overflow demotes its LRU");
+    }
+
+    #[test]
+    fn ghost_lists_stay_byte_bounded() {
+        let mut h = Host::new(AdaptiveIndex::new(PolicyKind::Arc).unwrap(), 100);
+        for k in 0..200 {
+            h.touch(k, 30);
+        }
+        let (gr, gf) = h.idx.ghost_bytes();
+        assert!(gr <= 100 && gf <= 100, "ghosts exceed capacity: {gr}/{gf}");
+        assert!(h.idx.ghost_len().0 > 0, "churn must leave ghosts behind");
+    }
+
+    #[test]
+    fn pinned_arc_and_single_segment_slru_evict_in_lru_order() {
+        for idx in [AdaptiveIndex::arc_pinned(), AdaptiveIndex::slru_single_segment()] {
+            let mut h = Host::new(idx, 90);
+            h.touch(1, 30);
+            h.touch(2, 30);
+            h.touch(3, 30);
+            h.touch(1, 30); // 1 is now MRU; LRU order: 2, 3, 1
+            h.touch(4, 30);
+            h.touch(5, 30);
+            assert_eq!(h.evicted, vec![2, 3], "degenerate mode must evict in LRU order");
+            assert!(h.resident(1));
+        }
+    }
+
+    #[test]
+    fn set_capacity_trims_ghosts_and_clamps_p() {
+        let mut h = Host::new(AdaptiveIndex::new(PolicyKind::Arc).unwrap(), 100);
+        for k in 0..10 {
+            h.touch(k, 40);
+        }
+        h.touch(0, 40); // some ghost traffic moves p
+        h.idx.set_capacity(10);
+        let (gr, gf) = h.idx.ghost_bytes();
+        assert!(gr <= 10 && gf <= 10);
+        assert!(h.idx.adaptation_bytes() <= 10.0);
+    }
+}

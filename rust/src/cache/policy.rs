@@ -1,4 +1,5 @@
-//! Replacement policies: FIFO, LRU, LFU and the paper's LCS (§5.5, §6.3.2).
+//! Replacement policies: FIFO, LRU, LFU, the paper's LCS (§5.5, §6.3.2),
+//! and the ghost-list adaptive family — ARC, SLRU and 2Q.
 //!
 //! All policies expose the same interface: a *keep-score* where the entry
 //! with the **lowest** score is the eviction victim.
@@ -7,12 +8,17 @@
 //! LFU and LCS use a lazily rebuilt candidate list — an O(n) score scan
 //! whose sorted result is reused until entries are touched, which
 //! amortizes to O(n log n) per full cache turnover (measured in
-//! `benches/cache.rs`).
+//! `benches/cache.rs`). The adaptive policies keep their state in
+//! [`super::AdaptiveIndex`] (O(log n) per operation) — see
+//! `cache::adaptive` for the transition rules and the LRU-degeneracy
+//! oracles.
 
+use super::adaptive::AdaptiveIndex;
 use super::entry::Entry;
 use std::collections::{BTreeSet, HashMap};
 
-/// Which replacement policy the cache manager runs (§6.3.2's comparison).
+/// Which replacement policy the cache manager runs (§6.3.2's comparison,
+/// extended with the adaptive family).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PolicyKind {
     /// First-in first-out.
@@ -23,9 +29,35 @@ pub enum PolicyKind {
     Lfu,
     /// Least Carbon Savings — the paper's policy (Eq. 7/8/9).
     Lcs,
+    /// Adaptive Replacement Cache: ghost lists self-tune the
+    /// recency/frequency split (see `cache::adaptive`).
+    Arc,
+    /// Segmented LRU: probationary + protected segments.
+    Slru,
+    /// 2Q: FIFO admission queue + LRU main queue + eviction ghost.
+    TwoQ,
 }
 
 impl PolicyKind {
+    /// Every policy, static four first then the adaptive family — the
+    /// order CLI sweeps, the bench report and the property suite use.
+    pub fn all() -> [PolicyKind; 7] {
+        [
+            PolicyKind::Fifo,
+            PolicyKind::Lru,
+            PolicyKind::Lfu,
+            PolicyKind::Lcs,
+            PolicyKind::Arc,
+            PolicyKind::Slru,
+            PolicyKind::TwoQ,
+        ]
+    }
+
+    /// Whether this policy keeps ghost-list adaptive state (ARC/SLRU/2Q).
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, PolicyKind::Arc | PolicyKind::Slru | PolicyKind::TwoQ)
+    }
+
     /// Stable policy label.
     pub fn name(&self) -> &'static str {
         match self {
@@ -33,10 +65,18 @@ impl PolicyKind {
             PolicyKind::Lru => "LRU",
             PolicyKind::Lfu => "LFU",
             PolicyKind::Lcs => "LCS",
+            PolicyKind::Arc => "ARC",
+            PolicyKind::Slru => "SLRU",
+            PolicyKind::TwoQ => "2Q",
         }
     }
 
     /// Keep-score under this policy (lowest = victim).
+    ///
+    /// For the adaptive family the real ordering lives in the stateful
+    /// [`super::AdaptiveIndex`] ([`AdaptiveIndex::keep_score`]); this
+    /// stateless score is their documented LRU fallback, used only where
+    /// no adaptive state is attached.
     pub fn score(&self, e: &Entry, now_s: f64) -> f64 {
         match self {
             PolicyKind::Fifo => e.created_s,
@@ -45,6 +85,7 @@ impl PolicyKind {
             // the comparison deterministic).
             PolicyKind::Lfu => e.hits as f64 * 1e9 + e.last_access_s,
             PolicyKind::Lcs => e.lcs_score(now_s),
+            PolicyKind::Arc | PolicyKind::Slru | PolicyKind::TwoQ => e.last_access_s,
         }
     }
 }
@@ -96,17 +137,48 @@ pub struct EvictionIndex {
     pub kind: PolicyKind,
     ordered: OrderedIndex,
     scan: ScanIndex,
+    /// Ghost-list state for the adaptive family (`None` for the static
+    /// policies — their paths are untouched by the adaptive extension).
+    adaptive: Option<AdaptiveIndex>,
     /// Monotone stamp source for FIFO/LRU ordering.
     next_stamp: u64,
 }
 
 impl EvictionIndex {
-    /// An empty index for `kind`.
+    /// An empty index for `kind`. Hosts of adaptive policies must call
+    /// [`Self::set_capacity`] before the first eviction so ghost bounds
+    /// and the ARC adaptation target track the store's capacity.
     pub fn new(kind: PolicyKind) -> Self {
         EvictionIndex {
             kind,
             ordered: OrderedIndex::default(),
             scan: ScanIndex::default(),
+            adaptive: AdaptiveIndex::new(kind),
+            next_stamp: 0,
+        }
+    }
+
+    /// The LRU-degeneracy oracle: ARC with the adaptation pinned (see
+    /// [`AdaptiveIndex::arc_pinned`]). Reports [`PolicyKind::Arc`].
+    pub fn arc_pinned() -> Self {
+        EvictionIndex {
+            kind: PolicyKind::Arc,
+            ordered: OrderedIndex::default(),
+            scan: ScanIndex::default(),
+            adaptive: Some(AdaptiveIndex::arc_pinned()),
+            next_stamp: 0,
+        }
+    }
+
+    /// The LRU-degeneracy oracle: SLRU with a single segment (see
+    /// [`AdaptiveIndex::slru_single_segment`]). Reports
+    /// [`PolicyKind::Slru`].
+    pub fn slru_single_segment() -> Self {
+        EvictionIndex {
+            kind: PolicyKind::Slru,
+            ordered: OrderedIndex::default(),
+            scan: ScanIndex::default(),
+            adaptive: Some(AdaptiveIndex::slru_single_segment()),
             next_stamp: 0,
         }
     }
@@ -115,8 +187,18 @@ impl EvictionIndex {
         matches!(self.kind, PolicyKind::Fifo | PolicyKind::Lru)
     }
 
-    /// Notify insertion of a fresh entry.
-    pub fn on_insert(&mut self, key: u64) {
+    /// The adaptive state, when this index runs an adaptive policy
+    /// (tests inspect ghost bounds and the adaptation target through it).
+    pub fn adaptive(&self) -> Option<&AdaptiveIndex> {
+        self.adaptive.as_ref()
+    }
+
+    /// Notify insertion of a fresh entry of `bytes` provisioned size.
+    pub fn on_insert(&mut self, key: u64, bytes: u64) {
+        if let Some(a) = &mut self.adaptive {
+            a.on_insert(key, bytes);
+            return;
+        }
         if self.is_ordered() {
             let s = self.next_stamp;
             self.next_stamp += 1;
@@ -128,8 +210,13 @@ impl EvictionIndex {
         // victims are validated against the live table.
     }
 
-    /// Notify an access/update of an existing entry.
-    pub fn on_access(&mut self, key: u64) {
+    /// Notify an access/update of an existing entry; `bytes` is its
+    /// current size (extensions grow it — the adaptive lists track it).
+    pub fn on_access(&mut self, key: u64, bytes: u64) {
+        if let Some(a) = &mut self.adaptive {
+            a.on_access(key, bytes);
+            return;
+        }
         if self.kind == PolicyKind::Lru {
             let s = self.next_stamp;
             self.next_stamp += 1;
@@ -139,11 +226,52 @@ impl EvictionIndex {
         // touch_seq at victim time.
     }
 
-    /// Notify removal.
-    pub fn on_remove(&mut self, key: u64) {
+    /// Notify removal; `evicted` records the key in the adaptive
+    /// policy's ghost list (pass `false` for non-eviction removals).
+    pub fn on_remove(&mut self, key: u64, evicted: bool) {
+        if let Some(a) = &mut self.adaptive {
+            a.on_remove(key, evicted);
+            return;
+        }
         if self.is_ordered() {
             self.ordered.remove(key);
         }
+    }
+
+    /// Notify a capacity change (construction and every resize): bounds
+    /// the adaptive ghosts and adaptation target. No-op for static
+    /// policies.
+    pub fn set_capacity(&mut self, bytes: u64) {
+        if let Some(a) = &mut self.adaptive {
+            a.set_capacity(bytes);
+        }
+    }
+
+    /// Drop residual state after the host cleared its table (per-key
+    /// [`Self::on_remove`] calls empty the resident lists; this also
+    /// wipes adaptive ghosts so bench phases start independent).
+    pub fn on_clear(&mut self) {
+        if let Some(a) = &mut self.adaptive {
+            a.clear();
+        }
+    }
+
+    /// Verify index/table agreement (adaptive: full ghost-list and
+    /// byte-sum invariants; ordered: seat counts). Property tests call
+    /// this through the host store's `check_invariants`.
+    pub fn check_invariants(&self, entries: &HashMap<u64, Entry>) -> anyhow::Result<()> {
+        if let Some(a) = &self.adaptive {
+            return a.check_invariants(entries);
+        }
+        if self.is_ordered() {
+            anyhow::ensure!(
+                self.ordered.len() == entries.len(),
+                "ordered index {} entries != table {}",
+                self.ordered.len(),
+                entries.len()
+            );
+        }
+        Ok(())
     }
 
     /// Pick the eviction victim. `entries` is the live table.
@@ -154,6 +282,10 @@ impl EvictionIndex {
     ) -> Option<u64> {
         if entries.is_empty() {
             return None;
+        }
+        if let Some(a) = &self.adaptive {
+            debug_assert_eq!(a.len(), entries.len());
+            return a.victim();
         }
         if self.is_ordered() {
             debug_assert_eq!(self.ordered.len(), entries.len());
@@ -216,10 +348,10 @@ mod tests {
     #[test]
     fn fifo_evicts_oldest_insert() {
         let mut idx = EvictionIndex::new(PolicyKind::Fifo);
-        idx.on_insert(1);
-        idx.on_insert(2);
-        idx.on_insert(3);
-        idx.on_access(1); // FIFO ignores access
+        idx.on_insert(1, 100);
+        idx.on_insert(2, 100);
+        idx.on_insert(3, 100);
+        idx.on_access(1, 100); // FIFO ignores access
         let t = table(vec![
             entry(1, 0.0, 9.0, 5),
             entry(2, 1.0, 1.0, 0),
@@ -231,10 +363,10 @@ mod tests {
     #[test]
     fn lru_evicts_least_recent() {
         let mut idx = EvictionIndex::new(PolicyKind::Lru);
-        idx.on_insert(1);
-        idx.on_insert(2);
-        idx.on_insert(3);
-        idx.on_access(1); // 1 becomes most recent → victim is 2
+        idx.on_insert(1, 100);
+        idx.on_insert(2, 100);
+        idx.on_insert(3, 100);
+        idx.on_access(1, 100); // 1 becomes most recent → victim is 2
         let t = table(vec![
             entry(1, 0.0, 3.0, 1),
             entry(2, 1.0, 1.0, 0),
@@ -247,7 +379,7 @@ mod tests {
     fn lfu_evicts_least_hit() {
         let mut idx = EvictionIndex::new(PolicyKind::Lfu);
         for k in 1..=3 {
-            idx.on_insert(k);
+            idx.on_insert(k, 100);
         }
         let t = table(vec![
             entry(1, 0.0, 0.0, 5),
@@ -261,7 +393,7 @@ mod tests {
     fn lcs_evicts_least_carbon_savings() {
         let mut idx = EvictionIndex::new(PolicyKind::Lcs);
         for k in 1..=2 {
-            idx.on_insert(k);
+            idx.on_insert(k, 100);
         }
         // Entry 2: same stats but double size → lower score → victim.
         let mut e2 = entry(2, 0.0, 0.0, 2);
@@ -273,8 +405,8 @@ mod tests {
     #[test]
     fn scan_policy_skips_touched_candidates() {
         let mut idx = EvictionIndex::new(PolicyKind::Lfu);
-        idx.on_insert(1);
-        idx.on_insert(2);
+        idx.on_insert(1, 100);
+        idx.on_insert(2, 100);
         let mut t = table(vec![entry(1, 0.0, 0.0, 1), entry(2, 1.0, 1.0, 2)]);
         // Build the snapshot: victim would be 1.
         assert_eq!(idx.victim(&t, 5.0), Some(1));
@@ -291,9 +423,9 @@ mod tests {
     #[test]
     fn removed_entries_are_never_victims() {
         let mut idx = EvictionIndex::new(PolicyKind::Lru);
-        idx.on_insert(1);
-        idx.on_insert(2);
-        idx.on_remove(1);
+        idx.on_insert(1, 100);
+        idx.on_insert(2, 100);
+        idx.on_remove(1, true);
         let t = table(vec![entry(2, 1.0, 1.0, 0)]);
         assert_eq!(idx.victim(&t, 10.0), Some(2));
     }
@@ -302,5 +434,46 @@ mod tests {
     fn empty_table_has_no_victim() {
         let mut idx = EvictionIndex::new(PolicyKind::Lcs);
         assert_eq!(idx.victim(&HashMap::new(), 0.0), None);
+    }
+
+    #[test]
+    fn all_policies_have_unique_names_and_adaptive_flags() {
+        let names: Vec<&str> = PolicyKind::all().iter().map(|p| p.name()).collect();
+        for (i, a) in names.iter().enumerate() {
+            for b in &names[i + 1..] {
+                assert_ne!(a, b, "duplicate policy label");
+            }
+        }
+        assert_eq!(PolicyKind::all().len(), 7);
+        for p in PolicyKind::all() {
+            assert_eq!(
+                p.is_adaptive(),
+                matches!(p, PolicyKind::Arc | PolicyKind::Slru | PolicyKind::TwoQ)
+            );
+            assert_eq!(EvictionIndex::new(p).adaptive().is_some(), p.is_adaptive());
+        }
+    }
+
+    #[test]
+    fn adaptive_kinds_route_through_the_ghost_list_state() {
+        let mut idx = EvictionIndex::new(PolicyKind::Arc);
+        idx.set_capacity(300);
+        idx.on_insert(1, 100);
+        idx.on_insert(2, 100);
+        idx.on_insert(3, 100);
+        idx.on_access(1, 100); // 1 moves to the frequency list
+        let t = table(vec![
+            entry(1, 0.0, 9.0, 1),
+            entry(2, 1.0, 1.0, 0),
+            entry(3, 2.0, 2.0, 0),
+        ]);
+        // Recency list holds {2, 3}; its head is the ARC victim.
+        assert_eq!(idx.victim(&t, 10.0), Some(2));
+        idx.check_invariants(&t).unwrap();
+        idx.on_remove(2, true);
+        let t2 = table(vec![entry(1, 0.0, 9.0, 1), entry(3, 2.0, 2.0, 0)]);
+        idx.check_invariants(&t2).unwrap();
+        let ghosts = idx.adaptive().unwrap().ghost_len();
+        assert_eq!(ghosts, (1, 0), "recency eviction must land in the B1 ghost");
     }
 }

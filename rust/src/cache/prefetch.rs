@@ -1,0 +1,349 @@
+//! Green-window prefix prefetching: speculative KV warming bought in
+//! low-carbon or idle windows.
+//!
+//! The paper's "cache when it's green" insight prices *retention*
+//! against carbon intensity; this module generalises it to *prefetch*:
+//! recomputing an evicted conversation's prefix is compute you can buy
+//! deliberately, so schedule it into the hours where a gram of CO₂ buys
+//! the most joules (below-median CI) or into replica idle time. The
+//! predictor is an order-1 Markov chain over the interleaved
+//! [`Request::prefix_key`] arrival stream — multi-turn conversations
+//! revisit the same prefix, so "which conversation speaks next" is the
+//! useful signal, and a correct prediction whose entry was evicted (or
+//! truncated) is exactly the KV worth re-warming.
+//!
+//! Determinism contract: everything here is a pure function of the
+//! observed request stream and simulated time. No wall clock, no
+//! unseeded randomness, and prediction ties break on the smallest key,
+//! so a prefetch-enabled fleet replays byte-identically at any thread
+//! count. Prefetch compute is charged to the run's carbon ledger
+//! (see [`crate::carbon::CarbonBreakdown::prefetch_g`]) so the
+//! green-window claim stays honest.
+
+use std::collections::HashMap;
+
+use crate::workload::{Request, TaskKind};
+
+use super::CacheStore;
+
+/// When the engine is allowed to warm predicted prefixes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PrefetchMode {
+    /// Never prefetch (the baseline).
+    #[default]
+    Off,
+    /// Warm predicted prefixes, but only inside below-median-CI hours or
+    /// replica idle windows.
+    Green,
+}
+
+impl PrefetchMode {
+    /// Every mode, in sweep order.
+    pub fn all() -> [PrefetchMode; 2] {
+        [PrefetchMode::Off, PrefetchMode::Green]
+    }
+
+    /// CLI / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrefetchMode::Off => "off",
+            PrefetchMode::Green => "green",
+        }
+    }
+
+    /// Parse a CLI spelling (`off` / `green`).
+    pub fn parse(s: &str) -> Option<PrefetchMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(PrefetchMode::Off),
+            "green" => Some(PrefetchMode::Green),
+            _ => None,
+        }
+    }
+}
+
+/// Upper median of a CI series — the green-hour cutoff ("below-median
+/// CI"). Deterministic under NaN-free inputs (total order); returns
+/// `f64::NEG_INFINITY` for an empty series so nothing counts as green.
+pub fn median_ci(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return f64::NEG_INFINITY;
+    }
+    let mut v = values.to_vec();
+    v.sort_by(f64::total_cmp);
+    v[v.len() / 2]
+}
+
+/// Order-1 Markov predictor over the prefix-key arrival stream.
+///
+/// `observe` feeds it every injected request; `predict` returns the
+/// most likely next prefix after the last observed one, along with the
+/// token count and task last seen for that prefix (what a warm would
+/// restore). Ties break on the smallest key so prediction is
+/// independent of hash-map iteration order.
+#[derive(Debug, Default)]
+pub struct MarkovPredictor {
+    /// `transitions[a][b]` = times prefix `b` arrived right after `a`.
+    transitions: HashMap<u64, HashMap<u64, u32>>,
+    /// Most recently observed prefix key.
+    last_key: Option<u64>,
+    /// Last-known cached length (prompt + output) and task per prefix.
+    meta: HashMap<u64, (u32, TaskKind)>,
+}
+
+impl MarkovPredictor {
+    /// An empty predictor.
+    pub fn new() -> MarkovPredictor {
+        MarkovPredictor::default()
+    }
+
+    /// Record one arrival: a `last → key` transition plus the prefix's
+    /// post-completion cached length (context + new + output tokens).
+    pub fn observe(&mut self, req: &Request) {
+        let key = req.prefix_key();
+        if let Some(prev) = self.last_key {
+            *self.transitions.entry(prev).or_default().entry(key).or_insert(0) += 1;
+        }
+        self.meta.insert(key, (req.prompt_tokens() + req.output_tokens, req.task));
+        self.last_key = Some(key);
+    }
+
+    /// The most likely next prefix after the last observed arrival:
+    /// `(key, tokens, task)`, or `None` before any transition out of the
+    /// current state has been seen. Highest count wins; ties break to
+    /// the smallest key.
+    pub fn predict(&self) -> Option<(u64, u32, TaskKind)> {
+        let row = self.transitions.get(&self.last_key?)?;
+        let (key, _) = row.iter().fold(None::<(u64, u32)>, |best, (&k, &c)| match best {
+            None => Some((k, c)),
+            Some((bk, bc)) if c > bc || (c == bc && k < bk) => Some((k, c)),
+            keep => keep,
+        })?;
+        let (tokens, task) = *self.meta.get(&key)?;
+        Some((key, tokens, task))
+    }
+
+    /// Distinct states with at least one observed outgoing transition.
+    pub fn states(&self) -> usize {
+        self.transitions.len()
+    }
+}
+
+/// Counters for one run's prefetch activity, reported per replica in
+/// [`crate::sim::SimResult`] and summed across the fleet.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrefetchStats {
+    /// Prediction attempts inside an eligible (green/idle) window.
+    pub attempts: u64,
+    /// Attempts that actually warmed bytes into the cache.
+    pub warmed: u64,
+    /// Tokens written by warms.
+    pub warmed_tokens: u64,
+    /// Prefill energy spent warming, joules (also in the carbon ledger).
+    pub energy_j: f64,
+    /// Warms fired inside replica idle windows.
+    pub fired_idle: u64,
+    /// Warms fired inside below-median-CI hours.
+    pub fired_green: u64,
+}
+
+/// The per-replica prefetch driver: owns the predictor, the green-hour
+/// threshold and the activity counters. The engine calls
+/// [`Prefetcher::observe`] on every injected request and
+/// [`Prefetcher::attempt`] from its idle/green-window hooks; the energy
+/// cost of each warm is computed by the engine (it owns the cost/power
+/// models) and recorded back through [`Prefetcher::note_energy`].
+#[derive(Debug)]
+pub struct Prefetcher {
+    mode: PrefetchMode,
+    predictor: MarkovPredictor,
+    /// Strictly-below threshold (the run's median CI) for "green" hours.
+    green_ci_threshold: Option<f64>,
+    stats: PrefetchStats,
+}
+
+impl Prefetcher {
+    /// A prefetcher in the given mode with no green threshold yet.
+    pub fn new(mode: PrefetchMode) -> Prefetcher {
+        Prefetcher {
+            mode,
+            predictor: MarkovPredictor::new(),
+            green_ci_threshold: None,
+            stats: PrefetchStats::default(),
+        }
+    }
+
+    /// The configured mode.
+    pub fn mode(&self) -> PrefetchMode {
+        self.mode
+    }
+
+    /// Activity counters so far.
+    pub fn stats(&self) -> PrefetchStats {
+        self.stats
+    }
+
+    /// Set the green-hour cutoff (the run's median CI, computed over the
+    /// replica's evaluated trace hours before the run starts).
+    pub fn set_green_ci_threshold(&mut self, gco2_per_kwh: f64) {
+        self.green_ci_threshold = Some(gco2_per_kwh);
+    }
+
+    /// Whether an hour at this carbon intensity counts as green:
+    /// strictly below the median, and only once the threshold is set.
+    pub fn is_green(&self, gco2_per_kwh: f64) -> bool {
+        self.green_ci_threshold.is_some_and(|t| gco2_per_kwh < t)
+    }
+
+    /// Feed one observed arrival to the predictor (all modes, including
+    /// `Off`, so enabling prefetch mid-run would not cold-start it).
+    pub fn observe(&mut self, req: &Request) {
+        self.predictor.observe(req);
+    }
+
+    /// One prefetch attempt inside an eligible window: predict the next
+    /// prefix and warm it unless it is already resident at its
+    /// last-known length. Returns the warmed `(key, tokens)` so the
+    /// caller can price the prefill; `green` says which window kind
+    /// fired (for the stats split). No-op in [`PrefetchMode::Off`].
+    pub fn attempt<C: CacheStore + ?Sized>(
+        &mut self,
+        cache: &mut C,
+        now_s: f64,
+        green: bool,
+    ) -> Option<(u64, u32)> {
+        if self.mode != PrefetchMode::Green {
+            return None;
+        }
+        self.stats.attempts += 1;
+        let (key, tokens, task) = self.predictor.predict()?;
+        if tokens == 0 {
+            return None;
+        }
+        let probe = Request {
+            id: 0,
+            task,
+            context_id: key,
+            context_version: 0,
+            context_tokens: tokens,
+            new_tokens: 0,
+            output_tokens: 0,
+            arrival_s: now_s,
+        };
+        if cache.peek(&probe) >= tokens {
+            return None; // already warm at full length
+        }
+        // The prefill compute happens either way, so it is counted and
+        // priced even if the store then rejects the entry as oversized
+        // (and on the buffered shared handle the admission only lands at
+        // the next sync — peeking back here would misread it).
+        cache.admit(&probe, tokens, None, now_s);
+        self.stats.warmed += 1;
+        self.stats.warmed_tokens += tokens as u64;
+        if green {
+            self.stats.fired_green += 1;
+        } else {
+            self.stats.fired_idle += 1;
+        }
+        Some((key, tokens))
+    }
+
+    /// Record the prefill energy a warm cost (the engine computes it
+    /// from its cost/power models and also charges the carbon ledger).
+    pub fn note_energy(&mut self, joules: f64) {
+        self.stats.energy_j += joules;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{LocalStore, PolicyKind};
+    use super::*;
+
+    fn req(ctx_id: u64, context: u32, new: u32) -> Request {
+        Request {
+            id: 0,
+            task: TaskKind::Conversation,
+            context_id: ctx_id,
+            context_version: 0,
+            context_tokens: context,
+            new_tokens: new,
+            output_tokens: 10,
+            arrival_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn predictor_learns_the_dominant_transition() {
+        let mut p = MarkovPredictor::new();
+        // Alternating stream 1,2,1,2... → after 1 comes 2.
+        for i in 0..10u64 {
+            p.observe(&req(1 + (i % 2), 100, 20));
+        }
+        p.observe(&req(1, 100, 20));
+        let (key, tokens, _) = p.predict().expect("a transition out of 1 exists");
+        assert_eq!(key, 2);
+        assert_eq!(tokens, 130); // 100 ctx + 20 new + 10 output
+    }
+
+    #[test]
+    fn predictor_ties_break_to_the_smallest_key() {
+        let mut p = MarkovPredictor::new();
+        // 1→7 and 1→3 once each: the tie must pick 3 deterministically.
+        for nxt in [7u64, 3] {
+            p.observe(&req(1, 50, 10));
+            p.observe(&req(nxt, 50, 10));
+        }
+        p.observe(&req(1, 50, 10));
+        assert_eq!(p.predict().map(|(k, _, _)| k), Some(3));
+    }
+
+    #[test]
+    fn attempt_warms_only_missing_prefixes_and_counts_windows() {
+        let mut cache = LocalStore::new(10_000, 1, PolicyKind::Lru);
+        let mut pf = Prefetcher::new(PrefetchMode::Green);
+        for i in 0..6u64 {
+            pf.observe(&req(1 + (i % 2), 100, 20));
+        }
+        // Next after 2 is 1; 1 is absent → the attempt warms it.
+        let warmed = pf.attempt(&mut cache, 10.0, true);
+        assert_eq!(warmed, Some((1, 130)));
+        assert_eq!(CacheStore::len(&cache), 1);
+        // Same prediction again: now resident → no double warm.
+        assert_eq!(pf.attempt(&mut cache, 11.0, true), None);
+        let s = pf.stats();
+        assert_eq!((s.warmed, s.fired_green, s.fired_idle), (1, 1, 0));
+        assert_eq!(s.warmed_tokens, 130);
+        cache.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn off_mode_never_touches_the_cache() {
+        let mut cache = LocalStore::new(10_000, 1, PolicyKind::Lru);
+        let mut pf = Prefetcher::new(PrefetchMode::Off);
+        for i in 0..6u64 {
+            pf.observe(&req(1 + (i % 2), 100, 20));
+        }
+        assert_eq!(pf.attempt(&mut cache, 10.0, true), None);
+        assert!(CacheStore::is_empty(&cache));
+        assert_eq!(pf.stats(), PrefetchStats::default());
+    }
+
+    #[test]
+    fn green_threshold_is_strictly_below() {
+        let mut pf = Prefetcher::new(PrefetchMode::Green);
+        assert!(!pf.is_green(100.0), "no threshold yet → never green");
+        pf.set_green_ci_threshold(200.0);
+        assert!(pf.is_green(199.9));
+        assert!(!pf.is_green(200.0), "the median itself is not green");
+        assert!(!pf.is_green(250.0));
+    }
+
+    #[test]
+    fn mode_parse_roundtrips() {
+        for m in PrefetchMode::all() {
+            assert_eq!(PrefetchMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(PrefetchMode::parse("GREEN"), Some(PrefetchMode::Green));
+        assert_eq!(PrefetchMode::parse("sometimes"), None);
+    }
+}

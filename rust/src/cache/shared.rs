@@ -486,12 +486,7 @@ mod tests {
 
     #[test]
     fn per_replica_attribution_sums_to_pool_totals_for_every_policy() {
-        for policy in [
-            PolicyKind::Fifo,
-            PolicyKind::Lru,
-            PolicyKind::Lfu,
-            PolicyKind::Lcs,
-        ] {
+        for policy in PolicyKind::all() {
             let store = SharedStore::new(1, policy, &[400, 400]);
             let mut handles = [store.handle(0), store.handle(1)];
             let mut now = 0.0;

@@ -16,12 +16,17 @@ pub struct CarbonBreakdown {
     pub cache_embodied_g: f64,
     /// Amortized GPU/CPU/Mem embodied.
     pub other_embodied_g: f64,
+    /// Operational carbon of speculative prefix warming
+    /// ([`crate::cache::Prefetcher`]), kept as its own line so the
+    /// green-window claim is auditable: prefetch is extra compute the
+    /// run chose to buy, priced at the CI of the hour it fired in.
+    pub prefetch_g: f64,
 }
 
 impl CarbonBreakdown {
-    /// Total emissions across all three sources, grams.
+    /// Total emissions across all sources, grams.
     pub fn total_g(&self) -> f64 {
-        self.operational_g + self.cache_embodied_g + self.other_embodied_g
+        self.operational_g + self.cache_embodied_g + self.other_embodied_g + self.prefetch_g
     }
 
     /// Embodied share of the total (the paper's low-CI regime indicator).
@@ -42,6 +47,7 @@ impl std::ops::Add for CarbonBreakdown {
             operational_g: self.operational_g + o.operational_g,
             cache_embodied_g: self.cache_embodied_g + o.cache_embodied_g,
             other_embodied_g: self.other_embodied_g + o.other_embodied_g,
+            prefetch_g: self.prefetch_g + o.prefetch_g,
         }
     }
 }
@@ -109,6 +115,17 @@ impl CarbonAccountant {
         );
         self.acc.other_embodied_g += self.embodied.non_storage_amortized_g(duration_s);
         self.elapsed_s += duration_s;
+        self.energy_j += energy_j;
+    }
+
+    /// Charge the energy of one prefetch warm at the CI of the hour it
+    /// fired in. Lands in the breakdown's dedicated `prefetch_g` line
+    /// (not `operational_g`) and in the run's energy total; prefetch
+    /// consumes no accounted wall-time of its own — it rides inside
+    /// periods already recorded by [`Self::record_period_split`].
+    pub fn record_prefetch(&mut self, energy_j: f64, ci: Ci) {
+        debug_assert!(energy_j >= 0.0);
+        self.acc.prefetch_g += ci.operational_g(energy_j);
         self.energy_j += energy_j;
     }
 
@@ -231,8 +248,21 @@ mod tests {
             operational_g: 1.0,
             cache_embodied_g: 2.0,
             other_embodied_g: 3.0,
+            prefetch_g: 4.0,
         };
         let s = a + a;
-        assert_eq!(s.total_g(), 12.0);
+        assert_eq!(s.total_g(), 20.0);
+    }
+
+    #[test]
+    fn prefetch_charges_its_own_line_at_the_given_ci() {
+        let mut a = CarbonAccountant::new(EmbodiedModel::default());
+        a.record_prefetch(kwh_to_joules(0.5), Ci(100.0));
+        let b = a.breakdown();
+        assert!((b.prefetch_g - 50.0).abs() < 1e-9);
+        assert_eq!(b.operational_g, 0.0, "prefetch is not base operational");
+        assert!((b.total_g() - 50.0).abs() < 1e-9);
+        assert_eq!(a.elapsed_s(), 0.0, "prefetch adds energy, not wall-time");
+        assert!((a.energy_j() - kwh_to_joules(0.5)).abs() < 1e-9);
     }
 }

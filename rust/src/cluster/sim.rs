@@ -1,8 +1,8 @@
 //! Lockstep multi-replica simulation: spec, driver and fleet aggregation.
 
 use crate::cache::{
-    CacheStats, CacheStore, CacheVariant, LocalStore, PolicyKind, SharedStore, TieredStore,
-    TIERED_HOT_FRACTION,
+    median_ci, CacheStats, CacheStore, CacheVariant, LocalStore, PolicyKind, PrefetchMode,
+    SharedStore, TieredStore, TIERED_HOT_FRACTION,
 };
 use crate::carbon::{CarbonAccountant, TB};
 use crate::ci::Grid;
@@ -104,6 +104,12 @@ pub struct ClusterSpec {
     /// so this stays [`Stepping::FastForward`] outside equivalence
     /// tests.
     pub stepping: Stepping,
+    /// Green-window prefix prefetching for every replica (`greencache
+    /// cluster --prefetch`): each engine's green-hour cutoff is the
+    /// median CI of its *own* grid's evaluated trace, so a duck-curve
+    /// replica buys warms in its troughs while a flat-CI replica only
+    /// uses idle windows.
+    pub prefetch: PrefetchMode,
     /// Cache backend of the fleet (`greencache cluster --cache`):
     /// [`CacheVariant::Local`] gives every replica its own single-tier
     /// store, [`CacheVariant::Tiered`] its own DRAM+SSD store, and
@@ -147,6 +153,7 @@ impl ClusterSpec {
             fixed_rps: None,
             fixed_ci: None,
             stepping: Stepping::default(),
+            prefetch: PrefetchMode::Off,
             cache: CacheVariant::Local,
             fleet: FleetPolicy::PerReplica,
             threads: 1,
@@ -302,6 +309,7 @@ impl ClusterResult {
                 h.operational_g += p.operational_g;
                 h.cache_embodied_g += p.cache_embodied_g;
                 h.other_embodied_g += p.other_embodied_g;
+                h.prefetch_g += p.prefetch_g;
                 h.ci += p.ci;
                 h.p90_ttft_s = h.p90_ttft_s.max(p.p90_ttft_s);
                 h.p90_tpot_s = h.p90_tpot_s.max(p.p90_tpot_s);
@@ -649,11 +657,20 @@ impl ClusterSim {
                 // arrival/workload generators.
                 seed: spec.seed,
                 stepping: spec.stepping,
+                prefetch: spec.prefetch,
             };
             let accountant = CarbonAccountant::new(r.model.embodied());
+            let mut engine = ReplicaEngine::new(cfg, cache, accountant);
+            if spec.prefetch == PrefetchMode::Green && spec.hours > 0 {
+                // Green-hour cutoff = the median CI of this replica's own
+                // evaluated trace window (post-fixed_ci override, so a
+                // flat sensitivity grid never counts as green).
+                let end = (base_hour + spec.hours).min(ci.len());
+                engine.set_green_ci_threshold(median_ci(&ci[base_hour..end]));
+            }
             reps.push(Rep {
                 spec: *r,
-                engine: ReplicaEngine::new(cfg, cache, accountant),
+                engine,
                 recorder: Recorder::default(),
                 ci,
                 routed: 0,

@@ -17,7 +17,7 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::cache::{
-    CacheStore, CacheVariant, LocalStore, PolicyKind, SharedStore, TieredStore,
+    CacheStore, CacheVariant, LocalStore, PolicyKind, PrefetchMode, SharedStore, TieredStore,
     KV_BYTES_PER_TOKEN_70B,
 };
 use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
@@ -80,6 +80,7 @@ pub fn run_day_scale(cfg: &SimBenchConfig, stepping: Stepping) -> (usize, u64) {
         hours: cfg.hours,
         seed: cfg.seed,
         stepping,
+        prefetch: PrefetchMode::Off,
     };
     let params = ConversationParams {
         reply_mu: cfg.reply_mu,
@@ -175,7 +176,9 @@ pub fn sim_report(quick: bool) -> Json {
 /// Schema tag stamped into every report (bump when fields change).
 /// v2 added the `fleet` section to `BENCH_SIM.json`: sequential-vs-
 /// parallel lockstep fleet stepping over a replicas × threads grid.
-pub const BENCH_SCHEMA: &str = "greencache-bench-v2";
+/// v3 added the adaptive policies (ARC/SLRU/2Q) to the churn cases and
+/// the `policy_backend` + `prefetch` sections to `BENCH_CACHE.json`.
+pub const BENCH_SCHEMA: &str = "greencache-bench-v3";
 
 /// The fleet-stepping scenario: one shared-pool fleet of N replicas
 /// spread round-robin over four grids, carbon-greedy routing, load
@@ -388,12 +391,156 @@ pub fn cache_churn_dyn(variant: CacheVariant, n_ops: usize, seed: u64) -> u64 {
     }
 }
 
+/// One cell of the policy × backend sweep: the shared churn op stream
+/// replayed on a `variant` store evicting under `policy`. Returns
+/// `(hit_tokens, input_tokens)` so the report can record the token hit
+/// rate per cell alongside the dispatch wall-clock.
+pub fn policy_backend_churn(
+    policy: PolicyKind,
+    variant: CacheVariant,
+    n_ops: usize,
+    seed: u64,
+) -> (u64, u64) {
+    fn churn(
+        store: &mut dyn CacheStore,
+        ops: usize,
+        rng: &mut Rng,
+        now: &mut f64,
+    ) -> (u64, u64) {
+        let (mut hits, mut input) = (0u64, 0u64);
+        for _ in 0..ops {
+            *now += 0.01;
+            let ctx = rng.below(20_000);
+            let context = rng.range(100, 900) as u32;
+            let r = churn_request(ctx, rng.below(8) as u32, context);
+            hits += store.lookup(&r, *now).hit_tokens as u64;
+            input += (context + r.new_tokens) as u64;
+            store.admit(&r, context + 150, None, *now);
+        }
+        (hits, input)
+    }
+    let mut rng = Rng::new(seed);
+    let mut now = 0.0;
+    match variant {
+        CacheVariant::Local => {
+            let mut m = LocalStore::new(8_000 * 1_000, 1_000, policy);
+            churn(&mut m, n_ops, &mut rng, &mut now)
+        }
+        CacheVariant::Tiered => {
+            let mut m = TieredStore::new(8_000 * 1_000, 0.25, 1_000, policy);
+            churn(&mut m, n_ops, &mut rng, &mut now)
+        }
+        CacheVariant::Shared => {
+            let pool = SharedStore::new(1_000, policy, &[4_000 * 1_000, 4_000 * 1_000]);
+            let mut handles = [pool.handle(0), pool.handle(1)];
+            let (mut hits, mut input) = (0u64, 0u64);
+            let mut i = 0;
+            let mut remaining = n_ops;
+            while remaining > 0 {
+                let burst = remaining.min(32);
+                let (h, t) = churn(&mut handles[i % 2], burst, &mut rng, &mut now);
+                hits += h;
+                input += t;
+                i += 1;
+                remaining -= burst;
+                pool.sync();
+            }
+            (hits, input)
+        }
+    }
+}
+
+/// Off-vs-green prefetch comparison: the same sparse conversation day
+/// (idle gaps + a varying CI, so both firing windows exist; a small
+/// conversation pool keeps the Markov table dense; a cache far smaller
+/// than the working set keeps eviction pressure on, so predicted
+/// prefixes are genuinely missing when a window opens) replayed with
+/// the prefetcher off and on. The `prefetch` section of
+/// `BENCH_CACHE.json` records each mode's token hit rate, the warm
+/// count, and the grams attributed to speculative warming — the
+/// hit-rate delta is the prefetcher's payoff on this day.
+pub fn prefetch_report(quick: bool) -> Json {
+    let hours = if quick { 2 } else { 6 };
+    let rps = 0.05;
+    let mut modes = Vec::new();
+    let mut hit_rates = Vec::new();
+    for mode in PrefetchMode::all() {
+        let cfg = SimConfig {
+            cost: CostModel::llama70b_4xl40(),
+            power: PowerModel::default(),
+            slo: Slo::conv_70b(),
+            interval_s: 900.0,
+            hours,
+            seed: 23,
+            stepping: Stepping::FastForward,
+            prefetch: mode,
+        };
+        let params = ConversationParams {
+            pool: 8,
+            ..ConversationParams::default()
+        };
+        let mut wl = ConversationGen::new(params, 23);
+        let mut cache =
+            LocalStore::new((0.002 * TB) as u64, KV_BYTES_PER_TOKEN_70B, PolicyKind::Arc);
+        let r = simulate(
+            &cfg,
+            &mut wl,
+            &|_| rps,
+            // Alternating dirty/clean hours: the clean ones sit below
+            // the run's median CI, so green windows exist.
+            &|h| if h % 2 == 0 { 120.0 } else { 60.0 },
+            &mut cache,
+            CarbonAccountant::new(EmbodiedModel::default()),
+            &mut FixedController,
+        );
+        let p = r.prefetch;
+        println!(
+            "bench cache/prefetch[{:<5}] hit_rate={:.4} warmed={} prefetch_g={:.4}",
+            mode.name(),
+            r.token_hit_rate,
+            p.warmed,
+            r.accountant.breakdown().prefetch_g,
+        );
+        hit_rates.push(r.token_hit_rate);
+        modes.push((
+            mode.name(),
+            Json::obj(vec![
+                ("token_hit_rate", Json::Num(r.token_hit_rate)),
+                ("attempts", Json::Num(p.attempts as f64)),
+                ("warmed", Json::Num(p.warmed as f64)),
+                ("warmed_tokens", Json::Num(p.warmed_tokens as f64)),
+                ("fired_green", Json::Num(p.fired_green as f64)),
+                ("fired_idle", Json::Num(p.fired_idle as f64)),
+                ("energy_j", Json::Num(p.energy_j)),
+                (
+                    "prefetch_g",
+                    Json::Num(r.accountant.breakdown().prefetch_g),
+                ),
+            ]),
+        ));
+    }
+    let mut fields = vec![
+        ("hours", Json::Num(hours as f64)),
+        ("rps", Json::Num(rps)),
+        ("policy", Json::Str(PolicyKind::Arc.name().into())),
+        (
+            "hit_rate_delta",
+            Json::Num(hit_rates[1] - hit_rates[0]),
+        ),
+    ];
+    fields.extend(modes);
+    Json::obj(fields)
+}
+
 /// Measure churn throughput per eviction policy (concrete static
 /// dispatch — the pre-trait path, case names unchanged for report
-/// continuity) and per [`CacheStore`] backend through dynamic dispatch,
+/// continuity; v3 extends the sweep to the adaptive ARC/SLRU/2Q
+/// policies) and per [`CacheStore`] backend through dynamic dispatch,
 /// then return the report. `BENCH_CACHE.json` thereby tracks the
 /// trait-dispatch overhead (`dyn_local` vs `…_LCS`) alongside the
-/// tiered/shared backend costs.
+/// tiered/shared backend costs, plus the full policy × backend token-
+/// hit-rate/dispatch sweep (`policy_backend`) and the off-vs-green
+/// prefetcher comparison (`prefetch`).
 pub fn cache_report(quick: bool) -> Json {
     let n_ops = if quick { 5_000 } else { 20_000 };
     // Quick (CI smoke) profile: one measured pass per case.
@@ -402,12 +549,7 @@ pub fn cache_report(quick: bool) -> Json {
     } else {
         Bench::new("cache")
     };
-    for policy in [
-        PolicyKind::Fifo,
-        PolicyKind::Lru,
-        PolicyKind::Lfu,
-        PolicyKind::Lcs,
-    ] {
+    for policy in PolicyKind::all() {
         let r = b.case(&format!("churn_{}k_ops_{}", n_ops / 1_000, policy.name()), || {
             black_box(cache_churn(policy, n_ops, 42))
         });
@@ -444,6 +586,38 @@ pub fn cache_report(quick: bool) -> Json {
                 .collect(),
         ),
     );
+    // The tentpole sweep: every policy on every backend, token hit rate
+    // + dispatch wall per cell under one shared op stream.
+    let sweep_ops = if quick { 2_000 } else { 10_000 };
+    let mut sweep = Vec::new();
+    for policy in PolicyKind::all() {
+        for variant in CacheVariant::all() {
+            let t0 = Instant::now();
+            let (hits, input) = policy_backend_churn(policy, variant, sweep_ops, 42);
+            let wall_s = t0.elapsed().as_secs_f64();
+            sweep.push(Json::obj(vec![
+                ("policy", Json::Str(policy.name().into())),
+                ("backend", Json::Str(variant.name().into())),
+                (
+                    "token_hit_rate",
+                    Json::Num(hits as f64 / input.max(1) as f64),
+                ),
+                ("wall_s", Json::Num(wall_s)),
+                (
+                    "ops_per_s",
+                    Json::Num(sweep_ops as f64 / wall_s.max(1e-9)),
+                ),
+            ]));
+        }
+    }
+    println!(
+        "bench cache/policy_backend sweep: {} cells x {}k ops",
+        sweep.len(),
+        sweep_ops / 1_000
+    );
+    j.insert("policy_backend_ops".into(), Json::Num(sweep_ops as f64));
+    j.insert("policy_backend".into(), Json::Array(sweep));
+    j.insert("prefetch".into(), prefetch_report(quick));
     Json::Object(j)
 }
 
@@ -500,6 +674,25 @@ mod tests {
         let b = cache_churn(PolicyKind::Lcs, 2_000, 7);
         assert_eq!(a, b);
         assert!(a > 0);
+    }
+
+    #[test]
+    fn adaptive_policies_survive_the_churn_cases() {
+        for policy in [PolicyKind::Arc, PolicyKind::Slru, PolicyKind::TwoQ] {
+            let a = cache_churn(policy, 2_000, 7);
+            assert_eq!(a, cache_churn(policy, 2_000, 7), "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn policy_backend_sweep_cells_are_deterministic_and_do_work() {
+        for variant in CacheVariant::all() {
+            let (hits, input) = policy_backend_churn(PolicyKind::Arc, variant, 1_000, 7);
+            let again = policy_backend_churn(PolicyKind::Arc, variant, 1_000, 7);
+            assert_eq!((hits, input), again, "{} cell not deterministic", variant.name());
+            assert!(input > 0, "{} cell saw no input tokens", variant.name());
+            assert!(hits <= input, "{} hit more than it saw", variant.name());
+        }
     }
 
     #[test]

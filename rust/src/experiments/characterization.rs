@@ -127,6 +127,7 @@ fn rate_point(task: Task, rps: f64, cache_tb: f64, seed: u64, quick: bool) -> Si
         hours: if quick { 1 } else { 2 },
         seed,
         stepping: Stepping::FastForward,
+        prefetch: crate::cache::PrefetchMode::Off,
     };
     let mut wl = task.make_workload(seed);
     let mut cache = LocalStore::new(
@@ -243,6 +244,7 @@ pub fn fig7(quick: bool) -> Csv {
                 hours: if quick { 1 } else { 2 },
                 seed: 54,
                 stepping: Stepping::FastForward,
+                prefetch: crate::cache::PrefetchMode::Off,
             };
             let mut wl = Task::Conversation.make_workload(54);
             let mut cache = LocalStore::new(
@@ -298,6 +300,7 @@ pub fn fig8(quick: bool) -> Csv {
             hours: if quick { 1 } else { 2 },
             seed: 55,
             stepping: Stepping::FastForward,
+            prefetch: crate::cache::PrefetchMode::Off,
         };
         let mut wl = Task::Conversation.make_workload(55);
         let mut cache =
@@ -353,6 +356,7 @@ pub fn fig8(quick: bool) -> Csv {
             hours: 1,
             seed: 56 + h as u64,
             stepping: Stepping::FastForward,
+            prefetch: crate::cache::PrefetchMode::Off,
         };
         let run = |cache_tb: f64, seed: u64| {
             let mut wl = Task::Conversation.make_workload(seed);

@@ -18,8 +18,8 @@ pub mod evaluation;
 pub mod fleet;
 
 use crate::cache::{
-    CacheStore, CacheVariant, LocalStore, PolicyKind, TieredStore, KV_BYTES_PER_TOKEN_70B,
-    KV_BYTES_PER_TOKEN_8B, TIERED_HOT_FRACTION,
+    CacheStore, CacheVariant, LocalStore, PolicyKind, PrefetchMode, TieredStore,
+    KV_BYTES_PER_TOKEN_70B, KV_BYTES_PER_TOKEN_8B, TIERED_HOT_FRACTION,
 };
 use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
 use crate::ci::Grid;
@@ -260,6 +260,11 @@ pub struct DayScenario {
     /// single node — a one-replica pool *is* a local store (the cluster
     /// layer pins that equivalence byte-for-byte).
     pub cache_variant: CacheVariant,
+    /// Green-window prefix prefetching: [`PrefetchMode::Green`] warms
+    /// the Markov-predicted next prefix during below-median-CI hours and
+    /// idle gaps, its carbon charged to the run's ledger
+    /// ([`crate::carbon::CarbonBreakdown::prefetch_g`]).
+    pub prefetch: PrefetchMode,
 }
 
 impl DayScenario {
@@ -283,6 +288,7 @@ impl DayScenario {
             fixed_ci: None,
             policy_override: None,
             cache_variant: CacheVariant::Local,
+            prefetch: PrefetchMode::Off,
         }
     }
 
@@ -441,6 +447,7 @@ pub fn run_day(sc: &DayScenario, profiles: &mut ProfileStore) -> DayResult {
         hours: sc.hours,
         seed: sc.seed,
         stepping: Stepping::FastForward,
+        prefetch: sc.prefetch,
     };
     let accountant = CarbonAccountant::new(embodied.clone());
 

@@ -3,21 +3,26 @@
 //! Subcommands (hand-rolled parsing; the offline build has no clap):
 //!
 //! ```text
-//! greencache serve    [--requests N] [--cache-mb M] [--policy lcs|lru|fifo|lfu]
+//! greencache serve    [--requests N] [--cache-mb M]
+//!                     [--policy lcs|lru|fifo|lfu|arc|slru|2q]
 //! greencache simulate [--task conv|doc04|doc07] [--grid FR|FI|ES|CISO|...]
 //!                     [--baseline none|full|green|lru-optimal] [--hours H] [--quick]
 //! greencache cluster  [--grids FR,MISO,...] [--router rr|jsq|greedy|weighted|all]
 //!                     [--task conv|doc04|doc07] [--baseline none|full|green]
 //!                     [--cache local|tiered|shared]
+//!                     [--policy lcs|lru|fifo|lfu|arc|slru|2q]  (eviction override)
+//!                     [--prefetch off|green]  (green-window prefix warming)
 //!                     [--fleet per-replica|green|all]
 //!                     [--threads N]   (lockstep replica stepping; 1 = sequential,
 //!                                      0 = one per core — byte-identical results)
 //!                     [--hours H] [--rps R] [--quick]
 //! greencache matrix   [--models 70b,8b] [--tasks conv,doc04,doc07]
 //!                     [--grids FR,ES,...] [--baselines none,full,green]
-//!                     [--policies lcs,lru] [--caches local,tiered,shared]
+//!                     [--policies lcs,lru,arc,slru,2q]
+//!                     [--caches local,tiered,shared]
 //!                     [--cluster FR+MISO[@rr|jsq|greedy|weighted]]
 //!                     [--fleets per-replica,green]
+//!                     [--prefetches off,green]
 //!                     [--cell-threads N]   (within-cell replica stepping)
 //!                     [--hours H] [--threads N] [--seed S] [--quick]
 //! greencache profile  [--task conv|doc04|doc07] [--quick]
@@ -26,7 +31,7 @@
 //! greencache info
 //! ```
 
-use greencache::cache::{CacheVariant, PolicyKind};
+use greencache::cache::{CacheVariant, PolicyKind, PrefetchMode};
 use greencache::ci::Grid;
 use greencache::cluster::{run_cluster, ClusterSpec, RouterPolicy};
 use greencache::control::FleetPolicy;
@@ -114,11 +119,21 @@ fn parse_policy(s: &str) -> PolicyKind {
         "lru" => PolicyKind::Lru,
         "fifo" => PolicyKind::Fifo,
         "lfu" => PolicyKind::Lfu,
+        "arc" => PolicyKind::Arc,
+        "slru" => PolicyKind::Slru,
+        "2q" | "twoq" => PolicyKind::TwoQ,
         other => {
             eprintln!("unknown policy {other}, using lcs");
             PolicyKind::Lcs
         }
     }
+}
+
+fn parse_prefetch(s: &str) -> PrefetchMode {
+    PrefetchMode::parse(s).unwrap_or_else(|| {
+        eprintln!("unknown prefetch mode {s}, using off");
+        PrefetchMode::Off
+    })
 }
 
 fn parse_cache(s: &str) -> CacheVariant {
@@ -296,6 +311,8 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
     let task = parse_task(args.get("task").unwrap_or("conv"));
     let baseline = parse_baseline(args.get("baseline").unwrap_or("green"));
     let cache = parse_cache(args.get("cache").unwrap_or("local"));
+    let policy: Option<PolicyKind> = args.get("policy").map(parse_policy);
+    let prefetch = parse_prefetch(args.get("prefetch").unwrap_or("off"));
     let quick = args.bool("quick");
     let routers: Vec<RouterPolicy> = match args.get("router").unwrap_or("all") {
         "all" => RouterPolicy::all().to_vec(),
@@ -330,6 +347,8 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
             let mut spec = ClusterSpec::homogeneous(Model::Llama70B, task, &grids, *router);
             spec.baseline = baseline;
             spec.cache = cache;
+            spec.policy = policy;
+            spec.prefetch = prefetch;
             spec.fleet = *fleet;
             spec.threads = args.usize("threads", 1);
             spec.hours = args.usize("hours", 24);
@@ -338,7 +357,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
             }
             spec.fixed_rps = fixed_rps;
             println!(
-                "fleet {} x{} | {} | {} | router {} | cache {} | fleet-ctl {} ({}h)...",
+                "fleet {} x{} | {} | {} | router {} | cache {} | fleet-ctl {} | prefetch {} ({}h)...",
                 spec.fleet_label(),
                 spec.replicas.len(),
                 task.name(),
@@ -346,6 +365,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
                 router.name(),
                 cache.name(),
                 fleet.name(),
+                prefetch.name(),
                 spec.hours
             );
             let result = run_cluster(&spec, &mut profiles);
@@ -448,6 +468,7 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
     if fleets.len() > 1 && clusters == vec![None] {
         eprintln!("note: --fleets only differentiates fleet cells; pass --cluster too");
     }
+    let prefetches = parse_list(args, "prefetches", "off", parse_prefetch);
 
     let matrix = Matrix::new()
         .models(&models)
@@ -458,6 +479,7 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         .caches(&caches)
         .clusters(&clusters)
         .fleets(&fleets)
+        .prefetches(&prefetches)
         .hours(args.usize("hours", 24))
         .quick(args.bool("quick"))
         .seed(args.usize("seed", 20_25) as u64)
@@ -470,7 +492,7 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         verbose: true,
     };
     println!(
-        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies x {} caches x {} fleets)...",
+        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies x {} caches x {} fleets x {} prefetches)...",
         specs.len(),
         models.len(),
         tasks.len(),
@@ -478,7 +500,8 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         baselines.len(),
         policies.len(),
         caches.len(),
-        fleets.len()
+        fleets.len(),
+        prefetches.len()
     );
     let result = runner.run(&specs);
     print!("{}", result.table());

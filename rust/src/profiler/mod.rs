@@ -193,6 +193,7 @@ pub fn profile(
                 hours: cfg.window_hours.max(1),
                 seed,
                 stepping: Stepping::FastForward,
+                prefetch: crate::cache::PrefetchMode::Off,
             };
             // CI is irrelevant for the performance/power profile; carbon
             // coefficients are assembled later from (power, CI).

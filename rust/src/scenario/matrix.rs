@@ -1,15 +1,15 @@
 //! Cartesian matrix expander: axis values → a deterministic cell list.
 
 use super::{workload_seed, ClusterVariant, ScenarioSpec};
-use crate::cache::{CacheVariant, PolicyKind};
+use crate::cache::{CacheVariant, PolicyKind, PrefetchMode};
 use crate::ci::Grid;
 use crate::control::FleetPolicy;
 use crate::experiments::{Baseline, Model, Task};
 
 /// A declarative scenario matrix. Every axis is a list of values; the
 /// expansion is their cartesian product in a fixed order (model-major,
-/// then task, grid, baseline, policy, cache, cluster, fleet), so cell
-/// order — and therefore the golden table — is stable.
+/// then task, grid, baseline, policy, cache, cluster, fleet, prefetch),
+/// so cell order — and therefore the golden table — is stable.
 ///
 /// # Example
 ///
@@ -57,6 +57,11 @@ pub struct Matrix {
     /// whose cluster axis is all-fleet, or the single-node cells repeat
     /// per entry).
     pub fleets: Vec<FleetPolicy>,
+    /// Prefetch axis (`greencache matrix --prefetches`): whether each
+    /// cell runs green-window prefix prefetching. Off/Green pairs
+    /// replay the identical day (the axis never shapes workload seeds),
+    /// so the prefetcher's hit-rate delta is directly readable.
+    pub prefetches: Vec<PrefetchMode>,
     /// Evaluated horizon per cell, hours.
     pub hours: usize,
     /// Shrunken warm-up/profile smoke mode.
@@ -89,6 +94,7 @@ impl Matrix {
             caches: vec![CacheVariant::Local],
             clusters: vec![None],
             fleets: vec![FleetPolicy::PerReplica],
+            prefetches: vec![PrefetchMode::Off],
             hours: 24,
             quick: false,
             base_seed: 20_25,
@@ -147,6 +153,12 @@ impl Matrix {
         self
     }
 
+    /// Set the prefetch axis (off / green-window prefix warming).
+    pub fn prefetches(mut self, v: &[PrefetchMode]) -> Self {
+        self.prefetches = v.to_vec();
+        self
+    }
+
     /// Set the per-cell horizon, hours.
     pub fn hours(mut self, h: usize) -> Self {
         self.hours = h;
@@ -200,6 +212,7 @@ impl Matrix {
             * self.caches.len()
             * self.clusters.len()
             * self.fleets.len()
+            * self.prefetches.len()
     }
 
     /// Whether the expansion would be empty.
@@ -219,22 +232,25 @@ impl Matrix {
                             for &cache in &self.caches {
                                 for cluster in &self.clusters {
                                     for &fleet in &self.fleets {
-                                        let mut spec =
-                                            ScenarioSpec::new(model, task, grid, baseline);
-                                        spec.policy = policy;
-                                        spec.hours = self.hours;
-                                        spec.seed = seed;
-                                        spec.interval_s = self.interval_s;
-                                        spec.fixed_rps = self.fixed_rps;
-                                        spec.fixed_ci = self.fixed_ci;
-                                        spec.cache = cache;
-                                        spec.cluster = cluster.clone();
-                                        spec.fleet = fleet;
-                                        spec.threads = self.cell_threads;
-                                        if self.quick {
-                                            spec = spec.quick();
+                                        for &prefetch in &self.prefetches {
+                                            let mut spec =
+                                                ScenarioSpec::new(model, task, grid, baseline);
+                                            spec.policy = policy;
+                                            spec.hours = self.hours;
+                                            spec.seed = seed;
+                                            spec.interval_s = self.interval_s;
+                                            spec.fixed_rps = self.fixed_rps;
+                                            spec.fixed_ci = self.fixed_ci;
+                                            spec.cache = cache;
+                                            spec.cluster = cluster.clone();
+                                            spec.fleet = fleet;
+                                            spec.threads = self.cell_threads;
+                                            spec.prefetch = prefetch;
+                                            if self.quick {
+                                                spec = spec.quick();
+                                            }
+                                            cells.push(spec);
                                         }
-                                        cells.push(spec);
                                     }
                                 }
                             }
@@ -367,6 +383,22 @@ mod tests {
         let seq: Vec<String> = small().expand().iter().map(|c| c.label()).collect();
         let par: Vec<String> = cells.iter().map(|c| c.label()).collect();
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn prefetch_axis_multiplies_cells_and_shares_seeds() {
+        let m = small().prefetches(&PrefetchMode::all());
+        assert_eq!(m.len(), 8 * 2);
+        let cells = m.expand();
+        // The prefetch axis is innermost: consecutive pairs differ only
+        // by prefetch mode and replay the identical day.
+        for w in cells.chunks(2) {
+            assert_eq!(w[0].seed, w[1].seed);
+            assert_eq!(w[0].prefetch, PrefetchMode::Off);
+            assert_eq!(w[1].prefetch, PrefetchMode::Green);
+            assert!(w[1].label().ends_with("/prefetch=green"), "{}", w[1].label());
+            assert!(!w[0].label().contains("prefetch="), "{}", w[0].label());
+        }
     }
 
     #[test]

@@ -26,7 +26,7 @@ mod runner;
 pub use matrix::Matrix;
 pub use runner::{run_specs, CellResult, MatrixResult, MatrixRunner};
 
-use crate::cache::{CacheVariant, PolicyKind};
+use crate::cache::{CacheVariant, PolicyKind, PrefetchMode};
 use crate::ci::Grid;
 use crate::cluster::{ClusterSpec, ReplicaSpec, RouterPolicy};
 use crate::control::FleetPolicy;
@@ -148,6 +148,11 @@ pub struct ScenarioSpec {
     /// so it never appears in [`ScenarioSpec::label`] and goldens are
     /// unaffected. Single-node cells ignore it.
     pub threads: usize,
+    /// Green-window prefix prefetching (the matrix prefetch axis):
+    /// [`PrefetchMode::Off`] (the unlabeled default) or
+    /// [`PrefetchMode::Green`], which warms the Markov-predicted next
+    /// prefix during below-median-CI hours and idle gaps.
+    pub prefetch: PrefetchMode,
 }
 
 impl ScenarioSpec {
@@ -169,6 +174,7 @@ impl ScenarioSpec {
             cache: CacheVariant::Local,
             fleet: FleetPolicy::PerReplica,
             threads: 1,
+            prefetch: PrefetchMode::Off,
         }
     }
 
@@ -216,6 +222,7 @@ impl ScenarioSpec {
             cache: self.cache,
             fleet: self.fleet,
             threads: self.threads,
+            prefetch: self.prefetch,
         })
     }
 
@@ -230,6 +237,7 @@ impl ScenarioSpec {
         sc.fixed_rps = self.fixed_rps;
         sc.fixed_ci = self.fixed_ci;
         sc.cache_variant = self.cache;
+        sc.prefetch = self.prefetch;
         sc
     }
 
@@ -238,7 +246,8 @@ impl ScenarioSpec {
     /// append `/fleet[FR+MISO]/carbon-greedy`, non-default cache
     /// backends `/cache=tiered` or `/cache=shared`, and fleet cells
     /// under the joint planner `/fleet=green` (the per-replica default
-    /// stays unlabeled, so pre-planner golden tables are unchanged).
+    /// stays unlabeled, so pre-planner golden tables are unchanged), and
+    /// prefetch-enabled cells `/prefetch=green` (off stays unlabeled).
     pub fn label(&self) -> String {
         let mut s = format!(
             "{}/{}/{}/{}",
@@ -262,6 +271,10 @@ impl ScenarioSpec {
         if self.cluster.is_some() && self.fleet != FleetPolicy::PerReplica {
             s.push_str("/fleet=");
             s.push_str(self.fleet.name());
+        }
+        if self.prefetch != PrefetchMode::Off {
+            s.push_str("/prefetch=");
+            s.push_str(self.prefetch.name());
         }
         s
     }
@@ -454,6 +467,31 @@ mod tests {
         assert_eq!(spec.to_cluster_spec().unwrap().threads, 8);
         // A wall-clock knob must never shape golden labels.
         assert_eq!(spec.label(), base_label);
+    }
+
+    #[test]
+    fn prefetch_axis_lowers_and_labels() {
+        use crate::cluster::RouterPolicy;
+        let mut spec = ScenarioSpec::new(
+            Model::Llama70B,
+            Task::Conversation,
+            Grid::Es,
+            Baseline::FullCache,
+        );
+        assert_eq!(spec.prefetch, PrefetchMode::Off);
+        assert!(!spec.label().contains("prefetch="), "off is the unlabeled default");
+        assert_eq!(spec.to_day_scenario().prefetch, PrefetchMode::Off);
+        spec.prefetch = PrefetchMode::Green;
+        assert!(spec.label().ends_with("/prefetch=green"));
+        assert_eq!(spec.to_day_scenario().prefetch, PrefetchMode::Green);
+        spec.cluster = Some(ClusterVariant::new(
+            &[Grid::Fr, Grid::Miso],
+            RouterPolicy::CarbonGreedy,
+        ));
+        assert_eq!(
+            spec.to_cluster_spec().expect("fleet").prefetch,
+            PrefetchMode::Green
+        );
     }
 
     #[test]

@@ -91,7 +91,7 @@
 
 use std::collections::VecDeque;
 
-use crate::cache::CacheStore;
+use crate::cache::{median_ci, CacheStore, PrefetchMode, PrefetchStats, Prefetcher};
 use crate::carbon::{CarbonAccountant, CarbonBreakdown, Ci, PowerModel};
 use crate::metrics::{Slo, SloTracker};
 use crate::workload::{ArrivalGen, Request, Workload};
@@ -102,6 +102,10 @@ use super::cost::CostModel;
 /// (simulations must terminate even when the offered load exceeds
 /// capacity forever).
 const MAX_ITERATIONS: u64 = 500_000_000;
+
+/// Warms a green-window boundary may chain (one idle gap fires a single
+/// attempt; an upcoming green hour warms a short run of predictions).
+const PREFETCH_CHAIN: usize = 4;
 
 /// Per-request lifecycle record.
 #[derive(Debug, Clone)]
@@ -192,6 +196,8 @@ pub struct HourSample {
     pub cache_embodied_g: f64,
     /// Non-storage embodied emissions over the interval, grams.
     pub other_embodied_g: f64,
+    /// Carbon of prefetch warms charged during the interval, grams.
+    pub prefetch_g: f64,
 }
 
 /// Full simulation outcome.
@@ -213,6 +219,8 @@ pub struct SimResult {
     pub token_hit_rate: f64,
     /// Engine iterations executed.
     pub iterations: u64,
+    /// Green-window prefetch activity (all-zero when prefetch is off).
+    pub prefetch: PrefetchStats,
 }
 
 impl SimResult {
@@ -274,6 +282,11 @@ pub struct SimConfig {
     /// Event-stepping mode; [`Stepping::FastForward`] unless a test pins
     /// the per-iteration reference loop.
     pub stepping: Stepping,
+    /// Green-window prefix prefetching ([`PrefetchMode::Off`] is the
+    /// paper baseline; drivers must set the engine's green threshold —
+    /// see [`ReplicaEngine::set_green_ci_threshold`] — for green hours
+    /// to fire).
+    pub prefetch: PrefetchMode,
 }
 
 /// One replica's steppable discrete-event engine.
@@ -332,6 +345,8 @@ pub struct ReplicaEngine<'c> {
     // §5.4.2 assumption 2).
     pending_energy_j: f64,
     pending_time_s: f64,
+    // Green-window prefix prefetcher (no-op in PrefetchMode::Off).
+    prefetcher: Prefetcher,
 }
 
 impl<'c> ReplicaEngine<'c> {
@@ -343,6 +358,7 @@ impl<'c> ReplicaEngine<'c> {
     ) -> Self {
         let prev_breakdown = accountant.breakdown();
         let slo = SloTracker::new(cfg.slo);
+        let prefetcher = Prefetcher::new(cfg.prefetch);
         ReplicaEngine {
             cfg,
             cache,
@@ -364,7 +380,21 @@ impl<'c> ReplicaEngine<'c> {
             completed: 0,
             pending_energy_j: 0.0,
             pending_time_s: 0.0,
+            prefetcher,
         }
+    }
+
+    /// Set the green-hour CI cutoff (the run's median CI over its
+    /// evaluated hours). Drivers compute it up front — deterministically,
+    /// from the same trace the run evaluates — so "green" is a pure
+    /// function of simulated time.
+    pub fn set_green_ci_threshold(&mut self, gco2_per_kwh: f64) {
+        self.prefetcher.set_green_ci_threshold(gco2_per_kwh);
+    }
+
+    /// Prefetch activity so far (all-zero when prefetch is off).
+    pub fn prefetch_stats(&self) -> PrefetchStats {
+        self.prefetcher.stats()
     }
 
     /// Engine clock, seconds from simulation start.
@@ -422,6 +452,7 @@ impl<'c> ReplicaEngine<'c> {
     /// the real router.
     pub fn inject(&mut self, req: Request) {
         self.interval_arrived += 1;
+        self.prefetcher.observe(&req);
         let hit = self.cache.lookup(&req, req.arrival_s);
         let computed = req.prompt_tokens() - hit.hit_tokens;
         self.waiting.push_back(InFlight {
@@ -456,7 +487,7 @@ impl<'c> ReplicaEngine<'c> {
                 break;
             }
             if self.is_idle() {
-                self.idle_advance(t);
+                self.idle_advance(t, ci_of_hour);
                 continue;
             }
             self.step(t);
@@ -512,6 +543,7 @@ impl<'c> ReplicaEngine<'c> {
             mean_tpot_s,
             token_hit_rate: self.cache.stats().token_hit_rate(),
             iterations: self.iterations,
+            prefetch: self.prefetcher.stats(),
         };
         (result, self.cache)
     }
@@ -541,6 +573,7 @@ impl<'c> ReplicaEngine<'c> {
             let delta_op = b.operational_g - self.prev_breakdown.operational_g;
             let delta_cache = b.cache_embodied_g - self.prev_breakdown.cache_embodied_g;
             let delta_other = b.other_embodied_g - self.prev_breakdown.other_embodied_g;
+            let delta_prefetch = b.prefetch_g - self.prev_breakdown.prefetch_g;
             self.prev_breakdown = b;
 
             let mut tt = crate::metrics::LatencyStats::new();
@@ -575,12 +608,36 @@ impl<'c> ReplicaEngine<'c> {
                 completed: self.interval_completed,
                 p90_ttft_s: if tt.is_empty() { 0.0 } else { tt.p90() },
                 p90_tpot_s: if tp.is_empty() { 0.0 } else { tp.p90() },
-                carbon_g: delta_op + delta_cache + delta_other,
+                carbon_g: delta_op + delta_cache + delta_other + delta_prefetch,
                 operational_g: delta_op,
                 cache_embodied_g: delta_cache,
                 other_embodied_g: delta_other,
+                prefetch_g: delta_prefetch,
             });
             controller.on_interval(self.interval_idx, &obs, self.cache.as_mut());
+            // Green-window hook: if the *upcoming* interval sits in a
+            // below-median-CI hour, buy a short chain of prefix warms now
+            // — their carbon lands in that interval's sample, charged at
+            // its CI. Fires after the controller so warms land in the
+            // resized cache.
+            let next_start_s = (self.interval_idx + 1) as f64 * self.cfg.interval_s;
+            if next_start_s < self.cfg.hours as f64 * 3600.0 {
+                let next_hour =
+                    ((next_start_s / 3600.0) as usize).min(self.cfg.hours.saturating_sub(1));
+                let ci = ci_of_hour(next_hour);
+                if self.prefetcher.is_green(ci) {
+                    for _ in 0..PREFETCH_CHAIN {
+                        match self.prefetcher.attempt(self.cache.as_mut(), self.now, true) {
+                            Some((_, tokens)) => {
+                                let e = self.prefetch_energy_j(tokens);
+                                self.prefetcher.note_energy(e);
+                                self.accountant.record_prefetch(e, Ci(ci));
+                            }
+                            None => break,
+                        }
+                    }
+                }
+            }
             self.interval_idx += 1;
             self.interval_ttft.clear();
             self.interval_tpot.clear();
@@ -608,11 +665,44 @@ impl<'c> ReplicaEngine<'c> {
         }
     }
 
+    /// Prefill energy of warming `tokens` as a standalone chunked
+    /// prefill (empty batch), priced at the platform's iteration power —
+    /// the cost a warm is charged to the ledger.
+    fn prefetch_energy_j(&self, tokens: u32) -> f64 {
+        let tiers = self.cache.tier_bytes();
+        let mut remaining = tokens;
+        let mut energy = 0.0;
+        while remaining > 0 {
+            let chunk = remaining.min(self.cfg.cost.prefill_budget.max(1));
+            let t = self.cfg.cost.iteration_s(chunk, 0);
+            let p = self.cfg.power.sample_split(
+                self.cfg.cost.gpu_util(chunk, 0),
+                0.15,
+                tiers.ssd as f64 / 1e12,
+                tiers.dram as f64 / 1e12,
+                0.05,
+            );
+            energy += p.total_w() * t;
+            remaining -= chunk;
+        }
+        energy
+    }
+
     /// Jump an empty engine forward to `target`, accounting idle power.
-    fn idle_advance(&mut self, target: f64) {
+    /// An idle gap is also a prefetch window: one warm may fire at the
+    /// gap's start (whatever the hour's CI — idle compute is the other
+    /// lever next to green hours), charged at that hour's CI.
+    fn idle_advance(&mut self, target: f64, ci_of_hour: &dyn Fn(usize) -> f64) {
         let target = target.max(self.now);
         let idle = target - self.now;
         if idle > 0.0 {
+            let hour = ((self.now / 3600.0) as usize).min(self.cfg.hours.saturating_sub(1));
+            if let Some((_, tokens)) = self.prefetcher.attempt(self.cache.as_mut(), self.now, false)
+            {
+                let e = self.prefetch_energy_j(tokens);
+                self.prefetcher.note_energy(e);
+                self.accountant.record_prefetch(e, Ci(ci_of_hour(hour)));
+            }
             let tiers = self.cache.tier_bytes();
             let p = self.cfg.power.sample_split(
                 0.0,
@@ -857,6 +947,13 @@ pub fn simulate(
     // `CacheStore` by delegation, so the engine runs over the caller's
     // store in place and hands the borrow back when dropped.
     let mut engine = ReplicaEngine::new(cfg.clone(), Box::new(cache), accountant);
+    // The green-hour cutoff is the run's own median CI — computed from
+    // the same trace the run evaluates, so prefetch eligibility is a
+    // pure function of simulated time.
+    if cfg.prefetch == PrefetchMode::Green && cfg.hours > 0 {
+        let cis: Vec<f64> = (0..cfg.hours).map(|h| ci_of_hour(h)).collect();
+        engine.set_green_ci_threshold(median_ci(&cis));
+    }
 
     let mut next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
     while next_arrival < horizon_s {

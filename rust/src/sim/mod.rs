@@ -53,6 +53,7 @@ mod tests {
             hours,
             seed,
             stepping,
+            prefetch: crate::cache::PrefetchMode::Off,
         };
         let mut wl = ConversationGen::new(ConversationParams::default(), seed);
         let mut cache = LocalStore::new(
@@ -215,6 +216,7 @@ mod tests {
             hours: 1,
             seed,
             stepping: Stepping::FastForward,
+            prefetch: crate::cache::PrefetchMode::Off,
         };
         let mut wl = ConversationGen::new(ConversationParams::default(), seed);
         if warm > 0 {
@@ -312,6 +314,7 @@ mod tests {
             hours: 1,
             seed: 9,
             stepping: Stepping::FastForward,
+            prefetch: crate::cache::PrefetchMode::Off,
         };
         let mut wl = ConversationGen::new(ConversationParams::default(), 9);
         let mut cache =

@@ -100,6 +100,7 @@ fn run(sc: &Scenario, stepping: Stepping) -> SimResult {
         hours: sc.hours,
         seed: sc.seed,
         stepping,
+        prefetch: greencache::cache::PrefetchMode::Off,
     };
     let mut wl = sc.task.make_workload(sc.seed);
     let mut cache = LocalStore::new(

@@ -16,7 +16,7 @@
 //! aggregates, and the JSON serializer must emit `0` — not the `null`
 //! that `fold(NEG_INFINITY, max)` leaked before the fix.
 
-use greencache::cache::CacheVariant;
+use greencache::cache::{CacheVariant, PrefetchMode};
 use greencache::ci::Grid;
 use greencache::cluster::{run_cluster, ClusterSpec, RouterPolicy};
 use greencache::control::FleetPolicy;
@@ -62,6 +62,32 @@ fn every_cache_backend_is_thread_invariant() {
                 threads
             );
         }
+    }
+}
+
+#[test]
+fn prefetch_enabled_fleet_is_thread_invariant() {
+    // Green-window prefetching keys off simulated time and the Markov
+    // state each replica builds from its own arrival stream — nothing a
+    // worker pool may reorder. Pinned on the shared pool, where a
+    // speculative warm admitted by one replica is visible fleet-wide
+    // after the next sync and any ordering bug would compound.
+    let mk = |threads: usize| {
+        let mut spec = fleet_spec(CacheVariant::Shared, threads);
+        spec.prefetch = PrefetchMode::Green;
+        spec
+    };
+    let mut profiles = ProfileStore::new(true);
+    let sequential = run_cluster(&mk(1), &mut profiles);
+    assert!(sequential.completed > 0);
+    let want = format!("{sequential:?}");
+    for threads in [2, 4, 8] {
+        let parallel = run_cluster(&mk(threads), &mut profiles);
+        assert_eq!(
+            format!("{parallel:?}"),
+            want,
+            "prefetch-enabled fleet diverged at {threads} threads"
+        );
     }
 }
 
