@@ -24,11 +24,15 @@ committed placeholders (repo root) and the freshly measured reports
 import json
 import sys
 
-SCHEMA = "greencache-bench-v3"
+SCHEMA = "greencache-bench-v4"
 REQUIRED = {
     "BENCH_SIM.json": [
         "bench", "config", "reference", "fast_forward", "speedup",
         "fleet", "quick", "schema",
+        # v4: the fault-injection smoke cell (crash+ssd+feed vs the
+        # fault-free twin of the same fleet/day). A null placeholder
+        # records-but-doesn't-gate, like the fleet section.
+        "faults",
     ],
     "BENCH_CACHE.json": [
         "bench", "cases", "group", "ops_per_case", "quick", "schema",

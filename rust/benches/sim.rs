@@ -20,6 +20,7 @@ use greencache::workload::{ConversationGen, ConversationParams};
 
 fn day(hours: usize, rps: f64, cache_tb: f64, warm: usize, seed: u64) -> (usize, u64) {
     let cfg = SimConfig {
+        shed_queue_limit: None,
         cost: CostModel::llama70b_4xl40(),
         power: PowerModel::default(),
         slo: Slo::conv_70b(),

@@ -176,6 +176,18 @@ pub trait CacheStore: Send {
             dram: 0,
         }
     }
+
+    /// Inject an SSD cache-tier failure ([`crate::faults`]): the store
+    /// permanently degrades to whatever survives without its SSD tier,
+    /// reporting the lost entries as evictions. Only
+    /// [`TieredStore`](crate::cache::TieredStore) has a DRAM tier to
+    /// fall back on — it drops the cold tier and runs DRAM-only for the
+    /// rest of the day; single-tier and shared-pool backends default to
+    /// a no-op (the fault targets the tiered cache axis), so defaults
+    /// stay byte-identical.
+    fn fail_ssd_tier(&mut self, _now_s: f64) -> Vec<Evicted> {
+        Vec::new()
+    }
 }
 
 /// Mutable references delegate, so `&mut LocalStore` (and `&mut dyn
@@ -227,6 +239,9 @@ impl<T: CacheStore + ?Sized> CacheStore for &mut T {
     }
     fn tier_bytes(&self) -> TierBytes {
         (**self).tier_bytes()
+    }
+    fn fail_ssd_tier(&mut self, now_s: f64) -> Vec<Evicted> {
+        (**self).fail_ssd_tier(now_s)
     }
 }
 

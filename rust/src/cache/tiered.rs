@@ -68,6 +68,9 @@ pub struct TieredStore {
     /// Ghost-list state for adaptive policies; `None` for the static
     /// four, whose keep-score is a pure function of the entry.
     adaptive: Option<AdaptiveIndex>,
+    /// Set when the SSD tier has failed ([`crate::faults`]): the DRAM
+    /// capacity at failure time, a permanent ceiling on resizes.
+    dram_ceiling_bytes: Option<u64>,
 }
 
 impl TieredStore {
@@ -103,6 +106,7 @@ impl TieredStore {
             promotions: 0,
             demotions: 0,
             adaptive,
+            dram_ceiling_bytes: None,
         }
     }
 
@@ -358,9 +362,53 @@ impl TieredStore {
         evicted
     }
 
+    /// Whether the SSD capacity tier has failed (see
+    /// [`Self::fail_ssd_tier`]).
+    pub fn ssd_failed(&self) -> bool {
+        self.dram_ceiling_bytes.is_some()
+    }
+
+    /// Inject a permanent SSD-tier failure ([`crate::faults`]): every
+    /// cold (SSD-resident) entry is lost — reported as evictions, in
+    /// ascending-key order for deterministic replays — and the store
+    /// degrades to DRAM-only: capacity collapses to the hot tier's
+    /// provisioned bytes at failure time, which also becomes a permanent
+    /// ceiling on later [`Self::resize`] calls (the controller cannot
+    /// re-provision hardware that no longer exists). Idempotent; all
+    /// invariants keep holding afterwards.
+    pub fn fail_ssd_tier(&mut self, _now_s: f64) -> Vec<Evicted> {
+        if self.ssd_failed() {
+            return Vec::new();
+        }
+        let ceiling = self.hot_capacity_bytes;
+        self.dram_ceiling_bytes = Some(ceiling);
+        let mut cold: Vec<u64> = self
+            .entries
+            .keys()
+            .copied()
+            .filter(|k| !self.hot.contains(k))
+            .collect();
+        cold.sort_unstable();
+        let evicted: Vec<Evicted> = cold.into_iter().map(|k| self.remove(k)).collect();
+        self.stats.evictions += evicted.len() as u64;
+        self.capacity_bytes = ceiling;
+        self.hot_fraction = 1.0;
+        self.hot_capacity_bytes = ceiling;
+        if let Some(a) = self.adaptive.as_mut() {
+            a.set_capacity(ceiling);
+        }
+        evicted
+    }
+
     /// See [`CacheStore::resize`]: recomputes the DRAM/SSD split from
     /// the construction-time hot fraction, demotes, then evicts to fit.
+    /// After an SSD-tier failure the new capacity is clamped to the
+    /// surviving DRAM ceiling.
     pub fn resize(&mut self, new_capacity_bytes: u64, now_s: f64) -> Vec<Evicted> {
+        let new_capacity_bytes = match self.dram_ceiling_bytes {
+            Some(c) => new_capacity_bytes.min(c),
+            None => new_capacity_bytes,
+        };
         self.capacity_bytes = new_capacity_bytes;
         self.hot_capacity_bytes = Self::hot_cap(new_capacity_bytes, self.hot_fraction);
         if let Some(a) = self.adaptive.as_mut() {
@@ -428,6 +476,18 @@ impl TieredStore {
         if let Some(a) = &self.adaptive {
             a.check_invariants(&self.entries)?;
         }
+        if let Some(c) = self.dram_ceiling_bytes {
+            anyhow::ensure!(
+                self.capacity_bytes <= c,
+                "post-SSD-failure capacity {} > DRAM ceiling {}",
+                self.capacity_bytes,
+                c
+            );
+            anyhow::ensure!(
+                self.hot_capacity_bytes == self.capacity_bytes,
+                "post-SSD-failure store must be DRAM-only"
+            );
+        }
         Ok(())
     }
 
@@ -490,6 +550,9 @@ impl CacheStore for TieredStore {
             ssd: self.capacity_bytes - self.hot_capacity_bytes,
             dram: self.hot_capacity_bytes,
         }
+    }
+    fn fail_ssd_tier(&mut self, now_s: f64) -> Vec<Evicted> {
+        TieredStore::fail_ssd_tier(self, now_s)
     }
 }
 
@@ -658,6 +721,74 @@ mod tests {
         let h = m.lookup(&req(1, 2, 100, 10), 40.0);
         assert!(h.hit && h.hit_tokens == 100);
         m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ssd_failure_degrades_to_dram_only() {
+        // Capacity 1000 / hot 100: one hot resident, several cold. The
+        // failure must lose exactly the cold set (as evictions), keep
+        // the DRAM resident serving hits, and pin capacity to DRAM.
+        let mut m = store(1000, 0.1, PolicyKind::Lru);
+        for (id, t) in [(1u64, 0.0), (2u64, 1.0), (3u64, 2.0)] {
+            let r = req(id, 0, 0, 100);
+            m.lookup(&r, t);
+            m.admit(&r, 100, None, t);
+        }
+        assert_eq!(m.len(), 3);
+        assert!(m.is_hot(3), "most recent admission is the DRAM resident");
+        let ev = m.fail_ssd_tier(5.0);
+        assert_eq!(ev.len(), 2, "cold contents lost: {ev:?}");
+        assert_eq!(ev[0].key, 1, "losses report in ascending-key order");
+        assert_eq!(ev[1].key, 2);
+        assert!(m.ssd_failed());
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.capacity_bytes, 100);
+        assert_eq!(m.tier_bytes().ssd, 0, "DRAM-only after the failure");
+        assert_eq!(m.tier_bytes().dram, 100);
+        m.check_invariants().unwrap();
+        // The survivor still serves (from DRAM).
+        let h = m.lookup(&req(3, 1, 100, 10), 6.0);
+        assert!(h.hit && h.hot_tokens == 100);
+        // Idempotent.
+        assert!(m.fail_ssd_tier(7.0).is_empty());
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ssd_failure_caps_later_resizes() {
+        let mut m = store(1000, 0.1, PolicyKind::Lcs);
+        m.fail_ssd_tier(0.0);
+        assert_eq!(m.capacity_bytes, 100);
+        // The controller cannot re-provision failed hardware…
+        m.resize(1000, 1.0);
+        assert_eq!(m.capacity_bytes, 100);
+        m.check_invariants().unwrap();
+        // …but can still shrink what survives.
+        m.resize(40, 2.0);
+        assert_eq!(m.capacity_bytes, 40);
+        assert_eq!(m.tier_bytes().dram, 40);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ssd_failure_keeps_adaptive_invariants() {
+        // ARC ghost lists shadow the entry table; losing the cold tier
+        // must keep them consistent (on_remove fires per lost entry).
+        let mut m = store(300, 1.0 / 3.0, PolicyKind::Arc);
+        for (id, t) in [(1u64, 0.0), (2u64, 1.0), (3u64, 2.0)] {
+            let r = req(id, 0, 0, 100);
+            m.lookup(&r, t);
+            m.admit(&r, 100, None, t);
+            m.check_invariants().unwrap();
+        }
+        m.fail_ssd_tier(5.0);
+        m.check_invariants().unwrap();
+        // The store keeps admitting within the DRAM ceiling.
+        let r = req(9, 0, 0, 50);
+        m.lookup(&r, 6.0);
+        m.admit(&r, 50, None, 6.0);
+        m.check_invariants().unwrap();
+        assert!(m.used_bytes() <= m.capacity_bytes);
     }
 
     #[test]

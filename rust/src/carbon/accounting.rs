@@ -21,12 +21,22 @@ pub struct CarbonBreakdown {
     /// green-window claim is auditable: prefetch is extra compute the
     /// run chose to buy, priced at the CI of the hour it fired in.
     pub prefetch_g: f64,
+    /// Boot/restart carbon of replica crash-recovery
+    /// ([`crate::faults`]): the reboot's energy at the CI of the hour
+    /// it happened, plus the embodied amortization of the boot window —
+    /// EcoServe's provisioning-churn charge, kept on its own line so
+    /// fault runs expose what recovery cost.
+    pub boot_g: f64,
 }
 
 impl CarbonBreakdown {
     /// Total emissions across all sources, grams.
     pub fn total_g(&self) -> f64 {
-        self.operational_g + self.cache_embodied_g + self.other_embodied_g + self.prefetch_g
+        self.operational_g
+            + self.cache_embodied_g
+            + self.other_embodied_g
+            + self.prefetch_g
+            + self.boot_g
     }
 
     /// Embodied share of the total (the paper's low-CI regime indicator).
@@ -48,6 +58,7 @@ impl std::ops::Add for CarbonBreakdown {
             cache_embodied_g: self.cache_embodied_g + o.cache_embodied_g,
             other_embodied_g: self.other_embodied_g + o.other_embodied_g,
             prefetch_g: self.prefetch_g + o.prefetch_g,
+            boot_g: self.boot_g + o.boot_g,
         }
     }
 }
@@ -126,6 +137,22 @@ impl CarbonAccountant {
     pub fn record_prefetch(&mut self, energy_j: f64, ci: Ci) {
         debug_assert!(energy_j >= 0.0);
         self.acc.prefetch_g += ci.operational_g(energy_j);
+        self.energy_j += energy_j;
+    }
+
+    /// Charge one replica reboot ([`crate::faults`] crash recovery):
+    /// `energy_j` of boot-time draw at the CI of the restart hour, plus
+    /// the embodied amortization of the `boot_s` window the platform
+    /// spent serving nothing — EcoServe's provisioning-churn cost. Both
+    /// land on the dedicated `boot_g` line (included in
+    /// [`CarbonBreakdown::total_g`], outside `operational_g`). Boot
+    /// consumes no accounted wall-time of its own — the engine's clock
+    /// keeps integrating regular idle periods while the replica is
+    /// down, so `elapsed_s` stays the simulated horizon.
+    pub fn record_boot(&mut self, boot_s: f64, energy_j: f64, ci: Ci) {
+        debug_assert!(boot_s >= 0.0 && energy_j >= 0.0);
+        self.acc.boot_g +=
+            ci.operational_g(energy_j) + self.embodied.non_storage_amortized_g(boot_s);
         self.energy_j += energy_j;
     }
 
@@ -249,9 +276,25 @@ mod tests {
             cache_embodied_g: 2.0,
             other_embodied_g: 3.0,
             prefetch_g: 4.0,
+            boot_g: 5.0,
         };
         let s = a + a;
-        assert_eq!(s.total_g(), 20.0);
+        assert_eq!(s.total_g(), 30.0);
+        assert_eq!(s.boot_g, 10.0);
+    }
+
+    #[test]
+    fn boot_charges_its_own_line_with_energy_and_churn() {
+        let m = EmbodiedModel::default();
+        let mut a = CarbonAccountant::new(m.clone());
+        a.record_boot(600.0, kwh_to_joules(0.1), Ci(200.0));
+        let b = a.breakdown();
+        let want = 200.0 * 0.1 + m.non_storage_amortized_g(600.0);
+        assert!((b.boot_g - want).abs() < 1e-9, "{} vs {}", b.boot_g, want);
+        assert_eq!(b.operational_g, 0.0, "boot is not base operational");
+        assert!((b.total_g() - b.boot_g).abs() < 1e-12, "boot_g is in total_g");
+        assert_eq!(a.elapsed_s(), 0.0, "boot adds energy, not wall-time");
+        assert!((a.energy_j() - kwh_to_joules(0.1)).abs() < 1e-9);
     }
 
     #[test]

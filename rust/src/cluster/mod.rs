@@ -52,7 +52,8 @@ mod sim;
 
 pub use parallel::effective_threads;
 pub use router::{
-    CarbonGreedy, LeastLoaded, ReplicaView, RoundRobin, Router, RouterPolicy, Weighted,
+    failover_order, CarbonGreedy, LeastLoaded, ReplicaView, RoundRobin, Router, RouterPolicy,
+    Weighted,
 };
 pub use sim::{
     grid_join, run_cluster, ClusterResult, ClusterSim, ClusterSpec, ReplicaOutcome,

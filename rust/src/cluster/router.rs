@@ -48,6 +48,13 @@ pub struct ReplicaView {
     /// fleet pool every replica reports the same value, so the affinity
     /// term cancels and placement follows CI and queue pressure alone).
     pub affinity_tokens: u32,
+    /// Whether the replica is unavailable at this instant — crashed and
+    /// rebooting ([`crate::faults::FaultSchedule::is_down`]) or wedged on
+    /// its overload valve. Every policy skips down replicas; when *all*
+    /// replicas are down each policy falls back to its usual
+    /// deterministic choice so the decision stays replayable (the driver
+    /// then sheds the request rather than placing it).
+    pub down: bool,
 }
 
 /// A routing policy: pick the replica index for a request.
@@ -101,10 +108,12 @@ pub trait Router {
 ///     ReplicaView {
 ///         queue_depth: 2, max_batch: 64,
 ///         ci_gpkwh: 33.0, ci_forecast_gpkwh: 33.0, affinity_tokens: 0,
+///         down: false,
 ///     },
 ///     ReplicaView {
 ///         queue_depth: 2, max_batch: 64,
 ///         ci_gpkwh: 485.0, ci_forecast_gpkwh: 485.0, affinity_tokens: 0,
+///         down: false,
 ///     },
 /// ];
 /// let mut router = RouterPolicy::CarbonGreedy.build();
@@ -189,9 +198,22 @@ pub struct RoundRobin {
 
 impl Router for RoundRobin {
     fn route(&mut self, _req: &Request, replicas: &[ReplicaView]) -> usize {
-        let i = self.next % replicas.len();
+        let first = self.next % replicas.len();
         self.next = self.next.wrapping_add(1);
-        i
+        if !replicas[first].down {
+            return first;
+        }
+        // Skip down replicas, advancing the cursor past each one so the
+        // cycle stays fair; a fully-down fleet falls back to the first
+        // candidate (the driver sheds the request anyway).
+        for _ in 1..replicas.len() {
+            let i = self.next % replicas.len();
+            self.next = self.next.wrapping_add(1);
+            if !replicas[i].down {
+                return i;
+            }
+        }
+        first
     }
 }
 
@@ -205,6 +227,9 @@ impl Router for LeastLoaded {
         let mut best = 0usize;
         let mut best_load = f64::INFINITY;
         for (i, r) in replicas.iter().enumerate() {
+            if r.down {
+                continue;
+            }
             let load = r.queue_depth as f64 / r.max_batch.max(1) as f64;
             if load < best_load {
                 best_load = load;
@@ -285,6 +310,9 @@ impl Router for CarbonGreedy {
         let mut best = 0usize;
         let mut best_score = f64::INFINITY;
         for (i, r) in replicas.iter().enumerate() {
+            if r.down {
+                continue;
+            }
             let ci_term = r.ci_forecast_gpkwh / ci_max;
             let queue_term = r.queue_depth as f64 / r.max_batch.max(1) as f64;
             let affinity_term = (r.affinity_tokens as f64 / prompt).min(1.0);
@@ -317,6 +345,44 @@ impl Router for CarbonGreedy {
     fn weights(&self) -> Option<&[f64]> {
         self.weights.as_deref()
     }
+}
+
+/// The fleet's failover preference: every replica index, ordered by the
+/// documented total order **forecast CI ascending, then queue depth
+/// ascending, then replica index ascending**. When a router's first
+/// choice cannot take a request (down, or it would shed), the cluster
+/// driver retries along this order — carbon-greedy in spirit (greenest
+/// viable replica first), with the queue tiebreak keeping the retry from
+/// piling onto a loaded twin and the index tiebreak making the order a
+/// *total* one, so failover replays byte-identically.
+///
+/// Down replicas are *not* filtered here — the caller skips them while
+/// walking the order (it also needs the order when deciding whom to
+/// charge a shed against).
+///
+/// ```
+/// use greencache::cluster::{failover_order, ReplicaView};
+///
+/// let v = |q: usize, ci: f64| ReplicaView {
+///     queue_depth: q, max_batch: 64,
+///     ci_gpkwh: ci, ci_forecast_gpkwh: ci, affinity_tokens: 0,
+///     down: false,
+/// };
+/// // Same CI: queue depth decides; same CI and queue: index decides.
+/// assert_eq!(failover_order(&[v(5, 100.0), v(1, 100.0), v(1, 100.0)]), vec![1, 2, 0]);
+/// // Greener grid wins regardless of queue depth.
+/// assert_eq!(failover_order(&[v(0, 485.0), v(9, 33.0)]), vec![1, 0]);
+/// ```
+pub fn failover_order(views: &[ReplicaView]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..views.len()).collect();
+    order.sort_by(|&a, &b| {
+        views[a]
+            .ci_forecast_gpkwh
+            .total_cmp(&views[b].ci_forecast_gpkwh)
+            .then(views[a].queue_depth.cmp(&views[b].queue_depth))
+            .then(a.cmp(&b))
+    });
+    order
 }
 
 /// Clamp negatives to zero and normalize to sum 1 (uniform if the sum
@@ -363,8 +429,11 @@ impl Router for Weighted {
         let mut best = 0usize;
         let mut best_credit = f64::NEG_INFINITY;
         for i in 0..n {
+            // Credits keep accruing for down replicas (their share is
+            // deferred, not forfeited), but only up replicas are
+            // eligible this decision.
             self.credit[i] += self.weights[i];
-            if self.credit[i] > best_credit {
+            if !replicas[i].down && self.credit[i] > best_credit {
                 best_credit = self.credit[i];
                 best = i;
             }
@@ -413,7 +482,13 @@ mod tests {
             ci_gpkwh: ci,
             ci_forecast_gpkwh: ci,
             affinity_tokens: affinity,
+            down: false,
         }
+    }
+
+    fn down(mut v: ReplicaView) -> ReplicaView {
+        v.down = true;
+        v
     }
 
     #[test]
@@ -445,6 +520,7 @@ mod tests {
                 ci_gpkwh: 50.0,
                 ci_forecast_gpkwh: 50.0,
                 affinity_tokens: 0,
+                down: false,
             },
             ReplicaView {
                 queue_depth: 10,
@@ -452,6 +528,7 @@ mod tests {
                 ci_gpkwh: 50.0,
                 ci_forecast_gpkwh: 50.0,
                 affinity_tokens: 0,
+                down: false,
             },
         ];
         assert_eq!(r.route(&req(0, 10), &views), 1);
@@ -591,6 +668,102 @@ mod tests {
         let mut plain = RouterPolicy::CarbonGreedy.build();
         assert_eq!(plain.route(&req(200, 20), &views), 0);
         assert!(plain.weights().is_none());
+    }
+
+    #[test]
+    fn every_policy_skips_down_replicas() {
+        // Replica 0 would win under every policy (lowest index, empty
+        // queue, greenest grid) — marking it down must divert every
+        // placement to an up replica.
+        let views = [down(view(0, 33.0, 0)), view(2, 485.0, 0), view(5, 485.0, 0)];
+        for policy in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::CarbonGreedy,
+            RouterPolicy::Weighted,
+        ] {
+            let mut r = policy.build();
+            for _ in 0..8 {
+                let pick = r.route(&req(200, 20), &views);
+                assert_ne!(pick, 0, "{policy:?} placed on a down replica");
+            }
+        }
+    }
+
+    #[test]
+    fn all_down_fleet_still_routes_deterministically() {
+        let views = [down(view(1, 100.0, 0)), down(view(2, 200.0, 0))];
+        for policy in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::CarbonGreedy,
+            RouterPolicy::Weighted,
+        ] {
+            let mut a = policy.build();
+            let mut b = policy.build();
+            for _ in 0..6 {
+                let pa = a.route(&req(200, 20), &views);
+                assert!(pa < views.len());
+                assert_eq!(pa, b.route(&req(200, 20), &views), "{policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_stays_fair_around_a_down_replica() {
+        // With replica 1 down, the cycle must keep alternating 0/2 —
+        // not double-charge replica 2 for covering its neighbor.
+        let views = [view(0, 100.0, 0), down(view(0, 100.0, 0)), view(0, 100.0, 0)];
+        let mut r = RouterPolicy::RoundRobin.build();
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&req(0, 10), &views)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2, 0, 2]);
+    }
+
+    /// The satellite property: failover order is the documented total
+    /// order — forecast CI, then queue depth, then replica index.
+    #[test]
+    fn failover_order_is_the_documented_total_order() {
+        // CI dominates.
+        let views = [view(0, 485.0, 0), view(9, 33.0, 0), view(4, 124.0, 0)];
+        assert_eq!(failover_order(&views), vec![1, 2, 0]);
+        // Equal CI: queue depth decides.
+        let views = [view(5, 100.0, 0), view(1, 100.0, 0), view(3, 100.0, 0)];
+        assert_eq!(failover_order(&views), vec![1, 2, 0]);
+        // Full tie: index decides — the order is total.
+        let views = [view(2, 100.0, 0), view(2, 100.0, 0), view(2, 100.0, 0)];
+        assert_eq!(failover_order(&views), vec![0, 1, 2]);
+        // It scores the forecast, not the current CI.
+        let mut a = view(0, 33.0, 0);
+        a.ci_forecast_gpkwh = 485.0;
+        let mut b = view(0, 485.0, 0);
+        b.ci_forecast_gpkwh = 33.0;
+        assert_eq!(failover_order(&[a, b]), vec![1, 0]);
+    }
+
+    #[test]
+    fn failover_order_is_a_deterministic_permutation() {
+        // Pseudo-random-ish fixed inputs: the result is always a
+        // permutation of 0..n, identical across calls, and sorted
+        // according to the documented key.
+        let mut views = Vec::new();
+        let mut x = 9_876_543_210u64;
+        for i in 0..17 {
+            x = x.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(1);
+            let ci = [33.0, 124.0, 485.0, 100.0][(x >> 33) as usize % 4];
+            views.push(view((x >> 7) as usize % 5, ci, i));
+        }
+        let order = failover_order(&views);
+        assert_eq!(order.len(), views.len());
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..views.len()).collect::<Vec<_>>());
+        assert_eq!(order, failover_order(&views));
+        for w in order.windows(2) {
+            let (a, b) = (&views[w[0]], &views[w[1]]);
+            let key_a = (a.ci_forecast_gpkwh, a.queue_depth, w[0]);
+            let key_b = (b.ci_forecast_gpkwh, b.queue_depth, w[1]);
+            assert!(key_a <= key_b, "{key_a:?} > {key_b:?}");
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::control::{
 };
 use crate::coordinator::{GreenCacheConfig, GreenCacheController};
 use crate::experiments::{Baseline, Model, ProfileStore, Task};
+use crate::faults::{FaultSchedule, FaultVariant};
 use crate::load::LoadTrace;
 use crate::rng::Rng;
 use crate::sim::{
@@ -20,7 +21,23 @@ use crate::sim::{
 use crate::workload::ArrivalGen;
 
 use super::parallel::{effective_threads, for_each, Pool, SyncPtr};
-use super::router::{ReplicaView, Router, RouterPolicy};
+use super::router::{failover_order, ReplicaView, Router, RouterPolicy};
+
+/// Queue-depth shed threshold as a multiple of the platform's max batch,
+/// in force only when faults are enabled ([`ClusterSpec::faults`]): a
+/// replica whose admitted-but-uncompleted count reaches
+/// `SHED_QUEUE_FACTOR × max_batch` rejects further arrivals (after
+/// failover has tried the other replicas). Four full batches of headroom
+/// keeps the limit far above any healthy fleet's working depth, so it
+/// only bites when a fault has concentrated load.
+const SHED_QUEUE_FACTOR: usize = 4;
+
+/// How many alternative replicas a request may try after its routed
+/// choice could not take it (down or shedding), walking
+/// [`failover_order`]. A small fixed cap keeps the retry deterministic
+/// and bounded — a request that strikes out `MAX_FAILOVER_ATTEMPTS`
+/// times is shed, not spun on.
+const MAX_FAILOVER_ATTEMPTS: usize = 3;
 
 /// The canonical `FR+ES+MISO`-style grid-list label, shared by
 /// [`ClusterSpec::fleet_label`] and the scenario layer's
@@ -134,6 +151,15 @@ pub struct ClusterSpec {
     /// wall-clock changes (see [`crate::cluster::effective_threads`] and
     /// the module docs).
     pub threads: usize,
+    /// Deterministic fault injection (`greencache cluster --faults`):
+    /// which fault kinds a seeded [`FaultSchedule`] draws for this run —
+    /// replica crash + restart, SSD cache-tier failure, and CI-forecast
+    /// feed dropout (see [`crate::faults`]). [`FaultVariant::OFF`] (the
+    /// default) generates an empty schedule and leaves every result
+    /// byte-identical to the pre-fault driver; enabling any kind also
+    /// arms each replica's queue-depth shed valve
+    /// ([`SHED_QUEUE_FACTOR`]).
+    pub faults: FaultVariant,
 }
 
 impl ClusterSpec {
@@ -157,6 +183,7 @@ impl ClusterSpec {
             cache: CacheVariant::Local,
             fleet: FleetPolicy::PerReplica,
             threads: 1,
+            faults: FaultVariant::OFF,
         }
     }
 
@@ -240,6 +267,19 @@ pub struct ClusterResult {
     /// unweighted mean across replicas, and the P90 fields carry the
     /// worst (max) replica — a conservative fleet latency signal.
     pub hours: Vec<HourSample>,
+    /// Fleet-wide arrivals rejected by admission control (per-replica
+    /// counts live in each [`ReplicaOutcome`]'s
+    /// [`crate::sim::SimResult::shed`]). Every shed request is an SLO
+    /// violation in [`ClusterResult::slo_attainment`] — degradation is
+    /// visible, never silent.
+    pub shed: usize,
+    /// Fleet-wide in-flight requests dropped by replica crashes (also
+    /// SLO violations).
+    pub crash_dropped: usize,
+    /// How many replicas ended the run with their overload valve
+    /// tripped (frozen clock) — the tripped valve used to freeze the
+    /// whole fleet with no trace; now it reads out here.
+    pub overloaded_replicas: usize,
 }
 
 impl ClusterResult {
@@ -275,6 +315,9 @@ impl ClusterResult {
         let mean_tpot_s = wmean(&|r| r.sim.mean_tpot_s);
         let fleet_mean_cache_tb = replicas.iter().map(|r| r.mean_cache_tb).sum();
         let hours = Self::fleet_hours(&replicas);
+        let shed: usize = replicas.iter().map(|r| r.sim.shed).sum();
+        let crash_dropped: usize = replicas.iter().map(|r| r.sim.crash_dropped).sum();
+        let overloaded_replicas = replicas.iter().filter(|r| r.sim.overloaded).count();
         ClusterResult {
             completed,
             total_carbon_g,
@@ -285,6 +328,9 @@ impl ClusterResult {
             mean_tpot_s,
             fleet_mean_cache_tb,
             hours,
+            shed,
+            crash_dropped,
+            overloaded_replicas,
             replicas,
         }
     }
@@ -310,6 +356,7 @@ impl ClusterResult {
                 h.cache_embodied_g += p.cache_embodied_g;
                 h.other_embodied_g += p.other_embodied_g;
                 h.prefetch_g += p.prefetch_g;
+                h.boot_g += p.boot_g;
                 h.ci += p.ci;
                 h.p90_ttft_s = h.p90_ttft_s.max(p.p90_ttft_s);
                 h.p90_tpot_s = h.p90_tpot_s.max(p.p90_tpot_s);
@@ -327,27 +374,32 @@ impl ClusterResult {
     pub fn table(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<8} {:>8} {:>9} {:>10} {:>9} {:>7} {:>8}\n",
-            "replica", "meanCI", "routed", "completed", "carbon_g", "hit", "cacheTB"
+            "{:<8} {:>8} {:>9} {:>10} {:>6} {:>7} {:>9} {:>7} {:>8}\n",
+            "replica", "meanCI", "routed", "completed", "shed", "dropped", "carbon_g", "hit",
+            "cacheTB"
         ));
         for r in &self.replicas {
             out.push_str(&format!(
-                "{:<8} {:>8.1} {:>9} {:>10} {:>9.1} {:>7.3} {:>8.2}\n",
+                "{:<8} {:>8.1} {:>9} {:>10} {:>6} {:>7} {:>9.1} {:>7.3} {:>8.2}\n",
                 r.spec.grid.name(),
                 r.mean_ci,
                 r.routed,
                 r.sim.completed,
+                r.sim.shed,
+                r.sim.crash_dropped,
                 r.sim.accountant.breakdown().total_g(),
                 r.cache_stats.token_hit_rate(),
                 r.mean_cache_tb,
             ));
         }
         out.push_str(&format!(
-            "{:<8} {:>8} {:>9} {:>10} {:>9.1} {:>7.3} {:>8.2}\n",
+            "{:<8} {:>8} {:>9} {:>10} {:>6} {:>7} {:>9.1} {:>7.3} {:>8.2}\n",
             "fleet",
             "-",
             self.replicas.iter().map(|r| r.routed).sum::<usize>(),
             self.completed,
+            self.shed,
+            self.crash_dropped,
             self.total_carbon_g,
             self.token_hit_rate,
             self.fleet_mean_cache_tb,
@@ -524,6 +576,10 @@ pub struct ClusterSim {
     /// bootstrap histories and stands in for the realized split over
     /// arrival-free intervals.
     expected_split: Vec<f64>,
+    /// The seeded fault schedule ([`ClusterSpec::faults`]; empty when
+    /// faults are off). Events are actuated at lockstep arrival
+    /// instants, so fault runs stay thread- and stepping-invariant.
+    schedule: FaultSchedule,
 }
 
 impl ClusterSim {
@@ -647,6 +703,15 @@ impl ClusterSim {
             }
 
             let cfg = SimConfig {
+                // Admission control arms with the fault axis: four full
+                // batches of queue headroom before a replica sheds (see
+                // SHED_QUEUE_FACTOR). `None` when faults are off keeps
+                // the default fleet byte-identical.
+                shed_queue_limit: if spec.faults.is_off() {
+                    None
+                } else {
+                    Some(SHED_QUEUE_FACTOR * r.model.cost().max_batch)
+                },
                 cost: r.model.cost(),
                 power: r.model.power(),
                 slo: r.model.slo(kind),
@@ -696,6 +761,13 @@ impl ClusterSim {
             }
         };
 
+        let schedule = FaultSchedule::generate(
+            spec.faults,
+            spec.seed,
+            spec.hours,
+            spec.replicas.len(),
+        );
+
         ClusterSim {
             spec: spec.clone(),
             reps,
@@ -704,6 +776,7 @@ impl ClusterSim {
             shared,
             fleet,
             expected_split,
+            schedule,
         }
     }
 
@@ -747,6 +820,7 @@ impl ClusterSim {
             shared,
             mut fleet,
             expected_split,
+            schedule,
         } = self;
         let horizon_s = spec.hours as f64 * 3600.0;
         let last_load = load_trace.hourly_rps.len() - 1;
@@ -775,6 +849,14 @@ impl ClusterSim {
         let mut ci_forecast: Vec<Option<f64>> = vec![None; reps.len()];
         // Decision intervals fully processed by the fleet controller.
         let mut fleet_fired = 0usize;
+        // Fault actuation state: each scheduled event fires at the first
+        // lockstep arrival instant at/after its simulated time — a
+        // deterministic function of the arrival stream, so fault runs
+        // replay identically at any thread count or stepping mode.
+        let mut crash_applied = vec![false; reps.len()];
+        let mut boot_charged = vec![false; reps.len()];
+        let mut ssd_applied = vec![false; reps.len()];
+        let mut feed_up = true;
 
         // §4.1 pre-day bootstrap, fleet-wide: the controller provisions
         // every cache (and may stage router weights / CI forecasts)
@@ -845,11 +927,47 @@ impl ClusterSim {
                     pool.sync(); // planner slice resizes apply now
                 }
             }
-            // A tripped overload valve anywhere freezes that engine's
-            // clock; stop the stream rather than distort its statistics.
-            if reps.iter().any(|rep| rep.engine.overloaded()) {
-                break;
+            // Actuate every scheduled fault whose time has come
+            // (crash/restart, SSD-tier failure, forecast-feed dropout).
+            // Engines that trip their overload valve are not a stop
+            // condition anymore: they read as down in the views below
+            // and the fleet degrades around them — admission control and
+            // failover replace the old trip-and-freeze break.
+            let t = next_arrival;
+            for i in 0..reps.len() {
+                if let Some((start, end)) = schedule.crash_window(i) {
+                    if t >= start && !crash_applied[i] {
+                        crash_applied[i] = true;
+                        reps[i].engine.crash();
+                    }
+                    if t >= end && !boot_charged[i] {
+                        boot_charged[i] = true;
+                        let h = ((end / 3600.0) as usize).min(spec.hours.saturating_sub(1));
+                        let ci = reps[i].ci[(base_hour + h).min(reps[i].ci.len() - 1)];
+                        reps[i].engine.record_boot(end - start, ci);
+                    }
+                }
+                if let Some(fs) = schedule.ssd_fail_s(i) {
+                    if t >= fs && !ssd_applied[i] {
+                        ssd_applied[i] = true;
+                        reps[i].engine.cache_mut().fail_ssd_tier(t);
+                    }
+                }
             }
+            // Feed dropout: tell the control plane on every edge, and
+            // clear published forecasts while down so router views fall
+            // back to persistence (the in-progress interval's truth).
+            let up = !schedule.feed_is_down(t);
+            if up != feed_up {
+                feed_up = up;
+                fleet.set_ci_feed(up);
+            }
+            if !feed_up {
+                for slot in ci_forecast.iter_mut() {
+                    *slot = None;
+                }
+            }
+
             let mut req = workload.next_request(&mut rng);
             req.arrival_s = next_arrival;
 
@@ -866,19 +984,72 @@ impl ClusterSim {
                         ci_gpkwh: ci_now,
                         ci_forecast_gpkwh: ci_forecast[i].unwrap_or(ci_now),
                         affinity_tokens: rep.engine.cache().peek(&req),
+                        down: schedule.is_down(i, t) || rep.engine.overloaded(),
                     }
                 })
                 .collect();
             let choice = router.route(&req, &views).min(reps.len() - 1);
-            reps[choice].routed += 1;
-            let by_interval = &mut reps[choice].routed_by_interval;
-            if by_interval.len() <= interval {
-                by_interval.resize(interval + 1, 0);
+            // Failover: if the routed replica cannot take the request
+            // (down, or its admission control would shed), retry along
+            // the documented total order — greenest-forecast first, then
+            // shallowest queue, then lowest index — up to a fixed cap.
+            // A request no replica can take is shed against the routed
+            // choice (counted, and an SLO violation), never silently
+            // dropped. With faults off nothing here fires: no replica is
+            // down and `would_shed` is inert without a queue limit, so
+            // the placement is exactly the routed choice.
+            let placeable =
+                |c: usize, reps: &[Rep], views: &[ReplicaView]| -> bool {
+                    !views[c].down && !reps[c].engine.would_shed()
+                };
+            let placed = if placeable(choice, &reps, &views) {
+                Some(choice)
+            } else {
+                failover_order(&views)
+                    .into_iter()
+                    .filter(|&c| c != choice)
+                    .take(MAX_FAILOVER_ATTEMPTS)
+                    .find(|&c| placeable(c, &reps, &views))
+            };
+            match placed {
+                Some(c) => {
+                    reps[c].routed += 1;
+                    let by_interval = &mut reps[c].routed_by_interval;
+                    if by_interval.len() <= interval {
+                        by_interval.resize(interval + 1, 0);
+                    }
+                    by_interval[interval] += 1;
+                    reps[c].engine.inject(req);
+                }
+                None => reps[choice].engine.reject(),
             }
-            by_interval[interval] += 1;
-            reps[choice].engine.inject(req);
 
             next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
+        }
+
+        // Events scheduled after the last arrival still fire before the
+        // drain (a crash near the end of the day must still drop its
+        // in-flight work and charge its restart; an SSD that died in the
+        // final quiet stretch still loses its cold tier).
+        for i in 0..reps.len() {
+            if let Some((start, end)) = schedule.crash_window(i) {
+                if start < horizon_s && !crash_applied[i] {
+                    crash_applied[i] = true;
+                    reps[i].engine.crash();
+                }
+                if crash_applied[i] && end <= horizon_s && !boot_charged[i] {
+                    boot_charged[i] = true;
+                    let h = ((end / 3600.0) as usize).min(spec.hours.saturating_sub(1));
+                    let ci = reps[i].ci[(base_hour + h).min(reps[i].ci.len() - 1)];
+                    reps[i].engine.record_boot(end - start, ci);
+                }
+            }
+            if let Some(fs) = schedule.ssd_fail_s(i) {
+                if fs < horizon_s && !ssd_applied[i] {
+                    ssd_applied[i] = true;
+                    reps[i].engine.cache_mut().fail_ssd_tier(horizon_s);
+                }
+            }
         }
 
         let hours = spec.hours;
@@ -1439,6 +1610,98 @@ mod tests {
         for threads in [2usize, 4, 0] {
             assert_identical(&seq, &mk(threads), &format!("planner threads={threads}"));
         }
+    }
+
+    #[test]
+    fn faulted_fleet_degrades_without_wedging() {
+        // The tentpole scenario at fleet scale: crash + SSD failure +
+        // feed dropout on a tiered 2-replica fleet. The run must reach
+        // the horizon with exact conservation — every accepted arrival
+        // completes or is crash-dropped, every shed is accounted as an
+        // SLO sample.
+        let mut spec = fr_miso(RouterPolicy::CarbonGreedy);
+        spec.cache = CacheVariant::Tiered;
+        spec.faults = FaultVariant::ALL;
+        let r = run(&spec);
+        let routed: usize = r.replicas.iter().map(|x| x.routed).sum();
+        assert_eq!(
+            r.completed + r.crash_dropped,
+            routed,
+            "accepted arrivals must complete or be crash-dropped"
+        );
+        for rep in &r.replicas {
+            assert_eq!(
+                rep.sim.slo.total(),
+                rep.sim.completed + rep.sim.shed + rep.sim.crash_dropped,
+                "every request is an SLO sample: served, shed or dropped"
+            );
+        }
+        assert!(r.completed > 1000, "the fleet must keep serving: {}", r.completed);
+    }
+
+    #[test]
+    fn single_replica_crash_sheds_and_charges_boot_carbon() {
+        // One replica, no failover target: every arrival in the boot
+        // window must be shed (and violate the SLO), and the restart
+        // must land on the dedicated boot_g ledger line.
+        let mut spec = ClusterSpec::homogeneous(
+            Model::Llama70B,
+            Task::Conversation,
+            &[Grid::Es],
+            RouterPolicy::RoundRobin,
+        );
+        spec.baseline = Baseline::FullCache;
+        spec.hours = 4;
+        spec.fixed_rps = Some(0.35);
+        spec.faults = FaultVariant::CRASH;
+        let r = run(&spec);
+        assert!(r.shed > 50, "boot-window arrivals must shed: {}", r.shed);
+        let rep = &r.replicas[0];
+        assert_eq!(
+            rep.sim.slo.total(),
+            rep.sim.completed + rep.sim.shed + rep.sim.crash_dropped
+        );
+        assert!(
+            r.slo_attainment < 1.0,
+            "shed work must show up as SLO violations"
+        );
+        let b = rep.sim.accountant.breakdown();
+        assert!(b.boot_g > 0.0, "restart must charge the boot ledger line");
+        assert!(b.total_g() > b.boot_g, "boot_g is part of (not all of) the total");
+        // And the timeline carries it in exactly one window.
+        let timeline_boot: f64 = r.hours.iter().map(|h| h.boot_g).sum();
+        assert!((timeline_boot - b.boot_g).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fault_injection_is_thread_invariant() {
+        // Fault actuation rides lockstep arrival instants, so a faulted
+        // fleet must stay byte-identical at any thread count.
+        let mk = |threads: usize| {
+            let mut spec = fr_miso(RouterPolicy::CarbonGreedy);
+            spec.cache = CacheVariant::Tiered;
+            spec.faults = FaultVariant::ALL;
+            spec.threads = threads;
+            run(&spec)
+        };
+        let seq = mk(1);
+        for threads in [2usize, 4, 8] {
+            assert_identical(&seq, &mk(threads), &format!("faults threads={threads}"));
+        }
+    }
+
+    #[test]
+    fn fault_axis_off_is_inert() {
+        // Explicit OFF equals the default-constructed spec bit for bit,
+        // and a fault-free run sheds and drops nothing.
+        let a = run(&fr_miso(RouterPolicy::CarbonGreedy));
+        let mut spec = fr_miso(RouterPolicy::CarbonGreedy);
+        spec.faults = FaultVariant::OFF;
+        let b = run(&spec);
+        assert_identical(&a, &b, "faults=off");
+        assert_eq!(a.shed, 0);
+        assert_eq!(a.crash_dropped, 0);
+        assert_eq!(a.overloaded_replicas, 0);
     }
 
     #[test]

@@ -208,6 +208,15 @@ impl FleetController for GreenCacheFleet {
             self.base_hour + ((hour as f64 + 1.0) * interval_hours).floor() as usize;
         self.plan_and_actuate(next_abs, actuators);
     }
+
+    /// Feed dropout reaches every wrapped controller: while down, each
+    /// replica's CI forecast degrades to persistence, so the joint plan
+    /// keeps running on stale-but-safe signals instead of wedging.
+    fn set_ci_feed(&mut self, up: bool) {
+        for c in self.ctls.iter_mut() {
+            crate::sim::Controller::set_ci_feed(c, up);
+        }
+    }
 }
 
 /// Candidate router-weight vectors: the capacity-proportional share

@@ -274,6 +274,12 @@ pub trait FleetController {
         obs: &FleetObservation<'_>,
         actuators: &mut FleetActuators<'_>,
     );
+
+    /// CI-forecast feed health edge ([`crate::faults`]' feed dropout):
+    /// the cluster driver calls this when the fleet's grid-signal feed
+    /// goes down (`up == false`) or heals. Planners that forecast CI
+    /// must degrade to persistence while down. Default: ignore.
+    fn set_ci_feed(&mut self, _up: bool) {}
 }
 
 /// The compatibility adapter: N independent per-replica [`Controller`]s
@@ -330,6 +336,12 @@ impl<C: Controller> FleetController for PerReplica<C> {
         assert_eq!(self.inner.len(), obs.replicas.len());
         for (i, ctl) in self.inner.iter_mut().enumerate() {
             ctl.on_interval(hour, &obs.replicas[i], actuators.caches[i]);
+        }
+    }
+
+    fn set_ci_feed(&mut self, up: bool) {
+        for ctl in self.inner.iter_mut() {
+            ctl.set_ci_feed(up);
         }
     }
 }

@@ -158,6 +158,12 @@ pub struct GreenCacheController {
     rng: Rng,
     /// Absolute hour of the next interval to decide for.
     base_hour: usize,
+    /// Whether the CI-forecast feed is healthy ([`crate::faults`]' feed
+    /// dropout sets this through [`Controller::set_ci_feed`]). While
+    /// down, [`Self::forecast_ci`] degrades to persistence on the last
+    /// observed CI — including for oracle sources, since the oracle *is*
+    /// the feed.
+    ci_feed_up: bool,
     /// Every decision taken so far, in order.
     pub decisions: Vec<Decision>,
 }
@@ -183,6 +189,7 @@ impl GreenCacheController {
             ci_predictor: CiPredictor::new(),
             rng: Rng::new(seed ^ 0x6C0),
             base_hour,
+            ci_feed_up: true,
             decisions: Vec::new(),
         }
     }
@@ -237,6 +244,14 @@ impl GreenCacheController {
     /// oracle). Public for the fleet planner, which forecasts every
     /// replica's grid before its joint weight/size solve.
     pub fn forecast_ci(&mut self, horizon: usize, next_abs_hour: usize) -> Vec<f64> {
+        if !self.ci_feed_up {
+            // Feed dropout: no fresh grid signal reaches the predictor
+            // (or the oracle — the oracle IS the feed), so degrade to
+            // persistence on the last CI observed before the outage.
+            // Heals automatically at the next `set_ci_feed(true)`.
+            let last = *self.ci_history.last().unwrap_or(&100.0);
+            return vec![last; horizon];
+        }
         match &self.cfg.ci_source {
             CiSource::Oracle(truth) => (0..horizon)
                 .map(|h| truth[(next_abs_hour + h) % truth.len()])
@@ -414,6 +429,13 @@ impl Controller for GreenCacheController {
         let first = self.decide(self.base_hour);
         cache.resize(first.chosen_tb as u64 * TB as u64, 0.0);
     }
+
+    /// Feed-dropout hook ([`crate::faults`]): while down, every
+    /// [`GreenCacheController::forecast_ci`] call returns persistence on
+    /// the last observed CI.
+    fn set_ci_feed(&mut self, up: bool) {
+        self.ci_feed_up = up;
+    }
 }
 
 #[cfg(test)]
@@ -462,6 +484,21 @@ mod tests {
         let d = c.decide(96);
         assert!(d.chosen_tb <= 16);
         assert_eq!(c.decisions.len(), 1);
+    }
+
+    #[test]
+    fn feed_dropout_degrades_forecast_to_persistence_until_healed() {
+        let mut c = controller(GreenCacheConfig::default_70b());
+        let healthy = c.forecast_ci(6, 96);
+        Controller::set_ci_feed(&mut c, false);
+        let down = c.forecast_ci(6, 96);
+        assert!(
+            down.iter().all(|&x| x == down[0]),
+            "dropout forecast must be flat persistence: {down:?}"
+        );
+        // The feed heals: forecasting resumes exactly where it left off.
+        Controller::set_ci_feed(&mut c, true);
+        assert_eq!(c.forecast_ci(6, 96), healthy);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::cache::{
 use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
 use crate::ci::Grid;
 use crate::cluster::{run_cluster, ClusterSpec, RouterPolicy};
+use crate::faults::FaultVariant;
 use crate::metrics::Slo;
 use crate::rng::Rng;
 use crate::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig, Stepping};
@@ -30,7 +31,7 @@ use crate::util::bench::{black_box, write_json, Bench};
 use crate::util::json::Json;
 use crate::workload::{ConversationGen, ConversationParams, Request, TaskKind};
 
-use super::{Model, ProfileStore, Task};
+use super::{Baseline, Model, ProfileStore, Task};
 
 /// The decode-heavy day-scale scenario both stepping modes replay: long
 /// assistant replies (lognormal mean ≈ 630 output tokens) at a high
@@ -73,6 +74,7 @@ impl SimBenchConfig {
 /// the report asserts.
 pub fn run_day_scale(cfg: &SimBenchConfig, stepping: Stepping) -> (usize, u64) {
     let sim_cfg = SimConfig {
+        shed_queue_limit: None,
         cost: CostModel::llama70b_4xl40(),
         power: PowerModel::default(),
         slo: Slo::conv_70b(),
@@ -170,6 +172,7 @@ pub fn sim_report(quick: bool) -> Json {
         ("fast_forward", mode_json(ff_wall, ff_completed, ff_iters)),
         ("speedup", Json::Num(speedup)),
         ("fleet", fleet_report(quick)),
+        ("faults", faults_report(quick)),
     ])
 }
 
@@ -178,7 +181,9 @@ pub fn sim_report(quick: bool) -> Json {
 /// parallel lockstep fleet stepping over a replicas × threads grid.
 /// v3 added the adaptive policies (ARC/SLRU/2Q) to the churn cases and
 /// the `policy_backend` + `prefetch` sections to `BENCH_CACHE.json`.
-pub const BENCH_SCHEMA: &str = "greencache-bench-v3";
+/// v4 added the `faults` section to `BENCH_SIM.json`: a seeded
+/// crash+ssd+feed day vs its fault-free twin on the same fleet.
+pub const BENCH_SCHEMA: &str = "greencache-bench-v4";
 
 /// The fleet-stepping scenario: one shared-pool fleet of N replicas
 /// spread round-robin over four grids, carbon-greedy routing, load
@@ -305,6 +310,98 @@ pub fn fleet_report(quick: bool) -> Json {
         ("rps_per_replica", Json::Num(cfg.rps_per_replica)),
         ("cells", Json::Array(cells)),
         ("speedup", Json::Num(headline_speedup)),
+    ])
+}
+
+/// The fault-injection smoke cell: a two-replica FR+MISO tiered-cache
+/// fleet under carbon-greedy routing, replayed once fault-free and once
+/// with every fault kind enabled ([`FaultVariant::ALL`]) on the same
+/// workload seed. Full Cache keeps the cell controller-free, so the
+/// delta is pure degradation machinery.
+pub fn run_fault_cell(
+    variant: FaultVariant,
+    hours: usize,
+    profiles: &mut ProfileStore,
+) -> (crate::cluster::ClusterResult, f64) {
+    let mut spec = ClusterSpec::homogeneous(
+        Model::Llama70B,
+        Task::Conversation,
+        &[Grid::Fr, Grid::Miso],
+        RouterPolicy::CarbonGreedy,
+    )
+    .quick();
+    spec.hours = hours;
+    spec.baseline = Baseline::FullCache;
+    spec.cache = CacheVariant::Tiered;
+    spec.fixed_rps = Some(0.6);
+    spec.faults = variant;
+    let t0 = Instant::now();
+    let r = run_cluster(&spec, profiles);
+    (r, t0.elapsed().as_secs_f64())
+}
+
+fn fault_cell_json(r: &crate::cluster::ClusterResult, wall_s: f64) -> Json {
+    let boot_g: f64 = r
+        .replicas
+        .iter()
+        .map(|p| p.sim.accountant.breakdown().boot_g)
+        .sum();
+    Json::obj(vec![
+        ("completed", Json::Num(r.completed as f64)),
+        ("shed", Json::Num(r.shed as f64)),
+        ("crash_dropped", Json::Num(r.crash_dropped as f64)),
+        (
+            "overloaded_replicas",
+            Json::Num(r.overloaded_replicas as f64),
+        ),
+        ("slo_attainment", Json::Num(r.slo_attainment)),
+        ("boot_g", Json::Num(boot_g)),
+        ("total_carbon_g", Json::Num(r.total_carbon_g)),
+        ("wall_s", Json::Num(wall_s)),
+    ])
+}
+
+/// Measure the fault-injection smoke cell and return the `faults`
+/// section of `BENCH_SIM.json`: the fault-free and all-faults runs of
+/// the same fleet/day side by side, plus the attainment drop the
+/// injected crash + SSD loss + feed dropout cost. Panics if the faulted
+/// run wedges (zero completions) or charges no boot carbon — the bench
+/// doubles as a graceful-degradation smoke check.
+pub fn faults_report(quick: bool) -> Json {
+    let hours = if quick { 2 } else { 4 };
+    let mut profiles = ProfileStore::new(true);
+    let (off, off_wall) = run_fault_cell(FaultVariant::OFF, hours, &mut profiles);
+    let (all, all_wall) = run_fault_cell(FaultVariant::ALL, hours, &mut profiles);
+    assert!(all.completed > 0, "faulted fleet wedged (zero completions)");
+    let boot_g: f64 = all
+        .replicas
+        .iter()
+        .map(|p| p.sim.accountant.breakdown().boot_g)
+        .sum();
+    assert!(boot_g > 0.0, "crash+restart charged no boot carbon");
+    for (name, r) in [("off", &off), ("all", &all)] {
+        println!(
+            "bench sim/faults[{name:<3}] completed={} shed={} crash_dropped={} slo={:.3}",
+            r.completed, r.shed, r.crash_dropped, r.slo_attainment
+        );
+    }
+    println!(
+        "    -> attainment drop under crash+ssd+feed: {:.1} pp",
+        100.0 * (off.slo_attainment - all.slo_attainment)
+    );
+    Json::obj(vec![
+        ("fleet", Json::Str("FR+MISO".into())),
+        ("router", Json::Str("carbon-greedy".into())),
+        ("cache", Json::Str("tiered".into())),
+        ("baseline", Json::Str("full".into())),
+        ("hours", Json::Num(hours as f64)),
+        ("rps", Json::Num(0.6)),
+        ("off", fault_cell_json(&off, off_wall)),
+        ("all", fault_cell_json(&all, all_wall)),
+        (
+            "attainment_drop",
+            Json::Num(off.slo_attainment - all.slo_attainment),
+        ),
     ])
 }
 
@@ -466,6 +563,7 @@ pub fn prefetch_report(quick: bool) -> Json {
     let mut hit_rates = Vec::new();
     for mode in PrefetchMode::all() {
         let cfg = SimConfig {
+            shed_queue_limit: None,
             cost: CostModel::llama70b_4xl40(),
             power: PowerModel::default(),
             slo: Slo::conv_70b(),
@@ -666,6 +764,21 @@ mod tests {
         let (par, _) = run_fleet_cell(&cfg, 4, 2, &mut profiles);
         assert_eq!(seq, par, "parallel stepping changed the fleet outcome");
         assert!(seq.contains("completed="));
+    }
+
+    #[test]
+    fn fault_cell_degrades_instead_of_wedging() {
+        // Tiny variant of the report cell; the in-report asserts already
+        // check the full quick cell.
+        let mut profiles = ProfileStore::new(true);
+        let (off, _) = run_fault_cell(FaultVariant::OFF, 1, &mut profiles);
+        let (all, _) = run_fault_cell(FaultVariant::ALL, 1, &mut profiles);
+        assert!(all.completed > 0, "faulted fleet must keep serving");
+        assert_eq!(off.shed + off.crash_dropped, 0, "fault-free cell is clean");
+        // Identical seed, identical day: every routed request is either
+        // completed or accounted for as a crash drop.
+        let routed: usize = all.replicas.iter().map(|r| r.routed).sum();
+        assert_eq!(all.completed + all.crash_dropped, routed);
     }
 
     #[test]

@@ -120,6 +120,7 @@ pub fn fig4() -> Csv {
 fn rate_point(task: Task, rps: f64, cache_tb: f64, seed: u64, quick: bool) -> SimResult {
     let model = Model::Llama70B;
     let cfg = SimConfig {
+        shed_queue_limit: None,
         cost: model.cost(),
         power: model.power(),
         slo: model.slo(task.kind()),
@@ -237,6 +238,7 @@ pub fn fig7(quick: bool) -> Csv {
         for tb in [0.0, 4.0, 8.0, 16.0] {
             let model = Model::Llama70B;
             let cfg = SimConfig {
+                shed_queue_limit: None,
                 cost: model.cost(),
                 power: model.power(),
                 slo: model.slo(TaskKind::Conversation),
@@ -293,6 +295,7 @@ pub fn fig8(quick: bool) -> Csv {
         // cached once and account under each grid's mean CI.
         let model = Model::Llama70B;
         let cfg = SimConfig {
+            shed_queue_limit: None,
             cost: model.cost(),
             power: model.power(),
             slo: model.slo(TaskKind::Conversation),
@@ -349,6 +352,7 @@ pub fn fig8(quick: bool) -> Csv {
         let ci = ciso.hourly[h];
         let model = Model::Llama70B;
         let cfg = SimConfig {
+            shed_queue_limit: None,
             cost: model.cost(),
             power: model.power(),
             slo: model.slo(TaskKind::Conversation),

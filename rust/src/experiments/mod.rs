@@ -440,6 +440,7 @@ pub fn run_day(sc: &DayScenario, profiles: &mut ProfileStore) -> DayResult {
     }
 
     let sim_cfg = SimConfig {
+        shed_queue_limit: None,
         cost: model.cost(),
         power: model.power(),
         slo: model.slo(kind),

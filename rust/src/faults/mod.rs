@@ -1,0 +1,327 @@
+//! Deterministic fault injection for the fleet simulator
+//! (ARCHITECTURE.md § Fault model).
+//!
+//! GreenCache's headline claim — ≥90% SLO attainment while cutting
+//! carbon — is only credible if it survives the failures a real fleet
+//! sees. This module is the single source of *what fails when*: a
+//! seeded [`FaultSchedule`] generated once per cluster run, consumed by
+//! [`crate::cluster::ClusterSim`] at lockstep instants. Three fault
+//! kinds are modeled:
+//!
+//! 1. **Replica crash + restart** — one replica loses its in-flight
+//!    work (dropped requests are recorded as SLO violations, never
+//!    silently vanished) and is unavailable for a boot window; when the
+//!    boot completes, an EcoServe-style boot-energy/embodied charge
+//!    lands on the [`crate::carbon::CarbonBreakdown::boot_g`] ledger
+//!    line.
+//! 2. **SSD cache-tier failure** — the very hardware whose embodied
+//!    carbon the paper prices fails: a replica's
+//!    [`crate::cache::TieredStore`] degrades to DRAM-only (cold-tier
+//!    contents lost, invariants still checked) for the rest of the day.
+//! 3. **CI-forecast feed dropout** — the carbon-intensity telemetry
+//!    feed goes dark fleet-wide for a window;
+//!    [`crate::coordinator::GreenCacheController`] and
+//!    [`crate::control::GreenCacheFleet`] fall back to persistence
+//!    forecasting until the feed heals.
+//!
+//! # Determinism contract
+//!
+//! Every event instant is a pure function of `(variant, seed, hours,
+//! n_replicas)` — drawn once at schedule build, in **simulated time**.
+//! The cluster driver applies events at lockstep (arrival) instants,
+//! never at mid-stretch iteration counts, so fault runs stay
+//! thread-invariant and stepping-invariant like fault-free runs. With
+//! [`FaultVariant::OFF`] (the default) the schedule is empty and every
+//! code path reproduces the pre-fault driver byte-for-byte.
+//!
+//! # How to add a fault kind
+//!
+//! See ARCHITECTURE.md § "How to add a fault kind"; the short version:
+//! add a flag to [`FaultVariant`] (name/parse/label), draw its event
+//! instants in [`FaultSchedule::generate`], actuate it from the cluster
+//! driver's lockstep fault pass, and pin a defaults-off byte-identity
+//! test plus a thread-invariance test for the enabled axis.
+
+use crate::rng::Rng;
+
+/// Seconds a crashed replica is unavailable while it reboots and
+/// reloads weights (EcoServe-scale boot window).
+pub const BOOT_S: f64 = 600.0;
+
+/// The fault-injection axis of a scenario cell: which fault kinds the
+/// generated [`FaultSchedule`] includes (`greencache cluster --faults`,
+/// `greencache matrix --faults`). Flags compose: `crash+ssd` enables
+/// two kinds. The default (all off) injects nothing and leaves every
+/// result and label byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct FaultVariant {
+    /// Inject a replica crash + restart.
+    pub crash: bool,
+    /// Inject an SSD cache-tier failure.
+    pub ssd: bool,
+    /// Inject a CI-forecast feed dropout.
+    pub feed: bool,
+}
+
+impl FaultVariant {
+    /// No faults (the default; unlabeled in scenario labels).
+    pub const OFF: FaultVariant = FaultVariant { crash: false, ssd: false, feed: false };
+    /// Replica crash + restart only.
+    pub const CRASH: FaultVariant = FaultVariant { crash: true, ssd: false, feed: false };
+    /// SSD cache-tier failure only.
+    pub const SSD: FaultVariant = FaultVariant { crash: false, ssd: true, feed: false };
+    /// CI-forecast feed dropout only.
+    pub const FEED: FaultVariant = FaultVariant { crash: false, ssd: false, feed: true };
+    /// Every fault kind at once (the acceptance-criteria day).
+    pub const ALL: FaultVariant = FaultVariant { crash: true, ssd: true, feed: true };
+
+    /// Whether no fault kind is enabled.
+    pub fn is_off(&self) -> bool {
+        !self.crash && !self.ssd && !self.feed
+    }
+
+    /// The canonical sweep points of the axis (off, each kind alone,
+    /// all together) — the matrix `--faults all` spelling.
+    pub fn all() -> [FaultVariant; 5] {
+        [Self::OFF, Self::CRASH, Self::SSD, Self::FEED, Self::ALL]
+    }
+
+    /// Stable human/golden label: `off`, or enabled kinds joined by `+`
+    /// in fixed `crash`,`ssd`,`feed` order (`crash+ssd`).
+    pub fn name(&self) -> &'static str {
+        match (self.crash, self.ssd, self.feed) {
+            (false, false, false) => "off",
+            (true, false, false) => "crash",
+            (false, true, false) => "ssd",
+            (false, false, true) => "feed",
+            (true, true, false) => "crash+ssd",
+            (true, false, true) => "crash+feed",
+            (false, true, true) => "ssd+feed",
+            (true, true, true) => "crash+ssd+feed",
+        }
+    }
+
+    /// Parse a CLI spelling: `off`/`none`, `all`, or `+`-joined kinds
+    /// (`crash`, `ssd`/`disk`, `feed`/`ci`) in any order.
+    pub fn parse(s: &str) -> Option<FaultVariant> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "off" | "none" => return Some(Self::OFF),
+            "all" => return Some(Self::ALL),
+            _ => {}
+        }
+        let mut v = Self::OFF;
+        for part in s.split('+') {
+            match part.trim() {
+                "crash" => v.crash = true,
+                "ssd" | "disk" => v.ssd = true,
+                "feed" | "ci" => v.feed = true,
+                _ => return None,
+            }
+        }
+        Some(v)
+    }
+}
+
+/// One cluster run's fault timeline: which replica crashes when, which
+/// replica's SSD tier dies when, and when the CI feed is dark. Built
+/// once by [`FaultSchedule::generate`]; queried (read-only) by the
+/// cluster driver at every lockstep instant.
+#[derive(Debug, Clone)]
+pub struct FaultSchedule {
+    /// Per replica: the `[start, end)` window it is down rebooting.
+    crash: Vec<Option<(f64, f64)>>,
+    /// Per replica: the instant its SSD cache tier fails (permanent).
+    ssd_fail: Vec<Option<f64>>,
+    /// The `[start, end)` window the fleet-wide CI feed is dark.
+    feed_down: Option<(f64, f64)>,
+}
+
+impl FaultSchedule {
+    /// The empty schedule (what [`FaultVariant::OFF`] generates).
+    pub fn none(n_replicas: usize) -> Self {
+        FaultSchedule {
+            crash: vec![None; n_replicas],
+            ssd_fail: vec![None; n_replicas],
+            feed_down: None,
+        }
+    }
+
+    /// Draw the run's fault timeline. Deterministic in `(variant, seed,
+    /// hours, n_replicas)`; all instants are simulated-time seconds
+    /// inside the evaluated horizon:
+    ///
+    /// * crash start in `[20%, 40%)` of the horizon, down for
+    ///   [`BOOT_S`]; victim replica drawn by seed;
+    /// * SSD failure in `[45%, 60%)` of the horizon, on an
+    ///   independently drawn victim;
+    /// * feed dropout starting in `[30%, 50%)` of the horizon, dark for
+    ///   `[15%, 25%)` of it.
+    pub fn generate(variant: FaultVariant, seed: u64, hours: usize, n_replicas: usize) -> Self {
+        let mut s = Self::none(n_replicas);
+        if variant.is_off() || n_replicas == 0 {
+            return s;
+        }
+        let horizon = (hours.max(1) as f64) * 3600.0;
+        let mut rng = Rng::new(seed ^ 0xFA_u64.wrapping_mul(0x9E37_79B9));
+        if variant.crash {
+            let victim = rng.below(n_replicas as u64) as usize;
+            let start = horizon * (0.20 + 0.20 * rng.f64());
+            s.crash[victim] = Some((start, start + BOOT_S));
+        }
+        if variant.ssd {
+            let victim = rng.below(n_replicas as u64) as usize;
+            let at = horizon * (0.45 + 0.15 * rng.f64());
+            s.ssd_fail[victim] = Some(at);
+        }
+        if variant.feed {
+            let start = horizon * (0.30 + 0.20 * rng.f64());
+            let dur = horizon * (0.15 + 0.10 * rng.f64());
+            s.feed_down = Some((start, start + dur));
+        }
+        s
+    }
+
+    /// Replicas covered by the schedule.
+    pub fn n_replicas(&self) -> usize {
+        self.crash.len()
+    }
+
+    /// The `[start, end)` reboot window of replica `i`, if it crashes.
+    pub fn crash_window(&self, i: usize) -> Option<(f64, f64)> {
+        self.crash.get(i).copied().flatten()
+    }
+
+    /// Whether replica `i` is down (rebooting) at simulated time `t`.
+    pub fn is_down(&self, i: usize, t: f64) -> bool {
+        matches!(self.crash_window(i), Some((s, e)) if t >= s && t < e)
+    }
+
+    /// The instant replica `i`'s SSD cache tier fails, if it does.
+    pub fn ssd_fail_s(&self, i: usize) -> Option<f64> {
+        self.ssd_fail.get(i).copied().flatten()
+    }
+
+    /// Whether the fleet-wide CI-forecast feed is dark at time `t`.
+    pub fn feed_is_down(&self, t: f64) -> bool {
+        matches!(self.feed_down, Some((s, e)) if t >= s && t < e)
+    }
+
+    /// The CI-feed dropout window, if any.
+    pub fn feed_window(&self) -> Option<(f64, f64)> {
+        self.feed_down
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_defaults_off_and_labels_stably() {
+        assert_eq!(FaultVariant::default(), FaultVariant::OFF);
+        assert!(FaultVariant::default().is_off());
+        assert_eq!(FaultVariant::OFF.name(), "off");
+        assert_eq!(FaultVariant::CRASH.name(), "crash");
+        assert_eq!(FaultVariant::ALL.name(), "crash+ssd+feed");
+        assert_eq!(
+            FaultVariant { crash: true, ssd: true, feed: false }.name(),
+            "crash+ssd"
+        );
+        assert_eq!(FaultVariant::all().len(), 5);
+        assert_eq!(FaultVariant::all()[0], FaultVariant::OFF);
+    }
+
+    #[test]
+    fn parse_accepts_combos_and_aliases() {
+        assert_eq!(FaultVariant::parse("off"), Some(FaultVariant::OFF));
+        assert_eq!(FaultVariant::parse("none"), Some(FaultVariant::OFF));
+        assert_eq!(FaultVariant::parse("all"), Some(FaultVariant::ALL));
+        assert_eq!(FaultVariant::parse("crash"), Some(FaultVariant::CRASH));
+        assert_eq!(FaultVariant::parse("disk"), Some(FaultVariant::SSD));
+        assert_eq!(FaultVariant::parse("ci"), Some(FaultVariant::FEED));
+        assert_eq!(
+            FaultVariant::parse("crash+ssd"),
+            Some(FaultVariant { crash: true, ssd: true, feed: false })
+        );
+        assert_eq!(
+            FaultVariant::parse("feed+crash"),
+            Some(FaultVariant { crash: true, ssd: false, feed: true })
+        );
+        assert_eq!(FaultVariant::parse("nope"), None);
+        assert_eq!(FaultVariant::parse("crash+nope"), None);
+        // Every canonical point round-trips through its own label.
+        for v in FaultVariant::all() {
+            assert_eq!(FaultVariant::parse(v.name()), Some(v));
+        }
+    }
+
+    #[test]
+    fn off_schedule_is_empty() {
+        let s = FaultSchedule::generate(FaultVariant::OFF, 42, 24, 4);
+        for i in 0..4 {
+            assert!(s.crash_window(i).is_none());
+            assert!(s.ssd_fail_s(i).is_none());
+            assert!(!s.is_down(i, 0.0));
+        }
+        assert!(s.feed_window().is_none());
+        assert!(!s.feed_is_down(3600.0));
+    }
+
+    #[test]
+    fn generate_is_deterministic_in_seed() {
+        let a = FaultSchedule::generate(FaultVariant::ALL, 7, 24, 4);
+        let b = FaultSchedule::generate(FaultVariant::ALL, 7, 24, 4);
+        for i in 0..4 {
+            assert_eq!(a.crash_window(i), b.crash_window(i));
+            assert_eq!(a.ssd_fail_s(i), b.ssd_fail_s(i));
+        }
+        assert_eq!(a.feed_window(), b.feed_window());
+        let c = FaultSchedule::generate(FaultVariant::ALL, 8, 24, 4);
+        let moved = (0..4).any(|i| a.crash_window(i) != c.crash_window(i))
+            || a.feed_window() != c.feed_window();
+        assert!(moved, "a different seed must draw a different timeline");
+    }
+
+    #[test]
+    fn events_land_inside_the_horizon() {
+        for seed in 0..20u64 {
+            for hours in [2usize, 4, 24] {
+                let h = hours as f64 * 3600.0;
+                let s = FaultSchedule::generate(FaultVariant::ALL, seed, hours, 4);
+                let (cs, ce) = (0..4).find_map(|i| s.crash_window(i)).expect("one crash");
+                assert!(cs >= 0.2 * h && cs < 0.4 * h, "crash start {cs} of {h}");
+                assert!((ce - cs - BOOT_S).abs() < 1e-9);
+                let fs = (0..4).find_map(|i| s.ssd_fail_s(i)).expect("one ssd failure");
+                assert!(fs >= 0.45 * h && fs < 0.6 * h);
+                let (ds, de) = s.feed_window().expect("one dropout");
+                assert!(ds >= 0.3 * h && ds < 0.5 * h);
+                assert!(de > ds && de <= 0.75 * h + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn down_windows_are_half_open() {
+        let s = FaultSchedule::generate(FaultVariant::CRASH, 3, 4, 2);
+        let (i, (start, end)) = (0..2)
+            .find_map(|i| s.crash_window(i).map(|w| (i, w)))
+            .unwrap();
+        assert!(s.is_down(i, start));
+        assert!(s.is_down(i, (start + end) / 2.0));
+        assert!(!s.is_down(i, end), "boot completion instant is up");
+        assert!(!s.is_down(i, start - 1.0));
+        assert!(!s.is_down(1 - i, (start + end) / 2.0), "only the victim is down");
+    }
+
+    #[test]
+    fn single_kind_schedules_inject_only_their_kind() {
+        let s = FaultSchedule::generate(FaultVariant::SSD, 5, 24, 3);
+        assert!((0..3).all(|i| s.crash_window(i).is_none()));
+        assert!((0..3).any(|i| s.ssd_fail_s(i).is_some()));
+        assert!(s.feed_window().is_none());
+        let f = FaultSchedule::generate(FaultVariant::FEED, 5, 24, 3);
+        assert!((0..3).all(|i| f.crash_window(i).is_none() && f.ssd_fail_s(i).is_none()));
+        assert!(f.feed_window().is_some());
+    }
+}

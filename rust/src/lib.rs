@@ -22,8 +22,9 @@
 //!   calibrated cluster simulator ([`sim`] + [`profiler`]), scales it to
 //!   a multi-replica fleet behind a carbon-aware router ([`cluster`])
 //!   with a fleet-scoped control plane that co-optimizes router weights
-//!   and per-replica cache sizes ([`control`]), and fans evaluation
-//!   cells out through the parallel [`scenario`] matrix.
+//!   and per-replica cache sizes ([`control`]), stress-tests the fleet
+//!   with deterministic fault injection ([`faults`]), and fans
+//!   evaluation cells out through the parallel [`scenario`] matrix.
 //!
 //! Python never runs on the request path: the default build is
 //! self-contained, and after `make artifacts` the `pjrt` build is too.
@@ -37,6 +38,7 @@ pub mod cluster;
 pub mod control;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod load;
 pub mod metrics;
 pub mod profiler;

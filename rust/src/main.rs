@@ -12,6 +12,9 @@
 //!                     [--cache local|tiered|shared]
 //!                     [--policy lcs|lru|fifo|lfu|arc|slru|2q]  (eviction override)
 //!                     [--prefetch off|green]  (green-window prefix warming)
+//!                     [--faults off|crash|ssd|feed|all|crash+ssd+...]
+//!                                     (seeded fault injection: replica crash +
+//!                                      restart, SSD-tier loss, CI-feed dropout)
 //!                     [--fleet per-replica|green|all]
 //!                     [--threads N]   (lockstep replica stepping; 1 = sequential,
 //!                                      0 = one per core — byte-identical results)
@@ -23,6 +26,7 @@
 //!                     [--cluster FR+MISO[@rr|jsq|greedy|weighted]]
 //!                     [--fleets per-replica,green]
 //!                     [--prefetches off,green]
+//!                     [--faults off,crash+ssd,all]  (fault-injection axis)
 //!                     [--cell-threads N]   (within-cell replica stepping)
 //!                     [--hours H] [--threads N] [--seed S] [--quick]
 //! greencache profile  [--task conv|doc04|doc07] [--quick]
@@ -37,6 +41,7 @@ use greencache::cluster::{run_cluster, ClusterSpec, RouterPolicy};
 use greencache::control::FleetPolicy;
 use greencache::coordinator::server::{Server, ServerConfig};
 use greencache::experiments::{Baseline, Model, ProfileStore, Task};
+use greencache::faults::FaultVariant;
 use greencache::rng::Rng;
 use greencache::runtime::{default_artifact_dir, Engine};
 use greencache::scenario::{Matrix, MatrixRunner, ScenarioSpec};
@@ -140,6 +145,13 @@ fn parse_cache(s: &str) -> CacheVariant {
     CacheVariant::parse(s).unwrap_or_else(|| {
         eprintln!("unknown cache backend {s}, using local");
         CacheVariant::Local
+    })
+}
+
+fn parse_faults(s: &str) -> FaultVariant {
+    FaultVariant::parse(s).unwrap_or_else(|| {
+        eprintln!("unknown fault variant {s}, using off");
+        FaultVariant::OFF
     })
 }
 
@@ -313,6 +325,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
     let cache = parse_cache(args.get("cache").unwrap_or("local"));
     let policy: Option<PolicyKind> = args.get("policy").map(parse_policy);
     let prefetch = parse_prefetch(args.get("prefetch").unwrap_or("off"));
+    let faults = parse_faults(args.get("faults").unwrap_or("off"));
     let quick = args.bool("quick");
     let routers: Vec<RouterPolicy> = match args.get("router").unwrap_or("all") {
         "all" => RouterPolicy::all().to_vec(),
@@ -349,6 +362,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
             spec.cache = cache;
             spec.policy = policy;
             spec.prefetch = prefetch;
+            spec.faults = faults;
             spec.fleet = *fleet;
             spec.threads = args.usize("threads", 1);
             spec.hours = args.usize("hours", 24);
@@ -357,7 +371,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
             }
             spec.fixed_rps = fixed_rps;
             println!(
-                "fleet {} x{} | {} | {} | router {} | cache {} | fleet-ctl {} | prefetch {} ({}h)...",
+                "fleet {} x{} | {} | {} | router {} | cache {} | fleet-ctl {} | prefetch {} | faults {} ({}h)...",
                 spec.fleet_label(),
                 spec.replicas.len(),
                 task.name(),
@@ -366,6 +380,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
                 cache.name(),
                 fleet.name(),
                 prefetch.name(),
+                faults.name(),
                 spec.hours
             );
             let result = run_cluster(&spec, &mut profiles);
@@ -469,6 +484,10 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         eprintln!("note: --fleets only differentiates fleet cells; pass --cluster too");
     }
     let prefetches = parse_list(args, "prefetches", "off", parse_prefetch);
+    let faults = parse_list(args, "faults", "off", parse_faults);
+    if faults.iter().any(|f| !f.is_off()) && clusters == vec![None] {
+        eprintln!("note: --faults only injects into fleet cells; pass --cluster too");
+    }
 
     let matrix = Matrix::new()
         .models(&models)
@@ -480,6 +499,7 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         .clusters(&clusters)
         .fleets(&fleets)
         .prefetches(&prefetches)
+        .faults(&faults)
         .hours(args.usize("hours", 24))
         .quick(args.bool("quick"))
         .seed(args.usize("seed", 20_25) as u64)
@@ -492,7 +512,7 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         verbose: true,
     };
     println!(
-        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies x {} caches x {} fleets x {} prefetches)...",
+        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies x {} caches x {} fleets x {} prefetches x {} faults)...",
         specs.len(),
         models.len(),
         tasks.len(),
@@ -501,7 +521,8 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         policies.len(),
         caches.len(),
         fleets.len(),
-        prefetches.len()
+        prefetches.len(),
+        faults.len()
     );
     let result = runner.run(&specs);
     print!("{}", result.table());

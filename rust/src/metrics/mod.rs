@@ -171,6 +171,19 @@ impl SloTracker {
         }
     }
 
+    /// Record one request that was never served — shed by admission
+    /// control or dropped by a replica crash. The request counts as a
+    /// latency-violating sample on BOTH thresholds (sentinel latencies
+    /// strictly above each), so attainment can never be inflated by
+    /// dropping work (the FUV per-served-unit discipline), and
+    /// [`SloTracker::merge`] carries the verdict fleet-wide with no
+    /// special casing.
+    pub fn record_dropped(&mut self) {
+        let ttft = self.slo.ttft_s.max(0.0) * 2.0 + 1.0;
+        let tpot = self.slo.tpot_s.max(0.0) * 2.0 + 1.0;
+        self.record(ttft, tpot);
+    }
+
     /// Absorb another tracker (fleet-level SLO attainment across
     /// replicas). Each request keeps the verdict of the replica that
     /// served it — replicas may run different thresholds in a
@@ -253,6 +266,40 @@ mod tests {
         assert_eq!(t.attainment(), 0.5);
         assert!(!t.meets_slo());
         assert_eq!(t.total(), 4);
+    }
+
+    #[test]
+    fn dropped_requests_violate_both_thresholds() {
+        let mut t = SloTracker::new(Slo { ttft_s: 2.0, tpot_s: 0.2, rho: 0.9 });
+        t.record(1.0, 0.1); // served, ok
+        t.record_dropped(); // shed: must count against attainment
+        assert_eq!(t.total(), 2);
+        assert_eq!(t.attainment(), 0.5);
+        // The sentinel samples are visible in the reservoirs (strictly
+        // above both thresholds), so percentiles can't hide drops.
+        assert!(t.ttft.max() > t.slo.ttft_s);
+        assert!(t.tpot.max() > t.slo.tpot_s);
+    }
+
+    #[test]
+    fn merge_cannot_inflate_attainment_by_dropping_work() {
+        // A replica that serves 1 of 3 requests and drops the rest must
+        // pull the merged attainment DOWN exactly as if the drops were
+        // violations — never up.
+        let slo = Slo { ttft_s: 2.0, tpot_s: 0.2, rho: 0.9 };
+        let mut healthy = SloTracker::new(slo);
+        for _ in 0..8 {
+            healthy.record(1.0, 0.1);
+        }
+        let mut crashed = SloTracker::new(slo);
+        crashed.record(1.0, 0.1);
+        crashed.record_dropped();
+        crashed.record_dropped();
+        let before = healthy.attainment();
+        healthy.merge(&crashed);
+        assert_eq!(healthy.total(), 11);
+        assert!((healthy.attainment() - 9.0 / 11.0).abs() < 1e-12);
+        assert!(healthy.attainment() < before);
     }
 
     #[test]

@@ -186,6 +186,7 @@ pub fn profile(
                 warm_cache(wl.as_mut(), &mut cache, cfg.warm_prompts, seed);
             }
             let sim_cfg = SimConfig {
+                shed_queue_limit: None,
                 cost: cfg.cost.clone(),
                 power: cfg.power.clone(),
                 slo: cfg.slo,

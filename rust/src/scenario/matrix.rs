@@ -5,11 +5,12 @@ use crate::cache::{CacheVariant, PolicyKind, PrefetchMode};
 use crate::ci::Grid;
 use crate::control::FleetPolicy;
 use crate::experiments::{Baseline, Model, Task};
+use crate::faults::FaultVariant;
 
 /// A declarative scenario matrix. Every axis is a list of values; the
 /// expansion is their cartesian product in a fixed order (model-major,
-/// then task, grid, baseline, policy, cache, cluster, fleet, prefetch),
-/// so cell order — and therefore the golden table — is stable.
+/// then task, grid, baseline, policy, cache, cluster, fleet, prefetch,
+/// faults), so cell order — and therefore the golden table — is stable.
 ///
 /// # Example
 ///
@@ -62,6 +63,12 @@ pub struct Matrix {
     /// replay the identical day (the axis never shapes workload seeds),
     /// so the prefetcher's hit-rate delta is directly readable.
     pub prefetches: Vec<PrefetchMode>,
+    /// Faults axis (`greencache matrix --faults`): which seeded fault
+    /// kinds each cell injects ([`crate::faults::FaultSchedule`]).
+    /// Off/faulted pairs replay the identical day (the axis never
+    /// shapes workload seeds), so degradation deltas are directly
+    /// readable. A fleet-level axis — single-node cells ignore it.
+    pub faults: Vec<FaultVariant>,
     /// Evaluated horizon per cell, hours.
     pub hours: usize,
     /// Shrunken warm-up/profile smoke mode.
@@ -95,6 +102,7 @@ impl Matrix {
             clusters: vec![None],
             fleets: vec![FleetPolicy::PerReplica],
             prefetches: vec![PrefetchMode::Off],
+            faults: vec![FaultVariant::OFF],
             hours: 24,
             quick: false,
             base_seed: 20_25,
@@ -159,6 +167,12 @@ impl Matrix {
         self
     }
 
+    /// Set the faults axis (seeded fault-injection variants).
+    pub fn faults(mut self, v: &[FaultVariant]) -> Self {
+        self.faults = v.to_vec();
+        self
+    }
+
     /// Set the per-cell horizon, hours.
     pub fn hours(mut self, h: usize) -> Self {
         self.hours = h;
@@ -213,6 +227,7 @@ impl Matrix {
             * self.clusters.len()
             * self.fleets.len()
             * self.prefetches.len()
+            * self.faults.len()
     }
 
     /// Whether the expansion would be empty.
@@ -233,23 +248,26 @@ impl Matrix {
                                 for cluster in &self.clusters {
                                     for &fleet in &self.fleets {
                                         for &prefetch in &self.prefetches {
-                                            let mut spec =
-                                                ScenarioSpec::new(model, task, grid, baseline);
-                                            spec.policy = policy;
-                                            spec.hours = self.hours;
-                                            spec.seed = seed;
-                                            spec.interval_s = self.interval_s;
-                                            spec.fixed_rps = self.fixed_rps;
-                                            spec.fixed_ci = self.fixed_ci;
-                                            spec.cache = cache;
-                                            spec.cluster = cluster.clone();
-                                            spec.fleet = fleet;
-                                            spec.threads = self.cell_threads;
-                                            spec.prefetch = prefetch;
-                                            if self.quick {
-                                                spec = spec.quick();
+                                            for &fault in &self.faults {
+                                                let mut spec =
+                                                    ScenarioSpec::new(model, task, grid, baseline);
+                                                spec.policy = policy;
+                                                spec.hours = self.hours;
+                                                spec.seed = seed;
+                                                spec.interval_s = self.interval_s;
+                                                spec.fixed_rps = self.fixed_rps;
+                                                spec.fixed_ci = self.fixed_ci;
+                                                spec.cache = cache;
+                                                spec.cluster = cluster.clone();
+                                                spec.fleet = fleet;
+                                                spec.threads = self.cell_threads;
+                                                spec.prefetch = prefetch;
+                                                spec.faults = fault;
+                                                if self.quick {
+                                                    spec = spec.quick();
+                                                }
+                                                cells.push(spec);
                                             }
-                                            cells.push(spec);
                                         }
                                     }
                                 }
@@ -398,6 +416,32 @@ mod tests {
             assert_eq!(w[1].prefetch, PrefetchMode::Green);
             assert!(w[1].label().ends_with("/prefetch=green"), "{}", w[1].label());
             assert!(!w[0].label().contains("prefetch="), "{}", w[0].label());
+        }
+    }
+
+    #[test]
+    fn faults_axis_multiplies_cells_and_shares_seeds() {
+        use crate::cluster::RouterPolicy;
+        let m = small()
+            .clusters(&[Some(ClusterVariant::new(
+                &[Grid::Fr, Grid::Miso],
+                RouterPolicy::CarbonGreedy,
+            ))])
+            .faults(&[FaultVariant::OFF, FaultVariant::ALL]);
+        assert_eq!(m.len(), 8 * 2);
+        let cells = m.expand();
+        // The faults axis is innermost: consecutive pairs differ only by
+        // fault variant and replay the identical day.
+        for w in cells.chunks(2) {
+            assert_eq!(w[0].seed, w[1].seed);
+            assert!(w[0].faults.is_off());
+            assert_eq!(w[1].faults, FaultVariant::ALL);
+            assert!(
+                w[1].label().ends_with("/faults=crash+ssd+feed"),
+                "{}",
+                w[1].label()
+            );
+            assert!(!w[0].label().contains("faults="), "{}", w[0].label());
         }
     }
 

@@ -31,6 +31,7 @@ use crate::ci::Grid;
 use crate::cluster::{ClusterSpec, ReplicaSpec, RouterPolicy};
 use crate::control::FleetPolicy;
 use crate::experiments::{Baseline, DayScenario, Model, Task};
+use crate::faults::FaultVariant;
 
 /// The cluster shape of a fleet cell: one replica per grid, plus the
 /// routing policy, plus (optionally) per-replica models for
@@ -153,6 +154,14 @@ pub struct ScenarioSpec {
     /// [`PrefetchMode::Green`], which warms the Markov-predicted next
     /// prefix during below-median-CI hours and idle gaps.
     pub prefetch: PrefetchMode,
+    /// Fault injection (the matrix faults axis): which
+    /// [`crate::faults`] fault kinds the seeded [`FaultVariant`]
+    /// schedule enables. A fleet-level axis — single-node
+    /// [`ScenarioSpec::to_day_scenario`] cells ignore it, like `fleet`.
+    /// [`FaultVariant::OFF`] (the default) keeps labels and results
+    /// byte-identical to pre-fault builds; it never shapes the
+    /// workload seed.
+    pub faults: FaultVariant,
 }
 
 impl ScenarioSpec {
@@ -175,6 +184,7 @@ impl ScenarioSpec {
             fleet: FleetPolicy::PerReplica,
             threads: 1,
             prefetch: PrefetchMode::Off,
+            faults: FaultVariant::OFF,
         }
     }
 
@@ -223,6 +233,7 @@ impl ScenarioSpec {
             fleet: self.fleet,
             threads: self.threads,
             prefetch: self.prefetch,
+            faults: self.faults,
         })
     }
 
@@ -246,8 +257,10 @@ impl ScenarioSpec {
     /// append `/fleet[FR+MISO]/carbon-greedy`, non-default cache
     /// backends `/cache=tiered` or `/cache=shared`, and fleet cells
     /// under the joint planner `/fleet=green` (the per-replica default
-    /// stays unlabeled, so pre-planner golden tables are unchanged), and
-    /// prefetch-enabled cells `/prefetch=green` (off stays unlabeled).
+    /// stays unlabeled, so pre-planner golden tables are unchanged),
+    /// prefetch-enabled cells `/prefetch=green` (off stays unlabeled),
+    /// and fault-injected cells `/faults=crash+ssd+feed` etc. (off stays
+    /// unlabeled).
     pub fn label(&self) -> String {
         let mut s = format!(
             "{}/{}/{}/{}",
@@ -275,6 +288,10 @@ impl ScenarioSpec {
         if self.prefetch != PrefetchMode::Off {
             s.push_str("/prefetch=");
             s.push_str(self.prefetch.name());
+        }
+        if !self.faults.is_off() {
+            s.push_str("/faults=");
+            s.push_str(self.faults.name());
         }
         s
     }
@@ -492,6 +509,30 @@ mod tests {
             spec.to_cluster_spec().expect("fleet").prefetch,
             PrefetchMode::Green
         );
+    }
+
+    #[test]
+    fn faults_axis_lowers_and_labels() {
+        use crate::cluster::RouterPolicy;
+        let mut spec = ScenarioSpec::new(
+            Model::Llama70B,
+            Task::Conversation,
+            Grid::Es,
+            Baseline::FullCache,
+        );
+        spec.cluster = Some(ClusterVariant::new(
+            &[Grid::Fr, Grid::Miso],
+            RouterPolicy::CarbonGreedy,
+        ));
+        assert_eq!(spec.faults, FaultVariant::OFF);
+        assert!(!spec.label().contains("faults="), "off is the unlabeled default");
+        assert!(spec.to_cluster_spec().unwrap().faults.is_off());
+        spec.faults = FaultVariant::ALL;
+        assert!(spec.label().ends_with("/faults=crash+ssd+feed"), "{}", spec.label());
+        assert_eq!(spec.to_cluster_spec().unwrap().faults, FaultVariant::ALL);
+        // A robustness axis must never shape the workload seed: both
+        // cells replay the identical day.
+        assert_eq!(spec.to_cluster_spec().unwrap().seed, spec.seed);
     }
 
     #[test]

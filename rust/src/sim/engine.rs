@@ -142,6 +142,13 @@ pub trait Controller {
     /// controller's initial decision to `cache` before time zero.
     /// Default: leave the cache as provisioned.
     fn bootstrap(&mut self, _cache: &mut dyn CacheStore) {}
+
+    /// CI-forecast feed health notification ([`crate::faults`]' feed
+    /// dropout): `up == false` means the grid-signal feed is down and the
+    /// controller must fall back to persistence forecasting until the
+    /// next `set_ci_feed(true)`. Default: ignore (controllers that never
+    /// consume a forecast have nothing to degrade).
+    fn set_ci_feed(&mut self, _up: bool) {}
 }
 
 /// A controller that never resizes (No Cache / Full Cache baselines) —
@@ -198,6 +205,9 @@ pub struct HourSample {
     pub other_embodied_g: f64,
     /// Carbon of prefetch warms charged during the interval, grams.
     pub prefetch_g: f64,
+    /// Boot/restart carbon (crash recovery) charged during the interval,
+    /// grams.
+    pub boot_g: f64,
 }
 
 /// Full simulation outcome.
@@ -221,6 +231,15 @@ pub struct SimResult {
     pub iterations: u64,
     /// Green-window prefetch activity (all-zero when prefetch is off).
     pub prefetch: PrefetchStats,
+    /// Arrivals rejected by admission control (queue-depth shed or
+    /// overload valve) — each one counted as an SLO violation, never
+    /// silently dropped.
+    pub shed: usize,
+    /// In-flight requests dropped by replica crashes — also counted as
+    /// SLO violations.
+    pub crash_dropped: usize,
+    /// Whether the overload safety valve tripped during the run.
+    pub overloaded: bool,
 }
 
 impl SimResult {
@@ -287,6 +306,12 @@ pub struct SimConfig {
     /// see [`ReplicaEngine::set_green_ci_threshold`] — for green hours
     /// to fire).
     pub prefetch: PrefetchMode,
+    /// Admission-control queue-depth limit: [`ReplicaEngine::try_inject`]
+    /// sheds (rejects) an arrival when `queue_depth() >= limit`, counting
+    /// it as an SLO violation via [`SloTracker::record_dropped`]. `None`
+    /// (the default everywhere faults are off) disables shedding, which
+    /// keeps fault-free runs byte-identical to the pre-fault engine.
+    pub shed_queue_limit: Option<usize>,
 }
 
 /// One replica's steppable discrete-event engine.
@@ -347,6 +372,9 @@ pub struct ReplicaEngine<'c> {
     pending_time_s: f64,
     // Green-window prefix prefetcher (no-op in PrefetchMode::Off).
     prefetcher: Prefetcher,
+    // Fault/overload bookkeeping (see crate::faults).
+    shed: usize,
+    crash_dropped: usize,
 }
 
 impl<'c> ReplicaEngine<'c> {
@@ -381,6 +409,8 @@ impl<'c> ReplicaEngine<'c> {
             pending_energy_j: 0.0,
             pending_time_s: 0.0,
             prefetcher,
+            shed: 0,
+            crash_dropped: 0,
         }
     }
 
@@ -442,6 +472,88 @@ impl<'c> ReplicaEngine<'c> {
     /// cache statistics.
     pub fn overloaded(&self) -> bool {
         self.iterations > MAX_ITERATIONS
+    }
+
+    /// Arrivals rejected by admission control so far.
+    pub fn shed(&self) -> usize {
+        self.shed
+    }
+
+    /// In-flight requests dropped by [`crash`](ReplicaEngine::crash) so
+    /// far.
+    pub fn crash_dropped(&self) -> usize {
+        self.crash_dropped
+    }
+
+    /// Whether an arrival injected *now* would be shed: the queue depth
+    /// sits at or above [`SimConfig::shed_queue_limit`], or the overload
+    /// valve has tripped. Routers consult this (together with
+    /// [`crate::faults::FaultSchedule::is_down`]) before placing a
+    /// request, so shed work gets a failover chance on another replica
+    /// first.
+    pub fn would_shed(&self) -> bool {
+        self.cfg
+            .shed_queue_limit
+            .map_or(false, |l| self.queue_depth() >= l)
+            || self.overloaded()
+    }
+
+    /// Reject one arrival: count it as shed and as an SLO violation
+    /// ([`SloTracker::record_dropped`]). Drivers call this when failover
+    /// found no placeable replica — the request is accounted, never
+    /// silently dropped.
+    pub fn reject(&mut self) {
+        self.shed += 1;
+        self.slo.record_dropped();
+    }
+
+    /// Admission-controlled [`inject`](ReplicaEngine::inject): sheds the
+    /// request (returning `false`) when [`would_shed`] holds, admits it
+    /// otherwise. With `shed_queue_limit == None` and the valve untripped
+    /// this is exactly `inject` — the single-node [`simulate`] driver
+    /// uses it so both paths share one admission gate.
+    ///
+    /// [`would_shed`]: ReplicaEngine::would_shed
+    pub fn try_inject(&mut self, req: Request) -> bool {
+        if self.would_shed() {
+            self.reject();
+            false
+        } else {
+            self.inject(req);
+            true
+        }
+    }
+
+    /// Crash the replica at the current instant: every admitted
+    /// in-flight request (waiting + running) is dropped and counted as
+    /// an SLO violation; returns how many were lost. The context cache
+    /// survives (host/SSD-persistent KV outlives an engine process), and
+    /// energy already accumulated toward the dropped work stays in the
+    /// pending pool — wasted joules are still emitted joules. The driver
+    /// keeps the replica out of routing for the boot window and charges
+    /// the restart via [`record_boot`](ReplicaEngine::record_boot).
+    pub fn crash(&mut self) -> usize {
+        let n = self.waiting.len() + self.running.len();
+        for _ in 0..n {
+            self.slo.record_dropped();
+        }
+        self.crash_dropped += n;
+        self.waiting.clear();
+        self.running.clear();
+        n
+    }
+
+    /// Charge the EcoServe-style restart cost after a crash: `boot_s`
+    /// seconds of weight-loading (GPU half-busy streaming weights, CPU
+    /// pegged) priced at the hour's CI, plus the boot window's amortized
+    /// non-storage embodied share — both on the dedicated
+    /// [`CarbonBreakdown::boot_g`] ledger line. Wall-time is *not*
+    /// double-counted: the engine clock keeps integrating idle power
+    /// across the outage as usual; this adds only the provisioning-churn
+    /// premium.
+    pub fn record_boot(&mut self, boot_s: f64, ci_gpkwh: f64) {
+        let e = self.cfg.power.energy_j(0.5, 1.0, 0.0, 0.0, boot_s);
+        self.accountant.record_boot(boot_s, e, Ci(ci_gpkwh));
     }
 
     /// Admit a request. Arrivals must be injected in time order (by
@@ -534,6 +646,7 @@ impl<'c> ReplicaEngine<'c> {
         } else {
             0.0
         };
+        let overloaded = self.overloaded();
         let result = SimResult {
             slo: self.slo,
             accountant: self.accountant,
@@ -544,6 +657,9 @@ impl<'c> ReplicaEngine<'c> {
             token_hit_rate: self.cache.stats().token_hit_rate(),
             iterations: self.iterations,
             prefetch: self.prefetcher.stats(),
+            shed: self.shed,
+            crash_dropped: self.crash_dropped,
+            overloaded,
         };
         (result, self.cache)
     }
@@ -574,6 +690,7 @@ impl<'c> ReplicaEngine<'c> {
             let delta_cache = b.cache_embodied_g - self.prev_breakdown.cache_embodied_g;
             let delta_other = b.other_embodied_g - self.prev_breakdown.other_embodied_g;
             let delta_prefetch = b.prefetch_g - self.prev_breakdown.prefetch_g;
+            let delta_boot = b.boot_g - self.prev_breakdown.boot_g;
             self.prev_breakdown = b;
 
             let mut tt = crate::metrics::LatencyStats::new();
@@ -608,11 +725,12 @@ impl<'c> ReplicaEngine<'c> {
                 completed: self.interval_completed,
                 p90_ttft_s: if tt.is_empty() { 0.0 } else { tt.p90() },
                 p90_tpot_s: if tp.is_empty() { 0.0 } else { tp.p90() },
-                carbon_g: delta_op + delta_cache + delta_other + delta_prefetch,
+                carbon_g: delta_op + delta_cache + delta_other + delta_prefetch + delta_boot,
                 operational_g: delta_op,
                 cache_embodied_g: delta_cache,
                 other_embodied_g: delta_other,
                 prefetch_g: delta_prefetch,
+                boot_g: delta_boot,
             });
             controller.on_interval(self.interval_idx, &obs, self.cache.as_mut());
             // Green-window hook: if the *upcoming* interval sits in a
@@ -965,7 +1083,7 @@ pub fn simulate(
         }
         let mut req = workload.next_request(&mut rng);
         req.arrival_s = next_arrival;
-        engine.inject(req);
+        engine.try_inject(req);
         next_arrival = arrivals.next_arrival(|h| rate_of_hour(h));
     }
     let (result, _borrow) = engine.finish(horizon_s, ci_of_hour, controller);

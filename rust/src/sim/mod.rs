@@ -46,6 +46,7 @@ mod tests {
         stepping: Stepping,
     ) -> SimResult {
         let cfg = SimConfig {
+            shed_queue_limit: None,
             cost: CostModel::llama70b_4xl40(),
             power: PowerModel::default(),
             slo: Slo::conv_70b(),
@@ -209,6 +210,7 @@ mod tests {
     /// Drive one warm hour over any [`CacheStore`] backend.
     fn sim_store(cache: &mut dyn CacheStore, rps: f64, warm: usize, seed: u64) -> SimResult {
         let cfg = SimConfig {
+            shed_queue_limit: None,
             cost: CostModel::llama70b_4xl40(),
             power: PowerModel::default(),
             slo: Slo::conv_70b(),
@@ -307,6 +309,7 @@ mod tests {
             }
         }
         let cfg = SimConfig {
+            shed_queue_limit: None,
             cost: CostModel::llama70b_4xl40(),
             power: PowerModel::default(),
             slo: Slo::conv_70b(),

@@ -93,6 +93,7 @@ impl Controller for ToggleResize {
 
 fn run(sc: &Scenario, stepping: Stepping) -> SimResult {
     let cfg = SimConfig {
+        shed_queue_limit: None,
         cost: CostModel::llama70b_4xl40(),
         power: PowerModel::default(),
         slo: Slo::conv_70b(),

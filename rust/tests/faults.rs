@@ -1,0 +1,181 @@
+//! Acceptance suite for the fault-injection / graceful-degradation
+//! subsystem (`greencache::faults` + the cluster driver's failover and
+//! admission-control paths).
+//!
+//! Pins, per the robustness redesign's acceptance criteria:
+//!
+//! * a seeded crash + SSD-loss + feed-dropout day on a 4-replica golden
+//!   fleet **completes** (no wedge) with exact conservation — every
+//!   accepted arrival completes or is crash-dropped, and every request
+//!   is an SLO sample (served, shed or dropped; attainment can never be
+//!   inflated by dropping work);
+//! * failover keeps the faulted fleet's SLO attainment within 10 pp of
+//!   the fault-free twin on the identical replayed day;
+//! * the fault-free cell stays byte-identical whether the faults axis
+//!   is left at its default or set to `off` explicitly (defaults-off:
+//!   pre-fault goldens and labels are unchanged);
+//! * replica restart charges the dedicated `boot_g` ledger line, which
+//!   is included in — but does not exhaust — `total_g()`;
+//! * a fault-enabled fleet is thread-invariant at 1/2/4/8 lockstep
+//!   threads (fault events fire at arrival instants, a pure function of
+//!   the arrival stream, never of stepping or thread count).
+
+use greencache::cache::CacheVariant;
+use greencache::ci::Grid;
+use greencache::cluster::{run_cluster, ClusterResult, ClusterSpec, RouterPolicy};
+use greencache::experiments::{Baseline, Model, ProfileStore, Task};
+use greencache::faults::FaultVariant;
+
+/// The golden fleet: four grids, carbon-greedy routing, tiered caches
+/// (so the SSD fault has a tier to take), Full Cache (controller-free —
+/// the delta under faults is pure degradation machinery), at a
+/// comfortably sub-capacity fleet rate so the fault-free twin attains
+/// its SLO and the 10 pp failover pin is meaningful.
+fn golden_fleet(faults: FaultVariant, threads: usize) -> ClusterSpec {
+    let mut spec = ClusterSpec::homogeneous(
+        Model::Llama70B,
+        Task::Conversation,
+        &[Grid::Fr, Grid::Es, Grid::Pjm, Grid::Miso],
+        RouterPolicy::CarbonGreedy,
+    )
+    .quick();
+    spec.baseline = Baseline::FullCache;
+    spec.hours = 3;
+    spec.fixed_rps = Some(0.35);
+    spec.cache = CacheVariant::Tiered;
+    spec.faults = faults;
+    spec.threads = threads;
+    spec
+}
+
+fn run(spec: &ClusterSpec) -> ClusterResult {
+    let mut profiles = ProfileStore::new(true);
+    run_cluster(spec, &mut profiles)
+}
+
+/// Conservation, fleet-wide and per replica: nothing is silently lost.
+fn assert_conserved(r: &ClusterResult) {
+    let routed: usize = r.replicas.iter().map(|x| x.routed).sum();
+    assert_eq!(
+        r.completed + r.crash_dropped,
+        routed,
+        "accepted arrivals must complete or be crash-dropped"
+    );
+    for rep in &r.replicas {
+        assert_eq!(
+            rep.sim.slo.total(),
+            rep.sim.completed + rep.sim.shed + rep.sim.crash_dropped,
+            "every request is an SLO sample: served, shed or dropped"
+        );
+    }
+}
+
+#[test]
+fn faulted_golden_fleet_completes_with_conservation() {
+    let r = run(&golden_fleet(FaultVariant::ALL, 1));
+    assert!(r.completed > 500, "faulted fleet wedged: {}", r.completed);
+    assert_conserved(&r);
+    // The injected crash actually bit: work was dropped or shed
+    // somewhere, and it shows in the accounting rather than vanishing.
+    assert!(
+        r.shed + r.crash_dropped > 0,
+        "an all-faults day must visibly degrade"
+    );
+}
+
+#[test]
+fn failover_keeps_attainment_within_ten_points_of_fault_free() {
+    let clean = run(&golden_fleet(FaultVariant::OFF, 1));
+    let faulted = run(&golden_fleet(FaultVariant::ALL, 1));
+    assert_eq!(clean.shed + clean.crash_dropped, 0, "fault-free cell is clean");
+    assert!(
+        clean.slo_attainment - faulted.slo_attainment < 0.10,
+        "failover must hold attainment within 10 pp: clean {:.3} vs faulted {:.3}",
+        clean.slo_attainment,
+        faulted.slo_attainment
+    );
+    // Degradation is real but bounded: the faulted fleet still serves
+    // the overwhelming majority of the day.
+    assert!(faulted.completed * 10 > clean.completed * 9);
+}
+
+#[test]
+fn fault_free_cell_is_byte_identical_with_defaults_off() {
+    // `homogeneous()` defaults the axis to OFF; setting it explicitly
+    // must not perturb a single bit (Debug floats are
+    // shortest-roundtrip, so equal renderings mean bit-equal results).
+    let mut implicit = golden_fleet(FaultVariant::OFF, 1);
+    implicit.faults = FaultVariant::default();
+    let a = run(&implicit);
+    let b = run(&golden_fleet(FaultVariant::OFF, 1));
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    assert_eq!(a.shed, 0);
+    assert_eq!(a.crash_dropped, 0);
+    assert_eq!(a.overloaded_replicas, 0);
+}
+
+#[test]
+fn restart_charges_the_boot_ledger_line_inside_the_total() {
+    let r = run(&golden_fleet(FaultVariant::ALL, 1));
+    let boot_g: f64 = r
+        .replicas
+        .iter()
+        .map(|rep| rep.sim.accountant.breakdown().boot_g)
+        .sum();
+    assert!(boot_g > 0.0, "a crashed replica must charge boot carbon");
+    for rep in &r.replicas {
+        let b = rep.sim.accountant.breakdown();
+        if b.boot_g > 0.0 {
+            assert!(
+                b.total_g() > b.boot_g,
+                "boot_g is one line of the total, not all of it"
+            );
+        }
+    }
+    // The fleet timeline carries the same grams (boot windows land in
+    // their interval, not smeared).
+    let timeline_boot: f64 = r.hours.iter().map(|h| h.boot_g).sum();
+    assert!((timeline_boot - boot_g).abs() < 1e-9);
+}
+
+#[test]
+fn shed_requests_count_against_attainment() {
+    // One replica, no failover target: boot-window arrivals must shed,
+    // and each shed must surface as an SLO-violating sample.
+    let mut spec = ClusterSpec::homogeneous(
+        Model::Llama70B,
+        Task::Conversation,
+        &[Grid::Es],
+        RouterPolicy::RoundRobin,
+    )
+    .quick();
+    spec.baseline = Baseline::FullCache;
+    spec.hours = 4;
+    spec.fixed_rps = Some(0.35);
+    spec.faults = FaultVariant::CRASH;
+    let r = run(&spec);
+    assert!(r.shed > 0, "no failover target: boot-window arrivals shed");
+    assert_conserved(&r);
+    let rep = &r.replicas[0];
+    let slo = &rep.sim.slo;
+    let attained = (slo.attainment() * slo.total() as f64).round() as usize;
+    let violations = slo.total() - attained;
+    assert!(
+        violations >= rep.sim.shed + rep.sim.crash_dropped,
+        "every shed/dropped request must be a violating sample"
+    );
+    assert!(r.slo_attainment < 1.0);
+}
+
+#[test]
+fn fault_injection_is_thread_invariant() {
+    let want = format!("{:?}", run(&golden_fleet(FaultVariant::ALL, 1)));
+    for threads in [2, 4, 8] {
+        let parallel = run(&golden_fleet(FaultVariant::ALL, threads));
+        assert_eq!(
+            format!("{parallel:?}"),
+            want,
+            "faulted fleet diverged at {threads} threads"
+        );
+    }
+}

@@ -34,6 +34,7 @@ use greencache::workload::{ConversationGen, ConversationParams, Workload};
 /// would be nothing left to warm).
 fn sparse_day(prefetch: PrefetchMode, ci: impl Fn(usize) -> f64 + Sync) -> SimResult {
     let cfg = SimConfig {
+        shed_queue_limit: None,
         cost: CostModel::llama70b_4xl40(),
         power: PowerModel::default(),
         slo: Slo::conv_70b(),
