@@ -24,7 +24,7 @@ committed placeholders (repo root) and the freshly measured reports
 import json
 import sys
 
-SCHEMA = "greencache-bench-v4"
+SCHEMA = "greencache-bench-v5"
 REQUIRED = {
     "BENCH_SIM.json": [
         "bench", "config", "reference", "fast_forward", "speedup",
@@ -33,6 +33,10 @@ REQUIRED = {
         # fault-free twin of the same fleet/day). A null placeholder
         # records-but-doesn't-gate, like the fleet section.
         "faults",
+        # v5: the provisioning smoke cell (green power planning vs the
+        # always-on twin of the same low-load fleet/day). A null
+        # placeholder records-but-doesn't-gate, like the fleet section.
+        "provision",
     ],
     "BENCH_CACHE.json": [
         "bench", "cases", "group", "ops_per_case", "quick", "schema",

@@ -284,6 +284,66 @@ mod tests {
     }
 
     #[test]
+    fn total_is_the_exhaustive_sum_of_every_ledger_line() {
+        // Every field gets a distinct sentinel; the exhaustive
+        // destructuring (no `..`) makes this test FAIL TO COMPILE when a
+        // new ledger line is added, forcing it into `total_g()` and
+        // `Add` instead of silently vanishing from the total — the bug
+        // class `prefetch_g`/`boot_g` each had to be hand-threaded
+        // around.
+        let b = CarbonBreakdown {
+            operational_g: 1.0,
+            cache_embodied_g: 20.0,
+            other_embodied_g: 300.0,
+            prefetch_g: 4000.0,
+            boot_g: 50000.0,
+        };
+        let CarbonBreakdown {
+            operational_g,
+            cache_embodied_g,
+            other_embodied_g,
+            prefetch_g,
+            boot_g,
+        } = b;
+        let sum = operational_g + cache_embodied_g + other_embodied_g + prefetch_g + boot_g;
+        assert_eq!(b.total_g(), sum);
+        assert_eq!(b.total_g(), 54321.0);
+        // The merge (`impl Add`) is field-exact: each line lands on its
+        // own line, never smeared into a sibling.
+        let other = CarbonBreakdown {
+            operational_g: 0.5,
+            cache_embodied_g: 0.25,
+            other_embodied_g: 0.125,
+            prefetch_g: 0.0625,
+            boot_g: 0.03125,
+        };
+        let m = b + other;
+        assert_eq!(m.operational_g, 1.5);
+        assert_eq!(m.cache_embodied_g, 20.25);
+        assert_eq!(m.other_embodied_g, 300.125);
+        assert_eq!(m.prefetch_g, 4000.0625);
+        assert_eq!(m.boot_g, 50000.03125);
+        assert_eq!(m.total_g(), b.total_g() + other.total_g());
+    }
+
+    #[test]
+    fn powered_off_period_accrues_only_other_embodied() {
+        // The provisioning contract: a powered-off replica records its
+        // periods with zero energy and zero cache tiers, so only the
+        // non-storage embodied amortization keeps running — idle
+        // hardware is still manufactured hardware.
+        let m = EmbodiedModel::default();
+        let mut a = CarbonAccountant::new(m.clone());
+        a.record_period_split(3600.0, 0.0, Ci(485.0), 0.0, 0.0);
+        let b = a.breakdown();
+        assert_eq!(b.operational_g, 0.0);
+        assert_eq!(b.cache_embodied_g, 0.0);
+        let want = m.non_storage_amortized_g(3600.0);
+        assert!((b.other_embodied_g - want).abs() < 1e-12);
+        assert!((b.total_g() - want).abs() < 1e-12);
+    }
+
+    #[test]
     fn boot_charges_its_own_line_with_energy_and_churn() {
         let m = EmbodiedModel::default();
         let mut a = CarbonAccountant::new(m.clone());

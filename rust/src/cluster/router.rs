@@ -48,12 +48,19 @@ pub struct ReplicaView {
     /// fleet pool every replica reports the same value, so the affinity
     /// term cancels and placement follows CI and queue pressure alone).
     pub affinity_tokens: u32,
+    /// Answer-quality score of the model this replica serves (1.0 for
+    /// the reference tier; see [`crate::experiments::Model::quality`]).
+    /// Homogeneous fleets report 1.0 everywhere, so the carbon-greedy
+    /// quality steer cancels and routing is byte-identical to a
+    /// quality-oblivious fleet.
+    pub quality: f64,
     /// Whether the replica is unavailable at this instant — crashed and
-    /// rebooting ([`crate::faults::FaultSchedule::is_down`]) or wedged on
-    /// its overload valve. Every policy skips down replicas; when *all*
-    /// replicas are down each policy falls back to its usual
-    /// deterministic choice so the decision stays replayable (the driver
-    /// then sheds the request rather than placing it).
+    /// rebooting ([`crate::faults::FaultSchedule::is_down`]), wedged on
+    /// its overload valve, or powered down by the provisioning planner
+    /// ([`crate::provision::PowerState`]). Every policy skips down
+    /// replicas; when *all* replicas are down each policy falls back to
+    /// its usual deterministic choice so the decision stays replayable
+    /// (the driver then sheds the request rather than placing it).
     pub down: bool,
 }
 
@@ -108,12 +115,12 @@ pub trait Router {
 ///     ReplicaView {
 ///         queue_depth: 2, max_batch: 64,
 ///         ci_gpkwh: 33.0, ci_forecast_gpkwh: 33.0, affinity_tokens: 0,
-///         down: false,
+///         quality: 1.0, down: false,
 ///     },
 ///     ReplicaView {
 ///         queue_depth: 2, max_batch: 64,
 ///         ci_gpkwh: 485.0, ci_forecast_gpkwh: 485.0, affinity_tokens: 0,
-///         down: false,
+///         quality: 1.0, down: false,
 ///     },
 /// ];
 /// let mut router = RouterPolicy::CarbonGreedy.build();
@@ -240,6 +247,18 @@ impl Router for LeastLoaded {
     }
 }
 
+/// Prompt-length ceiling (tokens) under which a cache-*miss* request is
+/// eligible for the carbon-greedy quality steer: short fresh prompts are
+/// the cheapest work to hand to the small-model tier (no KV prefix to
+/// abandon, little to recompute), GreenLLM-style.
+pub const SHORT_PROMPT_TOKENS: u32 = 512;
+
+/// Forecast CI (gCO₂e/kWh) at which the carbon-greedy quality steer
+/// reaches full strength. Below it the steer scales linearly — on a
+/// green grid there is no carbon to save, so requests stay on the
+/// highest-quality tier.
+pub const QUALITY_STEER_CI: f64 = 200.0;
+
 /// The carbon-aware policy: place the request on the replica minimizing
 ///
 /// ```text
@@ -247,7 +266,15 @@ impl Router for LeastLoaded {
 ///         + queue_weight · queue_i / max_batch_i
 ///         − affinity_weight · cached_prefix_i / prompt_tokens
 ///         + weight_weight · (realized_share_i − target_i)   (planner weights only)
+///         − quality_weight · (q_max − q_i) · steer           (mixed-model fleets only)
 /// ```
+///
+/// where `steer = min(ĈI_big / QUALITY_STEER_CI, 1) · [short cache miss]`
+/// discounts the *small*-model tier (quality below the fleet max) only
+/// for short, prefix-cold requests and only in proportion to how dirty
+/// the big tier's grid is forecast to be — the GreenLLM trade: spend a
+/// bounded quality budget where the carbon saving is real. Homogeneous
+/// fleets have `q_max − q_i = 0` everywhere, so the term vanishes.
 ///
 /// With the default weights a fully-loaded green replica loses to an
 /// empty dirty one (the SLO guard: `queue_weight > ci_weight`), and a
@@ -274,6 +301,8 @@ pub struct CarbonGreedy {
     /// Weight on the planner-target deficit term (inert until
     /// [`Router::set_weights`] is called).
     pub weight_weight: f64,
+    /// Weight on the quality steer (inert for homogeneous fleets).
+    pub quality_weight: f64,
     /// Planner-set target split (normalized); `None` until set.
     weights: Option<Vec<f64>>,
     /// Requests routed per replica since the current targets were set
@@ -288,6 +317,7 @@ impl Default for CarbonGreedy {
             queue_weight: 1.5,
             affinity_weight: 0.5,
             weight_weight: 2.0,
+            quality_weight: 1.5,
             weights: None,
             routed: Vec::new(),
         }
@@ -307,6 +337,32 @@ impl Router for CarbonGreedy {
             .as_deref()
             .filter(|w| w.len() == replicas.len());
         let total_routed: u64 = self.routed.iter().sum();
+        // Quality steer precomputation: the fleet's best quality tier
+        // and the dirtiest forecast *within* that tier (down replicas
+        // excluded unless the whole fleet is down). Zero-cost for
+        // homogeneous fleets — `q_max - r.quality` is 0 everywhere.
+        let mut q_max = replicas
+            .iter()
+            .filter(|r| !r.down)
+            .map(|r| r.quality)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if !q_max.is_finite() {
+            // Whole fleet down: fall back to the unconditional max so the
+            // decision stays deterministic (the driver sheds anyway).
+            q_max = replicas.iter().map(|r| r.quality).fold(1.0, f64::max);
+        }
+        let fc_big = replicas
+            .iter()
+            .filter(|r| !r.down && r.quality >= q_max)
+            .map(|r| r.ci_forecast_gpkwh)
+            .fold(0.0f64, f64::max);
+        let short_miss = req.prompt_tokens() <= SHORT_PROMPT_TOKENS
+            && replicas.iter().all(|r| r.affinity_tokens == 0);
+        let steer = if short_miss {
+            (fc_big / QUALITY_STEER_CI).min(1.0)
+        } else {
+            0.0
+        };
         let mut best = 0usize;
         let mut best_score = f64::INFINITY;
         for (i, r) in replicas.iter().enumerate() {
@@ -317,7 +373,8 @@ impl Router for CarbonGreedy {
             let queue_term = r.queue_depth as f64 / r.max_batch.max(1) as f64;
             let affinity_term = (r.affinity_tokens as f64 / prompt).min(1.0);
             let mut score = self.ci_weight * ci_term + self.queue_weight * queue_term
-                - self.affinity_weight * affinity_term;
+                - self.affinity_weight * affinity_term
+                - self.quality_weight * (q_max - r.quality) * steer;
             if let Some(w) = targets {
                 let share = if total_routed == 0 {
                     w[i] // no deficit yet
@@ -366,7 +423,7 @@ impl Router for CarbonGreedy {
 /// let v = |q: usize, ci: f64| ReplicaView {
 ///     queue_depth: q, max_batch: 64,
 ///     ci_gpkwh: ci, ci_forecast_gpkwh: ci, affinity_tokens: 0,
-///     down: false,
+///     quality: 1.0, down: false,
 /// };
 /// // Same CI: queue depth decides; same CI and queue: index decides.
 /// assert_eq!(failover_order(&[v(5, 100.0), v(1, 100.0), v(1, 100.0)]), vec![1, 2, 0]);
@@ -482,6 +539,7 @@ mod tests {
             ci_gpkwh: ci,
             ci_forecast_gpkwh: ci,
             affinity_tokens: affinity,
+            quality: 1.0,
             down: false,
         }
     }
@@ -520,6 +578,7 @@ mod tests {
                 ci_gpkwh: 50.0,
                 ci_forecast_gpkwh: 50.0,
                 affinity_tokens: 0,
+                quality: 1.0,
                 down: false,
             },
             ReplicaView {
@@ -528,6 +587,7 @@ mod tests {
                 ci_gpkwh: 50.0,
                 ci_forecast_gpkwh: 50.0,
                 affinity_tokens: 0,
+                quality: 1.0,
                 down: false,
             },
         ];
@@ -601,6 +661,33 @@ mod tests {
         let mut b = view(3, 485.0, 0);
         b.ci_forecast_gpkwh = 33.0;
         assert_eq!(r.route(&req(1000, 50), &[a, b]), 1);
+    }
+
+    #[test]
+    fn carbon_greedy_quality_steer_hands_short_misses_to_the_small_tier() {
+        // Mixed fleet: replica 0 serves the big model (quality 1.0),
+        // replica 1 the small one (0.7), same dirty grid. A short
+        // prefix-cold request goes to the small tier...
+        let mut r = CarbonGreedy::default();
+        let mut big = view(0, 300.0, 0);
+        let mut small = view(0, 300.0, 0);
+        small.quality = 0.7;
+        assert_eq!(r.route(&req(200, 20), &[big, small]), 1);
+        // ...but a long prompt stays on the big model (tie-break),
+        assert_eq!(r.route(&req(2000, 50), &[big, small]), 0);
+        // ...a warm prefix anywhere disarms the steer,
+        big.affinity_tokens = 200;
+        assert_eq!(r.route(&req(200, 20), &[big, small]), 0);
+        big.affinity_tokens = 0;
+        // ...and a clean grid keeps even short misses on the big tier.
+        big.ci_forecast_gpkwh = 0.0;
+        small.ci_forecast_gpkwh = 0.0;
+        assert_eq!(r.route(&req(200, 20), &[big, small]), 0);
+        // Homogeneous fleets never see the term at all.
+        big.ci_forecast_gpkwh = 300.0;
+        small.ci_forecast_gpkwh = 300.0;
+        small.quality = 1.0;
+        assert_eq!(r.route(&req(200, 20), &[big, small]), 0);
     }
 
     /// The satellite property: weighted routing realizes the requested

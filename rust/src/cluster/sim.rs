@@ -8,10 +8,12 @@ use crate::carbon::{CarbonAccountant, TB};
 use crate::ci::Grid;
 use crate::control::{
     FleetActuators, FleetController, FleetObservation, FleetPolicy, GreenCacheFleet, PerReplica,
+    MIN_QUALITY,
 };
 use crate::coordinator::{GreenCacheConfig, GreenCacheController};
 use crate::experiments::{Baseline, Model, ProfileStore, Task};
-use crate::faults::{FaultSchedule, FaultVariant};
+use crate::faults::{FaultSchedule, FaultVariant, BOOT_S};
+use crate::provision::{PowerDirective, PowerState, ProvisionVariant};
 use crate::load::LoadTrace;
 use crate::rng::Rng;
 use crate::sim::{
@@ -160,6 +162,17 @@ pub struct ClusterSpec {
     /// arms each replica's queue-depth shed valve
     /// ([`SHED_QUEUE_FACTOR`]).
     pub faults: FaultVariant,
+    /// Carbon-aware replica provisioning (`greencache cluster
+    /// --provision`): whether the fleet planner may power replicas down
+    /// in dirty-grid / low-load intervals and boot them back ahead of
+    /// forecast peaks (see [`crate::provision`]).
+    /// [`ProvisionVariant::Off`] (the default) stages no power
+    /// directives and leaves every result byte-identical to the
+    /// pre-provisioning driver. Only the adaptive
+    /// [`FleetPolicy::GreenCacheFleet`] plans power states — under
+    /// independent per-replica control (or fixed-capacity baselines)
+    /// the axis is inert.
+    pub provision: ProvisionVariant,
 }
 
 impl ClusterSpec {
@@ -184,6 +197,7 @@ impl ClusterSpec {
             fleet: FleetPolicy::PerReplica,
             threads: 1,
             faults: FaultVariant::OFF,
+            provision: ProvisionVariant::Off,
         }
     }
 
@@ -237,6 +251,12 @@ pub struct ReplicaOutcome {
     /// Mean ground-truth CI of the replica's grid over the evaluated
     /// hours, gCO₂e/kWh.
     pub mean_ci: f64,
+    /// Seconds this replica spent fully powered off (provisioning
+    /// planner; 0.0 with `--provision off`). Draining and booting time
+    /// does not count — the hardware is still drawing power there.
+    pub powered_down_s: f64,
+    /// Completed provisioning boot cycles (off → booting → active).
+    pub boots: usize,
 }
 
 /// Fleet-level result: per-replica outcomes plus exact aggregates.
@@ -250,6 +270,16 @@ pub struct ClusterResult {
     pub total_carbon_g: f64,
     /// Fleet-wide grams per completed request.
     pub carbon_per_request_g: f64,
+    /// Fleet-wide grams per served token (Σ carbon / Σ prompt + reply
+    /// tokens of completed requests) — the per-token functional-unit
+    /// intensity, comparable across workloads with different request
+    /// sizes.
+    pub carbon_per_token_g: f64,
+    /// Request-weighted mean answer quality over completed requests
+    /// (1.0 for homogeneous reference-model fleets; below it when the
+    /// quality-aware router sent work to a smaller tier — see
+    /// [`crate::experiments::Model::quality`]).
+    pub mean_quality: f64,
     /// Fleet-wide joint SLO attainment (request-weighted merge of the
     /// per-replica trackers).
     pub slo_attainment: f64,
@@ -280,6 +310,12 @@ pub struct ClusterResult {
     /// tripped (frozen clock) — the tripped valve used to freeze the
     /// whole fleet with no trace; now it reads out here.
     pub overloaded_replicas: usize,
+    /// Fleet-wide replica-hours spent fully powered off by the
+    /// provisioning planner (Σ per-replica
+    /// [`ReplicaOutcome::powered_down_s`] / 3600).
+    pub powered_down_replica_hours: f64,
+    /// Fleet-wide completed provisioning boot cycles.
+    pub boots: usize,
 }
 
 impl ClusterResult {
@@ -318,10 +354,16 @@ impl ClusterResult {
         let shed: usize = replicas.iter().map(|r| r.sim.shed).sum();
         let crash_dropped: usize = replicas.iter().map(|r| r.sim.crash_dropped).sum();
         let overloaded_replicas = replicas.iter().filter(|r| r.sim.overloaded).count();
+        let served_tokens: u64 = replicas.iter().map(|r| r.sim.served_tokens).sum();
+        let powered_down_replica_hours =
+            replicas.iter().map(|r| r.powered_down_s).sum::<f64>() / 3600.0;
+        let boots: usize = replicas.iter().map(|r| r.boots).sum();
         ClusterResult {
             completed,
             total_carbon_g,
             carbon_per_request_g: total_carbon_g / completed.max(1) as f64,
+            carbon_per_token_g: total_carbon_g / served_tokens.max(1) as f64,
+            mean_quality: slo.mean_quality(),
             slo_attainment: slo.attainment(),
             token_hit_rate: if input == 0 { 0.0 } else { hit as f64 / input as f64 },
             mean_ttft_s,
@@ -331,6 +373,8 @@ impl ClusterResult {
             shed,
             crash_dropped,
             overloaded_replicas,
+            powered_down_replica_hours,
+            boots,
             replicas,
         }
     }
@@ -374,26 +418,29 @@ impl ClusterResult {
     pub fn table(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<8} {:>8} {:>9} {:>10} {:>6} {:>7} {:>9} {:>7} {:>8}\n",
-            "replica", "meanCI", "routed", "completed", "shed", "dropped", "carbon_g", "hit",
-            "cacheTB"
+            "{:<8} {:>8} {:>9} {:>10} {:>6} {:>7} {:>9} {:>8} {:>9} {:>7} {:>8}\n",
+            "replica", "meanCI", "routed", "completed", "shed", "dropped", "carbon_g", "g/req",
+            "g/tok", "hit", "cacheTB"
         ));
         for r in &self.replicas {
+            let total_g = r.sim.accountant.breakdown().total_g();
             out.push_str(&format!(
-                "{:<8} {:>8.1} {:>9} {:>10} {:>6} {:>7} {:>9.1} {:>7.3} {:>8.2}\n",
+                "{:<8} {:>8.1} {:>9} {:>10} {:>6} {:>7} {:>9.1} {:>8.3} {:>9.5} {:>7.3} {:>8.2}\n",
                 r.spec.grid.name(),
                 r.mean_ci,
                 r.routed,
                 r.sim.completed,
                 r.sim.shed,
                 r.sim.crash_dropped,
-                r.sim.accountant.breakdown().total_g(),
+                total_g,
+                total_g / r.sim.completed.max(1) as f64,
+                total_g / r.sim.served_tokens.max(1) as f64,
                 r.cache_stats.token_hit_rate(),
                 r.mean_cache_tb,
             ));
         }
         out.push_str(&format!(
-            "{:<8} {:>8} {:>9} {:>10} {:>6} {:>7} {:>9.1} {:>7.3} {:>8.2}\n",
+            "{:<8} {:>8} {:>9} {:>10} {:>6} {:>7} {:>9.1} {:>8.3} {:>9.5} {:>7.3} {:>8.2}\n",
             "fleet",
             "-",
             self.replicas.iter().map(|r| r.routed).sum::<usize>(),
@@ -401,6 +448,8 @@ impl ClusterResult {
             self.shed,
             self.crash_dropped,
             self.total_carbon_g,
+            self.carbon_per_request_g,
+            self.carbon_per_token_g,
             self.token_hit_rate,
             self.fleet_mean_cache_tb,
         ));
@@ -438,6 +487,17 @@ struct Rep {
     /// Requests routed here per decision interval (the realized-split
     /// signal in [`FleetObservation`]).
     routed_by_interval: Vec<usize>,
+    /// Provisioning power state ([`crate::provision`]); always
+    /// [`PowerState::Active`] with `--provision off`. Transitions are
+    /// actuated only at lockstep arrival instants, so they are a pure
+    /// function of the arrival stream (thread- and stepping-invariant).
+    power: PowerState,
+    /// When the current powered-off stretch began, seconds.
+    off_since: f64,
+    /// Accumulated fully-powered-off time, seconds.
+    powered_down_s: f64,
+    /// Completed provisioning boot cycles.
+    boots: usize,
 }
 
 // The worker pool moves `&mut Rep` (advance) and whole `Rep`s plus their
@@ -465,10 +525,89 @@ fn advance(rep: &mut Rep, base_hour: usize, t: f64) {
     engine.run_until(t, &ci_fn, recorder);
 }
 
+/// The replica's grid CI at instant `t` (clamped to the evaluated
+/// horizon) — the rate provisioning transitions charge and flush at,
+/// mirroring the fault path's boot-charge convention.
+fn ci_at(rep: &Rep, t: f64, base_hour: usize, hours: usize) -> f64 {
+    let h = ((t / 3600.0) as usize).min(hours.saturating_sub(1));
+    rep.ci[(base_hour + h).min(rep.ci.len() - 1)]
+}
+
+/// Apply the power directives a fleet controller staged
+/// ([`FleetActuators::set_power_state`]) at lockstep instant `t`,
+/// walking the [`crate::provision`] state machine: a replica directed
+/// down drains first (straight to off when already idle — notably at
+/// the pre-day bootstrap), a replica directed up from off boots for
+/// [`BOOT_S`] seconds before it serves again, and an up directive that
+/// catches a still-draining replica simply cancels the drain — nothing
+/// was powered off, so nothing boots and nothing is charged.
+fn apply_power_directives(
+    reps: &mut [Rep],
+    directives: &[Option<PowerDirective>],
+    t: f64,
+    base_hour: usize,
+    hours: usize,
+) {
+    for (i, d) in directives.iter().enumerate() {
+        let Some(d) = d else { continue };
+        let rep = &mut reps[i];
+        match (d, rep.power) {
+            (PowerDirective::Down, PowerState::Active) => {
+                if rep.engine.is_idle() {
+                    let ci = ci_at(rep, t, base_hour, hours);
+                    rep.engine.set_powered_off(true, ci);
+                    rep.power = PowerState::Off;
+                    rep.off_since = t;
+                } else {
+                    rep.power = PowerState::Draining;
+                }
+            }
+            (PowerDirective::Up, PowerState::Off) => {
+                rep.powered_down_s += t - rep.off_since;
+                rep.power = PowerState::Booting { until: t + BOOT_S };
+            }
+            (PowerDirective::Up, PowerState::Draining) => {
+                rep.power = PowerState::Active;
+            }
+            // Down on a booting/off replica and Up on an active one are
+            // no-ops: boots finish on their own, duplicates are absorbed.
+            _ => {}
+        }
+    }
+}
+
+/// Settle in-flight power transitions at lockstep instant `t`: a
+/// draining replica that has emptied its queue powers off, and an
+/// elapsed boot window brings its replica back — charging the restart
+/// at the boot-completion hour's CI, exactly like a crash restart
+/// ([`crate::sim::ReplicaEngine::record_boot`]).
+fn settle_power_transitions(reps: &mut [Rep], t: f64, base_hour: usize, hours: usize) {
+    for rep in reps.iter_mut() {
+        match rep.power {
+            PowerState::Draining if rep.engine.is_idle() => {
+                let ci = ci_at(rep, t, base_hour, hours);
+                rep.engine.set_powered_off(true, ci);
+                rep.power = PowerState::Off;
+                rep.off_since = t;
+            }
+            PowerState::Booting { until } if t >= until => {
+                let ci = ci_at(rep, until, base_hour, hours);
+                rep.engine.record_boot(BOOT_S, ci);
+                rep.engine.set_powered_off(false, ci);
+                rep.power = PowerState::Active;
+                rep.boots += 1;
+            }
+            _ => {}
+        }
+    }
+}
+
 /// Assemble the fleet-consistent view of completed interval `k` (or the
 /// pre-day bootstrap when `k` is `None`), hand it to the fleet
 /// controller with actuators over every replica's cache, and apply the
-/// staged router weights / published CI forecasts. One pass with
+/// staged router weights / published CI forecasts. Staged power
+/// directives are *returned* rather than applied — the caller actuates
+/// them once the actuators' cache borrows are released. One pass with
 /// field-disjoint borrows: the observation reads each replica's CI
 /// trace and mailbox while the actuators mutably borrow each engine's
 /// cache.
@@ -483,8 +622,9 @@ fn fire_fleet(
     expected_split: &[f64],
     router: &mut dyn Router,
     ci_forecast: &mut [Option<f64>],
-) {
+) -> Vec<Option<PowerDirective>> {
     let n = reps.len();
+    let power_states: Vec<PowerState> = reps.iter().map(|r| r.power).collect();
     // Hours fully covered by the completed intervals (CI history is
     // hourly even when the decision interval is not).
     let hours_done = k
@@ -513,6 +653,7 @@ fn fire_fleet(
         }
     }
     let mut act = FleetActuators::new(caches, now_s);
+    act.publish_power_states(&power_states);
     match k {
         None => fleet.bootstrap(&mut act),
         Some(kk) => {
@@ -544,6 +685,7 @@ fn fire_fleet(
             *slot = Some(v);
         }
     }
+    act.take_power_states()
 }
 
 /// The lockstep fleet simulator.
@@ -726,6 +868,9 @@ impl ClusterSim {
             };
             let accountant = CarbonAccountant::new(r.model.embodied());
             let mut engine = ReplicaEngine::new(cfg, cache, accountant);
+            // Every request completed here scores the serving model's
+            // answer quality (1.0 for the reference 70B tier).
+            engine.set_quality(r.model.quality());
             if spec.prefetch == PrefetchMode::Green && spec.hours > 0 {
                 // Green-hour cutoff = the median CI of this replica's own
                 // evaluated trace window (post-fixed_ci override, so a
@@ -740,6 +885,10 @@ impl ClusterSim {
                 ci,
                 routed: 0,
                 routed_by_interval: Vec::new(),
+                power: PowerState::Active,
+                off_since: 0.0,
+                powered_down_s: 0.0,
+                boots: 0,
             });
         }
 
@@ -756,7 +905,13 @@ impl ClusterSim {
                 FleetPolicy::PerReplica => Box::new(PerReplica::new(ctls)),
                 FleetPolicy::GreenCacheFleet => {
                     let fleet_hist = load_trace.hourly_rps[..base_hour].to_vec();
-                    Box::new(GreenCacheFleet::new(ctls, fleet_hist, peaks, base_hour))
+                    let qualities: Vec<f64> =
+                        spec.replicas.iter().map(|r| r.model.quality()).collect();
+                    Box::new(
+                        GreenCacheFleet::new(ctls, fleet_hist, peaks, base_hour)
+                            .with_provision(spec.provision)
+                            .with_quality(qualities, MIN_QUALITY),
+                    )
                 }
             }
         };
@@ -859,9 +1014,11 @@ impl ClusterSim {
         let mut feed_up = true;
 
         // §4.1 pre-day bootstrap, fleet-wide: the controller provisions
-        // every cache (and may stage router weights / CI forecasts)
-        // before time zero.
-        fire_fleet(
+        // every cache (and may stage router weights / CI forecasts /
+        // power directives) before time zero. Replicas the provisioning
+        // plan keeps dark power off here, while still idle — so a
+        // low-load dirty-grid day starts with part of the fleet dark.
+        let directives = fire_fleet(
             &mut reps,
             fleet.as_mut(),
             None,
@@ -872,6 +1029,7 @@ impl ClusterSim {
             router.as_mut(),
             &mut ci_forecast,
         );
+        apply_power_directives(&mut reps, &directives, 0.0, base_hour, spec.hours);
         if let Some(pool) = &shared {
             pool.sync(); // bootstrap slice resizes apply before arrivals
         }
@@ -911,7 +1069,7 @@ impl ClusterSim {
                 // Resize timestamps mirror the per-replica controller's
                 // end-of-completed-interval convention.
                 let now_s = (fleet_fired as f64 + 1.0) * spec.interval_s;
-                fire_fleet(
+                let directives = fire_fleet(
                     &mut reps,
                     fleet.as_mut(),
                     Some(fleet_fired),
@@ -922,6 +1080,7 @@ impl ClusterSim {
                     router.as_mut(),
                     &mut ci_forecast,
                 );
+                apply_power_directives(&mut reps, &directives, now_s, base_hour, spec.hours);
                 fleet_fired += 1;
                 if let Some(pool) = &shared {
                     pool.sync(); // planner slice resizes apply now
@@ -967,6 +1126,10 @@ impl ClusterSim {
                     *slot = None;
                 }
             }
+            // Settle provisioning transitions at the same lockstep
+            // instants faults actuate at: drains that went idle power
+            // off, elapsed boot windows come back up.
+            settle_power_transitions(&mut reps, t, base_hour, spec.hours);
 
             let mut req = workload.next_request(&mut rng);
             req.arrival_s = next_arrival;
@@ -984,7 +1147,10 @@ impl ClusterSim {
                         ci_gpkwh: ci_now,
                         ci_forecast_gpkwh: ci_forecast[i].unwrap_or(ci_now),
                         affinity_tokens: rep.engine.cache().peek(&req),
-                        down: schedule.is_down(i, t) || rep.engine.overloaded(),
+                        quality: rep.spec.model.quality(),
+                        down: schedule.is_down(i, t)
+                            || rep.engine.overloaded()
+                            || !rep.power.is_active(),
                     }
                 })
                 .collect();
@@ -1051,8 +1217,24 @@ impl ClusterSim {
                 }
             }
         }
+        // Provisioning transitions due after the last arrival settle
+        // before the drain too (a boot window elapsing in the final
+        // quiet stretch still charges its restart inside the horizon),
+        // and any replica still dark at the horizon books its remaining
+        // powered-down time.
+        settle_power_transitions(&mut reps, horizon_s, base_hour, spec.hours);
+        for rep in reps.iter_mut() {
+            if rep.power == PowerState::Off {
+                rep.powered_down_s += horizon_s - rep.off_since;
+                rep.off_since = horizon_s;
+            }
+        }
 
         let hours = spec.hours;
+        // Power statistics survive the drain via a side table, in
+        // replica order (the drained tuple stays as-is).
+        let power_stats: Vec<(f64, usize)> =
+            reps.iter().map(|r| (r.powered_down_s, r.boots)).collect();
         // Drain every engine first: with a shared pool, a replica's
         // final write-through admissions are buffered and only attribute
         // their insertions/evictions at the post-drain sync below, so
@@ -1098,7 +1280,8 @@ impl ClusterSim {
         }
         let outcomes: Vec<ReplicaOutcome> = finished
             .into_iter()
-            .map(|(rspec, routed, ci, sim, cache)| {
+            .zip(power_stats)
+            .map(|((rspec, routed, ci, sim, cache), (powered_down_s, boots))| {
                 let mean_cache_tb = sim.mean_cache_tb(cache.capacity_bytes());
                 let eval = &ci[base_hour..(base_hour + hours).min(ci.len())];
                 let mean_ci = if eval.is_empty() {
@@ -1112,6 +1295,8 @@ impl ClusterSim {
                     mean_cache_tb,
                     cache_stats: cache.stats(),
                     mean_ci,
+                    powered_down_s,
+                    boots,
                     sim,
                 }
             })

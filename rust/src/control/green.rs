@@ -5,6 +5,9 @@
 use super::{FleetActuators, FleetController, FleetObservation};
 use crate::carbon::TB;
 use crate::coordinator::{seasonal_load_forecast, GreenCacheController};
+use crate::provision::{
+    keep_set, PowerDirective, PowerState, ProvisionVariant, BOOT_LEAD_INTERVALS,
+};
 
 /// Utilization guard on planned router weights: no replica is assigned
 /// more than this fraction of its platform peak at the forecast fleet
@@ -12,6 +15,13 @@ use crate::coordinator::{seasonal_load_forecast, GreenCacheController};
 /// feasibility check then vetoes anything the profile says would still
 /// violate the SLO).
 pub const FLEET_UTIL_CAP: f64 = 0.8;
+
+/// Default fleet-mean quality floor for mixed-model planning: every
+/// candidate weight vector must keep Σ wᵢ·qualityᵢ at or above this, so
+/// a 70B+8B fleet may chase carbon into the cheap tier only until the
+/// blended answer quality reaches the floor (GreenLLM-style
+/// quality-aware routing). Inert for homogeneous fleets.
+pub const MIN_QUALITY: f64 = 0.85;
 
 /// One committed fleet plan (per decision interval): the chosen router
 /// weights plus every replica's cache size — the fleet analogue of
@@ -50,6 +60,13 @@ pub struct FleetPlan {
 ///    forecasts are published for the router's
 ///    [`crate::cluster::ReplicaView::ci_forecast_gpkwh`].
 ///
+/// With a provisioning mode selected ([`Self::with_provision`]) the
+/// same pass also plans each replica's power state: replicas outside
+/// the keep-set ([`crate::provision::keep_set`]) are staged down via
+/// [`FleetActuators::set_power_state`] and their weight is steered to
+/// the survivors; replicas the forecast needs within the boot lead are
+/// staged back up ahead of the peak.
+///
 /// With one replica the candidate set collapses to `[1.0]` and the
 /// planner reduces exactly to the per-replica controller (pinned
 /// byte-identical in `rust/tests/fleet_planner.rs`).
@@ -72,6 +89,17 @@ pub struct GreenCacheFleet {
     weights: Vec<f64>,
     /// Every committed plan, in order.
     pub plans: Vec<FleetPlan>,
+    /// Power on/off planning mode. The default
+    /// ([`ProvisionVariant::Off`]) never stages a directive, keeping the
+    /// planner byte-identical to its pre-provisioning behaviour.
+    provision: ProvisionVariant,
+    /// Per-replica answer-quality scores (all 1.0 when homogeneous).
+    qualities: Vec<f64>,
+    /// Fleet-mean quality floor applied to candidate weight vectors.
+    min_quality: f64,
+    /// Whether the one-shot keep-set of [`ProvisionVariant::Static`]
+    /// has already been planned (it powers down at bootstrap only).
+    static_planned: bool,
 }
 
 impl GreenCacheFleet {
@@ -98,7 +126,30 @@ impl GreenCacheFleet {
             base_hour,
             blends: vec![0.0, 0.35, 0.7, 1.0],
             plans: Vec::new(),
+            provision: ProvisionVariant::Off,
+            qualities: vec![1.0; n],
+            min_quality: MIN_QUALITY,
+            static_planned: false,
         }
+    }
+
+    /// Select the power on/off planning mode (builder-style).
+    pub fn with_provision(mut self, provision: ProvisionVariant) -> Self {
+        self.provision = provision;
+        self
+    }
+
+    /// Supply per-replica quality scores and the fleet-mean floor the
+    /// plan must hold (builder-style). Inert when all scores are equal.
+    pub fn with_quality(mut self, qualities: Vec<f64>, min_quality: f64) -> Self {
+        assert_eq!(
+            qualities.len(),
+            self.ctls.len(),
+            "one quality score per replica"
+        );
+        self.qualities = qualities;
+        self.min_quality = min_quality;
+        self
     }
 
     /// The router weights currently in force (sum 1).
@@ -130,7 +181,25 @@ impl GreenCacheFleet {
         // carbon at the weight-implied load shares. Ties (and the
         // single-candidate one-replica case) keep the earliest
         // candidate — the capacity share, i.e. the conservative default.
-        let candidates = weight_candidates(&ci_fcs, &self.peaks, &fleet_fc, cover, &self.blends);
+        let mut candidates =
+            weight_candidates(&ci_fcs, &self.peaks, &fleet_fc, cover, &self.blends);
+        // Quality floor (mixed-model fleets only): drop candidates whose
+        // weight-blended quality undercuts the floor. If none survive,
+        // keep them all rather than wedge — the router's own quality
+        // steer still favours the big model per request.
+        if self.qualities.iter().any(|&q| q != self.qualities[0]) {
+            let ok: Vec<Vec<f64>> = candidates
+                .iter()
+                .filter(|w| {
+                    w.iter().zip(&self.qualities).map(|(wi, qi)| wi * qi).sum::<f64>()
+                        >= self.min_quality - 1e-9
+                })
+                .cloned()
+                .collect();
+            if !ok.is_empty() {
+                candidates = ok;
+            }
+        }
         let mut best = 0usize;
         if candidates.len() > 1 {
             let mut best_key = (usize::MAX, f64::INFINITY);
@@ -151,7 +220,12 @@ impl GreenCacheFleet {
                 }
             }
         }
-        let weights = candidates[best].clone();
+        let mut weights = candidates[best].clone();
+
+        // Provisioning: plan the keep-set and steer the weight off every
+        // replica marked for power-down *before* the sizes are committed,
+        // so each DP prices its true (possibly zero) planned share.
+        let directives = self.plan_power(&fleet_fc, &ci_fcs, act, &mut weights);
 
         // Commit: every replica's DP against its planned share, first
         // step applied — exactly the per-replica controller's MPC step,
@@ -167,6 +241,11 @@ impl GreenCacheFleet {
             act.set_interval_ci_forecast(i, ci_fcs[i][0]);
         }
         act.set_router_weights(&weights);
+        for (i, d) in directives.iter().enumerate() {
+            if let Some(d) = d {
+                act.set_power_state(i, *d);
+            }
+        }
         self.plans.push(FleetPlan {
             hour: next_abs,
             weights: weights.clone(),
@@ -174,6 +253,86 @@ impl GreenCacheFleet {
             any_fallback,
         });
         self.weights = weights;
+    }
+
+    /// The provisioning pass: pick the keep-set for this interval, stage
+    /// the power directives it implies, and zero the router weight of
+    /// every replica planned down (renormalizing the rest). Returns the
+    /// directive per replica; all `None` — and weights untouched — for
+    /// one-replica fleets and [`ProvisionVariant::Off`].
+    ///
+    /// Demand is the forecast fleet peak over the next
+    /// [`BOOT_LEAD_INTERVALS`] intervals, so a replica the near future
+    /// needs is booted *ahead* of the peak rather than at it.
+    /// [`ProvisionVariant::Green`] re-plans every interval and ranks
+    /// survivors greenest-first by forecast CI;
+    /// [`ProvisionVariant::Static`] plans once at bootstrap (capacity
+    /// order) and afterwards only holds the committed keep-set.
+    fn plan_power(
+        &mut self,
+        fleet_fc: &[f64],
+        ci_fcs: &[Vec<f64>],
+        act: &FleetActuators<'_>,
+        weights: &mut [f64],
+    ) -> Vec<Option<PowerDirective>> {
+        let n = self.ctls.len();
+        let mut directives: Vec<Option<PowerDirective>> = vec![None; n];
+        if n <= 1 || self.provision.is_off() {
+            return directives;
+        }
+        let replan = match self.provision {
+            ProvisionVariant::Green => true,
+            ProvisionVariant::Static => !self.static_planned,
+            ProvisionVariant::Off => false,
+        };
+        let desired: Vec<bool> = if replan {
+            self.static_planned = true;
+            let caps: Vec<f64> = self.peaks.iter().map(|p| p * FLEET_UTIL_CAP).collect();
+            let lead = BOOT_LEAD_INTERVALS.min(fleet_fc.len().saturating_sub(1));
+            let demand = fleet_fc[..=lead].iter().fold(0.0f64, |a, &b| a.max(b));
+            let ci_next: Vec<f64> = ci_fcs.iter().map(|fc| fc[0]).collect();
+            let rank = if self.provision == ProvisionVariant::Green {
+                Some(&ci_next[..])
+            } else {
+                None
+            };
+            keep_set(demand, &caps, rank)
+        } else {
+            // Static after bootstrap: hold whatever the driver settled
+            // on. Draining/Off replicas stay down; Booting ones finish.
+            (0..n)
+                .map(|i| {
+                    matches!(
+                        act.power_state(i),
+                        PowerState::Active | PowerState::Booting { .. }
+                    )
+                })
+                .collect()
+        };
+        for (i, d) in directives.iter_mut().enumerate() {
+            let state = act.power_state(i);
+            if desired[i] {
+                if matches!(state, PowerState::Off | PowerState::Draining) {
+                    *d = Some(PowerDirective::Up);
+                }
+            } else if state == PowerState::Active {
+                *d = Some(PowerDirective::Down);
+            }
+        }
+        // Steer the plan's weight off the powered-down replicas. If the
+        // kept weight vanishes (planner put everything on a down
+        // replica), leave the weights alone — the keep-set always holds
+        // at least one replica, and the router's own down-handling sheds
+        // what cannot be placed.
+        if desired.iter().any(|&d| !d) {
+            let kept: f64 = (0..n).filter(|&i| desired[i]).map(|i| weights[i]).sum();
+            if kept > 1e-12 {
+                for i in 0..n {
+                    weights[i] = if desired[i] { weights[i] / kept } else { 0.0 };
+                }
+            }
+        }
+        directives
     }
 }
 

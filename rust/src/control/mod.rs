@@ -43,9 +43,10 @@
 
 mod green;
 
-pub use green::GreenCacheFleet;
+pub use green::{GreenCacheFleet, MIN_QUALITY};
 
 use crate::cache::CacheStore;
+use crate::provision::{PowerDirective, PowerState};
 use crate::sim::{Controller, IntervalObservation};
 
 /// The fleet-control axis of a cluster cell: how the N replicas'
@@ -142,6 +143,15 @@ pub struct FleetActuators<'a> {
     /// Staged per-replica interval CI forecasts (drained into the
     /// router's [`crate::cluster::ReplicaView::ci_forecast_gpkwh`]).
     ci_forecast: Vec<Option<f64>>,
+    /// Current per-replica power states, published by the driver so a
+    /// provisioning planner knows who is already dark before staging
+    /// directives ([`PowerState::Active`] everywhere by default —
+    /// drivers without provisioning never touch this).
+    power_states: Vec<PowerState>,
+    /// Staged power directives (drained by the cluster driver, which
+    /// owns the state machine and applies transitions at lockstep
+    /// instants).
+    power: Vec<Option<PowerDirective>>,
 }
 
 impl<'a> FleetActuators<'a> {
@@ -155,7 +165,34 @@ impl<'a> FleetActuators<'a> {
             now_s,
             weights: None,
             ci_forecast: vec![None; n],
+            power_states: vec![PowerState::Active; n],
+            power: vec![None; n],
         }
+    }
+
+    /// Publish the fleet's current power states (driver-side, before
+    /// the planning hook fires) so the planner can diff desired against
+    /// actual instead of re-issuing directives for replicas already in
+    /// transition.
+    pub fn publish_power_states(&mut self, states: &[PowerState]) {
+        assert_eq!(states.len(), self.caches.len(), "one state per replica");
+        self.power_states.copy_from_slice(states);
+    }
+
+    /// Current power state of replica `i` as published by the driver
+    /// ([`PowerState::Active`] when the driver runs no provisioning).
+    pub fn power_state(&self, i: usize) -> PowerState {
+        self.power_states[i]
+    }
+
+    /// Stage a power directive for replica `i`: [`PowerDirective::Down`]
+    /// drains the replica toward `Off`, [`PowerDirective::Up`] boots it
+    /// (or cancels an in-progress drain). The cluster driver drains the
+    /// staged directives right after the hook and advances the state
+    /// machine at lockstep instants, charging boots to the `boot_g`
+    /// ledger line.
+    pub fn set_power_state(&mut self, i: usize, directive: PowerDirective) {
+        self.power[i] = Some(directive);
     }
 
     /// Number of replicas under actuation.
@@ -192,6 +229,11 @@ impl<'a> FleetActuators<'a> {
     /// Drain the staged CI forecasts (driver-side).
     pub fn take_ci_forecasts(&mut self) -> Vec<Option<f64>> {
         std::mem::replace(&mut self.ci_forecast, vec![None; self.caches.len()])
+    }
+
+    /// Drain the staged power directives (driver-side).
+    pub fn take_power_states(&mut self) -> Vec<Option<PowerDirective>> {
+        std::mem::replace(&mut self.power, vec![None; self.caches.len()])
     }
 }
 
@@ -439,6 +481,22 @@ mod tests {
         let fc = act.take_ci_forecasts();
         assert_eq!(fc, vec![None, Some(42.0), None]);
         assert!(act.take_ci_forecasts().iter().all(|f| f.is_none()));
+        // Power staging follows the same stage-then-drain protocol, and
+        // the published states default to Active everywhere.
+        assert!(act.power_state(2).is_active());
+        act.publish_power_states(&[
+            PowerState::Active,
+            PowerState::Off,
+            PowerState::Active,
+        ]);
+        assert_eq!(act.power_state(1), PowerState::Off);
+        act.set_power_state(0, PowerDirective::Down);
+        act.set_power_state(1, PowerDirective::Up);
+        assert_eq!(
+            act.take_power_states(),
+            vec![Some(PowerDirective::Down), Some(PowerDirective::Up), None]
+        );
+        assert!(act.take_power_states().iter().all(|d| d.is_none()), "drained");
     }
 
     #[test]

@@ -23,7 +23,9 @@ use crate::cache::{
 use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
 use crate::ci::Grid;
 use crate::cluster::{run_cluster, ClusterSpec, RouterPolicy};
+use crate::control::FleetPolicy;
 use crate::faults::FaultVariant;
+use crate::provision::ProvisionVariant;
 use crate::metrics::Slo;
 use crate::rng::Rng;
 use crate::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig, Stepping};
@@ -173,6 +175,7 @@ pub fn sim_report(quick: bool) -> Json {
         ("speedup", Json::Num(speedup)),
         ("fleet", fleet_report(quick)),
         ("faults", faults_report(quick)),
+        ("provision", provision_report(quick)),
     ])
 }
 
@@ -183,7 +186,9 @@ pub fn sim_report(quick: bool) -> Json {
 /// the `policy_backend` + `prefetch` sections to `BENCH_CACHE.json`.
 /// v4 added the `faults` section to `BENCH_SIM.json`: a seeded
 /// crash+ssd+feed day vs its fault-free twin on the same fleet.
-pub const BENCH_SCHEMA: &str = "greencache-bench-v4";
+/// v5 added the `provision` section to `BENCH_SIM.json`: a green
+/// power-planned low-load day vs its always-on twin on the same fleet.
+pub const BENCH_SCHEMA: &str = "greencache-bench-v5";
 
 /// The fleet-stepping scenario: one shared-pool fleet of N replicas
 /// spread round-robin over four grids, carbon-greedy routing, load
@@ -401,6 +406,100 @@ pub fn faults_report(quick: bool) -> Json {
         (
             "attainment_drop",
             Json::Num(off.slo_attainment - all.slo_attainment),
+        ),
+    ])
+}
+
+/// The provisioning smoke cell: a three-replica FR+PJM+MISO fleet under
+/// the green fleet planner at a low fixed rate, replayed once always-on
+/// and once with green power planning on the same workload seed — the
+/// delta is what powering surplus replicas down in dirty/low-load
+/// intervals saves.
+pub fn run_provision_cell(
+    provision: ProvisionVariant,
+    hours: usize,
+    profiles: &mut ProfileStore,
+) -> (crate::cluster::ClusterResult, f64) {
+    let mut spec = ClusterSpec::homogeneous(
+        Model::Llama70B,
+        Task::Conversation,
+        &[Grid::Fr, Grid::Pjm, Grid::Miso],
+        RouterPolicy::CarbonGreedy,
+    )
+    .quick();
+    spec.hours = hours;
+    spec.cache = CacheVariant::Tiered;
+    spec.fleet = FleetPolicy::GreenCacheFleet;
+    spec.fixed_rps = Some(0.15);
+    spec.provision = provision;
+    let t0 = Instant::now();
+    let r = run_cluster(&spec, profiles);
+    (r, t0.elapsed().as_secs_f64())
+}
+
+fn provision_cell_json(r: &crate::cluster::ClusterResult, wall_s: f64) -> Json {
+    Json::obj(vec![
+        ("completed", Json::Num(r.completed as f64)),
+        ("shed", Json::Num(r.shed as f64)),
+        ("slo_attainment", Json::Num(r.slo_attainment)),
+        ("total_carbon_g", Json::Num(r.total_carbon_g)),
+        ("carbon_per_request_g", Json::Num(r.carbon_per_request_g)),
+        ("carbon_per_token_g", Json::Num(r.carbon_per_token_g)),
+        (
+            "powered_down_replica_hours",
+            Json::Num(r.powered_down_replica_hours),
+        ),
+        ("boots", Json::Num(r.boots as f64)),
+        ("mean_quality", Json::Num(r.mean_quality)),
+        ("wall_s", Json::Num(wall_s)),
+    ])
+}
+
+/// Measure the provisioning smoke cell and return the `provision`
+/// section of `BENCH_SIM.json`: the always-on and green-planned runs of
+/// the same fleet/day side by side, plus the carbon the power planner
+/// saved. Panics if the planned run wedges (zero completions) or never
+/// powers a replica down — the bench doubles as a provisioning smoke
+/// check.
+pub fn provision_report(quick: bool) -> Json {
+    let hours = if quick { 2 } else { 4 };
+    let mut profiles = ProfileStore::new(true);
+    let (off, off_wall) = run_provision_cell(ProvisionVariant::Off, hours, &mut profiles);
+    let (green, green_wall) =
+        run_provision_cell(ProvisionVariant::Green, hours, &mut profiles);
+    assert!(green.completed > 0, "provisioned fleet wedged (zero completions)");
+    assert!(
+        green.powered_down_replica_hours > 0.0,
+        "green provisioning never powered a replica down on the low-load day"
+    );
+    for (name, r) in [("off", &off), ("green", &green)] {
+        println!(
+            "bench sim/provision[{name:<5}] completed={} carbon={:.1}g slo={:.3} \
+             down_h={:.2} boots={}",
+            r.completed,
+            r.total_carbon_g,
+            r.slo_attainment,
+            r.powered_down_replica_hours,
+            r.boots
+        );
+    }
+    println!(
+        "    -> carbon saved by green provisioning: {:.1} g ({:.1}%)",
+        off.total_carbon_g - green.total_carbon_g,
+        100.0 * (off.total_carbon_g - green.total_carbon_g) / off.total_carbon_g.max(1e-9)
+    );
+    Json::obj(vec![
+        ("fleet", Json::Str("FR+PJM+MISO".into())),
+        ("router", Json::Str("carbon-greedy".into())),
+        ("cache", Json::Str("tiered".into())),
+        ("fleet_policy", Json::Str("green".into())),
+        ("hours", Json::Num(hours as f64)),
+        ("rps", Json::Num(0.15)),
+        ("off", provision_cell_json(&off, off_wall)),
+        ("green", provision_cell_json(&green, green_wall)),
+        (
+            "carbon_saved_g",
+            Json::Num(off.total_carbon_g - green.total_carbon_g),
         ),
     ])
 }
@@ -779,6 +878,21 @@ mod tests {
         // completed or accounted for as a crash drop.
         let routed: usize = all.replicas.iter().map(|r| r.routed).sum();
         assert_eq!(all.completed + all.crash_dropped, routed);
+    }
+
+    #[test]
+    fn provision_cell_saves_carbon_without_wedging() {
+        // Tiny variant of the report cell; the in-report asserts already
+        // check the full quick cell.
+        let mut profiles = ProfileStore::new(true);
+        let (off, _) = run_provision_cell(ProvisionVariant::Off, 2, &mut profiles);
+        let (green, _) = run_provision_cell(ProvisionVariant::Green, 2, &mut profiles);
+        assert!(green.completed > 0, "planned fleet must keep serving");
+        assert_eq!(off.powered_down_replica_hours, 0.0, "always-on cell stays on");
+        assert!(
+            green.powered_down_replica_hours > 0.0,
+            "low-load day must power surplus replicas down"
+        );
     }
 
     #[test]

@@ -113,6 +113,21 @@ impl Model {
         }
     }
 
+    /// Relative response-quality score of the model variant
+    /// (GreenLLM-style, arxiv 2412.20322): the fleet's reference model
+    /// scores 1.0 and the distilled 8B analogue ≈ 0.7 (roughly the
+    /// open-benchmark win-rate gap between the 70B and 8B chat
+    /// variants). Recorded per served request so quality-aware routing
+    /// can trade answer quality against carbon *visibly* — the planner
+    /// refuses plans whose expected quality falls below its
+    /// `min_quality` floor.
+    pub fn quality(&self) -> f64 {
+        match self {
+            Model::Llama70B => 1.0,
+            Model::Llama8B => 0.7,
+        }
+    }
+
     /// Peak request rate the platform sustains with a warm cache — the
     /// Azure trace is downscaled to this (§6.1). The paper's absolute
     /// axis is ≈ 2–3× higher (their testbed; see README § Scaling).

@@ -23,8 +23,9 @@
 //!   a multi-replica fleet behind a carbon-aware router ([`cluster`])
 //!   with a fleet-scoped control plane that co-optimizes router weights
 //!   and per-replica cache sizes ([`control`]), stress-tests the fleet
-//!   with deterministic fault injection ([`faults`]), and fans
-//!   evaluation cells out through the parallel [`scenario`] matrix.
+//!   with deterministic fault injection ([`faults`]), plans replica
+//!   power states with carbon-aware provisioning ([`provision`]), and
+//!   fans evaluation cells out through the parallel [`scenario`] matrix.
 //!
 //! Python never runs on the request path: the default build is
 //! self-contained, and after `make artifacts` the `pjrt` build is too.
@@ -42,6 +43,7 @@ pub mod faults;
 pub mod load;
 pub mod metrics;
 pub mod profiler;
+pub mod provision;
 pub mod rng;
 pub mod runtime;
 pub mod scenario;

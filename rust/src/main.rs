@@ -15,6 +15,10 @@
 //!                     [--faults off|crash|ssd|feed|all|crash+ssd+...]
 //!                                     (seeded fault injection: replica crash +
 //!                                      restart, SSD-tier loss, CI-feed dropout)
+//!                     [--provision off|static|green]
+//!                                     (replica power planning: power replicas
+//!                                      down in dirty/low-load intervals, boot
+//!                                      ahead of forecast peaks)
 //!                     [--fleet per-replica|green|all]
 //!                     [--threads N]   (lockstep replica stepping; 1 = sequential,
 //!                                      0 = one per core — byte-identical results)
@@ -27,6 +31,7 @@
 //!                     [--fleets per-replica,green]
 //!                     [--prefetches off,green]
 //!                     [--faults off,crash+ssd,all]  (fault-injection axis)
+//!                     [--provisions off,static,green]  (power-planning axis)
 //!                     [--cell-threads N]   (within-cell replica stepping)
 //!                     [--hours H] [--threads N] [--seed S] [--quick]
 //! greencache profile  [--task conv|doc04|doc07] [--quick]
@@ -42,6 +47,7 @@ use greencache::control::FleetPolicy;
 use greencache::coordinator::server::{Server, ServerConfig};
 use greencache::experiments::{Baseline, Model, ProfileStore, Task};
 use greencache::faults::FaultVariant;
+use greencache::provision::ProvisionVariant;
 use greencache::rng::Rng;
 use greencache::runtime::{default_artifact_dir, Engine};
 use greencache::scenario::{Matrix, MatrixRunner, ScenarioSpec};
@@ -152,6 +158,13 @@ fn parse_faults(s: &str) -> FaultVariant {
     FaultVariant::parse(s).unwrap_or_else(|| {
         eprintln!("unknown fault variant {s}, using off");
         FaultVariant::OFF
+    })
+}
+
+fn parse_provision(s: &str) -> ProvisionVariant {
+    ProvisionVariant::parse(s).unwrap_or_else(|| {
+        eprintln!("unknown provision mode {s}, using off");
+        ProvisionVariant::Off
     })
 }
 
@@ -326,6 +339,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
     let policy: Option<PolicyKind> = args.get("policy").map(parse_policy);
     let prefetch = parse_prefetch(args.get("prefetch").unwrap_or("off"));
     let faults = parse_faults(args.get("faults").unwrap_or("off"));
+    let provision = parse_provision(args.get("provision").unwrap_or("off"));
     let quick = args.bool("quick");
     let routers: Vec<RouterPolicy> = match args.get("router").unwrap_or("all") {
         "all" => RouterPolicy::all().to_vec(),
@@ -363,6 +377,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
             spec.policy = policy;
             spec.prefetch = prefetch;
             spec.faults = faults;
+            spec.provision = provision;
             spec.fleet = *fleet;
             spec.threads = args.usize("threads", 1);
             spec.hours = args.usize("hours", 24);
@@ -371,7 +386,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
             }
             spec.fixed_rps = fixed_rps;
             println!(
-                "fleet {} x{} | {} | {} | router {} | cache {} | fleet-ctl {} | prefetch {} | faults {} ({}h)...",
+                "fleet {} x{} | {} | {} | router {} | cache {} | fleet-ctl {} | prefetch {} | faults {} | provision {} ({}h)...",
                 spec.fleet_label(),
                 spec.replicas.len(),
                 task.name(),
@@ -381,6 +396,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
                 fleet.name(),
                 prefetch.name(),
                 faults.name(),
+                provision.name(),
                 spec.hours
             );
             let result = run_cluster(&spec, &mut profiles);
@@ -392,6 +408,12 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
                 result.token_hit_rate,
                 result.mean_ttft_s
             );
+            if !provision.is_off() {
+                println!(
+                    "provision: {:.2} replica-hours powered down, {} boots, quality {:.3}\n",
+                    result.powered_down_replica_hours, result.boots, result.mean_quality
+                );
+            }
             summary.push((*router, *fleet, result.total_carbon_g, result.slo_attainment));
         }
     }
@@ -488,6 +510,10 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
     if faults.iter().any(|f| !f.is_off()) && clusters == vec![None] {
         eprintln!("note: --faults only injects into fleet cells; pass --cluster too");
     }
+    let provisions = parse_list(args, "provisions", "off", parse_provision);
+    if provisions.iter().any(|p| !p.is_off()) && clusters == vec![None] {
+        eprintln!("note: --provisions only plans power for fleet cells; pass --cluster too");
+    }
 
     let matrix = Matrix::new()
         .models(&models)
@@ -500,6 +526,7 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         .fleets(&fleets)
         .prefetches(&prefetches)
         .faults(&faults)
+        .provisions(&provisions)
         .hours(args.usize("hours", 24))
         .quick(args.bool("quick"))
         .seed(args.usize("seed", 20_25) as u64)
@@ -512,7 +539,7 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         verbose: true,
     };
     println!(
-        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies x {} caches x {} fleets x {} prefetches x {} faults)...",
+        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies x {} caches x {} fleets x {} prefetches x {} faults x {} provisions)...",
         specs.len(),
         models.len(),
         tasks.len(),
@@ -522,7 +549,8 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         caches.len(),
         fleets.len(),
         prefetches.len(),
-        faults.len()
+        faults.len(),
+        provisions.len()
     );
     let result = runner.run(&specs);
     print!("{}", result.table());

@@ -147,6 +147,12 @@ pub struct SloTracker {
     /// Requests meeting BOTH thresholds (z_TTFT ∧ z_TPOT).
     both_ok: usize,
     total: usize,
+    /// Sum of per-request response-quality scores (GreenLLM-style:
+    /// each served request scores the quality of the model variant
+    /// that answered it, 1.0 = the fleet's reference model).
+    quality_sum: f64,
+    /// Served requests with a recorded quality score.
+    quality_n: usize,
 }
 
 impl SloTracker {
@@ -158,6 +164,8 @@ impl SloTracker {
             tpot: LatencyStats::new(),
             both_ok: 0,
             total: 0,
+            quality_sum: 0.0,
+            quality_n: 0,
         }
     }
 
@@ -194,6 +202,29 @@ impl SloTracker {
         self.tpot.merge(&other.tpot);
         self.both_ok += other.both_ok;
         self.total += other.total;
+        self.quality_sum += other.quality_sum;
+        self.quality_n += other.quality_n;
+    }
+
+    /// Record one served request's response-quality score (1.0 = the
+    /// fleet's reference model; a distilled 8B variant scores lower).
+    /// Kept separate from [`SloTracker::record`] so shed/dropped
+    /// requests — which have no response — contribute no quality
+    /// sample.
+    pub fn record_quality(&mut self, quality: f64) {
+        self.quality_sum += quality;
+        self.quality_n += 1;
+    }
+
+    /// Mean response quality across served requests; 1.0 when nothing
+    /// recorded a score (homogeneous fleets predate quality tracking,
+    /// and an empty cell should read as "no degradation").
+    pub fn mean_quality(&self) -> f64 {
+        if self.quality_n == 0 {
+            1.0
+        } else {
+            self.quality_sum / self.quality_n as f64
+        }
     }
 
     /// Requests recorded.
@@ -365,6 +396,26 @@ mod tests {
         assert_eq!(s.p50(), 2.0);
         assert!(s.percentile(100.0).is_nan());
         assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn quality_mean_and_merge_are_request_weighted() {
+        let slo = Slo::conv_70b();
+        let mut big = SloTracker::new(slo);
+        big.record(1.0, 0.1);
+        big.record_quality(1.0);
+        let mut small = SloTracker::new(slo);
+        for _ in 0..3 {
+            small.record(0.2, 0.1);
+            small.record_quality(0.7);
+        }
+        // Drops contribute no quality sample.
+        small.record_dropped();
+        assert!((small.mean_quality() - 0.7).abs() < 1e-12);
+        big.merge(&small);
+        assert!((big.mean_quality() - (1.0 + 3.0 * 0.7) / 4.0).abs() < 1e-12);
+        // No scores recorded -> neutral 1.0, never NaN.
+        assert_eq!(SloTracker::new(slo).mean_quality(), 1.0);
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! Carbon-aware replica provisioning: power-state planning primitives.
+//!
+//! The paper's planner reconfigures *cache* resources over time, but a
+//! fleet also wastes standing power and amortized embodied carbon on
+//! replicas that nobody needs for hours at a stretch. This module adds
+//! the missing actuator (EcoServe's observation, arxiv 2502.05043): a
+//! per-replica power-state machine the joint fleet planner can drive,
+//! so dirty-grid / low-load intervals power surplus replicas *off* and
+//! forecast peaks boot them back ahead of demand, charging each
+//! transition to the dedicated `boot_g` ledger line.
+//!
+//! The pieces, and who owns them:
+//!
+//! * [`PowerState`] — the per-replica machine. The **cluster driver**
+//!   owns the state and advances it at lockstep arrival instants (the
+//!   same instants fault events fire at), so transitions are a pure
+//!   function of the arrival stream and therefore thread-invariant.
+//! * [`PowerDirective`] — what a **fleet controller** may request
+//!   through `FleetActuators::set_power_state`: bring a replica `Up`
+//!   or take it `Down`. Directives are staged at interval boundaries
+//!   and applied by the driver; controllers never mutate engine state
+//!   directly.
+//! * [`ProvisionVariant`] — the experiment axis (`--provision
+//!   off|static|green`), defaults-off like the faults axis: `Off`
+//!   cells are byte-identical to a build without this module.
+//! * [`keep_set`] — the shared planning kernel: which replicas must
+//!   stay powered to cover a demand forecast, greenest-first (or
+//!   index-first for the CI-oblivious `static` policy).
+//!
+//! # State machine
+//!
+//! ```text
+//!          set_power_state(Down)            engine idle at a
+//!         ┌─────────────────────▶ Draining ──lockstep instant──▶ Off
+//!         │                          │                            │
+//!      Active ◀──── Up (undrain) ────┘                     Up     │
+//!         ▲                                                       ▼
+//!         └──── t >= until: record_boot(BOOT_S) ◀──── Booting{until}
+//! ```
+//!
+//! Every non-`Active` state reads as `down` in the router's
+//! `ReplicaView`, so the PR 8 failover machinery (down-skipping,
+//! deterministic failover order, admission-control shedding) handles
+//! traffic redistribution with no new routing code.
+//!
+//! Accounting while `Off`/`Booting`: operational energy and the cache
+//! embodied line stop accruing (the engine flushes pending accrual at
+//! the transition so on- and off-period rates never mix), while the
+//! non-storage embodied amortization keeps running — idle hardware is
+//! still manufactured hardware. The boot itself lands on `boot_g` via
+//! the same `record_boot` path a crash restart uses.
+
+/// How many forecast intervals ahead the green policy sizes its keep
+/// set for. Booting takes [`crate::faults::BOOT_S`] (a fraction of an
+/// interval), so covering the max demand over the next two intervals
+/// boots capacity back *before* the peak arrives instead of during it.
+pub const BOOT_LEAD_INTERVALS: usize = 2;
+
+/// Per-replica power state, owned and advanced by the cluster driver.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PowerState {
+    /// Powered on and serving; the only state the router may target.
+    Active,
+    /// Routing-down: finishes in-flight work, admits nothing new.
+    /// Becomes [`PowerState::Off`] at the first lockstep instant the
+    /// engine is idle.
+    Draining,
+    /// Powered off: zero operational energy, zero cache-embodied
+    /// accrual; non-storage embodied amortization continues. The cache
+    /// contents survive (same policy as a crash).
+    Off,
+    /// Booting back up; becomes [`PowerState::Active`] at the first
+    /// lockstep instant at or after `until`, charging the boot window
+    /// to the `boot_g` ledger line.
+    Booting {
+        /// Absolute sim time (seconds) at which the boot completes.
+        until: f64,
+    },
+}
+
+impl PowerState {
+    /// Whether the replica may receive new work right now. Everything
+    /// except `Active` reads as `down` in the router's `ReplicaView`.
+    pub fn is_active(&self) -> bool {
+        matches!(self, PowerState::Active)
+    }
+
+    /// Whether the replica is consuming operational power (serving or
+    /// draining). `Off` and `Booting` replicas accrue no operational
+    /// or cache-embodied carbon; the boot window is charged separately.
+    pub fn is_powered(&self) -> bool {
+        matches!(self, PowerState::Active | PowerState::Draining)
+    }
+
+    /// Stable label used in logs and the provisioning bench report.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PowerState::Active => "active",
+            PowerState::Draining => "draining",
+            PowerState::Off => "off",
+            PowerState::Booting { .. } => "booting",
+        }
+    }
+}
+
+/// A planner's staged request for one replica, applied by the driver
+/// at the interval boundary it was staged at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PowerDirective {
+    /// Power the replica down: `Active -> Draining` (then `Off` once
+    /// idle). Ignored for replicas already off or booting.
+    Down,
+    /// Power the replica up: `Off -> Booting{..}`, or cancel an
+    /// in-progress drain (`Draining -> Active`, free — the hardware
+    /// never lost power). Ignored for replicas already active.
+    Up,
+}
+
+/// The `--provision` experiment axis. Defaults off: cells that never
+/// mention the axis are byte-identical to a build without it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ProvisionVariant {
+    /// No power planning: every replica stays `Active` all day. The
+    /// default, and the always-on twin the bench compares against.
+    #[default]
+    Off,
+    /// One CI-oblivious decision at bootstrap: keep replicas in index
+    /// order until their capped capacity covers the bootstrap demand
+    /// forecast, power the rest down for the whole day. The classic
+    /// autoscaler baseline — saves energy but can't chase the grid.
+    Static,
+    /// Re-plan every interval, greenest-first: keep the lowest
+    /// forecast-CI replicas that cover the demand forecast over the
+    /// next [`BOOT_LEAD_INTERVALS`] intervals, drain the rest, and
+    /// boot capacity back ahead of forecast peaks.
+    Green,
+}
+
+impl ProvisionVariant {
+    /// Whether this is the inert default.
+    pub const fn is_off(&self) -> bool {
+        matches!(self, ProvisionVariant::Off)
+    }
+
+    /// Every variant, in presentation order.
+    pub fn all() -> [ProvisionVariant; 3] {
+        [
+            ProvisionVariant::Off,
+            ProvisionVariant::Static,
+            ProvisionVariant::Green,
+        ]
+    }
+
+    /// Stable label used in scenario labels, tables and JSON reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProvisionVariant::Off => "off",
+            ProvisionVariant::Static => "static",
+            ProvisionVariant::Green => "green",
+        }
+    }
+
+    /// Parse a CLI spelling. Accepts the stable names plus `none` as
+    /// an alias for `off`.
+    pub fn parse(s: &str) -> Option<ProvisionVariant> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(ProvisionVariant::Off),
+            "static" => Some(ProvisionVariant::Static),
+            "green" => Some(ProvisionVariant::Green),
+            _ => None,
+        }
+    }
+}
+
+/// Which replicas must stay powered to cover `demand_rps`.
+///
+/// Replicas are admitted greedily in planning order — ascending
+/// forecast CI (ties broken by index) when `ci_rank` is given, plain
+/// index order for the CI-oblivious static policy — until their summed
+/// capacity reaches the demand. The first replica in order is always
+/// kept: a fleet never powers itself off entirely, whatever the
+/// forecast says.
+///
+/// `capacities` are per-replica sustainable rates (peak rps already
+/// multiplied by the planner's utilization cap); `ci_rank` must be the
+/// same length when present.
+pub fn keep_set(demand_rps: f64, capacities: &[f64], ci_rank: Option<&[f64]>) -> Vec<bool> {
+    let n = capacities.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    if let Some(ci) = ci_rank {
+        assert_eq!(ci.len(), n, "ci_rank must match capacities");
+        order.sort_by(|&a, &b| ci[a].total_cmp(&ci[b]).then(a.cmp(&b)));
+    }
+    let mut keep = vec![false; n];
+    let mut covered = 0.0;
+    for (rank, &i) in order.iter().enumerate() {
+        if rank > 0 && covered >= demand_rps {
+            break;
+        }
+        keep[i] = true;
+        covered += capacities[i];
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_labels_round_trip_and_default_is_off() {
+        assert!(ProvisionVariant::default().is_off());
+        for v in ProvisionVariant::all() {
+            assert_eq!(ProvisionVariant::parse(v.name()), Some(v));
+        }
+        assert_eq!(ProvisionVariant::parse("none"), Some(ProvisionVariant::Off));
+        assert_eq!(ProvisionVariant::parse(" GREEN "), Some(ProvisionVariant::Green));
+        assert_eq!(ProvisionVariant::parse("bogus"), None);
+    }
+
+    #[test]
+    fn axis_names_are_stable() {
+        // Labels are part of the scenario-label / bench-JSON contract.
+        let names: Vec<_> = ProvisionVariant::all().iter().map(|v| v.name()).collect();
+        assert_eq!(names, ["off", "static", "green"]);
+    }
+
+    #[test]
+    fn keep_set_covers_demand_greenest_first() {
+        // Capacities 1.0 each; CI ranks the middle replica greenest.
+        let keep = keep_set(1.5, &[1.0, 1.0, 1.0], Some(&[300.0, 50.0, 500.0]));
+        assert_eq!(keep, vec![true, true, false]);
+        // Index order when CI-oblivious.
+        let keep = keep_set(1.5, &[1.0, 1.0, 1.0], None);
+        assert_eq!(keep, vec![true, true, false]);
+    }
+
+    #[test]
+    fn keep_set_never_powers_the_whole_fleet_off() {
+        let keep = keep_set(0.0, &[1.0, 1.0], Some(&[500.0, 30.0]));
+        // Zero demand still keeps the greenest replica.
+        assert_eq!(keep, vec![false, true]);
+        assert_eq!(keep_set(0.0, &[2.0], None), vec![true]);
+    }
+
+    #[test]
+    fn keep_set_keeps_everyone_when_demand_exceeds_capacity() {
+        let keep = keep_set(10.0, &[1.0, 1.0, 1.0], Some(&[3.0, 2.0, 1.0]));
+        assert_eq!(keep, vec![true, true, true]);
+    }
+
+    #[test]
+    fn power_state_view_and_power_semantics() {
+        assert!(PowerState::Active.is_active());
+        assert!(PowerState::Active.is_powered());
+        assert!(!PowerState::Draining.is_active());
+        assert!(PowerState::Draining.is_powered());
+        for s in [PowerState::Off, PowerState::Booting { until: 1.0 }] {
+            assert!(!s.is_active());
+            assert!(!s.is_powered());
+        }
+        assert_eq!(PowerState::Booting { until: 0.0 }.name(), "booting");
+    }
+}

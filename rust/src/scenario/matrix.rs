@@ -6,11 +6,13 @@ use crate::ci::Grid;
 use crate::control::FleetPolicy;
 use crate::experiments::{Baseline, Model, Task};
 use crate::faults::FaultVariant;
+use crate::provision::ProvisionVariant;
 
 /// A declarative scenario matrix. Every axis is a list of values; the
 /// expansion is their cartesian product in a fixed order (model-major,
 /// then task, grid, baseline, policy, cache, cluster, fleet, prefetch,
-/// faults), so cell order — and therefore the golden table — is stable.
+/// faults, provision), so cell order — and therefore the golden table —
+/// is stable.
 ///
 /// # Example
 ///
@@ -69,6 +71,13 @@ pub struct Matrix {
     /// shapes workload seeds), so degradation deltas are directly
     /// readable. A fleet-level axis — single-node cells ignore it.
     pub faults: Vec<FaultVariant>,
+    /// Provision axis (`greencache matrix --provisions`): whether each
+    /// fleet cell's joint planner may power replicas down and boot them
+    /// back ahead of forecast peaks ([`crate::provision`]). Off/on pairs
+    /// replay the identical day (the axis never shapes workload seeds),
+    /// so the provisioning carbon delta is directly readable. A
+    /// fleet-level axis — single-node cells ignore it.
+    pub provisions: Vec<ProvisionVariant>,
     /// Evaluated horizon per cell, hours.
     pub hours: usize,
     /// Shrunken warm-up/profile smoke mode.
@@ -103,6 +112,7 @@ impl Matrix {
             fleets: vec![FleetPolicy::PerReplica],
             prefetches: vec![PrefetchMode::Off],
             faults: vec![FaultVariant::OFF],
+            provisions: vec![ProvisionVariant::Off],
             hours: 24,
             quick: false,
             base_seed: 20_25,
@@ -173,6 +183,12 @@ impl Matrix {
         self
     }
 
+    /// Set the provision axis (power on/off planning variants).
+    pub fn provisions(mut self, v: &[ProvisionVariant]) -> Self {
+        self.provisions = v.to_vec();
+        self
+    }
+
     /// Set the per-cell horizon, hours.
     pub fn hours(mut self, h: usize) -> Self {
         self.hours = h;
@@ -228,6 +244,7 @@ impl Matrix {
             * self.fleets.len()
             * self.prefetches.len()
             * self.faults.len()
+            * self.provisions.len()
     }
 
     /// Whether the expansion would be empty.
@@ -249,24 +266,28 @@ impl Matrix {
                                     for &fleet in &self.fleets {
                                         for &prefetch in &self.prefetches {
                                             for &fault in &self.faults {
-                                                let mut spec =
-                                                    ScenarioSpec::new(model, task, grid, baseline);
-                                                spec.policy = policy;
-                                                spec.hours = self.hours;
-                                                spec.seed = seed;
-                                                spec.interval_s = self.interval_s;
-                                                spec.fixed_rps = self.fixed_rps;
-                                                spec.fixed_ci = self.fixed_ci;
-                                                spec.cache = cache;
-                                                spec.cluster = cluster.clone();
-                                                spec.fleet = fleet;
-                                                spec.threads = self.cell_threads;
-                                                spec.prefetch = prefetch;
-                                                spec.faults = fault;
-                                                if self.quick {
-                                                    spec = spec.quick();
+                                                for &provision in &self.provisions {
+                                                    let mut spec = ScenarioSpec::new(
+                                                        model, task, grid, baseline,
+                                                    );
+                                                    spec.policy = policy;
+                                                    spec.hours = self.hours;
+                                                    spec.seed = seed;
+                                                    spec.interval_s = self.interval_s;
+                                                    spec.fixed_rps = self.fixed_rps;
+                                                    spec.fixed_ci = self.fixed_ci;
+                                                    spec.cache = cache;
+                                                    spec.cluster = cluster.clone();
+                                                    spec.fleet = fleet;
+                                                    spec.threads = self.cell_threads;
+                                                    spec.prefetch = prefetch;
+                                                    spec.faults = fault;
+                                                    spec.provision = provision;
+                                                    if self.quick {
+                                                        spec = spec.quick();
+                                                    }
+                                                    cells.push(spec);
                                                 }
-                                                cells.push(spec);
                                             }
                                         }
                                     }
@@ -442,6 +463,33 @@ mod tests {
                 w[1].label()
             );
             assert!(!w[0].label().contains("faults="), "{}", w[0].label());
+        }
+    }
+
+    #[test]
+    fn provision_axis_multiplies_cells_and_shares_seeds() {
+        use crate::cluster::RouterPolicy;
+        let m = small()
+            .clusters(&[Some(ClusterVariant::new(
+                &[Grid::Fr, Grid::Miso],
+                RouterPolicy::CarbonGreedy,
+            ))])
+            .fleets(&[FleetPolicy::GreenCacheFleet])
+            .provisions(&[ProvisionVariant::Off, ProvisionVariant::Green]);
+        assert_eq!(m.len(), 8 * 2);
+        let cells = m.expand();
+        // The provision axis is innermost: consecutive pairs differ only
+        // by provisioning mode and replay the identical day.
+        for w in cells.chunks(2) {
+            assert_eq!(w[0].seed, w[1].seed);
+            assert!(w[0].provision.is_off());
+            assert_eq!(w[1].provision, ProvisionVariant::Green);
+            assert!(
+                w[1].label().ends_with("/provision=green"),
+                "{}",
+                w[1].label()
+            );
+            assert!(!w[0].label().contains("provision="), "{}", w[0].label());
         }
     }
 

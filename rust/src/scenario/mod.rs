@@ -32,6 +32,7 @@ use crate::cluster::{ClusterSpec, ReplicaSpec, RouterPolicy};
 use crate::control::FleetPolicy;
 use crate::experiments::{Baseline, DayScenario, Model, Task};
 use crate::faults::FaultVariant;
+use crate::provision::ProvisionVariant;
 
 /// The cluster shape of a fleet cell: one replica per grid, plus the
 /// routing policy, plus (optionally) per-replica models for
@@ -162,6 +163,15 @@ pub struct ScenarioSpec {
     /// byte-identical to pre-fault builds; it never shapes the
     /// workload seed.
     pub faults: FaultVariant,
+    /// Carbon-aware replica provisioning (the matrix provision axis):
+    /// whether a fleet cell's [`FleetPolicy::GreenCacheFleet`] planner
+    /// may power replicas down and boot them back ahead of forecast
+    /// peaks ([`crate::provision`]). A fleet-level axis — single-node
+    /// cells ignore it, like `fleet` and `faults`.
+    /// [`ProvisionVariant::Off`] (the default) keeps labels and results
+    /// byte-identical to pre-provisioning builds; it never shapes the
+    /// workload seed.
+    pub provision: ProvisionVariant,
 }
 
 impl ScenarioSpec {
@@ -185,6 +195,7 @@ impl ScenarioSpec {
             threads: 1,
             prefetch: PrefetchMode::Off,
             faults: FaultVariant::OFF,
+            provision: ProvisionVariant::Off,
         }
     }
 
@@ -234,6 +245,7 @@ impl ScenarioSpec {
             threads: self.threads,
             prefetch: self.prefetch,
             faults: self.faults,
+            provision: self.provision,
         })
     }
 
@@ -259,8 +271,9 @@ impl ScenarioSpec {
     /// under the joint planner `/fleet=green` (the per-replica default
     /// stays unlabeled, so pre-planner golden tables are unchanged),
     /// prefetch-enabled cells `/prefetch=green` (off stays unlabeled),
-    /// and fault-injected cells `/faults=crash+ssd+feed` etc. (off stays
-    /// unlabeled).
+    /// fault-injected cells `/faults=crash+ssd+feed` etc. (off stays
+    /// unlabeled), and provisioning-enabled fleet cells
+    /// `/provision=static` or `/provision=green` (off stays unlabeled).
     pub fn label(&self) -> String {
         let mut s = format!(
             "{}/{}/{}/{}",
@@ -292,6 +305,10 @@ impl ScenarioSpec {
         if !self.faults.is_off() {
             s.push_str("/faults=");
             s.push_str(self.faults.name());
+        }
+        if !self.provision.is_off() {
+            s.push_str("/provision=");
+            s.push_str(self.provision.name());
         }
         s
     }
@@ -532,6 +549,33 @@ mod tests {
         assert_eq!(spec.to_cluster_spec().unwrap().faults, FaultVariant::ALL);
         // A robustness axis must never shape the workload seed: both
         // cells replay the identical day.
+        assert_eq!(spec.to_cluster_spec().unwrap().seed, spec.seed);
+    }
+
+    #[test]
+    fn provision_axis_lowers_and_labels() {
+        use crate::cluster::RouterPolicy;
+        let mut spec = ScenarioSpec::new(
+            Model::Llama70B,
+            Task::Conversation,
+            Grid::Es,
+            Baseline::GreenCache,
+        );
+        spec.cluster = Some(ClusterVariant::new(
+            &[Grid::Fr, Grid::Miso],
+            RouterPolicy::CarbonGreedy,
+        ));
+        assert_eq!(spec.provision, ProvisionVariant::Off);
+        assert!(!spec.label().contains("provision="), "off is the unlabeled default");
+        assert!(spec.to_cluster_spec().unwrap().provision.is_off());
+        spec.provision = ProvisionVariant::Green;
+        assert!(spec.label().ends_with("/provision=green"), "{}", spec.label());
+        assert_eq!(
+            spec.to_cluster_spec().unwrap().provision,
+            ProvisionVariant::Green
+        );
+        // A control-plane axis must never shape the workload seed: off
+        // and green cells replay the identical day.
         assert_eq!(spec.to_cluster_spec().unwrap().seed, spec.seed);
     }
 

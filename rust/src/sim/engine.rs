@@ -240,6 +240,10 @@ pub struct SimResult {
     pub crash_dropped: usize,
     /// Whether the overload safety valve tripped during the run.
     pub overloaded: bool,
+    /// Tokens served across completed requests (prompt + generated
+    /// reply — the same definition the cache admits), the denominator
+    /// of the per-token gCO₂ functional-unit metric.
+    pub served_tokens: u64,
 }
 
 impl SimResult {
@@ -375,6 +379,15 @@ pub struct ReplicaEngine<'c> {
     // Fault/overload bookkeeping (see crate::faults).
     shed: usize,
     crash_dropped: usize,
+    // Provisioning (see crate::provision): while powered off the engine
+    // accrues no operational energy and reports zero cache tiers, so
+    // flushed periods carry only the non-storage embodied amortization.
+    powered_off: bool,
+    // GreenLLM-style response-quality score of this replica's model
+    // variant, recorded per served request (1.0 = reference model).
+    quality: f64,
+    // Tokens served across completed requests (prompt + reply).
+    served_tokens: u64,
 }
 
 impl<'c> ReplicaEngine<'c> {
@@ -411,6 +424,9 @@ impl<'c> ReplicaEngine<'c> {
             prefetcher,
             shed: 0,
             crash_dropped: 0,
+            powered_off: false,
+            quality: 1.0,
+            served_tokens: 0,
         }
     }
 
@@ -556,6 +572,40 @@ impl<'c> ReplicaEngine<'c> {
         self.accountant.record_boot(boot_s, e, Ci(ci_gpkwh));
     }
 
+    /// Set the replica's response-quality score (1.0 = the fleet's
+    /// reference model; a distilled variant scores lower). Recorded per
+    /// served request into the SLO tracker so fleet aggregation can
+    /// report a request-weighted mean quality.
+    pub fn set_quality(&mut self, quality: f64) {
+        self.quality = quality;
+    }
+
+    /// Whether the replica is currently powered off (provisioning).
+    pub fn is_powered_off(&self) -> bool {
+        self.powered_off
+    }
+
+    /// Transition the replica's power accounting mode
+    /// ([`crate::provision`]). While off, the engine accrues zero
+    /// operational energy and reports zero cache tiers, so flushed
+    /// periods carry only the non-storage embodied amortization — idle
+    /// hardware is still manufactured hardware, but it burns nothing and
+    /// its cache line stops amortizing. The cache *contents* survive
+    /// (same persistence policy as a crash).
+    ///
+    /// The pending (energy, time) pool is flushed at the transition
+    /// instant, priced at `ci_gpkwh`, so on- and off-period accrual
+    /// rates never mix inside one accounting period. Drivers must only
+    /// power off an idle engine (drain first) and must not inject into
+    /// an off engine.
+    pub fn set_powered_off(&mut self, off: bool, ci_gpkwh: f64) {
+        if self.powered_off == off {
+            return;
+        }
+        self.flush_pending_at(ci_gpkwh);
+        self.powered_off = off;
+    }
+
     /// Admit a request. Arrivals must be injected in time order (by
     /// `arrival_s`); the engine clock may already sit past `arrival_s`
     /// by up to one iteration when `run_until` overshot — the request
@@ -660,6 +710,7 @@ impl<'c> ReplicaEngine<'c> {
             shed: self.shed,
             crash_dropped: self.crash_dropped,
             overloaded,
+            served_tokens: self.served_tokens,
         };
         (result, self.cache)
     }
@@ -743,7 +794,7 @@ impl<'c> ReplicaEngine<'c> {
                 let next_hour =
                     ((next_start_s / 3600.0) as usize).min(self.cfg.hours.saturating_sub(1));
                 let ci = ci_of_hour(next_hour);
-                if self.prefetcher.is_green(ci) {
+                if self.prefetcher.is_green(ci) && !self.powered_off {
                     for _ in 0..PREFETCH_CHAIN {
                         match self.prefetcher.attempt(self.cache.as_mut(), self.now, true) {
                             Some((_, tokens)) => {
@@ -769,14 +820,27 @@ impl<'c> ReplicaEngine<'c> {
     /// embodied intensity) — single-tier stores report everything as SSD
     /// and reproduce the pre-trait numbers exactly.
     fn flush_pending(&mut self, ci_of_hour: &dyn Fn(usize) -> f64, hour: usize) {
+        self.flush_pending_at(ci_of_hour(hour));
+    }
+
+    /// [`Self::flush_pending`] at an explicit CI — the power-transition
+    /// path flushes mid-interval, at the transition instant's hour. A
+    /// powered-off period reports zero cache tiers: the cache line stops
+    /// amortizing while the hardware holding it is dark.
+    fn flush_pending_at(&mut self, ci_gpkwh: f64) {
         if self.pending_time_s > 0.0 {
-            let tiers = self.cache.tier_bytes();
+            let (ssd, dram) = if self.powered_off {
+                (0.0, 0.0)
+            } else {
+                let tiers = self.cache.tier_bytes();
+                (tiers.ssd as f64, tiers.dram as f64)
+            };
             self.accountant.record_period_split(
                 self.pending_time_s,
                 self.pending_energy_j,
-                Ci(ci_of_hour(hour)),
-                tiers.ssd as f64,
-                tiers.dram as f64,
+                Ci(ci_gpkwh),
+                ssd,
+                dram,
             );
             self.pending_energy_j = 0.0;
             self.pending_time_s = 0.0;
@@ -814,6 +878,15 @@ impl<'c> ReplicaEngine<'c> {
         let target = target.max(self.now);
         let idle = target - self.now;
         if idle > 0.0 {
+            // Powered-off gaps advance the clock and the accounted
+            // duration (embodied amortization keeps running) but draw
+            // no power and warm nothing — a dark replica has no idle
+            // compute to spend.
+            if self.powered_off {
+                self.pending_time_s += idle;
+                self.now = target;
+                return;
+            }
             let hour = ((self.now / 3600.0) as usize).min(self.cfg.hours.saturating_sub(1));
             if let Some((_, tokens)) = self.prefetcher.attempt(self.cache.as_mut(), self.now, false)
             {
@@ -1022,6 +1095,7 @@ impl<'c> ReplicaEngine<'c> {
             0.0
         };
         self.slo.record(ttft, tpot);
+        self.slo.record_quality(self.quality);
         self.interval_tpot.push(tpot);
         self.all_tpot_sum += tpot;
         self.interval_completed += 1;
@@ -1029,6 +1103,7 @@ impl<'c> ReplicaEngine<'c> {
         // Admit the served context into the cache: context + this turn's
         // prompt + generated reply become reusable KV.
         let cached_tokens = fly.req.prompt_tokens() + fly.req.output_tokens;
+        self.served_tokens += cached_tokens as u64;
         self.cache.admit(&fly.req, cached_tokens, None, self.now);
     }
 }

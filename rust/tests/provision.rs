@@ -1,0 +1,243 @@
+//! Acceptance suite for the carbon-aware provisioning subsystem
+//! (`greencache::provision` + the `GreenCacheFleet` power planner +
+//! the cluster driver's power state machine).
+//!
+//! Pins, per the provisioning redesign's acceptance criteria:
+//!
+//! * green power planning on a low-load dirty-grid day emits strictly
+//!   less carbon than the always-on twin of the identical replayed day,
+//!   while holding SLO attainment within 3 pp;
+//! * booting a powered-down replica back up charges the dedicated
+//!   `boot_g` ledger line, which is included in — but does not exhaust
+//!   — `total_g()`;
+//! * the provisioning axis is defaults-off: a cell with the axis left
+//!   at its default is byte-identical to one with `off` set explicitly
+//!   (pre-provisioning goldens and labels are unchanged);
+//! * mixed-model fleets keep their realized mean quality at or above
+//!   the planner's `MIN_QUALITY` floor;
+//! * a provisioned fleet is thread-invariant at 1/2/4/8 lockstep
+//!   threads (power transitions fire at arrival instants, a pure
+//!   function of the arrival stream, never of stepping or thread
+//!   count);
+//! * when every replica is down or saturated the router sheds instead
+//!   of panicking, and conservation still holds.
+
+use greencache::cache::CacheVariant;
+use greencache::ci::Grid;
+use greencache::cluster::{run_cluster, ClusterResult, ClusterSpec, ReplicaSpec, RouterPolicy};
+use greencache::control::{FleetPolicy, MIN_QUALITY};
+use greencache::experiments::{Model, ProfileStore, Task};
+use greencache::faults::FaultVariant;
+use greencache::provision::ProvisionVariant;
+
+/// The provisioning fleet: three grids (one clean, two dirty coal
+/// grids — so powering down in dirty intervals has grams to save),
+/// carbon-greedy routing, the joint fleet planner (the only control
+/// plane that plans power), default GreenCache baseline (adaptive, so
+/// the planner is constructed). A low fixed rate keeps forecast demand
+/// flat and well under one replica's capacity, so the keep-set is
+/// stable and the off/green delta is pure power planning.
+fn low_load_fleet(provision: ProvisionVariant, threads: usize) -> ClusterSpec {
+    let mut spec = ClusterSpec::homogeneous(
+        Model::Llama70B,
+        Task::Conversation,
+        &[Grid::Fr, Grid::Pjm, Grid::Miso],
+        RouterPolicy::CarbonGreedy,
+    )
+    .quick();
+    spec.hours = 4;
+    spec.fixed_rps = Some(0.15);
+    spec.cache = CacheVariant::Tiered;
+    spec.fleet = FleetPolicy::GreenCacheFleet;
+    spec.provision = provision;
+    spec.threads = threads;
+    spec
+}
+
+/// The boot fleet: same grids, but replaying the Azure-like diurnal
+/// trace (`fixed_rps: None`) over a longer window, so forecast demand
+/// moves between trough and peak — the keep-set shrinks, then regrows,
+/// and regrowth exercises the Off → Booting → Active path.
+fn diurnal_fleet(provision: ProvisionVariant) -> ClusterSpec {
+    let mut spec = low_load_fleet(provision, 1);
+    spec.hours = 8;
+    spec.fixed_rps = None;
+    spec
+}
+
+fn run(spec: &ClusterSpec) -> ClusterResult {
+    let mut profiles = ProfileStore::new(true);
+    run_cluster(spec, &mut profiles)
+}
+
+/// Conservation, fleet-wide and per replica: nothing is silently lost.
+fn assert_conserved(r: &ClusterResult) {
+    let routed: usize = r.replicas.iter().map(|x| x.routed).sum();
+    assert_eq!(
+        r.completed + r.crash_dropped,
+        routed,
+        "accepted arrivals must complete or be crash-dropped"
+    );
+    for rep in &r.replicas {
+        assert_eq!(
+            rep.sim.slo.total(),
+            rep.sim.completed + rep.sim.shed + rep.sim.crash_dropped,
+            "every request is an SLO sample: served, shed or dropped"
+        );
+    }
+}
+
+#[test]
+fn green_provisioning_saves_carbon_at_equal_slo_on_the_low_load_day() {
+    let on = run(&low_load_fleet(ProvisionVariant::Off, 1));
+    let planned = run(&low_load_fleet(ProvisionVariant::Green, 1));
+    assert_conserved(&on);
+    assert_conserved(&planned);
+    assert!(planned.completed > 0, "planned fleet wedged");
+    assert!(
+        planned.powered_down_replica_hours > 0.0,
+        "a 0.15 rps day on a three-replica fleet must power surplus replicas down"
+    );
+    assert!(
+        planned.total_carbon_g < on.total_carbon_g,
+        "green provisioning must emit strictly less: planned {:.1} g vs always-on {:.1} g",
+        planned.total_carbon_g,
+        on.total_carbon_g
+    );
+    assert!(
+        on.slo_attainment - planned.slo_attainment < 0.03,
+        "powering down surplus capacity must hold SLO within 3 pp: \
+         always-on {:.3} vs planned {:.3}",
+        on.slo_attainment,
+        planned.slo_attainment
+    );
+}
+
+#[test]
+fn boots_charge_the_boot_ledger_line_inside_the_total() {
+    let r = run(&diurnal_fleet(ProvisionVariant::Green));
+    assert_conserved(&r);
+    assert!(
+        r.powered_down_replica_hours > 0.0,
+        "the diurnal trough must power replicas down"
+    );
+    assert!(
+        r.boots > 0,
+        "the diurnal peak must boot powered-down replicas back up"
+    );
+    let boot_g: f64 = r
+        .replicas
+        .iter()
+        .map(|rep| rep.sim.accountant.breakdown().boot_g)
+        .sum();
+    assert!(boot_g > 0.0, "a provisioning boot must charge boot carbon");
+    for rep in &r.replicas {
+        let b = rep.sim.accountant.breakdown();
+        if b.boot_g > 0.0 {
+            assert!(
+                b.total_g() > b.boot_g,
+                "boot_g is one line of the total, not all of it"
+            );
+        }
+    }
+}
+
+#[test]
+fn provision_off_cell_is_byte_identical_with_defaults_off() {
+    // `homogeneous()` defaults the axis to Off; setting it explicitly
+    // must not perturb a single bit (Debug floats are
+    // shortest-roundtrip, so equal renderings mean bit-equal results).
+    let mut implicit = low_load_fleet(ProvisionVariant::Off, 1);
+    implicit.provision = ProvisionVariant::default();
+    let a = run(&implicit);
+    let b = run(&low_load_fleet(ProvisionVariant::Off, 1));
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    assert_eq!(a.powered_down_replica_hours, 0.0);
+    assert_eq!(a.boots, 0);
+}
+
+#[test]
+fn static_provisioning_plans_once_and_powers_down() {
+    // Static mode sizes the on-set at bootstrap and holds it: surplus
+    // replicas stay down for the whole flat-load day, and nothing ever
+    // boots (a boot would mean the plan moved).
+    let r = run(&low_load_fleet(ProvisionVariant::Static, 1));
+    assert_conserved(&r);
+    assert!(r.completed > 0, "static fleet wedged");
+    assert!(
+        r.powered_down_replica_hours > 0.0,
+        "static planning must power surplus replicas down at bootstrap"
+    );
+    assert_eq!(r.boots, 0, "a held plan never boots");
+}
+
+#[test]
+fn mixed_model_fleet_keeps_mean_quality_above_the_floor() {
+    // A 70B replica on clean FR next to an 8B replica on dirty MISO —
+    // the GreenLLM-style heterogeneous shape. The planner rejects
+    // weight plans whose weighted quality falls below MIN_QUALITY, and
+    // the carbon-greedy steer only hands short cache-miss prompts to
+    // the small tier, so realized quality stays above the floor.
+    let mut spec = ClusterSpec::homogeneous(
+        Model::Llama70B,
+        Task::Conversation,
+        &[Grid::Fr, Grid::Miso],
+        RouterPolicy::CarbonGreedy,
+    )
+    .quick();
+    spec.replicas[1] = ReplicaSpec::new(Model::Llama8B, Grid::Miso);
+    spec.hours = 4;
+    spec.fixed_rps = Some(0.2);
+    spec.fleet = FleetPolicy::GreenCacheFleet;
+    spec.provision = ProvisionVariant::Green;
+    let r = run(&spec);
+    assert_conserved(&r);
+    assert!(r.completed > 0, "mixed fleet wedged");
+    assert!(
+        r.mean_quality >= MIN_QUALITY,
+        "realized mean quality {:.3} fell below the {MIN_QUALITY} floor",
+        r.mean_quality
+    );
+    // Quality is a real signal, not a constant: the fleet is mixed, so
+    // the mean can only be 1.0 if the 8B replica served nothing.
+    assert!(r.mean_quality <= 1.0);
+}
+
+#[test]
+fn provisioned_fleet_is_thread_invariant() {
+    let want = format!("{:?}", run(&low_load_fleet(ProvisionVariant::Green, 1)));
+    for threads in [2, 4, 8] {
+        let parallel = run(&low_load_fleet(ProvisionVariant::Green, threads));
+        assert_eq!(
+            format!("{parallel:?}"),
+            want,
+            "provisioned fleet diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn saturated_and_down_fleet_sheds_instead_of_panicking() {
+    // The router edge case: a two-replica fleet where the crash fault
+    // takes one replica down while the arrival rate saturates the
+    // other (fault-enabled runs arm the admission-control shed valve).
+    // Arrivals that no replica can take must shed — never panic, never
+    // vanish from the accounting.
+    let mut spec = ClusterSpec::homogeneous(
+        Model::Llama70B,
+        Task::Conversation,
+        &[Grid::Fr, Grid::Miso],
+        RouterPolicy::CarbonGreedy,
+    )
+    .quick();
+    spec.hours = 2;
+    spec.fixed_rps = Some(1.2);
+    spec.faults = FaultVariant::CRASH;
+    spec.provision = ProvisionVariant::Green;
+    spec.fleet = FleetPolicy::GreenCacheFleet;
+    let r = run(&spec);
+    assert_conserved(&r);
+    assert!(r.shed > 0, "a saturated fleet with a crashed replica must shed");
+    assert!(r.completed > 0, "the surviving replica must keep serving");
+    assert!(r.slo_attainment < 1.0, "shed work must count against attainment");
+}
