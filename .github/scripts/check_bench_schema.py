@@ -24,7 +24,7 @@ committed placeholders (repo root) and the freshly measured reports
 import json
 import sys
 
-SCHEMA = "greencache-bench-v5"
+SCHEMA = "greencache-bench-v6"
 REQUIRED = {
     "BENCH_SIM.json": [
         "bench", "config", "reference", "fast_forward", "speedup",
@@ -37,6 +37,11 @@ REQUIRED = {
         # always-on twin of the same low-load fleet/day). A null
         # placeholder records-but-doesn't-gate, like the fleet section.
         "provision",
+        # v6: the session-ingress cell (sticky windowed ingress vs
+        # stateless round-robin on the same seeded agentic session-tree
+        # day: token hit rate, total carbon, g/session). A null
+        # placeholder records-but-doesn't-gate — only speedups gate.
+        "sessions",
     ],
     "BENCH_CACHE.json": [
         "bench", "cases", "group", "ops_per_case", "quick", "schema",

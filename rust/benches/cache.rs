@@ -22,6 +22,7 @@ fn req(ctx: u64, version: u32, context: u32) -> Request {
         new_tokens: 50,
         output_tokens: 100,
         arrival_s: 0.0,
+        session: 0,
     }
 }
 

@@ -167,6 +167,7 @@ pub(crate) fn touch_on_admit(
 ///     new_tokens: 100,
 ///     output_tokens: 20,
 ///     arrival_s: 0.0,
+///     session: 0,
 /// };
 /// assert!(!cache.lookup(&turn1, 0.0).hit);
 /// // After serving, prompt + reply become reusable KV (write-through).
@@ -523,6 +524,7 @@ mod tests {
             new_tokens: new,
             output_tokens: 10,
             arrival_s: 0.0,
+            session: 0,
         }
     }
 

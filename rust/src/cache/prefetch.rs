@@ -228,6 +228,7 @@ impl Prefetcher {
             new_tokens: 0,
             output_tokens: 0,
             arrival_s: now_s,
+            session: 0,
         };
         if cache.peek(&probe) >= tokens {
             return None; // already warm at full length
@@ -269,6 +270,7 @@ mod tests {
             new_tokens: new,
             output_tokens: 10,
             arrival_s: 0.0,
+            session: 0,
         }
     }
 

@@ -408,6 +408,7 @@ mod tests {
             new_tokens: new,
             output_tokens: 10,
             arrival_s: 0.0,
+            session: 0,
         }
     }
 

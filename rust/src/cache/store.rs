@@ -37,6 +37,7 @@
 //!     new_tokens: 10,
 //!     output_tokens: 20,
 //!     arrival_s: 0.0,
+//!     session: 0,
 //! };
 //! let mut stores: Vec<Box<dyn CacheStore>> = vec![
 //!     Box::new(LocalStore::new(1_000_000, 1_000, PolicyKind::Lcs)),

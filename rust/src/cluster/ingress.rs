@@ -1,0 +1,413 @@
+//! Open-loop ingress in front of the cluster router: windowed routing
+//! decisions plus session-affinity stickiness.
+//!
+//! The cluster driver normally hands the router a *live* snapshot of
+//! every replica (queue depth, carbon intensity, cache affinity) at each
+//! arrival. A real ingress tier cannot afford fleet-wide state reads per
+//! request; it batches: telemetry is refreshed once per **arrival
+//! window** ([`IngressSpec::window_s`]) and every request landing inside
+//! the window is routed against that frozen view. Placeability stays
+//! live — a replica that crashed mid-window is never routed to just
+//! because the snapshot predates the crash — and so does the per-request
+//! cache-affinity probe (it depends on the request, not the window).
+//!
+//! **Stickiness** ([`IngressSpec::sticky`]) adds a bounded
+//! session→replica pin map: the first turn of a session is placed by the
+//! router, every later turn goes back to the same replica — which is
+//! exactly where its KV prefix is cached — unless that replica is down
+//! or shedding, in which case placement falls through the existing
+//! [`crate::cluster::failover_order`] like any other arrival and the pin
+//! moves to wherever the turn actually landed. The map holds at most
+//! [`STICKY_CAP`] pins with deterministic FIFO insertion-order eviction,
+//! so a million-session day cannot grow it without bound.
+//!
+//! Determinism: all ingress state (window snapshots, pins, eviction
+//! order) advances only inside driver calls at lockstep arrival
+//! instants, never from worker threads — runs stay byte-identical
+//! across thread counts and stepping modes. [`IngressSpec::OFF`] is the
+//! default and routes exactly like the pre-ingress driver.
+
+use crate::cluster::ReplicaView;
+use std::collections::{HashMap, VecDeque};
+
+/// Most session→replica pins held at once; beyond this the oldest pin
+/// (by first placement) is evicted. 64Ki pins ≈ 1 MB of map — flat even
+/// on a 1e6-session day.
+pub const STICKY_CAP: usize = 65_536;
+
+/// Ingress configuration on a [`crate::cluster::ClusterSpec`] — a new
+/// scenario knob, defaults-off ([`IngressSpec::OFF`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IngressSpec {
+    /// Arrival-window length in seconds over which routing telemetry is
+    /// frozen; `<= 0` disables windowing (live views per arrival, the
+    /// pre-ingress behavior).
+    pub window_s: f64,
+    /// Pin each session's turns to the replica that served its first
+    /// turn (bounded map, failover-aware).
+    pub sticky: bool,
+}
+
+impl Default for IngressSpec {
+    fn default() -> Self {
+        IngressSpec::OFF
+    }
+}
+
+impl IngressSpec {
+    /// The defaults-off ingress: live views, no stickiness.
+    pub const OFF: IngressSpec = IngressSpec { window_s: 0.0, sticky: false };
+
+    /// Whether this spec changes routing at all.
+    pub fn is_off(&self) -> bool {
+        !self.sticky && self.window_s <= 0.0
+    }
+
+    /// Stable label fragment for logs/tables (e.g. `w5+sticky`).
+    pub fn name(&self) -> String {
+        if self.is_off() {
+            return "off".to_string();
+        }
+        let mut s = String::new();
+        if self.window_s > 0.0 {
+            s.push_str(&format!("w{:g}", self.window_s));
+        }
+        if self.sticky {
+            if !s.is_empty() {
+                s.push('+');
+            }
+            s.push_str("sticky");
+        }
+        s
+    }
+}
+
+/// Runtime ingress state owned by the cluster driver (one per run).
+#[derive(Debug)]
+pub struct Ingress {
+    spec: IngressSpec,
+    cap: usize,
+    /// session -> pinned replica.
+    pins: HashMap<u64, usize>,
+    /// Pin insertion order (front = oldest), for deterministic eviction.
+    order: VecDeque<u64>,
+    /// Frozen telemetry of the current window (empty until first use).
+    snapshot: Vec<ReplicaView>,
+    /// Window ordinal the snapshot belongs to.
+    window_id: Option<u64>,
+    sticky_hits: u64,
+    sticky_fallbacks: u64,
+    evictions: u64,
+}
+
+impl Ingress {
+    /// Fresh ingress state under `spec`.
+    pub fn new(spec: IngressSpec) -> Self {
+        Ingress::with_cap(spec, STICKY_CAP)
+    }
+
+    /// Fresh ingress with an explicit pin capacity (tests exercise the
+    /// eviction path without a 64Ki-session day).
+    pub fn with_cap(spec: IngressSpec, cap: usize) -> Self {
+        assert!(cap > 0);
+        Ingress {
+            spec,
+            cap,
+            pins: HashMap::new(),
+            order: VecDeque::new(),
+            snapshot: Vec::new(),
+            window_id: None,
+            sticky_hits: 0,
+            sticky_fallbacks: 0,
+            evictions: 0,
+        }
+    }
+
+    /// The configuration in force.
+    pub fn spec(&self) -> IngressSpec {
+        self.spec
+    }
+
+    /// Whether this ingress changes routing at all (see
+    /// [`IngressSpec::is_off`]).
+    pub fn is_off(&self) -> bool {
+        self.spec.is_off()
+    }
+
+    /// Turns routed via a live pin.
+    pub fn sticky_hits(&self) -> u64 {
+        self.sticky_hits
+    }
+
+    /// Turns whose pinned replica was down/shedding and fell back to
+    /// the router + failover order.
+    pub fn sticky_fallbacks(&self) -> u64 {
+        self.sticky_fallbacks
+    }
+
+    /// Pins evicted by the FIFO bound.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Live pins held.
+    pub fn pinned(&self) -> usize {
+        self.pins.len()
+    }
+
+    /// The views the router should see for an arrival at `now_s`:
+    /// live views verbatim when windowing is off; otherwise the frozen
+    /// window snapshot (queue depth + carbon telemetry), refreshed at
+    /// the first arrival of each window, merged with the always-live
+    /// per-request fields (`affinity_tokens`, `down`, `quality`,
+    /// `max_batch`).
+    pub fn window_views(&mut self, now_s: f64, live: &[ReplicaView]) -> Vec<ReplicaView> {
+        if self.spec.window_s <= 0.0 {
+            return live.to_vec();
+        }
+        let w = (now_s.max(0.0) / self.spec.window_s) as u64;
+        if self.window_id != Some(w) || self.snapshot.len() != live.len() {
+            self.snapshot = live.to_vec();
+            self.window_id = Some(w);
+        }
+        self.snapshot
+            .iter()
+            .zip(live)
+            .map(|(frozen, l)| ReplicaView {
+                queue_depth: frozen.queue_depth,
+                max_batch: l.max_batch,
+                ci_gpkwh: frozen.ci_gpkwh,
+                ci_forecast_gpkwh: frozen.ci_forecast_gpkwh,
+                affinity_tokens: l.affinity_tokens,
+                quality: l.quality,
+                down: l.down,
+            })
+            .collect()
+    }
+
+    /// Sticky pre-route: the pinned replica for `session`, if any and
+    /// not down. Returns `None` (and counts a fallback if a dead pin
+    /// existed) when the router should decide instead. `session == 0`
+    /// (sessionless workloads) never pins.
+    pub fn sticky_choice(&mut self, session: u64, views: &[ReplicaView]) -> Option<usize> {
+        if !self.spec.sticky || session == 0 {
+            return None;
+        }
+        match self.pins.get(&session) {
+            Some(&c) if c < views.len() && !views[c].down => {
+                self.sticky_hits += 1;
+                Some(c)
+            }
+            Some(_) => {
+                self.sticky_fallbacks += 1;
+                None
+            }
+            None => None,
+        }
+    }
+
+    /// Record where a session's turn actually landed: inserts or moves
+    /// the pin, evicting the oldest pin beyond the capacity bound.
+    pub fn record_placement(&mut self, session: u64, replica: usize) {
+        if !self.spec.sticky || session == 0 {
+            return;
+        }
+        if let Some(p) = self.pins.get_mut(&session) {
+            *p = replica;
+            return;
+        }
+        if self.pins.len() >= self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.pins.remove(&old);
+                self.evictions += 1;
+            }
+        }
+        self.pins.insert(session, replica);
+        self.order.push_back(session);
+    }
+}
+
+/// Observed session statistics for a cluster run, independent of the
+/// sticky mechanism (a stateless run is measured with the same ledger,
+/// so sticky-vs-stateless comparisons share one definition). Feeds the
+/// `sessions` / `sticky_fraction` / `carbon_per_session_g` columns of
+/// [`crate::cluster::ClusterResult`].
+#[derive(Debug, Default)]
+pub struct SessionLedger {
+    last: HashMap<u64, usize>,
+    turns: u64,
+    sticky_turns: u64,
+}
+
+impl SessionLedger {
+    /// Empty ledger.
+    pub fn new() -> Self {
+        SessionLedger::default()
+    }
+
+    /// Record one placed turn of `session` on `replica` (no-op for
+    /// `session == 0`).
+    pub fn observe(&mut self, session: u64, replica: usize) {
+        if session == 0 {
+            return;
+        }
+        self.turns += 1;
+        if let Some(prev) = self.last.insert(session, replica) {
+            if prev == replica {
+                self.sticky_turns += 1;
+            }
+        }
+    }
+
+    /// Distinct sessions observed.
+    pub fn sessions(&self) -> usize {
+        self.last.len()
+    }
+
+    /// Turns placed (nonzero sessions only).
+    pub fn turns(&self) -> u64 {
+        self.turns
+    }
+
+    /// Fraction of *repeat* turns (turns after a session's first) that
+    /// landed on the same replica as the previous turn; 1.0 when there
+    /// were no repeat turns.
+    pub fn sticky_fraction(&self) -> f64 {
+        let repeats = self.turns.saturating_sub(self.last.len() as u64);
+        if repeats == 0 {
+            1.0
+        } else {
+            self.sticky_turns as f64 / repeats as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(queue: usize, down: bool) -> ReplicaView {
+        ReplicaView {
+            queue_depth: queue,
+            max_batch: 8,
+            ci_gpkwh: 100.0,
+            ci_forecast_gpkwh: 100.0,
+            affinity_tokens: 0,
+            quality: 1.0,
+            down,
+        }
+    }
+
+    #[test]
+    fn off_spec_is_off() {
+        assert!(IngressSpec::OFF.is_off());
+        assert!(!IngressSpec { window_s: 5.0, sticky: false }.is_off());
+        assert!(!IngressSpec { window_s: 0.0, sticky: true }.is_off());
+        assert_eq!(IngressSpec::OFF.name(), "off");
+        assert_eq!(IngressSpec { window_s: 5.0, sticky: true }.name(), "w5+sticky");
+        assert_eq!(IngressSpec { window_s: 0.0, sticky: true }.name(), "sticky");
+    }
+
+    #[test]
+    fn windowing_freezes_queue_and_ci_within_a_window() {
+        let mut ing = Ingress::new(IngressSpec { window_s: 10.0, sticky: false });
+        let first = [view(1, false), view(5, false)];
+        let v0 = ing.window_views(0.0, &first);
+        assert_eq!(v0[0].queue_depth, 1);
+        // Mid-window: live queues moved, frozen view does not.
+        let moved = [view(9, false), view(0, false)];
+        let v1 = ing.window_views(4.0, &moved);
+        assert_eq!(v1[0].queue_depth, 1);
+        assert_eq!(v1[1].queue_depth, 5);
+        // Liveness overrides the frozen view mid-window.
+        let crashed = [view(9, true), view(0, false)];
+        let v2 = ing.window_views(6.0, &crashed);
+        assert!(v2[0].down);
+        assert_eq!(v2[0].queue_depth, 1);
+        // Next window refreshes.
+        let v3 = ing.window_views(10.0, &moved);
+        assert_eq!(v3[0].queue_depth, 9);
+    }
+
+    #[test]
+    fn no_window_returns_live_views() {
+        let mut ing = Ingress::new(IngressSpec { window_s: 0.0, sticky: true });
+        let live = [view(3, false)];
+        assert_eq!(ing.window_views(7.0, &live), live.to_vec());
+    }
+
+    #[test]
+    fn sticky_pins_and_falls_back_when_down() {
+        let mut ing = Ingress::new(IngressSpec { window_s: 0.0, sticky: true });
+        let healthy = [view(0, false), view(0, false)];
+        assert_eq!(ing.sticky_choice(7, &healthy), None); // no pin yet
+        ing.record_placement(7, 1);
+        assert_eq!(ing.sticky_choice(7, &healthy), Some(1));
+        assert_eq!(ing.sticky_hits(), 1);
+        // Pinned replica down -> router decides; re-pin where it lands.
+        let degraded = [view(0, false), view(0, true)];
+        assert_eq!(ing.sticky_choice(7, &degraded), None);
+        assert_eq!(ing.sticky_fallbacks(), 1);
+        ing.record_placement(7, 0);
+        assert_eq!(ing.sticky_choice(7, &healthy), Some(0));
+        // Sessionless requests never pin.
+        assert_eq!(ing.sticky_choice(0, &healthy), None);
+        ing.record_placement(0, 1);
+        assert_eq!(ing.pinned(), 1);
+    }
+
+    #[test]
+    fn pin_map_is_bounded_with_fifo_eviction() {
+        let mut ing =
+            Ingress::with_cap(IngressSpec { window_s: 0.0, sticky: true }, 3);
+        let healthy = [view(0, false), view(0, false)];
+        for s in 1..=5u64 {
+            ing.record_placement(s, 0);
+        }
+        assert_eq!(ing.pinned(), 3);
+        assert_eq!(ing.evictions(), 2);
+        // Oldest pins (1, 2) evicted; newest retained.
+        assert_eq!(ing.sticky_choice(1, &healthy), None);
+        assert_eq!(ing.sticky_choice(2, &healthy), None);
+        assert_eq!(ing.sticky_choice(5, &healthy), Some(0));
+        // Re-placing an evicted session re-inserts at the back.
+        ing.record_placement(1, 1);
+        assert_eq!(ing.pinned(), 3);
+        assert_eq!(ing.sticky_choice(3, &healthy), None); // 3 was oldest now
+        assert_eq!(ing.sticky_choice(1, &healthy), Some(1));
+    }
+
+    #[test]
+    fn updating_a_pin_does_not_duplicate_order_entries() {
+        let mut ing =
+            Ingress::with_cap(IngressSpec { window_s: 0.0, sticky: true }, 2);
+        ing.record_placement(1, 0);
+        ing.record_placement(1, 1); // update, not insert
+        ing.record_placement(2, 0);
+        assert_eq!(ing.pinned(), 2);
+        assert_eq!(ing.evictions(), 0);
+        ing.record_placement(3, 0); // evicts exactly one (session 1)
+        assert_eq!(ing.pinned(), 2);
+        assert_eq!(ing.evictions(), 1);
+        let healthy = [view(0, false), view(0, false)];
+        assert_eq!(ing.sticky_choice(1, &healthy), None);
+        assert_eq!(ing.sticky_choice(2, &healthy), Some(0));
+        assert_eq!(ing.sticky_choice(3, &healthy), Some(0));
+    }
+
+    #[test]
+    fn ledger_measures_stickiness() {
+        let mut led = SessionLedger::new();
+        led.observe(0, 0); // sessionless: ignored
+        led.observe(1, 0); // first turn
+        led.observe(1, 0); // repeat, same replica
+        led.observe(1, 1); // repeat, moved
+        led.observe(2, 1); // first turn of another session
+        led.observe(2, 1); // repeat, same
+        assert_eq!(led.sessions(), 2);
+        assert_eq!(led.turns(), 5);
+        // 3 repeat turns, 2 stayed put.
+        assert!((led.sticky_fraction() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(SessionLedger::new().sticky_fraction(), 1.0);
+    }
+}

@@ -29,6 +29,12 @@
 //!   ([`ClusterSpec::cache`]): private local/tiered stores, or one
 //!   fleet-level [`crate::cache::SharedStore`] pool whose buffered
 //!   writes the driver syncs at every router instant.
+//! * [`IngressSpec`] / [`Ingress`] — an open-loop ingress tier in front
+//!   of the router: routing telemetry frozen per arrival window, plus a
+//!   bounded session→replica sticky map for the agentic session
+//!   workload ([`crate::workload::SessionGen`]); sticky placement falls
+//!   back through [`failover_order`] when the pinned replica is
+//!   down/shedding. Defaults-off.
 //! * [`ClusterResult`] — per-replica outcomes plus fleet-level SLO /
 //!   carbon / hit-rate aggregates (exact merges, not re-simulations).
 //!
@@ -46,10 +52,12 @@
 //! The scenario layer sweeps this via [`crate::scenario::ClusterVariant`];
 //! the CLI exposes it as `greencache cluster`.
 
+mod ingress;
 mod parallel;
 mod router;
 mod sim;
 
+pub use ingress::{Ingress, IngressSpec, SessionLedger, STICKY_CAP};
 pub use parallel::effective_threads;
 pub use router::{
     failover_order, CarbonGreedy, LeastLoaded, ReplicaView, RoundRobin, Router, RouterPolicy,

@@ -110,6 +110,7 @@ pub trait Router {
 ///     new_tokens: 64,
 ///     output_tokens: 32,
 ///     arrival_s: 0.0,
+///     session: 0,
 /// };
 /// let views = [
 ///     ReplicaView {
@@ -529,6 +530,7 @@ mod tests {
             new_tokens,
             output_tokens: 10,
             arrival_s: 0.0,
+            session: 0,
         }
     }
 

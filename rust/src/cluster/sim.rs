@@ -20,8 +20,9 @@ use crate::sim::{
     Controller, FixedController, HourSample, IntervalObservation, ReplicaEngine, SimConfig,
     SimResult, Stepping,
 };
-use crate::workload::ArrivalGen;
+use crate::workload::{ArrivalGen, SessionVariant, Workload};
 
+use super::ingress::{Ingress, IngressSpec, SessionLedger};
 use super::parallel::{effective_threads, for_each, Pool, SyncPtr};
 use super::router::{failover_order, ReplicaView, Router, RouterPolicy};
 
@@ -173,6 +174,23 @@ pub struct ClusterSpec {
     /// independent per-replica control (or fixed-capacity baselines)
     /// the axis is inert.
     pub provision: ProvisionVariant,
+    /// Session-workload axis (`greencache cluster --sessions`):
+    /// [`SessionVariant::Agentic`] replaces the task's generator with
+    /// the ~1e6-user agentic session-tree workload
+    /// ([`crate::workload::SessionGen`]) — every request then carries a
+    /// nonzero session id for ingress stickiness and per-session carbon
+    /// attribution. [`SessionVariant::Off`] (the default) keeps the
+    /// task workload and every result byte-identical to the pre-session
+    /// driver.
+    pub sessions: SessionVariant,
+    /// Ingress-tier configuration (`greencache cluster --ingress-window
+    /// / --sticky`): windowed routing telemetry and session-affinity
+    /// stickiness in front of the router (see
+    /// [`crate::cluster::IngressSpec`]). [`IngressSpec::OFF`] (the
+    /// default) routes exactly like the pre-ingress driver. All ingress
+    /// state advances only at lockstep arrival instants, so thread
+    /// count and stepping mode stay byte-invariant.
+    pub ingress: IngressSpec,
 }
 
 impl ClusterSpec {
@@ -198,6 +216,8 @@ impl ClusterSpec {
             threads: 1,
             faults: FaultVariant::OFF,
             provision: ProvisionVariant::Off,
+            sessions: SessionVariant::Off,
+            ingress: IngressSpec::OFF,
         }
     }
 
@@ -316,6 +336,18 @@ pub struct ClusterResult {
     pub powered_down_replica_hours: f64,
     /// Fleet-wide completed provisioning boot cycles.
     pub boots: usize,
+    /// Distinct sessions observed in placed requests (0 when the
+    /// `sessions` axis is off — sessionless workloads carry id 0).
+    pub sessions: usize,
+    /// Fraction of repeat session turns placed on the same replica as
+    /// the session's previous turn (1.0 vacuously when there were no
+    /// repeat turns; 0.0 when the axis is off). The sticky-ingress
+    /// acceptance pin reads this.
+    pub sticky_fraction: f64,
+    /// Fleet-wide grams per session — the FUV functional-unit intensity
+    /// for chat workloads (total carbon ÷ distinct sessions; 0.0 when
+    /// the `sessions` axis is off).
+    pub carbon_per_session_g: f64,
 }
 
 impl ClusterResult {
@@ -375,6 +407,12 @@ impl ClusterResult {
             overloaded_replicas,
             powered_down_replica_hours,
             boots,
+            // Session stats are driver-observed (the ledger lives at the
+            // routing layer, not per replica); run_with fills them in
+            // when the sessions axis is on.
+            sessions: 0,
+            sticky_fraction: 0.0,
+            carbon_per_session_g: 0.0,
             replicas,
         }
     }
@@ -453,6 +491,12 @@ impl ClusterResult {
             self.token_hit_rate,
             self.fleet_mean_cache_tb,
         ));
+        if self.sessions > 0 {
+            out.push_str(&format!(
+                "sessions {:>8} sticky {:>6.3} g/session {:>9.3}\n",
+                self.sessions, self.sticky_fraction, self.carbon_per_session_g,
+            ));
+        }
         out
     }
 }
@@ -983,11 +1027,23 @@ impl ClusterSim {
             |h: usize| load_trace.hourly_rps[(base_hour + h).min(last_load)];
 
         // Same arrival/workload seeding as the single-node `simulate`, so
-        // a 1-replica fleet replays the same request stream.
-        let mut workload = spec.task.make_workload(spec.seed);
+        // a 1-replica fleet replays the same request stream. The
+        // sessions axis swaps the generator but NOT the seeds: a
+        // sticky-vs-stateless pair sharing a seed replays the identical
+        // agentic day, so only placement differs.
+        let mut workload: Box<dyn Workload> = spec
+            .sessions
+            .make_workload(spec.seed)
+            .unwrap_or_else(|| spec.task.make_workload(spec.seed));
         let mut rng = Rng::new(spec.seed ^ 0x51B_E11E);
         let mut arrivals = ArrivalGen::new(spec.seed);
         let mut router = spec.router.build();
+        // Ingress state (window snapshots, sticky pins) and the session
+        // ledger advance only at the lockstep arrival instants below —
+        // never from worker threads — so thread count and stepping mode
+        // cannot perturb them.
+        let mut ingress = Ingress::new(spec.ingress);
+        let mut ledger = SessionLedger::new();
         // A weighted router starts on the same a-priori split the
         // controllers' bootstrap histories were trained on (capacity-
         // proportional), instead of its standalone equal-split default —
@@ -1154,7 +1210,24 @@ impl ClusterSim {
                     }
                 })
                 .collect();
-            let choice = router.route(&req, &views).min(reps.len() - 1);
+            // Ingress sits in front of the router: within an arrival
+            // window the queue/CI telemetry is frozen (liveness and the
+            // per-request affinity probe stay live), and a sticky
+            // session pin bypasses the router entirely while its replica
+            // is up. With `--ingress` off, `rviews` IS the live view and
+            // the sticky probe is inert — the pre-ingress path, byte for
+            // byte.
+            let windowed = if spec.ingress.window_s > 0.0 {
+                Some(ingress.window_views(t, &views))
+            } else {
+                None
+            };
+            let rviews: &[ReplicaView] = windowed.as_deref().unwrap_or(&views);
+            let session = req.session;
+            let choice = match ingress.sticky_choice(session, rviews) {
+                Some(c) => c,
+                None => router.route(&req, rviews).min(reps.len() - 1),
+            };
             // Failover: if the routed replica cannot take the request
             // (down, or its admission control would shed), retry along
             // the documented total order — greenest-forecast first, then
@@ -1163,19 +1236,22 @@ impl ClusterSim {
             // choice (counted, and an SLO violation), never silently
             // dropped. With faults off nothing here fires: no replica is
             // down and `would_shed` is inert without a queue limit, so
-            // the placement is exactly the routed choice.
+            // the placement is exactly the routed choice. Sticky pins go
+            // through the same valve: a pinned-but-shedding replica
+            // falls back through the failover order, and the pin follows
+            // the request to wherever it actually lands.
             let placeable =
                 |c: usize, reps: &[Rep], views: &[ReplicaView]| -> bool {
                     !views[c].down && !reps[c].engine.would_shed()
                 };
-            let placed = if placeable(choice, &reps, &views) {
+            let placed = if placeable(choice, &reps, rviews) {
                 Some(choice)
             } else {
-                failover_order(&views)
+                failover_order(rviews)
                     .into_iter()
                     .filter(|&c| c != choice)
                     .take(MAX_FAILOVER_ATTEMPTS)
-                    .find(|&c| placeable(c, &reps, &views))
+                    .find(|&c| placeable(c, &reps, rviews))
             };
             match placed {
                 Some(c) => {
@@ -1186,6 +1262,8 @@ impl ClusterSim {
                     }
                     by_interval[interval] += 1;
                     reps[c].engine.inject(req);
+                    ingress.record_placement(session, c);
+                    ledger.observe(session, c);
                 }
                 None => reps[choice].engine.reject(),
             }
@@ -1301,7 +1379,17 @@ impl ClusterSim {
                 }
             })
             .collect();
-        ClusterResult::aggregate(outcomes)
+        let mut result = ClusterResult::aggregate(outcomes);
+        // Session statistics are observed at the routing layer, not per
+        // replica; attribute them after the fold. All three stay 0 when
+        // the sessions axis is off (no nonzero session ids exist).
+        if ledger.sessions() > 0 {
+            result.sessions = ledger.sessions();
+            result.sticky_fraction = ledger.sticky_fraction();
+            result.carbon_per_session_g =
+                result.total_carbon_g / ledger.sessions() as f64;
+        }
+        result
     }
 }
 
@@ -1887,6 +1975,96 @@ mod tests {
         assert_eq!(a.shed, 0);
         assert_eq!(a.crash_dropped, 0);
         assert_eq!(a.overloaded_replicas, 0);
+    }
+
+    /// The fr_miso fleet on the agentic session-tree day behind the
+    /// sticky windowed ingress tier — the canonical sessions scenario.
+    fn fr_miso_agentic_sticky(router: RouterPolicy) -> ClusterSpec {
+        let mut spec = fr_miso(router);
+        spec.sessions = SessionVariant::Agentic;
+        spec.ingress = IngressSpec {
+            window_s: 5.0,
+            sticky: true,
+        };
+        spec
+    }
+
+    #[test]
+    fn session_axis_off_is_inert() {
+        // Explicit OFF equals the default-constructed spec bit for bit,
+        // and an off run reports no session statistics: the sessions
+        // axis and ingress tier add zero RNG draws and zero routing
+        // perturbation to pre-session fleets.
+        let a = run(&fr_miso(RouterPolicy::CarbonGreedy));
+        let mut spec = fr_miso(RouterPolicy::CarbonGreedy);
+        spec.sessions = SessionVariant::Off;
+        spec.ingress = IngressSpec::OFF;
+        let b = run(&spec);
+        assert_identical(&a, &b, "sessions=off");
+        assert_eq!(a.sessions, 0);
+        assert_eq!(a.sticky_fraction, 0.0);
+        assert_eq!(a.carbon_per_session_g, 0.0);
+    }
+
+    #[test]
+    fn agentic_day_reports_session_statistics() {
+        let r = run(&fr_miso_agentic_sticky(RouterPolicy::RoundRobin));
+        assert!(r.sessions > 0, "agentic day must carry session ids");
+        assert!(
+            (0.0..=1.0).contains(&r.sticky_fraction),
+            "sticky fraction {} out of range",
+            r.sticky_fraction
+        );
+        assert!(
+            (r.carbon_per_session_g - r.total_carbon_g / r.sessions as f64).abs() < 1e-12,
+            "per-session carbon must be the exact FUV quotient"
+        );
+        // The table surfaces the sessions line only when the axis is on.
+        assert!(r.table().contains("sessions"), "{}", r.table());
+        assert!(!run(&fr_miso(RouterPolicy::RoundRobin)).table().contains("sessions"));
+    }
+
+    #[test]
+    fn sticky_ingress_is_thread_invariant() {
+        // All ingress/session state (window snapshots, the sticky map,
+        // the ledger) advances only at lockstep arrival instants, so a
+        // sticky agentic fleet must stay byte-identical at any thread
+        // count.
+        let mk = |threads: usize| {
+            let mut spec = fr_miso_agentic_sticky(RouterPolicy::CarbonGreedy);
+            spec.threads = threads;
+            run(&spec)
+        };
+        let seq = mk(1);
+        for threads in [2usize, 4, 8] {
+            assert_identical(&seq, &mk(threads), &format!("sticky threads={threads}"));
+        }
+    }
+
+    #[test]
+    fn sticky_ingress_stepping_modes_agree() {
+        // The ingress tier reads views only at arrival instants, which
+        // both stepping engines visit identically — so the sticky
+        // agentic fleet is stepping-invariant like every other axis.
+        let mut fast_spec = fr_miso_agentic_sticky(RouterPolicy::CarbonGreedy);
+        fast_spec.stepping = Stepping::FastForward;
+        let mut ref_spec = fr_miso_agentic_sticky(RouterPolicy::CarbonGreedy);
+        ref_spec.stepping = Stepping::Reference;
+        let fast = run(&fast_spec);
+        let slow = run(&ref_spec);
+        assert_eq!(fast.completed, slow.completed);
+        assert_eq!(fast.sessions, slow.sessions);
+        assert_eq!(
+            format!("{:?}", fast.sticky_fraction),
+            format!("{:?}", slow.sticky_fraction),
+            "sticky placement must be stepping-invariant"
+        );
+        for (f, s) in fast.replicas.iter().zip(&slow.replicas) {
+            assert_eq!(f.routed, s.routed, "routing must be stepping-invariant");
+        }
+        assert!((fast.total_carbon_g - slow.total_carbon_g).abs() < 1e-6);
+        let flip_tol = 2.0 / fast.completed.max(1) as f64 + 1e-12;
+        assert!((fast.slo_attainment - slow.slo_attainment).abs() <= flip_tol);
     }
 
     #[test]

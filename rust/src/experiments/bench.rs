@@ -22,7 +22,7 @@ use crate::cache::{
 };
 use crate::carbon::{CarbonAccountant, EmbodiedModel, PowerModel, TB};
 use crate::ci::Grid;
-use crate::cluster::{run_cluster, ClusterSpec, RouterPolicy};
+use crate::cluster::{run_cluster, ClusterSpec, IngressSpec, RouterPolicy};
 use crate::control::FleetPolicy;
 use crate::faults::FaultVariant;
 use crate::provision::ProvisionVariant;
@@ -31,7 +31,7 @@ use crate::rng::Rng;
 use crate::sim::{simulate, warm_cache, CostModel, FixedController, SimConfig, Stepping};
 use crate::util::bench::{black_box, write_json, Bench};
 use crate::util::json::Json;
-use crate::workload::{ConversationGen, ConversationParams, Request, TaskKind};
+use crate::workload::{ConversationGen, ConversationParams, Request, SessionVariant, TaskKind};
 
 use super::{Baseline, Model, ProfileStore, Task};
 
@@ -176,6 +176,7 @@ pub fn sim_report(quick: bool) -> Json {
         ("fleet", fleet_report(quick)),
         ("faults", faults_report(quick)),
         ("provision", provision_report(quick)),
+        ("sessions", sessions_report(quick)),
     ])
 }
 
@@ -188,7 +189,10 @@ pub fn sim_report(quick: bool) -> Json {
 /// crash+ssd+feed day vs its fault-free twin on the same fleet.
 /// v5 added the `provision` section to `BENCH_SIM.json`: a green
 /// power-planned low-load day vs its always-on twin on the same fleet.
-pub const BENCH_SCHEMA: &str = "greencache-bench-v5";
+/// v6 added the `sessions` section to `BENCH_SIM.json`: sticky windowed
+/// ingress vs stateless round-robin on the same seeded agentic
+/// session-tree day (token hit rate, total carbon, g/session).
+pub const BENCH_SCHEMA: &str = "greencache-bench-v6";
 
 /// The fleet-stepping scenario: one shared-pool fleet of N replicas
 /// spread round-robin over four grids, carbon-greedy routing, load
@@ -504,6 +508,114 @@ pub fn provision_report(quick: bool) -> Json {
     ])
 }
 
+/// The session-ingress smoke cell: a two-replica FR+MISO fleet serving
+/// the seeded agentic session-tree day under plain round-robin routing,
+/// replayed once stateless and once behind the sticky windowed ingress
+/// tier on the same workload seed — equal capacity, identical arrivals,
+/// so the delta is pure session affinity: pinned sessions keep their
+/// prefix caches warm on one replica instead of slicing every
+/// conversation across the fleet.
+pub fn run_session_cell(
+    sticky: bool,
+    hours: usize,
+    profiles: &mut ProfileStore,
+) -> (crate::cluster::ClusterResult, f64) {
+    let mut spec = ClusterSpec::homogeneous(
+        Model::Llama70B,
+        Task::Conversation,
+        &[Grid::Fr, Grid::Miso],
+        RouterPolicy::RoundRobin,
+    )
+    .quick();
+    spec.hours = hours;
+    spec.baseline = Baseline::FullCache;
+    spec.fixed_rps = Some(0.6);
+    spec.sessions = SessionVariant::Agentic;
+    if sticky {
+        spec.ingress = IngressSpec {
+            window_s: 5.0,
+            sticky: true,
+        };
+    }
+    let t0 = Instant::now();
+    let r = run_cluster(&spec, profiles);
+    (r, t0.elapsed().as_secs_f64())
+}
+
+fn session_cell_json(r: &crate::cluster::ClusterResult, wall_s: f64) -> Json {
+    Json::obj(vec![
+        ("completed", Json::Num(r.completed as f64)),
+        ("sessions", Json::Num(r.sessions as f64)),
+        ("sticky_fraction", Json::Num(r.sticky_fraction)),
+        ("token_hit_rate", Json::Num(r.token_hit_rate)),
+        ("slo_attainment", Json::Num(r.slo_attainment)),
+        ("total_carbon_g", Json::Num(r.total_carbon_g)),
+        ("carbon_per_session_g", Json::Num(r.carbon_per_session_g)),
+        ("wall_s", Json::Num(wall_s)),
+    ])
+}
+
+/// Measure the session-ingress smoke cell and return the `sessions`
+/// section of `BENCH_SIM.json`: the stateless and sticky runs of the
+/// same agentic day side by side, plus the hit-rate lift and carbon
+/// saving the sticky ingress tier buys at equal capacity. Panics if the
+/// sticky run does not strictly beat stateless round-robin on both
+/// token hit rate and total carbon — the bench doubles as the PR's
+/// acceptance check.
+pub fn sessions_report(quick: bool) -> Json {
+    let hours = if quick { 2 } else { 4 };
+    let mut profiles = ProfileStore::new(true);
+    let (stateless, stateless_wall) = run_session_cell(false, hours, &mut profiles);
+    let (sticky, sticky_wall) = run_session_cell(true, hours, &mut profiles);
+    assert!(sticky.completed > 0, "sticky fleet wedged (zero completions)");
+    assert!(
+        sticky.token_hit_rate > stateless.token_hit_rate,
+        "sticky ingress must lift token hit rate at equal capacity: \
+         {:.4} !> {:.4}",
+        sticky.token_hit_rate,
+        stateless.token_hit_rate
+    );
+    assert!(
+        sticky.total_carbon_g < stateless.total_carbon_g,
+        "sticky ingress must cut total carbon at equal capacity: \
+         {:.1} g !< {:.1} g",
+        sticky.total_carbon_g,
+        stateless.total_carbon_g
+    );
+    for (name, r) in [("stateless", &stateless), ("sticky", &sticky)] {
+        println!(
+            "bench sim/sessions[{name:<9}] completed={} sessions={} hit={:.4} \
+             carbon={:.1}g g/session={:.3}",
+            r.completed, r.sessions, r.token_hit_rate, r.total_carbon_g, r.carbon_per_session_g
+        );
+    }
+    println!(
+        "    -> sticky ingress: +{:.4} hit rate, {:.1} g saved ({:.1}%)",
+        sticky.token_hit_rate - stateless.token_hit_rate,
+        stateless.total_carbon_g - sticky.total_carbon_g,
+        100.0 * (stateless.total_carbon_g - sticky.total_carbon_g)
+            / stateless.total_carbon_g.max(1e-9)
+    );
+    Json::obj(vec![
+        ("fleet", Json::Str("FR+MISO".into())),
+        ("router", Json::Str("round-robin".into())),
+        ("workload", Json::Str("agentic".into())),
+        ("ingress_window_s", Json::Num(5.0)),
+        ("hours", Json::Num(hours as f64)),
+        ("rps", Json::Num(0.6)),
+        ("stateless", session_cell_json(&stateless, stateless_wall)),
+        ("sticky", session_cell_json(&sticky, sticky_wall)),
+        (
+            "hit_rate_lift",
+            Json::Num(sticky.token_hit_rate - stateless.token_hit_rate),
+        ),
+        (
+            "carbon_saved_g",
+            Json::Num(stateless.total_carbon_g - sticky.total_carbon_g),
+        ),
+    ])
+}
+
 fn churn_request(ctx: u64, version: u32, context: u32) -> Request {
     Request {
         id: 0,
@@ -514,6 +626,7 @@ fn churn_request(ctx: u64, version: u32, context: u32) -> Request {
         new_tokens: 50,
         output_tokens: 100,
         arrival_s: 0.0,
+        session: 0,
     }
 }
 
@@ -892,6 +1005,36 @@ mod tests {
         assert!(
             green.powered_down_replica_hours > 0.0,
             "low-load day must power surplus replicas down"
+        );
+    }
+
+    #[test]
+    fn session_cell_sticky_beats_stateless() {
+        // Tiny variant of the report cell; the in-report asserts already
+        // check the full quick cell. This pins the PR's acceptance
+        // ordering: sticky ingress strictly lifts the fleet token hit
+        // rate AND cuts total carbon on the same agentic day at equal
+        // capacity.
+        let mut profiles = ProfileStore::new(true);
+        let (stateless, _) = run_session_cell(false, 2, &mut profiles);
+        let (sticky, _) = run_session_cell(true, 2, &mut profiles);
+        assert!(sticky.completed > 0, "sticky fleet must keep serving");
+        assert!(stateless.sessions > 0, "agentic day must carry session ids");
+        assert!(
+            sticky.token_hit_rate > stateless.token_hit_rate,
+            "sticky {:.4} !> stateless {:.4}",
+            sticky.token_hit_rate,
+            stateless.token_hit_rate
+        );
+        assert!(
+            sticky.total_carbon_g < stateless.total_carbon_g,
+            "sticky {:.1} g !< stateless {:.1} g",
+            sticky.total_carbon_g,
+            stateless.total_carbon_g
+        );
+        assert!(
+            sticky.carbon_per_session_g > 0.0,
+            "per-session attribution must be filled when the axis is on"
         );
     }
 

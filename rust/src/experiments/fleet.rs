@@ -22,6 +22,13 @@
 //! replica is still served — which is the cross-replica sharing item
 //! from the ROADMAP made measurable.
 //!
+//! The **session-ingress section** replays the seeded agentic
+//! session-tree day ([`crate::workload::SessionGen`]) through the same
+//! two-replica fleet twice — stateless round-robin vs the sticky
+//! windowed ingress tier ([`crate::cluster::Ingress`]) — at equal
+//! capacity, so the fleet token-hit-rate lift and per-session carbon
+//! saving are attributable to session affinity alone.
+//!
 //! The **scale-sweep section** raises the replica axis to 16/32/64
 //! (cycling the four-grid mix) with each cell's lockstep stepping fanned
 //! out over every core (`ScenarioSpec::threads = 0`) — byte-identical
@@ -43,10 +50,11 @@
 //! arrives.
 
 use super::*;
-use crate::cluster::RouterPolicy;
+use crate::cluster::{IngressSpec, RouterPolicy};
 use crate::control::FleetPolicy;
 use crate::scenario::{run_specs, ClusterVariant, Matrix};
 use crate::util::csv::Csv;
+use crate::workload::SessionVariant;
 
 /// The evaluated fleet shapes: (label, replica grids).
 fn fleets() -> Vec<(&'static str, Vec<Grid>)> {
@@ -113,6 +121,7 @@ pub fn fleet(quick: bool) -> Csv {
         "cache",
         "planner",
         "carbon_per_request_g",
+        "carbon_per_session_g",
         "slo_attainment",
         "token_hit_rate",
         "mean_cache_tb",
@@ -204,6 +213,7 @@ pub fn fleet(quick: bool) -> Csv {
             c.spec.cache.name().into(),
             c.spec.fleet.name().into(),
             format!("{:.4}", c.carbon_per_request_g),
+            format!("{:.4}", c.carbon_per_session_g),
             format!("{:.4}", c.slo_attainment),
             format!("{:.4}", c.token_hit_rate),
             format!("{:.2}", c.mean_cache_tb),
@@ -298,6 +308,71 @@ pub fn fleet(quick: bool) -> Csv {
         }
     }
 
+    // Headline 4: sticky windowed ingress vs stateless round-robin on
+    // the seeded agentic session-tree day. Same fleet, same seed, same
+    // router — only the ingress tier differs, so the hit-rate lift and
+    // carbon saving at equal capacity are pure session affinity (pinned
+    // sessions keep their prefix caches warm on one replica instead of
+    // slicing every conversation across the fleet).
+    println!("  -- session ingress (agentic session-tree day) --");
+    let mut sess_specs = base()
+        .baselines(&[Baseline::FullCache])
+        .caches(&[CacheVariant::Local])
+        .clusters(&[Some(ClusterVariant::new(
+            &[Grid::Fr, Grid::Miso],
+            RouterPolicy::RoundRobin,
+        ))])
+        .sessions(&[SessionVariant::Agentic])
+        .hours(if quick { 2 } else { 6 })
+        .fixed_rps(Some(0.6))
+        .expand();
+    let mut sticky = sess_specs[0].clone();
+    sticky.ingress = IngressSpec {
+        window_s: 5.0,
+        sticky: true,
+    };
+    sess_specs.push(sticky);
+    let sess = run_specs(&sess_specs, 1);
+    for (c, ingress) in sess.cells.iter().zip(["stateless", "sticky"]) {
+        let cv = c.spec.cluster.as_ref().expect("fleet cells only");
+        println!(
+            "  {:<20} {:<13} {:<11} {:<7} {:<11}: {:>8.3} g/req  {:>7.3} g/session  SLO {:>5.1}%  hit {:>5.3}  ({} reqs)",
+            "2x(FR+MISO)",
+            ingress,
+            c.spec.baseline.name(),
+            c.spec.cache.name(),
+            c.spec.fleet.name(),
+            c.carbon_per_request_g,
+            c.carbon_per_session_g,
+            c.slo_attainment * 100.0,
+            c.token_hit_rate,
+            c.completed,
+        );
+        csv.row(&[
+            "2x(FR+MISO)/agentic".into(),
+            format!("{}+{}", cv.router.name(), ingress),
+            c.spec.baseline.name().into(),
+            c.spec.cache.name().into(),
+            c.spec.fleet.name().into(),
+            format!("{:.4}", c.carbon_per_request_g),
+            format!("{:.4}", c.carbon_per_session_g),
+            format!("{:.4}", c.slo_attainment),
+            format!("{:.4}", c.token_hit_rate),
+            format!("{:.2}", c.mean_cache_tb),
+            c.completed.to_string(),
+        ]);
+    }
+    if let [stateless, sticky] = &sess.cells[..] {
+        println!(
+            "  {:<20} agentic    : sticky ingress hit {:>5.3} vs stateless {:>5.3} ({:+.1} pp), carbon saved {:>5.1}%",
+            "2x(FR+MISO)",
+            sticky.token_hit_rate,
+            stateless.token_hit_rate,
+            (sticky.token_hit_rate - stateless.token_hit_rate) * 100.0,
+            saving_pct(stateless.carbon_per_request_g, sticky.carbon_per_request_g),
+        );
+    }
+
     // Scale sweep: 16/32/64-replica shared-pool fleets under
     // carbon-greedy routing, each cell stepped in parallel
     // (`cell_threads = 0` = one worker per core) and run one cell at a
@@ -349,6 +424,7 @@ pub fn fleet(quick: bool) -> Csv {
             c.spec.cache.name().into(),
             c.spec.fleet.name().into(),
             format!("{:.4}", c.carbon_per_request_g),
+            format!("{:.4}", c.carbon_per_session_g),
             format!("{:.4}", c.slo_attainment),
             format!("{:.4}", c.token_hit_rate),
             format!("{:.2}", c.mean_cache_tb),

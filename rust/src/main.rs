@@ -19,6 +19,13 @@
 //!                                     (replica power planning: power replicas
 //!                                      down in dirty/low-load intervals, boot
 //!                                      ahead of forecast peaks)
+//!                     [--sessions off|agentic]
+//!                                     (agentic session-tree workload: ~1e6
+//!                                      users, branching resumes, compaction)
+//!                     [--ingress-window S]  (batch routing telemetry over
+//!                                            S-second arrival windows)
+//!                     [--sticky]      (session-affinity ingress: pin sessions
+//!                                      to replicas, failover when down)
 //!                     [--fleet per-replica|green|all]
 //!                     [--threads N]   (lockstep replica stepping; 1 = sequential,
 //!                                      0 = one per core — byte-identical results)
@@ -32,6 +39,7 @@
 //!                     [--prefetches off,green]
 //!                     [--faults off,crash+ssd,all]  (fault-injection axis)
 //!                     [--provisions off,static,green]  (power-planning axis)
+//!                     [--sessions off,agentic]  (agentic session-workload axis)
 //!                     [--cell-threads N]   (within-cell replica stepping)
 //!                     [--hours H] [--threads N] [--seed S] [--quick]
 //! greencache profile  [--task conv|doc04|doc07] [--quick]
@@ -42,7 +50,7 @@
 
 use greencache::cache::{CacheVariant, PolicyKind, PrefetchMode};
 use greencache::ci::Grid;
-use greencache::cluster::{run_cluster, ClusterSpec, RouterPolicy};
+use greencache::cluster::{run_cluster, ClusterSpec, IngressSpec, RouterPolicy};
 use greencache::control::FleetPolicy;
 use greencache::coordinator::server::{Server, ServerConfig};
 use greencache::experiments::{Baseline, Model, ProfileStore, Task};
@@ -51,7 +59,9 @@ use greencache::provision::ProvisionVariant;
 use greencache::rng::Rng;
 use greencache::runtime::{default_artifact_dir, Engine};
 use greencache::scenario::{Matrix, MatrixRunner, ScenarioSpec};
-use greencache::workload::{ConversationGen, ConversationParams, Request, Workload};
+use greencache::workload::{
+    ConversationGen, ConversationParams, Request, SessionVariant, Workload,
+};
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
 struct Args {
@@ -165,6 +175,13 @@ fn parse_provision(s: &str) -> ProvisionVariant {
     ProvisionVariant::parse(s).unwrap_or_else(|| {
         eprintln!("unknown provision mode {s}, using off");
         ProvisionVariant::Off
+    })
+}
+
+fn parse_sessions(s: &str) -> SessionVariant {
+    SessionVariant::parse(s).unwrap_or_else(|| {
+        eprintln!("unknown session variant {s}, using off");
+        SessionVariant::Off
     })
 }
 
@@ -340,6 +357,14 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
     let prefetch = parse_prefetch(args.get("prefetch").unwrap_or("off"));
     let faults = parse_faults(args.get("faults").unwrap_or("off"));
     let provision = parse_provision(args.get("provision").unwrap_or("off"));
+    let sessions = parse_sessions(args.get("sessions").unwrap_or("off"));
+    let ingress = IngressSpec {
+        window_s: args
+            .get("ingress-window")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.0),
+        sticky: args.bool("sticky"),
+    };
     let quick = args.bool("quick");
     let routers: Vec<RouterPolicy> = match args.get("router").unwrap_or("all") {
         "all" => RouterPolicy::all().to_vec(),
@@ -378,6 +403,8 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
             spec.prefetch = prefetch;
             spec.faults = faults;
             spec.provision = provision;
+            spec.sessions = sessions;
+            spec.ingress = ingress;
             spec.fleet = *fleet;
             spec.threads = args.usize("threads", 1);
             spec.hours = args.usize("hours", 24);
@@ -386,7 +413,7 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
             }
             spec.fixed_rps = fixed_rps;
             println!(
-                "fleet {} x{} | {} | {} | router {} | cache {} | fleet-ctl {} | prefetch {} | faults {} | provision {} ({}h)...",
+                "fleet {} x{} | {} | {} | router {} | cache {} | fleet-ctl {} | prefetch {} | faults {} | provision {} | sessions {} | ingress {} ({}h)...",
                 spec.fleet_label(),
                 spec.replicas.len(),
                 task.name(),
@@ -397,6 +424,8 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
                 prefetch.name(),
                 faults.name(),
                 provision.name(),
+                sessions.name(),
+                ingress.name(),
                 spec.hours
             );
             let result = run_cluster(&spec, &mut profiles);
@@ -412,6 +441,12 @@ fn cmd_cluster(args: &Args) -> greencache::Result<()> {
                 println!(
                     "provision: {:.2} replica-hours powered down, {} boots, quality {:.3}\n",
                     result.powered_down_replica_hours, result.boots, result.mean_quality
+                );
+            }
+            if result.sessions > 0 {
+                println!(
+                    "sessions: {} distinct, sticky fraction {:.3}, {:.3} g/session\n",
+                    result.sessions, result.sticky_fraction, result.carbon_per_session_g
                 );
             }
             summary.push((*router, *fleet, result.total_carbon_g, result.slo_attainment));
@@ -514,6 +549,10 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
     if provisions.iter().any(|p| !p.is_off()) && clusters == vec![None] {
         eprintln!("note: --provisions only plans power for fleet cells; pass --cluster too");
     }
+    let sessions = parse_list(args, "sessions", "off", parse_sessions);
+    if sessions.iter().any(|s| !s.is_off()) && clusters == vec![None] {
+        eprintln!("note: --sessions only swaps fleet-cell workloads; pass --cluster too");
+    }
 
     let matrix = Matrix::new()
         .models(&models)
@@ -527,6 +566,7 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         .prefetches(&prefetches)
         .faults(&faults)
         .provisions(&provisions)
+        .sessions(&sessions)
         .hours(args.usize("hours", 24))
         .quick(args.bool("quick"))
         .seed(args.usize("seed", 20_25) as u64)
@@ -539,7 +579,7 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         verbose: true,
     };
     println!(
-        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies x {} caches x {} fleets x {} prefetches x {} faults x {} provisions)...",
+        "running {} cells ({} models x {} tasks x {} grids x {} baselines x {} policies x {} caches x {} fleets x {} prefetches x {} faults x {} provisions x {} sessions)...",
         specs.len(),
         models.len(),
         tasks.len(),
@@ -550,7 +590,8 @@ fn cmd_matrix(args: &Args) -> greencache::Result<()> {
         fleets.len(),
         prefetches.len(),
         faults.len(),
-        provisions.len()
+        provisions.len(),
+        sessions.len()
     );
     let result = runner.run(&specs);
     print!("{}", result.table());

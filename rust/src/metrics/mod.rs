@@ -355,6 +355,52 @@ mod tests {
     }
 
     #[test]
+    fn merge_is_exact_under_heavily_imbalanced_splits() {
+        // The sticky-ingress fleet produces exactly this shape: one
+        // pinned replica serves almost every turn while its peers see a
+        // handful of failover strays. A 1-request tracker merged into a
+        // 997-request one must still yield the exact request-weighted
+        // attainment, quality mean, and sample count — no drift from
+        // the tiny side being absorbed into the huge one, in either
+        // merge direction.
+        let slo = Slo { ttft_s: 2.0, tpot_s: 0.2, rho: 0.9 };
+        let mut flat = SloTracker::new(slo);
+        let mut big = SloTracker::new(slo);
+        for i in 0..997u32 {
+            // Every 10th request violates TTFT; deterministic pattern so
+            // the expected attainment is exact.
+            let ttft = if i % 10 == 0 { 3.0 } else { 1.0 };
+            big.record(ttft, 0.1);
+            big.record_quality(1.0);
+            flat.record(ttft, 0.1);
+            flat.record_quality(1.0);
+        }
+        let mut tiny = SloTracker::new(slo);
+        tiny.record(1.0, 0.5); // TPOT violation
+        tiny.record_quality(0.6);
+        flat.record(1.0, 0.5);
+        flat.record_quality(0.6);
+
+        let mut ab = big.clone();
+        ab.merge(&tiny);
+        let mut ba = tiny.clone();
+        ba.merge(&big);
+        for merged in [&ab, &ba] {
+            assert_eq!(merged.total(), flat.total());
+            assert_eq!(merged.total(), 998);
+            assert!((merged.attainment() - flat.attainment()).abs() < 1e-15);
+            assert!((merged.mean_quality() - flat.mean_quality()).abs() < 1e-15);
+        }
+        // The exact expected values, not just flat-equivalence: 100
+        // violations out of 997 on the big side plus the stray.
+        assert!((ab.attainment() - 897.0 / 998.0).abs() < 1e-15);
+        assert!((ab.mean_quality() - (997.0 + 0.6) / 998.0).abs() < 1e-15);
+        // The stray's sample is not lost in the merged reservoirs.
+        assert_eq!(ab.tpot.len(), 998);
+        assert_eq!(ab.tpot.max(), 0.5);
+    }
+
+    #[test]
     fn latency_merge_matches_flat_recording() {
         let mut flat = LatencyStats::new();
         let mut x = LatencyStats::new();

@@ -7,12 +7,13 @@ use crate::control::FleetPolicy;
 use crate::experiments::{Baseline, Model, Task};
 use crate::faults::FaultVariant;
 use crate::provision::ProvisionVariant;
+use crate::workload::SessionVariant;
 
 /// A declarative scenario matrix. Every axis is a list of values; the
 /// expansion is their cartesian product in a fixed order (model-major,
 /// then task, grid, baseline, policy, cache, cluster, fleet, prefetch,
-/// faults, provision), so cell order — and therefore the golden table —
-/// is stable.
+/// faults, provision, sessions), so cell order — and therefore the
+/// golden table — is stable.
 ///
 /// # Example
 ///
@@ -78,6 +79,13 @@ pub struct Matrix {
     /// so the provisioning carbon delta is directly readable. A
     /// fleet-level axis — single-node cells ignore it.
     pub provisions: Vec<ProvisionVariant>,
+    /// Sessions axis (`greencache matrix --sessions`): whether each
+    /// fleet cell replaces its task workload with the million-user
+    /// agentic session-tree generator ([`crate::workload::SessionGen`]).
+    /// Off/agentic pairs replay from the identical base seed (the axis
+    /// never shapes workload seeds). A fleet-level axis — single-node
+    /// cells ignore it.
+    pub sessions: Vec<SessionVariant>,
     /// Evaluated horizon per cell, hours.
     pub hours: usize,
     /// Shrunken warm-up/profile smoke mode.
@@ -113,6 +121,7 @@ impl Matrix {
             prefetches: vec![PrefetchMode::Off],
             faults: vec![FaultVariant::OFF],
             provisions: vec![ProvisionVariant::Off],
+            sessions: vec![SessionVariant::Off],
             hours: 24,
             quick: false,
             base_seed: 20_25,
@@ -189,6 +198,12 @@ impl Matrix {
         self
     }
 
+    /// Set the sessions axis (off / agentic session-tree workload).
+    pub fn sessions(mut self, v: &[SessionVariant]) -> Self {
+        self.sessions = v.to_vec();
+        self
+    }
+
     /// Set the per-cell horizon, hours.
     pub fn hours(mut self, h: usize) -> Self {
         self.hours = h;
@@ -245,6 +260,7 @@ impl Matrix {
             * self.prefetches.len()
             * self.faults.len()
             * self.provisions.len()
+            * self.sessions.len()
     }
 
     /// Whether the expansion would be empty.
@@ -267,26 +283,29 @@ impl Matrix {
                                         for &prefetch in &self.prefetches {
                                             for &fault in &self.faults {
                                                 for &provision in &self.provisions {
-                                                    let mut spec = ScenarioSpec::new(
-                                                        model, task, grid, baseline,
-                                                    );
-                                                    spec.policy = policy;
-                                                    spec.hours = self.hours;
-                                                    spec.seed = seed;
-                                                    spec.interval_s = self.interval_s;
-                                                    spec.fixed_rps = self.fixed_rps;
-                                                    spec.fixed_ci = self.fixed_ci;
-                                                    spec.cache = cache;
-                                                    spec.cluster = cluster.clone();
-                                                    spec.fleet = fleet;
-                                                    spec.threads = self.cell_threads;
-                                                    spec.prefetch = prefetch;
-                                                    spec.faults = fault;
-                                                    spec.provision = provision;
-                                                    if self.quick {
-                                                        spec = spec.quick();
+                                                    for &session in &self.sessions {
+                                                        let mut spec = ScenarioSpec::new(
+                                                            model, task, grid, baseline,
+                                                        );
+                                                        spec.policy = policy;
+                                                        spec.hours = self.hours;
+                                                        spec.seed = seed;
+                                                        spec.interval_s = self.interval_s;
+                                                        spec.fixed_rps = self.fixed_rps;
+                                                        spec.fixed_ci = self.fixed_ci;
+                                                        spec.cache = cache;
+                                                        spec.cluster = cluster.clone();
+                                                        spec.fleet = fleet;
+                                                        spec.threads = self.cell_threads;
+                                                        spec.prefetch = prefetch;
+                                                        spec.faults = fault;
+                                                        spec.provision = provision;
+                                                        spec.sessions = session;
+                                                        if self.quick {
+                                                            spec = spec.quick();
+                                                        }
+                                                        cells.push(spec);
                                                     }
-                                                    cells.push(spec);
                                                 }
                                             }
                                         }
@@ -490,6 +509,33 @@ mod tests {
                 w[1].label()
             );
             assert!(!w[0].label().contains("provision="), "{}", w[0].label());
+        }
+    }
+
+    #[test]
+    fn sessions_axis_multiplies_cells_and_shares_seeds() {
+        use crate::cluster::RouterPolicy;
+        let m = small()
+            .clusters(&[Some(ClusterVariant::new(
+                &[Grid::Fr, Grid::Miso],
+                RouterPolicy::RoundRobin,
+            ))])
+            .sessions(&SessionVariant::all());
+        assert_eq!(m.len(), 8 * 2);
+        let cells = m.expand();
+        // The sessions axis is innermost: consecutive pairs differ only
+        // by session variant and share the workload seed, so the off and
+        // agentic cells are directly comparable.
+        for w in cells.chunks(2) {
+            assert_eq!(w[0].seed, w[1].seed);
+            assert!(w[0].sessions.is_off());
+            assert_eq!(w[1].sessions, SessionVariant::Agentic);
+            assert!(
+                w[1].label().ends_with("/sessions=agentic"),
+                "{}",
+                w[1].label()
+            );
+            assert!(!w[0].label().contains("sessions="), "{}", w[0].label());
         }
     }
 

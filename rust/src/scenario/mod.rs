@@ -28,11 +28,12 @@ pub use runner::{run_specs, CellResult, MatrixResult, MatrixRunner};
 
 use crate::cache::{CacheVariant, PolicyKind, PrefetchMode};
 use crate::ci::Grid;
-use crate::cluster::{ClusterSpec, ReplicaSpec, RouterPolicy};
+use crate::cluster::{ClusterSpec, IngressSpec, ReplicaSpec, RouterPolicy};
 use crate::control::FleetPolicy;
 use crate::experiments::{Baseline, DayScenario, Model, Task};
 use crate::faults::FaultVariant;
 use crate::provision::ProvisionVariant;
+use crate::workload::SessionVariant;
 
 /// The cluster shape of a fleet cell: one replica per grid, plus the
 /// routing policy, plus (optionally) per-replica models for
@@ -172,6 +173,22 @@ pub struct ScenarioSpec {
     /// byte-identical to pre-provisioning builds; it never shapes the
     /// workload seed.
     pub provision: ProvisionVariant,
+    /// Session workload substitution (the matrix sessions axis):
+    /// [`SessionVariant::Agentic`] replaces the cell's task workload
+    /// with the million-user agentic session-tree generator
+    /// ([`crate::workload::SessionGen`]). A fleet-level axis — single-
+    /// node cells ignore it, like `fleet`, `faults` and `provision`.
+    /// [`SessionVariant::Off`] (the default) keeps labels and results
+    /// byte-identical to pre-session builds; the variant never shapes
+    /// the workload seed, so sticky and stateless cells replay the
+    /// identical agentic day.
+    pub sessions: SessionVariant,
+    /// Ingress tier of a fleet cell ([`ClusterSpec::ingress`]): arrival-
+    /// window batched routing telemetry plus session-affinity
+    /// stickiness. [`IngressSpec::OFF`] (the default) is byte-inert; it
+    /// is a serving knob, not a workload axis, so it never appears in
+    /// [`ScenarioSpec::label`].
+    pub ingress: IngressSpec,
 }
 
 impl ScenarioSpec {
@@ -196,6 +213,8 @@ impl ScenarioSpec {
             prefetch: PrefetchMode::Off,
             faults: FaultVariant::OFF,
             provision: ProvisionVariant::Off,
+            sessions: SessionVariant::Off,
+            ingress: IngressSpec::OFF,
         }
     }
 
@@ -246,6 +265,8 @@ impl ScenarioSpec {
             prefetch: self.prefetch,
             faults: self.faults,
             provision: self.provision,
+            sessions: self.sessions,
+            ingress: self.ingress,
         })
     }
 
@@ -272,8 +293,11 @@ impl ScenarioSpec {
     /// stays unlabeled, so pre-planner golden tables are unchanged),
     /// prefetch-enabled cells `/prefetch=green` (off stays unlabeled),
     /// fault-injected cells `/faults=crash+ssd+feed` etc. (off stays
-    /// unlabeled), and provisioning-enabled fleet cells
-    /// `/provision=static` or `/provision=green` (off stays unlabeled).
+    /// unlabeled), provisioning-enabled fleet cells
+    /// `/provision=static` or `/provision=green` (off stays unlabeled),
+    /// and agentic-session cells `/sessions=agentic` (off stays
+    /// unlabeled; the ingress knob is a serving parameter and never
+    /// labels).
     pub fn label(&self) -> String {
         let mut s = format!(
             "{}/{}/{}/{}",
@@ -309,6 +333,10 @@ impl ScenarioSpec {
         if !self.provision.is_off() {
             s.push_str("/provision=");
             s.push_str(self.provision.name());
+        }
+        if !self.sessions.is_off() {
+            s.push_str("/sessions=");
+            s.push_str(self.sessions.name());
         }
         s
     }
@@ -577,6 +605,37 @@ mod tests {
         // A control-plane axis must never shape the workload seed: off
         // and green cells replay the identical day.
         assert_eq!(spec.to_cluster_spec().unwrap().seed, spec.seed);
+    }
+
+    #[test]
+    fn sessions_axis_lowers_and_labels() {
+        use crate::cluster::RouterPolicy;
+        let mut spec = ScenarioSpec::new(
+            Model::Llama70B,
+            Task::Conversation,
+            Grid::Es,
+            Baseline::FullCache,
+        );
+        spec.cluster = Some(ClusterVariant::new(
+            &[Grid::Fr, Grid::Miso],
+            RouterPolicy::RoundRobin,
+        ));
+        assert_eq!(spec.sessions, SessionVariant::Off);
+        assert_eq!(spec.ingress, IngressSpec::OFF);
+        assert!(!spec.label().contains("sessions="), "off is the unlabeled default");
+        assert!(spec.to_cluster_spec().unwrap().sessions.is_off());
+        assert!(spec.to_cluster_spec().unwrap().ingress.is_off());
+        spec.sessions = SessionVariant::Agentic;
+        spec.ingress = IngressSpec { window_s: 5.0, sticky: true };
+        assert!(spec.label().ends_with("/sessions=agentic"), "{}", spec.label());
+        let cs = spec.to_cluster_spec().unwrap();
+        assert_eq!(cs.sessions, SessionVariant::Agentic);
+        assert_eq!(cs.ingress, IngressSpec { window_s: 5.0, sticky: true });
+        // The ingress knob is a serving parameter, never a label axis,
+        // and the sessions axis never shapes the workload seed: sticky
+        // and stateless cells replay the identical agentic day.
+        assert!(!spec.label().contains("ingress"), "{}", spec.label());
+        assert_eq!(cs.seed, spec.seed);
     }
 
     #[test]

@@ -32,6 +32,10 @@ pub struct CellResult {
     pub slo_attainment: f64,
     /// Token-level cache hit rate (§6.3.2).
     pub token_hit_rate: f64,
+    /// Fleet-wide grams per distinct session — the FUV per-session
+    /// intensity. `0` for single-node cells and whenever the sessions
+    /// axis is off (no session ids to attribute to).
+    pub carbon_per_session_g: f64,
     /// Mean TTFT, seconds.
     pub mean_ttft_s: f64,
     /// Mean TPOT, seconds.
@@ -219,6 +223,7 @@ fn run_cell(spec: &ScenarioSpec, profiles: &mut ProfileStore) -> CellResult {
             mean_cache_tb: fleet.fleet_mean_cache_tb,
             slo_attainment: fleet.slo_attainment,
             token_hit_rate: fleet.token_hit_rate,
+            carbon_per_session_g: fleet.carbon_per_session_g,
             mean_ttft_s: fleet.mean_ttft_s,
             mean_tpot_s: fleet.mean_tpot_s,
             n_decisions: 0,
@@ -239,6 +244,7 @@ fn run_cell(spec: &ScenarioSpec, profiles: &mut ProfileStore) -> CellResult {
         mean_cache_tb: day.mean_cache_tb,
         slo_attainment: day.sim.slo.attainment(),
         token_hit_rate: day.sim.token_hit_rate,
+        carbon_per_session_g: 0.0,
         mean_ttft_s: day.sim.mean_ttft_s,
         mean_tpot_s: day.sim.mean_tpot_s,
         n_decisions: day.decisions.len(),

@@ -149,6 +149,7 @@ impl ConversationGen {
             new_tokens: user_tokens,
             output_tokens: reply_tokens,
             arrival_s: 0.0,
+            session: 0,
         };
         self.next_req += 1;
 

@@ -136,6 +136,7 @@ impl DocumentGen {
             new_tokens: q,
             output_tokens: a,
             arrival_s: 0.0,
+            session: 0,
         };
         self.next_req += 1;
         req

@@ -8,6 +8,12 @@
 //!   documents (average context 5880 tokens, Fig. 4b) chosen under a
 //!   Zipf popularity with α ∈ {0.4, 0.7} (§6.1).
 //!
+//! * **Agentic sessions** (`session`): a seeded ~1e6-user population
+//!   whose sessions branch from recorded cache breakpoints and
+//!   auto-compact at ~80% of the context window, rewriting the prefix
+//!   lineage mid-day — the [`crate::scenario::ScenarioSpec`] `sessions`
+//!   axis substitutes it for either task's generator.
+//!
 //! Arrivals are Poisson at rates given by a [`crate::load::LoadTrace`]
 //! (§6.1). The same [`Request`] type feeds both the calibrated simulator
 //! (paper-scale token counts) and the real-model runtime (token counts
@@ -16,10 +22,12 @@
 mod conversation;
 mod document;
 mod request;
+mod session;
 
 pub use conversation::{ConversationGen, ConversationParams};
 pub use document::{DocumentGen, DocumentParams};
-pub use request::{ArrivalGen, Request, TaskKind};
+pub use request::{mix_prefix_key, ArrivalGen, Request, TaskKind};
+pub use session::{SessionGen, SessionParams, SessionVariant};
 
 use crate::rng::Rng;
 
@@ -46,6 +54,15 @@ impl Workload for ConversationGen {
 impl Workload for DocumentGen {
     fn task(&self) -> TaskKind {
         TaskKind::DocQa
+    }
+    fn next_request(&mut self, rng: &mut Rng) -> Request {
+        self.next(rng)
+    }
+}
+
+impl Workload for SessionGen {
+    fn task(&self) -> TaskKind {
+        TaskKind::Conversation
     }
     fn next_request(&mut self, rng: &mut Rng) -> Request {
         self.next(rng)

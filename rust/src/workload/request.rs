@@ -28,7 +28,7 @@ impl TaskKind {
 /// the fresh suffix (the user's latest message / question). The prompt the
 /// model prefills is `context_tokens + new_tokens` long; on a full cache
 /// hit only `new_tokens` must be computed.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     /// Globally unique request id.
     pub id: u64,
@@ -48,6 +48,14 @@ pub struct Request {
     pub output_tokens: u32,
     /// Arrival time, seconds from trace start (set by [`ArrivalGen`]).
     pub arrival_s: f64,
+    /// Session the request belongs to (`0` = sessionless — the
+    /// conversation/document generators predate sessions). Nonzero ids
+    /// come from the agentic session workload
+    /// ([`crate::workload::SessionGen`]) and drive the cluster ingress
+    /// layer's session-affinity stickiness; note the session id is NOT
+    /// the cache key — one session spans several [`Request::prefix_key`]
+    /// lineages across auto-compactions.
+    pub session: u64,
 }
 
 impl Request {
@@ -60,9 +68,49 @@ impl Request {
     /// would be) cached — the cluster router's *affinity* key. Requests
     /// sharing a `prefix_key` hit the same cache entry, so routing them to
     /// the same replica preserves prefix reuse across a fleet.
+    ///
+    /// # Collision model
+    ///
+    /// The key is the generator-assigned `context_id`, and distinctness
+    /// is the *generator's* obligation:
+    ///
+    /// * The conversation/document generators assign small sequential
+    ///   ids from disjoint dense ranges — collision-free by
+    ///   construction, and a workload run uses exactly one generator.
+    /// * The agentic session workload must name ~1e6 users × many
+    ///   sessions × several compaction lineages, so it derives
+    ///   `context_id` with [`mix_prefix_key`], which mixes the **user
+    ///   id** into a SplitMix64-finalized 64-bit key. Keys are then
+    ///   uniform over 2^64 and the birthday bound applies: for `n`
+    ///   distinct lineages the collision probability is ≈ n²/2^65 —
+    ///   about 2.7e-6 even at n = 1e7 lineages, far below anything a
+    ///   day-long fleet run can produce (the birthday-bound unit test
+    ///   below pins distinctness at the 2e5 scale).
     pub fn prefix_key(&self) -> u64 {
         self.context_id
     }
+}
+
+/// SplitMix64 finalizer: a bijective avalanche mix over `u64`.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Derive a well-mixed 64-bit prefix key from a `(user, session,
+/// lineage)` triple — the agentic session workload's `context_id`
+/// derivation (see [`Request::prefix_key`] for the collision model).
+///
+/// The user id is folded in first so that fleet-scale user populations
+/// (~1e6) spread over the whole key space even when session ordinals
+/// are small and sequential; each compaction bumps `lineage`, which
+/// yields an unrelated key and so deliberately orphans the old cached
+/// prefix. Chained finalizer applications keep the map injective-ish
+/// (each stage is bijective; collisions only arise from the XOR folds,
+/// at the uniform birthday rate).
+pub fn mix_prefix_key(user: u64, session: u64, lineage: u32) -> u64 {
+    mix64(mix64(mix64(user.wrapping_add(0x5E55_0417)) ^ session) ^ lineage as u64)
 }
 
 /// Poisson arrival process over a varying hourly rate (§6.1: "The request
@@ -128,8 +176,43 @@ mod tests {
             new_tokens: 50,
             output_tokens: 100,
             arrival_s: 0.0,
+            session: 0,
         };
         assert_eq!(r.prompt_tokens(), 1050);
+    }
+
+    #[test]
+    fn mix_prefix_key_birthday_bound() {
+        // Keys over a structured (user, session, lineage) population —
+        // exactly the shape SessionGen emits — must be collision-free
+        // at the 2e5 scale: the birthday bound for 200k uniform 64-bit
+        // keys is ~1e-9, so a single collision here means the mix is
+        // broken, not unlucky.
+        use std::collections::HashSet;
+        let mut keys = HashSet::new();
+        let mut rng = Rng::new(0xB1BD);
+        for session in 1..=50_000u64 {
+            let user = rng.below(1_000_000);
+            for lineage in 0..4u32 {
+                assert!(
+                    keys.insert(mix_prefix_key(user, session, lineage)),
+                    "collision at user={user} session={session} lineage={lineage}"
+                );
+            }
+        }
+        assert_eq!(keys.len(), 200_000);
+    }
+
+    #[test]
+    fn mix_prefix_key_separates_each_input() {
+        // Flipping any one coordinate must change the key (the lineage
+        // bump is what invalidates a compacted prefix).
+        let k = mix_prefix_key(7, 9, 0);
+        assert_ne!(k, mix_prefix_key(8, 9, 0));
+        assert_ne!(k, mix_prefix_key(7, 10, 0));
+        assert_ne!(k, mix_prefix_key(7, 9, 1));
+        // And it is deterministic.
+        assert_eq!(k, mix_prefix_key(7, 9, 0));
     }
 
     #[test]

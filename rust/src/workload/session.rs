@@ -1,0 +1,449 @@
+//! Agentic session-tree workload: a seeded ~1e6-user population whose
+//! sessions branch, record cache breakpoints, and auto-compact.
+//!
+//! The conversation generator models a small pool of linear chats; real
+//! agentic traffic (the ROADMAP's "heavy traffic from millions of
+//! users") looks different in exactly the ways that stress a prefix
+//! cache:
+//!
+//! * **Population scale** — users are drawn from a Zipf-distributed
+//!   population of [`SessionParams::users`] (default 1e6), so
+//!   sessions-per-user is heavy-tailed without keeping per-user state:
+//!   heavy users simply win the draw for new sessions more often.
+//! * **Branching resume points** — every few turns a session records an
+//!   explicit cache breakpoint `(turn, context_tokens)`; a later turn
+//!   may resume from one instead of the tip ([`SessionParams::branch_p`]),
+//!   turning the session into a tree whose shared trunk is exactly the
+//!   reusable KV prefix.
+//! * **Auto-compaction** — when the context passes
+//!   [`SessionParams::compact_frac`] of the window, the harness rewrites
+//!   the history into a short summary: the context collapses to
+//!   [`SessionParams::compact_keep`] tokens and the **lineage** counter
+//!   bumps, which changes the emitted `context_id` (via
+//!   [`crate::workload::mix_prefix_key`]) and so deliberately
+//!   invalidates the long cached prefix mid-day. Breakpoints belong to
+//!   a lineage and are dropped with it.
+//!
+//! Every emitted [`Request`] carries a nonzero [`Request::session`] id,
+//! which the cluster ingress layer ([`crate::cluster::IngressSpec`])
+//! uses for session-affinity stickiness. Determinism: the generator
+//! advances only inside [`SessionGen::next`], which the cluster driver
+//! calls single-threaded at lockstep arrival instants — thread count
+//! and stepping mode cannot observe intermediate state.
+
+use crate::rng::{Rng, Zipf};
+use crate::workload::request::{mix_prefix_key, Request, TaskKind};
+
+/// The session-workload scenario axis: off by default (existing
+/// conversation/document generators, byte-identical goldens), or the
+/// agentic session-tree generator. Mirrors the fault/provision axis
+/// pattern: stable names, defaults-off, swept by the matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SessionVariant {
+    /// No session model: the scenario's task workload runs unchanged
+    /// and every request carries `session == 0`.
+    #[default]
+    Off,
+    /// Replace the task workload with [`SessionGen`] under
+    /// [`SessionParams::default`] (the ~1e6-user agentic day).
+    Agentic,
+}
+
+impl SessionVariant {
+    /// Whether this is the defaults-off variant.
+    pub fn is_off(self) -> bool {
+        matches!(self, SessionVariant::Off)
+    }
+
+    /// Stable name used in scenario labels and CLI flags.
+    pub fn name(self) -> &'static str {
+        match self {
+            SessionVariant::Off => "off",
+            SessionVariant::Agentic => "agentic",
+        }
+    }
+
+    /// Parse a CLI name ([`SessionVariant::name`]); `None` if unknown.
+    pub fn parse(s: &str) -> Option<SessionVariant> {
+        match s {
+            "off" => Some(SessionVariant::Off),
+            "agentic" => Some(SessionVariant::Agentic),
+            _ => None,
+        }
+    }
+
+    /// Every variant, in sweep order.
+    pub fn all() -> [SessionVariant; 2] {
+        [SessionVariant::Off, SessionVariant::Agentic]
+    }
+
+    /// The workload this variant substitutes for the scenario task, or
+    /// `None` when off (the driver keeps the task's own generator).
+    pub fn make_workload(self, seed: u64) -> Option<Box<dyn crate::workload::Workload>> {
+        match self {
+            SessionVariant::Off => None,
+            SessionVariant::Agentic => {
+                Some(Box::new(SessionGen::new(SessionParams::default(), seed)))
+            }
+        }
+    }
+}
+
+/// Breakpoints kept per session (oldest dropped first); bounds per-slot
+/// memory so a million-session day stays flat.
+const MAX_BREAKPOINTS: usize = 6;
+
+/// Parameters of the agentic session-tree model.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionParams {
+    /// Distinct users in the seeded population; new sessions draw their
+    /// user Zipf-distributed over this range (heavy-tailed
+    /// sessions/user). The default is the ROADMAP's million-user scale.
+    pub users: usize,
+    /// Zipf exponent of the user-popularity draw.
+    pub user_alpha: f64,
+    /// Concurrently live sessions (the arrival stream multiplexes over
+    /// this pool, like the conversation generator's pool).
+    pub pool: usize,
+    /// Per-turn probability a picked session continues rather than
+    /// retiring (geometric session length, mean `1/(1-continue_p)`).
+    pub continue_p: f64,
+    /// Probability a continuing turn resumes from a recorded breakpoint
+    /// instead of the tip (the tree branch).
+    pub branch_p: f64,
+    /// A cache breakpoint is recorded every this-many turns.
+    pub breakpoint_every: u32,
+    /// Lognormal μ of the user-turn tokens.
+    pub user_mu: f64,
+    /// Lognormal σ of the user-turn tokens.
+    pub user_sigma: f64,
+    /// Lognormal μ of the agent/tool result tokens appended per turn
+    /// (agentic tool output dominates context growth).
+    pub tool_mu: f64,
+    /// Lognormal σ of the agent/tool result tokens.
+    pub tool_sigma: f64,
+    /// Context-window size, tokens.
+    pub max_context: u32,
+    /// Auto-compaction fires when the context passes this fraction of
+    /// [`SessionParams::max_context`] (the ~80% threshold).
+    pub compact_frac: f64,
+    /// Tokens the compacted summary retains.
+    pub compact_keep: u32,
+}
+
+impl Default for SessionParams {
+    fn default() -> Self {
+        SessionParams {
+            users: 1_000_000,
+            user_alpha: 1.1,
+            pool: 1024,
+            continue_p: 0.92,
+            branch_p: 0.08,
+            breakpoint_every: 3,
+            user_mu: 4.3,
+            user_sigma: 0.8,
+            tool_mu: 5.8,
+            tool_sigma: 0.7,
+            max_context: 8192,
+            compact_frac: 0.8,
+            compact_keep: 768,
+        }
+    }
+}
+
+impl SessionParams {
+    /// A small, fast-compacting configuration for unit tests: tiny
+    /// population and context window so compactions and branches occur
+    /// within a few hundred draws.
+    pub fn tiny() -> Self {
+        SessionParams {
+            users: 10_000,
+            pool: 64,
+            max_context: 2048,
+            compact_keep: 256,
+            ..SessionParams::default()
+        }
+    }
+}
+
+/// One live session (a slot in the pool).
+#[derive(Debug, Clone)]
+struct SessState {
+    /// Zipf-drawn user id in `0..users`.
+    user: u64,
+    /// 1-based session ordinal — the nonzero [`Request::session`].
+    session: u64,
+    /// Turns taken (monotone; becomes `context_version`).
+    turn: u32,
+    /// Compaction counter: bumping it rewrites the prefix-key lineage.
+    lineage: u32,
+    /// Context tokens at the tip (or the resumed branch point).
+    context_tokens: u32,
+    /// Recorded cache breakpoints `(turn, context_tokens)` within the
+    /// current lineage, oldest first.
+    breakpoints: Vec<(u32, u32)>,
+}
+
+/// The agentic session-tree generator (see the module docs).
+#[derive(Debug, Clone)]
+pub struct SessionGen {
+    params: SessionParams,
+    users: Zipf,
+    pool: Vec<SessState>,
+    next_session: u64,
+    next_req: u64,
+    compactions: u64,
+    branches: u64,
+}
+
+impl SessionGen {
+    /// Build the generator: the Zipf user population plus a pool of
+    /// fresh sessions, all derived from `seed`.
+    pub fn new(params: SessionParams, seed: u64) -> Self {
+        assert!(params.users > 0 && params.pool > 0);
+        let users = Zipf::new(params.users, params.user_alpha);
+        let mut gen = SessionGen {
+            params,
+            users,
+            pool: Vec::with_capacity(params.pool),
+            next_session: 1,
+            next_req: 0,
+            compactions: 0,
+            branches: 0,
+        };
+        let mut rng = Rng::new(seed ^ 0x5E55_0417);
+        for _ in 0..params.pool {
+            let fresh = gen.fresh(&mut rng);
+            gen.pool.push(fresh);
+        }
+        gen
+    }
+
+    fn fresh(&mut self, rng: &mut Rng) -> SessState {
+        let user = self.users.sample(rng) as u64;
+        let session = self.next_session;
+        self.next_session += 1;
+        SessState {
+            user,
+            session,
+            turn: 0,
+            lineage: 0,
+            context_tokens: 0,
+            breakpoints: Vec::new(),
+        }
+    }
+
+    /// Auto-compactions fired so far (lineage rewrites).
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    /// Branch-resume turns taken so far.
+    pub fn branches(&self) -> u64 {
+        self.branches
+    }
+
+    /// Sessions started so far (pool init included).
+    pub fn sessions_started(&self) -> u64 {
+        self.next_session - 1
+    }
+
+    /// Emit the next turn. `arrival_s` is left 0 (the driver stamps it).
+    pub fn next(&mut self, rng: &mut Rng) -> Request {
+        let idx = rng.below(self.pool.len() as u64) as usize;
+        if self.pool[idx].turn > 0 && rng.f64() >= self.params.continue_p {
+            self.pool[idx] = self.fresh(rng);
+        }
+        let p = self.params;
+        let mut branched = false;
+        let mut compacted = false;
+        let req = {
+            let s = &mut self.pool[idx];
+            if !s.breakpoints.is_empty() && rng.f64() < p.branch_p {
+                // Resume from a recorded breakpoint: the context drops
+                // back, but the lineage (and so the prefix key) is
+                // unchanged — the trunk up to the breakpoint still hits.
+                let bi = rng.below(s.breakpoints.len() as u64) as usize;
+                s.context_tokens = s.breakpoints[bi].1;
+                branched = true;
+            }
+            let user_tokens = (rng.lognormal(p.user_mu, p.user_sigma) as u32).clamp(1, 2048);
+            let tool_tokens = (rng.lognormal(p.tool_mu, p.tool_sigma) as u32).clamp(1, 4096);
+            let req = Request {
+                id: self.next_req,
+                task: TaskKind::Conversation,
+                context_id: mix_prefix_key(s.user, s.session, s.lineage),
+                context_version: s.turn,
+                context_tokens: s.context_tokens,
+                new_tokens: user_tokens,
+                output_tokens: tool_tokens,
+                arrival_s: 0.0,
+                session: s.session,
+            };
+            s.turn += 1;
+            let grown = s
+                .context_tokens
+                .saturating_add(user_tokens)
+                .saturating_add(tool_tokens);
+            if (grown as f64) >= p.compact_frac * p.max_context as f64 {
+                // Auto-compaction: the history is rewritten into a short
+                // summary under a NEW lineage — the next turn's prefix
+                // key differs and the long cached prefix is dead.
+                s.lineage += 1;
+                s.context_tokens = p.compact_keep.min(grown);
+                s.breakpoints.clear();
+                compacted = true;
+            } else {
+                s.context_tokens = grown.min(p.max_context);
+                if s.turn % p.breakpoint_every == 0 {
+                    if s.breakpoints.len() >= MAX_BREAKPOINTS {
+                        s.breakpoints.remove(0);
+                    }
+                    s.breakpoints.push((s.turn, s.context_tokens));
+                }
+            }
+            req
+        };
+        self.next_req += 1;
+        self.branches += branched as u64;
+        self.compactions += compacted as u64;
+        req
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::{HashMap, HashSet};
+
+    fn drive(params: SessionParams, seed: u64, n: usize) -> (SessionGen, Vec<Request>) {
+        let mut gen = SessionGen::new(params, seed);
+        let mut rng = Rng::new(seed ^ 0x77);
+        let reqs = (0..n).map(|_| gen.next(&mut rng)).collect();
+        (gen, reqs)
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let (_, a) = drive(SessionParams::tiny(), 9, 500);
+        let (_, b) = drive(SessionParams::tiny(), 9, 500);
+        assert_eq!(a, b);
+        let (_, c) = drive(SessionParams::tiny(), 10, 500);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn every_request_carries_a_nonzero_session() {
+        let (_, reqs) = drive(SessionParams::tiny(), 1, 300);
+        assert!(reqs.iter().all(|r| r.session != 0));
+    }
+
+    #[test]
+    fn context_and_version_are_consistent_within_a_lineage() {
+        // Within one (session, prefix_key) run, context_version is
+        // strictly increasing and the context never exceeds the window.
+        let (_, reqs) = drive(SessionParams::tiny(), 3, 2000);
+        let mut last: HashMap<(u64, u64), u32> = HashMap::new();
+        for r in &reqs {
+            assert!(r.context_tokens <= SessionParams::tiny().max_context);
+            if let Some(&v) = last.get(&(r.session, r.prefix_key())) {
+                assert!(r.context_version > v, "version not monotone");
+            }
+            last.insert((r.session, r.prefix_key()), r.context_version);
+        }
+    }
+
+    #[test]
+    fn compaction_rewrites_the_prefix_key_and_shrinks_context() {
+        let (gen, reqs) = drive(SessionParams::tiny(), 5, 3000);
+        assert!(gen.compactions() > 0, "tiny params must compact within 3000 turns");
+        // Find a session whose prefix key changed mid-stream and check
+        // the turn after the rewrite restarts from a short context.
+        let mut last: HashMap<u64, (u64, u32)> = HashMap::new();
+        let mut saw_rewrite = false;
+        for r in &reqs {
+            if let Some(&(key, ctx)) = last.get(&r.session) {
+                if r.prefix_key() != key {
+                    saw_rewrite = true;
+                    assert!(
+                        r.context_tokens <= SessionParams::tiny().compact_keep,
+                        "post-compaction context {} > summary budget",
+                        r.context_tokens
+                    );
+                    assert!(r.context_tokens < ctx, "compaction must shrink the context");
+                }
+            }
+            last.insert(r.session, (r.prefix_key(), r.context_tokens));
+        }
+        assert!(saw_rewrite, "no lineage rewrite observed in the request stream");
+    }
+
+    #[test]
+    fn branches_resume_below_the_tip() {
+        let (gen, reqs) = drive(SessionParams::tiny(), 7, 3000);
+        assert!(gen.branches() > 0, "tiny params must branch within 3000 turns");
+        // A branch shows up as a turn whose context dropped while the
+        // prefix key stayed — the trunk is still hittable.
+        let mut last: HashMap<u64, (u64, u32)> = HashMap::new();
+        let mut saw_branch = false;
+        for r in &reqs {
+            if let Some(&(key, ctx)) = last.get(&r.session) {
+                if r.prefix_key() == key && r.context_tokens < ctx {
+                    saw_branch = true;
+                }
+            }
+            last.insert(r.session, (r.prefix_key(), r.context_tokens));
+        }
+        assert!(saw_branch, "no same-lineage context drop observed");
+    }
+
+    #[test]
+    fn population_is_heavy_tailed() {
+        let mut gen = SessionGen::new(SessionParams::tiny(), 11);
+        let mut rng = Rng::new(42);
+        let mut users: HashMap<u64, u64> = HashMap::new();
+        for _ in 0..4000 {
+            let r = gen.next(&mut rng);
+            // Attribute by re-deriving the user from pool state is
+            // overkill; count sessions per user at creation instead.
+            let _ = r;
+        }
+        for s in &gen.pool {
+            *users.entry(s.user).or_insert(0) += 1;
+        }
+        // Heavy tail: many distinct users, and rank 0 appears more than
+        // a mid-rank user across the live pool (statistically robust at
+        // alpha=1.1 over 64 slots is too small; just check distinctness).
+        assert!(users.len() > 10);
+    }
+
+    #[test]
+    fn distinct_sessions_emit_distinct_prefix_keys() {
+        let (_, reqs) = drive(SessionParams::tiny(), 13, 4000);
+        // (session, lineage-run) -> key must be injective across the day.
+        let mut by_key: HashMap<u64, u64> = HashMap::new();
+        for r in &reqs {
+            if let Some(&sess) = by_key.get(&r.prefix_key()) {
+                assert_eq!(sess, r.session, "prefix-key collision across sessions");
+            }
+            by_key.insert(r.prefix_key(), r.session);
+        }
+        assert!(by_key.len() > 64, "expected many distinct lineage keys");
+        let sessions: HashSet<u64> = reqs.iter().map(|r| r.session).collect();
+        assert!(sessions.len() > 64);
+    }
+
+    #[test]
+    fn variant_axis_contract() {
+        assert!(SessionVariant::Off.is_off());
+        assert!(!SessionVariant::Agentic.is_off());
+        assert_eq!(SessionVariant::parse("agentic"), Some(SessionVariant::Agentic));
+        assert_eq!(SessionVariant::parse("off"), Some(SessionVariant::Off));
+        assert_eq!(SessionVariant::parse("nope"), None);
+        for v in SessionVariant::all() {
+            assert_eq!(SessionVariant::parse(v.name()), Some(v));
+        }
+        assert!(SessionVariant::Off.make_workload(1).is_none());
+        assert!(SessionVariant::Agentic.make_workload(1).is_some());
+    }
+}

@@ -31,6 +31,7 @@ fn req(ctx: u64, task: TaskKind, context: u32, new: u32, arrival_s: f64) -> Requ
         new_tokens: new,
         output_tokens: 20,
         arrival_s,
+        session: 0,
     }
 }
 

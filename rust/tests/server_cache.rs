@@ -34,6 +34,7 @@ fn req(ctx: u64, version: u32, context: u32, new: u32) -> Request {
         new_tokens: new,
         output_tokens: 8,
         arrival_s: 0.0,
+        session: 0,
     }
 }
 

@@ -1,0 +1,281 @@
+//! Acceptance suite for the agentic session-ingress subsystem
+//! (`greencache::workload::SessionGen` + `greencache::cluster::Ingress`
+//! + the cluster driver's windowed sticky routing).
+//!
+//! Pins, per the session-ingress redesign's acceptance criteria:
+//!
+//! * on a seeded agentic day at equal fleet capacity, sticky windowed
+//!   ingress achieves a strictly higher fleet token hit rate AND
+//!   strictly lower total gCO2 than stateless round-robin on the same
+//!   replayed arrival stream;
+//! * sticky routing keeps at least 90% of a session's follow-up turns
+//!   on the replica that served its first turn, on a healthy fleet;
+//! * auto-compaction rewrites the prefix-key lineage, so the turn that
+//!   follows a compaction misses the cache entirely while steady-state
+//!   turns keep hitting — the context-rot cliff is observable in hit
+//!   tokens, not just in counters;
+//! * the sticky agentic fleet is byte-identical at 1/2/4/8 lockstep
+//!   threads (all ingress and session state advances at arrival
+//!   instants, a pure function of the arrival stream), and both
+//!   stepping engines place every request identically;
+//! * the axis is defaults-off: a spec with `sessions`/`ingress` left at
+//!   their defaults is byte-identical to one with `off` set explicitly,
+//!   and the golden-pinned matrix table is unchanged — pre-PR
+//!   `cluster_golden` snapshots stay valid byte for byte.
+
+use greencache::cache::{CacheStore, CacheVariant, LocalStore, PolicyKind};
+use greencache::ci::Grid;
+use greencache::cluster::{
+    run_cluster, ClusterResult, ClusterSpec, IngressSpec, RouterPolicy,
+};
+use greencache::experiments::{Baseline, Model, ProfileStore, Task};
+use greencache::rng::Rng;
+use greencache::scenario::{run_specs, ClusterVariant, Matrix};
+use greencache::sim::Stepping;
+use greencache::workload::{SessionGen, SessionParams, SessionVariant};
+use std::collections::HashMap;
+
+/// The ingress fleet: two equal-capacity replicas on FR (clean) and
+/// MISO (dirty), round-robin routing on both arms so the sticky-vs-
+/// stateless delta is pure placement, FullCache per replica (no
+/// controller noise), and a healthy sub-capacity rate (no shedding, no
+/// faults — every sticky pin is honourable).
+fn agentic_fleet(sticky: bool, threads: usize) -> ClusterSpec {
+    let mut spec = ClusterSpec::homogeneous(
+        Model::Llama70B,
+        Task::Conversation,
+        &[Grid::Fr, Grid::Miso],
+        RouterPolicy::RoundRobin,
+    )
+    .quick();
+    spec.baseline = Baseline::FullCache;
+    spec.hours = 4;
+    spec.fixed_rps = Some(0.35);
+    spec.sessions = SessionVariant::Agentic;
+    if sticky {
+        spec.ingress = IngressSpec { window_s: 5.0, sticky: true };
+    }
+    spec.threads = threads;
+    spec
+}
+
+fn run(spec: &ClusterSpec) -> ClusterResult {
+    let mut profiles = ProfileStore::new(true);
+    run_cluster(spec, &mut profiles)
+}
+
+#[test]
+fn sticky_ingress_lifts_hit_rate_and_cuts_carbon_at_equal_capacity() {
+    // The headline acceptance pin. Stateless round-robin alternates a
+    // session's turns across both replicas, so each replica's cache
+    // entry for the session lags two turns behind the context; the
+    // sticky map pins the session, the entry lags one turn, and the
+    // whole prior context hits. Fewer prefill tokens recomputed is less
+    // energy is less carbon — on the same arrival stream, at the same
+    // fleet capacity.
+    let stateless = run(&agentic_fleet(false, 1));
+    let sticky = run(&agentic_fleet(true, 1));
+    assert!(stateless.completed > 0, "stateless fleet wedged");
+    assert_eq!(
+        sticky.completed, stateless.completed,
+        "ingress must not reshape the replayed day"
+    );
+    assert_eq!(sticky.sessions, stateless.sessions, "same session tree");
+    assert!(stateless.sessions > 0, "agentic day must report sessions");
+    assert!(
+        sticky.token_hit_rate > stateless.token_hit_rate,
+        "sticky ingress must lift the fleet token hit rate: \
+         sticky {:.4} !> stateless {:.4}",
+        sticky.token_hit_rate,
+        stateless.token_hit_rate
+    );
+    assert!(
+        sticky.total_carbon_g < stateless.total_carbon_g,
+        "sticky ingress must cut total carbon: sticky {:.1} g !< stateless {:.1} g",
+        sticky.total_carbon_g,
+        stateless.total_carbon_g
+    );
+    // Same sessions count, less total carbon: the FUV moves with it.
+    assert!(sticky.carbon_per_session_g < stateless.carbon_per_session_g);
+    assert!(
+        sticky.sticky_fraction > stateless.sticky_fraction,
+        "the sticky map must visibly raise same-replica follow-up turns"
+    );
+}
+
+#[test]
+fn sticky_keeps_sessions_pinned_on_a_healthy_fleet() {
+    // With no faults and no shedding at 0.35 rps, the pinned replica is
+    // always placeable, so nearly every follow-up turn lands where the
+    // session's first turn did. `sticky_fraction` counts exactly that:
+    // same-replica follow-ups over all follow-ups.
+    let r = run(&agentic_fleet(true, 1));
+    assert!(r.completed > 0, "sticky fleet wedged");
+    assert!(r.sessions > 0);
+    assert!(
+        r.sticky_fraction >= 0.9,
+        "sticky ingress must keep >= 90% of follow-up turns on one replica, \
+         got {:.3}",
+        r.sticky_fraction
+    );
+}
+
+#[test]
+fn compaction_breaks_the_prefix_on_the_following_turn() {
+    // Drive the generator straight through a local store big enough to
+    // never evict, so hit tokens are a pure function of key lineage. A
+    // compaction bumps the lineage — the next turn of that session
+    // carries a prefix key the store has never admitted and must miss
+    // outright, while steady-state follow-up turns keep hitting their
+    // one-turn-stale entries.
+    let params = SessionParams::tiny();
+    let mut gen = SessionGen::new(params, 42);
+    let mut rng = Rng::new(42 ^ 0x77);
+    let mut store = LocalStore::new(1 << 30, 1, PolicyKind::Lru);
+    // session id -> prefix key of its previous turn
+    let mut last_key: HashMap<u64, u64> = HashMap::new();
+    let (mut compactions, mut post_compaction_hit_tokens) = (0u64, 0u64);
+    let (mut steady_turns, mut steady_hit_tokens) = (0u64, 0u64);
+    for i in 0..4_000u64 {
+        let mut r = gen.next(&mut rng);
+        r.arrival_s = i as f64;
+        let hit = store.lookup(&r, r.arrival_s).hit_tokens as u64;
+        match last_key.get(&r.session) {
+            Some(&k) if k != r.context_id => {
+                // Same session, new prefix key: the lineage was rewritten
+                // by an auto-compaction after the previous turn.
+                compactions += 1;
+                post_compaction_hit_tokens += hit;
+            }
+            Some(_) => {
+                steady_turns += 1;
+                steady_hit_tokens += hit;
+            }
+            None => {} // first observed turn of a session: nothing cached
+        }
+        last_key.insert(r.session, r.context_id);
+        store.admit(&r, r.context_tokens + r.new_tokens, None, r.arrival_s);
+    }
+    assert_eq!(compactions, gen.compactions(), "every lineage bump observed");
+    assert!(
+        compactions >= 10,
+        "the tiny config must compact within 4000 draws, got {compactions}"
+    );
+    assert_eq!(
+        post_compaction_hit_tokens, 0,
+        "the turn after a compaction must miss: its prefix key was never admitted"
+    );
+    assert!(steady_turns > 0);
+    assert!(
+        steady_hit_tokens / steady_turns > 0,
+        "steady-state follow-up turns must hit their one-turn-stale entries"
+    );
+}
+
+#[test]
+fn sticky_agentic_fleet_is_thread_invariant() {
+    // Session generation happens on the shared arrival stream and all
+    // ingress state (window freeze, sticky map, ledger) mutates only at
+    // arrival instants on the coordinator — never on worker threads.
+    // Debug floats are shortest-roundtrip, so equal renderings mean
+    // bit-equal results.
+    let sequential = run(&agentic_fleet(true, 1));
+    assert!(sequential.completed > 0);
+    let want = format!("{sequential:?}");
+    for threads in [2, 4, 8] {
+        let parallel = run(&agentic_fleet(true, threads));
+        assert_eq!(
+            format!("{parallel:?}"),
+            want,
+            "sticky agentic fleet diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn stepping_modes_place_every_request_identically() {
+    // Both engines visit the same arrival instants, so the frozen
+    // window views, sticky decisions and session ledger are identical;
+    // only intra-step latency microstructure may differ (bounded below
+    // by the same tolerances the pre-existing fleet stepping pin uses).
+    let mut fast_spec = agentic_fleet(true, 1);
+    fast_spec.stepping = Stepping::FastForward;
+    let mut ref_spec = agentic_fleet(true, 1);
+    ref_spec.stepping = Stepping::Reference;
+    let fast = run(&fast_spec);
+    let slow = run(&ref_spec);
+    assert_eq!(fast.completed, slow.completed);
+    assert_eq!(fast.sessions, slow.sessions);
+    assert_eq!(
+        format!("{:?}", fast.sticky_fraction),
+        format!("{:?}", slow.sticky_fraction),
+        "sticky placement must be stepping-invariant"
+    );
+    for (f, s) in fast.replicas.iter().zip(&slow.replicas) {
+        assert_eq!(f.routed, s.routed, "placement must be stepping-invariant");
+    }
+    assert!((fast.total_carbon_g - slow.total_carbon_g).abs() < 1e-6);
+    // At most 2 threshold-straddling samples may flip (clock noise).
+    let flip_tol = 2.0 / fast.completed.max(1) as f64 + 1e-12;
+    assert!((fast.slo_attainment - slow.slo_attainment).abs() <= flip_tol);
+}
+
+#[test]
+fn session_axis_defaults_off_is_byte_identical() {
+    // `homogeneous()` defaults the axis to Off and the ingress spec to
+    // OFF; setting both explicitly must not perturb a single bit.
+    let mut implicit = agentic_fleet(false, 1);
+    implicit.sessions = SessionVariant::default();
+    implicit.ingress = IngressSpec::default();
+    let mut explicit = agentic_fleet(false, 1);
+    explicit.sessions = SessionVariant::Off;
+    explicit.ingress = IngressSpec::OFF;
+    let a = run(&implicit);
+    let b = run(&explicit);
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    assert_eq!(a.sessions, 0, "off runs carry no session statistics");
+    assert_eq!(a.sticky_fraction, 0.0);
+    assert_eq!(a.carbon_per_session_g, 0.0);
+    assert!(
+        !a.table().contains("sessions"),
+        "off runs must not grow a sessions line:\n{}",
+        a.table()
+    );
+}
+
+#[test]
+fn defaults_off_matrix_table_matches_the_pre_axis_matrix() {
+    // The `cluster_golden` snapshot pin, without the snapshot file: a
+    // matrix built with no mention of the sessions axis and one with
+    // the axis explicitly off produce byte-identical golden tables, so
+    // every pre-PR snapshot keeps verifying.
+    let mk = |explicit_off: bool| {
+        let mut m = Matrix::new()
+            .models(&[Model::Llama70B])
+            .tasks(&[Task::Conversation])
+            .grids(&[Grid::Es])
+            .baselines(&[Baseline::FullCache])
+            .caches(&[CacheVariant::Local])
+            .clusters(&[Some(ClusterVariant::new(
+                &[Grid::Fr, Grid::Miso],
+                RouterPolicy::RoundRobin,
+            ))]);
+        if explicit_off {
+            m = m.sessions(&[SessionVariant::Off]);
+        }
+        m.hours = 2;
+        m.fixed_rps = Some(0.35);
+        m.expand()
+    };
+    let implicit = run_specs(&mk(false), 1);
+    let explicit = run_specs(&mk(true), 1);
+    assert_eq!(
+        implicit.table(),
+        explicit.table(),
+        "the off axis must leave the golden matrix table unchanged"
+    );
+    for cell in &implicit.cells {
+        assert_eq!(cell.carbon_per_session_g, 0.0, "off cells carry no FUV");
+        assert!(!cell.spec.label().contains("sessions"));
+    }
+}
